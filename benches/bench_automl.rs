@@ -1,0 +1,104 @@
+//! E10 (paper §3.1 AutoML): hyperparameter-search strategies over real
+//! MNIST sessions — budget spent vs quality of the found optimum, with
+//! the curve-prediction early stopper in play for random search.
+//!
+//! Run: `cargo bench --bench bench_automl`
+
+use nsml::api::{NsmlPlatform, PlatformConfig, PlatformTrialRunner};
+use nsml::automl::{GridSearch, RandomSearch, SuccessiveHalving};
+use nsml::util::bench::Bench;
+use nsml::util::table::{fnum, Table};
+
+const LRS: [f64; 6] = [0.0003, 0.003, 0.03, 0.1, 0.5, 3.0];
+const BUDGET: u64 = 48;
+
+fn runner(platform: &NsmlPlatform, tag: u64, n: usize) -> PlatformTrialRunner {
+    PlatformTrialRunner::new(
+        platform.engine().clone(),
+        "mnist",
+        &format!("bench{}", tag),
+        platform.checkpoints.clone(),
+        platform.sessions.clone(),
+        platform.events.clone(),
+        platform.clock.clone(),
+        n,
+        tag,
+    )
+    .unwrap()
+}
+
+fn main() {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = "artifacts".into();
+    let platform = NsmlPlatform::new(cfg).unwrap();
+    let mut bench = Bench::new("automl").with_samples(3);
+    let mut table = Table::new(&["STRATEGY", "BEST LR", "BEST LOSS", "STEPS SPENT", "% OF GRID"]).right(&[1, 2, 3, 4]);
+
+    let mut tag = 0u64;
+    let mut grid_spent = 0u64;
+
+    // Grid (exhaustive baseline).
+    let mut result = None;
+    bench.run("grid search (6 lrs x 48 steps)", || {
+        tag += 1;
+        let mut r = runner(&platform, tag, LRS.len());
+        result = Some(GridSearch { lrs: LRS.to_vec(), steps_per_trial: BUDGET }.run(&mut r));
+    });
+    let grid = result.unwrap();
+    grid_spent = grid.steps_spent;
+    table.row(&[
+        "grid".into(),
+        fnum(grid.best_lr),
+        fnum(grid.best_loss),
+        format!("{}", grid.steps_spent),
+        "100%".into(),
+    ]);
+
+    // Successive halving.
+    let mut result = None;
+    bench.run("successive halving (eta=2, 3 rungs)", || {
+        tag += 1;
+        let mut r = runner(&platform, tag, LRS.len());
+        result = Some(
+            SuccessiveHalving { lrs: LRS.to_vec(), total_steps_per_trial: BUDGET, eta: 2, rungs: 3 }
+                .run(&mut r),
+        );
+    });
+    let sh = result.unwrap();
+    table.row(&[
+        "successive halving".into(),
+        fnum(sh.best_lr),
+        fnum(sh.best_loss),
+        format!("{}", sh.steps_spent),
+        format!("{:.0}%", 100.0 * sh.steps_spent as f64 / grid_spent as f64),
+    ]);
+
+    // Random + curve-prediction early stop.
+    let mut result = None;
+    bench.run("random search + curve prediction", || {
+        tag += 1;
+        let mut r = runner(&platform, tag, 6);
+        result = Some(
+            RandomSearch {
+                candidates: 6,
+                lr_log10_range: (-3.5, 0.5),
+                steps_per_trial: BUDGET,
+                probe_frac: 0.2,
+                seed: tag,
+            }
+            .run(&mut r),
+        );
+    });
+    let rs = result.unwrap();
+    table.row(&[
+        "random + prediction".into(),
+        fnum(rs.best_lr),
+        fnum(rs.best_loss),
+        format!("{}", rs.steps_spent),
+        format!("{:.0}%", 100.0 * rs.steps_spent as f64 / grid_spent as f64),
+    ]);
+
+    bench.finish();
+    println!("== E10: search strategies on real sessions ==\n{}", table.render());
+    println!("expected shape: halving/predictive find the same lr decade at a fraction of grid's budget.");
+}

@@ -1,0 +1,93 @@
+//! E6 (paper §3.2): SPOF handling — "electing new master node as in
+//! Zookeeper when the master node fails".
+//!
+//! Measures: (a) virtual failover time (leader death -> new leader) as a
+//! function of detection cadence, (b) real-time cost of the election
+//! machinery itself, (c) job flow across a failover (nothing is lost).
+//!
+//! Run: `cargo bench --bench bench_failover`
+
+use nsml::cluster::Cluster;
+use nsml::events::EventLog;
+use nsml::scheduler::{BestFit, ElectionGroup, JobSpec, Master};
+use nsml::util::bench::Bench;
+use nsml::util::clock::sim_clock;
+use nsml::util::table::{fms, Table};
+
+fn main() {
+    let mut bench = Bench::new("failover");
+
+    // (a) Virtual failover latency vs tick cadence (the real system's
+    // watchdog period).
+    let mut t = Table::new(&["DETECTION CADENCE", "FAILOVER (virtual)", "EPOCH BUMPS"]).right(&[1, 2]);
+    for cadence_ms in [10u64, 100, 500, 1000] {
+        let (clock, sim) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        let group = ElectionGroup::new(clock, events, 3);
+        let mut failovers = Vec::new();
+        for round in 0..20 {
+            let (leader, _) = group.leader().unwrap();
+            group.kill(leader);
+            // Watchdog notices at the next cadence boundary.
+            loop {
+                sim.advance(cadence_ms);
+                for r in group.replica_ids() {
+                    group.heartbeat(r);
+                }
+                if group.tick().is_some() {
+                    break;
+                }
+            }
+            failovers.push(group.last_failover_ms().unwrap() as f64);
+            // Revive for the next round.
+            group.revive(leader);
+            let _ = round;
+        }
+        let mean = failovers.iter().sum::<f64>() / failovers.len() as f64;
+        t.row(&[format!("{} ms", cadence_ms), fms(mean), format!("{}", group.epoch())]);
+        bench.record(&format!("virtual failover @ cadence {} ms", cadence_ms), failovers, None);
+    }
+    println!("== E6: leader failover vs detection cadence ==\n{}", t.render());
+
+    // (b) Real-time cost of kill -> detect -> elect.
+    let (clock, sim) = sim_clock();
+    let events = EventLog::new(clock.clone()).with_echo(false);
+    let group = ElectionGroup::new(clock, events, 5);
+    bench.run_with_units("kill+tick+elect+revive (real time)", 1.0, || {
+        let (leader, _) = group.leader().unwrap();
+        group.kill(leader);
+        sim.advance(1);
+        group.tick().unwrap();
+        group.revive(leader);
+    });
+
+    // (c) Jobs keep flowing across a failover: the master's queue state
+    // survives (centralized state store), only leadership moves.
+    let (clock, sim) = sim_clock();
+    let events = EventLog::new(clock.clone()).with_echo(false);
+    let cluster = Cluster::homogeneous(clock.clone(), events.clone(), 4, 4, 24.0);
+    let master = Master::new(cluster, Box::new(BestFit), events.clone());
+    let group = ElectionGroup::new(clock, events, 3);
+    for i in 0..32 {
+        master.submit(JobSpec::new(&format!("pre{}", i), 1));
+    }
+    let queued_before = master.queue_len();
+    let (leader, _) = group.leader().unwrap();
+    group.kill(leader);
+    sim.advance(5);
+    group.tick().unwrap();
+    // New leader drains the same queue.
+    for i in 0..16 {
+        master.complete(&format!("pre{}", i));
+    }
+    let placed = master.stats().placed_from_queue;
+    println!(
+        "jobs across failover: queued_before={} placed_from_queue_after={} (no jobs lost: {})",
+        queued_before,
+        placed,
+        master.stats().submitted == master.stats().completed + master.running_jobs().len() as u64 + master.queue_len() as u64
+    );
+    assert!(placed >= queued_before.min(16) as u64);
+
+    bench.finish();
+}

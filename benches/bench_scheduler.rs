@@ -1,0 +1,91 @@
+//! E5 (paper §3.2): the empty-queue fast path "allows the scheduler to
+//! avoid queue operation overhead". Measures submit-to-placement decision
+//! latency with and without the fast path, plus sustained scheduler
+//! throughput under churn.
+//!
+//! Run: `cargo bench --bench bench_scheduler`
+
+use nsml::cluster::Cluster;
+use nsml::events::EventLog;
+use nsml::scheduler::{BestFit, JobSpec, Master, SubmitOutcome};
+use nsml::util::bench::Bench;
+use nsml::util::clock::sim_clock;
+
+fn master(fast_path: bool) -> Master {
+    let (clock, _) = sim_clock();
+    let events = EventLog::new(clock.clone()).with_echo(false);
+    let cluster = Cluster::homogeneous(clock, events.clone(), 10, 8, 24.0);
+    let m = Master::new(cluster, Box::new(BestFit), events);
+    if fast_path {
+        m
+    } else {
+        m.without_fast_path()
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("scheduler");
+
+    // Decision latency on an idle cluster: submit one job, then complete
+    // it so the cluster returns to idle. 1000 jobs per iteration.
+    let m = master(true);
+    let mut n = 0u64;
+    bench.run_with_units("submit+complete fast-path (idle queue)", 1000.0, || {
+        for _ in 0..1000 {
+            let id = format!("j{}", n);
+            n += 1;
+            match m.submit(JobSpec::new(&id, 1)) {
+                SubmitOutcome::PlacedImmediately(_) => {}
+                other => panic!("expected fast path, got {:?}", other),
+            }
+            m.complete(&id);
+        }
+    });
+
+    let m2 = master(false);
+    let mut n2 = 0u64;
+    bench.run_with_units("submit+complete queue-path (fast path off)", 1000.0, || {
+        for _ in 0..1000 {
+            let id = format!("j{}", n2);
+            n2 += 1;
+            m2.submit(JobSpec::new(&id, 1));
+            m2.pump();
+            m2.complete(&id);
+        }
+    });
+
+    // Sustained churn at ~70% utilization: queue is never empty, so this
+    // exercises the queue path + placement over a fragmented cluster.
+    let m3 = master(true);
+    let mut seq = 0u64;
+    let mut running: Vec<String> = Vec::new();
+    // Prefill to 56/80 GPUs.
+    for _ in 0..56 {
+        let id = format!("pre{}", seq);
+        seq += 1;
+        m3.submit(JobSpec::new(&id, 1));
+        running.push(id);
+    }
+    bench.run_with_units("churn @70% utilization (submit+complete)", 500.0, || {
+        for _ in 0..500 {
+            let id = format!("c{}", seq);
+            seq += 1;
+            m3.submit(JobSpec::new(&id, 1 + (seq % 4) as usize));
+            if let Some(old) = running.first().cloned() {
+                running.remove(0);
+                m3.complete(&old);
+            }
+            running.push(id);
+        }
+    });
+
+    bench.finish();
+
+    let s = m.stats();
+    println!(
+        "fast-path hit rate on idle cluster: {}/{} ({}%)",
+        s.fast_path_hits,
+        s.submitted,
+        100 * s.fast_path_hits / s.submitted.max(1)
+    );
+}

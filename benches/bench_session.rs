@@ -1,0 +1,73 @@
+//! The training hot path (§Perf headline): steps/sec per model through
+//! the PJRT runtime, ablating the two L2/L3 perf levers:
+//!
+//!  * per-step execute vs scan-fused K-step execute (dispatch amortization)
+//!  * end-to-end session overhead vs raw model stepping
+//!
+//! Run: `cargo bench --bench bench_session`
+
+use nsml::data::generator_for;
+use nsml::runtime::{Batch, Engine, TrainableModel};
+use nsml::util::bench::Bench;
+use std::rc::Rc;
+
+fn main() {
+    let engine = Rc::new(Engine::new("artifacts").expect("run `make artifacts` first"));
+    let mut bench = Bench::new("session");
+
+    for name in engine.manifest().model_names() {
+        let mut model = TrainableModel::init(engine.clone(), &name, 1).unwrap();
+        let manifest = model.manifest().clone();
+        let mut gen = generator_for(&name, 1).unwrap();
+        let lr = manifest.default_lr as f32;
+        let k = manifest.scan_k;
+
+        // Pre-draw batches so data generation is excluded.
+        let batches: Vec<Batch> = (0..k).map(|_| gen.batch(manifest.batch)).collect();
+
+        bench.run_with_units(&format!("{} train_step x{}", name, k), k as f64, || {
+            for b in &batches {
+                model.train_step(b, lr).unwrap();
+            }
+        });
+        bench.run_with_units(&format!("{} train_scan k={}", name, k), k as f64, || {
+            model.train_scan(&batches, lr).unwrap();
+        });
+        bench.run_with_units(&format!("{} evaluate", name), 1.0, || {
+            model.evaluate(&batches[0]).unwrap();
+        });
+        let xi = if name == "face_gan" {
+            nsml::runtime::TensorData::f32(vec![0.1; 32 * 32], &[32, 32])
+        } else {
+            batches[0].x.clone()
+        };
+        bench.run_with_units(&format!("{} infer", name), 1.0, || {
+            model.infer(&xi).unwrap();
+        });
+        bench.run_with_units(&format!("{} checkpoint serialize", name), 1.0, || {
+            model.params_bytes().unwrap();
+        });
+    }
+
+    // Data generation itself (must be negligible vs a train step).
+    let mut gen = generator_for("mnist_mlp", 2).unwrap();
+    bench.run_with_units("digit generator batch(64)", 1.0, || {
+        gen.batch(64);
+    });
+
+    bench.finish();
+
+    // Throughput summary in examples/s.
+    println!("steps/s (p50) summary:");
+    for name in engine.manifest().model_names() {
+        let step = bench.result(&format!("{} train_step x8", name)).unwrap();
+        let scan = bench.result(&format!("{} train_scan k=8", name)).unwrap();
+        println!(
+            "  {:<12} per-step {:>8.1} steps/s   scan-fused {:>8.1} steps/s   ({:.2}x)",
+            name,
+            step.throughput().unwrap_or(0.0),
+            scan.throughput().unwrap_or(0.0),
+            scan.throughput().unwrap_or(0.0) / step.throughput().unwrap_or(1.0)
+        );
+    }
+}

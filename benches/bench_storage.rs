@@ -1,0 +1,82 @@
+//! Storage-container benchmarks: the minio-substitute object store,
+//! checkpoint save/load (the §3.3 backup path every session exercises),
+//! and NSML-CLI code packing.
+//!
+//! Run: `cargo bench --bench bench_storage`
+
+use nsml::storage::{codepack, CheckpointStore, ObjectStore};
+use nsml::util::bench::Bench;
+use nsml::util::rng::Rng;
+use std::collections::BTreeMap;
+
+fn main() {
+    let mut bench = Bench::new("storage");
+    let mut rng = Rng::new(7);
+
+    // 1 MiB blobs ≈ a small model checkpoint.
+    let blob: Vec<u8> = (0..1 << 20).map(|_| rng.next_u64() as u8).collect();
+
+    let mem = ObjectStore::memory();
+    bench.run_with_units("objectstore put 1MiB (mem, unique)", 1.0, || {
+        let mut b = blob.clone();
+        let n = rng.next_u64();
+        b[..8].copy_from_slice(&n.to_le_bytes());
+        mem.put(&b).unwrap();
+    });
+    let id = mem.put(&blob).unwrap();
+    bench.run_with_units("objectstore put 1MiB (mem, dedup hit)", 1.0, || {
+        mem.put(&blob).unwrap();
+    });
+    bench.run_with_units("objectstore get 1MiB (mem, verified)", 1.0, || {
+        mem.get(&id).unwrap();
+    });
+
+    let dir = std::env::temp_dir().join(format!("nsml-bench-store-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let fs = ObjectStore::filesystem(&dir).unwrap();
+    bench.run_with_units("objectstore put 1MiB (fs, unique)", 1.0, || {
+        let mut b = blob.clone();
+        let n = rng.next_u64();
+        b[..8].copy_from_slice(&n.to_le_bytes());
+        fs.put(&b).unwrap();
+    });
+    let fid = fs.put(&blob).unwrap();
+    bench.run_with_units("objectstore get 1MiB (fs, verified)", 1.0, || {
+        fs.get(&fid).unwrap();
+    });
+
+    // Checkpoint store: save/load of a 71k-param model (mnist_mlp size).
+    let params: Vec<u8> = (0..71_306 * 4).map(|_| rng.next_u64() as u8).collect();
+    let ckpts = CheckpointStore::new(ObjectStore::memory());
+    let mut hp = BTreeMap::new();
+    hp.insert("lr".to_string(), 0.1);
+    let mut step = 0u64;
+    bench.run_with_units("checkpoint save (71k params)", 1.0, || {
+        step += 1;
+        let mut p = params.clone();
+        p[..8].copy_from_slice(&step.to_le_bytes());
+        ckpts.save("bench/session", step, 1.0, &hp, &p, step).unwrap();
+    });
+    let latest = ckpts.latest("bench/session").unwrap();
+    bench.run_with_units("checkpoint load (71k params)", 1.0, || {
+        ckpts.load_params(&latest).unwrap();
+    });
+
+    // Code packing: a 20-file project, the `nsml run` upload.
+    let files: Vec<(String, Vec<u8>)> = (0..20)
+        .map(|i| {
+            (format!("src/mod{}.py", i), (0..2048).map(|_| rng.next_u64() as u8).collect::<Vec<u8>>())
+        })
+        .collect();
+    let refs: Vec<(&str, &[u8])> = files.iter().map(|(n, b)| (n.as_str(), b.as_slice())).collect();
+    bench.run_with_units("codepack zip 20 files / 40KiB", 1.0, || {
+        codepack::pack_files(&refs).unwrap();
+    });
+    let archive = codepack::pack_files(&refs).unwrap();
+    bench.run_with_units("codepack unzip", 1.0, || {
+        codepack::unpack(&archive).unwrap();
+    });
+
+    bench.finish();
+    let _ = std::fs::remove_dir_all(&dir);
+}

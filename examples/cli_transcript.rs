@@ -1,0 +1,48 @@
+//! Figure 2 reproduction: an NSML-CLI session transcript on MNIST.
+//!
+//! Drives the actual `nsml` CLI entry point end to end against a
+//! temporary state directory: dataset listing, a training run, `ps`,
+//! the leaderboard, learning-curve plot and the logs — the workflow the
+//! paper's Figure 2 screenshots.
+//!
+//! Run with: `cargo run --release --example cli_transcript`
+
+fn sh(cmdline: &str, state: &str) {
+    println!("\n$ nsml {}", cmdline);
+    let mut args: Vec<String> = cmdline.split_whitespace().map(str::to_string).collect();
+    args.push("--state".into());
+    args.push(state.into());
+    let code = nsml::cli::main(&args);
+    assert_eq!(code, 0, "command failed: nsml {}", cmdline);
+}
+
+fn main() {
+    let state_dir = std::env::temp_dir().join(format!("nsml-transcript-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&state_dir);
+    let state = state_dir.to_string_lossy().to_string();
+
+    println!("== NSML-CLI transcript (Fig. 2) ==");
+    sh("models", &state);
+    sh("dataset ls", &state);
+    sh("run main.py -d mnist --steps 200 --user kim", &state);
+    sh("ps", &state);
+    sh("dataset board mnist", &state);
+    sh("cluster", &state);
+
+    // `nsml logs` / `nsml plot` need the session id from the state dir.
+    let text = std::fs::read_to_string(state_dir.join("state.json")).unwrap();
+    let doc = nsml::util::json::parse(&text).unwrap();
+    let id = doc
+        .get("sessions")
+        .and_then(|s| s.as_arr())
+        .and_then(|a| a.first())
+        .and_then(|r| r.at(&["spec", "id"]))
+        .and_then(|j| j.as_str())
+        .expect("session id in state")
+        .to_string();
+    sh(&format!("plot {} --metric train_loss", id), &state);
+    sh(&format!("infer {} --digit 1 --add-lines", id), &state);
+
+    let _ = std::fs::remove_dir_all(&state_dir);
+    println!("\ncli transcript OK");
+}

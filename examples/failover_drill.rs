@@ -1,0 +1,64 @@
+//! SPOF / failure drill (paper §3.2 + §4.2, experiments E6/E12):
+//! kill the scheduler leader mid-flight (Zookeeper-style re-election
+//! takes over) and kill a worker node under a training session (the
+//! session auto-recovers from its checkpoint).
+//!
+//! Run with: `cargo run --release --example failover_drill`
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::scheduler::ReplicaId;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = PlatformConfig::default();
+    cfg.sched_replicas = 3;
+    let platform = NsmlPlatform::new(cfg)?;
+    println!("== NSML failover drill ==\n");
+
+    // --- Part 1: scheduler leader election (E6) -----------------------
+    let (leader0, epoch0) = platform.election.leader().unwrap();
+    println!("scheduler leader: {} (epoch {})", leader0, epoch0);
+    platform.election.kill(leader0);
+    platform.sim.advance(50);
+    let new_leader = platform.election.tick().expect("re-election");
+    println!(
+        "killed {} -> new leader {} (epoch {}), failover took {} virtual-ms",
+        leader0,
+        new_leader,
+        platform.election.epoch(),
+        platform.election.last_failover_ms().unwrap()
+    );
+    assert_ne!(new_leader, leader0);
+    // The deposed leader is fenced out even after reviving.
+    platform.election.revive(leader0);
+    assert!(!platform.election.is_leader(leader0, epoch0));
+    assert_eq!(platform.election.leader().unwrap().0, ReplicaId(1));
+
+    // --- Part 2: worker-node failure mid-training (E12) ---------------
+    let opts = RunOpts { total_steps: 120, checkpoint_every: 20, eval_every: 30, ..Default::default() };
+    let id = platform.run("drill", "mnist", opts)?;
+    while platform.sessions.get(&id).unwrap().steps_done < 40 {
+        platform.drive(20)?;
+    }
+    let node = platform.sessions.get(&id).unwrap().node.unwrap();
+    let steps_before = platform.sessions.get(&id).unwrap().steps_done;
+    println!("\nsession {} at step {} on {}; killing the node…", id, steps_before, node);
+    platform.kill_node(node);
+
+    platform.run_to_completion(20, 100_000)?;
+    let rec = platform.sessions.get(&id).unwrap();
+    println!(
+        "session finished: state={} steps={} recoveries={} (resumed from checkpoint <= step {})",
+        rec.state.as_str(),
+        rec.steps_done,
+        rec.recoveries,
+        steps_before
+    );
+    assert_eq!(rec.state, nsml::session::SessionState::Done);
+    assert_eq!(rec.recoveries, 1);
+    assert_eq!(rec.steps_done, 120);
+
+    // The alpha testers' complaint ("sometimes unstable, recovers in a
+    // few minutes") is now a bounded, observable property.
+    println!("\nfailover drill OK");
+    Ok(())
+}

@@ -1,0 +1,72 @@
+//! In-training hyperparameter tuning (paper §3.3, experiment E9):
+//! "NSML can achieve hyperparameter tuning in training time by pausing
+//! user-written codes, downloading a model from storage container, and
+//! resuming the code."
+//!
+//! Scenario: a session starts with a bad (too high) learning rate. A/B:
+//!   A. left alone for the full budget;
+//!   B. paused at 1/3 budget, lr edited down, resumed (same total steps).
+//! B must end with a better eval loss.
+//!
+//! Run with: `cargo run --release --example hyperparam_tuning`
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::util::plot::ascii_chart;
+
+const BAD_LR: f64 = 2.0;
+const GOOD_LR: f64 = 0.1;
+const STEPS: u64 = 240;
+
+fn main() -> anyhow::Result<()> {
+    let platform = NsmlPlatform::new(PlatformConfig::default())?;
+    println!("== §3.3 hyperparameter tuning in training time ==\n");
+
+    let opts = |seed| RunOpts {
+        total_steps: STEPS,
+        lr: Some(BAD_LR),
+        eval_every: 20,
+        checkpoint_every: 40,
+        seed,
+        ..Default::default()
+    };
+
+    // A: stuck with the bad lr.
+    let stuck = platform.run("kim", "mnist", opts(1))?;
+    // B: will be rescued by a mid-training edit.
+    let tuned = platform.run("kim", "mnist", opts(1))?;
+
+    // Train both to 1/3 of the budget.
+    while platform.sessions.get(&tuned).unwrap().steps_done < STEPS / 3 {
+        platform.drive(20)?;
+    }
+
+    // Pause B, edit lr (the nsml REPL flow), resume.
+    platform.pause(&tuned)?;
+    println!("paused {} at step {}; lr {} -> {}", tuned, platform.sessions.get(&tuned).unwrap().steps_done, BAD_LR, GOOD_LR);
+    platform.resume(&tuned, Some(GOOD_LR))?;
+
+    platform.run_to_completion(20, 100_000)?;
+
+    let rec_stuck = platform.sessions.get(&stuck).unwrap();
+    let rec_tuned = platform.sessions.get(&tuned).unwrap();
+    let loss_stuck = rec_stuck.metrics.latest("eval_loss").unwrap();
+    let loss_tuned = rec_tuned.metrics.latest("eval_loss").unwrap();
+    let acc_stuck = rec_stuck.best_metric.unwrap_or(0.0);
+    let acc_tuned = rec_tuned.best_metric.unwrap_or(0.0);
+
+    let a = rec_stuck.metrics.plot_series("eval_loss");
+    let mut b = rec_tuned.metrics.plot_series("eval_loss");
+    b.name = "eval_loss (lr edited)".into();
+    println!("{}", ascii_chart("stuck lr=2.0 vs tuned (edited to 0.1 mid-run)", &[a, b], 70, 14));
+
+    println!("fixed bad lr : final eval_loss {:.4}, best accuracy {:.4}", loss_stuck, acc_stuck);
+    println!("tuned mid-run: final eval_loss {:.4}, best accuracy {:.4}", loss_tuned, acc_tuned);
+    assert!(
+        loss_tuned < loss_stuck,
+        "in-training tuning should beat the stuck run ({} vs {})",
+        loss_tuned,
+        loss_stuck
+    );
+    println!("\nhyperparameter tuning OK (mid-training edit rescued the run)");
+    Ok(())
+}

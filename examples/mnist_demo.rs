@@ -1,0 +1,55 @@
+//! Figure 4 reproduction: interactive classification on user input.
+//!
+//! Trains MNIST, draws a '1', classifies it, then "adds some lines" (the
+//! strokes that turn a 1 into a 2) and shows the class probability mass
+//! move from 1 to 2 — exactly the paper's web-demo interaction.
+//!
+//! Run with: `cargo run --release --example mnist_demo`
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::data::digits::{ascii_digit, draw_digit, DIM};
+use nsml::runtime::TensorData;
+
+fn classify(platform: &NsmlPlatform, id: &str, img: &[f32]) -> anyhow::Result<Vec<f32>> {
+    let x = TensorData::f32(img.repeat(64), &[64, DIM as i64]);
+    Ok(platform.infer(id, &x)?[..10].to_vec())
+}
+
+fn show(probs: &[f32]) -> usize {
+    let argmax = probs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+    for (i, p) in probs.iter().enumerate() {
+        println!("  {} {:>6.3} {}{}", i, p, "#".repeat((p * 40.0) as usize), if i == argmax { "  <= prediction" } else { "" });
+    }
+    argmax
+}
+
+fn main() -> anyhow::Result<()> {
+    let platform = NsmlPlatform::new(PlatformConfig::default())?;
+    println!("== Fig. 4 demo: immediate classification on interactive input ==");
+    let opts = RunOpts { total_steps: 300, eval_every: 50, checkpoint_every: 100, ..Default::default() };
+    let id = platform.run("demo", "mnist", opts)?;
+    platform.run_to_completion(50, 10_000)?;
+    let rec = platform.sessions.get(&id).unwrap();
+    println!("trained {}: accuracy {:.3}\n", id, rec.best_metric.unwrap_or(f64::NAN));
+
+    // Upper panel: the user draws a '1'.
+    let mut img = vec![0.0f32; DIM];
+    draw_digit(1, 0, 0, 1.0, &mut img);
+    println!("user draws:\n{}", ascii_digit(&img));
+    let pred1 = show(&classify(&platform, &id, &img)?);
+
+    // Lower panel: "input was modified by adding some lines".
+    let mut two = vec![0.0f32; DIM];
+    draw_digit(2, 0, 0, 1.0, &mut two);
+    for (a, b) in img.iter_mut().zip(&two) {
+        *a = a.max(*b);
+    }
+    println!("\nuser adds lines:\n{}", ascii_digit(&img));
+    let pred2 = show(&classify(&platform, &id, &img)?);
+
+    println!("\nprediction changed: {} -> {}", pred1, pred2);
+    assert_eq!(pred1, 1, "initial drawing should classify as 1");
+    assert_eq!(pred2, 2, "modified drawing should classify as 2");
+    println!("mnist demo OK (label flipped 1 -> 2, as in the paper's Figure 4)");
+    Ok(())
+}

@@ -1,0 +1,56 @@
+//! Quickstart — the end-to-end validation driver (DESIGN.md E1).
+//!
+//! Boots the full platform (cluster → scheduler → containers → storage →
+//! PJRT runtime), trains the MNIST model for a few hundred steps through
+//! the complete `nsml run` path, logs the loss curve, and prints the
+//! leaderboard. This is the run recorded in EXPERIMENTS.md.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::util::plot::ascii_chart;
+
+fn main() -> anyhow::Result<()> {
+    let mut cfg = PlatformConfig::default(); // 10 nodes × 8 GPUs, best-fit
+    cfg.latency = nsml::container::LatencyModel::default(); // virtual ms
+    let platform = NsmlPlatform::new(cfg)?;
+
+    println!("== NSML quickstart ==");
+    println!(
+        "cluster: {} nodes / {} GPUs | scheduler leader: {}",
+        platform.cluster.node_count(),
+        platform.cluster.gpu_totals().0,
+        platform.election.leader().map(|(l, _)| l.to_string()).unwrap_or_default()
+    );
+
+    // nsml run quickstart.py -d mnist --steps 300
+    let opts = RunOpts { total_steps: 300, eval_every: 25, checkpoint_every: 75, ..Default::default() };
+    let id = platform.run("quickstart", "mnist", opts)?;
+    println!("submitted session {}", id);
+
+    let t0 = std::time::Instant::now();
+    platform.run_to_completion(25, 10_000)?;
+    let wall = t0.elapsed();
+
+    let rec = platform.sessions.get(&id).unwrap();
+    println!(
+        "\nsession {}: {} after {} steps ({:.1}s wall, container startup {} virtual-ms)",
+        id,
+        rec.state.as_str(),
+        rec.steps_done,
+        wall.as_secs_f64(),
+        platform.containers.get(rec.container.as_deref().unwrap_or("")).map(|c| c.startup_ms).unwrap_or(0),
+    );
+    println!("best accuracy: {:.4}", rec.best_metric.unwrap_or(f64::NAN));
+
+    let loss = rec.metrics.plot_series("train_loss");
+    let acc = rec.metrics.plot_series("accuracy");
+    println!("\n{}", ascii_chart("train_loss", &[loss], 70, 14));
+    println!("{}", ascii_chart("eval accuracy", &[acc], 70, 10));
+    println!("{}", platform.leaderboard.render("mnist"));
+
+    assert_eq!(rec.state, nsml::session::SessionState::Done);
+    assert!(rec.best_metric.unwrap() > 0.8, "quickstart accuracy should exceed 0.8");
+    println!("quickstart OK");
+    Ok(())
+}

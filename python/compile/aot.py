@@ -1,0 +1,119 @@
+"""AOT lowering driver: JAX models -> HLO text + manifest for Rust.
+
+Run as ``python -m compile.aot --out-dir ../artifacts`` (what
+``make artifacts`` does). For every model in the registry it lowers five
+entry points (init / train_step / train_scan / evaluate / infer) and
+writes:
+
+* ``artifacts/<model>.<entry>.hlo.txt`` — HLO **text**. Text, not a
+  serialized ``HloModuleProto``: jax >= 0.5 emits protos with 64-bit
+  instruction ids which the xla crate's XLA (xla_extension 0.5.1) rejects
+  (``proto.id() <= INT_MAX``); the text parser reassigns ids and
+  round-trips cleanly.
+* ``artifacts/manifest.json`` — shapes/dtypes/arities so the Rust runtime
+  can allocate inputs and decompose outputs without guessing.
+
+Python runs only here, at build time; the Rust binary is self-contained
+once artifacts exist.
+"""
+
+import argparse
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from .models import MODELS, ModelDef, param_count
+
+DTYPES = {"f32": jnp.float32, "i32": jnp.int32}
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype="f32"):
+    return jax.ShapeDtypeStruct(shape, DTYPES[dtype])
+
+
+def entry_signatures(m: ModelDef):
+    """Example-argument specs for each AOT entry point."""
+    params = [spec(s) for s in m.param_shapes]
+    x = spec(m.x_shape, m.x_dtype)
+    y = spec(m.y_shape, m.y_dtype)
+    xs = spec((m.scan_k, *m.x_shape), m.x_dtype)
+    ys = spec((m.scan_k, *m.y_shape), m.y_dtype)
+    lr = spec((), "f32")
+    seed = spec((), "i32")
+    return {
+        "init": (m.init, [seed]),
+        "train_step": (m.train_step, [*params, x, y, lr]),
+        "train_scan": (m.train_scan, [*params, xs, ys, lr]),
+        "evaluate": (m.evaluate, [*params, x, y]),
+        "infer": (m.infer, [*params, spec(m.infer_x_shape, m.x_dtype if m.name != "face_gan" else "f32")]),
+    }
+
+
+def lower_model(m: ModelDef, out_dir: str, verbose: bool = True) -> dict:
+    """Lower all entries of one model; returns its manifest fragment."""
+    artifacts = {}
+    for entry, (fn, args) in entry_signatures(m).items():
+        # keep_unused: the runtime calling convention always passes every
+        # declared input (e.g. the GAN ignores y but still receives it).
+        lowered = jax.jit(fn, keep_unused=True).lower(*args)
+        text = to_hlo_text(lowered)
+        fname = f"{m.name}.{entry}.hlo.txt"
+        with open(os.path.join(out_dir, fname), "w") as f:
+            f.write(text)
+        artifacts[entry] = fname
+        if verbose:
+            print(f"  {fname:<34} {len(text):>9} bytes", file=sys.stderr)
+    frag = {
+        "param_shapes": [list(s) for s in m.param_shapes],
+        "param_count": param_count(m),
+        "batch": m.batch,
+        "x_shape": list(m.x_shape),
+        "x_dtype": m.x_dtype,
+        "y_shape": list(m.y_shape),
+        "y_dtype": m.y_dtype,
+        "infer_x_shape": list(m.infer_x_shape),
+        "infer_x_dtype": m.x_dtype if m.name != "face_gan" else "f32",
+        "scan_k": m.scan_k,
+        "metric_name": m.metric_name,
+        "lower_is_better": m.lower_is_better,
+        "description": m.description,
+        "hparam_defaults": m.hparam_defaults,
+        "artifacts": artifacts,
+    }
+    return frag
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AOT-lower NSML models to HLO text")
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--models", default="all", help="comma-separated subset")
+    args = ap.parse_args()
+
+    os.makedirs(args.out_dir, exist_ok=True)
+    wanted = list(MODELS) if args.models == "all" else args.models.split(",")
+    manifest = {"format": 1, "models": {}}
+    for name in wanted:
+        m = MODELS[name]
+        print(f"lowering {name} ({param_count(m):,} params)", file=sys.stderr)
+        manifest["models"][name] = lower_model(m, args.out_dir)
+    path = os.path.join(args.out_dir, "manifest.json")
+    with open(path, "w") as f:
+        json.dump(manifest, f, indent=2, sort_keys=True)
+    print(f"wrote {path}", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,18 @@
+"""Layer-1 Pallas kernels (build-time only).
+
+The platform's models route their compute hot-spots through these kernels:
+
+* :mod:`pallas_matmul` — tiled MXU-style matmul, the primitive everything
+  else builds on.
+* :mod:`fused_linear` — linear + bias + activation with a custom VJP whose
+  backward matmuls also run through the Pallas kernel.
+* :mod:`softmax_xent` — fused log-softmax + NLL loss.
+* :mod:`ref` — pure-``jax.numpy`` oracles used by pytest.
+
+All kernels are lowered with ``interpret=True``: the image's CPU PJRT
+plugin cannot execute Mosaic custom-calls, so kernel *structure* (tiling,
+VMEM footprint, MXU-shaped blocks) is what we optimize; wall-clock TPU
+performance is estimated analytically in EXPERIMENTS.md.
+"""
+
+from . import fused_linear, pallas_matmul, ref, softmax_xent  # noqa: F401

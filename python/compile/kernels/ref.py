@@ -1,0 +1,40 @@
+"""Pure-``jax.numpy`` oracles for the Pallas kernels.
+
+pytest checks every kernel against these references — the core L1
+correctness signal required before anything is AOT-exported.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    return jnp.dot(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def linear_ref(x, w, b, act="none"):
+    z = x @ w + b[None, :]
+    if act == "relu":
+        return jnp.maximum(z, 0.0)
+    if act == "tanh":
+        return jnp.tanh(z)
+    if act == "sigmoid":
+        return jax.nn.sigmoid(z)
+    if act == "lrelu":
+        return jnp.where(z >= 0.0, z, 0.2 * z)
+    return z
+
+
+def softmax_xent_ref(logits, labels):
+    logp = jax.nn.log_softmax(logits, axis=1)
+    picked = jnp.take_along_axis(logp, labels[:, None].astype(jnp.int32), axis=1)[:, 0]
+    return -jnp.mean(picked)
+
+
+def conv2d_ref(x, k, b):
+    """NHWC 'same' conv oracle (used by the emotion CNN tests)."""
+    out = jax.lax.conv_general_dilated(
+        x, k, window_strides=(1, 1), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return out + b[None, None, None, :]

@@ -1,0 +1,82 @@
+"""Fused softmax cross-entropy Pallas kernel.
+
+One kernel pass computes, per batch row: the max-shifted logits, the
+log-sum-exp, and the negative log-likelihood of the label — without
+materializing the softmax matrix in HBM (the classic fusion). A custom
+VJP supplies ``softmax(z) - onehot(y)`` for the backward pass, again
+without an HBM round-trip of intermediate probabilities in the forward.
+
+Tiling: grid over batch tiles of 64 rows; the class dimension stays whole
+inside a block (classifier heads here are <= a few hundred classes, well
+inside one VMEM tile of 128-lane vectors).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+TILE_B = 64
+
+
+def _xent_kernel(logits_ref, labels_ref, loss_ref):
+    z = logits_ref[...]  # [TB, C]
+    y = labels_ref[...]  # [TB]
+    zmax = jnp.max(z, axis=1, keepdims=True)
+    shifted = z - zmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=1)) + zmax[:, 0]
+    picked = jnp.take_along_axis(z, y[:, None].astype(jnp.int32), axis=1)[:, 0]
+    loss_ref[...] = lse - picked  # [TB]
+
+
+def _ceil_to(v, t):
+    return -(-v // t) * t
+
+
+def _per_row_loss(logits, labels):
+    b, c = logits.shape
+    bp = _ceil_to(b, TILE_B)
+    lp = jnp.pad(logits, ((0, bp - b), (0, 0)))
+    # Pad labels with 0 (those rows are sliced off afterwards).
+    yp = jnp.pad(labels.astype(jnp.int32), (0, bp - b))
+    out = pl.pallas_call(
+        _xent_kernel,
+        grid=(bp // TILE_B,),
+        in_specs=[
+            pl.BlockSpec((TILE_B, c), lambda i: (i, 0)),
+            pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_B,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((bp,), jnp.float32),
+        interpret=True,
+    )(lp.astype(jnp.float32), yp)
+    return out[:b]
+
+
+@jax.custom_vjp
+def softmax_xent(logits, labels):
+    """Mean cross-entropy of integer ``labels`` under ``logits``."""
+    return jnp.mean(_per_row_loss(logits, labels))
+
+
+def _fwd(logits, labels):
+    return softmax_xent(logits, labels), (logits, labels)
+
+
+def _bwd(res, g):
+    logits, labels = res
+    b, c = logits.shape
+    p = jax.nn.softmax(logits, axis=1)
+    onehot = jax.nn.one_hot(labels, c, dtype=jnp.float32)
+    dlogits = (p - onehot) * (g / b)
+    return dlogits, None
+
+
+softmax_xent.defvjp(_fwd, _bwd)
+
+
+@functools.partial(jax.jit)
+def accuracy(logits, labels):
+    """Fraction of argmax hits (eval metric)."""
+    return jnp.mean((jnp.argmax(logits, axis=1) == labels).astype(jnp.float32))

@@ -1,0 +1,8 @@
+"""Layer-2 entry point.
+
+Re-exports the model registry; see :mod:`compile.models` for the model
+definitions and :mod:`compile.aot` for the AOT lowering driver that turns
+them into ``artifacts/*.hlo.txt`` for the Rust runtime.
+"""
+
+from .models import MODELS, ModelDef, param_count  # noqa: F401

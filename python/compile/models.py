@@ -1,0 +1,472 @@
+"""Layer-2 JAX models: the paper's four alpha-test tasks (§4.1).
+
+1. ``mnist_mlp``     — MNIST-style digit classification (Fig. 2/4 demo)
+2. ``emotion_cnn``   — CNN facial-emotion recognition
+3. ``movie_rnn``     — BiLSTM movie-rating prediction
+4. ``face_gan``      — GAN face generation
+
+Every model is a pure function over a *flat list* of f32 parameter
+arrays, which is exactly the calling convention the Rust runtime uses
+when it executes the AOT artifacts:
+
+* ``init(seed:i32)                        -> (*params)``
+* ``train_step(*params, x, y, lr)         -> (*params', loss)``
+* ``train_scan(*params, xs, ys, lr)       -> (*params', mean_loss)``  (K fused steps)
+* ``evaluate(*params, x, y)               -> (loss, metric)``
+* ``infer(*params, x)                     -> output``
+
+Hot-spot compute (every matmul contraction, the conv contraction via
+explicit im2col, the LSTM gate matmuls, the classifier losses) routes
+through the Layer-1 Pallas kernels in :mod:`compile.kernels`.
+"""
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.fused_linear import fused_linear
+from .kernels.softmax_xent import softmax_xent
+
+# Fused steps per train_scan call (the L2 perf lever: amortizes runtime
+# dispatch over K steps; ablated in bench_session).
+SCAN_K = 8
+
+
+# --------------------------------------------------------------------------
+# Shared building blocks
+# --------------------------------------------------------------------------
+
+def _glorot(key, shape):
+    fan_in = shape[0] if len(shape) > 1 else shape[0]
+    fan_out = shape[-1]
+    scale = jnp.sqrt(2.0 / (fan_in + fan_out))
+    return (jax.random.normal(key, shape) * scale).astype(jnp.float32)
+
+
+def _init_params(seed, shapes):
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    keys = jax.random.split(key, len(shapes))
+    out = []
+    for k, shape in zip(keys, shapes):
+        if len(shape) == 1:
+            out.append(jnp.zeros(shape, jnp.float32))
+        else:
+            out.append(_glorot(k, shape))
+    return tuple(out)
+
+
+def _sgd(params, grads, lr):
+    return [p - lr * g for p, g in zip(params, grads)]
+
+
+def _bce_logits(logits, targets):
+    """Numerically stable binary cross-entropy on logits."""
+    return jnp.mean(jax.nn.softplus(logits) - targets * logits)
+
+
+def _im2col(x, kh, kw):
+    """Extract 'same' 3x3-style patches: [B,H,W,C] -> [B*H*W, kh*kw*C].
+
+    Explicit slicing keeps the feature ordering identical to reshaping an
+    HWIO kernel, so the contraction is a plain (Pallas) matmul.
+    """
+    b, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = [xp[:, i : i + h, j : j + w, :] for i in range(kh) for j in range(kw)]
+    patches = jnp.stack(cols, axis=3)  # [B,H,W,kh*kw,C]
+    return patches.reshape(b * h * w, kh * kw * c)
+
+
+def conv2d(x, k, b):
+    """'same' conv through the Pallas matmul. x:[B,H,W,C], k:[KH,KW,C,O]."""
+    bsz, h, w, _ = x.shape
+    kh, kw, cin, cout = k.shape
+    cols = _im2col(x, kh, kw)  # [B*H*W, KH*KW*C]
+    kmat = k.reshape(kh * kw * cin, cout)
+    out = fused_linear(cols, kmat, b, "none")
+    return out.reshape(bsz, h, w, cout)
+
+
+def maxpool2(x):
+    """2x2 max pool, NHWC."""
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+# --------------------------------------------------------------------------
+# Model definition container
+# --------------------------------------------------------------------------
+
+@dataclass
+class ModelDef:
+    name: str
+    param_shapes: List[Tuple[int, ...]]
+    batch: int
+    x_shape: Tuple[int, ...]          # train/eval input (incl. batch dim)
+    x_dtype: str                      # "f32" | "i32"
+    y_shape: Tuple[int, ...]
+    y_dtype: str
+    infer_x_shape: Tuple[int, ...]    # infer input (may differ, e.g. GAN latents)
+    loss_fn: Callable                 # (params, x, y) -> scalar loss
+    eval_fn: Callable                 # (params, x, y) -> (loss, metric)
+    infer_fn: Callable                # (params, x) -> output
+    metric_name: str = "loss"
+    lower_is_better: bool = True
+    scan_k: int = SCAN_K
+    description: str = ""
+    hparam_defaults: dict = field(default_factory=lambda: {"lr": 0.1})
+    # Optional custom optimizer step (params, x, y, lr) -> (params', loss);
+    # the GAN uses this for its alternating D/G updates.
+    step_fn: Callable = None
+
+    # ---- derived entry points (the AOT surface) ----
+
+    def init(self, seed):
+        return _init_params(seed, self.param_shapes)
+
+    def _step(self, params, x, y, lr):
+        if self.step_fn is not None:
+            return self.step_fn(params, x, y, lr)
+        loss, grads = jax.value_and_grad(self.loss_fn)(params, x, y)
+        return _sgd(params, grads, lr), loss
+
+    def train_step(self, *args):
+        *params, x, y, lr = args
+        new_params, loss = self._step(list(params), x, y, lr)
+        return (*new_params, loss)
+
+    def train_scan(self, *args):
+        *params, xs, ys, lr = args
+
+        def body(carry, xy):
+            x, y = xy
+            new_params, loss = self._step(list(carry), x, y, lr)
+            return tuple(new_params), loss
+
+        final, losses = jax.lax.scan(body, tuple(params), (xs, ys))
+        return (*final, jnp.mean(losses))
+
+    def evaluate(self, *args):
+        *params, x, y = args
+        return self.eval_fn(list(params), x, y)
+
+    def infer(self, *args):
+        *params, x = args
+        return self.infer_fn(list(params), x)
+
+
+# --------------------------------------------------------------------------
+# 1. MNIST MLP (12x12 procedural digits, 10 classes)
+# --------------------------------------------------------------------------
+
+MNIST_D = 144  # 12x12
+MNIST_C = 10
+MNIST_B = 64
+
+
+def _mnist_logits(params, x):
+    w1, b1, w2, b2, w3, b3 = params
+    h = fused_linear(x, w1, b1, "relu")
+    h = fused_linear(h, w2, b2, "relu")
+    return fused_linear(h, w3, b3, "none")
+
+
+def _mnist_loss(params, x, y):
+    return softmax_xent(_mnist_logits(params, x), y)
+
+
+def _mnist_eval(params, x, y):
+    logits = _mnist_logits(params, x)
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return softmax_xent(logits, y), acc
+
+
+def _mnist_infer(params, x):
+    return jax.nn.softmax(_mnist_logits(params, x), axis=1)
+
+
+MNIST_MLP = ModelDef(
+    name="mnist_mlp",
+    param_shapes=[(MNIST_D, 256), (256,), (256, 128), (128,), (128, MNIST_C), (MNIST_C,)],
+    batch=MNIST_B,
+    x_shape=(MNIST_B, MNIST_D),
+    x_dtype="f32",
+    y_shape=(MNIST_B,),
+    y_dtype="i32",
+    infer_x_shape=(MNIST_B, MNIST_D),
+    loss_fn=_mnist_loss,
+    eval_fn=_mnist_eval,
+    infer_fn=_mnist_infer,
+    metric_name="accuracy",
+    lower_is_better=False,
+    description="MNIST-style digit classification (Fig. 2/4 demo task)",
+)
+
+
+# --------------------------------------------------------------------------
+# 2. Emotion CNN (16x16 face sketches, 4 emotions)
+# --------------------------------------------------------------------------
+
+EMO_HW = 16
+EMO_D = EMO_HW * EMO_HW
+EMO_C = 4
+EMO_B = 32
+
+
+def _emotion_logits(params, x):
+    k1, c1, k2, c2, w1, b1, w2, b2 = params
+    img = x.reshape(-1, EMO_HW, EMO_HW, 1)
+    h = jnp.maximum(conv2d(img, k1, c1), 0.0)
+    h = maxpool2(h)  # 8x8x8
+    h = jnp.maximum(conv2d(h, k2, c2), 0.0)
+    h = maxpool2(h)  # 4x4x16
+    flat = h.reshape(h.shape[0], -1)  # 256
+    h = fused_linear(flat, w1, b1, "relu")
+    return fused_linear(h, w2, b2, "none")
+
+
+def _emotion_loss(params, x, y):
+    return softmax_xent(_emotion_logits(params, x), y)
+
+
+def _emotion_eval(params, x, y):
+    logits = _emotion_logits(params, x)
+    acc = jnp.mean((jnp.argmax(logits, axis=1) == y).astype(jnp.float32))
+    return softmax_xent(logits, y), acc
+
+
+def _emotion_infer(params, x):
+    return jax.nn.softmax(_emotion_logits(params, x), axis=1)
+
+
+EMOTION_CNN = ModelDef(
+    name="emotion_cnn",
+    param_shapes=[
+        (3, 3, 1, 8), (8,),
+        (3, 3, 8, 16), (16,),
+        (256, 64), (64,),
+        (64, EMO_C), (EMO_C,),
+    ],
+    batch=EMO_B,
+    x_shape=(EMO_B, EMO_D),
+    x_dtype="f32",
+    y_shape=(EMO_B,),
+    y_dtype="i32",
+    infer_x_shape=(EMO_B, EMO_D),
+    loss_fn=_emotion_loss,
+    eval_fn=_emotion_eval,
+    infer_fn=_emotion_infer,
+    metric_name="accuracy",
+    lower_is_better=False,
+    description="CNN facial-emotion recognition (alpha-test task 4)",
+)
+
+
+# --------------------------------------------------------------------------
+# 3. Movie-rating BiLSTM (token sequences -> rating regression)
+# --------------------------------------------------------------------------
+
+MOVIE_T = 24
+MOVIE_V = 64  # vocab
+MOVIE_E = 32  # embedding dim
+MOVIE_H = 64  # lstm hidden
+MOVIE_B = 32
+
+
+def _lstm_scan(x_emb, wg, bg, reverse=False):
+    """Single-direction LSTM over [B,T,E]; returns final hidden [B,H]."""
+    bsz = x_emb.shape[0]
+    h0 = jnp.zeros((bsz, MOVIE_H), jnp.float32)
+    c0 = jnp.zeros((bsz, MOVIE_H), jnp.float32)
+
+    def cell(carry, xt):
+        h, c = carry
+        gates = fused_linear(jnp.concatenate([h, xt], axis=1), wg, bg, "none")
+        i, f, g, o = jnp.split(gates, 4, axis=1)
+        c = jax.nn.sigmoid(f + 1.0) * c + jax.nn.sigmoid(i) * jnp.tanh(g)
+        h = jax.nn.sigmoid(o) * jnp.tanh(c)
+        return (h, c), None
+
+    seq = jnp.swapaxes(x_emb, 0, 1)  # [T,B,E]
+    (h, _), _ = jax.lax.scan(cell, (h0, c0), seq, reverse=reverse)
+    return h
+
+
+def _movie_pred(params, x):
+    emb, wg_f, bg_f, wg_b, bg_b, wh, bh = params
+    x_emb = jnp.take(emb, x, axis=0)  # [B,T,E]
+    hf = _lstm_scan(x_emb, wg_f, bg_f, reverse=False)
+    hb = _lstm_scan(x_emb, wg_b, bg_b, reverse=True)
+    h = jnp.concatenate([hf, hb], axis=1)
+    # Rating in [0, 10].
+    return 10.0 * jax.nn.sigmoid(fused_linear(h, wh, bh, "none"))[:, 0]
+
+
+def _movie_loss(params, x, y):
+    pred = _movie_pred(params, x)
+    return jnp.mean((pred - y) ** 2)
+
+
+def _movie_eval(params, x, y):
+    pred = _movie_pred(params, x)
+    mse = jnp.mean((pred - y) ** 2)
+    return mse, jnp.sqrt(mse)
+
+
+MOVIE_RNN = ModelDef(
+    name="movie_rnn",
+    param_shapes=[
+        (MOVIE_V, MOVIE_E),
+        (MOVIE_H + MOVIE_E, 4 * MOVIE_H), (4 * MOVIE_H,),
+        (MOVIE_H + MOVIE_E, 4 * MOVIE_H), (4 * MOVIE_H,),
+        (2 * MOVIE_H, 1), (1,),
+    ],
+    batch=MOVIE_B,
+    x_shape=(MOVIE_B, MOVIE_T),
+    x_dtype="i32",
+    y_shape=(MOVIE_B,),
+    y_dtype="f32",
+    infer_x_shape=(MOVIE_B, MOVIE_T),
+    loss_fn=_movie_loss,
+    eval_fn=_movie_eval,
+    infer_fn=lambda params, x: _movie_pred(params, x),
+    metric_name="rmse",
+    lower_is_better=True,
+    description="BiLSTM movie-rating prediction (alpha-test task 3)",
+    hparam_defaults={"lr": 0.05},
+)
+
+
+# --------------------------------------------------------------------------
+# 4. Face GAN (latent 32 -> 12x12 face sketch)
+# --------------------------------------------------------------------------
+
+GAN_Z = 32
+GAN_D = 144  # 12x12 images
+GAN_B = 32
+_GAN_GEN_N = 4  # first 4 param arrays are the generator
+
+
+def _gan_generate(gen_params, z):
+    gw1, gb1, gw2, gb2 = gen_params
+    h = fused_linear(z, gw1, gb1, "relu")
+    return jax.nn.sigmoid(fused_linear(h, gw2, gb2, "none"))
+
+
+def _gan_disc_logit(disc_params, img):
+    dw1, db1, dw2, db2 = disc_params
+    h = fused_linear(img, dw1, db1, "lrelu")
+    return fused_linear(h, dw2, db2, "none")[:, 0]
+
+
+def _gan_latents(x):
+    """Deterministic per-batch latents derived from the real batch (keeps
+    the AOT signature pure: no runtime PRNG plumbing)."""
+    seed_row = jnp.sum(x, axis=1, keepdims=True)  # [B,1]
+    base = jnp.arange(GAN_Z, dtype=jnp.float32)[None, :]
+    return jnp.sin(seed_row * 0.37 + base * 1.7) * 1.5
+
+
+def _gan_losses(params, x):
+    gen, disc = list(params[:_GAN_GEN_N]), list(params[_GAN_GEN_N:])
+    z = _gan_latents(x)
+    fake = _gan_generate(gen, z)
+    real_logit = _gan_disc_logit(disc, x)
+    fake_logit = _gan_disc_logit(disc, jax.lax.stop_gradient(fake))
+    d_loss = _bce_logits(real_logit, jnp.ones_like(real_logit)) + _bce_logits(
+        fake_logit, jnp.zeros_like(fake_logit)
+    )
+    g_logit = _gan_disc_logit(disc, fake)
+    g_loss = _bce_logits(g_logit, jnp.ones_like(g_logit))
+    return d_loss, g_loss
+
+
+def _gan_loss(params, x, y):
+    # Combined objective (used for eval/monitoring; training uses the
+    # alternating _gan_step below).
+    d_loss, g_loss = _gan_losses(params, x)
+    return d_loss + g_loss
+
+
+def _gan_step(params, x, y, lr):
+    """Alternating GAN update: D step on real/stop-grad-fake, then G step
+    against the *updated* discriminator."""
+    gen, disc = list(params[:_GAN_GEN_N]), list(params[_GAN_GEN_N:])
+    z = _gan_latents(x)
+
+    def d_obj(d):
+        fake = jax.lax.stop_gradient(_gan_generate(gen, z))
+        return _bce_logits(_gan_disc_logit(d, x), jnp.ones(x.shape[0])) + _bce_logits(
+            _gan_disc_logit(d, fake), jnp.zeros(x.shape[0])
+        )
+
+    d_loss, d_grads = jax.value_and_grad(d_obj)(disc)
+    disc_new = _sgd(disc, d_grads, lr)
+
+    def g_obj(g):
+        fake = _gan_generate(g, z)
+        return _bce_logits(_gan_disc_logit(disc_new, fake), jnp.ones(x.shape[0]))
+
+    g_loss, g_grads = jax.value_and_grad(g_obj)(gen)
+    gen_new = _sgd(gen, g_grads, lr)
+    return gen_new + disc_new, d_loss + g_loss
+
+
+def _gan_eval(params, x, y):
+    d_loss, g_loss = _gan_losses(params, x)
+    gen, disc = list(params[:_GAN_GEN_N]), list(params[_GAN_GEN_N:])
+    fake = _gan_generate(gen, _gan_latents(x))
+    d_acc = 0.5 * (
+        jnp.mean((_gan_disc_logit(disc, x) > 0).astype(jnp.float32))
+        + jnp.mean((_gan_disc_logit(disc, fake) < 0).astype(jnp.float32))
+    )
+    return g_loss, d_acc
+
+
+def _gan_infer(params, z):
+    return _gan_generate(list(params[:_GAN_GEN_N]), z)
+
+
+FACE_GAN = ModelDef(
+    name="face_gan",
+    param_shapes=[
+        (GAN_Z, 128), (128,), (128, GAN_D), (GAN_D,),   # generator
+        (GAN_D, 128), (128,), (128, 1), (1,),           # discriminator
+    ],
+    batch=GAN_B,
+    x_shape=(GAN_B, GAN_D),
+    x_dtype="f32",
+    y_shape=(GAN_B,),
+    y_dtype="f32",
+    infer_x_shape=(GAN_B, GAN_Z),
+    loss_fn=_gan_loss,
+    eval_fn=_gan_eval,
+    infer_fn=_gan_infer,
+    metric_name="g_loss",
+    lower_is_better=True,
+    scan_k=SCAN_K,
+    description="GAN face generation (alpha-test task 2)",
+    hparam_defaults={"lr": 0.05},
+    step_fn=_gan_step,
+)
+
+
+# --------------------------------------------------------------------------
+# Registry
+# --------------------------------------------------------------------------
+
+MODELS = {m.name: m for m in [MNIST_MLP, EMOTION_CNN, MOVIE_RNN, FACE_GAN]}
+
+
+def param_count(model: ModelDef) -> int:
+    n = 0
+    for s in model.param_shapes:
+        c = 1
+        for d in s:
+            c *= d
+        n += c
+    return n

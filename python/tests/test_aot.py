@@ -1,0 +1,77 @@
+"""AOT export contract: HLO text is produced, parseable-looking, and the
+manifest faithfully describes the lowered signatures."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile.aot import entry_signatures, lower_model, to_hlo_text
+from compile.models import MODELS, param_count
+
+ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+
+def test_entry_signatures_cover_all_entries():
+    for m in MODELS.values():
+        sigs = entry_signatures(m)
+        assert set(sigs) == {"init", "train_step", "train_scan", "evaluate", "infer"}
+        # train_step takes params + x + y + lr.
+        _, args = sigs["train_step"]
+        assert len(args) == len(m.param_shapes) + 3
+        # train_scan stacks K batches.
+        _, scan_args = sigs["train_scan"]
+        assert scan_args[len(m.param_shapes)].shape[0] == m.scan_k
+
+
+def test_hlo_text_is_hlo():
+    m = MODELS["mnist_mlp"]
+    fn, args = entry_signatures(m)["infer"]
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert "HloModule" in text
+    assert "ROOT" in text
+    # return_tuple=True: root computation returns a tuple.
+    assert "(f32[" in text or "tuple(" in text
+
+
+def test_init_hlo_takes_scalar_seed():
+    m = MODELS["emotion_cnn"]
+    fn, args = entry_signatures(m)["init"]
+    assert args[0].shape == ()
+    assert args[0].dtype == jnp.int32
+    text = to_hlo_text(jax.jit(fn).lower(*args))
+    assert "s32[]" in text
+
+
+@pytest.mark.skipif(not os.path.exists(os.path.join(ART_DIR, "manifest.json")),
+                    reason="artifacts not built (run make artifacts)")
+def test_manifest_matches_models():
+    with open(os.path.join(ART_DIR, "manifest.json")) as f:
+        manifest = json.load(f)
+    assert manifest["format"] == 1
+    assert set(manifest["models"]) == set(MODELS)
+    for name, m in MODELS.items():
+        frag = manifest["models"][name]
+        assert frag["param_shapes"] == [list(s) for s in m.param_shapes]
+        assert frag["param_count"] == param_count(m)
+        assert frag["batch"] == m.batch
+        assert frag["x_shape"] == list(m.x_shape)
+        assert frag["scan_k"] == m.scan_k
+        assert frag["metric_name"] == m.metric_name
+        for entry, fname in frag["artifacts"].items():
+            path = os.path.join(ART_DIR, fname)
+            assert os.path.exists(path), f"missing artifact {fname}"
+            with open(path) as fh:
+                head = fh.read(200)
+            assert "HloModule" in head
+
+
+def test_lower_model_writes_files(tmp_path):
+    # Smallest model end to end into a temp dir.
+    m = MODELS["mnist_mlp"]
+    frag = lower_model(m, str(tmp_path), verbose=False)
+    assert set(frag["artifacts"]) == {"init", "train_step", "train_scan", "evaluate", "infer"}
+    for fname in frag["artifacts"].values():
+        assert (tmp_path / fname).exists()

@@ -1,0 +1,176 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes (including awkward non-tile-multiple ones) and
+value ranges; assert_allclose against ref.py is the core signal.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.fused_linear import ACTIVATIONS, fused_linear
+from compile.kernels.pallas_matmul import (
+    estimate_mxu_utilization,
+    estimate_vmem_bytes,
+    matmul,
+)
+from compile.kernels.softmax_xent import accuracy, softmax_xent
+
+RTOL = 2e-5
+ATOL = 2e-5
+
+
+def rand(rng, shape, scale=1.0):
+    return jnp.asarray(rng.standard_normal(shape) * scale, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# matmul
+# ---------------------------------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=70)
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=dims, k=dims, n=dims, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_hypothesis(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, y = rand(rng, (m, k)), rand(rng, (k, n))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (64, 128, 128),   # exactly one tile
+        (65, 129, 127),   # one past / one short of a tile
+        (128, 256, 384),  # multiple tiles each way
+        (3, 300, 5),      # deep contraction, small output
+    ],
+)
+def test_matmul_tile_boundaries(m, k, n):
+    rng = np.random.default_rng(42)
+    x, y = rand(rng, (m, k)), rand(rng, (k, n))
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_custom_tiles():
+    rng = np.random.default_rng(0)
+    x, y = rand(rng, (40, 60)), rand(rng, (60, 24))
+    out = matmul(x, y, tm=8, tk=16, tn=8)
+    np.testing.assert_allclose(out, ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL)
+
+
+def test_matmul_large_values_stable():
+    rng = np.random.default_rng(1)
+    x, y = rand(rng, (16, 32), 100.0), rand(rng, (32, 8), 100.0)
+    np.testing.assert_allclose(matmul(x, y), ref.matmul_ref(x, y), rtol=1e-4, atol=1e-1)
+
+
+def test_vmem_estimate_under_budget():
+    # Default tiles must sit far below the ~16 MiB VMEM of a TPU core.
+    assert estimate_vmem_bytes() < 1 << 20
+    assert 0.0 < estimate_mxu_utilization(60, 100, 10) <= 1.0
+    assert estimate_mxu_utilization(64, 128, 128) == 1.0
+
+
+# ---------------------------------------------------------------------------
+# fused_linear (forward + custom VJP)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("act", ACTIVATIONS)
+def test_fused_linear_forward(act):
+    rng = np.random.default_rng(7)
+    x, w, b = rand(rng, (33, 50)), rand(rng, (50, 20)), rand(rng, (20,))
+    np.testing.assert_allclose(
+        fused_linear(x, w, b, act), ref.linear_ref(x, w, b, act), rtol=RTOL, atol=ATOL
+    )
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 40),
+    i=st.integers(1, 60),
+    o=st.integers(1, 40),
+    act=st.sampled_from(ACTIVATIONS),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_hypothesis(b, i, o, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, bias = rand(rng, (b, i)), rand(rng, (i, o)), rand(rng, (o,))
+    np.testing.assert_allclose(
+        fused_linear(x, w, bias, act), ref.linear_ref(x, w, bias, act), rtol=RTOL, atol=ATOL
+    )
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "tanh", "sigmoid", "lrelu"])
+def test_fused_linear_grads_match_ref(act):
+    rng = np.random.default_rng(3)
+    x, w, b = rand(rng, (16, 24)), rand(rng, (24, 12)), rand(rng, (12,))
+
+    def loss_pallas(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act) ** 2)
+
+    def loss_ref(x, w, b):
+        return jnp.sum(ref.linear_ref(x, w, b, act) ** 2)
+
+    gp = jax.grad(loss_pallas, argnums=(0, 1, 2))(x, w, b)
+    gr = jax.grad(loss_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, c in zip(gp, gr):
+        np.testing.assert_allclose(a, c, rtol=1e-4, atol=1e-4)
+
+
+def test_fused_linear_jit_and_vmap_compose():
+    rng = np.random.default_rng(5)
+    x, w, b = rand(rng, (8, 10)), rand(rng, (10, 6)), rand(rng, (6,))
+    jitted = jax.jit(lambda x: fused_linear(x, w, b, "relu"))
+    np.testing.assert_allclose(jitted(x), ref.linear_ref(x, w, b, "relu"), rtol=RTOL, atol=ATOL)
+
+
+# ---------------------------------------------------------------------------
+# softmax_xent
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(b=st.integers(1, 80), c=st.integers(2, 30), seed=st.integers(0, 2**31 - 1))
+def test_softmax_xent_hypothesis(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = rand(rng, (b, c), 3.0)
+    labels = jnp.asarray(rng.integers(0, c, (b,)), jnp.int32)
+    got = softmax_xent(logits, labels)
+    want = ref.softmax_xent_ref(logits, labels)
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    logits = jnp.asarray([[1000.0, -1000.0], [-1000.0, 1000.0]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    got = float(softmax_xent(logits, labels))
+    assert np.isfinite(got)
+    assert got < 1e-3
+
+
+def test_softmax_xent_grad_matches_ref():
+    rng = np.random.default_rng(11)
+    logits = rand(rng, (20, 7), 2.0)
+    labels = jnp.asarray(rng.integers(0, 7, (20,)), jnp.int32)
+    gp = jax.grad(lambda l: softmax_xent(l, labels))(logits)
+    gr = jax.grad(lambda l: ref.softmax_xent_ref(l, labels))(logits)
+    np.testing.assert_allclose(gp, gr, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_perfect_prediction_low_loss():
+    labels = jnp.asarray([0, 1, 2], jnp.int32)
+    logits = 50.0 * jax.nn.one_hot(labels, 3)
+    assert float(softmax_xent(logits, labels)) < 1e-3
+    assert float(accuracy(logits, labels)) == 1.0
+
+
+def test_accuracy_metric():
+    logits = jnp.asarray([[2.0, 1.0], [0.0, 3.0], [5.0, 0.0], [0.0, 1.0]], jnp.float32)
+    labels = jnp.asarray([0, 1, 1, 1], jnp.int32)
+    assert float(accuracy(logits, labels)) == 0.75

@@ -1,0 +1,192 @@
+"""L2 correctness: the four alpha-task models behave like models.
+
+Shapes, determinism, loss descent under training, custom GAN step
+semantics, conv building block vs the lax oracle, and scan/step
+equivalence (the L2 perf variant must be numerically faithful).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile.kernels import ref
+from compile.models import MODELS, SCAN_K, conv2d, maxpool2, param_count
+
+ALL = sorted(MODELS)
+
+
+def make_batch(m, seed=0):
+    rng = np.random.default_rng(seed)
+    if m.x_dtype == "i32":
+        x = jnp.asarray(rng.integers(0, 64, m.x_shape), jnp.int32)
+    else:
+        x = jnp.asarray(rng.random(m.x_shape), jnp.float32)
+    if m.y_dtype == "i32":
+        classes = 10 if m.name == "mnist_mlp" else 4
+        y = jnp.asarray(rng.integers(0, classes, m.y_shape), jnp.int32)
+    else:
+        y = jnp.asarray(rng.random(m.y_shape) * 5.0, jnp.float32)
+    return x, y
+
+
+# ---------------------------------------------------------------------------
+# Building blocks
+# ---------------------------------------------------------------------------
+
+def test_conv2d_matches_lax_oracle():
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((2, 16, 16, 3)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((3, 3, 3, 5)) * 0.1, jnp.float32)
+    b = jnp.asarray(rng.standard_normal(5), jnp.float32)
+    np.testing.assert_allclose(conv2d(x, k, b), ref.conv2d_ref(x, k, b), rtol=1e-4, atol=1e-4)
+
+
+def test_conv2d_grad_flows():
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.standard_normal((2, 8, 8, 1)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((3, 3, 1, 4)) * 0.1, jnp.float32)
+    b = jnp.zeros(4, jnp.float32)
+    g = jax.grad(lambda k: jnp.sum(conv2d(x, k, b) ** 2))(k)
+    assert g.shape == k.shape
+    assert float(jnp.max(jnp.abs(g))) > 0.0
+
+
+def test_maxpool2():
+    x = jnp.arange(16, dtype=jnp.float32).reshape(1, 4, 4, 1)
+    out = maxpool2(x)
+    assert out.shape == (1, 2, 2, 1)
+    np.testing.assert_allclose(out[0, :, :, 0], [[5.0, 7.0], [13.0, 15.0]])
+
+
+# ---------------------------------------------------------------------------
+# Per-model contracts
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", ALL)
+def test_init_shapes_and_determinism(name):
+    m = MODELS[name]
+    p1 = m.init(jnp.int32(3))
+    p2 = m.init(jnp.int32(3))
+    p3 = m.init(jnp.int32(4))
+    assert [p.shape for p in p1] == [tuple(s) for s in m.param_shapes]
+    for a, b in zip(p1, p2):
+        np.testing.assert_array_equal(a, b)
+    # Different seed differs somewhere (matrices; biases start at zero).
+    assert any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(p1, p3))
+    assert param_count(m) == sum(int(np.prod(s)) for s in m.param_shapes)
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_train_reduces_loss(name):
+    m = MODELS[name]
+    params = list(m.init(jnp.int32(0)))
+    x, y = make_batch(m)
+    lr = jnp.float32(m.hparam_defaults["lr"])
+    step = jax.jit(m.train_step)
+    first = None
+    for i in range(12):
+        out = step(*params, x, y, lr)
+        params = list(out[:-1])
+        if i == 0:
+            first = float(out[-1])
+    last = float(out[-1])
+    assert np.isfinite(first) and np.isfinite(last)
+    assert last < first, f"{name}: {first} -> {last}"
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_scan_equals_repeated_steps(name):
+    m = MODELS[name]
+    params = list(m.init(jnp.int32(1)))
+    xs = jnp.stack([make_batch(m, seed=i)[0] for i in range(m.scan_k)])
+    ys = jnp.stack([make_batch(m, seed=i)[1] for i in range(m.scan_k)])
+    lr = jnp.float32(m.hparam_defaults["lr"])
+
+    scan_out = m.train_scan(*params, xs, ys, lr)
+    scan_params, scan_loss = list(scan_out[:-1]), float(scan_out[-1])
+
+    step = jax.jit(m.train_step)
+    p = list(params)
+    losses = []
+    for i in range(m.scan_k):
+        out = step(*p, xs[i], ys[i], lr)
+        p = list(out[:-1])
+        losses.append(float(out[-1]))
+    for a, b in zip(scan_params, p):
+        np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    assert abs(scan_loss - np.mean(losses)) < 1e-4
+
+
+@pytest.mark.parametrize("name", ALL)
+def test_evaluate_and_infer_shapes(name):
+    m = MODELS[name]
+    params = list(m.init(jnp.int32(2)))
+    x, y = make_batch(m)
+    loss, metric = m.evaluate(*params, x, y)
+    assert np.isfinite(float(loss)) and np.isfinite(float(metric))
+    xi = x if m.infer_x_shape == m.x_shape else jnp.asarray(
+        np.random.default_rng(0).random(m.infer_x_shape), jnp.float32
+    )
+    out = m.infer(*params, xi)
+    assert out.shape[0] == m.batch
+
+
+def test_mnist_probabilities_normalized():
+    m = MODELS["mnist_mlp"]
+    params = list(m.init(jnp.int32(0)))
+    x, _ = make_batch(m)
+    probs = m.infer(*params, x)
+    np.testing.assert_allclose(jnp.sum(probs, axis=1), np.ones(m.batch), rtol=1e-5)
+
+
+def test_movie_predictions_in_range():
+    m = MODELS["movie_rnn"]
+    params = list(m.init(jnp.int32(0)))
+    x, _ = make_batch(m)
+    pred = m.infer(*params, x)
+    assert float(jnp.min(pred)) >= 0.0
+    assert float(jnp.max(pred)) <= 10.0
+
+
+def test_gan_step_updates_both_nets():
+    m = MODELS["face_gan"]
+    params = list(m.init(jnp.int32(0)))
+    x, y = make_batch(m)
+    out = m.train_step(*params, x, y, jnp.float32(0.05))
+    new_params = list(out[:-1])
+    # Generator (first 4) and discriminator (last 4) must both move.
+    gen_moved = any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(params[:4], new_params[:4]))
+    disc_moved = any(float(jnp.max(jnp.abs(a - b))) > 0 for a, b in zip(params[4:], new_params[4:]))
+    assert gen_moved and disc_moved
+
+
+def test_gan_generator_output_is_image_like():
+    m = MODELS["face_gan"]
+    params = list(m.init(jnp.int32(0)))
+    z = jnp.asarray(np.random.default_rng(0).standard_normal(m.infer_x_shape), jnp.float32)
+    img = m.infer(*params, z)
+    assert img.shape == (m.batch, 144)
+    assert float(jnp.min(img)) >= 0.0 and float(jnp.max(img)) <= 1.0
+
+
+def test_gan_training_reaches_adversarial_equilibrium():
+    # GAN losses are adversarial, so "loss goes down" is the wrong check:
+    # a healthy run keeps g_loss near ln 2 and the discriminator useful
+    # (accuracy strictly better than chance) without divergence.
+    m = MODELS["face_gan"]
+    params = list(m.init(jnp.int32(0)))
+    x, y = make_batch(m)
+    step = jax.jit(m.train_step)
+    for _ in range(25):
+        out = step(*params, x, y, jnp.float32(0.05))
+        params = list(out[:-1])
+    g_loss, d_acc = (float(v) for v in m.evaluate(*params, x, y))
+    assert np.isfinite(g_loss) and g_loss < 3.0, g_loss
+    assert 0.5 < d_acc <= 1.0, d_acc
+    assert np.isfinite(float(out[-1]))
+
+
+def test_scan_k_constant_matches_registry():
+    for m in MODELS.values():
+        assert m.scan_k == SCAN_K

@@ -1,0 +1,141 @@
+//! Platform configuration (defaults mirror the paper's 80-P40 prototype).
+
+use crate::container::LatencyModel;
+use crate::util::tomlcfg::Config;
+use std::path::PathBuf;
+
+/// Everything needed to assemble an [`super::NsmlPlatform`].
+#[derive(Debug, Clone)]
+pub struct PlatformConfig {
+    /// Cluster shape (default: 10 nodes × 8 GPUs = the paper's 80 GPUs).
+    pub nodes: usize,
+    pub gpus_per_node: usize,
+    pub gpu_mem_gb: f64,
+    /// Placement policy name (first_fit | best_fit | worst_fit | random).
+    pub policy: String,
+    /// §3.2 empty-queue fast path.
+    pub fast_path: bool,
+    /// Scheduler replicas for leader election.
+    pub sched_replicas: usize,
+    /// Container operation latencies (virtual milliseconds).
+    pub latency: LatencyModel,
+    /// Where the AOT artifacts live.
+    pub artifacts_dir: PathBuf,
+    /// Optional state directory for persistence across CLI invocations.
+    pub state_dir: Option<PathBuf>,
+    /// Default owner of the built-in datasets.
+    pub system_user: String,
+    pub seed: u64,
+}
+
+impl Default for PlatformConfig {
+    fn default() -> PlatformConfig {
+        PlatformConfig {
+            nodes: 10,
+            gpus_per_node: 8,
+            gpu_mem_gb: 24.0,
+            policy: "best_fit".to_string(),
+            fast_path: true,
+            sched_replicas: 3,
+            latency: LatencyModel::default(),
+            artifacts_dir: PathBuf::from("artifacts"),
+            state_dir: None,
+            system_user: "nsml".to_string(),
+            seed: 0,
+        }
+    }
+}
+
+impl PlatformConfig {
+    /// Small/fast shape for tests and benches.
+    pub fn test_default() -> PlatformConfig {
+        PlatformConfig {
+            nodes: 3,
+            gpus_per_node: 4,
+            latency: LatencyModel::fast(),
+            ..Default::default()
+        }
+    }
+
+    /// Parse an `nsml.toml`.
+    pub fn from_toml_str(text: &str) -> Result<PlatformConfig, String> {
+        let cfg = Config::parse(text)?;
+        let dflt = PlatformConfig::default();
+        let lat_dflt = LatencyModel::default();
+        Ok(PlatformConfig {
+            nodes: cfg.int_or("cluster", "nodes", dflt.nodes as i64) as usize,
+            gpus_per_node: cfg.int_or("cluster", "gpus_per_node", dflt.gpus_per_node as i64) as usize,
+            gpu_mem_gb: cfg.float_or("cluster", "gpu_mem_gb", dflt.gpu_mem_gb),
+            policy: cfg.str_or("scheduler", "policy", &dflt.policy),
+            fast_path: cfg.bool_or("scheduler", "fast_path", dflt.fast_path),
+            sched_replicas: cfg.int_or("scheduler", "replicas", dflt.sched_replicas as i64) as usize,
+            latency: LatencyModel {
+                image_build_ms: cfg.int_or("latency", "image_build_ms", lat_dflt.image_build_ms as i64) as u64,
+                image_reuse_ms: cfg.int_or("latency", "image_reuse_ms", lat_dflt.image_reuse_ms as i64) as u64,
+                dataset_copy_ms_per_gb: cfg
+                    .int_or("latency", "dataset_copy_ms_per_gb", lat_dflt.dataset_copy_ms_per_gb as i64)
+                    as u64,
+                dataset_share_ms: cfg.int_or("latency", "dataset_share_ms", lat_dflt.dataset_share_ms as i64) as u64,
+                boot_ms: cfg.int_or("latency", "boot_ms", lat_dflt.boot_ms as i64) as u64,
+            },
+            artifacts_dir: PathBuf::from(cfg.str_or("platform", "artifacts_dir", "artifacts")),
+            state_dir: {
+                let s = cfg.str_or("platform", "state_dir", "");
+                if s.is_empty() {
+                    None
+                } else {
+                    Some(PathBuf::from(s))
+                }
+            },
+            system_user: cfg.str_or("platform", "system_user", &dflt.system_user),
+            seed: cfg.int_or("platform", "seed", 0) as u64,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_match_paper_prototype() {
+        let c = PlatformConfig::default();
+        assert_eq!(c.nodes * c.gpus_per_node, 80);
+        assert_eq!(c.policy, "best_fit");
+        assert!(c.fast_path);
+    }
+
+    #[test]
+    fn toml_overrides() {
+        let text = r#"
+[cluster]
+nodes = 4
+gpus_per_node = 2
+[scheduler]
+policy = "first_fit"
+fast_path = false
+replicas = 5
+[latency]
+image_build_ms = 100
+[platform]
+state_dir = "/tmp/nsml-state"
+seed = 9
+"#;
+        let c = PlatformConfig::from_toml_str(text).unwrap();
+        assert_eq!(c.nodes, 4);
+        assert_eq!(c.gpus_per_node, 2);
+        assert_eq!(c.policy, "first_fit");
+        assert!(!c.fast_path);
+        assert_eq!(c.sched_replicas, 5);
+        assert_eq!(c.latency.image_build_ms, 100);
+        assert_eq!(c.latency.boot_ms, LatencyModel::default().boot_ms);
+        assert_eq!(c.state_dir, Some(PathBuf::from("/tmp/nsml-state")));
+        assert_eq!(c.seed, 9);
+    }
+
+    #[test]
+    fn empty_toml_is_defaults() {
+        let c = PlatformConfig::from_toml_str("").unwrap();
+        assert_eq!(c.nodes, PlatformConfig::default().nodes);
+    }
+}

@@ -1,0 +1,576 @@
+//! The platform facade: everything Figure 1 shows, wired together.
+//!
+//! [`NsmlPlatform`] owns the scheduler (with leader election), the
+//! simulated cluster, the containerized substrate, the storage
+//! containers, session management, the leaderboard and the PJRT runtime.
+//! The CLI (`nsml …`), the web UI and the examples/benches all drive the
+//! platform exclusively through this facade.
+//!
+//! Concurrency model: platform control state (cluster, scheduler,
+//! sessions, leaderboard) is thread-safe, but model *execution* happens
+//! on the facade's thread — mirroring how each NSML ML container owns its
+//! GPUs while the master merely coordinates.
+
+mod config;
+mod persist;
+mod trial;
+
+pub use config::PlatformConfig;
+pub use trial::PlatformTrialRunner;
+
+use crate::cluster::Cluster;
+use crate::container::{ContainerManager, ImageSpec};
+use crate::data::{dataset_for, generator_for, model_for_dataset, register_all};
+use crate::events::EventLog;
+use crate::leaderboard::{Leaderboard, Submission};
+use crate::runtime::{Engine, TensorData, TrainableModel};
+use crate::scheduler::{ElectionGroup, JobSpec, Master, SubmitOutcome};
+use crate::session::{RunStatus, SessionRecord, SessionRun, SessionSpec, SessionState, SessionStore};
+use crate::storage::{CheckpointStore, DatasetRegistry, ObjectStore};
+use crate::util::clock::{sim_clock, SharedClock, SimClock};
+use crate::util::idgen;
+use anyhow::{anyhow, Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Options for `nsml run` (subset of the paper's CLI flags).
+#[derive(Debug, Clone)]
+pub struct RunOpts {
+    pub gpus: usize,
+    pub total_steps: u64,
+    pub lr: Option<f64>,
+    pub seed: u64,
+    pub use_scan: bool,
+    pub priority: crate::scheduler::Priority,
+    pub checkpoint_every: u64,
+    pub eval_every: u64,
+}
+
+impl Default for RunOpts {
+    fn default() -> RunOpts {
+        RunOpts {
+            gpus: 1,
+            total_steps: 200,
+            lr: None,
+            seed: 0,
+            use_scan: false,
+            priority: crate::scheduler::Priority::Normal,
+            checkpoint_every: 50,
+            eval_every: 25,
+        }
+    }
+}
+
+/// The assembled platform.
+pub struct NsmlPlatform {
+    pub config: PlatformConfig,
+    pub clock: SharedClock,
+    pub sim: SimClock,
+    pub events: EventLog,
+    pub cluster: Cluster,
+    pub master: Master,
+    pub election: ElectionGroup,
+    pub containers: ContainerManager,
+    pub objects: ObjectStore,
+    pub datasets: DatasetRegistry,
+    pub checkpoints: CheckpointStore,
+    pub sessions: SessionStore,
+    pub leaderboard: Leaderboard,
+    /// Utilization/queue time series sampled by the drive loop (§3.1).
+    pub monitor: crate::cluster::UtilizationMonitor,
+    engine: Rc<Engine>,
+    /// Live training executions keyed by session id.
+    active: RefCell<BTreeMap<String, SessionRun>>,
+}
+
+impl NsmlPlatform {
+    /// Assemble a platform from config. Loads persisted state if a state
+    /// dir is configured.
+    pub fn new(config: PlatformConfig) -> Result<NsmlPlatform> {
+        // Virtual time: container/scheduler latencies advance a SimClock,
+        // so tests/benches are deterministic and instant while relative
+        // costs (cold vs warm start, failover) stay measurable.
+        let (clock, sim) = sim_clock();
+        let events = EventLog::new(clock.clone());
+        let cluster = Cluster::homogeneous(
+            clock.clone(),
+            events.clone(),
+            config.nodes,
+            config.gpus_per_node,
+            config.gpu_mem_gb,
+        );
+        let policy = crate::scheduler::policy_by_name(&config.policy, config.seed);
+        let mut master = Master::new(cluster.clone(), policy, events.clone());
+        master.fast_path = config.fast_path;
+        let election = ElectionGroup::new(clock.clone(), events.clone(), config.sched_replicas);
+        let containers = ContainerManager::new(clock.clone(), events.clone(), config.latency.clone());
+        let objects = match &config.state_dir {
+            Some(dir) => ObjectStore::filesystem(dir.join("objects"))?,
+            None => ObjectStore::memory(),
+        };
+        let datasets = DatasetRegistry::new(objects.clone());
+        let checkpoints = CheckpointStore::new(objects.clone());
+        let engine = Rc::new(Engine::new(&config.artifacts_dir).with_context(|| {
+            format!("loading artifacts from {} (run `make artifacts`)", config.artifacts_dir.display())
+        })?);
+        let platform = NsmlPlatform {
+            clock,
+            sim,
+            events,
+            cluster,
+            master,
+            election,
+            containers,
+            objects,
+            datasets,
+            checkpoints,
+            sessions: SessionStore::new(),
+            leaderboard: Leaderboard::new(),
+            monitor: crate::cluster::UtilizationMonitor::new(),
+            engine,
+            active: RefCell::new(BTreeMap::new()),
+            config,
+        };
+        platform.bootstrap()?;
+        if platform.config.state_dir.is_some() {
+            platform.load_state()?;
+        }
+        Ok(platform)
+    }
+
+    /// Register the built-in datasets + their leaderboards.
+    fn bootstrap(&self) -> Result<()> {
+        register_all(&self.datasets, &self.config.system_user)?;
+        for name in self.engine.manifest().model_names() {
+            let m = self.engine.manifest().model(&name)?;
+            self.leaderboard.ensure_board(dataset_for(&name), &m.metric_name, m.lower_is_better);
+        }
+        Ok(())
+    }
+
+    pub fn engine(&self) -> &Rc<Engine> {
+        &self.engine
+    }
+
+    // ------------------------------------------------------------------
+    // nsml run
+    // ------------------------------------------------------------------
+
+    /// Submit a training session (the `nsml run main.py -d DATASET` flow):
+    /// packs nothing here (code packing is exercised via storage::codepack
+    /// by the CLI), submits a job, and starts training when placed.
+    pub fn run(&self, user: &str, dataset: &str, opts: RunOpts) -> Result<String> {
+        let model = model_for_dataset(dataset)
+            .ok_or_else(|| anyhow!("no model registered for dataset '{}'", dataset))?;
+        self.datasets.get(dataset, user)?; // visibility check
+        let manifest = self.engine.manifest().model(model)?;
+        let id = idgen::session_id(user, dataset);
+        let mut spec = SessionSpec::new(&id, user, dataset, model);
+        spec.gpus = opts.gpus;
+        spec.priority = opts.priority;
+        spec.total_steps = opts.total_steps;
+        spec.lr = opts.lr.unwrap_or(manifest.default_lr);
+        spec.seed = opts.seed;
+        spec.checkpoint_every = opts.checkpoint_every;
+        spec.eval_every = opts.eval_every;
+        spec.use_scan = opts.use_scan;
+
+        self.sessions.insert(SessionRecord::new(spec.clone(), self.clock.now_ms()));
+        let job = JobSpec {
+            id: id.clone(),
+            user: user.to_string(),
+            dataset: dataset.to_string(),
+            req: crate::cluster::ResourceReq::gpus(opts.gpus),
+            priority: opts.priority,
+        };
+        match self.master.submit(job) {
+            SubmitOutcome::PlacedImmediately(node) => {
+                self.prepare_and_start(&id, node)?;
+            }
+            SubmitOutcome::Queued { position } => {
+                self.events.info("platform", &id, format!("queued at position {}", position));
+            }
+        }
+        Ok(id)
+    }
+
+    /// Container bring-up + session start (or auto-resume) on a node.
+    fn prepare_and_start(&self, id: &str, node: crate::cluster::NodeId) -> Result<()> {
+        let rec = self.sessions.get(id).ok_or_else(|| anyhow!("unknown session {}", id))?;
+        self.sessions.update(id, |r| {
+            r.state = SessionState::Preparing;
+            r.node = Some(node);
+        });
+        let dataset_info = self.datasets.get(&rec.spec.dataset, &rec.spec.user)?;
+        let image = match rec.spec.model.as_str() {
+            "mnist_mlp" | "emotion_cnn" => ImageSpec::tensorflow(),
+            _ => ImageSpec::pytorch(),
+        };
+        let container =
+            self.containers.launch(id, node, &image, &rec.spec.dataset, dataset_info.nominal_size_gb);
+        self.sessions.update(id, |r| r.container = Some(container.id.clone()));
+
+        let gen = generator_for(&rec.spec.model, rec.spec.seed)
+            .ok_or_else(|| anyhow!("no data generator for model {}", rec.spec.model))?;
+        let has_ckpt = self.checkpoints.latest(id).is_some();
+        let run = if has_ckpt {
+            // Auto-recovery (§4.2): resume from the last backup.
+            self.sessions.update(id, |r| r.recoveries += 1);
+            SessionRun::resume(
+                self.engine.clone(),
+                rec.spec.clone(),
+                gen,
+                self.checkpoints.clone(),
+                self.sessions.clone(),
+                self.events.clone(),
+                self.clock.clone(),
+            )?
+        } else {
+            SessionRun::start(
+                self.engine.clone(),
+                rec.spec.clone(),
+                gen,
+                self.checkpoints.clone(),
+                self.sessions.clone(),
+                self.events.clone(),
+                self.clock.clone(),
+            )?
+        };
+        self.active.borrow_mut().insert(id.to_string(), run);
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // The platform event loop
+    // ------------------------------------------------------------------
+
+    /// Drive every active session forward by up to `chunk` steps, handle
+    /// completions/failures and start newly placed jobs. Returns the
+    /// number of sessions that made progress.
+    pub fn drive(&self, chunk: u64) -> Result<usize> {
+        // 0. Alive slaves heartbeat continuously in the real system; model
+        //    that before staleness checks (virtual time may have jumped a
+        //    lot during container bring-up). Nodes killed by failure
+        //    injection stay dead — heartbeat_all skips them.
+        self.cluster.heartbeat_all();
+        for r in self.election.replica_ids() {
+            self.election.heartbeat(r); // no-op for killed replicas
+        }
+        // 1. Cluster maintenance: dead nodes orphan their jobs.
+        let orphans = self.cluster.reap_dead();
+        if !orphans.is_empty() {
+            self.on_orphans(&orphans);
+        }
+        // 2. Leader lease check (a healthy leader is a no-op).
+        self.election.tick();
+
+        // 3. Step active runs.
+        let ids: Vec<String> = self.active.borrow().keys().cloned().collect();
+        let mut progressed = 0;
+        for id in ids {
+            // Skip sessions whose state got externally flipped (paused/stopped).
+            let state = self.sessions.get(&id).map(|r| r.state);
+            if state != Some(SessionState::Running) {
+                continue;
+            }
+            let status = {
+                let mut active = self.active.borrow_mut();
+                let Some(run) = active.get_mut(&id) else { continue };
+                run.step_chunk(chunk)
+            };
+            progressed += 1;
+            match status {
+                Ok(RunStatus::Completed) => self.finalize(&id)?,
+                Ok(RunStatus::InProgress) => {}
+                Err(e) => {
+                    self.events.error("platform", &id, format!("session failed: {}", e));
+                    self.active.borrow_mut().remove(&id);
+                    self.containers.stop_job(&id);
+                    for (job, node) in self.master.complete(&id) {
+                        self.prepare_and_start(&job.id, node)?;
+                    }
+                }
+            }
+        }
+
+        // 4. Try to place queued work.
+        for (job, node) in self.master.pump() {
+            self.prepare_and_start(&job.id, node)?;
+        }
+
+        // 5. Ops telemetry.
+        self.monitor.sample(&self.cluster, self.master.queue_len());
+        Ok(progressed)
+    }
+
+    /// Run until every session is terminal (or `max_rounds` safety cap).
+    pub fn run_to_completion(&self, chunk: u64, max_rounds: usize) -> Result<()> {
+        for _ in 0..max_rounds {
+            let pending = self
+                .sessions
+                .list()
+                .into_iter()
+                .filter(|r| !r.state.is_terminal() && r.state != SessionState::Paused)
+                .count();
+            if pending == 0 {
+                return Ok(());
+            }
+            self.drive(chunk)?;
+            // Advance virtual time so heartbeat/lease logic stays live.
+            self.cluster.heartbeat_all();
+            if let Some((leader, _)) = self.election.leader() {
+                self.election.heartbeat(leader);
+            }
+            self.sim.advance(10);
+        }
+        Err(anyhow!("run_to_completion: sessions still pending after cap"))
+    }
+
+    /// Session completed: leaderboard submission + resource release.
+    fn finalize(&self, id: &str) -> Result<()> {
+        self.active.borrow_mut().remove(id);
+        let rec = self.sessions.get(id).ok_or_else(|| anyhow!("unknown session {}", id))?;
+        if let Some(best) = rec.best_metric {
+            let manifest = self.engine.manifest().model(&rec.spec.model)?;
+            self.leaderboard.submit(
+                &rec.spec.dataset,
+                Submission {
+                    session: id.to_string(),
+                    user: rec.spec.user.clone(),
+                    model: rec.spec.model.clone(),
+                    metric_name: manifest.metric_name.clone(),
+                    value: best,
+                    step: rec.steps_done,
+                    at_ms: self.clock.now_ms(),
+                },
+            );
+        }
+        self.containers.stop_job(id);
+        for (job, node) in self.master.complete(id) {
+            self.prepare_and_start(&job.id, node)?;
+        }
+        Ok(())
+    }
+
+    /// Node-failure fallout: requeue affected sessions; they auto-resume
+    /// from checkpoints when re-placed.
+    fn on_orphans(&self, orphans: &[String]) {
+        for id in orphans {
+            self.active.borrow_mut().remove(id);
+            self.containers.stop_job(id);
+            self.sessions.update(id, |r| {
+                if !r.state.is_terminal() {
+                    r.state = SessionState::Queued;
+                    r.node = None;
+                }
+            });
+        }
+        let (_requeued, placed) = self.master.handle_orphans(orphans);
+        for (job, node) in placed {
+            let _ = self.prepare_and_start(&job.id, node);
+        }
+    }
+
+    /// Inject a node failure (drills + tests). Affected sessions recover.
+    pub fn kill_node(&self, node: crate::cluster::NodeId) {
+        let orphans = self.cluster.kill_node(node);
+        self.on_orphans(&orphans);
+    }
+
+    // ------------------------------------------------------------------
+    // Session control (pause / edit / resume / stop — §3.3)
+    // ------------------------------------------------------------------
+
+    /// Pause a running session (checkpoints first).
+    pub fn pause(&self, id: &str) -> Result<()> {
+        let mut active = self.active.borrow_mut();
+        let run = active.get_mut(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        run.pause()?;
+        Ok(())
+    }
+
+    /// Resume a paused session, optionally with a new learning rate —
+    /// the paper's in-training hyperparameter tuning.
+    pub fn resume(&self, id: &str, new_lr: Option<f64>) -> Result<()> {
+        let mut active = self.active.borrow_mut();
+        let run = active.get_mut(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        if let Some(lr) = new_lr {
+            run.set_lr(lr);
+        }
+        self.sessions.update(id, |r| r.state = SessionState::Running);
+        Ok(())
+    }
+
+    /// Stop a session outright. Freed resources immediately go to queued
+    /// work.
+    pub fn stop(&self, id: &str) -> Result<()> {
+        self.active.borrow_mut().remove(id);
+        self.containers.stop_job(id);
+        self.master.cancel_queued(id);
+        let placed = self.master.complete(id);
+        self.sessions.update(id, |r| {
+            if !r.state.is_terminal() {
+                r.state = SessionState::Stopped;
+            }
+        });
+        self.events.info("platform", id, "stopped by user");
+        for (job, node) in placed {
+            self.prepare_and_start(&job.id, node)?;
+        }
+        Ok(())
+    }
+
+    // ------------------------------------------------------------------
+    // nsml infer (the Fig. 4 demo path)
+    // ------------------------------------------------------------------
+
+    /// Run inference against a session's best checkpoint (works for
+    /// finished sessions; "nsml infer" spins up a fresh REPL container).
+    pub fn infer(&self, id: &str, x: &TensorData) -> Result<Vec<f32>> {
+        let rec = self.sessions.get(id).ok_or_else(|| anyhow!("unknown session {}", id))?;
+        let manifest = self.engine.manifest().model(&rec.spec.model)?;
+        let ckpt = self
+            .checkpoints
+            .best(id, manifest.lower_is_better)
+            .or_else(|| self.checkpoints.latest(id))
+            .ok_or_else(|| anyhow!("session {} has no checkpoint", id))?;
+        let bytes = self.checkpoints.load_params(&ckpt)?;
+        let model = TrainableModel::from_checkpoint(self.engine.clone(), &rec.spec.model, &bytes)?;
+        model.infer(x)
+    }
+
+    // ------------------------------------------------------------------
+    // Persistence
+    // ------------------------------------------------------------------
+
+    pub fn save_state(&self) -> Result<()> {
+        if let Some(dir) = &self.config.state_dir {
+            persist::save(dir, &self.sessions, &self.leaderboard, &self.checkpoints)?;
+        }
+        Ok(())
+    }
+
+    fn load_state(&self) -> Result<()> {
+        if let Some(dir) = &self.config.state_dir {
+            persist::load(dir, &self.sessions, &self.leaderboard, &self.checkpoints)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn platform() -> Option<NsmlPlatform> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let mut cfg = PlatformConfig::test_default();
+        cfg.artifacts_dir = dir;
+        Some(NsmlPlatform::new(cfg).unwrap())
+    }
+
+    fn quick_opts(steps: u64) -> RunOpts {
+        RunOpts { total_steps: steps, eval_every: steps / 2, checkpoint_every: steps / 2, ..Default::default() }
+    }
+
+    #[test]
+    fn end_to_end_run_reaches_leaderboard() {
+        let Some(p) = platform() else { return };
+        let id = p.run("kim", "mnist", quick_opts(40)).unwrap();
+        p.run_to_completion(20, 100).unwrap();
+        let rec = p.sessions.get(&id).unwrap();
+        assert_eq!(rec.state, SessionState::Done);
+        assert!(rec.best_metric.unwrap() > 0.2);
+        assert_eq!(p.leaderboard.rank_of("mnist", &id), Some(1));
+        // Container was brought up and torn down.
+        assert!(p.containers.running().is_empty());
+        assert_eq!(p.cluster.gpu_totals().1, 12); // all GPUs free again
+    }
+
+    #[test]
+    fn contention_queues_then_schedules() {
+        let Some(p) = platform() else { return };
+        // 3 nodes × 4 GPUs; five 4-GPU jobs → two must queue.
+        let mut ids = Vec::new();
+        for i in 0..5 {
+            let mut o = quick_opts(20);
+            o.gpus = 4;
+            o.seed = i;
+            ids.push(p.run("kim", "mnist", o).unwrap());
+        }
+        assert!(p.master.queue_len() >= 2);
+        p.run_to_completion(20, 200).unwrap();
+        for id in &ids {
+            assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
+        }
+        let s = p.master.stats();
+        assert_eq!(s.completed, 5);
+        assert!(s.placed_from_queue >= 2);
+    }
+
+    #[test]
+    fn node_failure_recovers_session_from_checkpoint() {
+        let Some(p) = platform() else { return };
+        let mut o = quick_opts(60);
+        o.checkpoint_every = 10;
+        let id = p.run("kim", "mnist", o).unwrap();
+        // Train partway, then kill the node under it.
+        p.drive(20).unwrap();
+        let node = p.sessions.get(&id).unwrap().node.unwrap();
+        p.kill_node(node);
+        let rec = p.sessions.get(&id).unwrap();
+        assert!(rec.state == SessionState::Queued || rec.state == SessionState::Running);
+        p.run_to_completion(20, 200).unwrap();
+        let rec = p.sessions.get(&id).unwrap();
+        assert_eq!(rec.state, SessionState::Done);
+        assert_eq!(rec.recoveries, 1);
+        // It resumed, not restarted: steps_done == total even though the
+        // checkpoint restart replayed from step <= 20.
+        assert_eq!(rec.steps_done, 60);
+    }
+
+    #[test]
+    fn infer_after_completion() {
+        let Some(p) = platform() else { return };
+        let id = p.run("kim", "mnist", quick_opts(40)).unwrap();
+        p.run_to_completion(20, 100).unwrap();
+        // Build a digit and classify it.
+        let mut img = vec![0.0f32; 144];
+        crate::data::digits::draw_digit(3, 0, 0, 1.0, &mut img);
+        let batch_x = img.repeat(64);
+        let x = TensorData::f32(batch_x, &[64, 144]);
+        let probs = p.infer(&id, &x).unwrap();
+        assert_eq!(probs.len(), 640);
+        let row = &probs[..10];
+        let argmax = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+        assert_eq!(argmax, 3, "probs {:?}", row);
+    }
+
+    #[test]
+    fn stop_cancels_queued_session() {
+        let Some(p) = platform() else { return };
+        let mut o = quick_opts(20);
+        o.gpus = 4;
+        let _a = p.run("kim", "mnist", o.clone()).unwrap();
+        let _b = p.run("kim", "mnist", o.clone()).unwrap();
+        let _c = p.run("kim", "mnist", o.clone()).unwrap();
+        // Fourth job queues; stop it before it ever runs.
+        let d = p.run("kim", "mnist", o).unwrap();
+        assert!(p.master.queue_len() >= 1);
+        p.stop(&d).unwrap();
+        p.run_to_completion(20, 200).unwrap();
+        assert_eq!(p.sessions.get(&d).unwrap().state, SessionState::Stopped);
+    }
+
+    #[test]
+    fn unknown_dataset_rejected() {
+        let Some(p) = platform() else { return };
+        assert!(p.run("kim", "no-such-dataset", RunOpts::default()).is_err());
+    }
+}

@@ -1,0 +1,256 @@
+//! Platform state persistence: sessions + leaderboard as JSON under the
+//! state directory, so `nsml` CLI invocations compose (run, then `nsml
+//! dataset board`, then `nsml plot`, …) like the real multi-process NSML.
+
+use crate::leaderboard::{Leaderboard, Submission};
+use crate::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+fn state_of(s: &str) -> SessionState {
+    match s {
+        "queued" => SessionState::Queued,
+        "preparing" => SessionState::Preparing,
+        "running" => SessionState::Running,
+        "paused" => SessionState::Paused,
+        "failed" => SessionState::Failed,
+        "stopped" => SessionState::Stopped,
+        _ => SessionState::Done,
+    }
+}
+
+fn record_to_json(r: &SessionRecord) -> Json {
+    let mut spec = Json::obj();
+    spec.set("id", r.spec.id.as_str().into())
+        .set("user", r.spec.user.as_str().into())
+        .set("dataset", r.spec.dataset.as_str().into())
+        .set("model", r.spec.model.as_str().into())
+        .set("gpus", r.spec.gpus.into())
+        .set("priority", r.spec.priority.as_str().into())
+        .set("total_steps", r.spec.total_steps.into())
+        .set("lr", r.spec.lr.into())
+        .set("seed", r.spec.seed.into())
+        .set("checkpoint_every", r.spec.checkpoint_every.into())
+        .set("eval_every", r.spec.eval_every.into())
+        .set("use_scan", r.spec.use_scan.into());
+    let metrics: Vec<Json> = r
+        .metrics
+        .points()
+        .iter()
+        .map(|p| {
+            let mut m = Json::obj();
+            m.set("step", p.step.into()).set("name", p.name.as_str().into()).set("value", p.value.into());
+            m
+        })
+        .collect();
+    let mut o = Json::obj();
+    o.set("spec", spec)
+        .set("state", r.state.as_str().into())
+        .set("steps_done", r.steps_done.into())
+        .set("best_metric", r.best_metric.map(Json::Num).unwrap_or(Json::Null))
+        .set("submitted_at_ms", r.submitted_at_ms.into())
+        .set("recoveries", (r.recoveries as u64).into())
+        .set("metrics", Json::Arr(metrics));
+    o
+}
+
+fn record_from_json(j: &Json) -> Result<SessionRecord> {
+    let spec_j = j.get("spec").ok_or_else(|| anyhow!("record missing spec"))?;
+    let s = |k: &str| spec_j.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+    let n = |k: &str| spec_j.get(k).and_then(Json::as_f64).unwrap_or(0.0);
+    let mut spec = SessionSpec::new(&s("id"), &s("user"), &s("dataset"), &s("model"));
+    spec.gpus = n("gpus") as usize;
+    spec.priority = crate::scheduler::Priority::from_str(&s("priority"));
+    spec.total_steps = n("total_steps") as u64;
+    spec.lr = n("lr");
+    spec.seed = n("seed") as u64;
+    spec.checkpoint_every = n("checkpoint_every") as u64;
+    spec.eval_every = n("eval_every") as u64;
+    spec.use_scan = spec_j.get("use_scan").and_then(Json::as_bool).unwrap_or(false);
+
+    let mut rec = SessionRecord::new(spec, j.get("submitted_at_ms").and_then(Json::as_i64).unwrap_or(0) as u64);
+    rec.state = state_of(j.get("state").and_then(Json::as_str).unwrap_or("done"));
+    rec.steps_done = j.get("steps_done").and_then(Json::as_i64).unwrap_or(0) as u64;
+    rec.best_metric = j.get("best_metric").and_then(Json::as_f64);
+    rec.recoveries = j.get("recoveries").and_then(Json::as_i64).unwrap_or(0) as u32;
+    if let Some(points) = j.get("metrics").and_then(Json::as_arr) {
+        for p in points {
+            rec.metrics.log(
+                p.get("step").and_then(Json::as_i64).unwrap_or(0) as u64,
+                p.get("name").and_then(Json::as_str).unwrap_or(""),
+                p.get("value").and_then(Json::as_f64).unwrap_or(f64::NAN),
+            );
+        }
+    }
+    Ok(rec)
+}
+
+/// Save sessions + leaderboard + checkpoint index under `<dir>/state.json`.
+pub fn save(
+    dir: &Path,
+    sessions: &SessionStore,
+    leaderboard: &Leaderboard,
+    checkpoints: &crate::storage::CheckpointStore,
+) -> Result<()> {
+    std::fs::create_dir_all(dir)?;
+    let mut doc = Json::obj();
+    doc.set("format", 1u64.into());
+    let ckpt_records: Vec<Json> = checkpoints
+        .dump()
+        .iter()
+        .map(|c| {
+            let bytes = crate::storage::CheckpointStore::record_bytes(c);
+            parse(std::str::from_utf8(&bytes).unwrap()).unwrap()
+        })
+        .collect();
+    doc.set("checkpoints", Json::Arr(ckpt_records));
+    doc.set("sessions", Json::Arr(sessions.list().iter().map(record_to_json).collect()));
+    let mut boards = Json::obj();
+    for ds in leaderboard.datasets() {
+        let subs: Vec<Json> = leaderboard
+            .top(&ds, usize::MAX)
+            .iter()
+            .map(|s| {
+                let mut o = Json::obj();
+                o.set("session", s.session.as_str().into())
+                    .set("user", s.user.as_str().into())
+                    .set("model", s.model.as_str().into())
+                    .set("metric_name", s.metric_name.as_str().into())
+                    .set("value", s.value.into())
+                    .set("step", s.step.into())
+                    .set("at_ms", s.at_ms.into());
+                o
+            })
+            .collect();
+        boards.set(&ds, Json::Arr(subs));
+    }
+    doc.set("leaderboard", boards);
+    std::fs::write(dir.join("state.json"), doc.to_pretty())?;
+    Ok(())
+}
+
+/// Load persisted state into live stores (boards must already exist).
+pub fn load(
+    dir: &Path,
+    sessions: &SessionStore,
+    leaderboard: &Leaderboard,
+    checkpoints: &crate::storage::CheckpointStore,
+) -> Result<()> {
+    let path = dir.join("state.json");
+    if !path.exists() {
+        return Ok(()); // fresh state dir
+    }
+    let text = std::fs::read_to_string(&path)?;
+    let doc = parse(&text).map_err(|e| anyhow!("state.json: {}", e))?;
+    if let Some(records) = doc.get("sessions").and_then(Json::as_arr) {
+        for r in records {
+            sessions.insert(record_from_json(r)?);
+        }
+    }
+    if let Some(records) = doc.get("checkpoints").and_then(Json::as_arr) {
+        for r in records {
+            let ck = crate::storage::CheckpointStore::parse_record(r.to_string().as_bytes())?;
+            checkpoints.restore(ck);
+        }
+    }
+    if let Some(boards) = doc.get("leaderboard").and_then(Json::as_obj) {
+        for (ds, subs) in boards {
+            if let Some(arr) = subs.as_arr() {
+                for s in arr {
+                    let g = |k: &str| s.get(k).and_then(Json::as_str).unwrap_or("").to_string();
+                    leaderboard.submit(
+                        ds,
+                        Submission {
+                            session: g("session"),
+                            user: g("user"),
+                            model: g("model"),
+                            metric_name: g("metric_name"),
+                            value: s.get("value").and_then(Json::as_f64).unwrap_or(f64::NAN),
+                            step: s.get("step").and_then(Json::as_i64).unwrap_or(0) as u64,
+                            at_ms: s.get("at_ms").and_then(Json::as_i64).unwrap_or(0) as u64,
+                        },
+                    );
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_sessions_and_board() {
+        let dir = std::env::temp_dir().join(format!("nsml-persist-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+
+        let sessions = SessionStore::new();
+        let mut spec = SessionSpec::new("kim/mnist/1", "kim", "mnist", "mnist_mlp");
+        spec.lr = 0.05;
+        spec.use_scan = true;
+        let mut rec = SessionRecord::new(spec, 42);
+        rec.state = SessionState::Done;
+        rec.steps_done = 100;
+        rec.best_metric = Some(0.93);
+        rec.recoveries = 2;
+        rec.metrics.log(10, "train_loss", 1.5);
+        rec.metrics.log(20, "accuracy", 0.8);
+        sessions.insert(rec);
+
+        let lb = Leaderboard::new();
+        lb.ensure_board("mnist", "accuracy", false);
+        lb.submit(
+            "mnist",
+            Submission {
+                session: "kim/mnist/1".into(),
+                user: "kim".into(),
+                model: "mnist_mlp".into(),
+                metric_name: "accuracy".into(),
+                value: 0.93,
+                step: 100,
+                at_ms: 50,
+            },
+        );
+
+        let ckpts = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
+        let mut hp = std::collections::BTreeMap::new();
+        hp.insert("lr".to_string(), 0.05);
+        ckpts.save("kim/mnist/1", 100, 0.2, &hp, b"params", 7).unwrap();
+        save(&dir, &sessions, &lb, &ckpts).unwrap();
+
+        let sessions2 = SessionStore::new();
+        let lb2 = Leaderboard::new();
+        lb2.ensure_board("mnist", "accuracy", false);
+        let ckpts2 = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
+        load(&dir, &sessions2, &lb2, &ckpts2).unwrap();
+        // Checkpoint index survives the round trip.
+        let restored = ckpts2.latest("kim/mnist/1").unwrap();
+        assert_eq!(restored.step, 100);
+        assert_eq!(restored.hparams["lr"], 0.05);
+
+        let r = sessions2.get("kim/mnist/1").unwrap();
+        assert_eq!(r.state, SessionState::Done);
+        assert_eq!(r.steps_done, 100);
+        assert_eq!(r.best_metric, Some(0.93));
+        assert_eq!(r.recoveries, 2);
+        assert_eq!(r.spec.lr, 0.05);
+        assert!(r.spec.use_scan);
+        assert_eq!(r.metrics.series("train_loss"), vec![(10.0, 1.5)]);
+        assert_eq!(lb2.best("mnist").unwrap().value, 0.93);
+
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn load_missing_state_is_noop() {
+        let dir = std::env::temp_dir().join("nsml-persist-none");
+        let sessions = SessionStore::new();
+        let lb = Leaderboard::new();
+        let ckpts = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
+        load(&dir, &sessions, &lb, &ckpts).unwrap();
+        assert!(sessions.is_empty());
+    }
+}

@@ -1,0 +1,184 @@
+//! Glue between the AutoML searchers and real platform sessions: each
+//! trial is a genuine training session (model, data, checkpoints) driven
+//! incrementally — what §3.1's "automatically optimize the
+//! hyperparameters" does on the deployed system.
+
+use crate::automl::TrialRunner;
+use crate::data::{generator_for, model_for_dataset};
+use crate::events::EventLog;
+use crate::runtime::Engine;
+use crate::session::{SessionRecord, SessionRun, SessionSpec, SessionStore};
+use crate::storage::CheckpointStore;
+use crate::util::clock::SharedClock;
+use anyhow::Result;
+use std::rc::Rc;
+
+/// Runs AutoML trials as real sessions on the platform runtime.
+pub struct PlatformTrialRunner {
+    engine: Rc<Engine>,
+    dataset: String,
+    model: String,
+    user: String,
+    ckpts: CheckpointStore,
+    sessions: SessionStore,
+    events: EventLog,
+    clock: SharedClock,
+    seed: u64,
+    runs: Vec<Option<SessionRun>>,
+    pub session_ids: Vec<String>,
+}
+
+impl PlatformTrialRunner {
+    pub fn new(
+        engine: Rc<Engine>,
+        dataset: &str,
+        user: &str,
+        ckpts: CheckpointStore,
+        sessions: SessionStore,
+        events: EventLog,
+        clock: SharedClock,
+        candidates: usize,
+        seed: u64,
+    ) -> Result<PlatformTrialRunner> {
+        let model = model_for_dataset(dataset)
+            .ok_or_else(|| anyhow::anyhow!("no model for dataset '{}'", dataset))?
+            .to_string();
+        Ok(PlatformTrialRunner {
+            engine,
+            dataset: dataset.to_string(),
+            model,
+            user: user.to_string(),
+            ckpts,
+            sessions,
+            events,
+            clock,
+            seed,
+            runs: (0..candidates).map(|_| None).collect(),
+            session_ids: vec![String::new(); candidates],
+        })
+    }
+
+    fn ensure_run(&mut self, trial: usize, lr: f64) -> Result<()> {
+        if self.runs[trial].is_some() {
+            return Ok(());
+        }
+        let id = format!("{}/{}/automl-{}", self.user, self.dataset, trial);
+        let mut spec = SessionSpec::new(&id, &self.user, &self.dataset, &self.model);
+        spec.lr = lr;
+        spec.seed = self.seed + trial as u64;
+        spec.total_steps = u64::MAX / 2; // searcher decides how far to go
+        spec.eval_every = 0;
+        spec.checkpoint_every = 0;
+        self.sessions.insert(SessionRecord::new(spec.clone(), self.clock.now_ms()));
+        let gen = generator_for(&self.model, spec.seed).unwrap();
+        let run = SessionRun::start(
+            self.engine.clone(),
+            spec,
+            gen,
+            self.ckpts.clone(),
+            self.sessions.clone(),
+            self.events.clone(),
+            self.clock.clone(),
+        )?;
+        self.session_ids[trial] = id;
+        self.runs[trial] = Some(run);
+        Ok(())
+    }
+
+    /// Persist the winner's model ("save the model of best score", §3.1).
+    pub fn save_best(&mut self, trial: usize) -> Result<crate::storage::Checkpoint> {
+        let run = self.runs[trial].as_mut().expect("winner trial must have run");
+        run.checkpoint()
+    }
+}
+
+impl TrialRunner for PlatformTrialRunner {
+    fn extend(&mut self, trial: usize, lr: f64, steps: u64) -> Vec<(f64, f64)> {
+        self.ensure_run(trial, lr).expect("trial start");
+        let run = self.runs[trial].as_mut().unwrap();
+        run.set_lr(lr);
+        run.step_chunk(steps).expect("trial step");
+        self.sessions
+            .get(&self.session_ids[trial])
+            .map(|r| r.metrics.series("train_loss"))
+            .unwrap_or_default()
+    }
+
+    fn current_loss(&mut self, trial: usize) -> f64 {
+        match self.runs[trial].as_mut() {
+            None => f64::INFINITY,
+            Some(run) => {
+                // Evaluate on the held-out stream; eval loss is the score.
+                let id = self.session_ids[trial].clone();
+                let before = self.sessions.get(&id).map(|r| r.metrics.len());
+                // Trigger an eval via a zero-step finish-free path: call
+                // evaluate directly through the model.
+                let _ = before;
+                let gen = generator_for(&self.model, 9_999).unwrap();
+                let mut gen = gen;
+                let batch = gen.eval_batch(run.model().manifest().batch);
+                run.model().evaluate(&batch).map(|(loss, _)| loss as f64).unwrap_or(f64::INFINITY)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::automl::{GridSearch, SuccessiveHalving};
+    use crate::storage::ObjectStore;
+    use crate::util::clock::sim_clock;
+    use std::path::PathBuf;
+
+    fn runner(candidates: usize) -> Option<PlatformTrialRunner> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let engine = Rc::new(Engine::new(&dir).unwrap());
+        let (clock, _) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        Some(
+            PlatformTrialRunner::new(
+                engine,
+                "mnist",
+                "automl",
+                CheckpointStore::new(ObjectStore::memory()),
+                SessionStore::new(),
+                events,
+                clock,
+                candidates,
+                0,
+            )
+            .unwrap(),
+        )
+    }
+
+    #[test]
+    fn grid_search_over_real_sessions() {
+        let Some(mut r) = runner(3) else { return };
+        let out = GridSearch { lrs: vec![0.0001, 0.1, 5.0], steps_per_trial: 30 }.run(&mut r);
+        // lr=5.0 diverges or stalls, lr=0.0001 barely moves; 0.1 wins.
+        assert!((out.best_lr - 0.1).abs() < 1e-9, "best {}", out.best_lr);
+        assert_eq!(out.steps_spent, 90);
+        // Winner model is saveable.
+        let ck = r.save_best(out.best_trial).unwrap();
+        assert!(ck.step >= 30);
+    }
+
+    #[test]
+    fn successive_halving_spends_less() {
+        let Some(mut r) = runner(4) else { return };
+        let sh = SuccessiveHalving {
+            lrs: vec![0.0001, 0.01, 0.1, 5.0],
+            total_steps_per_trial: 40,
+            eta: 2,
+            rungs: 2,
+        }
+        .run(&mut r);
+        assert!(sh.steps_spent < 4 * 40, "spent {}", sh.steps_spent);
+        assert!(sh.best_lr == 0.1 || sh.best_lr == 0.01, "best {}", sh.best_lr);
+    }
+}

@@ -1,0 +1,146 @@
+//! Learning-curve model: fit `loss(t) = a * (t + 1)^(-b) + c` to observed
+//! (step, loss) points and extrapolate.
+//!
+//! Fitting: grid over the decay exponent `b`; for each `b` the model is
+//! linear in `(a, c)` and solved by least squares. This tiny model is
+//! remarkably effective at ranking runs early — which is all the AutoML
+//! early-stopper needs.
+
+/// A fitted power-law learning curve.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct CurveFit {
+    pub a: f64,
+    pub b: f64,
+    pub c: f64,
+    /// Mean squared residual of the fit.
+    pub mse: f64,
+}
+
+impl CurveFit {
+    /// Fit to (step, loss) points. Needs >= 3 points.
+    pub fn fit(points: &[(f64, f64)]) -> Option<CurveFit> {
+        if points.len() < 3 {
+            return None;
+        }
+        let mut best: Option<CurveFit> = None;
+        let consider = |b: f64, best: &mut Option<CurveFit>| {
+            if let Some((a, c, mse)) = Self::solve_linear(points, b) {
+                if best.map_or(true, |f| mse < f.mse) {
+                    *best = Some(CurveFit { a, b, c, mse });
+                }
+            }
+        };
+        // Coarse pass over decay exponents, then a fine pass around the
+        // best coarse value.
+        for i in 0..=40 {
+            consider(0.05 + i as f64 * 0.1, &mut best);
+        }
+        if let Some(coarse) = best {
+            for i in 0..=40 {
+                let b = (coarse.b - 0.1 + i as f64 * 0.005).max(0.01);
+                consider(b, &mut best);
+            }
+        }
+        best
+    }
+
+    /// Least squares for a, c given fixed b: loss ~ a*phi(t) + c.
+    fn solve_linear(points: &[(f64, f64)], b: f64) -> Option<(f64, f64, f64)> {
+        let n = points.len() as f64;
+        let mut s_p = 0.0;
+        let mut s_y = 0.0;
+        let mut s_pp = 0.0;
+        let mut s_py = 0.0;
+        for &(t, y) in points {
+            let p = (t + 1.0).powf(-b);
+            s_p += p;
+            s_y += y;
+            s_pp += p * p;
+            s_py += p * y;
+        }
+        let det = n * s_pp - s_p * s_p;
+        if det.abs() < 1e-12 {
+            return None;
+        }
+        let a = (n * s_py - s_p * s_y) / det;
+        let c = (s_y - a * s_p) / n;
+        let mut mse = 0.0;
+        for &(t, y) in points {
+            let pred = a * (t + 1.0).powf(-b) + c;
+            mse += (y - pred) * (y - pred);
+        }
+        Some((a, c, mse / n))
+    }
+
+    /// Predicted loss at a step.
+    pub fn predict(&self, step: f64) -> f64 {
+        self.a * (step + 1.0).powf(-self.b) + self.c
+    }
+
+    /// Predicted asymptotic loss.
+    pub fn asymptote(&self) -> f64 {
+        self.c
+    }
+}
+
+/// Convenience: predict a run's final loss from its partial curve.
+/// Returns `None` when fewer than 3 points are available.
+pub fn predict_final(points: &[(f64, f64)], final_step: f64) -> Option<f64> {
+    CurveFit::fit(points).map(|f| f.predict(final_step))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn synth_curve(a: f64, b: f64, c: f64, n: usize, noise: f64, seed: u64) -> Vec<(f64, f64)> {
+        let mut rng = Rng::new(seed);
+        (0..n)
+            .map(|i| {
+                let t = (i * 10) as f64;
+                (t, a * (t + 1.0).powf(-b) + c + rng.gauss(0.0, noise))
+            })
+            .collect()
+    }
+
+    #[test]
+    fn recovers_clean_power_law() {
+        let pts = synth_curve(2.0, 0.5, 0.3, 20, 0.0, 1);
+        let fit = CurveFit::fit(&pts).unwrap();
+        assert!((fit.c - 0.3).abs() < 0.05, "{:?}", fit);
+        assert!((fit.predict(1000.0) - (2.0 * 1001.0f64.powf(-0.5) + 0.3)).abs() < 0.05);
+        assert!(fit.mse < 1e-4);
+    }
+
+    #[test]
+    fn extrapolates_under_noise() {
+        let pts = synth_curve(3.0, 0.7, 0.5, 15, 0.02, 2);
+        let pred = predict_final(&pts, 2000.0).unwrap();
+        assert!((pred - 0.5).abs() < 0.15, "pred {}", pred);
+    }
+
+    #[test]
+    fn ranks_two_runs_early() {
+        // Run A converges to 0.2, run B to 0.8; at 1/10 of the budget the
+        // fits must already order them correctly.
+        let a = synth_curve(2.0, 0.6, 0.2, 10, 0.01, 3);
+        let b = synth_curve(2.0, 0.6, 0.8, 10, 0.01, 4);
+        let pa = predict_final(&a, 1000.0).unwrap();
+        let pb = predict_final(&b, 1000.0).unwrap();
+        assert!(pa < pb, "{} vs {}", pa, pb);
+    }
+
+    #[test]
+    fn too_few_points_is_none() {
+        assert!(CurveFit::fit(&[(0.0, 1.0), (1.0, 0.9)]).is_none());
+        assert!(predict_final(&[], 100.0).is_none());
+    }
+
+    #[test]
+    fn flat_curve_predicts_flat() {
+        let pts: Vec<(f64, f64)> = (0..10).map(|i| (i as f64, 1.0)).collect();
+        let fit = CurveFit::fit(&pts).unwrap();
+        assert!((fit.predict(1e6) - 1.0).abs() < 0.05);
+    }
+}

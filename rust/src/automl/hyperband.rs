@@ -1,0 +1,137 @@
+//! Hyperband (the "More AutoML features will be added in future" line in
+//! §5, implemented): multiple successive-halving brackets trading off
+//! "many configs, short budgets" vs "few configs, long budgets", so no
+//! single aggressiveness setting has to be guessed.
+
+use super::search::{SearchOutcome, SuccessiveHalving, TrialRunner};
+use crate::util::rng::Rng;
+
+/// Hyperband over a log-uniform lr range.
+pub struct Hyperband {
+    pub lr_log10_range: (f64, f64),
+    /// Maximum budget (steps) any single trial may receive.
+    pub max_steps_per_trial: u64,
+    pub eta: usize,
+    pub seed: u64,
+}
+
+/// A bracket's shape: how many configs enter, with how many rungs.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Bracket {
+    pub configs: usize,
+    pub rungs: usize,
+}
+
+impl Hyperband {
+    /// The bracket schedule: s_max+1 brackets, from aggressive (many
+    /// configs, heavy early stopping) to conservative (few configs, full
+    /// budget each).
+    pub fn brackets(&self) -> Vec<Bracket> {
+        let eta = self.eta as f64;
+        // s_max = floor(log_eta(max_budget)) capped so configs stay sane.
+        let s_max = ((self.max_steps_per_trial as f64).log(eta).floor() as usize).min(3);
+        (0..=s_max)
+            .rev()
+            .map(|s| Bracket { configs: (self.eta.pow(s as u32)).max(1), rungs: s + 1 })
+            .collect()
+    }
+
+    /// Run all brackets against runner-building closure `make_runner`
+    /// (each bracket gets a fresh set of trials). Returns the best
+    /// outcome across brackets plus the per-bracket results.
+    pub fn run<F>(&self, mut make_runner: F) -> (SearchOutcome, Vec<SearchOutcome>)
+    where
+        F: FnMut(usize) -> Box<dyn TrialRunner>,
+    {
+        let mut rng = Rng::new(self.seed);
+        let mut outcomes = Vec::new();
+        for bracket in self.brackets() {
+            let lrs: Vec<f64> = (0..bracket.configs)
+                .map(|_| 10f64.powf(rng.uniform(self.lr_log10_range.0, self.lr_log10_range.1)))
+                .collect();
+            let mut runner = make_runner(bracket.configs);
+            let outcome = SuccessiveHalving {
+                lrs,
+                total_steps_per_trial: self.max_steps_per_trial,
+                eta: self.eta,
+                rungs: bracket.rungs,
+            }
+            .run(runner.as_mut());
+            outcomes.push(outcome);
+        }
+        let best = outcomes
+            .iter()
+            .min_by(|a, b| a.best_loss.partial_cmp(&b.best_loss).unwrap())
+            .expect("at least one bracket")
+            .clone();
+        (best, outcomes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Same synthetic landscape as search.rs: optimum at lr = 0.1.
+    struct SynthRunner {
+        steps: Vec<u64>,
+        lrs: Vec<f64>,
+    }
+
+    impl SynthRunner {
+        fn new(n: usize) -> SynthRunner {
+            SynthRunner { steps: vec![0; n], lrs: vec![f64::NAN; n] }
+        }
+
+        fn loss_at(lr: f64, t: f64) -> f64 {
+            let opt = (lr.log10() + 1.0).abs();
+            0.2 + opt * opt + 2.0 * (t + 1.0).powf(-0.6)
+        }
+    }
+
+    impl TrialRunner for SynthRunner {
+        fn extend(&mut self, trial: usize, lr: f64, steps: u64) -> Vec<(f64, f64)> {
+            self.lrs[trial] = lr;
+            self.steps[trial] += steps;
+            (1..=self.steps[trial]).map(|t| (t as f64, Self::loss_at(lr, t as f64))).collect()
+        }
+
+        fn current_loss(&mut self, trial: usize) -> f64 {
+            if self.steps[trial] == 0 {
+                f64::INFINITY
+            } else {
+                Self::loss_at(self.lrs[trial], self.steps[trial] as f64)
+            }
+        }
+    }
+
+    #[test]
+    fn bracket_schedule_shape() {
+        let hb = Hyperband { lr_log10_range: (-4.0, 1.0), max_steps_per_trial: 81, eta: 3, seed: 1 };
+        let brackets = hb.brackets();
+        assert!(!brackets.is_empty());
+        // First bracket is the most aggressive (most configs, most rungs).
+        assert!(brackets[0].configs >= brackets.last().unwrap().configs);
+        assert!(brackets[0].rungs >= brackets.last().unwrap().rungs);
+        // Conservative bracket: single rung, one config.
+        assert_eq!(brackets.last().unwrap().configs, 1);
+    }
+
+    #[test]
+    fn finds_good_region_on_synthetic_landscape() {
+        let hb = Hyperband { lr_log10_range: (-4.0, 1.0), max_steps_per_trial: 60, eta: 3, seed: 3 };
+        let (best, per_bracket) = hb.run(|n| Box::new(SynthRunner::new(n)));
+        assert!(!per_bracket.is_empty());
+        // Within one decade of the optimum lr=0.1.
+        assert!((best.best_lr.log10() + 1.0).abs() < 1.0, "best {}", best.best_lr);
+        assert!(best.best_loss.is_finite());
+    }
+
+    #[test]
+    fn deterministic_per_seed() {
+        let hb = Hyperband { lr_log10_range: (-3.0, 0.0), max_steps_per_trial: 27, eta: 3, seed: 9 };
+        let (a, _) = hb.run(|n| Box::new(SynthRunner::new(n)));
+        let (b, _) = hb.run(|n| Box::new(SynthRunner::new(n)));
+        assert_eq!(a.best_lr, b.best_lr);
+    }
+}

@@ -1,0 +1,18 @@
+//! AutoML (§3.1): "predict the performance of experiments based on
+//! previously run experiments … automatically optimize the hyperparameters
+//! based on the performance predictions … save the model of best score."
+//!
+//! * [`curve`] — learning-curve extrapolation: fit a shifted power law to
+//!   a partial loss curve and predict its final value (the "performance
+//!   prediction" primitive).
+//! * [`search`] — hyperparameter optimization strategies over a
+//!   [`TrialRunner`]: grid, random, and successive halving (ASHA-style),
+//!   plus prediction-based early termination.
+
+pub mod curve;
+pub mod hyperband;
+pub mod search;
+
+pub use curve::CurveFit;
+pub use hyperband::Hyperband;
+pub use search::{GridSearch, RandomSearch, SearchOutcome, SuccessiveHalving, TrialRunner};

@@ -1,0 +1,279 @@
+//! Hyperparameter search strategies over an abstract trial runner.
+//!
+//! The platform implements [`TrialRunner`] with real sessions (each trial
+//! is an `nsml run` with a different lr); the unit tests use a synthetic
+//! loss landscape so strategy behaviour is verified exactly.
+
+use super::curve::predict_final;
+use crate::util::rng::Rng;
+
+/// Runs trials for the searcher. A trial is identified by its index into
+/// the searcher's candidate list and can be trained incrementally
+/// (supports successive halving's rung promotion).
+pub trait TrialRunner {
+    /// Train trial `trial` (with hyperparameter `lr`) for `steps` more
+    /// steps; returns the observed loss curve points (step, loss) for the
+    /// *whole* trial so far.
+    fn extend(&mut self, trial: usize, lr: f64, steps: u64) -> Vec<(f64, f64)>;
+    /// Final evaluation metric of the trial at its current state (loss;
+    /// lower is better).
+    fn current_loss(&mut self, trial: usize) -> f64;
+}
+
+/// Result of a search.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SearchOutcome {
+    pub best_lr: f64,
+    pub best_loss: f64,
+    pub best_trial: usize,
+    /// Total training steps spent across all trials (the budget actually
+    /// consumed — the efficiency number the benches compare).
+    pub steps_spent: u64,
+    /// (lr, final loss or predicted loss, steps given) per candidate.
+    pub trials: Vec<(f64, f64, u64)>,
+}
+
+/// Exhaustive grid: every candidate gets the full budget. The baseline.
+pub struct GridSearch {
+    pub lrs: Vec<f64>,
+    pub steps_per_trial: u64,
+}
+
+impl GridSearch {
+    pub fn run(&self, runner: &mut dyn TrialRunner) -> SearchOutcome {
+        let mut trials = Vec::new();
+        let mut spent = 0;
+        for (i, &lr) in self.lrs.iter().enumerate() {
+            runner.extend(i, lr, self.steps_per_trial);
+            spent += self.steps_per_trial;
+            trials.push((lr, runner.current_loss(i), self.steps_per_trial));
+        }
+        finish(trials, spent)
+    }
+}
+
+/// Random search with prediction-based early stopping: each candidate
+/// trains a probe fraction; its final loss is *predicted* from the curve
+/// (§3.1 "predict the performance of experiments"), and only promising
+/// ones get the full budget.
+pub struct RandomSearch {
+    pub candidates: usize,
+    pub lr_log10_range: (f64, f64),
+    pub steps_per_trial: u64,
+    /// Fraction of the budget used for the probe run.
+    pub probe_frac: f64,
+    pub seed: u64,
+}
+
+impl RandomSearch {
+    pub fn sample_lrs(&self) -> Vec<f64> {
+        let mut rng = Rng::new(self.seed);
+        (0..self.candidates)
+            .map(|_| 10f64.powf(rng.uniform(self.lr_log10_range.0, self.lr_log10_range.1)))
+            .collect()
+    }
+
+    pub fn run(&self, runner: &mut dyn TrialRunner) -> SearchOutcome {
+        let lrs = self.sample_lrs();
+        let probe = ((self.steps_per_trial as f64 * self.probe_frac) as u64).max(3);
+        let mut spent = 0;
+        // Probe phase: short runs + curve prediction.
+        let mut predicted: Vec<(usize, f64)> = Vec::new();
+        for (i, &lr) in lrs.iter().enumerate() {
+            let curve = runner.extend(i, lr, probe);
+            spent += probe;
+            let pred = predict_final(&curve, self.steps_per_trial as f64)
+                .unwrap_or_else(|| runner.current_loss(i));
+            predicted.push((i, pred));
+        }
+        predicted.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+        // Promote the top third (at least one) to the full budget.
+        let promote = (predicted.len() / 3).max(1);
+        let mut trials: Vec<(f64, f64, u64)> = lrs.iter().map(|&lr| (lr, f64::NAN, probe)).collect();
+        for &(i, pred) in predicted.iter() {
+            trials[i].1 = pred;
+        }
+        for &(i, _) in predicted.iter().take(promote) {
+            let remaining = self.steps_per_trial - probe;
+            runner.extend(i, lrs[i], remaining);
+            spent += remaining;
+            trials[i] = (lrs[i], runner.current_loss(i), self.steps_per_trial);
+        }
+        finish(trials, spent)
+    }
+}
+
+/// Successive halving (ASHA-style): rungs of increasing budget, keeping
+/// the best `1/eta` fraction at each rung.
+pub struct SuccessiveHalving {
+    pub lrs: Vec<f64>,
+    pub total_steps_per_trial: u64,
+    pub eta: usize,
+    pub rungs: usize,
+}
+
+impl SuccessiveHalving {
+    pub fn run(&self, runner: &mut dyn TrialRunner) -> SearchOutcome {
+        assert!(self.eta >= 2 && self.rungs >= 1);
+        // Budget per rung grows geometrically to sum to the full budget.
+        let denom: f64 = (0..self.rungs).map(|r| (self.eta as f64).powi(r as i32)).sum();
+        let base = (self.total_steps_per_trial as f64 / denom).max(1.0);
+        let mut alive: Vec<usize> = (0..self.lrs.len()).collect();
+        let mut given = vec![0u64; self.lrs.len()];
+        let mut spent = 0;
+        for rung in 0..self.rungs {
+            let steps = (base * (self.eta as f64).powi(rung as i32)).round() as u64;
+            let mut scored: Vec<(usize, f64)> = Vec::new();
+            for &i in &alive {
+                runner.extend(i, self.lrs[i], steps);
+                given[i] += steps;
+                spent += steps;
+                scored.push((i, runner.current_loss(i)));
+            }
+            scored.sort_by(|a, b| a.1.partial_cmp(&b.1).unwrap());
+            let keep = (scored.len() / self.eta).max(1);
+            alive = scored.iter().take(keep).map(|&(i, _)| i).collect();
+            if alive.len() == 1 && rung + 1 < self.rungs {
+                // Sole survivor gets the remaining rung budgets at once.
+                let remaining: u64 = (rung + 1..self.rungs)
+                    .map(|r| (base * (self.eta as f64).powi(r as i32)).round() as u64)
+                    .sum();
+                if remaining > 0 {
+                    let i = alive[0];
+                    runner.extend(i, self.lrs[i], remaining);
+                    given[i] += remaining;
+                    spent += remaining;
+                }
+                break;
+            }
+        }
+        let trials: Vec<(f64, f64, u64)> = self
+            .lrs
+            .iter()
+            .enumerate()
+            .map(|(i, &lr)| (lr, runner.current_loss(i), given[i]))
+            .collect();
+        finish(trials, spent)
+    }
+}
+
+fn finish(trials: Vec<(f64, f64, u64)>, steps_spent: u64) -> SearchOutcome {
+    let (best_trial, &(best_lr, best_loss, _)) = trials
+        .iter()
+        .enumerate()
+        .filter(|(_, t)| t.1.is_finite())
+        .min_by(|a, b| a.1 .1.partial_cmp(&b.1 .1).unwrap())
+        .expect("at least one finished trial");
+    SearchOutcome { best_lr, best_loss, best_trial, steps_spent, trials }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Synthetic landscape: loss(lr, t) follows a power law whose
+    /// asymptote is quadratic in log10(lr) with optimum at lr = 0.1.
+    struct SynthRunner {
+        curves: Vec<Vec<(f64, f64)>>,
+        steps: Vec<u64>,
+        lrs: Vec<f64>,
+    }
+
+    impl SynthRunner {
+        fn new(n: usize) -> SynthRunner {
+            SynthRunner { curves: vec![Vec::new(); n], steps: vec![0; n], lrs: vec![f64::NAN; n] }
+        }
+
+        fn loss_at(lr: f64, t: f64) -> f64 {
+            let opt = (lr.log10() + 1.0).abs(); // optimum at 0.1
+            let asymptote = 0.2 + opt * opt;
+            asymptote + 2.0 * (t + 1.0).powf(-0.6)
+        }
+    }
+
+    impl TrialRunner for SynthRunner {
+        fn extend(&mut self, trial: usize, lr: f64, steps: u64) -> Vec<(f64, f64)> {
+            self.lrs[trial] = lr;
+            for _ in 0..steps {
+                self.steps[trial] += 1;
+                let t = self.steps[trial] as f64;
+                self.curves[trial].push((t, Self::loss_at(lr, t)));
+            }
+            self.curves[trial].clone()
+        }
+
+        fn current_loss(&mut self, trial: usize) -> f64 {
+            if self.steps[trial] == 0 {
+                return f64::INFINITY;
+            }
+            Self::loss_at(self.lrs[trial], self.steps[trial] as f64)
+        }
+    }
+
+    const GRID: [f64; 6] = [0.0003, 0.003, 0.03, 0.1, 0.3, 3.0];
+
+    #[test]
+    fn grid_finds_optimum_with_full_budget() {
+        let mut runner = SynthRunner::new(GRID.len());
+        let out = GridSearch { lrs: GRID.to_vec(), steps_per_trial: 100 }.run(&mut runner);
+        assert!((out.best_lr - 0.1).abs() < 1e-9);
+        assert_eq!(out.steps_spent, 600);
+        assert_eq!(out.trials.len(), 6);
+    }
+
+    #[test]
+    fn successive_halving_finds_optimum_cheaper() {
+        let mut grid_runner = SynthRunner::new(GRID.len());
+        let grid = GridSearch { lrs: GRID.to_vec(), steps_per_trial: 100 }.run(&mut grid_runner);
+
+        let mut sh_runner = SynthRunner::new(GRID.len());
+        let sh = SuccessiveHalving { lrs: GRID.to_vec(), total_steps_per_trial: 100, eta: 2, rungs: 3 }
+            .run(&mut sh_runner);
+        assert!((sh.best_lr - 0.1).abs() < 1e-9, "best {}", sh.best_lr);
+        assert!(sh.steps_spent < grid.steps_spent / 2, "{} vs {}", sh.steps_spent, grid.steps_spent);
+    }
+
+    #[test]
+    fn random_search_probe_promotes_good_region() {
+        let rs = RandomSearch {
+            candidates: 12,
+            lr_log10_range: (-4.0, 1.0),
+            steps_per_trial: 90,
+            probe_frac: 0.1,
+            seed: 5,
+        };
+        let mut runner = SynthRunner::new(rs.candidates);
+        let out = rs.run(&mut runner);
+        // Best found lr is within an order of magnitude of the optimum.
+        assert!((out.best_lr.log10() + 1.0).abs() < 1.0, "best {}", out.best_lr);
+        // Early stopping really saves budget vs full-budget-on-everything.
+        assert!(out.steps_spent < 12 * 90, "spent {}", out.steps_spent);
+        // Full budget went to at least one candidate.
+        assert!(out.trials.iter().any(|t| t.2 == 90));
+    }
+
+    #[test]
+    fn sample_lrs_deterministic() {
+        let rs = RandomSearch {
+            candidates: 5,
+            lr_log10_range: (-3.0, 0.0),
+            steps_per_trial: 10,
+            probe_frac: 0.3,
+            seed: 7,
+        };
+        assert_eq!(rs.sample_lrs(), rs.sample_lrs());
+        assert!(rs.sample_lrs().iter().all(|&lr| (1e-3..=1.0).contains(&lr)));
+    }
+
+    #[test]
+    fn sole_survivor_gets_remaining_budget() {
+        let lrs = vec![0.1, 3.0];
+        let mut runner = SynthRunner::new(2);
+        let out = SuccessiveHalving { lrs, total_steps_per_trial: 70, eta: 2, rungs: 3 }.run(&mut runner);
+        assert_eq!(out.best_trial, 0);
+        // Winner consumed (close to) its full per-trial budget.
+        assert!(out.trials[0].2 >= 60, "{:?}", out.trials);
+        // Loser stopped at the first rung.
+        assert!(out.trials[1].2 <= 15, "{:?}", out.trials);
+    }
+}

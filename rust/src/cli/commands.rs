@@ -1,0 +1,452 @@
+//! Implementations of the `nsml` subcommands over the platform facade.
+
+use super::with_globals;
+use crate::api::{NsmlPlatform, PlatformConfig, PlatformTrialRunner, RunOpts};
+use crate::automl::{GridSearch, RandomSearch, SuccessiveHalving};
+use crate::data::digits::{ascii_digit, draw_digit, DIM};
+use crate::runtime::TensorData;
+use crate::scheduler::Priority;
+use crate::storage::codepack;
+use crate::util::argparse::{ArgSpec, Parsed};
+use crate::util::plot::ascii_chart;
+use crate::util::table::{fms, fnum, Table};
+use std::path::PathBuf;
+
+type CmdResult = Result<(), String>;
+
+fn platform_from(parsed: &Parsed) -> Result<NsmlPlatform, String> {
+    let mut cfg = PlatformConfig::default();
+    cfg.artifacts_dir = PathBuf::from(parsed.get("artifacts").unwrap_or("artifacts"));
+    cfg.state_dir = Some(PathBuf::from(parsed.get("state").unwrap_or(".nsml")));
+    // CLI runs use the fast latency model so virtual costs are visible in
+    // the logs without 45-s real stalls.
+    cfg.latency = crate::container::LatencyModel::fast();
+    NsmlPlatform::new(cfg).map_err(|e| format!("platform init: {:#}", e))
+}
+
+// ---------------------------------------------------------------------
+// nsml run
+// ---------------------------------------------------------------------
+
+pub fn cmd_run(args: &[String]) -> CmdResult {
+    let spec = with_globals(
+        ArgSpec::new("nsml run", "pack code, submit a session, train, report")
+            .pos("entry", "entry file (packed with the code dir)", false)
+            .opt("dataset", Some('d'), "dataset to mount", None)
+            .opt("gpus", Some('g'), "GPUs to request", Some("1"))
+            .opt("steps", None, "total training steps", Some("200"))
+            .opt("lr", None, "learning rate (default: model's)", None)
+            .opt("seed", None, "init seed", Some("0"))
+            .opt("user", Some('u'), "submitting user", Some("researcher"))
+            .opt("priority", None, "low|normal|high", Some("normal"))
+            .flag("scan", None, "use the scan-fused train path")
+            .flag("quiet", Some('q'), "suppress the curve printout"),
+    );
+    let p = spec.parse(args)?;
+    let dataset = p.get("dataset").ok_or("missing --dataset (-d)")?.to_string();
+    let platform = platform_from(&p)?;
+
+    // Pack the "user code" exactly like NSML-CLI does before submitting.
+    let entry = p.pos(0).unwrap_or("main.py");
+    let code: Vec<(&str, &[u8])> = vec![(entry, b"# packed by nsml-cli (reproduction)\n".as_slice())];
+    let code_id = codepack::store_codepack(&platform.objects, &code).map_err(|e| e.to_string())?;
+
+    let opts = RunOpts {
+        gpus: p.get_usize("gpus")?,
+        total_steps: p.get_usize("steps")? as u64,
+        lr: p.get("lr").map(|s| s.parse().map_err(|e| format!("--lr: {}", e))).transpose()?,
+        seed: p.get_usize("seed")? as u64,
+        use_scan: p.flag("scan"),
+        priority: Priority::from_str(p.get("priority").unwrap_or("normal")),
+        checkpoint_every: (p.get_usize("steps")? as u64 / 4).max(1),
+        eval_every: (p.get_usize("steps")? as u64 / 8).max(1),
+    };
+    let user = p.get("user").unwrap().to_string();
+    let id = platform.run(&user, &dataset, opts).map_err(|e| format!("{:#}", e))?;
+    println!("session: {}  (code {})", id, code_id);
+    platform.run_to_completion(25, 100_000).map_err(|e| format!("{:#}", e))?;
+    platform.save_state().map_err(|e| format!("{:#}", e))?;
+
+    let rec = platform.sessions.get(&id).unwrap();
+    println!(
+        "state: {}  steps: {}  best {}: {}",
+        rec.state.as_str(),
+        rec.steps_done,
+        platform.engine().manifest().model(&rec.spec.model).map(|m| m.metric_name.clone()).unwrap_or_default(),
+        rec.best_metric.map(fnum).unwrap_or_else(|| "-".into()),
+    );
+    if !p.flag("quiet") {
+        let series = rec.metrics.plot_series("train_loss");
+        println!("{}", ascii_chart(&format!("{} train_loss", id), &[series], 64, 14));
+    }
+    println!("{}", platform.leaderboard.render(&dataset));
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// nsml dataset
+// ---------------------------------------------------------------------
+
+pub fn cmd_dataset(args: &[String]) -> CmdResult {
+    let (sub, rest) = crate::util::argparse::split_subcommand(args);
+    match sub.as_str() {
+        "ls" | "" => {
+            let p = with_globals(ArgSpec::new("nsml dataset ls", "list datasets")).parse(&rest)?;
+            let platform = platform_from(&p)?;
+            let mut t = Table::new(&["NAME", "OWNER", "VERSION", "SIZE(GB)", "DESCRIPTION"]).right(&[2, 3]);
+            for d in platform.datasets.list("anyone") {
+                t.row(&[
+                    d.name.clone(),
+                    d.owner.clone(),
+                    format!("v{}", d.version),
+                    format!("{:.1}", d.nominal_size_gb),
+                    d.description.clone(),
+                ]);
+            }
+            println!("{}", t.render());
+            Ok(())
+        }
+        "board" => {
+            let p = with_globals(
+                ArgSpec::new("nsml dataset board", "show a dataset leaderboard")
+                    .pos("dataset", "dataset name", true),
+            )
+            .parse(&rest)?;
+            let platform = platform_from(&p)?;
+            println!("{}", platform.leaderboard.render(p.pos(0).unwrap()));
+            Ok(())
+        }
+        other => Err(format!("unknown dataset subcommand '{}' (ls | board)", other)),
+    }
+}
+
+// ---------------------------------------------------------------------
+// nsml ps / logs / plot
+// ---------------------------------------------------------------------
+
+pub fn cmd_ps(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new("nsml ps", "list sessions")).parse(args)?;
+    let platform = platform_from(&p)?;
+    let mut t = Table::new(&["SESSION", "MODEL", "STATE", "STEPS", "BEST", "RECOVERIES"]).right(&[3, 4, 5]);
+    for r in platform.sessions.list() {
+        t.row(&[
+            r.spec.id.clone(),
+            r.spec.model.clone(),
+            r.state.as_str().to_string(),
+            format!("{}/{}", r.steps_done, r.spec.total_steps),
+            r.best_metric.map(fnum).unwrap_or_else(|| "-".into()),
+            format!("{}", r.recoveries),
+        ]);
+    }
+    if t.is_empty() {
+        println!("no sessions (run `nsml run -d mnist` first)");
+    } else {
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+pub fn cmd_logs(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new("nsml logs", "show session events").pos("session", "session id", true))
+        .parse(args)?;
+    let platform = platform_from(&p)?;
+    let id = p.pos(0).unwrap();
+    let rec = platform.sessions.get(id).ok_or_else(|| format!("no session '{}'", id))?;
+    println!("session {} — state {}", id, rec.state.as_str());
+    for e in platform.events.for_subject(id) {
+        println!("{}", e.render());
+    }
+    for pt in rec.metrics.points().iter().rev().take(10).rev() {
+        println!("  step {:>6}  {:<12} {}", pt.step, pt.name, fnum(pt.value));
+    }
+    Ok(())
+}
+
+pub fn cmd_plot(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml plot", "ASCII learning curves")
+            .pos("session", "session id", true)
+            .opt("metric", Some('m'), "metric name (default: all)", None),
+    )
+    .parse(args)?;
+    let platform = platform_from(&p)?;
+    let id = p.pos(0).unwrap();
+    let rec = platform.sessions.get(id).ok_or_else(|| format!("no session '{}'", id))?;
+    let names = match p.get("metric") {
+        Some(m) => vec![m.to_string()],
+        None => rec.metrics.names(),
+    };
+    for name in names {
+        let series = rec.metrics.plot_series(&name);
+        if series.points.is_empty() {
+            println!("(no points for metric '{}')", name);
+            continue;
+        }
+        println!("{}", ascii_chart(&format!("{} {}", id, name), &[series], 64, 12));
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// nsml infer — the Fig. 4 interactive demo
+// ---------------------------------------------------------------------
+
+pub fn cmd_infer(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml infer", "classify a drawn digit with a trained session")
+            .pos("session", "session id (an mnist session)", true)
+            .opt("digit", None, "digit to draw", Some("1"))
+            .flag("add-lines", None, "then add the 2's extra strokes (Fig. 4)"),
+    )
+    .parse(args)?;
+    let platform = platform_from(&p)?;
+    let id = p.pos(0).unwrap();
+    let digit = p.get_usize("digit")?.min(9);
+
+    let mut img = vec![0.0f32; DIM];
+    draw_digit(digit, 0, 0, 1.0, &mut img);
+    println!("input:\n{}", ascii_digit(&img));
+    let probs = classify(&platform, id, &img)?;
+    print_probs(&probs);
+
+    if p.flag("add-lines") {
+        // Overlay the segments of '2' that the current digit lacks.
+        let mut two = vec![0.0f32; DIM];
+        draw_digit(2, 0, 0, 1.0, &mut two);
+        for (a, b) in img.iter_mut().zip(&two) {
+            *a = a.max(*b);
+        }
+        println!("after adding lines:\n{}", ascii_digit(&img));
+        let probs = classify(&platform, id, &img)?;
+        print_probs(&probs);
+    }
+    Ok(())
+}
+
+fn classify(platform: &NsmlPlatform, session: &str, img: &[f32]) -> Result<Vec<f32>, String> {
+    let batch = img.repeat(64); // model batch is fixed at 64
+    let x = TensorData::f32(batch, &[64, DIM as i64]);
+    let probs = platform.infer(session, &x).map_err(|e| format!("{:#}", e))?;
+    Ok(probs[..10].to_vec())
+}
+
+fn print_probs(probs: &[f32]) {
+    let argmax = probs.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+    for (i, p) in probs.iter().enumerate() {
+        let bar = "█".repeat((p * 40.0) as usize);
+        println!("  {} {:>6.3} {}{}", i, p, bar, if i == argmax { "  <-- prediction" } else { "" });
+    }
+    println!();
+}
+
+// ---------------------------------------------------------------------
+// nsml automl
+// ---------------------------------------------------------------------
+
+pub fn cmd_automl(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml automl", "hyperparameter search over real sessions")
+            .opt("dataset", Some('d'), "dataset", Some("mnist"))
+            .opt("strategy", Some('s'), "grid|random|asha", Some("asha"))
+            .opt("candidates", Some('c'), "number of candidates", Some("6"))
+            .opt("steps", None, "full budget per trial", Some("60"))
+            .opt("seed", None, "search seed", Some("0"))
+            .opt("user", Some('u'), "user", Some("automl")),
+    )
+    .parse(args)?;
+    let platform = platform_from(&p)?;
+    let dataset = p.get("dataset").unwrap().to_string();
+    let candidates = p.get_usize("candidates")?;
+    let steps = p.get_usize("steps")? as u64;
+    let seed = p.get_usize("seed")? as u64;
+
+    let mut runner = PlatformTrialRunner::new(
+        platform.engine().clone(),
+        &dataset,
+        p.get("user").unwrap(),
+        platform.checkpoints.clone(),
+        platform.sessions.clone(),
+        platform.events.clone(),
+        platform.clock.clone(),
+        candidates,
+        seed,
+    )
+    .map_err(|e| format!("{:#}", e))?;
+
+    let lrs: Vec<f64> = (0..candidates)
+        .map(|i| 10f64.powf(-3.5 + 4.0 * i as f64 / (candidates.max(2) - 1) as f64))
+        .collect();
+    let strategy = p.get("strategy").unwrap().to_string();
+    let out = match strategy.as_str() {
+        "grid" => GridSearch { lrs, steps_per_trial: steps }.run(&mut runner),
+        "random" => RandomSearch {
+            candidates,
+            lr_log10_range: (-3.5, 0.5),
+            steps_per_trial: steps,
+            probe_frac: 0.2,
+            seed,
+        }
+        .run(&mut runner),
+        _ => SuccessiveHalving { lrs, total_steps_per_trial: steps, eta: 2, rungs: 3 }.run(&mut runner),
+    };
+
+    let mut t = Table::new(&["TRIAL", "LR", "LOSS", "STEPS GIVEN"]).right(&[1, 2, 3]);
+    for (i, (lr, loss, given)) in out.trials.iter().enumerate() {
+        let mark = if i == out.best_trial { " *" } else { "" };
+        t.row(&[format!("{}{}", i, mark), fnum(*lr), fnum(*loss), format!("{}", given)]);
+    }
+    println!("strategy: {}   budget spent: {} steps (vs {} exhaustive)", strategy, out.steps_spent, candidates as u64 * steps);
+    println!("{}", t.render());
+    let ck = runner.save_best(out.best_trial).map_err(|e| format!("{:#}", e))?;
+    println!("best model saved: trial {} lr={} -> checkpoint step {} ({})", out.best_trial, fnum(out.best_lr), ck.step, ck.params);
+    platform.save_state().map_err(|e| format!("{:#}", e))?;
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// nsml cluster / models / web
+// ---------------------------------------------------------------------
+
+pub fn cmd_cluster(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new("nsml cluster", "cluster & scheduler status")).parse(args)?;
+    let platform = platform_from(&p)?;
+    let (total, free) = platform.cluster.gpu_totals();
+    println!(
+        "cluster: {} nodes, {} GPUs ({} free) | scheduler: {} (fast_path={}) | leader: {:?} epoch {}",
+        platform.cluster.node_count(),
+        total,
+        free,
+        platform.master.policy_name(),
+        platform.master.fast_path,
+        platform.election.leader().map(|(l, _)| l.to_string()),
+        platform.election.epoch(),
+    );
+    let mut t = Table::new(&["NODE", "ALIVE", "GPUS FREE", "JOBS"]).right(&[2]);
+    for n in platform.cluster.snapshot() {
+        t.row(&[
+            n.hostname.clone(),
+            format!("{}", n.alive),
+            format!("{}/{}", n.free_gpus, n.total_gpus),
+            n.jobs.join(","),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn cmd_models(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new("nsml models", "list AOT-compiled models")).parse(args)?;
+    let platform = platform_from(&p)?;
+    let mut t = Table::new(&["MODEL", "DATASET", "PARAMS", "BATCH", "METRIC", "DESCRIPTION"]).right(&[2, 3]);
+    for name in platform.engine().manifest().model_names() {
+        let m = platform.engine().manifest().model(&name).unwrap();
+        t.row(&[
+            name.clone(),
+            crate::data::dataset_for(&name).to_string(),
+            format!("{}", m.param_count),
+            format!("{}", m.batch),
+            format!("{}{}", m.metric_name, if m.lower_is_better { " ↓" } else { " ↑" }),
+            m.description.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn cmd_web(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml web", "serve the web UI over the state directory")
+            .opt("port", Some('p'), "port (0 = ephemeral)", Some("8080"))
+            .flag("once", None, "bind, print the URL, and exit (for tests)"),
+    )
+    .parse(args)?;
+    let platform = platform_from(&p)?;
+    let state = crate::web::WebState {
+        sessions: platform.sessions.clone(),
+        leaderboard: platform.leaderboard.clone(),
+        cluster: Some(platform.cluster.clone()),
+        events: platform.events.clone(),
+    };
+    let port: u16 = p.get_usize("port")? as u16;
+    let (bound, handle) = crate::web::serve(state, port).map_err(|e| e.to_string())?;
+    println!("nsml web ui: http://127.0.0.1:{}/", bound);
+    if !p.flag("once") {
+        let _ = handle.join();
+    }
+    Ok(())
+}
+
+/// Bench/report helper: how long operations took, from the virtual clock.
+#[allow(dead_code)]
+pub fn fmt_virtual(ms: u64) -> String {
+    fms(ms as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn s(args: &[&str]) -> Vec<String> {
+        args.iter().map(|a| a.to_string()).collect()
+    }
+
+    fn artifacts_ok() -> bool {
+        PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts/manifest.json").exists()
+    }
+
+    fn tmp_state(tag: &str) -> String {
+        let dir = std::env::temp_dir().join(format!("nsml-cli-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.to_string_lossy().to_string()
+    }
+
+    #[test]
+    fn help_paths() {
+        assert_eq!(crate::cli::main(&s(&["help"])), 0);
+        assert_eq!(crate::cli::main(&s(&[])), 0);
+        assert_eq!(crate::cli::main(&s(&["frobnicate"])), 1);
+    }
+
+    #[test]
+    fn dataset_ls_and_models() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("ls");
+        assert_eq!(crate::cli::main(&s(&["dataset", "ls", "--state", &state])), 0);
+        assert_eq!(crate::cli::main(&s(&["models", "--state", &state])), 0);
+        assert_eq!(crate::cli::main(&s(&["cluster", "--state", &state])), 0);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn run_then_ps_then_board_compose_via_state() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("run");
+        assert_eq!(
+            crate::cli::main(&s(&[
+                "run", "main.py", "-d", "mnist", "--steps", "30", "--quiet", "--state", &state
+            ])),
+            0
+        );
+        assert_eq!(crate::cli::main(&s(&["ps", "--state", &state])), 0);
+        assert_eq!(crate::cli::main(&s(&["dataset", "board", "mnist", "--state", &state])), 0);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn run_missing_dataset_fails() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("miss");
+        assert_eq!(crate::cli::main(&s(&["run", "main.py", "--state", &state])), 1);
+        assert_eq!(crate::cli::main(&s(&["run", "m.py", "-d", "nope", "--state", &state])), 1);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+}

@@ -1,0 +1,74 @@
+//! `nsml` — the NSML command line (paper §3.4, Fig. 2).
+//!
+//! `nsml [OPTIONS] COMMAND [ARGS]...` with the paper's commands:
+//!
+//! * `nsml run -d DATASET`          — pack code, submit, train, report
+//! * `nsml dataset ls`              — list datasets
+//! * `nsml dataset board DATASET`   — the kaggle-like leaderboard
+//! * `nsml ps` / `nsml logs` / `nsml plot SESSION`
+//! * `nsml infer SESSION`           — interactive digit demo (Fig. 4)
+//! * `nsml automl -d DATASET`       — hyperparameter search
+//! * `nsml cluster` / `nsml models` / `nsml web`
+//!
+//! CLI invocations compose through the state directory (default `.nsml`),
+//! which plays the role of NSML's always-on cloud.
+
+mod commands;
+
+use crate::util::argparse::{split_subcommand, ArgSpec};
+
+const USAGE: &str = "nsml — NAVER Smart Machine Learning (reproduction)
+
+USAGE: nsml COMMAND [ARGS]...
+
+COMMANDS:
+  run        submit and train a session:  nsml run main.py -d mnist
+  dataset    manage datasets:             nsml dataset ls | board DATASET
+  ps         list sessions
+  logs       show a session's event log:  nsml logs SESSION
+  plot       ASCII learning curves:       nsml plot SESSION
+  infer      interactive MNIST demo:      nsml infer SESSION --digit 1 --add-lines
+  automl     hyperparameter search:       nsml automl -d mnist --strategy asha
+  cluster    cluster & scheduler status
+  models     list AOT-compiled models
+  web        serve the web UI:            nsml web --port 8080
+
+Global options (before or after COMMAND args):
+  --state DIR      state directory [default: .nsml]
+  --artifacts DIR  AOT artifacts [default: artifacts]
+";
+
+/// CLI entry point; returns the process exit code.
+pub fn main(args: &[String]) -> i32 {
+    let (cmd, rest) = split_subcommand(args);
+    let result = match cmd.as_str() {
+        "run" => commands::cmd_run(&rest),
+        "dataset" => commands::cmd_dataset(&rest),
+        "ps" => commands::cmd_ps(&rest),
+        "logs" => commands::cmd_logs(&rest),
+        "plot" => commands::cmd_plot(&rest),
+        "infer" => commands::cmd_infer(&rest),
+        "automl" => commands::cmd_automl(&rest),
+        "cluster" => commands::cmd_cluster(&rest),
+        "models" => commands::cmd_models(&rest),
+        "web" => commands::cmd_web(&rest),
+        "" | "help" | "--help" | "-h" => {
+            println!("{}", USAGE);
+            Ok(())
+        }
+        other => Err(format!("unknown command '{}'\n\n{}", other, USAGE)),
+    };
+    match result {
+        Ok(()) => 0,
+        Err(msg) => {
+            eprintln!("{}", msg);
+            1
+        }
+    }
+}
+
+/// Shared global flags for subcommands.
+pub(crate) fn with_globals(spec: ArgSpec) -> ArgSpec {
+    spec.opt("state", None, "state directory", Some(".nsml"))
+        .opt("artifacts", None, "AOT artifacts directory", Some("artifacts"))
+}

@@ -1,0 +1,121 @@
+//! Failure injection plans for the §4.2 instability experiments
+//! ("sometimes the system has no response and has been recovered after a
+//! few minutes") — deterministic node-flap schedules driven by a seed.
+
+use super::{Cluster, NodeId};
+use crate::util::clock::Millis;
+use crate::util::rng::Rng;
+
+/// One scheduled node outage.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Outage {
+    pub node: NodeId,
+    pub start_ms: Millis,
+    pub duration_ms: Millis,
+}
+
+/// A reproducible schedule of node outages over a horizon.
+#[derive(Debug, Clone, Default)]
+pub struct FailurePlan {
+    pub outages: Vec<Outage>,
+    applied_down: Vec<bool>,
+    applied_up: Vec<bool>,
+}
+
+impl FailurePlan {
+    /// Random plan: each node independently flaps with `rate` outages per
+    /// minute of simulated time, each lasting `mean_outage_ms` on average.
+    pub fn random(
+        seed: u64,
+        nodes: usize,
+        horizon_ms: Millis,
+        rate_per_min: f64,
+        mean_outage_ms: f64,
+    ) -> FailurePlan {
+        let mut rng = Rng::new(seed);
+        let mut outages = Vec::new();
+        for node in 0..nodes {
+            let mut t = 0.0f64;
+            loop {
+                // Poisson arrivals.
+                t += rng.exponential(60_000.0 / rate_per_min.max(1e-9));
+                if t >= horizon_ms as f64 {
+                    break;
+                }
+                let dur = rng.exponential(mean_outage_ms).max(100.0);
+                outages.push(Outage {
+                    node: NodeId(node as u32),
+                    start_ms: t as Millis,
+                    duration_ms: dur as Millis,
+                });
+            }
+        }
+        outages.sort_by_key(|o| o.start_ms);
+        let n = outages.len();
+        FailurePlan { outages, applied_down: vec![false; n], applied_up: vec![false; n] }
+    }
+
+    /// Explicit plan from a list of outages.
+    pub fn fixed(outages: Vec<Outage>) -> FailurePlan {
+        let n = outages.len();
+        FailurePlan { outages, applied_down: vec![false; n], applied_up: vec![false; n] }
+    }
+
+    /// Apply due outage transitions at the current virtual time; returns
+    /// job ids orphaned by kills in this step.
+    pub fn step(&mut self, cluster: &Cluster) -> Vec<String> {
+        let now = cluster.clock().now_ms();
+        let mut orphans = Vec::new();
+        for (i, o) in self.outages.iter().enumerate() {
+            if !self.applied_down[i] && now >= o.start_ms {
+                orphans.extend(cluster.kill_node(o.node));
+                self.applied_down[i] = true;
+            }
+            if self.applied_down[i] && !self.applied_up[i] && now >= o.start_ms + o.duration_ms {
+                cluster.revive_node(o.node);
+                self.applied_up[i] = true;
+            }
+        }
+        orphans
+    }
+
+    pub fn done(&self) -> bool {
+        self.applied_up.iter().all(|&b| b)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ResourceReq;
+    use crate::events::EventLog;
+    use crate::util::clock::sim_clock;
+
+    #[test]
+    fn random_plan_reproducible() {
+        let a = FailurePlan::random(7, 5, 60_000, 2.0, 3_000.0);
+        let b = FailurePlan::random(7, 5, 60_000, 2.0, 3_000.0);
+        assert_eq!(a.outages, b.outages);
+        assert!(!a.outages.is_empty());
+        assert!(a.outages.windows(2).all(|w| w[0].start_ms <= w[1].start_ms));
+    }
+
+    #[test]
+    fn fixed_plan_kills_and_revives() {
+        let (clock, sim) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        let cluster = Cluster::homogeneous(clock, events, 2, 2, 24.0);
+        cluster.allocate(NodeId(0), "victim", &ResourceReq::gpus(1)).unwrap();
+
+        let mut plan = FailurePlan::fixed(vec![Outage { node: NodeId(0), start_ms: 100, duration_ms: 500 }]);
+        assert!(plan.step(&cluster).is_empty()); // t=0: nothing yet
+        sim.advance(150);
+        let orphans = plan.step(&cluster);
+        assert_eq!(orphans, vec!["victim".to_string()]);
+        assert_eq!(cluster.alive_count(), 1);
+        sim.advance(500);
+        plan.step(&cluster);
+        assert_eq!(cluster.alive_count(), 2);
+        assert!(plan.done());
+    }
+}

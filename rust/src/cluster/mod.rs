@@ -1,0 +1,377 @@
+//! Simulated GPU cluster — the physical substrate NSML schedules onto.
+//!
+//! The paper's prototype ran on "a server cluster equipped with 80 P40
+//! GPUs". That hardware is unavailable here, so this module provides a
+//! faithful stand-in: nodes with GPU/CPU/memory capacities, a heartbeat
+//! protocol (slaves periodically report resources to the master, §3.2),
+//! and failure injection for the SPOF / instability experiments (§4.2).
+//!
+//! Everything observable by the scheduler flows through the same
+//! interfaces a real agent would provide: capacity vectors, heartbeat
+//! timestamps and allocation/release calls.
+
+mod node;
+mod failure;
+pub mod monitor;
+
+pub use failure::FailurePlan;
+pub use monitor::UtilizationMonitor;
+pub use node::{GpuDevice, Node, NodeId, NodeStatus, ResourceReq};
+
+use crate::events::EventLog;
+use crate::util::clock::{Millis, SharedClock};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// How long without a heartbeat before the master declares a node dead.
+pub const HEARTBEAT_TIMEOUT_MS: Millis = 3_000;
+/// How often slave nodes report their resources (paper §3.2: "periodically
+/// report ... to the master node").
+pub const HEARTBEAT_INTERVAL_MS: Millis = 500;
+
+/// A snapshot of one node's schedulable state, as reported by heartbeat.
+#[derive(Debug, Clone)]
+pub struct NodeView {
+    pub id: NodeId,
+    pub hostname: String,
+    pub total_gpus: usize,
+    pub free_gpus: usize,
+    pub total_cpus: u32,
+    pub free_cpus: u32,
+    pub total_mem_gb: f64,
+    pub free_mem_gb: f64,
+    pub alive: bool,
+    pub last_heartbeat_ms: Millis,
+    /// Job ids currently running here.
+    pub jobs: Vec<String>,
+}
+
+impl NodeView {
+    pub fn fits(&self, req: &ResourceReq) -> bool {
+        self.alive
+            && self.free_gpus >= req.gpus
+            && self.free_cpus >= req.cpus
+            && self.free_mem_gb >= req.mem_gb
+    }
+}
+
+/// The shared cluster state. Thread-safe; cheap to clone (Arc inside).
+#[derive(Clone)]
+pub struct Cluster {
+    inner: Arc<Mutex<ClusterState>>,
+    clock: SharedClock,
+    events: EventLog,
+}
+
+struct ClusterState {
+    nodes: BTreeMap<NodeId, Node>,
+    /// Allocation table: job id -> (node, gpu indexes).
+    allocations: BTreeMap<String, (NodeId, Vec<usize>)>,
+}
+
+impl Cluster {
+    pub fn new(clock: SharedClock, events: EventLog) -> Cluster {
+        Cluster {
+            inner: Arc::new(Mutex::new(ClusterState {
+                nodes: BTreeMap::new(),
+                allocations: BTreeMap::new(),
+            })),
+            clock,
+            events,
+        }
+    }
+
+    /// Build a homogeneous cluster: `nodes` hosts × `gpus_per_node` GPUs.
+    /// The paper's prototype shape is `Cluster::homogeneous(10, 8, ...)`
+    /// (80 P40s).
+    pub fn homogeneous(
+        clock: SharedClock,
+        events: EventLog,
+        nodes: usize,
+        gpus_per_node: usize,
+        gpu_mem_gb: f64,
+    ) -> Cluster {
+        let c = Cluster::new(clock, events);
+        for i in 0..nodes {
+            c.add_node(Node::new(
+                &format!("node-{:02}", i),
+                gpus_per_node,
+                gpu_mem_gb,
+                64,
+                256.0,
+            ));
+        }
+        c
+    }
+
+    pub fn add_node(&self, mut node: Node) -> NodeId {
+        let mut st = self.inner.lock().unwrap();
+        let id = NodeId(st.nodes.len() as u32);
+        node.id = id;
+        node.last_heartbeat_ms = self.clock.now_ms();
+        self.events.info("cluster", &node.hostname.clone(), format!("node joined with {} GPUs", node.gpus.len()));
+        st.nodes.insert(id, node);
+        id
+    }
+
+    /// Record a heartbeat from `node` (slave → master resource report).
+    pub fn heartbeat(&self, node: NodeId) {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        if let Some(n) = st.nodes.get_mut(&node) {
+            n.last_heartbeat_ms = now;
+            if n.status == NodeStatus::Dead {
+                n.status = NodeStatus::Alive;
+                self.events.info("cluster", &n.hostname.clone(), "node recovered");
+            }
+        }
+    }
+
+    /// Heartbeat all currently-alive nodes (driver convenience).
+    pub fn heartbeat_all(&self) {
+        let ids: Vec<NodeId> = {
+            let st = self.inner.lock().unwrap();
+            st.nodes.values().filter(|n| n.status == NodeStatus::Alive).map(|n| n.id).collect()
+        };
+        for id in ids {
+            self.heartbeat(id);
+        }
+    }
+
+    /// Mark nodes dead whose heartbeat is stale; returns the jobs that were
+    /// running on them (the scheduler requeues those).
+    pub fn reap_dead(&self) -> Vec<String> {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        let mut orphans = Vec::new();
+        let mut dead_nodes = Vec::new();
+        for n in st.nodes.values_mut() {
+            if n.status == NodeStatus::Alive && now.saturating_sub(n.last_heartbeat_ms) > HEARTBEAT_TIMEOUT_MS {
+                n.status = NodeStatus::Dead;
+                dead_nodes.push(n.id);
+                self.events.warn("cluster", &n.hostname.clone(), "heartbeat timeout; marking dead");
+            }
+        }
+        for dead in dead_nodes {
+            let jobs: Vec<String> = st
+                .allocations
+                .iter()
+                .filter(|(_, (nid, _))| *nid == dead)
+                .map(|(j, _)| j.clone())
+                .collect();
+            for j in jobs {
+                st.allocations.remove(&j);
+                if let Some(n) = st.nodes.get_mut(&dead) {
+                    n.release_job(&j);
+                }
+                orphans.push(j);
+            }
+        }
+        orphans
+    }
+
+    /// Kill a node outright (failure injection). Returns orphaned jobs.
+    pub fn kill_node(&self, node: NodeId) -> Vec<String> {
+        let mut st = self.inner.lock().unwrap();
+        let mut orphans = Vec::new();
+        if let Some(n) = st.nodes.get_mut(&node) {
+            n.status = NodeStatus::Dead;
+            self.events.error("cluster", &n.hostname.clone(), "node killed (failure injection)");
+        }
+        let jobs: Vec<String> = st
+            .allocations
+            .iter()
+            .filter(|(_, (nid, _))| *nid == node)
+            .map(|(j, _)| j.clone())
+            .collect();
+        for j in jobs {
+            st.allocations.remove(&j);
+            if let Some(n) = st.nodes.get_mut(&node) {
+                n.release_job(&j);
+            }
+            orphans.push(j);
+        }
+        orphans
+    }
+
+    /// Revive a previously killed node.
+    pub fn revive_node(&self, node: NodeId) {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        if let Some(n) = st.nodes.get_mut(&node) {
+            n.status = NodeStatus::Alive;
+            n.last_heartbeat_ms = now;
+            self.events.info("cluster", &n.hostname.clone(), "node revived");
+        }
+    }
+
+    /// Try to allocate `req` for `job` on `node`. Returns the GPU indexes.
+    pub fn allocate(&self, node: NodeId, job: &str, req: &ResourceReq) -> Option<Vec<usize>> {
+        let mut st = self.inner.lock().unwrap();
+        if st.allocations.contains_key(job) {
+            return None; // double allocation is a bug upstream
+        }
+        let n = st.nodes.get_mut(&node)?;
+        let gpus = n.try_allocate(job, req)?;
+        st.allocations.insert(job.to_string(), (node, gpus.clone()));
+        self.events.debug(
+            "cluster",
+            job,
+            format!("allocated {} GPU(s) on node {}", req.gpus, node.0),
+        );
+        Some(gpus)
+    }
+
+    /// Release the job's resources (job finished or was stopped).
+    pub fn release(&self, job: &str) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        if let Some((node, _)) = st.allocations.remove(job) {
+            if let Some(n) = st.nodes.get_mut(&node) {
+                n.release_job(job);
+            }
+            self.events.debug("cluster", job, "released resources");
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Where is this job running, if anywhere?
+    pub fn locate(&self, job: &str) -> Option<NodeId> {
+        self.inner.lock().unwrap().allocations.get(job).map(|(n, _)| *n)
+    }
+
+    /// Schedulable view of every node (what the master sees).
+    pub fn snapshot(&self) -> Vec<NodeView> {
+        let st = self.inner.lock().unwrap();
+        st.nodes.values().map(|n| n.view()).collect()
+    }
+
+    pub fn node_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.len()
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.inner.lock().unwrap().nodes.values().filter(|n| n.status == NodeStatus::Alive).count()
+    }
+
+    /// Total / free GPU counts over alive nodes.
+    pub fn gpu_totals(&self) -> (usize, usize) {
+        let st = self.inner.lock().unwrap();
+        let mut total = 0;
+        let mut free = 0;
+        for n in st.nodes.values() {
+            if n.status == NodeStatus::Alive {
+                total += n.gpus.len();
+                free += n.free_gpu_count();
+            }
+        }
+        (total, free)
+    }
+
+    /// Fraction of alive GPUs currently allocated (cluster utilization).
+    pub fn utilization(&self) -> f64 {
+        let (total, free) = self.gpu_totals();
+        if total == 0 {
+            0.0
+        } else {
+            (total - free) as f64 / total as f64
+        }
+    }
+
+    pub fn events(&self) -> &EventLog {
+        &self.events
+    }
+
+    pub fn clock(&self) -> &SharedClock {
+        &self.clock
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    fn mk() -> (Cluster, crate::util::clock::SimClock) {
+        let (clock, sim) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        (Cluster::homogeneous(clock, events, 3, 4, 24.0), sim)
+    }
+
+    #[test]
+    fn homogeneous_shape() {
+        let (c, _) = mk();
+        assert_eq!(c.node_count(), 3);
+        assert_eq!(c.gpu_totals(), (12, 12));
+        assert_eq!(c.utilization(), 0.0);
+    }
+
+    #[test]
+    fn allocate_and_release() {
+        let (c, _) = mk();
+        let req = ResourceReq::gpus(2);
+        let gpus = c.allocate(NodeId(0), "job-1", &req).unwrap();
+        assert_eq!(gpus.len(), 2);
+        assert_eq!(c.gpu_totals(), (12, 10));
+        assert_eq!(c.locate("job-1"), Some(NodeId(0)));
+        assert!(c.release("job-1"));
+        assert_eq!(c.gpu_totals(), (12, 12));
+        assert!(!c.release("job-1")); // double release is a no-op
+    }
+
+    #[test]
+    fn cannot_overallocate_node() {
+        let (c, _) = mk();
+        assert!(c.allocate(NodeId(0), "a", &ResourceReq::gpus(4)).is_some());
+        assert!(c.allocate(NodeId(0), "b", &ResourceReq::gpus(1)).is_none());
+        // Other nodes unaffected.
+        assert!(c.allocate(NodeId(1), "b", &ResourceReq::gpus(1)).is_some());
+    }
+
+    #[test]
+    fn double_allocation_rejected() {
+        let (c, _) = mk();
+        assert!(c.allocate(NodeId(0), "a", &ResourceReq::gpus(1)).is_some());
+        assert!(c.allocate(NodeId(1), "a", &ResourceReq::gpus(1)).is_none());
+    }
+
+    #[test]
+    fn heartbeat_timeout_reaps_and_orphans() {
+        let (c, sim) = mk();
+        c.allocate(NodeId(1), "job-x", &ResourceReq::gpus(2)).unwrap();
+        sim.advance(HEARTBEAT_TIMEOUT_MS + 1);
+        // Nodes 0 and 2 heartbeat in time; node 1 does not.
+        c.heartbeat(NodeId(0));
+        c.heartbeat(NodeId(2));
+        let orphans = c.reap_dead();
+        assert_eq!(orphans, vec!["job-x".to_string()]);
+        assert_eq!(c.alive_count(), 2);
+        // Orphaned job no longer located anywhere.
+        assert_eq!(c.locate("job-x"), None);
+    }
+
+    #[test]
+    fn kill_and_revive() {
+        let (c, _) = mk();
+        c.allocate(NodeId(2), "j", &ResourceReq::gpus(1)).unwrap();
+        let orphans = c.kill_node(NodeId(2));
+        assert_eq!(orphans.len(), 1);
+        assert_eq!(c.alive_count(), 2);
+        c.revive_node(NodeId(2));
+        assert_eq!(c.alive_count(), 3);
+        // Revived node comes back empty.
+        let view = &c.snapshot()[2];
+        assert_eq!(view.free_gpus, 4);
+    }
+
+    #[test]
+    fn snapshot_fits() {
+        let (c, _) = mk();
+        c.allocate(NodeId(0), "a", &ResourceReq::gpus(3)).unwrap();
+        let snap = c.snapshot();
+        assert!(!snap[0].fits(&ResourceReq::gpus(2)));
+        assert!(snap[0].fits(&ResourceReq::gpus(1)));
+        assert!(snap[1].fits(&ResourceReq::gpus(4)));
+    }
+}

@@ -1,0 +1,166 @@
+//! Utilization monitoring (§3.1: "Better computational resource
+//! management to improve utilization and job scheduling").
+//!
+//! Samples cluster utilization / queue depth / alive-node count over
+//! (virtual) time into a time series the CLI, web UI and benches can
+//! render — the ops view a platform team actually watches.
+
+use super::Cluster;
+use crate::util::clock::Millis;
+use crate::util::plot::Series;
+use std::sync::{Arc, Mutex};
+
+/// One utilization sample.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Sample {
+    pub at_ms: Millis,
+    pub utilization: f64,
+    pub free_gpus: usize,
+    pub alive_nodes: usize,
+    pub queue_depth: usize,
+}
+
+/// Rolling utilization history.
+#[derive(Clone, Default)]
+pub struct UtilizationMonitor {
+    samples: Arc<Mutex<Vec<Sample>>>,
+}
+
+impl UtilizationMonitor {
+    pub fn new() -> UtilizationMonitor {
+        UtilizationMonitor::default()
+    }
+
+    /// Record the cluster's current state (call from the platform loop).
+    pub fn sample(&self, cluster: &Cluster, queue_depth: usize) {
+        let (_, free) = cluster.gpu_totals();
+        let s = Sample {
+            at_ms: cluster.clock().now_ms(),
+            utilization: cluster.utilization(),
+            free_gpus: free,
+            alive_nodes: cluster.alive_count(),
+            queue_depth,
+        };
+        self.samples.lock().unwrap().push(s);
+    }
+
+    pub fn len(&self) -> usize {
+        self.samples.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn all(&self) -> Vec<Sample> {
+        self.samples.lock().unwrap().clone()
+    }
+
+    /// Mean utilization across the window.
+    pub fn mean_utilization(&self) -> f64 {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0.0;
+        }
+        s.iter().map(|x| x.utilization).sum::<f64>() / s.len() as f64
+    }
+
+    /// Peak queue depth (the §2 "waiting for GPUs" pain, quantified).
+    pub fn peak_queue_depth(&self) -> usize {
+        self.samples.lock().unwrap().iter().map(|s| s.queue_depth).max().unwrap_or(0)
+    }
+
+    /// Fraction of samples with at least one job waiting while GPUs were
+    /// free — scheduling inefficiency (fragmentation or policy misses).
+    pub fn starvation_fraction(&self) -> f64 {
+        let s = self.samples.lock().unwrap();
+        if s.is_empty() {
+            return 0.0;
+        }
+        let starved = s.iter().filter(|x| x.queue_depth > 0 && x.free_gpus > 0).count();
+        starved as f64 / s.len() as f64
+    }
+
+    /// Utilization time series for the plot renderers.
+    pub fn utilization_series(&self) -> Series {
+        Series::new(
+            "utilization",
+            self.all().iter().map(|s| (s.at_ms as f64, s.utilization)).collect(),
+        )
+    }
+
+    pub fn queue_series(&self) -> Series {
+        Series::new(
+            "queue_depth",
+            self.all().iter().map(|s| (s.at_ms as f64, s.queue_depth as f64)).collect(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::{NodeId, ResourceReq};
+    use crate::events::EventLog;
+    use crate::util::clock::sim_clock;
+
+    fn cluster() -> (Cluster, crate::util::clock::SimClock) {
+        let (clock, sim) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        (Cluster::homogeneous(clock, events, 2, 4, 24.0), sim)
+    }
+
+    #[test]
+    fn samples_track_cluster_state() {
+        let (c, sim) = cluster();
+        let mon = UtilizationMonitor::new();
+        mon.sample(&c, 0);
+        c.allocate(NodeId(0), "j", &ResourceReq::gpus(4)).unwrap();
+        sim.advance(100);
+        mon.sample(&c, 2);
+        let all = mon.all();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].utilization, 0.0);
+        assert_eq!(all[1].utilization, 0.5);
+        assert_eq!(all[1].at_ms, 100);
+        assert_eq!(all[1].queue_depth, 2);
+        assert!((mon.mean_utilization() - 0.25).abs() < 1e-9);
+        assert_eq!(mon.peak_queue_depth(), 2);
+    }
+
+    #[test]
+    fn starvation_detected() {
+        let (c, _) = cluster();
+        let mon = UtilizationMonitor::new();
+        // Queue non-empty while 8 GPUs free: starvation sample.
+        mon.sample(&c, 3);
+        c.allocate(NodeId(0), "a", &ResourceReq::gpus(4)).unwrap();
+        c.allocate(NodeId(1), "b", &ResourceReq::gpus(4)).unwrap();
+        // Queue non-empty, zero free: not starvation (genuinely full).
+        mon.sample(&c, 3);
+        assert!((mon.starvation_fraction() - 0.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn series_render() {
+        let (c, sim) = cluster();
+        let mon = UtilizationMonitor::new();
+        for i in 0..5 {
+            mon.sample(&c, i);
+            sim.advance(10);
+        }
+        assert_eq!(mon.utilization_series().points.len(), 5);
+        assert_eq!(mon.queue_series().points[4], (40.0, 4.0));
+        let chart = crate::util::plot::ascii_chart("util", &[mon.queue_series()], 30, 8);
+        assert!(chart.contains('*'));
+    }
+
+    #[test]
+    fn empty_monitor_safe() {
+        let mon = UtilizationMonitor::new();
+        assert!(mon.is_empty());
+        assert_eq!(mon.mean_utilization(), 0.0);
+        assert_eq!(mon.starvation_fraction(), 0.0);
+        assert_eq!(mon.peak_queue_depth(), 0);
+    }
+}

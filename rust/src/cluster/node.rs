@@ -1,0 +1,202 @@
+//! Node-local state: GPUs, CPU/memory capacity, per-GPU allocation.
+
+use crate::util::clock::Millis;
+use std::collections::BTreeMap;
+
+/// Opaque node identifier assigned by the cluster.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct NodeId(pub u32);
+
+impl std::fmt::Display for NodeId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "node-{:02}", self.0)
+    }
+}
+
+/// Liveness as seen by the master.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NodeStatus {
+    Alive,
+    Dead,
+}
+
+/// One physical accelerator.
+#[derive(Debug, Clone)]
+pub struct GpuDevice {
+    pub index: usize,
+    pub model: String,
+    pub mem_gb: f64,
+    /// Job currently pinned to this device, if any.
+    pub owner: Option<String>,
+}
+
+/// A resource request for one job (paper: jobs ask for k GPUs and must
+/// land on a single server — the ResNet-152 8-GPU anecdote in §2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResourceReq {
+    pub gpus: usize,
+    pub cpus: u32,
+    pub mem_gb: f64,
+}
+
+impl ResourceReq {
+    /// GPUs only, with proportional default CPU/memory.
+    pub fn gpus(n: usize) -> ResourceReq {
+        ResourceReq { gpus: n, cpus: (2 * n.max(1)) as u32, mem_gb: 8.0 * n.max(1) as f64 }
+    }
+
+    pub fn cpu_only() -> ResourceReq {
+        ResourceReq { gpus: 0, cpus: 2, mem_gb: 4.0 }
+    }
+}
+
+/// A cluster host with its devices and bookkeeping.
+#[derive(Debug, Clone)]
+pub struct Node {
+    pub id: NodeId,
+    pub hostname: String,
+    pub gpus: Vec<GpuDevice>,
+    pub total_cpus: u32,
+    pub total_mem_gb: f64,
+    pub status: NodeStatus,
+    pub last_heartbeat_ms: Millis,
+    /// job -> (cpus, mem) reserved beyond GPUs.
+    reservations: BTreeMap<String, (u32, f64)>,
+}
+
+impl Node {
+    pub fn new(hostname: &str, gpus: usize, gpu_mem_gb: f64, cpus: u32, mem_gb: f64) -> Node {
+        Node {
+            id: NodeId(u32::MAX),
+            hostname: hostname.to_string(),
+            gpus: (0..gpus)
+                .map(|i| GpuDevice { index: i, model: "P40".to_string(), mem_gb: gpu_mem_gb, owner: None })
+                .collect(),
+            total_cpus: cpus,
+            total_mem_gb: mem_gb,
+            status: NodeStatus::Alive,
+            last_heartbeat_ms: 0,
+            reservations: BTreeMap::new(),
+        }
+    }
+
+    pub fn free_gpu_count(&self) -> usize {
+        self.gpus.iter().filter(|g| g.owner.is_none()).count()
+    }
+
+    pub fn used_cpus(&self) -> u32 {
+        self.reservations.values().map(|(c, _)| *c).sum()
+    }
+
+    pub fn used_mem_gb(&self) -> f64 {
+        self.reservations.values().map(|(_, m)| *m).sum()
+    }
+
+    /// Allocate GPUs + CPU/memory for a job if everything fits.
+    pub fn try_allocate(&mut self, job: &str, req: &ResourceReq) -> Option<Vec<usize>> {
+        if self.status != NodeStatus::Alive {
+            return None;
+        }
+        if self.free_gpu_count() < req.gpus
+            || self.total_cpus - self.used_cpus() < req.cpus
+            || self.total_mem_gb - self.used_mem_gb() < req.mem_gb
+        {
+            return None;
+        }
+        let mut taken = Vec::with_capacity(req.gpus);
+        for g in self.gpus.iter_mut() {
+            if taken.len() == req.gpus {
+                break;
+            }
+            if g.owner.is_none() {
+                g.owner = Some(job.to_string());
+                taken.push(g.index);
+            }
+        }
+        self.reservations.insert(job.to_string(), (req.cpus, req.mem_gb));
+        Some(taken)
+    }
+
+    /// Free everything owned by `job`.
+    pub fn release_job(&mut self, job: &str) {
+        for g in self.gpus.iter_mut() {
+            if g.owner.as_deref() == Some(job) {
+                g.owner = None;
+            }
+        }
+        self.reservations.remove(job);
+    }
+
+    /// Jobs with any reservation here.
+    pub fn jobs(&self) -> Vec<String> {
+        self.reservations.keys().cloned().collect()
+    }
+
+    pub fn view(&self) -> super::NodeView {
+        super::NodeView {
+            id: self.id,
+            hostname: self.hostname.clone(),
+            total_gpus: self.gpus.len(),
+            free_gpus: self.free_gpu_count(),
+            total_cpus: self.total_cpus,
+            free_cpus: self.total_cpus - self.used_cpus(),
+            total_mem_gb: self.total_mem_gb,
+            free_mem_gb: self.total_mem_gb - self.used_mem_gb(),
+            alive: self.status == NodeStatus::Alive,
+            last_heartbeat_ms: self.last_heartbeat_ms,
+            jobs: self.jobs(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocation_tracks_devices() {
+        let mut n = Node::new("h", 4, 24.0, 16, 64.0);
+        let got = n.try_allocate("j1", &ResourceReq::gpus(2)).unwrap();
+        assert_eq!(got, vec![0, 1]);
+        assert_eq!(n.free_gpu_count(), 2);
+        let got2 = n.try_allocate("j2", &ResourceReq::gpus(2)).unwrap();
+        assert_eq!(got2, vec![2, 3]);
+        assert!(n.try_allocate("j3", &ResourceReq::gpus(1)).is_none());
+        n.release_job("j1");
+        assert_eq!(n.free_gpu_count(), 2);
+        // Released devices are reusable.
+        let got3 = n.try_allocate("j3", &ResourceReq::gpus(2)).unwrap();
+        assert_eq!(got3, vec![0, 1]);
+    }
+
+    #[test]
+    fn cpu_memory_limits_enforced() {
+        let mut n = Node::new("h", 8, 24.0, 4, 16.0);
+        // gpus(2) asks 4 cpus, 16 GB: fits exactly.
+        assert!(n.try_allocate("a", &ResourceReq::gpus(2)).is_some());
+        // Nothing left for even a cpu-only job.
+        assert!(n.try_allocate("b", &ResourceReq::cpu_only()).is_none());
+        n.release_job("a");
+        assert!(n.try_allocate("b", &ResourceReq::cpu_only()).is_some());
+    }
+
+    #[test]
+    fn cpu_only_jobs_take_no_gpu() {
+        let mut n = Node::new("h", 2, 24.0, 16, 64.0);
+        let got = n.try_allocate("cpu-job", &ResourceReq::cpu_only()).unwrap();
+        assert!(got.is_empty());
+        assert_eq!(n.free_gpu_count(), 2);
+        assert_eq!(n.jobs(), vec!["cpu-job".to_string()]);
+    }
+
+    #[test]
+    fn view_reflects_state() {
+        let mut n = Node::new("h", 4, 24.0, 16, 64.0);
+        n.id = NodeId(3);
+        n.try_allocate("x", &ResourceReq::gpus(1)).unwrap();
+        let v = n.view();
+        assert_eq!(v.free_gpus, 3);
+        assert_eq!(v.jobs, vec!["x".to_string()]);
+        assert_eq!(format!("{}", v.id), "node-03");
+    }
+}

@@ -1,0 +1,226 @@
+//! Docker-image cache with reuse (paper §3.3, bottleneck 1).
+
+use super::LatencyModel;
+use crate::util::clock::{Millis, SharedClock};
+use sha2::{Digest, Sha256};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// An ML environment: what the user's docker image is built from.
+/// "If one user wants to use PyTorch in python 2.7, he or she just needs
+/// to select the corresponding base docker image" (§3.2).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ImageSpec {
+    pub base: String,
+    pub framework: String,
+    pub python: String,
+    /// Extra pip requirements, order-insensitive.
+    pub pip: Vec<String>,
+}
+
+impl ImageSpec {
+    pub fn new(base: &str, framework: &str, python: &str, pip: &[&str]) -> ImageSpec {
+        let mut pip: Vec<String> = pip.iter().map(|s| s.to_string()).collect();
+        pip.sort();
+        ImageSpec {
+            base: base.to_string(),
+            framework: framework.to_string(),
+            python: python.to_string(),
+            pip,
+        }
+    }
+
+    /// Canonical digest of the environment (the cache key).
+    pub fn digest(&self) -> ImageId {
+        let mut h = Sha256::new();
+        h.update(self.base.as_bytes());
+        h.update([0]);
+        h.update(self.framework.as_bytes());
+        h.update([0]);
+        h.update(self.python.as_bytes());
+        for p in &self.pip {
+            h.update([0]);
+            h.update(p.as_bytes());
+        }
+        let out = h.finalize();
+        ImageId(out.iter().take(16).map(|b| format!("{:02x}", b)).collect())
+    }
+
+    /// The default TF image NSML docs use in examples.
+    pub fn tensorflow() -> ImageSpec {
+        ImageSpec::new("nvidia/cuda:9.0", "tensorflow==1.4", "3.6", &[])
+    }
+
+    pub fn pytorch() -> ImageSpec {
+        ImageSpec::new("nvidia/cuda:9.0", "torch==0.3", "3.6", &[])
+    }
+}
+
+/// Image identifier (truncated digest, like a docker image id).
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ImageId(pub String);
+
+impl std::fmt::Display for ImageId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0[..12.min(self.0.len())])
+    }
+}
+
+/// How an image was obtained.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum BuildOutcome {
+    /// Cold: full build, expensive.
+    Built,
+    /// Warm: cache hit, cheap.
+    Reused,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct ImageStats {
+    pub builds: u64,
+    pub reuses: u64,
+    pub build_ms_total: Millis,
+}
+
+/// Cluster-wide image cache (the paper shares built images per registry).
+#[derive(Clone)]
+pub struct ImageCache {
+    clock: SharedClock,
+    latency: LatencyModel,
+    inner: Arc<Mutex<CacheState>>,
+}
+
+struct CacheState {
+    images: BTreeMap<ImageId, ImageSpec>,
+    stats: ImageStats,
+    enabled: bool,
+}
+
+impl ImageCache {
+    pub fn new(clock: SharedClock, latency: LatencyModel) -> ImageCache {
+        ImageCache {
+            clock,
+            latency,
+            inner: Arc::new(Mutex::new(CacheState {
+                images: BTreeMap::new(),
+                stats: ImageStats::default(),
+                enabled: true,
+            })),
+        }
+    }
+
+    /// Ablation switch (E7): disable reuse so every ensure() builds.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.inner.lock().unwrap().enabled = enabled;
+    }
+
+    /// Ensure an image for `spec` exists; returns (id, outcome, cost_ms).
+    /// Advances the platform clock by the operation's latency.
+    pub fn ensure(&self, spec: &ImageSpec) -> (ImageId, BuildOutcome, Millis) {
+        let id = spec.digest();
+        let (outcome, cost) = {
+            let mut st = self.inner.lock().unwrap();
+            if st.enabled && st.images.contains_key(&id) {
+                st.stats.reuses += 1;
+                (BuildOutcome::Reused, self.latency.image_reuse_ms)
+            } else {
+                st.images.insert(id.clone(), spec.clone());
+                st.stats.builds += 1;
+                st.stats.build_ms_total += self.latency.image_build_ms;
+                (BuildOutcome::Built, self.latency.image_build_ms)
+            }
+        };
+        self.clock.sleep_ms(cost);
+        (id, outcome, cost)
+    }
+
+    pub fn stats(&self) -> ImageStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    pub fn cached_count(&self) -> usize {
+        self.inner.lock().unwrap().images.len()
+    }
+
+    /// Drop every cached image (e.g. registry GC).
+    pub fn clear(&self) {
+        self.inner.lock().unwrap().images.clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    fn cache() -> (ImageCache, crate::util::clock::SimClock) {
+        let (clock, sim) = sim_clock();
+        (ImageCache::new(clock, LatencyModel::fast()), sim)
+    }
+
+    #[test]
+    fn digest_stable_and_order_insensitive() {
+        let a = ImageSpec::new("cuda", "tf", "3.6", &["numpy", "scipy"]);
+        let b = ImageSpec::new("cuda", "tf", "3.6", &["scipy", "numpy"]);
+        assert_eq!(a.digest(), b.digest());
+        let c = ImageSpec::new("cuda", "tf", "2.7", &["numpy", "scipy"]);
+        assert_ne!(a.digest(), c.digest());
+    }
+
+    #[test]
+    fn first_build_cold_then_warm() {
+        let (cache, sim) = cache();
+        let spec = ImageSpec::tensorflow();
+        let (id1, o1, c1) = cache.ensure(&spec);
+        assert_eq!(o1, BuildOutcome::Built);
+        assert_eq!(c1, 45);
+        let (id2, o2, c2) = cache.ensure(&spec);
+        assert_eq!(o2, BuildOutcome::Reused);
+        assert_eq!(c2, 1);
+        assert_eq!(id1, id2);
+        let _ = sim;
+    }
+
+    #[test]
+    fn clock_advances_by_cost() {
+        let (clock, _sim) = sim_clock();
+        let cache = ImageCache::new(clock.clone(), LatencyModel::fast());
+        cache.ensure(&ImageSpec::tensorflow());
+        assert_eq!(clock.now_ms(), 45);
+        cache.ensure(&ImageSpec::tensorflow());
+        assert_eq!(clock.now_ms(), 46);
+    }
+
+    #[test]
+    fn different_envs_do_not_share() {
+        let (cache, _) = cache();
+        let (_, o1, _) = cache.ensure(&ImageSpec::tensorflow());
+        let (_, o2, _) = cache.ensure(&ImageSpec::pytorch());
+        assert_eq!(o1, BuildOutcome::Built);
+        assert_eq!(o2, BuildOutcome::Built);
+        assert_eq!(cache.cached_count(), 2);
+    }
+
+    #[test]
+    fn disabled_cache_always_builds() {
+        let (cache, _) = cache();
+        cache.set_enabled(false);
+        cache.ensure(&ImageSpec::tensorflow());
+        let (_, o, _) = cache.ensure(&ImageSpec::tensorflow());
+        assert_eq!(o, BuildOutcome::Built);
+        assert_eq!(cache.stats().builds, 2);
+        assert_eq!(cache.stats().reuses, 0);
+    }
+
+    #[test]
+    fn stats_track() {
+        let (cache, _) = cache();
+        for _ in 0..3 {
+            cache.ensure(&ImageSpec::tensorflow());
+        }
+        let s = cache.stats();
+        assert_eq!(s.builds, 1);
+        assert_eq!(s.reuses, 2);
+        assert_eq!(s.build_ms_total, 45);
+    }
+}

@@ -1,0 +1,216 @@
+//! ML-container lifecycle: what happens on a node between "scheduler
+//! placed the job here" and "user code is running".
+//!
+//! NSML's startup sequence (§3.3): ensure the docker image (build or
+//! reuse), make the dataset available (copy or host-share), boot the
+//! container, then hand control to the session runner.
+
+use super::image::{BuildOutcome, ImageCache, ImageId, ImageSpec};
+use super::mount::{MountOutcome, MountTable};
+use super::LatencyModel;
+use crate::cluster::NodeId;
+use crate::events::EventLog;
+use crate::util::clock::{Millis, SharedClock};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Container FSM states.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ContainerState {
+    Preparing,
+    Running,
+    Stopped,
+}
+
+/// A launched ML container.
+#[derive(Debug, Clone)]
+pub struct Container {
+    pub id: String,
+    pub job: String,
+    pub node: NodeId,
+    pub image: ImageId,
+    pub dataset: String,
+    pub state: ContainerState,
+    /// Total startup latency the job paid before running.
+    pub startup_ms: Millis,
+    pub image_outcome: BuildOutcome,
+    pub mount_outcome: MountOutcome,
+}
+
+/// Launch + teardown of ML containers across the cluster.
+#[derive(Clone)]
+pub struct ContainerManager {
+    clock: SharedClock,
+    images: ImageCache,
+    mounts: MountTable,
+    latency: LatencyModel,
+    events: EventLog,
+    inner: Arc<Mutex<BTreeMap<String, Container>>>,
+}
+
+impl ContainerManager {
+    pub fn new(clock: SharedClock, events: EventLog, latency: LatencyModel) -> ContainerManager {
+        ContainerManager {
+            images: ImageCache::new(clock.clone(), latency.clone()),
+            mounts: MountTable::new(clock.clone(), latency.clone()),
+            clock,
+            latency,
+            events,
+            inner: Arc::new(Mutex::new(BTreeMap::new())),
+        }
+    }
+
+    /// Bring up a container for `job` on `node`: image + dataset + boot.
+    /// Returns the running container; the clock has advanced by its
+    /// startup latency.
+    pub fn launch(
+        &self,
+        job: &str,
+        node: NodeId,
+        spec: &ImageSpec,
+        dataset: &str,
+        dataset_size_gb: f64,
+    ) -> Container {
+        let t0 = self.clock.now_ms();
+        let (image, image_outcome, image_ms) = self.images.ensure(spec);
+        let (mount_outcome, mount_ms) = self.mounts.mount(node, dataset, dataset_size_gb);
+        self.clock.sleep_ms(self.latency.boot_ms);
+        let startup_ms = self.clock.now_ms().saturating_sub(t0);
+        let container = Container {
+            id: format!("ctr-{}-{}", node.0, job),
+            job: job.to_string(),
+            node,
+            image,
+            dataset: dataset.to_string(),
+            state: ContainerState::Running,
+            startup_ms,
+            image_outcome,
+            mount_outcome,
+        };
+        self.events.info(
+            "container",
+            job,
+            format!(
+                "container up on {} in {} ms (image {:?} {} ms, dataset {:?} {} ms)",
+                node, startup_ms, image_outcome, image_ms, mount_outcome, mount_ms
+            ),
+        );
+        self.inner.lock().unwrap().insert(container.id.clone(), container.clone());
+        container
+    }
+
+    /// Stop a job's container and release its dataset reference.
+    pub fn stop(&self, container_id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(c) = inner.get_mut(container_id) {
+            if c.state == ContainerState::Running {
+                c.state = ContainerState::Stopped;
+                self.mounts.unmount(c.node, &c.dataset);
+                self.events.info("container", &c.job.clone(), "container stopped");
+                return true;
+            }
+        }
+        false
+    }
+
+    /// Stop whatever container is running `job`.
+    pub fn stop_job(&self, job: &str) -> bool {
+        let id = {
+            let inner = self.inner.lock().unwrap();
+            inner.values().find(|c| c.job == job && c.state == ContainerState::Running).map(|c| c.id.clone())
+        };
+        id.map(|id| self.stop(&id)).unwrap_or(false)
+    }
+
+    pub fn get(&self, container_id: &str) -> Option<Container> {
+        self.inner.lock().unwrap().get(container_id).cloned()
+    }
+
+    pub fn running(&self) -> Vec<Container> {
+        self.inner.lock().unwrap().values().filter(|c| c.state == ContainerState::Running).cloned().collect()
+    }
+
+    pub fn images(&self) -> &ImageCache {
+        &self.images
+    }
+
+    pub fn mounts(&self) -> &MountTable {
+        &self.mounts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    fn mgr() -> (ContainerManager, SharedClock) {
+        let (clock, _) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        (ContainerManager::new(clock.clone(), events, LatencyModel::fast()), clock)
+    }
+
+    #[test]
+    fn cold_start_pays_build_and_copy() {
+        let (m, clock) = mgr();
+        let c = m.launch("job-1", NodeId(0), &ImageSpec::tensorflow(), "mnist", 2.0);
+        assert_eq!(c.state, ContainerState::Running);
+        assert_eq!(c.image_outcome, BuildOutcome::Built);
+        assert_eq!(c.mount_outcome, MountOutcome::Copied);
+        // 45 (build) + 18 (copy 2GB) + 2 (boot) with the fast model.
+        assert_eq!(c.startup_ms, 65);
+        assert_eq!(clock.now_ms(), 65);
+    }
+
+    #[test]
+    fn warm_start_is_much_cheaper() {
+        let (m, _) = mgr();
+        m.launch("a", NodeId(0), &ImageSpec::tensorflow(), "mnist", 2.0);
+        let c = m.launch("b", NodeId(0), &ImageSpec::tensorflow(), "mnist", 2.0);
+        assert_eq!(c.image_outcome, BuildOutcome::Reused);
+        assert_eq!(c.mount_outcome, MountOutcome::Shared);
+        // 1 (reuse) + 1 (share) + 2 (boot).
+        assert_eq!(c.startup_ms, 4);
+    }
+
+    #[test]
+    fn same_image_other_node_still_copies_dataset() {
+        let (m, _) = mgr();
+        m.launch("a", NodeId(0), &ImageSpec::tensorflow(), "mnist", 1.0);
+        let c = m.launch("b", NodeId(1), &ImageSpec::tensorflow(), "mnist", 1.0);
+        // Image cache is registry-wide; dataset copies are per host.
+        assert_eq!(c.image_outcome, BuildOutcome::Reused);
+        assert_eq!(c.mount_outcome, MountOutcome::Copied);
+    }
+
+    #[test]
+    fn stop_releases_mount_ref() {
+        let (m, _) = mgr();
+        let c = m.launch("a", NodeId(0), &ImageSpec::pytorch(), "d", 1.0);
+        assert_eq!(m.mounts().refcount(NodeId(0), "d"), 1);
+        assert!(m.stop(&c.id));
+        assert!(!m.stop(&c.id)); // idempotent
+        assert_eq!(m.mounts().refcount(NodeId(0), "d"), 0);
+        assert!(m.running().is_empty());
+    }
+
+    #[test]
+    fn stop_by_job_name() {
+        let (m, _) = mgr();
+        m.launch("target", NodeId(1), &ImageSpec::pytorch(), "d", 0.5);
+        assert!(m.stop_job("target"));
+        assert!(!m.stop_job("target"));
+        assert!(!m.stop_job("missing"));
+    }
+
+    #[test]
+    fn mixed_frameworks_coexist_on_one_node() {
+        // The paper's PyTorch-py27 vs TF-py36 isolation example.
+        let (m, _) = mgr();
+        let a = m.launch("py27", NodeId(0), &ImageSpec::new("cuda", "torch", "2.7", &[]), "d", 0.1);
+        let b = m.launch("py36", NodeId(0), &ImageSpec::new("cuda", "tf", "3.6", &[]), "d", 0.1);
+        assert_ne!(a.image, b.image);
+        assert_eq!(m.running().len(), 2);
+        assert_eq!(m.images().cached_count(), 2);
+    }
+}

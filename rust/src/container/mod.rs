@@ -1,0 +1,77 @@
+//! Containerized ML system (paper §3.2/§3.3) — the Docker stand-in.
+//!
+//! "When a user sets up an environment, NSML automatically packages it
+//! into a ML container and copies the user's codes and datasets from the
+//! respective storage containers."
+//!
+//! Docker is unavailable offline, so this module models the container
+//! substrate with the granularity the paper's claims need:
+//!
+//! * [`ImageCache`] — §3.3 bottleneck 1: "We removed the first bottleneck
+//!   by *reusing existing docker images* if a user needs the same
+//!   environment." Cold builds pay a build latency; cache hits are nearly
+//!   free. (Experiment E7.)
+//! * [`MountTable`] — §3.3 bottleneck 2: "solved by *sharing dataset
+//!   directories* among all ML containers when they are physically
+//!   located at the same host machine." First mount on a host copies the
+//!   dataset; subsequent mounts bind-share it. (Experiment E8.)
+//! * [`ContainerManager`] — the ML-container lifecycle FSM wiring both
+//!   together; per-container isolation lets different sessions use
+//!   different frameworks on the same node, like the paper's
+//!   PyTorch-py27 / TF-py36 example.
+//!
+//! All latencies come from a configurable [`LatencyModel`] and advance the
+//! platform [`Clock`](crate::util::clock::Clock) (virtual in tests/benches,
+//! real in live runs), so the cold/warm asymmetries are measurable without
+//! real Docker.
+
+mod image;
+mod mount;
+mod lifecycle;
+
+pub use image::{BuildOutcome, ImageCache, ImageId, ImageSpec};
+pub use lifecycle::{Container, ContainerManager, ContainerState};
+pub use mount::{MountOutcome, MountTable};
+
+use crate::util::clock::Millis;
+
+/// Latency model for container operations (defaults approximate the real
+/// Docker numbers the paper's deployment would see).
+#[derive(Debug, Clone)]
+pub struct LatencyModel {
+    /// Building an image from a base + environment spec (cold).
+    pub image_build_ms: Millis,
+    /// Reusing a cached image (warm).
+    pub image_reuse_ms: Millis,
+    /// Copying a dataset onto a host, per GB.
+    pub dataset_copy_ms_per_gb: Millis,
+    /// Bind-mounting an already-present dataset directory.
+    pub dataset_share_ms: Millis,
+    /// Container create + boot once image and data are ready.
+    pub boot_ms: Millis,
+}
+
+impl Default for LatencyModel {
+    fn default() -> LatencyModel {
+        LatencyModel {
+            image_build_ms: 45_000,        // docker build of a DL env
+            image_reuse_ms: 400,           // image inspect + create
+            dataset_copy_ms_per_gb: 9_000, // ~110 MB/s effective copy
+            dataset_share_ms: 40,          // bind mount
+            boot_ms: 1_200,                // container start + runtime init
+        }
+    }
+}
+
+impl LatencyModel {
+    /// A fast model for unit tests (same ratios, 1000× smaller).
+    pub fn fast() -> LatencyModel {
+        LatencyModel {
+            image_build_ms: 45,
+            image_reuse_ms: 1,
+            dataset_copy_ms_per_gb: 9,
+            dataset_share_ms: 1,
+            boot_ms: 2,
+        }
+    }
+}

@@ -1,0 +1,206 @@
+//! Host-shared dataset mounts (paper §3.3, bottleneck 2).
+//!
+//! First container that needs a dataset on a host pays the copy from the
+//! storage container; later containers on the same host bind-share the
+//! directory. Reference counts track when a host copy becomes garbage.
+
+use super::LatencyModel;
+use crate::cluster::NodeId;
+use crate::util::clock::{Millis, SharedClock};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// How a dataset was made available to a container.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MountOutcome {
+    /// First use on this host: full copy from storage.
+    Copied,
+    /// Host already has it: bind mount.
+    Shared,
+}
+
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct MountStats {
+    pub copies: u64,
+    pub shares: u64,
+    pub copy_ms_total: Millis,
+    pub bytes_copied_gb: f64,
+}
+
+/// Cluster-wide mount bookkeeping.
+#[derive(Clone)]
+pub struct MountTable {
+    clock: SharedClock,
+    latency: LatencyModel,
+    inner: Arc<Mutex<TableState>>,
+}
+
+struct TableState {
+    /// (node, dataset) -> refcount.
+    mounts: BTreeMap<(NodeId, String), u32>,
+    stats: MountStats,
+    sharing_enabled: bool,
+}
+
+impl MountTable {
+    pub fn new(clock: SharedClock, latency: LatencyModel) -> MountTable {
+        MountTable {
+            clock,
+            latency,
+            inner: Arc::new(Mutex::new(TableState {
+                mounts: BTreeMap::new(),
+                stats: MountStats::default(),
+                sharing_enabled: true,
+            })),
+        }
+    }
+
+    /// Ablation switch (E8): disable sharing so every mount copies.
+    pub fn set_sharing(&self, enabled: bool) {
+        self.inner.lock().unwrap().sharing_enabled = enabled;
+    }
+
+    /// Mount `dataset` (of `size_gb`) for one container on `node`.
+    /// Advances the clock by the operation's latency.
+    pub fn mount(&self, node: NodeId, dataset: &str, size_gb: f64) -> (MountOutcome, Millis) {
+        let key = (node, dataset.to_string());
+        let (outcome, cost) = {
+            let mut st = self.inner.lock().unwrap();
+            // A host copy stays warm at refcount 0 until gc() evicts it.
+            let present = st.mounts.contains_key(&key);
+            if present && st.sharing_enabled {
+                *st.mounts.get_mut(&key).unwrap() += 1;
+                st.stats.shares += 1;
+                (MountOutcome::Shared, self.latency.dataset_share_ms)
+            } else {
+                *st.mounts.entry(key).or_insert(0) += 1;
+                let cost = (self.latency.dataset_copy_ms_per_gb as f64 * size_gb).ceil() as Millis;
+                st.stats.copies += 1;
+                st.stats.copy_ms_total += cost;
+                st.stats.bytes_copied_gb += size_gb;
+                (MountOutcome::Copied, cost)
+            }
+        };
+        self.clock.sleep_ms(cost);
+        (outcome, cost)
+    }
+
+    /// Release one container's reference.
+    pub fn unmount(&self, node: NodeId, dataset: &str) {
+        let mut st = self.inner.lock().unwrap();
+        if let Some(rc) = st.mounts.get_mut(&(node, dataset.to_string())) {
+            *rc = rc.saturating_sub(1);
+        }
+    }
+
+    /// Hosts where the dataset is currently resident (refcount > 0 keeps
+    /// the copy; refcount 0 is eligible for GC but still cached until
+    /// [`gc`](Self::gc) runs — matching how hosts keep directories warm).
+    pub fn resident_nodes(&self, dataset: &str) -> Vec<NodeId> {
+        self.inner
+            .lock()
+            .unwrap()
+            .mounts
+            .keys()
+            .filter(|(_, d)| d == dataset)
+            .map(|(n, _)| *n)
+            .collect()
+    }
+
+    pub fn refcount(&self, node: NodeId, dataset: &str) -> u32 {
+        self.inner.lock().unwrap().mounts.get(&(node, dataset.to_string())).copied().unwrap_or(0)
+    }
+
+    /// Evict zero-refcount host copies; returns how many were dropped.
+    pub fn gc(&self) -> usize {
+        let mut st = self.inner.lock().unwrap();
+        let before = st.mounts.len();
+        st.mounts.retain(|_, rc| *rc > 0);
+        before - st.mounts.len()
+    }
+
+    pub fn stats(&self) -> MountStats {
+        self.inner.lock().unwrap().stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    fn table() -> (MountTable, crate::util::clock::SharedClock) {
+        let (clock, _) = sim_clock();
+        (MountTable::new(clock.clone(), LatencyModel::fast()), clock)
+    }
+
+    #[test]
+    fn first_copy_then_share() {
+        let (t, clock) = table();
+        let (o1, c1) = t.mount(NodeId(0), "mnist", 2.0);
+        assert_eq!(o1, MountOutcome::Copied);
+        assert_eq!(c1, 18); // 9 ms/GB × 2 GB
+        let (o2, c2) = t.mount(NodeId(0), "mnist", 2.0);
+        assert_eq!(o2, MountOutcome::Shared);
+        assert_eq!(c2, 1);
+        assert_eq!(clock.now_ms(), 19);
+        assert_eq!(t.refcount(NodeId(0), "mnist"), 2);
+    }
+
+    #[test]
+    fn different_hosts_copy_independently() {
+        let (t, _) = table();
+        t.mount(NodeId(0), "d", 1.0);
+        let (o, _) = t.mount(NodeId(1), "d", 1.0);
+        assert_eq!(o, MountOutcome::Copied);
+        assert_eq!(t.resident_nodes("d").len(), 2);
+    }
+
+    #[test]
+    fn sharing_disabled_always_copies() {
+        let (t, _) = table();
+        t.set_sharing(false);
+        t.mount(NodeId(0), "d", 1.0);
+        let (o, _) = t.mount(NodeId(0), "d", 1.0);
+        assert_eq!(o, MountOutcome::Copied);
+        assert_eq!(t.stats().copies, 2);
+    }
+
+    #[test]
+    fn unmount_and_gc() {
+        let (t, _) = table();
+        t.mount(NodeId(0), "d", 1.0);
+        t.mount(NodeId(0), "d", 1.0);
+        t.unmount(NodeId(0), "d");
+        // Still resident (one ref + warm cache semantics).
+        assert_eq!(t.refcount(NodeId(0), "d"), 1);
+        assert_eq!(t.gc(), 0);
+        t.unmount(NodeId(0), "d");
+        assert_eq!(t.gc(), 1);
+        // After GC the next mount copies again.
+        let (o, _) = t.mount(NodeId(0), "d", 1.0);
+        assert_eq!(o, MountOutcome::Copied);
+    }
+
+    #[test]
+    fn warm_cache_survives_zero_refcount_until_gc() {
+        let (t, _) = table();
+        t.mount(NodeId(0), "d", 1.0);
+        t.unmount(NodeId(0), "d");
+        // No GC yet: mounting shares the warm copy.
+        let (o, _) = t.mount(NodeId(0), "d", 1.0);
+        assert_eq!(o, MountOutcome::Shared);
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let (t, _) = table();
+        t.mount(NodeId(0), "a", 1.0);
+        t.mount(NodeId(1), "a", 1.0);
+        t.mount(NodeId(0), "a", 1.0);
+        let s = t.stats();
+        assert_eq!(s.copies, 2);
+        assert_eq!(s.shares, 1);
+        assert!((s.bytes_copied_gb - 2.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,210 @@
+//! Procedural 12×12 digit raster images (the MNIST stand-in).
+//!
+//! Digits are drawn seven-segment style on a 12×12 grid, then jittered
+//! (shift, per-pixel noise, stroke intensity). Class structure is strong
+//! enough that the MLP reaches >90% accuracy in a few hundred steps, and
+//! the Fig.-4 demo ("add lines to a 1 and it becomes a 2") works because
+//! digit geometry is explicit.
+
+use super::DataGen;
+use crate::runtime::{Batch, TensorData};
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 12;
+pub const DIM: usize = SIDE * SIDE;
+pub const CLASSES: usize = 10;
+
+/// Segment layout (seven-segment on a 12x12 canvas):
+///  A: top bar, B: top-right col, C: bottom-right col, D: bottom bar,
+///  E: bottom-left col, F: top-left col, G: middle bar.
+const SEGMENTS: [[bool; 7]; 10] = [
+    // A      B      C      D      E      F      G
+    [true, true, true, true, true, true, false],    // 0
+    [false, true, true, false, false, false, false], // 1
+    [true, true, false, true, true, false, true],   // 2
+    [true, true, true, true, false, false, true],   // 3
+    [false, true, true, false, false, true, true],   // 4
+    [true, false, true, true, false, true, true],    // 5
+    [true, false, true, true, true, true, true],     // 6
+    [true, true, true, false, false, false, false],  // 7
+    [true, true, true, true, true, true, true],      // 8
+    [true, true, true, true, false, true, true],     // 9
+];
+
+/// Rasterize one digit with given offsets into a DIM-length buffer.
+pub fn draw_digit(digit: usize, dx: i32, dy: i32, intensity: f32, out: &mut [f32]) {
+    debug_assert_eq!(out.len(), DIM);
+    out.fill(0.0);
+    let seg = &SEGMENTS[digit % 10];
+    // Canvas box: columns 2..=9, rows 1..=10 (before jitter).
+    let mut set = |x: i32, y: i32, v: f32| {
+        let (x, y) = (x + dx, y + dy);
+        if (0..SIDE as i32).contains(&x) && (0..SIDE as i32).contains(&y) {
+            let idx = y as usize * SIDE + x as usize;
+            out[idx] = (out[idx] + v).min(1.0);
+        }
+    };
+    let (x0, x1, ytop, ymid, ybot) = (3, 8, 1, 5, 10);
+    if seg[0] {
+        for x in x0..=x1 {
+            set(x, ytop, intensity);
+        }
+    }
+    if seg[6] {
+        for x in x0..=x1 {
+            set(x, ymid, intensity);
+        }
+    }
+    if seg[3] {
+        for x in x0..=x1 {
+            set(x, ybot, intensity);
+        }
+    }
+    if seg[5] {
+        for y in ytop..=ymid {
+            set(x0, y, intensity);
+        }
+    }
+    if seg[4] {
+        for y in ymid..=ybot {
+            set(x0, y, intensity);
+        }
+    }
+    if seg[1] {
+        for y in ytop..=ymid {
+            set(x1, y, intensity);
+        }
+    }
+    if seg[2] {
+        for y in ymid..=ybot {
+            set(x1, y, intensity);
+        }
+    }
+}
+
+/// The MNIST-style generator.
+pub struct DigitGen {
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl DigitGen {
+    pub fn new(seed: u64) -> DigitGen {
+        let mut root = Rng::new(seed ^ 0xd161);
+        let eval_rng = root.fork(1);
+        DigitGen { rng: root, eval_rng }
+    }
+
+    fn draw_batch(rng: &mut Rng, n: usize) -> Batch {
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = Vec::with_capacity(n);
+        let mut img = vec![0.0f32; DIM];
+        for i in 0..n {
+            let digit = rng.below(CLASSES as u64) as usize;
+            let dx = rng.range(0, 3) as i32 - 1;
+            let dy = rng.range(0, 3) as i32 - 1;
+            let intensity = 0.75 + 0.25 * rng.f64() as f32;
+            draw_digit(digit, dx, dy, intensity, &mut img);
+            for (j, v) in img.iter().enumerate() {
+                let noise = (rng.f64() as f32 - 0.5) * 0.15;
+                xs[i * DIM + j] = (v + noise).clamp(0.0, 1.0);
+            }
+            ys.push(digit as i32);
+        }
+        Batch {
+            x: TensorData::f32(xs, &[n as i64, DIM as i64]),
+            y: TensorData::i32(ys, &[n as i64]),
+        }
+    }
+}
+
+impl DataGen for DigitGen {
+    fn name(&self) -> &'static str {
+        "mnist"
+    }
+
+    fn batch(&mut self, n: usize) -> Batch {
+        Self::draw_batch(&mut self.rng, n)
+    }
+
+    fn eval_batch(&mut self, n: usize) -> Batch {
+        Self::draw_batch(&mut self.eval_rng, n)
+    }
+}
+
+/// Render a digit image as ASCII art (the CLI demo, Fig. 4).
+pub fn ascii_digit(pixels: &[f32]) -> String {
+    let mut s = String::new();
+    for y in 0..SIDE {
+        for x in 0..SIDE {
+            let v = pixels[y * SIDE + x];
+            s.push(if v > 0.6 {
+                '#'
+            } else if v > 0.3 {
+                '+'
+            } else {
+                ' '
+            });
+        }
+        s.push('\n');
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes_and_ranges() {
+        let mut g = DigitGen::new(0);
+        let b = g.batch(16);
+        assert_eq!(b.x.shape(), &[16, DIM as i64]);
+        assert_eq!(b.y.shape(), &[16]);
+        let xs = b.x.as_f32().unwrap();
+        assert!(xs.iter().all(|&v| (0.0..=1.0).contains(&v)));
+        let ys = b.y.as_i32().unwrap();
+        assert!(ys.iter().all(|&y| (0..10).contains(&y)));
+    }
+
+    #[test]
+    fn digits_are_distinguishable() {
+        // Mean pixel distance between digit classes must be material.
+        let mut a = vec![0.0f32; DIM];
+        let mut b = vec![0.0f32; DIM];
+        draw_digit(1, 0, 0, 1.0, &mut a);
+        draw_digit(8, 0, 0, 1.0, &mut b);
+        let dist: f32 = a.iter().zip(&b).map(|(p, q)| (p - q).abs()).sum();
+        assert!(dist > 10.0, "distance {}", dist);
+    }
+
+    #[test]
+    fn one_plus_lines_is_two_shaped() {
+        // The Fig.4 interaction: a '1' plus the 2's extra segments equals
+        // the 2 raster (segments are additive geometry).
+        let mut one = vec![0.0f32; DIM];
+        let mut two = vec![0.0f32; DIM];
+        draw_digit(1, 0, 0, 1.0, &mut one);
+        draw_digit(2, 0, 0, 1.0, &mut two);
+        // Count of pixels active in 2 but not in 1 — the "lines to add".
+        let added = two.iter().zip(&one).filter(|(t, o)| **t > 0.5 && **o < 0.5).count();
+        assert!(added >= 10);
+    }
+
+    #[test]
+    fn eval_stream_differs_from_train() {
+        let mut g = DigitGen::new(3);
+        let train = g.batch(8);
+        let eval = g.eval_batch(8);
+        assert_ne!(train.x, eval.x);
+    }
+
+    #[test]
+    fn ascii_render_contains_strokes() {
+        let mut img = vec![0.0f32; DIM];
+        draw_digit(0, 0, 0, 1.0, &mut img);
+        let art = ascii_digit(&img);
+        assert_eq!(art.lines().count(), SIDE);
+        assert!(art.contains('#'));
+    }
+}

@@ -1,0 +1,162 @@
+//! Procedural 16×16 face sketches with 4 emotion classes
+//! (happy / sad / angry / neutral) — the facial-emotion corpus stand-in.
+
+use super::DataGen;
+use crate::runtime::{Batch, TensorData};
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 16;
+pub const DIM: usize = SIDE * SIDE;
+pub const CLASSES: usize = 4;
+pub const NAMES: [&str; 4] = ["happy", "sad", "angry", "neutral"];
+
+fn put(img: &mut [f32], x: i32, y: i32, v: f32) {
+    if (0..SIDE as i32).contains(&x) && (0..SIDE as i32).contains(&y) {
+        let i = y as usize * SIDE + x as usize;
+        img[i] = (img[i] + v).min(1.0);
+    }
+}
+
+/// Draw a face with the given emotion onto a DIM buffer.
+pub fn draw_face(emotion: usize, dx: i32, dy: i32, intensity: f32, out: &mut [f32]) {
+    out.fill(0.0);
+    // Face outline: circle of radius 6 centered (8,8).
+    let (cx, cy) = (8 + dx, 8 + dy);
+    for deg in 0..72 {
+        let a = deg as f32 * std::f32::consts::TAU / 72.0;
+        put(out, cx + (6.0 * a.cos()).round() as i32, cy + (6.0 * a.sin()).round() as i32, intensity * 0.8);
+    }
+    // Eyes.
+    let eye_y = cy - 2;
+    match emotion {
+        2 => {
+            // Angry: slanted brows + eyes.
+            for i in 0..2 {
+                put(out, cx - 3 + i, eye_y - 1 + i, intensity);
+                put(out, cx + 3 - i, eye_y - 1 + i, intensity);
+            }
+            put(out, cx - 2, eye_y + 1, intensity);
+            put(out, cx + 2, eye_y + 1, intensity);
+        }
+        _ => {
+            put(out, cx - 2, eye_y, intensity);
+            put(out, cx + 2, eye_y, intensity);
+        }
+    }
+    // Mouth: curvature encodes the emotion.
+    let mouth_y = cy + 3;
+    match emotion {
+        0 => {
+            // Happy: smile (ends up).
+            put(out, cx - 2, mouth_y - 1, intensity);
+            put(out, cx - 1, mouth_y, intensity);
+            put(out, cx, mouth_y, intensity);
+            put(out, cx + 1, mouth_y, intensity);
+            put(out, cx + 2, mouth_y - 1, intensity);
+        }
+        1 => {
+            // Sad: frown (ends down).
+            put(out, cx - 2, mouth_y + 1, intensity);
+            put(out, cx - 1, mouth_y, intensity);
+            put(out, cx, mouth_y, intensity);
+            put(out, cx + 1, mouth_y, intensity);
+            put(out, cx + 2, mouth_y + 1, intensity);
+        }
+        2 => {
+            // Angry: tight straight mouth + bared line.
+            for x in -2..=2 {
+                put(out, cx + x, mouth_y, intensity);
+                put(out, cx + x, mouth_y + 1, intensity * 0.6);
+            }
+        }
+        _ => {
+            // Neutral: straight line.
+            for x in -2..=2 {
+                put(out, cx + x, mouth_y, intensity);
+            }
+        }
+    }
+}
+
+/// The emotion-face generator.
+pub struct EmotionGen {
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl EmotionGen {
+    pub fn new(seed: u64) -> EmotionGen {
+        let mut root = Rng::new(seed ^ 0xe307);
+        let eval_rng = root.fork(1);
+        EmotionGen { rng: root, eval_rng }
+    }
+
+    fn draw_batch(rng: &mut Rng, n: usize) -> Batch {
+        let mut xs = vec![0.0f32; n * DIM];
+        let mut ys = Vec::with_capacity(n);
+        let mut img = vec![0.0f32; DIM];
+        for i in 0..n {
+            let emotion = rng.below(CLASSES as u64) as usize;
+            let dx = rng.range(0, 3) as i32 - 1;
+            let dy = rng.range(0, 3) as i32 - 1;
+            let intensity = 0.8 + 0.2 * rng.f64() as f32;
+            draw_face(emotion, dx, dy, intensity, &mut img);
+            for (j, v) in img.iter().enumerate() {
+                let noise = (rng.f64() as f32 - 0.5) * 0.12;
+                xs[i * DIM + j] = (v + noise).clamp(0.0, 1.0);
+            }
+            ys.push(emotion as i32);
+        }
+        Batch {
+            x: TensorData::f32(xs, &[n as i64, DIM as i64]),
+            y: TensorData::i32(ys, &[n as i64]),
+        }
+    }
+}
+
+impl DataGen for EmotionGen {
+    fn name(&self) -> &'static str {
+        "emotions"
+    }
+
+    fn batch(&mut self, n: usize) -> Batch {
+        Self::draw_batch(&mut self.rng, n)
+    }
+
+    fn eval_batch(&mut self, n: usize) -> Batch {
+        Self::draw_batch(&mut self.eval_rng, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn batch_shapes() {
+        let mut g = EmotionGen::new(0);
+        let b = g.batch(8);
+        assert_eq!(b.x.shape(), &[8, DIM as i64]);
+        assert!(b.y.as_i32().unwrap().iter().all(|&y| (0..4).contains(&y)));
+    }
+
+    #[test]
+    fn emotions_differ_in_mouth_region() {
+        let mut happy = vec![0.0f32; DIM];
+        let mut sad = vec![0.0f32; DIM];
+        draw_face(0, 0, 0, 1.0, &mut happy);
+        draw_face(1, 0, 0, 1.0, &mut sad);
+        let dist: f32 = happy.iter().zip(&sad).map(|(a, b)| (a - b).abs()).sum();
+        assert!(dist > 2.0, "happy vs sad distance {}", dist);
+    }
+
+    #[test]
+    fn all_emotions_draw_something() {
+        let mut img = vec![0.0f32; DIM];
+        for e in 0..CLASSES {
+            draw_face(e, 0, 0, 1.0, &mut img);
+            let mass: f32 = img.iter().sum();
+            assert!(mass > 5.0, "emotion {} mass {}", e, mass);
+        }
+    }
+}

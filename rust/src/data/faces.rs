@@ -1,0 +1,117 @@
+//! 12×12 face sketches for the GAN task ("real" samples the generator
+//! must learn to imitate). Reuses the emotion-face geometry at the GAN's
+//! image resolution; labels are dummies (unsupervised task).
+
+use super::DataGen;
+use crate::runtime::{Batch, TensorData};
+use crate::util::rng::Rng;
+
+pub const SIDE: usize = 12;
+pub const DIM: usize = SIDE * SIDE;
+pub const LATENT: usize = 32;
+
+fn put(img: &mut [f32], x: i32, y: i32, v: f32) {
+    if (0..SIDE as i32).contains(&x) && (0..SIDE as i32).contains(&y) {
+        let i = y as usize * SIDE + x as usize;
+        img[i] = (img[i] + v).min(1.0);
+    }
+}
+
+/// Draw a small face: outline + eyes + smile, with jitter.
+pub fn draw_small_face(dx: i32, dy: i32, intensity: f32, out: &mut [f32]) {
+    out.fill(0.0);
+    let (cx, cy) = (6 + dx, 6 + dy);
+    for deg in 0..48 {
+        let a = deg as f32 * std::f32::consts::TAU / 48.0;
+        put(out, cx + (4.5 * a.cos()).round() as i32, cy + (4.5 * a.sin()).round() as i32, intensity * 0.7);
+    }
+    put(out, cx - 2, cy - 1, intensity);
+    put(out, cx + 2, cy - 1, intensity);
+    put(out, cx - 1, cy + 2, intensity);
+    put(out, cx, cy + 2, intensity);
+    put(out, cx + 1, cy + 2, intensity);
+}
+
+/// Generator of "real" faces (and latent batches for `infer`).
+pub struct FaceGen {
+    rng: Rng,
+    eval_rng: Rng,
+}
+
+impl FaceGen {
+    pub fn new(seed: u64) -> FaceGen {
+        let mut root = Rng::new(seed ^ 0xfa7e);
+        let eval_rng = root.fork(1);
+        FaceGen { rng: root, eval_rng }
+    }
+
+    fn draw_batch(rng: &mut Rng, n: usize) -> Batch {
+        let mut xs = vec![0.0f32; n * DIM];
+        let ys = vec![0.0f32; n]; // unsupervised: dummy targets
+        let mut img = vec![0.0f32; DIM];
+        for i in 0..n {
+            let dx = rng.range(0, 3) as i32 - 1;
+            let dy = rng.range(0, 3) as i32 - 1;
+            draw_small_face(dx, dy, 0.85 + 0.15 * rng.f64() as f32, &mut img);
+            for (j, v) in img.iter().enumerate() {
+                let noise = (rng.f64() as f32 - 0.5) * 0.1;
+                xs[i * DIM + j] = (v + noise).clamp(0.0, 1.0);
+            }
+        }
+        Batch {
+            x: TensorData::f32(xs, &[n as i64, DIM as i64]),
+            y: TensorData::f32(ys, &[n as i64]),
+        }
+    }
+
+    /// A batch of latent vectors for generator sampling (`infer`).
+    pub fn latents(&mut self, n: usize) -> TensorData {
+        let data: Vec<f32> = (0..n * LATENT).map(|_| self.rng.gauss(0.0, 1.0) as f32).collect();
+        TensorData::f32(data, &[n as i64, LATENT as i64])
+    }
+}
+
+impl DataGen for FaceGen {
+    fn name(&self) -> &'static str {
+        "faces"
+    }
+
+    fn batch(&mut self, n: usize) -> Batch {
+        Self::draw_batch(&mut self.rng, n)
+    }
+
+    fn eval_batch(&mut self, n: usize) -> Batch {
+        Self::draw_batch(&mut self.eval_rng, n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn faces_have_mass_and_structure() {
+        let mut g = FaceGen::new(0);
+        let b = g.batch(4);
+        let xs = b.x.as_f32().unwrap();
+        let mass: f32 = xs[..DIM].iter().sum();
+        assert!(mass > 3.0 && mass < 80.0, "mass {}", mass);
+    }
+
+    #[test]
+    fn latents_standard_normal_ish() {
+        let mut g = FaceGen::new(1);
+        let z = g.latents(64);
+        assert_eq!(z.shape(), &[64, LATENT as i64]);
+        let data = z.as_f32().unwrap();
+        let mean: f32 = data.iter().sum::<f32>() / data.len() as f32;
+        assert!(mean.abs() < 0.1, "mean {}", mean);
+    }
+
+    #[test]
+    fn dummy_labels_are_f32_zeros() {
+        let mut g = FaceGen::new(2);
+        let b = g.batch(3);
+        assert_eq!(b.y.as_f32().unwrap(), &[0.0, 0.0, 0.0]);
+    }
+}

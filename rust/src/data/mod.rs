@@ -1,0 +1,145 @@
+//! Synthetic dataset generators — the stand-in for the real corpora the
+//! paper's alpha tests used (MNIST, face photos, movie reviews).
+//!
+//! No network access exists in this environment, so each generator
+//! produces *learnable structure* procedurally and deterministically from
+//! a seed: the models in `python/compile/models.py` reach high accuracy /
+//! low loss on them, which is what the platform experiments need
+//! (leaderboards, AutoML, learning curves — Fig. 3).
+//!
+//! Generators also register themselves as platform datasets
+//! ([`register_all`]) so sessions mount them through the same
+//! storage-container path real uploads would use.
+
+pub mod digits;
+pub mod emotion;
+pub mod movie;
+pub mod faces;
+
+pub use digits::DigitGen;
+pub use emotion::EmotionGen;
+pub use faces::FaceGen;
+pub use movie::MovieGen;
+
+use crate::runtime::Batch;
+use crate::storage::DatasetRegistry;
+use anyhow::Result;
+
+/// A batched synthetic data source.
+pub trait DataGen {
+    /// Dataset name (matches the model's expected dataset).
+    fn name(&self) -> &'static str;
+    /// Draw the next training batch of `n` examples.
+    fn batch(&mut self, n: usize) -> Batch;
+    /// A held-out evaluation batch (fixed per seed).
+    fn eval_batch(&mut self, n: usize) -> Batch;
+}
+
+/// Construct the generator a given model trains on.
+pub fn generator_for(model: &str, seed: u64) -> Option<Box<dyn DataGen>> {
+    match model {
+        "mnist_mlp" => Some(Box::new(DigitGen::new(seed))),
+        "emotion_cnn" => Some(Box::new(EmotionGen::new(seed))),
+        "movie_rnn" => Some(Box::new(MovieGen::new(seed))),
+        "face_gan" => Some(Box::new(FaceGen::new(seed))),
+        _ => None,
+    }
+}
+
+/// Dataset name each model consumes (paper: `nsml run -d <dataset>`).
+pub fn dataset_for(model: &str) -> &'static str {
+    match model {
+        "mnist_mlp" => "mnist",
+        "emotion_cnn" => "emotions",
+        "movie_rnn" => "movie-reviews",
+        "face_gan" => "faces",
+        _ => "default",
+    }
+}
+
+/// Model that trains on a dataset (inverse of [`dataset_for`]).
+pub fn model_for_dataset(dataset: &str) -> Option<&'static str> {
+    match dataset {
+        "mnist" => Some("mnist_mlp"),
+        "emotions" => Some("emotion_cnn"),
+        "movie-reviews" => Some("movie_rnn"),
+        "faces" => Some("face_gan"),
+        _ => None,
+    }
+}
+
+/// Register the four alpha-test datasets in the platform registry
+/// (a small serialized sample + metadata, like a real `nsml dataset push`).
+pub fn register_all(registry: &DatasetRegistry, owner: &str) -> Result<()> {
+    let specs: &[(&str, &str, f64)] = &[
+        ("mnist", "Procedural 12x12 digit raster images, 10 classes", 0.7),
+        ("emotions", "Procedural 16x16 face sketches, 4 emotions", 1.2),
+        ("movie-reviews", "Token sequences with sentiment lexicon, rating 0-10", 0.4),
+        ("faces", "Procedural 12x12 face sketches for GAN training", 0.9),
+    ];
+    for (name, desc, size_gb) in specs {
+        let model = model_for_dataset(name).unwrap();
+        let mut gen = generator_for(model, 0).unwrap();
+        let sample = gen.batch(8);
+        let bytes = sample_bytes(&sample);
+        registry.push(name, owner, true, &[("sample.bin", &bytes)], *size_gb, desc)?;
+    }
+    Ok(())
+}
+
+fn sample_bytes(b: &Batch) -> Vec<u8> {
+    let mut out = Vec::new();
+    match &b.x {
+        crate::runtime::TensorData::F32 { data, .. } => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+        crate::runtime::TensorData::I32 { data, .. } => {
+            for v in data {
+                out.extend_from_slice(&v.to_le_bytes());
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::ObjectStore;
+
+    #[test]
+    fn generator_registry_complete() {
+        for model in ["mnist_mlp", "emotion_cnn", "movie_rnn", "face_gan"] {
+            let mut g = generator_for(model, 1).unwrap();
+            let b = g.batch(4);
+            assert!(!b.x.is_empty(), "{}", model);
+            assert_eq!(dataset_for(model), g.name());
+            assert_eq!(model_for_dataset(g.name()), Some(model));
+        }
+        assert!(generator_for("unknown", 1).is_none());
+    }
+
+    #[test]
+    fn register_all_populates_registry() {
+        let reg = DatasetRegistry::new(ObjectStore::memory());
+        register_all(&reg, "nsml").unwrap();
+        let names: Vec<String> = reg.list("anyone").into_iter().map(|d| d.name).collect();
+        assert_eq!(names, vec!["emotions", "faces", "mnist", "movie-reviews"]);
+        let d = reg.get("mnist", "anyone").unwrap();
+        assert!(d.files.contains_key("sample.bin"));
+        assert!(d.nominal_size_gb > 0.0);
+    }
+
+    #[test]
+    fn generators_deterministic_per_seed() {
+        for model in ["mnist_mlp", "emotion_cnn", "movie_rnn", "face_gan"] {
+            let mut a = generator_for(model, 9).unwrap();
+            let mut b = generator_for(model, 9).unwrap();
+            assert_eq!(a.batch(4).x, b.batch(4).x, "{}", model);
+            let mut c = generator_for(model, 10).unwrap();
+            assert_ne!(a.batch(4).x, c.batch(4).x, "{}", model);
+        }
+    }
+}

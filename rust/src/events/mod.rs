@@ -1,0 +1,194 @@
+//! Platform event log: structured, timestamped events from every subsystem.
+//!
+//! NSML surfaces "what happened to my job" through logs and the web UI;
+//! this module is the shared spine: subsystems emit [`Event`]s into an
+//! [`EventLog`], the CLI (`nsml logs`) and web UI read them back.
+
+use crate::util::clock::{Millis, SharedClock};
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Event severity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Level {
+    Debug,
+    Info,
+    Warn,
+    Error,
+}
+
+impl Level {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Level::Debug => "DEBUG",
+            Level::Info => "INFO",
+            Level::Warn => "WARN",
+            Level::Error => "ERROR",
+        }
+    }
+}
+
+/// A structured platform event.
+#[derive(Debug, Clone)]
+pub struct Event {
+    pub at_ms: Millis,
+    pub level: Level,
+    /// Emitting subsystem, e.g. "scheduler", "session".
+    pub source: String,
+    /// Correlation key, e.g. a session or job id ("" if none).
+    pub subject: String,
+    pub message: String,
+}
+
+impl Event {
+    pub fn render(&self) -> String {
+        if self.subject.is_empty() {
+            format!("[{:>8}ms {:<5} {}] {}", self.at_ms, self.level.as_str(), self.source, self.message)
+        } else {
+            format!(
+                "[{:>8}ms {:<5} {}] ({}) {}",
+                self.at_ms,
+                self.level.as_str(),
+                self.source,
+                self.subject,
+                self.message
+            )
+        }
+    }
+}
+
+/// Bounded in-memory event log, shareable across threads.
+#[derive(Clone)]
+pub struct EventLog {
+    inner: Arc<Mutex<VecDeque<Event>>>,
+    clock: SharedClock,
+    capacity: usize,
+    echo: bool,
+}
+
+impl EventLog {
+    pub fn new(clock: SharedClock) -> EventLog {
+        EventLog {
+            inner: Arc::new(Mutex::new(VecDeque::new())),
+            clock,
+            capacity: 100_000,
+            echo: std::env::var("NSML_LOG").is_ok(),
+        }
+    }
+
+    /// Echo events to stderr as they arrive (live `nsml logs -f` feel).
+    pub fn with_echo(mut self, echo: bool) -> Self {
+        self.echo = echo;
+        self
+    }
+
+    pub fn emit(&self, level: Level, source: &str, subject: &str, message: impl Into<String>) {
+        let e = Event {
+            at_ms: self.clock.now_ms(),
+            level,
+            source: source.to_string(),
+            subject: subject.to_string(),
+            message: message.into(),
+        };
+        if self.echo {
+            eprintln!("{}", e.render());
+        }
+        let mut q = self.inner.lock().unwrap();
+        if q.len() >= self.capacity {
+            q.pop_front();
+        }
+        q.push_back(e);
+    }
+
+    pub fn info(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Info, source, subject, msg);
+    }
+
+    pub fn warn(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Warn, source, subject, msg);
+    }
+
+    pub fn error(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Error, source, subject, msg);
+    }
+
+    pub fn debug(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Debug, source, subject, msg);
+    }
+
+    /// All events (cloned snapshot).
+    pub fn all(&self) -> Vec<Event> {
+        self.inner.lock().unwrap().iter().cloned().collect()
+    }
+
+    /// Events whose subject matches exactly.
+    pub fn for_subject(&self, subject: &str) -> Vec<Event> {
+        self.inner.lock().unwrap().iter().filter(|e| e.subject == subject).cloned().collect()
+    }
+
+    /// Events from a given source at or above a level.
+    pub fn query(&self, source: Option<&str>, min_level: Level) -> Vec<Event> {
+        self.inner
+            .lock()
+            .unwrap()
+            .iter()
+            .filter(|e| e.level >= min_level && source.map_or(true, |s| e.source == s))
+            .cloned()
+            .collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    #[test]
+    fn emit_and_query() {
+        let (clock, sim) = sim_clock();
+        let log = EventLog::new(clock).with_echo(false);
+        log.info("scheduler", "job-1", "queued");
+        sim.advance(10);
+        log.warn("cluster", "node-2", "heartbeat late");
+        log.error("scheduler", "job-1", "failed");
+
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.for_subject("job-1").len(), 2);
+        let warns = log.query(None, Level::Warn);
+        assert_eq!(warns.len(), 2);
+        assert_eq!(log.query(Some("cluster"), Level::Debug).len(), 1);
+        assert_eq!(warns[0].at_ms, 10);
+    }
+
+    #[test]
+    fn render_format() {
+        let (clock, _) = sim_clock();
+        let log = EventLog::new(clock).with_echo(false);
+        log.info("session", "kim/mnist/1", "started");
+        let e = &log.all()[0];
+        let s = e.render();
+        assert!(s.contains("INFO"));
+        assert!(s.contains("kim/mnist/1"));
+        assert!(s.contains("started"));
+    }
+
+    #[test]
+    fn bounded_capacity() {
+        let (clock, _) = sim_clock();
+        let mut log = EventLog::new(clock).with_echo(false);
+        log.capacity = 10;
+        for i in 0..25 {
+            log.info("x", "", format!("{}", i));
+        }
+        assert_eq!(log.len(), 10);
+        assert_eq!(log.all()[0].message, "15");
+    }
+}

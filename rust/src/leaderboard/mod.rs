@@ -1,0 +1,215 @@
+//! Kaggle-like per-dataset leaderboard (§3.1, §3.4).
+//!
+//! "Storage containers … store the performance of all models trained with
+//! the respectively provided dataset as well as display the results in a
+//! leaderboard to make clear which model performed best."
+
+use crate::util::clock::Millis;
+use crate::util::table::{fnum, Table};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// One scored session on a dataset's board.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Submission {
+    pub session: String,
+    pub user: String,
+    pub model: String,
+    pub metric_name: String,
+    pub value: f64,
+    pub step: u64,
+    pub at_ms: Millis,
+}
+
+#[derive(Debug, Default)]
+struct Board {
+    metric_name: String,
+    lower_is_better: bool,
+    /// Best submission per session (resubmits keep the better score).
+    entries: BTreeMap<String, Submission>,
+}
+
+/// All leaderboards, keyed by dataset.
+#[derive(Clone, Default)]
+pub struct Leaderboard {
+    inner: Arc<Mutex<BTreeMap<String, Board>>>,
+}
+
+impl Leaderboard {
+    pub fn new() -> Leaderboard {
+        Leaderboard::default()
+    }
+
+    /// Declare a dataset's board (idempotent).
+    pub fn ensure_board(&self, dataset: &str, metric_name: &str, lower_is_better: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.entry(dataset.to_string()).or_insert_with(|| Board {
+            metric_name: metric_name.to_string(),
+            lower_is_better,
+            entries: BTreeMap::new(),
+        });
+    }
+
+    /// Record a result. Returns the session's new rank (1-based), or None
+    /// if the board does not exist.
+    pub fn submit(&self, dataset: &str, sub: Submission) -> Option<usize> {
+        let mut inner = self.inner.lock().unwrap();
+        let board = inner.get_mut(dataset)?;
+        let keep_new = match board.entries.get(&sub.session) {
+            None => true,
+            Some(old) => {
+                if board.lower_is_better {
+                    sub.value < old.value
+                } else {
+                    sub.value > old.value
+                }
+            }
+        };
+        if keep_new {
+            board.entries.insert(sub.session.clone(), sub.clone());
+        }
+        drop(inner);
+        self.rank_of(dataset, &sub.session)
+    }
+
+    fn sorted(board: &Board) -> Vec<Submission> {
+        let mut v: Vec<Submission> = board.entries.values().cloned().collect();
+        v.sort_by(|a, b| {
+            let ord = a.value.partial_cmp(&b.value).unwrap_or(std::cmp::Ordering::Equal);
+            let ord = if board.lower_is_better { ord } else { ord.reverse() };
+            // Tie-break: earlier submission wins, then session id.
+            ord.then(a.at_ms.cmp(&b.at_ms)).then(a.session.cmp(&b.session))
+        });
+        v
+    }
+
+    /// Top-k submissions in rank order.
+    pub fn top(&self, dataset: &str, k: usize) -> Vec<Submission> {
+        let inner = self.inner.lock().unwrap();
+        match inner.get(dataset) {
+            Some(board) => Self::sorted(board).into_iter().take(k).collect(),
+            None => Vec::new(),
+        }
+    }
+
+    /// Current best entry.
+    pub fn best(&self, dataset: &str) -> Option<Submission> {
+        self.top(dataset, 1).into_iter().next()
+    }
+
+    /// 1-based rank of a session.
+    pub fn rank_of(&self, dataset: &str, session: &str) -> Option<usize> {
+        let inner = self.inner.lock().unwrap();
+        let board = inner.get(dataset)?;
+        Self::sorted(board).iter().position(|s| s.session == session).map(|p| p + 1)
+    }
+
+    pub fn datasets(&self) -> Vec<String> {
+        self.inner.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn board_len(&self, dataset: &str) -> usize {
+        self.inner.lock().unwrap().get(dataset).map(|b| b.entries.len()).unwrap_or(0)
+    }
+
+    /// Render as `nsml dataset board DATASET` does (Fig. 2).
+    pub fn render(&self, dataset: &str) -> String {
+        let inner = self.inner.lock().unwrap();
+        let Some(board) = inner.get(dataset) else {
+            return format!("no leaderboard for dataset '{}'\n", dataset);
+        };
+        let dir = if board.lower_is_better { "↓" } else { "↑" };
+        let mut t = Table::new(&["RANK", "SESSION", "USER", "MODEL", &format!("{} {}", board.metric_name.to_uppercase(), dir), "STEP"])
+            .right(&[0, 4, 5]);
+        for (i, s) in Self::sorted(board).iter().enumerate() {
+            t.row(&[
+                format!("{}", i + 1),
+                s.session.clone(),
+                s.user.clone(),
+                s.model.clone(),
+                fnum(s.value),
+                format!("{}", s.step),
+            ]);
+        }
+        format!("== leaderboard: {} ==\n{}", dataset, t.render())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sub(session: &str, value: f64, at: Millis) -> Submission {
+        Submission {
+            session: session.to_string(),
+            user: "kim".to_string(),
+            model: "mnist_mlp".to_string(),
+            metric_name: "accuracy".to_string(),
+            value,
+            step: 100,
+            at_ms: at,
+        }
+    }
+
+    #[test]
+    fn ranking_higher_is_better() {
+        let lb = Leaderboard::new();
+        lb.ensure_board("mnist", "accuracy", false);
+        assert_eq!(lb.submit("mnist", sub("a", 0.8, 1)), Some(1));
+        assert_eq!(lb.submit("mnist", sub("b", 0.9, 2)), Some(1));
+        assert_eq!(lb.rank_of("mnist", "a"), Some(2));
+        assert_eq!(lb.best("mnist").unwrap().session, "b");
+    }
+
+    #[test]
+    fn ranking_lower_is_better() {
+        let lb = Leaderboard::new();
+        lb.ensure_board("movie-reviews", "rmse", true);
+        lb.submit("movie-reviews", sub("a", 1.5, 1));
+        lb.submit("movie-reviews", sub("b", 0.9, 2));
+        assert_eq!(lb.best("movie-reviews").unwrap().session, "b");
+    }
+
+    #[test]
+    fn resubmit_keeps_best() {
+        let lb = Leaderboard::new();
+        lb.ensure_board("mnist", "accuracy", false);
+        lb.submit("mnist", sub("a", 0.7, 1));
+        lb.submit("mnist", sub("a", 0.9, 2));
+        lb.submit("mnist", sub("a", 0.8, 3)); // worse: ignored
+        assert_eq!(lb.board_len("mnist"), 1);
+        assert!((lb.best("mnist").unwrap().value - 0.9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn tie_break_earlier_submission() {
+        let lb = Leaderboard::new();
+        lb.ensure_board("mnist", "accuracy", false);
+        lb.submit("mnist", sub("late", 0.9, 10));
+        lb.submit("mnist", sub("early", 0.9, 5));
+        assert_eq!(lb.top("mnist", 2)[0].session, "early");
+    }
+
+    #[test]
+    fn unknown_board() {
+        let lb = Leaderboard::new();
+        assert_eq!(lb.submit("nope", sub("a", 1.0, 1)), None);
+        assert!(lb.top("nope", 5).is_empty());
+        assert!(lb.render("nope").contains("no leaderboard"));
+    }
+
+    #[test]
+    fn render_contains_ranks() {
+        let lb = Leaderboard::new();
+        lb.ensure_board("mnist", "accuracy", false);
+        lb.submit("mnist", sub("kim/mnist/1", 0.91, 1));
+        lb.submit("mnist", sub("kim/mnist/2", 0.85, 2));
+        let out = lb.render("mnist");
+        assert!(out.contains("RANK"));
+        assert!(out.contains("kim/mnist/1"));
+        assert!(out.contains("ACCURACY ↑"));
+        let lines: Vec<&str> = out.lines().collect();
+        // Rank 1 row lists the higher accuracy.
+        assert!(lines[3].contains("0.91"));
+    }
+}

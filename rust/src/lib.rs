@@ -1,0 +1,37 @@
+//! # NSML — NAVER Smart Machine Learning (reproduction)
+//!
+//! A full reimplementation of the NSML machine-learning platform
+//! (Sung et al., 2017) as a three-layer Rust + JAX + Pallas stack:
+//!
+//! * **Layer 3 (this crate)** — the platform itself: a simulated GPU
+//!   cluster, a master–slave scheduler with leader election, a
+//!   containerized execution substrate with image reuse and shared
+//!   dataset mounts, a content-addressed object store, training-session
+//!   management with pause/resume and in-training hyperparameter edits,
+//!   a per-dataset leaderboard, AutoML search, a CLI, and a web UI.
+//! * **Layer 2** — the four alpha-test models (MNIST MLP, emotion CNN,
+//!   movie-rating RNN, face GAN) written in JAX and AOT-lowered to HLO
+//!   text at build time (`python/compile/`).
+//! * **Layer 1** — Pallas kernels (fused linear, conv2d, softmax-xent)
+//!   called by the L2 models and validated against pure-jnp oracles.
+//!
+//! Python never runs at platform runtime: [`runtime`] loads
+//! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate) and
+//! executes them from the session hot path.
+//!
+//! Start with [`api::NsmlPlatform`] or the `nsml` binary.
+
+pub mod util;
+pub mod events;
+pub mod cluster;
+pub mod scheduler;
+pub mod container;
+pub mod storage;
+pub mod runtime;
+pub mod data;
+pub mod session;
+pub mod leaderboard;
+pub mod automl;
+pub mod api;
+pub mod web;
+pub mod cli;

@@ -1,0 +1,8 @@
+//! `nsml` — the NSML platform CLI (leader entrypoint).
+//!
+//! See `nsml --help` for commands; `rust/src/cli/` implements them.
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(nsml::cli::main(&args));
+}

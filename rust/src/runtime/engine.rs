@@ -1,0 +1,151 @@
+//! PJRT engine: CPU client + executable compile cache.
+
+use super::manifest::Manifest;
+use anyhow::{Context, Result};
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::Instant;
+
+/// Compile statistics (exposed in `nsml cluster` / benches).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct CompileStats {
+    pub compiles: u64,
+    pub cache_hits: u64,
+    pub compile_ms_total: f64,
+}
+
+/// One process-wide PJRT client + cache of compiled executables, keyed by
+/// artifact path. Single-threaded by design (see module docs): the
+/// platform funnels model execution through the session runner.
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<CompileStats>,
+}
+
+impl Engine {
+    /// Create a CPU engine over an artifacts directory.
+    pub fn new(artifacts_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(artifacts_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            cache: RefCell::new(BTreeMap::new()),
+            stats: RefCell::new(CompileStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn platform_name(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile (or fetch cached) the executable for a model entry.
+    pub fn executable(&self, model: &str, entry: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        let path = self.manifest.artifact_path(model, entry)?;
+        let key = path.to_string_lossy().to_string();
+        if let Some(exe) = self.cache.borrow().get(&key) {
+            self.stats.borrow_mut().cache_hits += 1;
+            return Ok(exe.clone());
+        }
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&key)
+            .with_context(|| format!("parsing HLO text {}", key))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {}", key))?);
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_ms_total += t0.elapsed().as_secs_f64() * 1000.0;
+        }
+        self.cache.borrow_mut().insert(key, exe.clone());
+        Ok(exe)
+    }
+
+    /// Execute an entry with literal inputs; outputs are the decomposed
+    /// elements of the root tuple (aot.py lowers with return_tuple=True).
+    pub fn run(&self, model: &str, entry: &str, args: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let exe = self.executable(model, entry)?;
+        let result = exe.execute::<xla::Literal>(args)?;
+        let tuple = result[0][0].to_literal_sync()?;
+        Ok(tuple.to_tuple()?)
+    }
+
+    /// Warm the cache for every entry of a model (container start does
+    /// this so the first training step is not a compile stall).
+    pub fn warmup(&self, model: &str) -> Result<usize> {
+        let entries: Vec<String> = self.manifest.model(model)?.artifacts.keys().cloned().collect();
+        for e in &entries {
+            self.executable(model, e)?;
+        }
+        Ok(entries.len())
+    }
+
+    pub fn stats(&self) -> CompileStats {
+        *self.stats.borrow()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn artifacts_dir() -> Option<PathBuf> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then_some(dir)
+    }
+
+    #[test]
+    fn engine_loads_and_runs_init() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        assert!(engine.platform_name().to_lowercase().contains("cpu") || !engine.platform_name().is_empty());
+        let seed = xla::Literal::scalar(7i32);
+        let params = engine.run("mnist_mlp", "init", &[seed]).unwrap();
+        let mm = engine.manifest().model("mnist_mlp").unwrap();
+        assert_eq!(params.len(), mm.param_shapes.len());
+        // First weight matrix has the declared number of elements.
+        let w1: Vec<f32> = params[0].to_vec().unwrap();
+        assert_eq!(w1.len() as i64, mm.param_shapes[0].iter().product::<i64>());
+        // Glorot init: nonzero, small-ish.
+        assert!(w1.iter().any(|&v| v != 0.0));
+        assert!(w1.iter().all(|&v| v.abs() < 1.0));
+    }
+
+    #[test]
+    fn compile_cache_hits() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        engine.executable("mnist_mlp", "infer").unwrap();
+        engine.executable("mnist_mlp", "infer").unwrap();
+        let s = engine.stats();
+        assert_eq!(s.compiles, 1);
+        assert_eq!(s.cache_hits, 1);
+        assert!(s.compile_ms_total > 0.0);
+    }
+
+    #[test]
+    fn unknown_model_errors() {
+        let Some(dir) = artifacts_dir() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let engine = Engine::new(&dir).unwrap();
+        assert!(engine.executable("nope", "init").is_err());
+        assert!(engine.executable("mnist_mlp", "nope").is_err());
+    }
+}

@@ -1,0 +1,187 @@
+//! Parse `artifacts/manifest.json` (written by `python/compile/aot.py`).
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+/// Manifest for one model's AOT artifacts.
+#[derive(Debug, Clone)]
+pub struct ModelManifest {
+    pub name: String,
+    pub param_shapes: Vec<Vec<i64>>,
+    pub param_count: usize,
+    pub batch: usize,
+    pub x_shape: Vec<i64>,
+    pub x_dtype: String,
+    pub y_shape: Vec<i64>,
+    pub y_dtype: String,
+    pub infer_x_shape: Vec<i64>,
+    pub infer_x_dtype: String,
+    pub scan_k: usize,
+    pub metric_name: String,
+    pub lower_is_better: bool,
+    pub description: String,
+    pub default_lr: f64,
+    /// entry name -> artifact file name.
+    pub artifacts: BTreeMap<String, String>,
+}
+
+/// The whole manifest: model name -> [`ModelManifest`].
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub models: BTreeMap<String, ModelManifest>,
+}
+
+fn shape_list(j: &Json) -> Result<Vec<i64>> {
+    Ok(j.as_arr()
+        .ok_or_else(|| anyhow!("expected shape array"))?
+        .iter()
+        .map(|d| d.as_i64().unwrap_or(0))
+        .collect())
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        Self::parse_str(&text, dir)
+    }
+
+    /// Parse manifest text (exposed for tests).
+    pub fn parse_str(text: &str, dir: PathBuf) -> Result<Manifest> {
+        let j = parse(text).map_err(|e| anyhow!("manifest json: {}", e))?;
+        let format = j.get("format").and_then(Json::as_i64).unwrap_or(0);
+        if format != 1 {
+            return Err(anyhow!("unsupported manifest format {}", format));
+        }
+        let mut models = BTreeMap::new();
+        let model_obj = j.get("models").and_then(Json::as_obj).ok_or_else(|| anyhow!("no models"))?;
+        for (name, frag) in model_obj {
+            let get = |k: &str| frag.get(k).ok_or_else(|| anyhow!("model {}: missing '{}'", name, k));
+            let mut artifacts = BTreeMap::new();
+            for (entry, fname) in get("artifacts")?.as_obj().ok_or_else(|| anyhow!("artifacts not obj"))? {
+                artifacts.insert(entry.clone(), fname.as_str().unwrap_or_default().to_string());
+            }
+            let param_shapes = get("param_shapes")?
+                .as_arr()
+                .ok_or_else(|| anyhow!("param_shapes not array"))?
+                .iter()
+                .map(shape_list)
+                .collect::<Result<Vec<_>>>()?;
+            models.insert(
+                name.clone(),
+                ModelManifest {
+                    name: name.clone(),
+                    param_shapes,
+                    param_count: get("param_count")?.as_usize().unwrap_or(0),
+                    batch: get("batch")?.as_usize().unwrap_or(0),
+                    x_shape: shape_list(get("x_shape")?)?,
+                    x_dtype: get("x_dtype")?.as_str().unwrap_or("f32").to_string(),
+                    y_shape: shape_list(get("y_shape")?)?,
+                    y_dtype: get("y_dtype")?.as_str().unwrap_or("f32").to_string(),
+                    infer_x_shape: shape_list(get("infer_x_shape")?)?,
+                    infer_x_dtype: get("infer_x_dtype")?.as_str().unwrap_or("f32").to_string(),
+                    scan_k: get("scan_k")?.as_usize().unwrap_or(1),
+                    metric_name: get("metric_name")?.as_str().unwrap_or("loss").to_string(),
+                    lower_is_better: get("lower_is_better")?.as_bool().unwrap_or(true),
+                    description: frag.get("description").and_then(Json::as_str).unwrap_or("").to_string(),
+                    default_lr: frag
+                        .at(&["hparam_defaults", "lr"])
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.1),
+                    artifacts,
+                },
+            );
+        }
+        Ok(Manifest { dir, models })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelManifest> {
+        self.models.get(name).ok_or_else(|| {
+            anyhow!("model '{}' not in manifest (have: {:?})", name, self.models.keys().collect::<Vec<_>>())
+        })
+    }
+
+    /// Absolute path of one model's artifact.
+    pub fn artifact_path(&self, model: &str, entry: &str) -> Result<PathBuf> {
+        let m = self.model(model)?;
+        let fname = m
+            .artifacts
+            .get(entry)
+            .ok_or_else(|| anyhow!("model '{}' has no entry '{}'", model, entry))?;
+        Ok(self.dir.join(fname))
+    }
+
+    pub fn model_names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "format": 1,
+      "models": {
+        "toy": {
+          "param_shapes": [[4, 2], [2]],
+          "param_count": 10,
+          "batch": 8,
+          "x_shape": [8, 4], "x_dtype": "f32",
+          "y_shape": [8], "y_dtype": "i32",
+          "infer_x_shape": [8, 4], "infer_x_dtype": "f32",
+          "scan_k": 4,
+          "metric_name": "accuracy",
+          "lower_is_better": false,
+          "description": "toy",
+          "hparam_defaults": {"lr": 0.5},
+          "artifacts": {"init": "toy.init.hlo.txt", "train_step": "toy.train_step.hlo.txt"}
+        }
+      }
+    }"#;
+
+    #[test]
+    fn parse_sample() {
+        let m = Manifest::parse_str(SAMPLE, PathBuf::from("/tmp/a")).unwrap();
+        let toy = m.model("toy").unwrap();
+        assert_eq!(toy.param_shapes, vec![vec![4, 2], vec![2]]);
+        assert_eq!(toy.batch, 8);
+        assert_eq!(toy.y_dtype, "i32");
+        assert_eq!(toy.scan_k, 4);
+        assert!(!toy.lower_is_better);
+        assert_eq!(toy.default_lr, 0.5);
+        assert_eq!(
+            m.artifact_path("toy", "init").unwrap(),
+            PathBuf::from("/tmp/a/toy.init.hlo.txt")
+        );
+        assert!(m.artifact_path("toy", "nope").is_err());
+        assert!(m.model("missing").is_err());
+    }
+
+    #[test]
+    fn rejects_bad_format() {
+        assert!(Manifest::parse_str(r#"{"format": 2, "models": {}}"#, PathBuf::new()).is_err());
+        assert!(Manifest::parse_str("not json", PathBuf::new()).is_err());
+    }
+
+    #[test]
+    fn loads_real_manifest_if_built() {
+        // Integration check against the actual artifacts dir when present.
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if dir.join("manifest.json").exists() {
+            let m = Manifest::load(&dir).unwrap();
+            assert!(m.models.contains_key("mnist_mlp"));
+            let mm = m.model("mnist_mlp").unwrap();
+            assert_eq!(mm.x_shape, vec![64, 144]);
+            for entry in ["init", "train_step", "train_scan", "evaluate", "infer"] {
+                assert!(m.artifact_path("mnist_mlp", entry).unwrap().exists());
+            }
+        }
+    }
+}

@@ -1,0 +1,26 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) produced
+//! by `python/compile/aot.py` and executes them from the Layer-3 hot path.
+//!
+//! Python never runs here. The flow per model is:
+//!
+//! ```text
+//! manifest.json ──> ModelManifest (shapes/dtypes/arities)
+//! *.hlo.txt     ──> HloModuleProto::from_text_file ──> client.compile (cached)
+//! TrainableModel: params live as device literals; train_step/evaluate/
+//!                 infer shuttle batches in and scalars out.
+//! ```
+//!
+//! The PJRT wrapper types hold raw pointers and are used from one thread;
+//! the platform funnels all model execution through a single session
+//! runner (see [`crate::session`]), matching how one NSML ML-container
+//! owns its GPUs.
+
+mod engine;
+mod manifest;
+mod model;
+mod tensor;
+
+pub use engine::Engine;
+pub use manifest::{Manifest, ModelManifest};
+pub use model::TrainableModel;
+pub use tensor::{Batch, TensorData};

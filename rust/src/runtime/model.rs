@@ -1,0 +1,344 @@
+//! A trainable model instance: AOT executables + live parameters.
+//!
+//! This is what an NSML "ML container" runs: parameters are initialized
+//! (or restored from a checkpoint), then driven by `train_step` /
+//! `train_scan` / `evaluate` / `infer` executions through the PJRT
+//! engine. Parameter serialization feeds [`crate::storage::CheckpointStore`].
+
+use super::engine::Engine;
+use super::manifest::ModelManifest;
+use super::tensor::{Batch, TensorData};
+use anyhow::{anyhow, Result};
+use std::rc::Rc;
+
+/// A model instance bound to an engine, holding its parameters host-side
+/// between steps.
+pub struct TrainableModel {
+    engine: Rc<Engine>,
+    manifest: ModelManifest,
+    params: Vec<xla::Literal>,
+    pub steps_taken: u64,
+}
+
+impl TrainableModel {
+    /// Create with parameters from the AOT `init(seed)` executable.
+    pub fn init(engine: Rc<Engine>, model: &str, seed: i32) -> Result<TrainableModel> {
+        let manifest = engine.manifest().model(model)?.clone();
+        let params = engine.run(model, "init", &[xla::Literal::scalar(seed)])?;
+        if params.len() != manifest.param_shapes.len() {
+            return Err(anyhow!(
+                "init returned {} arrays, manifest declares {}",
+                params.len(),
+                manifest.param_shapes.len()
+            ));
+        }
+        Ok(TrainableModel { engine, manifest, params, steps_taken: 0 })
+    }
+
+    /// Create with parameters restored from serialized checkpoint bytes.
+    pub fn from_checkpoint(engine: Rc<Engine>, model: &str, bytes: &[u8]) -> Result<TrainableModel> {
+        let manifest = engine.manifest().model(model)?.clone();
+        let params = deserialize_params(bytes, &manifest.param_shapes)?;
+        Ok(TrainableModel { engine, manifest, params, steps_taken: 0 })
+    }
+
+    pub fn manifest(&self) -> &ModelManifest {
+        &self.manifest
+    }
+
+    pub fn name(&self) -> &str {
+        &self.manifest.name
+    }
+
+    fn args_with_params(&self, rest: Vec<xla::Literal>) -> Vec<xla::Literal> {
+        let mut args: Vec<xla::Literal> = self.params.iter().map(clone_literal).collect();
+        args.extend(rest);
+        args
+    }
+
+    /// One SGD step on a batch; returns the loss.
+    pub fn train_step(&mut self, batch: &Batch, lr: f32) -> Result<f32> {
+        let args =
+            self.args_with_params(vec![batch.x.to_literal()?, batch.y.to_literal()?, xla::Literal::scalar(lr)]);
+        let mut out = self.engine.run(&self.manifest.name, "train_step", &args)?;
+        let loss_lit = out.pop().ok_or_else(|| anyhow!("train_step returned nothing"))?;
+        self.params = out;
+        self.steps_taken += 1;
+        Ok(loss_lit.to_vec::<f32>()?[0])
+    }
+
+    /// `scan_k` fused steps (the L2 perf path); returns mean loss.
+    pub fn train_scan(&mut self, batches: &[Batch], lr: f32) -> Result<f32> {
+        if batches.len() != self.manifest.scan_k {
+            return Err(anyhow!(
+                "train_scan needs exactly {} batches, got {}",
+                self.manifest.scan_k,
+                batches.len()
+            ));
+        }
+        let xs = TensorData::stack(&batches.iter().map(|b| b.x.clone()).collect::<Vec<_>>())?;
+        let ys = TensorData::stack(&batches.iter().map(|b| b.y.clone()).collect::<Vec<_>>())?;
+        let args =
+            self.args_with_params(vec![xs.to_literal()?, ys.to_literal()?, xla::Literal::scalar(lr)]);
+        let mut out = self.engine.run(&self.manifest.name, "train_scan", &args)?;
+        let loss_lit = out.pop().ok_or_else(|| anyhow!("train_scan returned nothing"))?;
+        self.params = out;
+        self.steps_taken += self.manifest.scan_k as u64;
+        Ok(loss_lit.to_vec::<f32>()?[0])
+    }
+
+    /// Evaluate on a batch: (loss, metric).
+    pub fn evaluate(&self, batch: &Batch) -> Result<(f32, f32)> {
+        let args = self.args_with_params(vec![batch.x.to_literal()?, batch.y.to_literal()?]);
+        let out = self.engine.run(&self.manifest.name, "evaluate", &args)?;
+        if out.len() != 2 {
+            return Err(anyhow!("evaluate returned {} outputs", out.len()));
+        }
+        Ok((out[0].to_vec::<f32>()?[0], out[1].to_vec::<f32>()?[0]))
+    }
+
+    /// Run inference; returns the flat f32 output.
+    pub fn infer(&self, x: &TensorData) -> Result<Vec<f32>> {
+        let args = self.args_with_params(vec![x.to_literal()?]);
+        let out = self.engine.run(&self.manifest.name, "infer", &args)?;
+        Ok(out[0].to_vec::<f32>()?)
+    }
+
+    /// Serialize parameters (checkpoint payload).
+    pub fn params_bytes(&self) -> Result<Vec<u8>> {
+        serialize_params(&self.params)
+    }
+
+    /// Replace parameters from checkpoint bytes (hyperparameter tuning in
+    /// training time: pause, rewind/edit, resume — §3.3).
+    pub fn load_params(&mut self, bytes: &[u8]) -> Result<()> {
+        self.params = deserialize_params(bytes, &self.manifest.param_shapes)?;
+        Ok(())
+    }
+
+    /// Parameter L2 norm (a quick structural fingerprint for tests/logs).
+    pub fn params_norm(&self) -> Result<f64> {
+        let mut acc = 0.0f64;
+        for p in &self.params {
+            for v in p.to_vec::<f32>()? {
+                acc += (v as f64) * (v as f64);
+            }
+        }
+        Ok(acc.sqrt())
+    }
+}
+
+fn clone_literal(l: &xla::Literal) -> xla::Literal {
+    // The xla crate's Literal has no Clone; round-trip through host data.
+    // Shapes here are static so reshape never fails.
+    let shape = l.array_shape().expect("literal shape");
+    let dims: Vec<i64> = shape.dims().to_vec();
+    match shape.ty() {
+        xla::ElementType::F32 => {
+            let v: Vec<f32> = l.to_vec().expect("literal data");
+            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
+        }
+        xla::ElementType::S32 => {
+            let v: Vec<i32> = l.to_vec().expect("literal data");
+            xla::Literal::vec1(&v).reshape(&dims).expect("reshape")
+        }
+        other => panic!("unsupported literal type {:?}", other),
+    }
+}
+
+/// Binary format: [n:u32] then per array [ndims:u32][dims:i64...][f32 data].
+fn serialize_params(params: &[xla::Literal]) -> Result<Vec<u8>> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&(params.len() as u32).to_le_bytes());
+    for p in params {
+        let shape = p.array_shape()?;
+        let dims = shape.dims();
+        out.extend_from_slice(&(dims.len() as u32).to_le_bytes());
+        for d in dims {
+            out.extend_from_slice(&(*d).to_le_bytes());
+        }
+        let data: Vec<f32> = p.to_vec()?;
+        for v in &data {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+    }
+    Ok(out)
+}
+
+fn deserialize_params(bytes: &[u8], expect_shapes: &[Vec<i64>]) -> Result<Vec<xla::Literal>> {
+    let mut pos = 0usize;
+    let take = |pos: &mut usize, n: usize| -> Result<&[u8]> {
+        if *pos + n > bytes.len() {
+            return Err(anyhow!("checkpoint truncated at byte {}", pos));
+        }
+        let s = &bytes[*pos..*pos + n];
+        *pos += n;
+        Ok(s)
+    };
+    let n = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+    if n != expect_shapes.len() {
+        return Err(anyhow!("checkpoint has {} arrays, model expects {}", n, expect_shapes.len()));
+    }
+    let mut params = Vec::with_capacity(n);
+    for shape in expect_shapes {
+        let ndims = u32::from_le_bytes(take(&mut pos, 4)?.try_into().unwrap()) as usize;
+        let mut dims = Vec::with_capacity(ndims);
+        for _ in 0..ndims {
+            dims.push(i64::from_le_bytes(take(&mut pos, 8)?.try_into().unwrap()));
+        }
+        if &dims != shape {
+            return Err(anyhow!("checkpoint shape {:?} does not match model shape {:?}", dims, shape));
+        }
+        let count: i64 = dims.iter().product();
+        let raw = take(&mut pos, count as usize * 4)?;
+        let mut data = Vec::with_capacity(count as usize);
+        for chunk in raw.chunks_exact(4) {
+            data.push(f32::from_le_bytes(chunk.try_into().unwrap()));
+        }
+        params.push(xla::Literal::vec1(&data).reshape(&dims)?);
+    }
+    if pos != bytes.len() {
+        return Err(anyhow!("checkpoint has {} trailing bytes", bytes.len() - pos));
+    }
+    Ok(params)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Rc<Engine>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| Rc::new(Engine::new(&dir).unwrap()))
+    }
+
+    fn mnist_batch(seed: u64, m: &ModelManifest) -> Batch {
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(seed);
+        let n: i64 = m.x_shape.iter().product();
+        let x = TensorData::f32((0..n).map(|_| rng.f64() as f32).collect(), &m.x_shape);
+        let b = m.y_shape[0] as usize;
+        let y = TensorData::i32((0..b).map(|_| rng.below(10) as i32).collect(), &m.y_shape);
+        Batch { x, y }
+    }
+
+    #[test]
+    fn init_step_and_loss_decreases() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut model = TrainableModel::init(engine.clone(), "mnist_mlp", 7).unwrap();
+        let batch = mnist_batch(1, model.manifest());
+        let first = model.train_step(&batch, 0.1).unwrap();
+        let mut last = first;
+        for _ in 0..8 {
+            last = model.train_step(&batch, 0.1).unwrap();
+        }
+        assert!(first.is_finite() && last.is_finite());
+        assert!(last < first, "{} -> {}", first, last);
+        assert_eq!(model.steps_taken, 9);
+    }
+
+    #[test]
+    fn scan_matches_step_trajectory() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut by_step = TrainableModel::init(engine.clone(), "mnist_mlp", 3).unwrap();
+        let mut by_scan = TrainableModel::init(engine.clone(), "mnist_mlp", 3).unwrap();
+        let k = by_step.manifest().scan_k;
+        let batches: Vec<Batch> = (0..k).map(|i| mnist_batch(100 + i as u64, by_step.manifest())).collect();
+        let mut losses = Vec::new();
+        for b in &batches {
+            losses.push(by_step.train_step(b, 0.05).unwrap());
+        }
+        let scan_loss = by_scan.train_scan(&batches, 0.05).unwrap();
+        let mean: f32 = losses.iter().sum::<f32>() / losses.len() as f32;
+        assert!((scan_loss - mean).abs() < 1e-3, "{} vs {}", scan_loss, mean);
+        let n1 = by_step.params_norm().unwrap();
+        let n2 = by_scan.params_norm().unwrap();
+        assert!((n1 - n2).abs() < 1e-3, "{} vs {}", n1, n2);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip_resumes_identically() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut model = TrainableModel::init(engine.clone(), "mnist_mlp", 11).unwrap();
+        let batch = mnist_batch(5, model.manifest());
+        model.train_step(&batch, 0.1).unwrap();
+        let bytes = model.params_bytes().unwrap();
+        let norm_before = model.params_norm().unwrap();
+
+        let mut restored = TrainableModel::from_checkpoint(engine.clone(), "mnist_mlp", &bytes).unwrap();
+        assert!((restored.params_norm().unwrap() - norm_before).abs() < 1e-9);
+        // Training both one more step stays in lockstep.
+        let l1 = model.train_step(&batch, 0.1).unwrap();
+        let l2 = restored.train_step(&batch, 0.1).unwrap();
+        assert_eq!(l1, l2);
+    }
+
+    #[test]
+    fn corrupt_checkpoints_rejected() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = TrainableModel::init(engine.clone(), "mnist_mlp", 1).unwrap();
+        let mut bytes = model.params_bytes().unwrap();
+        bytes.truncate(bytes.len() - 3);
+        assert!(TrainableModel::from_checkpoint(engine.clone(), "mnist_mlp", &bytes).is_err());
+        assert!(TrainableModel::from_checkpoint(engine, "mnist_mlp", b"junk").is_err());
+    }
+
+    #[test]
+    fn evaluate_and_infer() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let model = TrainableModel::init(engine.clone(), "mnist_mlp", 2).unwrap();
+        let batch = mnist_batch(9, model.manifest());
+        let (loss, acc) = model.evaluate(&batch).unwrap();
+        assert!(loss.is_finite());
+        assert!((0.0..=1.0).contains(&acc));
+        let probs = model.infer(&batch.x).unwrap();
+        assert_eq!(probs.len(), 64 * 10);
+        let row: f32 = probs[..10].iter().sum();
+        assert!((row - 1.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn all_models_init_and_step() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        use crate::util::rng::Rng;
+        for name in engine.manifest().model_names() {
+            let mut model = TrainableModel::init(engine.clone(), &name, 1).unwrap();
+            let m = model.manifest().clone();
+            let mut rng = Rng::new(7);
+            let xn: i64 = m.x_shape.iter().product();
+            let x = if m.x_dtype == "i32" {
+                TensorData::i32((0..xn).map(|_| rng.below(60) as i32).collect(), &m.x_shape)
+            } else {
+                TensorData::f32((0..xn).map(|_| rng.f64() as f32).collect(), &m.x_shape)
+            };
+            let yn: i64 = m.y_shape.iter().product();
+            let y = if m.y_dtype == "i32" {
+                TensorData::i32((0..yn).map(|_| rng.below(4) as i32).collect(), &m.y_shape)
+            } else {
+                TensorData::f32((0..yn).map(|_| rng.f64() as f32 * 5.0).collect(), &m.y_shape)
+            };
+            let batch = Batch { x, y };
+            let loss = model.train_step(&batch, m.default_lr as f32).unwrap();
+            assert!(loss.is_finite(), "{}: loss {}", name, loss);
+        }
+    }
+}

@@ -1,0 +1,140 @@
+//! Host-side tensors shuttled between the platform and PJRT.
+
+use anyhow::{anyhow, Result};
+
+/// A dense host tensor (f32 or i32) with explicit shape.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32 { data: Vec<f32>, shape: Vec<i64> },
+    I32 { data: Vec<i32>, shape: Vec<i64> },
+}
+
+impl TensorData {
+    pub fn f32(data: Vec<f32>, shape: &[i64]) -> TensorData {
+        debug_assert_eq!(data.len() as i64, shape.iter().product::<i64>());
+        TensorData::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[i64]) -> TensorData {
+        debug_assert_eq!(data.len() as i64, shape.iter().product::<i64>());
+        TensorData::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn shape(&self) -> &[i64] {
+        match self {
+            TensorData::F32 { shape, .. } => shape,
+            TensorData::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            TensorData::F32 { data, .. } => data.len(),
+            TensorData::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            TensorData::F32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not f32")),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            TensorData::I32 { data, .. } => Ok(data),
+            _ => Err(anyhow!("tensor is not i32")),
+        }
+    }
+
+    /// Convert to an XLA literal.
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let lit = match self {
+            TensorData::F32 { data, shape } => xla::Literal::vec1(data).reshape(shape)?,
+            TensorData::I32 { data, shape } => xla::Literal::vec1(data).reshape(shape)?,
+        };
+        Ok(lit)
+    }
+
+    /// Stack `k` same-shape tensors along a new leading axis (scan input).
+    pub fn stack(parts: &[TensorData]) -> Result<TensorData> {
+        let first = parts.first().ok_or_else(|| anyhow!("stack of nothing"))?;
+        let mut shape = vec![parts.len() as i64];
+        shape.extend_from_slice(first.shape());
+        match first {
+            TensorData::F32 { .. } => {
+                let mut data = Vec::with_capacity(first.len() * parts.len());
+                for p in parts {
+                    if p.shape() != first.shape() {
+                        return Err(anyhow!("stack shape mismatch"));
+                    }
+                    data.extend_from_slice(p.as_f32()?);
+                }
+                Ok(TensorData::F32 { data, shape })
+            }
+            TensorData::I32 { .. } => {
+                let mut data = Vec::with_capacity(first.len() * parts.len());
+                for p in parts {
+                    if p.shape() != first.shape() {
+                        return Err(anyhow!("stack shape mismatch"));
+                    }
+                    data.extend_from_slice(p.as_i32()?);
+                }
+                Ok(TensorData::I32 { data, shape })
+            }
+        }
+    }
+}
+
+/// One training batch: inputs + targets.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    pub x: TensorData,
+    pub y: TensorData,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_access() {
+        let t = TensorData::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.as_f32().unwrap()[3], 4.0);
+        assert!(t.as_i32().is_err());
+    }
+
+    #[test]
+    fn stack_f32() {
+        let a = TensorData::f32(vec![1.0, 2.0], &[2]);
+        let b = TensorData::f32(vec![3.0, 4.0], &[2]);
+        let s = TensorData::stack(&[a, b]).unwrap();
+        assert_eq!(s.shape(), &[2, 2]);
+        assert_eq!(s.as_f32().unwrap(), &[1.0, 2.0, 3.0, 4.0]);
+    }
+
+    #[test]
+    fn stack_mismatch_rejected() {
+        let a = TensorData::i32(vec![1], &[1]);
+        let b = TensorData::i32(vec![1, 2], &[2]);
+        assert!(TensorData::stack(&[a, b]).is_err());
+        assert!(TensorData::stack(&[]).is_err());
+    }
+
+    #[test]
+    fn to_literal_roundtrip() {
+        let t = TensorData::f32(vec![1.5, -2.5, 0.0, 9.0], &[2, 2]);
+        let lit = t.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<f32>().unwrap(), vec![1.5, -2.5, 0.0, 9.0]);
+        let ti = TensorData::i32(vec![7, 8, 9], &[3]);
+        let lit = ti.to_literal().unwrap();
+        assert_eq!(lit.to_vec::<i32>().unwrap(), vec![7, 8, 9]);
+    }
+}

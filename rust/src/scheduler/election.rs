@@ -1,0 +1,291 @@
+//! Leader election among scheduler replicas (paper §3.2).
+//!
+//! "A centralized model often suffers from a single point of failure
+//! (SPOF). We handle this issue with the leader election process by
+//! electing new master node as in Zookeeper."
+//!
+//! Zookeeper itself is not available offline, so this implements the same
+//! guarantee with a bully-style election: every replica has an id and a
+//! heartbeat; when the leader's heartbeat goes stale, the highest-id alive
+//! replica claims leadership under a new epoch. Epochs fence stale
+//! leaders: any action stamped with an old epoch is rejected.
+
+use crate::events::EventLog;
+use crate::util::clock::{Millis, SharedClock};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// Scheduler replica identifier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ReplicaId(pub u32);
+
+impl std::fmt::Display for ReplicaId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "sched-{}", self.0)
+    }
+}
+
+/// Leader's heartbeat is stale after this long → election.
+pub const LEADER_TIMEOUT_MS: Millis = 1_000;
+
+#[derive(Debug, Clone)]
+struct Replica {
+    alive: bool,
+    last_seen_ms: Millis,
+}
+
+/// The election group: a set of scheduler replicas with one leader.
+pub struct ElectionGroup {
+    clock: SharedClock,
+    events: EventLog,
+    inner: Mutex<GroupState>,
+}
+
+#[derive(Debug)]
+struct GroupState {
+    replicas: BTreeMap<ReplicaId, Replica>,
+    leader: Option<ReplicaId>,
+    epoch: u64,
+    /// (time leader died, time new leader elected) of the last failover.
+    last_failover: Option<(Millis, Millis)>,
+    leader_died_at: Option<Millis>,
+}
+
+impl ElectionGroup {
+    pub fn new(clock: SharedClock, events: EventLog, replicas: usize) -> ElectionGroup {
+        let now = clock.now_ms();
+        let mut map = BTreeMap::new();
+        for i in 0..replicas {
+            map.insert(ReplicaId(i as u32), Replica { alive: true, last_seen_ms: now });
+        }
+        let g = ElectionGroup {
+            clock,
+            events,
+            inner: Mutex::new(GroupState {
+                replicas: map,
+                leader: None,
+                epoch: 0,
+                last_failover: None,
+                leader_died_at: None,
+            }),
+        };
+        g.elect();
+        g
+    }
+
+    /// Current leader and epoch.
+    pub fn leader(&self) -> Option<(ReplicaId, u64)> {
+        let st = self.inner.lock().unwrap();
+        st.leader.map(|l| (l, st.epoch))
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// Is `id` the current leader at `epoch`? (Epoch fencing: a deposed
+    /// leader holding an old epoch gets `false`.)
+    pub fn is_leader(&self, id: ReplicaId, epoch: u64) -> bool {
+        let st = self.inner.lock().unwrap();
+        st.leader == Some(id) && st.epoch == epoch
+    }
+
+    /// Replica heartbeat (replicas ping the group; the leader's ping
+    /// keeps its lease alive).
+    pub fn heartbeat(&self, id: ReplicaId) {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        if let Some(r) = st.replicas.get_mut(&id) {
+            if r.alive {
+                r.last_seen_ms = now;
+            }
+        }
+    }
+
+    /// Kill a replica (failure injection). If it was the leader the group
+    /// is leaderless until the next [`tick`](Self::tick) detects it.
+    pub fn kill(&self, id: ReplicaId) {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        if let Some(r) = st.replicas.get_mut(&id) {
+            r.alive = false;
+        }
+        if st.leader == Some(id) {
+            st.leader = None;
+            st.leader_died_at = Some(now);
+            self.events.error("election", &id.to_string(), "leader died");
+        } else {
+            self.events.warn("election", &id.to_string(), "replica died");
+        }
+    }
+
+    /// Revive a replica. It does not reclaim leadership (no preemption);
+    /// it simply becomes electable again.
+    pub fn revive(&self, id: ReplicaId) {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        if let Some(r) = st.replicas.get_mut(&id) {
+            r.alive = true;
+            r.last_seen_ms = now;
+        }
+        self.events.info("election", &id.to_string(), "replica revived");
+    }
+
+    /// Detect leader staleness and elect if needed. Returns the new leader
+    /// if a failover happened on this tick.
+    pub fn tick(&self) -> Option<ReplicaId> {
+        let now = self.clock.now_ms();
+        {
+            let mut st = self.inner.lock().unwrap();
+            if let Some(l) = st.leader {
+                let stale = st
+                    .replicas
+                    .get(&l)
+                    .map(|r| !r.alive || now.saturating_sub(r.last_seen_ms) > LEADER_TIMEOUT_MS)
+                    .unwrap_or(true);
+                if stale {
+                    st.leader = None;
+                    if st.leader_died_at.is_none() {
+                        st.leader_died_at = Some(now);
+                    }
+                    self.events.warn("election", &l.to_string(), "leader lease expired");
+                } else {
+                    return None; // healthy leader
+                }
+            }
+        }
+        self.elect()
+    }
+
+    /// Bully election: highest-id alive replica with a *fresh* heartbeat
+    /// wins (a stale-but-not-declared-dead replica is not electable);
+    /// epoch increments.
+    pub fn elect(&self) -> Option<ReplicaId> {
+        let now = self.clock.now_ms();
+        let mut st = self.inner.lock().unwrap();
+        let winner = st
+            .replicas
+            .iter()
+            .filter(|(_, r)| r.alive && now.saturating_sub(r.last_seen_ms) <= LEADER_TIMEOUT_MS)
+            .map(|(id, _)| *id)
+            .max()?;
+        if st.leader == Some(winner) {
+            return None;
+        }
+        st.epoch += 1;
+        st.leader = Some(winner);
+        if let Some(died) = st.leader_died_at.take() {
+            st.last_failover = Some((died, now));
+        }
+        let epoch = st.epoch;
+        self.events.info("election", &winner.to_string(), format!("elected leader (epoch {})", epoch));
+        Some(winner)
+    }
+
+    /// Duration of the most recent failover (death → re-election), if any.
+    pub fn last_failover_ms(&self) -> Option<Millis> {
+        let st = self.inner.lock().unwrap();
+        st.last_failover.map(|(died, elected)| elected.saturating_sub(died))
+    }
+
+    pub fn alive_count(&self) -> usize {
+        self.inner.lock().unwrap().replicas.values().filter(|r| r.alive).count()
+    }
+
+    pub fn replica_ids(&self) -> Vec<ReplicaId> {
+        self.inner.lock().unwrap().replicas.keys().copied().collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    fn mk(n: usize) -> (ElectionGroup, crate::util::clock::SimClock) {
+        let (clock, sim) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        (ElectionGroup::new(clock, events, n), sim)
+    }
+
+    #[test]
+    fn initial_leader_is_highest_id() {
+        let (g, _) = mk(3);
+        assert_eq!(g.leader().unwrap().0, ReplicaId(2));
+        assert_eq!(g.epoch(), 1);
+    }
+
+    #[test]
+    fn failover_elects_next_highest() {
+        let (g, sim) = mk(3);
+        g.kill(ReplicaId(2));
+        sim.advance(10);
+        let new = g.tick().unwrap();
+        assert_eq!(new, ReplicaId(1));
+        assert_eq!(g.epoch(), 2);
+        assert_eq!(g.last_failover_ms(), Some(10));
+    }
+
+    #[test]
+    fn epoch_fencing_rejects_deposed_leader() {
+        let (g, sim) = mk(2);
+        let (old_leader, old_epoch) = g.leader().unwrap();
+        g.kill(old_leader);
+        sim.advance(5);
+        g.tick();
+        // Old leader comes back with its stale epoch: fenced out.
+        g.revive(old_leader);
+        assert!(!g.is_leader(old_leader, old_epoch));
+        let (cur, cur_epoch) = g.leader().unwrap();
+        assert!(g.is_leader(cur, cur_epoch));
+        assert_eq!(cur, ReplicaId(0));
+    }
+
+    #[test]
+    fn lease_expiry_triggers_election() {
+        let (g, sim) = mk(3);
+        // Leader stops heartbeating; others keep going.
+        sim.advance(LEADER_TIMEOUT_MS + 1);
+        g.heartbeat(ReplicaId(0));
+        g.heartbeat(ReplicaId(1));
+        let new = g.tick().unwrap();
+        assert_eq!(new, ReplicaId(1));
+    }
+
+    #[test]
+    fn healthy_leader_means_no_election() {
+        let (g, sim) = mk(3);
+        for _ in 0..5 {
+            sim.advance(LEADER_TIMEOUT_MS / 2);
+            g.heartbeat(ReplicaId(2));
+            assert!(g.tick().is_none());
+        }
+        assert_eq!(g.epoch(), 1);
+    }
+
+    #[test]
+    fn no_leader_when_all_dead_then_recover() {
+        let (g, sim) = mk(2);
+        g.kill(ReplicaId(0));
+        g.kill(ReplicaId(1));
+        sim.advance(1);
+        assert!(g.tick().is_none());
+        assert_eq!(g.leader(), None);
+        g.revive(ReplicaId(0));
+        assert_eq!(g.tick(), Some(ReplicaId(0)));
+    }
+
+    #[test]
+    fn revived_higher_id_does_not_preempt() {
+        let (g, sim) = mk(3);
+        g.kill(ReplicaId(2));
+        sim.advance(1);
+        g.tick();
+        assert_eq!(g.leader().unwrap().0, ReplicaId(1));
+        g.revive(ReplicaId(2));
+        // Healthy current leader: revived replica must wait its turn.
+        g.heartbeat(ReplicaId(1));
+        assert!(g.tick().is_none());
+        assert_eq!(g.leader().unwrap().0, ReplicaId(1));
+    }
+}

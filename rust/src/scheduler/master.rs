@@ -1,0 +1,325 @@
+//! The scheduler master: the single node that "is in charge of monitoring
+//! all computational resources and scheduling tasks for all clients"
+//! (paper §3.2).
+
+use super::placement::PlacementPolicy;
+use super::queue::JobQueue;
+use super::JobSpec;
+use crate::cluster::{Cluster, NodeId};
+use crate::events::EventLog;
+use std::sync::Mutex;
+
+/// Result of a job submission.
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitOutcome {
+    /// Empty-queue fast path: the client is immediately told its node.
+    PlacedImmediately(NodeId),
+    /// Queued behind other work (or nothing currently fits).
+    Queued { position: usize },
+}
+
+/// Scheduling counters, exposed by `nsml cluster` and the benches.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct SchedStats {
+    pub submitted: u64,
+    pub fast_path_hits: u64,
+    pub queued: u64,
+    pub placed_from_queue: u64,
+    pub requeued: u64,
+    pub completed: u64,
+    pub cancelled: u64,
+}
+
+/// The master scheduler. Thread-safe: submissions and completions may come
+/// from any client thread.
+pub struct Master {
+    cluster: Cluster,
+    inner: Mutex<Inner>,
+    events: EventLog,
+    /// Paper §3.2: skip the queue entirely when it is empty.
+    pub fast_path: bool,
+}
+
+struct Inner {
+    queue: JobQueue,
+    policy: Box<dyn PlacementPolicy>,
+    stats: SchedStats,
+    /// Jobs currently placed: id -> (spec, node).
+    running: std::collections::BTreeMap<String, (JobSpec, NodeId)>,
+}
+
+impl Master {
+    pub fn new(cluster: Cluster, policy: Box<dyn PlacementPolicy>, events: EventLog) -> Master {
+        Master {
+            cluster,
+            inner: Mutex::new(Inner {
+                queue: JobQueue::with_skip_window(16),
+                policy,
+                stats: SchedStats::default(),
+                running: std::collections::BTreeMap::new(),
+            }),
+            events,
+            fast_path: true,
+        }
+    }
+
+    /// Disable the §3.2 fast path (ablation E5).
+    pub fn without_fast_path(mut self) -> Master {
+        self.fast_path = false;
+        self
+    }
+
+    /// Use strict head-of-line blocking instead of a skip window.
+    pub fn with_skip_window(self, window: usize) -> Master {
+        self.inner.lock().unwrap().queue.skip_window = window;
+        self
+    }
+
+    /// Submit a job. Fast path: empty queue + a fitting node → place now.
+    pub fn submit(&self, job: JobSpec) -> SubmitOutcome {
+        let mut inner = self.inner.lock().unwrap();
+        inner.stats.submitted += 1;
+        if self.fast_path && inner.queue.is_empty() {
+            if let Some(node) = inner.policy.place(&job.req, &self.cluster.snapshot()) {
+                if self.cluster.allocate(node, &job.id, &job.req).is_some() {
+                    inner.stats.fast_path_hits += 1;
+                    inner.running.insert(job.id.clone(), (job.clone(), node));
+                    self.events.info("scheduler", &job.id, format!("fast-path placed on {}", node));
+                    return SubmitOutcome::PlacedImmediately(node);
+                }
+            }
+        }
+        inner.stats.queued += 1;
+        self.events.info("scheduler", &job.id, "queued");
+        inner.queue.push(job);
+        SubmitOutcome::Queued { position: inner.queue.len() - 1 }
+    }
+
+    /// Schedule as many queued jobs as currently fit. Returns placements.
+    /// Called by the platform on completions, heartbeats and timers.
+    pub fn pump(&self) -> Vec<(JobSpec, NodeId)> {
+        let mut placed = Vec::new();
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let snapshot = self.cluster.snapshot();
+            let Inner { queue, policy, .. } = &mut *inner;
+            let Some(job) = queue.pop_placeable(|j| policy.place(&j.req, &snapshot).is_some()) else {
+                break;
+            };
+            // Between pop and allocate nothing can interleave (we hold the
+            // lock), so placement must succeed; be defensive anyway.
+            let node = inner.policy.place(&job.req, &snapshot).expect("pop_placeable guaranteed fit");
+            if self.cluster.allocate(node, &job.id, &job.req).is_none() {
+                self.events.warn("scheduler", &job.id, "allocation raced; requeueing");
+                inner.queue.push_front(job);
+                break;
+            }
+            inner.stats.placed_from_queue += 1;
+            inner.running.insert(job.id.clone(), (job.clone(), node));
+            self.events.info("scheduler", &job.id, format!("placed on {} from queue", node));
+            placed.push((job, node));
+        }
+        placed
+    }
+
+    /// A job finished (or was stopped): release its resources and try to
+    /// schedule more work. Returns newly placed jobs.
+    pub fn complete(&self, job_id: &str) -> Vec<(JobSpec, NodeId)> {
+        {
+            let mut inner = self.inner.lock().unwrap();
+            if inner.running.remove(job_id).is_some() {
+                inner.stats.completed += 1;
+            }
+        }
+        self.cluster.release(job_id);
+        self.events.info("scheduler", job_id, "completed");
+        self.pump()
+    }
+
+    /// Cancel a queued (not yet placed) job.
+    pub fn cancel_queued(&self, job_id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let removed = inner.queue.remove(job_id).is_some();
+        if removed {
+            inner.stats.cancelled += 1;
+            self.events.info("scheduler", job_id, "cancelled while queued");
+        }
+        removed
+    }
+
+    /// Handle node failures: requeue orphaned jobs at lane fronts, then
+    /// pump. Returns (requeued ids, new placements).
+    pub fn handle_orphans(&self, orphans: &[String]) -> (Vec<String>, Vec<(JobSpec, NodeId)>) {
+        let mut requeued = Vec::new();
+        {
+            let mut inner = self.inner.lock().unwrap();
+            for id in orphans {
+                if let Some((spec, _)) = inner.running.remove(id) {
+                    inner.stats.requeued += 1;
+                    self.events.warn("scheduler", id, "node lost; requeueing job");
+                    inner.queue.push_front(spec);
+                    requeued.push(id.clone());
+                }
+            }
+        }
+        let placed = self.pump();
+        (requeued, placed)
+    }
+
+    /// Periodic maintenance: reap dead nodes, requeue their jobs, pump.
+    pub fn tick(&self) -> Vec<(JobSpec, NodeId)> {
+        let orphans = self.cluster.reap_dead();
+        if orphans.is_empty() {
+            self.pump()
+        } else {
+            self.handle_orphans(&orphans).1
+        }
+    }
+
+    pub fn stats(&self) -> SchedStats {
+        self.inner.lock().unwrap().stats
+    }
+
+    pub fn queue_len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn queued_jobs(&self) -> Vec<JobSpec> {
+        self.inner.lock().unwrap().queue.snapshot()
+    }
+
+    pub fn running_jobs(&self) -> Vec<(JobSpec, NodeId)> {
+        self.inner.lock().unwrap().running.values().cloned().collect()
+    }
+
+    pub fn is_running(&self, job_id: &str) -> Option<NodeId> {
+        self.inner.lock().unwrap().running.get(job_id).map(|(_, n)| *n)
+    }
+
+    pub fn policy_name(&self) -> &'static str {
+        self.inner.lock().unwrap().policy.name()
+    }
+
+    pub fn cluster(&self) -> &Cluster {
+        &self.cluster
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::scheduler::placement::BestFit;
+    use crate::scheduler::Priority;
+    use crate::util::clock::sim_clock;
+
+    fn mk(nodes: usize, gpus: usize) -> Master {
+        let (clock, _) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        let cluster = Cluster::homogeneous(clock, events.clone(), nodes, gpus, 24.0);
+        Master::new(cluster, Box::new(BestFit), events)
+    }
+
+    #[test]
+    fn fast_path_on_empty_queue() {
+        let m = mk(2, 4);
+        match m.submit(JobSpec::new("a", 2)) {
+            SubmitOutcome::PlacedImmediately(_) => {}
+            other => panic!("expected fast path, got {:?}", other),
+        }
+        assert_eq!(m.stats().fast_path_hits, 1);
+        assert_eq!(m.queue_len(), 0);
+    }
+
+    #[test]
+    fn queues_when_full_then_pumps_on_complete() {
+        let m = mk(1, 2);
+        assert!(matches!(m.submit(JobSpec::new("a", 2)), SubmitOutcome::PlacedImmediately(_)));
+        assert!(matches!(m.submit(JobSpec::new("b", 2)), SubmitOutcome::Queued { .. }));
+        assert_eq!(m.queue_len(), 1);
+        let placed = m.complete("a");
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].0.id, "b");
+        assert_eq!(m.queue_len(), 0);
+        assert_eq!(m.stats().placed_from_queue, 1);
+    }
+
+    #[test]
+    fn no_fast_path_when_queue_nonempty() {
+        let m = mk(1, 4);
+        m.submit(JobSpec::new("a", 4));
+        m.submit(JobSpec::new("b", 4)); // queued, cluster full
+        // c fits nowhere anyway, but even a 0-gpu job must queue behind b.
+        let out = m.submit(JobSpec::new("c", 1));
+        assert!(matches!(out, SubmitOutcome::Queued { .. }));
+        assert_eq!(m.stats().fast_path_hits, 1);
+    }
+
+    #[test]
+    fn priority_order_from_queue() {
+        let m = mk(1, 2);
+        m.submit(JobSpec::new("hog", 2));
+        m.submit(JobSpec::new("low", 1).with_priority(Priority::Low));
+        m.submit(JobSpec::new("high", 1).with_priority(Priority::High));
+        let placed = m.complete("hog");
+        // Both fit after hog leaves; high must come first.
+        assert_eq!(placed[0].0.id, "high");
+        assert_eq!(placed[1].0.id, "low");
+    }
+
+    #[test]
+    fn orphan_requeue_preserves_turn() {
+        let m = mk(2, 2);
+        m.submit(JobSpec::new("a", 2));
+        m.submit(JobSpec::new("b", 2));
+        // Cluster full; queue c.
+        m.submit(JobSpec::new("c", 2));
+        assert_eq!(m.queue_len(), 1);
+        let node_a = m.is_running("a").unwrap();
+        let orphans = m.cluster().kill_node(node_a);
+        let (requeued, placed) = m.handle_orphans(&orphans);
+        assert_eq!(requeued, vec!["a".to_string()]);
+        // One node left with 2 GPUs free only after... kill freed node_a but
+        // it's dead, so nothing fits: both a and c stay queued.
+        assert!(placed.is_empty());
+        assert_eq!(m.queue_len(), 2);
+        // Requeued job goes first.
+        assert_eq!(m.queued_jobs()[0].id, "a");
+        // Revive → tick places the requeued job first (only 2 GPUs free).
+        m.cluster().revive_node(node_a);
+        let placed = m.tick();
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].0.id, "a");
+        // Once b finishes, c gets its node too.
+        let placed = m.complete("b");
+        assert_eq!(placed.len(), 1);
+        assert_eq!(placed[0].0.id, "c");
+        assert_eq!(m.queue_len(), 0);
+    }
+
+    #[test]
+    fn cancel_queued_job() {
+        let m = mk(1, 1);
+        m.submit(JobSpec::new("a", 1));
+        m.submit(JobSpec::new("b", 1));
+        assert!(m.cancel_queued("b"));
+        assert!(!m.cancel_queued("b"));
+        assert!(!m.cancel_queued("a")); // running, not queued
+        assert_eq!(m.stats().cancelled, 1);
+    }
+
+    #[test]
+    fn stats_conservation() {
+        // Every submitted job is exactly one of: running, queued, completed.
+        let m = mk(2, 4);
+        for i in 0..20 {
+            m.submit(JobSpec::new(&format!("j{}", i), 1 + i % 4));
+        }
+        for i in 0..10 {
+            m.complete(&format!("j{}", i));
+        }
+        m.pump();
+        let s = m.stats();
+        let accounted = m.running_jobs().len() as u64 + m.queue_len() as u64 + s.completed;
+        assert_eq!(accounted, s.submitted, "conservation: {:?}", s);
+    }
+}

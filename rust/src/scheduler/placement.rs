@@ -1,0 +1,197 @@
+//! Placement policies: which node gets the job.
+//!
+//! The paper motivates this with the ResNet-152 anecdote (§2): a cluster
+//! may have enough total GPUs while no *single* node has eight free — bad
+//! placement causes exactly that fragmentation. `bench_placement.rs`
+//! ablates these policies (experiment E11).
+
+use crate::cluster::{NodeId, NodeView, ResourceReq};
+use crate::util::rng::Rng;
+use std::sync::Mutex;
+
+/// A node-selection strategy.
+pub trait PlacementPolicy: Send + Sync {
+    fn name(&self) -> &'static str;
+    /// Choose a node for `req` among `nodes`, or `None` if nothing fits.
+    fn place(&self, req: &ResourceReq, nodes: &[NodeView]) -> Option<NodeId>;
+}
+
+/// First node (by id) that fits. O(n), minimal decision latency.
+pub struct FirstFit;
+
+impl PlacementPolicy for FirstFit {
+    fn name(&self) -> &'static str {
+        "first_fit"
+    }
+
+    fn place(&self, req: &ResourceReq, nodes: &[NodeView]) -> Option<NodeId> {
+        nodes.iter().find(|n| n.fits(req)).map(|n| n.id)
+    }
+}
+
+/// Node that leaves the fewest free GPUs after placement — keeps big
+/// contiguous blocks available for 8-GPU jobs (the anti-fragmentation
+/// choice; NSML's default).
+pub struct BestFit;
+
+impl PlacementPolicy for BestFit {
+    fn name(&self) -> &'static str {
+        "best_fit"
+    }
+
+    fn place(&self, req: &ResourceReq, nodes: &[NodeView]) -> Option<NodeId> {
+        nodes
+            .iter()
+            .filter(|n| n.fits(req))
+            .min_by_key(|n| (n.free_gpus - req.gpus, n.id))
+            .map(|n| n.id)
+    }
+}
+
+/// Node with the most free GPUs (spread / load-balance). Deliberately
+/// fragmentation-prone; the ablation baseline.
+pub struct WorstFit;
+
+impl PlacementPolicy for WorstFit {
+    fn name(&self) -> &'static str {
+        "worst_fit"
+    }
+
+    fn place(&self, req: &ResourceReq, nodes: &[NodeView]) -> Option<NodeId> {
+        nodes
+            .iter()
+            .filter(|n| n.fits(req))
+            .max_by_key(|n| (n.free_gpus, std::cmp::Reverse(n.id)))
+            .map(|n| n.id)
+    }
+}
+
+/// Uniformly random among fitting nodes (the "manual assignment by
+/// developers sharing servers" baseline from §2).
+pub struct RandomFit {
+    rng: Mutex<Rng>,
+}
+
+impl RandomFit {
+    pub fn new(seed: u64) -> RandomFit {
+        RandomFit { rng: Mutex::new(Rng::new(seed)) }
+    }
+}
+
+impl PlacementPolicy for RandomFit {
+    fn name(&self) -> &'static str {
+        "random"
+    }
+
+    fn place(&self, req: &ResourceReq, nodes: &[NodeView]) -> Option<NodeId> {
+        let fits: Vec<NodeId> = nodes.iter().filter(|n| n.fits(req)).map(|n| n.id).collect();
+        if fits.is_empty() {
+            None
+        } else {
+            let mut rng = self.rng.lock().unwrap();
+            Some(*rng.choice(&fits))
+        }
+    }
+}
+
+/// Look up a policy by config name.
+pub fn policy_by_name(name: &str, seed: u64) -> Box<dyn PlacementPolicy> {
+    match name {
+        "first_fit" => Box::new(FirstFit),
+        "worst_fit" | "spread" => Box::new(WorstFit),
+        "random" => Box::new(RandomFit::new(seed)),
+        _ => Box::new(BestFit),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::Millis;
+
+    fn view(id: u32, total: usize, free: usize) -> NodeView {
+        NodeView {
+            id: NodeId(id),
+            hostname: format!("node-{:02}", id),
+            total_gpus: total,
+            free_gpus: free,
+            total_cpus: 64,
+            free_cpus: 64,
+            total_mem_gb: 256.0,
+            free_mem_gb: 256.0,
+            alive: true,
+            last_heartbeat_ms: 0 as Millis,
+            jobs: vec![],
+        }
+    }
+
+    fn req(gpus: usize) -> ResourceReq {
+        ResourceReq { gpus, cpus: 1, mem_gb: 1.0 }
+    }
+
+    #[test]
+    fn first_fit_takes_lowest_id() {
+        let nodes = vec![view(0, 8, 2), view(1, 8, 8), view(2, 8, 8)];
+        assert_eq!(FirstFit.place(&req(2), &nodes), Some(NodeId(0)));
+        assert_eq!(FirstFit.place(&req(4), &nodes), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn best_fit_minimizes_leftover() {
+        let nodes = vec![view(0, 8, 8), view(1, 8, 3), view(2, 8, 5)];
+        // req 2: node 1 leaves 1 free — tightest.
+        assert_eq!(BestFit.place(&req(2), &nodes), Some(NodeId(1)));
+        // req 8: only node 0.
+        assert_eq!(BestFit.place(&req(8), &nodes), Some(NodeId(0)));
+    }
+
+    #[test]
+    fn worst_fit_maximizes_leftover() {
+        let nodes = vec![view(0, 8, 4), view(1, 8, 8), view(2, 8, 6)];
+        assert_eq!(WorstFit.place(&req(2), &nodes), Some(NodeId(1)));
+    }
+
+    #[test]
+    fn none_when_fragmented() {
+        // The §2 anecdote: 8 total GPUs free, but no node has 8.
+        let nodes = vec![view(0, 8, 4), view(1, 8, 4)];
+        for p in [&FirstFit as &dyn PlacementPolicy, &BestFit, &WorstFit] {
+            assert_eq!(p.place(&req(8), &nodes), None, "{}", p.name());
+        }
+    }
+
+    #[test]
+    fn dead_nodes_excluded() {
+        let mut n = view(0, 8, 8);
+        n.alive = false;
+        assert_eq!(BestFit.place(&req(1), &[n]), None);
+    }
+
+    #[test]
+    fn random_fit_only_picks_fitting() {
+        let nodes = vec![view(0, 8, 0), view(1, 8, 8), view(2, 8, 1)];
+        let p = RandomFit::new(42);
+        for _ in 0..50 {
+            let got = p.place(&req(2), &nodes).unwrap();
+            assert_eq!(got, NodeId(1));
+        }
+        // With two candidates both get picked eventually.
+        let nodes2 = vec![view(0, 8, 4), view(1, 8, 4)];
+        let picks: std::collections::BTreeSet<u32> =
+            (0..50).map(|_| p.place(&req(2), &nodes2).unwrap().0).collect();
+        assert_eq!(picks.len(), 2);
+    }
+
+    #[test]
+    fn policy_by_name_round_trip() {
+        for name in ["first_fit", "best_fit", "worst_fit", "random"] {
+            let p = policy_by_name(name, 1);
+            if name == "spread" || name == "worst_fit" {
+                assert_eq!(p.name(), "worst_fit");
+            } else {
+                assert_eq!(p.name(), name);
+            }
+        }
+        assert_eq!(policy_by_name("unknown", 1).name(), "best_fit");
+    }
+}

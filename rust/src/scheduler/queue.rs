@@ -1,0 +1,183 @@
+//! The master's job queue: strict priority order, FIFO within a priority.
+
+use super::{JobSpec, Priority};
+use std::collections::VecDeque;
+
+/// Priority job queue. `pop_first_fit` supports scheduling the highest
+/// priority job that can currently be placed (skipping blocked jobs would
+/// starve big jobs, so by default we only skip within a bounded window).
+#[derive(Debug, Default)]
+pub struct JobQueue {
+    lanes: [VecDeque<JobSpec>; 3],
+    len: usize,
+    /// How many blocked jobs a scheduling pass may skip per lane before
+    /// stopping (0 = strict head-of-line; large = fully work-conserving).
+    pub skip_window: usize,
+}
+
+impl JobQueue {
+    pub fn new() -> JobQueue {
+        JobQueue { lanes: Default::default(), len: 0, skip_window: 0 }
+    }
+
+    /// Work-conserving variant: may skip up to `window` unplaceable jobs.
+    pub fn with_skip_window(window: usize) -> JobQueue {
+        JobQueue { lanes: Default::default(), len: 0, skip_window: window }
+    }
+
+    pub fn push(&mut self, job: JobSpec) {
+        self.lanes[job.priority as usize].push_back(job);
+        self.len += 1;
+    }
+
+    /// Push back at the *front* of its lane (requeue after node failure, so
+    /// the victim does not lose its turn).
+    pub fn push_front(&mut self, job: JobSpec) {
+        self.lanes[job.priority as usize].push_front(job);
+        self.len += 1;
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    /// Peek at the job that would be popped next (highest priority, FIFO).
+    pub fn peek(&self) -> Option<&JobSpec> {
+        for lane in [Priority::High, Priority::Normal, Priority::Low] {
+            if let Some(j) = self.lanes[lane as usize].front() {
+                return Some(j);
+            }
+        }
+        None
+    }
+
+    /// Pop the first job (priority order) for which `placeable` returns
+    /// true, skipping at most `skip_window` blocked jobs per lane.
+    pub fn pop_placeable<F: FnMut(&JobSpec) -> bool>(&mut self, mut placeable: F) -> Option<JobSpec> {
+        for lane in [Priority::High, Priority::Normal, Priority::Low] {
+            let q = &mut self.lanes[lane as usize];
+            let limit = self.skip_window.min(q.len().saturating_sub(1));
+            for idx in 0..=limit {
+                if idx >= q.len() {
+                    break;
+                }
+                if placeable(&q[idx]) {
+                    let job = q.remove(idx).unwrap();
+                    self.len -= 1;
+                    return Some(job);
+                }
+                if idx == limit {
+                    // Head (and window) blocked: strict lanes do not let
+                    // lower lanes jump ahead of a blocked high lane.
+                    return None;
+                }
+            }
+        }
+        None
+    }
+
+    /// Remove a queued job by id (client cancelled before placement).
+    pub fn remove(&mut self, id: &str) -> Option<JobSpec> {
+        for lane in self.lanes.iter_mut() {
+            if let Some(pos) = lane.iter().position(|j| j.id == id) {
+                self.len -= 1;
+                return lane.remove(pos);
+            }
+        }
+        None
+    }
+
+    /// Snapshot of queued jobs in pop order.
+    pub fn snapshot(&self) -> Vec<JobSpec> {
+        let mut v = Vec::with_capacity(self.len);
+        for lane in [Priority::High, Priority::Normal, Priority::Low] {
+            v.extend(self.lanes[lane as usize].iter().cloned());
+        }
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(id: &str, p: Priority) -> JobSpec {
+        JobSpec::new(id, 1).with_priority(p)
+    }
+
+    #[test]
+    fn priority_then_fifo() {
+        let mut q = JobQueue::new();
+        q.push(job("n1", Priority::Normal));
+        q.push(job("h1", Priority::High));
+        q.push(job("n2", Priority::Normal));
+        q.push(job("l1", Priority::Low));
+        q.push(job("h2", Priority::High));
+        let order: Vec<String> = std::iter::from_fn(|| q.pop_placeable(|_| true)).map(|j| j.id).collect();
+        assert_eq!(order, vec!["h1", "h2", "n1", "n2", "l1"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn strict_head_of_line_blocks() {
+        let mut q = JobQueue::new();
+        q.push(job("big", Priority::Normal)); // pretend unplaceable
+        q.push(job("small", Priority::Normal));
+        // skip_window = 0: blocked head means nothing pops.
+        assert!(q.pop_placeable(|j| j.id == "small").is_none());
+        assert_eq!(q.len(), 2);
+    }
+
+    #[test]
+    fn skip_window_lets_small_jobs_through() {
+        let mut q = JobQueue::with_skip_window(4);
+        q.push(job("big", Priority::Normal));
+        q.push(job("small", Priority::Normal));
+        let got = q.pop_placeable(|j| j.id == "small").unwrap();
+        assert_eq!(got.id, "small");
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.peek().unwrap().id, "big");
+    }
+
+    #[test]
+    fn high_lane_blocks_lower_lanes() {
+        // A blocked High job must not be overtaken by Normal (priority
+        // inversion guard).
+        let mut q = JobQueue::with_skip_window(8);
+        q.push(job("high-big", Priority::High));
+        q.push(job("norm", Priority::Normal));
+        assert!(q.pop_placeable(|j| j.id == "norm").is_none());
+    }
+
+    #[test]
+    fn requeue_at_front() {
+        let mut q = JobQueue::new();
+        q.push(job("a", Priority::Normal));
+        q.push_front(job("victim", Priority::Normal));
+        assert_eq!(q.pop_placeable(|_| true).unwrap().id, "victim");
+    }
+
+    #[test]
+    fn remove_by_id() {
+        let mut q = JobQueue::new();
+        q.push(job("a", Priority::Normal));
+        q.push(job("b", Priority::Low));
+        assert_eq!(q.remove("b").unwrap().id, "b");
+        assert!(q.remove("b").is_none());
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn snapshot_in_pop_order() {
+        let mut q = JobQueue::new();
+        q.push(job("l", Priority::Low));
+        q.push(job("h", Priority::High));
+        let ids: Vec<String> = q.snapshot().into_iter().map(|j| j.id).collect();
+        assert_eq!(ids, vec!["h", "l"]);
+        assert_eq!(q.len(), 2); // snapshot does not consume
+    }
+}

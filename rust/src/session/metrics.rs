@@ -1,0 +1,117 @@
+//! Per-session metric streams (the TensorBoard/Visdom scalar log).
+
+use crate::util::plot::Series;
+
+/// One logged scalar.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricPoint {
+    pub step: u64,
+    pub name: String,
+    pub value: f64,
+}
+
+/// Append-only metric log with per-name series extraction.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct MetricLog {
+    points: Vec<MetricPoint>,
+}
+
+impl MetricLog {
+    pub fn new() -> MetricLog {
+        MetricLog::default()
+    }
+
+    pub fn log(&mut self, step: u64, name: &str, value: f64) {
+        self.points.push(MetricPoint { step, name: name.to_string(), value });
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+
+    /// All points of one metric as (step, value).
+    pub fn series(&self, name: &str) -> Vec<(f64, f64)> {
+        self.points
+            .iter()
+            .filter(|p| p.name == name)
+            .map(|p| (p.step as f64, p.value))
+            .collect()
+    }
+
+    /// Series object for the plot renderers.
+    pub fn plot_series(&self, name: &str) -> Series {
+        Series::new(name, self.series(name))
+    }
+
+    pub fn latest(&self, name: &str) -> Option<f64> {
+        self.points.iter().rev().find(|p| p.name == name).map(|p| p.value)
+    }
+
+    pub fn best(&self, name: &str, lower_is_better: bool) -> Option<f64> {
+        let vals = self.series(name);
+        if vals.is_empty() {
+            return None;
+        }
+        let iter = vals.into_iter().map(|(_, v)| v);
+        Some(if lower_is_better {
+            iter.fold(f64::INFINITY, f64::min)
+        } else {
+            iter.fold(f64::NEG_INFINITY, f64::max)
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut names: Vec<String> = self.points.iter().map(|p| p.name.clone()).collect();
+        names.sort();
+        names.dedup();
+        names
+    }
+
+    pub fn points(&self) -> &[MetricPoint] {
+        &self.points
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn log_and_extract() {
+        let mut m = MetricLog::new();
+        m.log(0, "loss", 2.0);
+        m.log(10, "loss", 1.5);
+        m.log(10, "acc", 0.4);
+        m.log(20, "loss", 1.2);
+        assert_eq!(m.series("loss"), vec![(0.0, 2.0), (10.0, 1.5), (20.0, 1.2)]);
+        assert_eq!(m.latest("loss"), Some(1.2));
+        assert_eq!(m.latest("acc"), Some(0.4));
+        assert_eq!(m.latest("nope"), None);
+        assert_eq!(m.names(), vec!["acc", "loss"]);
+        assert_eq!(m.len(), 4);
+    }
+
+    #[test]
+    fn best_respects_direction() {
+        let mut m = MetricLog::new();
+        m.log(0, "loss", 2.0);
+        m.log(1, "loss", 0.5);
+        m.log(2, "loss", 1.0);
+        assert_eq!(m.best("loss", true), Some(0.5));
+        assert_eq!(m.best("loss", false), Some(2.0));
+        assert_eq!(m.best("x", true), None);
+    }
+
+    #[test]
+    fn plot_series_named() {
+        let mut m = MetricLog::new();
+        m.log(0, "loss", 1.0);
+        let s = m.plot_series("loss");
+        assert_eq!(s.name, "loss");
+        assert_eq!(s.points.len(), 1);
+    }
+}

@@ -1,0 +1,201 @@
+//! Training sessions: NSML's unit of experiment (§3.3, §3.4).
+//!
+//! A session is one `nsml run`: code + dataset + hyperparameters placed
+//! on a node, training inside an ML container, streaming metrics, saving
+//! checkpoints, and supporting the paper's signature feature —
+//! **hyperparameter tuning in training time** by pausing user code,
+//! loading a model from the storage container, editing hyperparameters
+//! and resuming (§3.3).
+
+mod metrics;
+mod run;
+
+pub use metrics::{MetricLog, MetricPoint};
+pub use run::{RunStatus, SessionRun};
+
+use crate::scheduler::Priority;
+use crate::util::clock::Millis;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Session lifecycle (superset of the scheduler job lifecycle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SessionState {
+    Queued,
+    Preparing,
+    Running,
+    Paused,
+    Done,
+    Failed,
+    Stopped,
+}
+
+impl SessionState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SessionState::Queued => "queued",
+            SessionState::Preparing => "preparing",
+            SessionState::Running => "running",
+            SessionState::Paused => "paused",
+            SessionState::Done => "done",
+            SessionState::Failed => "failed",
+            SessionState::Stopped => "stopped",
+        }
+    }
+
+    pub fn is_terminal(&self) -> bool {
+        matches!(self, SessionState::Done | SessionState::Failed | SessionState::Stopped)
+    }
+}
+
+/// What the user asked for (the `nsml run` arguments).
+#[derive(Debug, Clone)]
+pub struct SessionSpec {
+    pub id: String,
+    pub user: String,
+    pub dataset: String,
+    pub model: String,
+    pub gpus: usize,
+    pub priority: Priority,
+    pub total_steps: u64,
+    pub lr: f64,
+    pub seed: u64,
+    pub checkpoint_every: u64,
+    pub eval_every: u64,
+    /// Use the scan-fused train path (L2 perf variant).
+    pub use_scan: bool,
+}
+
+impl SessionSpec {
+    pub fn new(id: &str, user: &str, dataset: &str, model: &str) -> SessionSpec {
+        SessionSpec {
+            id: id.to_string(),
+            user: user.to_string(),
+            dataset: dataset.to_string(),
+            model: model.to_string(),
+            gpus: 1,
+            priority: Priority::Normal,
+            total_steps: 200,
+            lr: 0.1,
+            seed: 0,
+            checkpoint_every: 50,
+            eval_every: 25,
+            use_scan: false,
+        }
+    }
+}
+
+/// Mutable session record tracked by the platform.
+#[derive(Debug, Clone)]
+pub struct SessionRecord {
+    pub spec: SessionSpec,
+    pub state: SessionState,
+    pub node: Option<crate::cluster::NodeId>,
+    pub container: Option<String>,
+    pub steps_done: u64,
+    pub metrics: MetricLog,
+    pub best_metric: Option<f64>,
+    pub submitted_at_ms: Millis,
+    pub finished_at_ms: Option<Millis>,
+    pub failure: Option<String>,
+    /// Times this session was auto-recovered after a node loss (§4.2).
+    pub recoveries: u32,
+}
+
+impl SessionRecord {
+    pub fn new(spec: SessionSpec, now_ms: Millis) -> SessionRecord {
+        SessionRecord {
+            spec,
+            state: SessionState::Queued,
+            node: None,
+            container: None,
+            steps_done: 0,
+            metrics: MetricLog::new(),
+            best_metric: None,
+            submitted_at_ms: now_ms,
+            finished_at_ms: None,
+            failure: None,
+            recoveries: 0,
+        }
+    }
+}
+
+/// Thread-safe store of all sessions (the master's bookkeeping).
+#[derive(Clone, Default)]
+pub struct SessionStore {
+    inner: Arc<Mutex<BTreeMap<String, SessionRecord>>>,
+}
+
+impl SessionStore {
+    pub fn new() -> SessionStore {
+        SessionStore::default()
+    }
+
+    pub fn insert(&self, rec: SessionRecord) {
+        self.inner.lock().unwrap().insert(rec.spec.id.clone(), rec);
+    }
+
+    pub fn get(&self, id: &str) -> Option<SessionRecord> {
+        self.inner.lock().unwrap().get(id).cloned()
+    }
+
+    /// Apply a mutation to one session record.
+    pub fn update<F: FnOnce(&mut SessionRecord)>(&self, id: &str, f: F) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(rec) = inner.get_mut(id) {
+            f(rec);
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn list(&self) -> Vec<SessionRecord> {
+        self.inner.lock().unwrap().values().cloned().collect()
+    }
+
+    pub fn by_state(&self, state: SessionState) -> Vec<SessionRecord> {
+        self.inner.lock().unwrap().values().filter(|r| r.state == state).cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn store_crud() {
+        let store = SessionStore::new();
+        let spec = SessionSpec::new("kim/mnist/1", "kim", "mnist", "mnist_mlp");
+        store.insert(SessionRecord::new(spec, 100));
+        assert_eq!(store.len(), 1);
+        assert!(store.update("kim/mnist/1", |r| {
+            r.state = SessionState::Running;
+            r.steps_done = 10;
+        }));
+        let rec = store.get("kim/mnist/1").unwrap();
+        assert_eq!(rec.state, SessionState::Running);
+        assert_eq!(rec.steps_done, 10);
+        assert!(!store.update("missing", |_| {}));
+        assert_eq!(store.by_state(SessionState::Running).len(), 1);
+        assert_eq!(store.by_state(SessionState::Done).len(), 0);
+    }
+
+    #[test]
+    fn terminal_states() {
+        assert!(SessionState::Done.is_terminal());
+        assert!(SessionState::Failed.is_terminal());
+        assert!(SessionState::Stopped.is_terminal());
+        assert!(!SessionState::Running.is_terminal());
+        assert!(!SessionState::Paused.is_terminal());
+        assert_eq!(SessionState::Paused.as_str(), "paused");
+    }
+}

@@ -1,0 +1,403 @@
+//! The active session runner: drives a [`TrainableModel`] over a
+//! [`DataGen`] stream with metric logging, periodic checkpoints,
+//! pause/resume and in-training hyperparameter edits (§3.3).
+
+use super::{SessionSpec, SessionState, SessionStore};
+use crate::data::DataGen;
+use crate::events::EventLog;
+use crate::runtime::{Batch, Engine, TrainableModel};
+use crate::storage::{Checkpoint, CheckpointStore};
+use crate::util::clock::SharedClock;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::rc::Rc;
+
+/// Result of driving a session chunk.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RunStatus {
+    /// More steps remain.
+    InProgress,
+    /// Reached `total_steps`.
+    Completed,
+}
+
+/// A live training execution (the code running "inside the container").
+pub struct SessionRun {
+    pub spec: SessionSpec,
+    model: TrainableModel,
+    gen: Box<dyn DataGen>,
+    ckpts: CheckpointStore,
+    store: SessionStore,
+    events: EventLog,
+    clock: SharedClock,
+    lr: f32,
+    steps_done: u64,
+    last_eval: (f32, f32),
+    last_eval_at: u64,
+    last_ckpt_at: u64,
+}
+
+impl SessionRun {
+    /// Start fresh: init params from the session seed.
+    pub fn start(
+        engine: Rc<Engine>,
+        spec: SessionSpec,
+        gen: Box<dyn DataGen>,
+        ckpts: CheckpointStore,
+        store: SessionStore,
+        events: EventLog,
+        clock: SharedClock,
+    ) -> Result<SessionRun> {
+        let model = TrainableModel::init(engine, &spec.model, spec.seed as i32)?;
+        events.info("session", &spec.id, format!("training {} on {} started", spec.model, spec.dataset));
+        store.update(&spec.id, |r| r.state = SessionState::Running);
+        let lr = spec.lr as f32;
+        Ok(SessionRun {
+            spec,
+            model,
+            gen,
+            ckpts,
+            store,
+            events,
+            clock,
+            lr,
+            steps_done: 0,
+            last_eval: (f32::NAN, f32::NAN),
+            last_eval_at: 0,
+            last_ckpt_at: 0,
+        })
+    }
+
+    /// Resume a paused/killed session from its latest checkpoint
+    /// (the §3.3 "download a model from storage container and resume").
+    pub fn resume(
+        engine: Rc<Engine>,
+        spec: SessionSpec,
+        gen: Box<dyn DataGen>,
+        ckpts: CheckpointStore,
+        store: SessionStore,
+        events: EventLog,
+        clock: SharedClock,
+    ) -> Result<SessionRun> {
+        let ckpt = ckpts
+            .latest(&spec.id)
+            .ok_or_else(|| anyhow!("session {} has no checkpoint to resume from", spec.id))?;
+        let bytes = ckpts.load_params(&ckpt)?;
+        let model = TrainableModel::from_checkpoint(engine, &spec.model, &bytes)?;
+        let lr = ckpt.hparams.get("lr").copied().unwrap_or(spec.lr) as f32;
+        events.info(
+            "session",
+            &spec.id,
+            format!("resumed from checkpoint at step {} (lr={})", ckpt.step, lr),
+        );
+        store.update(&spec.id, |r| r.state = SessionState::Running);
+        Ok(SessionRun {
+            steps_done: ckpt.step,
+            last_eval_at: ckpt.step,
+            last_ckpt_at: ckpt.step,
+            spec,
+            model,
+            gen,
+            ckpts,
+            store,
+            events,
+            clock,
+            lr,
+            last_eval: (f32::NAN, f32::NAN),
+        })
+    }
+
+    pub fn steps_done(&self) -> u64 {
+        self.steps_done
+    }
+
+    pub fn lr(&self) -> f32 {
+        self.lr
+    }
+
+    /// Edit the learning rate mid-training (hyperparameter tuning in
+    /// training time). Takes effect on the next step.
+    pub fn set_lr(&mut self, lr: f64) {
+        self.events.info("session", &self.spec.id, format!("lr changed {} -> {}", self.lr, lr));
+        self.lr = lr as f32;
+    }
+
+    fn hparams(&self) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        m.insert("lr".to_string(), self.lr as f64);
+        m.insert("seed".to_string(), self.spec.seed as f64);
+        m
+    }
+
+    /// Drive up to `max_steps` further steps (bounded by `total_steps`).
+    pub fn step_chunk(&mut self, max_steps: u64) -> Result<RunStatus> {
+        let batch_n = self.model.manifest().batch;
+        let scan_k = self.model.manifest().scan_k as u64;
+        let target = self.spec.total_steps.min(self.steps_done + max_steps);
+        while self.steps_done < target {
+            let loss = if self.spec.use_scan && target - self.steps_done >= scan_k {
+                let batches: Vec<Batch> = (0..scan_k).map(|_| self.gen.batch(batch_n)).collect();
+                let l = self.model.train_scan(&batches, self.lr)?;
+                self.steps_done += scan_k;
+                l
+            } else {
+                let batch = self.gen.batch(batch_n);
+                let l = self.model.train_step(&batch, self.lr)?;
+                self.steps_done += 1;
+                l
+            };
+            if !loss.is_finite() {
+                self.store.update(&self.spec.id, |r| {
+                    r.state = SessionState::Failed;
+                    r.failure = Some(format!("non-finite loss at step {}", self.steps_done));
+                });
+                return Err(anyhow!("session {}: non-finite loss", self.spec.id));
+            }
+            let step = self.steps_done;
+            self.store.update(&self.spec.id, |r| {
+                r.steps_done = step;
+                r.metrics.log(step, "train_loss", loss as f64);
+            });
+            // Periodic hooks fire on boundary crossings (steps may advance
+            // by scan_k at a time, so exact-multiple checks would skip).
+            if self.spec.eval_every > 0 && step / self.spec.eval_every > self.last_eval_at / self.spec.eval_every {
+                self.last_eval_at = step;
+                self.run_eval()?;
+            }
+            if self.spec.checkpoint_every > 0
+                && step / self.spec.checkpoint_every > self.last_ckpt_at / self.spec.checkpoint_every
+            {
+                self.last_ckpt_at = step;
+                self.checkpoint()?;
+            }
+        }
+        if self.steps_done >= self.spec.total_steps {
+            self.finish()?;
+            Ok(RunStatus::Completed)
+        } else {
+            Ok(RunStatus::InProgress)
+        }
+    }
+
+    fn run_eval(&mut self) -> Result<()> {
+        let batch = self.gen.eval_batch(self.model.manifest().batch);
+        let (loss, metric) = self.model.evaluate(&batch)?;
+        self.last_eval = (loss, metric);
+        let step = self.steps_done;
+        let metric_name = self.model.manifest().metric_name.clone();
+        let lower = self.model.manifest().lower_is_better;
+        self.store.update(&self.spec.id, |r| {
+            r.metrics.log(step, "eval_loss", loss as f64);
+            r.metrics.log(step, &metric_name, metric as f64);
+            let better = match r.best_metric {
+                None => true,
+                Some(b) => {
+                    if lower {
+                        (metric as f64) < b
+                    } else {
+                        (metric as f64) > b
+                    }
+                }
+            };
+            if better {
+                r.best_metric = Some(metric as f64);
+            }
+        });
+        Ok(())
+    }
+
+    /// Persist a checkpoint now.
+    pub fn checkpoint(&mut self) -> Result<Checkpoint> {
+        let bytes = self.model.params_bytes()?;
+        let ck = self.ckpts.save(
+            &self.spec.id,
+            self.steps_done,
+            self.last_eval.0 as f64,
+            &self.hparams(),
+            &bytes,
+            self.clock.now_ms(),
+        )?;
+        self.events
+            .debug("session", &self.spec.id, format!("checkpoint at step {}", self.steps_done));
+        Ok(ck)
+    }
+
+    /// Pause: checkpoint + mark paused (user can now edit hparams).
+    pub fn pause(&mut self) -> Result<Checkpoint> {
+        let ck = self.checkpoint()?;
+        self.store.update(&self.spec.id, |r| r.state = SessionState::Paused);
+        self.events.info("session", &self.spec.id, format!("paused at step {}", self.steps_done));
+        Ok(ck)
+    }
+
+    /// Rewind to an earlier checkpointed step (reproduce past state).
+    pub fn rewind_to(&mut self, step: u64) -> Result<()> {
+        let ck = self
+            .ckpts
+            .at_step(&self.spec.id, step)
+            .ok_or_else(|| anyhow!("no checkpoint at step {}", step))?;
+        let bytes = self.ckpts.load_params(&ck)?;
+        self.model.load_params(&bytes)?;
+        self.steps_done = step;
+        self.events.info("session", &self.spec.id, format!("rewound to step {}", step));
+        Ok(())
+    }
+
+    /// Final eval + checkpoint + mark done; returns (loss, metric).
+    pub fn finish(&mut self) -> Result<(f32, f32)> {
+        self.run_eval()?;
+        self.checkpoint()?;
+        let (loss, metric) = self.last_eval;
+        let now = self.clock.now_ms();
+        self.store.update(&self.spec.id, |r| {
+            r.state = SessionState::Done;
+            r.finished_at_ms = Some(now);
+        });
+        self.events.info(
+            "session",
+            &self.spec.id,
+            format!("done at step {}: loss={:.4} metric={:.4}", self.steps_done, loss, metric),
+        );
+        Ok((loss, metric))
+    }
+
+    /// Run one inference through the trained model (the `nsml infer` demo).
+    pub fn infer(&self, x: &crate::runtime::TensorData) -> Result<Vec<f32>> {
+        self.model.infer(x)
+    }
+
+    pub fn model(&self) -> &TrainableModel {
+        &self.model
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::generator_for;
+    use crate::session::SessionRecord;
+    use crate::storage::ObjectStore;
+    use crate::util::clock::sim_clock;
+    use std::path::PathBuf;
+
+    fn engine() -> Option<Rc<Engine>> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        dir.join("manifest.json").exists().then(|| Rc::new(Engine::new(&dir).unwrap()))
+    }
+
+    fn setup(spec: &SessionSpec) -> (CheckpointStore, SessionStore, EventLog, SharedClock) {
+        let (clock, _) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        let ckpts = CheckpointStore::new(ObjectStore::memory());
+        let store = SessionStore::new();
+        store.insert(SessionRecord::new(spec.clone(), 0));
+        (ckpts, store, events, clock)
+    }
+
+    #[test]
+    fn session_trains_to_completion_and_improves() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut spec = SessionSpec::new("kim/mnist/1", "kim", "mnist", "mnist_mlp");
+        spec.total_steps = 60;
+        spec.eval_every = 20;
+        spec.checkpoint_every = 30;
+        let (ckpts, store, events, clock) = setup(&spec);
+        let gen = generator_for("mnist_mlp", 1).unwrap();
+        let mut run =
+            SessionRun::start(engine, spec, gen, ckpts.clone(), store.clone(), events, clock).unwrap();
+        let status = run.step_chunk(1000).unwrap();
+        assert_eq!(status, RunStatus::Completed);
+
+        let rec = store.get("kim/mnist/1").unwrap();
+        assert_eq!(rec.state, SessionState::Done);
+        assert_eq!(rec.steps_done, 60);
+        let losses = rec.metrics.series("train_loss");
+        assert_eq!(losses.len(), 60);
+        // Loss at the end far below the start (procedural digits are easy).
+        assert!(losses.last().unwrap().1 < losses[0].1 * 0.7, "{:?}", (losses[0], losses[losses.len()-1]));
+        assert!(rec.best_metric.unwrap() > 0.3, "accuracy {:?}", rec.best_metric);
+        // Checkpoints at 30, 60 and the final one.
+        assert!(ckpts.list("kim/mnist/1").len() >= 2);
+    }
+
+    #[test]
+    fn pause_edit_lr_resume() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut spec = SessionSpec::new("kim/mnist/2", "kim", "mnist", "mnist_mlp");
+        spec.total_steps = 40;
+        spec.lr = 0.2;
+        let (ckpts, store, events, clock) = setup(&spec);
+        let gen = generator_for("mnist_mlp", 2).unwrap();
+        let mut run = SessionRun::start(
+            engine.clone(),
+            spec.clone(),
+            gen,
+            ckpts.clone(),
+            store.clone(),
+            events.clone(),
+            clock.clone(),
+        )
+        .unwrap();
+        assert_eq!(run.step_chunk(20).unwrap(), RunStatus::InProgress);
+        run.pause().unwrap();
+        assert_eq!(store.get("kim/mnist/2").unwrap().state, SessionState::Paused);
+        drop(run);
+
+        // Resume with an edited lr: the §3.3 REPL tuning flow.
+        let gen2 = generator_for("mnist_mlp", 2).unwrap();
+        let mut resumed =
+            SessionRun::resume(engine, spec, gen2, ckpts, store.clone(), events, clock).unwrap();
+        assert_eq!(resumed.steps_done(), 20);
+        resumed.set_lr(0.01);
+        assert!((resumed.lr() - 0.01).abs() < 1e-6);
+        assert_eq!(resumed.step_chunk(1000).unwrap(), RunStatus::Completed);
+        assert_eq!(store.get("kim/mnist/2").unwrap().state, SessionState::Done);
+    }
+
+    #[test]
+    fn rewind_to_checkpoint() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut spec = SessionSpec::new("kim/mnist/3", "kim", "mnist", "mnist_mlp");
+        spec.total_steps = 30;
+        spec.checkpoint_every = 10;
+        let (ckpts, store, events, clock) = setup(&spec);
+        let gen = generator_for("mnist_mlp", 3).unwrap();
+        let mut run =
+            SessionRun::start(engine, spec, gen, ckpts, store.clone(), events, clock).unwrap();
+        run.step_chunk(25).unwrap();
+        assert_eq!(run.steps_done(), 25);
+        run.rewind_to(10).unwrap();
+        assert_eq!(run.steps_done(), 10);
+        assert!(run.rewind_to(7).is_err()); // no checkpoint there
+    }
+
+    #[test]
+    fn scan_mode_counts_steps_correctly() {
+        let Some(engine) = engine() else {
+            eprintln!("skipping: artifacts not built");
+            return;
+        };
+        let mut spec = SessionSpec::new("kim/mnist/4", "kim", "mnist", "mnist_mlp");
+        spec.total_steps = 32;
+        spec.use_scan = true;
+        spec.eval_every = 0;
+        spec.checkpoint_every = 0;
+        let (ckpts, store, events, clock) = setup(&spec);
+        let gen = generator_for("mnist_mlp", 4).unwrap();
+        let mut run =
+            SessionRun::start(engine, spec, gen, ckpts, store.clone(), events, clock).unwrap();
+        assert_eq!(run.step_chunk(1000).unwrap(), RunStatus::Completed);
+        assert_eq!(run.steps_done(), 32); // 4 scan calls × k=8
+        let rec = store.get("kim/mnist/4").unwrap();
+        assert_eq!(rec.metrics.series("train_loss").len(), 4); // one log per scan
+    }
+}

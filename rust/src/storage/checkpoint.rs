@@ -1,0 +1,227 @@
+//! Checkpoint store: "NSML stores intermediate trained models into the
+//! storage container. With these backup files, NSML supports reproducing
+//! the same model and tuning hyperparameters during training" (§3.3).
+//!
+//! Checkpoints carry the serialized model parameters plus the training
+//! cursor (step, metric, hyperparameters), so a session can be paused,
+//! edited and resumed, and any past experiment can be replayed.
+
+use super::{ObjectId, ObjectStore};
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// One saved snapshot of a training session.
+#[derive(Debug, Clone)]
+pub struct Checkpoint {
+    pub session: String,
+    pub step: u64,
+    /// Loss or task metric at save time.
+    pub metric: f64,
+    /// Hyperparameters active when the snapshot was taken.
+    pub hparams: BTreeMap<String, f64>,
+    /// Content address of the serialized parameters.
+    pub params: ObjectId,
+    pub saved_at_ms: u64,
+}
+
+impl Checkpoint {
+    fn to_json(&self) -> Json {
+        let mut hp = Json::obj();
+        for (k, v) in &self.hparams {
+            hp.set(k, (*v).into());
+        }
+        let mut o = Json::obj();
+        o.set("session", self.session.as_str().into())
+            .set("step", self.step.into())
+            .set("metric", self.metric.into())
+            .set("hparams", hp)
+            .set("params", self.params.0.as_str().into())
+            .set("saved_at_ms", self.saved_at_ms.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<Checkpoint> {
+        let get = |k: &str| j.get(k).ok_or_else(|| anyhow!("checkpoint json missing '{}'", k));
+        let mut hparams = BTreeMap::new();
+        if let Some(Json::Obj(m)) = j.get("hparams") {
+            for (k, v) in m {
+                hparams.insert(k.clone(), v.as_f64().unwrap_or(0.0));
+            }
+        }
+        Ok(Checkpoint {
+            session: get("session")?.as_str().unwrap_or_default().to_string(),
+            step: get("step")?.as_i64().unwrap_or(0) as u64,
+            metric: get("metric")?.as_f64().unwrap_or(f64::NAN),
+            hparams,
+            params: ObjectId(get("params")?.as_str().unwrap_or_default().to_string()),
+            saved_at_ms: get("saved_at_ms")?.as_i64().unwrap_or(0) as u64,
+        })
+    }
+}
+
+/// Per-session checkpoint history backed by the object store.
+#[derive(Clone)]
+pub struct CheckpointStore {
+    store: ObjectStore,
+    index: Arc<Mutex<BTreeMap<String, Vec<Checkpoint>>>>,
+}
+
+impl CheckpointStore {
+    pub fn new(store: ObjectStore) -> CheckpointStore {
+        CheckpointStore { store, index: Arc::new(Mutex::new(BTreeMap::new())) }
+    }
+
+    /// Save a checkpoint (params as raw bytes) and index it.
+    pub fn save(
+        &self,
+        session: &str,
+        step: u64,
+        metric: f64,
+        hparams: &BTreeMap<String, f64>,
+        params: &[u8],
+        now_ms: u64,
+    ) -> Result<Checkpoint> {
+        let params_id = self.store.put(params)?;
+        let ckpt = Checkpoint {
+            session: session.to_string(),
+            step,
+            metric,
+            hparams: hparams.clone(),
+            params: params_id,
+            saved_at_ms: now_ms,
+        };
+        // The metadata record itself also lives in the object store, so a
+        // fresh process could rebuild the index (reproducibility).
+        self.store.put(ckpt.to_json().to_string().as_bytes())?;
+        self.index.lock().unwrap().entry(session.to_string()).or_default().push(ckpt.clone());
+        Ok(ckpt)
+    }
+
+    /// All checkpoints of a session, oldest first.
+    pub fn list(&self, session: &str) -> Vec<Checkpoint> {
+        self.index.lock().unwrap().get(session).cloned().unwrap_or_default()
+    }
+
+    /// Most recent checkpoint.
+    pub fn latest(&self, session: &str) -> Option<Checkpoint> {
+        self.list(session).into_iter().max_by_key(|c| c.step)
+    }
+
+    /// Checkpoint with the best (lowest by default) metric — AutoML's
+    /// "save the model of best score" (§3.1).
+    pub fn best(&self, session: &str, lower_is_better: bool) -> Option<Checkpoint> {
+        let list = self.list(session);
+        if lower_is_better {
+            list.into_iter().min_by(|a, b| a.metric.partial_cmp(&b.metric).unwrap())
+        } else {
+            list.into_iter().max_by(|a, b| a.metric.partial_cmp(&b.metric).unwrap())
+        }
+    }
+
+    /// Checkpoint at an exact step.
+    pub fn at_step(&self, session: &str, step: u64) -> Option<Checkpoint> {
+        self.list(session).into_iter().find(|c| c.step == step)
+    }
+
+    /// Load a checkpoint's parameter bytes.
+    pub fn load_params(&self, ckpt: &Checkpoint) -> Result<Vec<u8>> {
+        self.store.get(&ckpt.params)
+    }
+
+    /// Re-parse a checkpoint metadata record from raw json bytes (used to
+    /// rebuild indexes; exercised by tests for format stability).
+    pub fn parse_record(bytes: &[u8]) -> Result<Checkpoint> {
+        let j = parse(std::str::from_utf8(bytes)?).map_err(|e| anyhow!("bad checkpoint json: {}", e))?;
+        Checkpoint::from_json(&j)
+    }
+
+    pub fn store(&self) -> &ObjectStore {
+        &self.store
+    }
+
+    /// Every indexed checkpoint (for persistence).
+    pub fn dump(&self) -> Vec<Checkpoint> {
+        self.index.lock().unwrap().values().flatten().cloned().collect()
+    }
+
+    /// Serialize a checkpoint's metadata record (inverse of
+    /// [`parse_record`](Self::parse_record)).
+    pub fn record_bytes(ckpt: &Checkpoint) -> Vec<u8> {
+        ckpt.to_json().to_string().into_bytes()
+    }
+
+    /// Re-index a checkpoint (used when reloading persisted state).
+    pub fn restore(&self, ckpt: Checkpoint) {
+        self.index.lock().unwrap().entry(ckpt.session.clone()).or_default().push(ckpt);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hp(lr: f64) -> BTreeMap<String, f64> {
+        let mut m = BTreeMap::new();
+        m.insert("lr".to_string(), lr);
+        m
+    }
+
+    fn cs() -> CheckpointStore {
+        CheckpointStore::new(ObjectStore::memory())
+    }
+
+    #[test]
+    fn save_list_latest() {
+        let c = cs();
+        c.save("s1", 10, 2.0, &hp(0.1), b"p10", 100).unwrap();
+        c.save("s1", 20, 1.5, &hp(0.1), b"p20", 200).unwrap();
+        c.save("other", 5, 9.0, &hp(0.2), b"px", 300).unwrap();
+        assert_eq!(c.list("s1").len(), 2);
+        let latest = c.latest("s1").unwrap();
+        assert_eq!(latest.step, 20);
+        assert_eq!(c.load_params(&latest).unwrap(), b"p20");
+        assert!(c.latest("missing").is_none());
+    }
+
+    #[test]
+    fn best_metric_selection() {
+        let c = cs();
+        c.save("s", 1, 3.0, &hp(0.1), b"a", 0).unwrap();
+        c.save("s", 2, 1.0, &hp(0.1), b"b", 0).unwrap();
+        c.save("s", 3, 2.0, &hp(0.1), b"c", 0).unwrap();
+        assert_eq!(c.best("s", true).unwrap().step, 2); // loss: lower wins
+        assert_eq!(c.best("s", false).unwrap().step, 1); // accuracy-style
+    }
+
+    #[test]
+    fn at_step_lookup() {
+        let c = cs();
+        c.save("s", 7, 1.0, &hp(0.5), b"x", 0).unwrap();
+        assert_eq!(c.at_step("s", 7).unwrap().hparams["lr"], 0.5);
+        assert!(c.at_step("s", 8).is_none());
+    }
+
+    #[test]
+    fn record_roundtrip() {
+        let c = cs();
+        let ck = c.save("kim/mnist/3", 42, 0.123, &hp(0.01), b"params-bytes", 5_000).unwrap();
+        let rec = ck.to_json().to_string();
+        let back = CheckpointStore::parse_record(rec.as_bytes()).unwrap();
+        assert_eq!(back.session, "kim/mnist/3");
+        assert_eq!(back.step, 42);
+        assert!((back.metric - 0.123).abs() < 1e-12);
+        assert_eq!(back.hparams["lr"], 0.01);
+        assert_eq!(back.params, ck.params);
+    }
+
+    #[test]
+    fn identical_params_dedup() {
+        let c = cs();
+        c.save("a", 1, 0.0, &hp(0.1), b"same-params", 0).unwrap();
+        c.save("b", 1, 0.0, &hp(0.1), b"same-params", 1).unwrap();
+        // 2 metadata records + 1 shared params object.
+        assert_eq!(c.store().usage().0, 3);
+    }
+}

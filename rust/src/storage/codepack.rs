@@ -1,0 +1,135 @@
+//! Code packing: what `nsml run` does first — "package the code in the
+//! current directory, send it to the NSML server" (§3.4), so every
+//! experiment's exact source is stored and reproducible (§2: tracking
+//! experiment environments over time).
+
+use super::{ObjectId, ObjectStore};
+use anyhow::{Context, Result};
+use std::io::{Read, Write};
+use std::path::Path;
+
+/// Zip an in-memory file set (name → contents) into one archive.
+pub fn pack_files(files: &[(&str, &[u8])]) -> Result<Vec<u8>> {
+    let mut buf = std::io::Cursor::new(Vec::new());
+    {
+        let mut zip = zip::ZipWriter::new(&mut buf);
+        let opts =
+            zip::write::FileOptions::default().compression_method(zip::CompressionMethod::Deflated);
+        for (name, bytes) in files {
+            zip.start_file(name.to_string(), opts)?;
+            zip.write_all(bytes)?;
+        }
+        zip.finish()?;
+    }
+    Ok(buf.into_inner())
+}
+
+/// Zip a directory tree from disk (skips hidden files and `target/`).
+pub fn pack_dir(dir: &Path) -> Result<Vec<u8>> {
+    let mut entries: Vec<(String, Vec<u8>)> = Vec::new();
+    collect(dir, dir, &mut entries)?;
+    entries.sort_by(|a, b| a.0.cmp(&b.0)); // deterministic archives
+    let refs: Vec<(&str, &[u8])> = entries.iter().map(|(n, b)| (n.as_str(), b.as_slice())).collect();
+    pack_files(&refs)
+}
+
+fn collect(root: &Path, dir: &Path, out: &mut Vec<(String, Vec<u8>)>) -> Result<()> {
+    for entry in std::fs::read_dir(dir).with_context(|| format!("reading {}", dir.display()))? {
+        let entry = entry?;
+        let name = entry.file_name().to_string_lossy().to_string();
+        if name.starts_with('.') || name == "target" || name == "__pycache__" {
+            continue;
+        }
+        let path = entry.path();
+        if path.is_dir() {
+            collect(root, &path, out)?;
+        } else {
+            let rel = path.strip_prefix(root)?.to_string_lossy().replace('\\', "/");
+            out.push((rel, std::fs::read(&path)?));
+        }
+    }
+    Ok(())
+}
+
+/// Unpack an archive into (name → contents) pairs.
+pub fn unpack(archive: &[u8]) -> Result<Vec<(String, Vec<u8>)>> {
+    let mut zip = zip::ZipArchive::new(std::io::Cursor::new(archive))?;
+    let mut out = Vec::new();
+    for i in 0..zip.len() {
+        let mut f = zip.by_index(i)?;
+        if f.is_dir() {
+            continue;
+        }
+        let mut bytes = Vec::with_capacity(f.size() as usize);
+        f.read_to_end(&mut bytes)?;
+        out.push((f.name().to_string(), bytes));
+    }
+    Ok(out)
+}
+
+/// Pack + store: returns the code bundle's content address.
+pub fn store_codepack(store: &ObjectStore, files: &[(&str, &[u8])]) -> Result<ObjectId> {
+    store.put(&pack_files(files)?)
+}
+
+/// Fetch + unpack a stored code bundle.
+pub fn load_codepack(store: &ObjectStore, id: &ObjectId) -> Result<Vec<(String, Vec<u8>)>> {
+    unpack(&store.get(id)?)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pack_unpack_roundtrip() {
+        let files: Vec<(&str, &[u8])> =
+            vec![("main.py", b"print('hi')".as_slice()), ("model/net.py", b"class Net: pass")];
+        let archive = pack_files(&files).unwrap();
+        let back = unpack(&archive).unwrap();
+        assert_eq!(back.len(), 2);
+        assert_eq!(back[0].0, "main.py");
+        assert_eq!(back[0].1, b"print('hi')");
+        assert_eq!(back[1].0, "model/net.py");
+    }
+
+    #[test]
+    fn store_and_load() {
+        let store = ObjectStore::memory();
+        let files: Vec<(&str, &[u8])> = vec![("a.py", b"aaaa".as_slice())];
+        let id = store_codepack(&store, &files).unwrap();
+        let back = load_codepack(&store, &id).unwrap();
+        assert_eq!(back[0].1, b"aaaa");
+    }
+
+    #[test]
+    fn deterministic_packing_dedups() {
+        let store = ObjectStore::memory();
+        let files: Vec<(&str, &[u8])> = vec![("a.py", b"same".as_slice())];
+        let id1 = store_codepack(&store, &files).unwrap();
+        let id2 = store_codepack(&store, &files).unwrap();
+        assert_eq!(id1, id2);
+        assert_eq!(store.usage().0, 1);
+    }
+
+    #[test]
+    fn pack_dir_skips_hidden_and_target() {
+        let dir = std::env::temp_dir().join(format!("nsml-pack-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(dir.join("src")).unwrap();
+        std::fs::create_dir_all(dir.join("target")).unwrap();
+        std::fs::write(dir.join("main.py"), b"m").unwrap();
+        std::fs::write(dir.join("src/lib.py"), b"l").unwrap();
+        std::fs::write(dir.join(".secret"), b"s").unwrap();
+        std::fs::write(dir.join("target/junk.bin"), b"j").unwrap();
+        let archive = pack_dir(&dir).unwrap();
+        let names: Vec<String> = unpack(&archive).unwrap().into_iter().map(|(n, _)| n).collect();
+        assert_eq!(names, vec!["main.py", "src/lib.py"]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn corrupt_archive_rejected() {
+        assert!(unpack(b"this is not a zip").is_err());
+    }
+}

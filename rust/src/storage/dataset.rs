@@ -1,0 +1,187 @@
+//! Dataset registry (paper §3.1 Data Management):
+//! "Users should be able to post datasets once and reuse them for multiple
+//! models. Users should be able to share datasets with others."
+//!
+//! A dataset is a named, versioned bundle of objects in the
+//! [`ObjectStore`](super::ObjectStore) plus metadata (owner, visibility,
+//! nominal size). The synthetic data generators in [`crate::data`]
+//! register themselves here so sessions mount datasets exactly the way
+//! real uploads would be.
+
+use super::{ObjectId, ObjectStore};
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex};
+
+/// Dataset metadata + content manifest.
+#[derive(Debug, Clone)]
+pub struct DatasetInfo {
+    pub name: String,
+    pub owner: String,
+    pub public: bool,
+    pub version: u32,
+    /// Logical file name -> object address.
+    pub files: BTreeMap<String, ObjectId>,
+    /// Nominal on-disk size in GB as seen by the mount subsystem. For
+    /// synthetic datasets this is declared, mirroring the real multi-GB
+    /// corpora the paper manages (ImageNet, YouTube-8M).
+    pub nominal_size_gb: f64,
+    /// Free-form description shown by `nsml dataset ls`.
+    pub description: String,
+}
+
+impl DatasetInfo {
+    /// Total physical bytes of the manifest's objects.
+    pub fn physical_bytes(&self, store: &ObjectStore) -> u64 {
+        self.files.values().filter_map(|id| store.get(id).ok()).map(|b| b.len() as u64).sum()
+    }
+}
+
+/// Thread-safe registry of datasets.
+#[derive(Clone)]
+pub struct DatasetRegistry {
+    store: ObjectStore,
+    inner: Arc<Mutex<BTreeMap<String, DatasetInfo>>>,
+}
+
+impl DatasetRegistry {
+    pub fn new(store: ObjectStore) -> DatasetRegistry {
+        DatasetRegistry { store, inner: Arc::new(Mutex::new(BTreeMap::new())) }
+    }
+
+    /// Post (or re-post, bumping the version) a dataset.
+    pub fn push(
+        &self,
+        name: &str,
+        owner: &str,
+        public: bool,
+        files: &[(&str, &[u8])],
+        nominal_size_gb: f64,
+        description: &str,
+    ) -> Result<DatasetInfo> {
+        let mut manifest = BTreeMap::new();
+        for (fname, bytes) in files {
+            manifest.insert(fname.to_string(), self.store.put(bytes)?);
+        }
+        let mut reg = self.inner.lock().unwrap();
+        let version = reg.get(name).map(|d| d.version + 1).unwrap_or(1);
+        if let Some(existing) = reg.get(name) {
+            if existing.owner != owner {
+                return Err(anyhow!("dataset '{}' is owned by {}", name, existing.owner));
+            }
+        }
+        let info = DatasetInfo {
+            name: name.to_string(),
+            owner: owner.to_string(),
+            public,
+            version,
+            files: manifest,
+            nominal_size_gb,
+            description: description.to_string(),
+        };
+        reg.insert(name.to_string(), info.clone());
+        Ok(info)
+    }
+
+    /// Fetch a dataset the given user may read (owner or public).
+    pub fn get(&self, name: &str, user: &str) -> Result<DatasetInfo> {
+        let reg = self.inner.lock().unwrap();
+        let d = reg.get(name).ok_or_else(|| anyhow!("no such dataset '{}'", name))?;
+        if !d.public && d.owner != user {
+            return Err(anyhow!("dataset '{}' is private to {}", name, d.owner));
+        }
+        Ok(d.clone())
+    }
+
+    /// Does the dataset exist (regardless of visibility)?
+    pub fn exists(&self, name: &str) -> bool {
+        self.inner.lock().unwrap().contains_key(name)
+    }
+
+    /// Datasets visible to `user`.
+    pub fn list(&self, user: &str) -> Vec<DatasetInfo> {
+        self.inner
+            .lock()
+            .unwrap()
+            .values()
+            .filter(|d| d.public || d.owner == user)
+            .cloned()
+            .collect()
+    }
+
+    /// Read one file of a dataset.
+    pub fn read_file(&self, name: &str, user: &str, file: &str) -> Result<Vec<u8>> {
+        let d = self.get(name, user)?;
+        let id = d.files.get(file).ok_or_else(|| anyhow!("dataset '{}' has no file '{}'", name, file))?;
+        self.store.get(id)
+    }
+
+    pub fn store(&self) -> &ObjectStore {
+        &self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg() -> DatasetRegistry {
+        DatasetRegistry::new(ObjectStore::memory())
+    }
+
+    #[test]
+    fn push_and_get() {
+        let r = reg();
+        let d = r.push("mnist", "kim", true, &[("train.bin", b"xx"), ("test.bin", b"yy")], 0.1, "digits").unwrap();
+        assert_eq!(d.version, 1);
+        assert_eq!(d.files.len(), 2);
+        let got = r.get("mnist", "anyone").unwrap();
+        assert_eq!(got.name, "mnist");
+        assert_eq!(r.read_file("mnist", "anyone", "train.bin").unwrap(), b"xx");
+    }
+
+    #[test]
+    fn repost_bumps_version() {
+        let r = reg();
+        r.push("d", "kim", true, &[("f", b"v1")], 1.0, "").unwrap();
+        let d2 = r.push("d", "kim", true, &[("f", b"v2")], 1.0, "").unwrap();
+        assert_eq!(d2.version, 2);
+        assert_eq!(r.read_file("d", "kim", "f").unwrap(), b"v2");
+    }
+
+    #[test]
+    fn ownership_enforced_on_repost() {
+        let r = reg();
+        r.push("d", "kim", true, &[], 1.0, "").unwrap();
+        assert!(r.push("d", "lee", true, &[], 1.0, "").is_err());
+    }
+
+    #[test]
+    fn private_datasets_hidden() {
+        let r = reg();
+        r.push("secret", "kim", false, &[("f", b"x")], 1.0, "").unwrap();
+        r.push("open", "kim", true, &[], 1.0, "").unwrap();
+        assert!(r.get("secret", "lee").is_err());
+        assert!(r.get("secret", "kim").is_ok());
+        let visible: Vec<String> = r.list("lee").into_iter().map(|d| d.name).collect();
+        assert_eq!(visible, vec!["open"]);
+        assert_eq!(r.list("kim").len(), 2);
+    }
+
+    #[test]
+    fn missing_lookups_error() {
+        let r = reg();
+        assert!(r.get("nope", "x").is_err());
+        r.push("d", "kim", true, &[("a", b"1")], 1.0, "").unwrap();
+        assert!(r.read_file("d", "kim", "b").is_err());
+    }
+
+    #[test]
+    fn same_content_shares_objects() {
+        let r = reg();
+        r.push("d1", "kim", true, &[("f", b"shared-bytes")], 1.0, "").unwrap();
+        r.push("d2", "kim", true, &[("g", b"shared-bytes")], 1.0, "").unwrap();
+        // One physical object backs both datasets.
+        assert_eq!(r.store().usage().0, 1);
+    }
+}

@@ -1,0 +1,28 @@
+//! Storage containers (paper §3.2) — the minio stand-in.
+//!
+//! "Storage containers use *minio* to store and supply datasets to ML
+//! containers. They also store the performance of all models … back up
+//! intermediate and final results of trained models and also store the
+//! source code associated with the experiments so that users can easily
+//! reproduce … models."
+//!
+//! minio is unavailable offline, so [`ObjectStore`] provides the same
+//! contract: a content-addressed blob store (SHA-256 keys ⇒ free dedup,
+//! integrity checks) with in-memory and filesystem backends. On top of it:
+//!
+//! * [`DatasetRegistry`] — post once, reuse for many models, share with
+//!   other users (§3.1 Data Management).
+//! * [`CheckpointStore`] — intermediate/final model snapshots, the
+//!   substrate for pause/resume, hyperparameter tuning in training time,
+//!   and "reproducing the past experiments".
+//! * [`codepack`] — zip/unzip the user's code directory (what NSML-CLI
+//!   uploads with `nsml run`).
+
+mod objectstore;
+mod dataset;
+mod checkpoint;
+pub mod codepack;
+
+pub use checkpoint::{Checkpoint, CheckpointStore};
+pub use dataset::{DatasetInfo, DatasetRegistry};
+pub use objectstore::{ObjectId, ObjectStore};

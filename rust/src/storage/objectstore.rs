@@ -1,0 +1,235 @@
+//! Content-addressed object store (the minio substitute).
+//!
+//! Objects are keyed by the SHA-256 of their contents: identical uploads
+//! dedup for free (one physical copy however many sessions reference it),
+//! and every read can be integrity-checked against its key.
+
+use anyhow::{anyhow, Context, Result};
+use sha2::{Digest, Sha256};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+
+/// Content address: lowercase hex SHA-256.
+#[derive(Debug, Clone, PartialEq, Eq, PartialOrd, Ord, Hash)]
+pub struct ObjectId(pub String);
+
+impl ObjectId {
+    pub fn of(bytes: &[u8]) -> ObjectId {
+        let mut h = Sha256::new();
+        h.update(bytes);
+        ObjectId(hex(&h.finalize()))
+    }
+
+    /// Abbreviated id for display.
+    pub fn short(&self) -> &str {
+        &self.0[..12.min(self.0.len())]
+    }
+}
+
+impl std::fmt::Display for ObjectId {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.short())
+    }
+}
+
+fn hex(bytes: &[u8]) -> String {
+    let mut s = String::with_capacity(bytes.len() * 2);
+    for b in bytes {
+        s.push_str(&format!("{:02x}", b));
+    }
+    s
+}
+
+enum Backend {
+    Mem(Mutex<BTreeMap<ObjectId, Arc<Vec<u8>>>>),
+    Fs(PathBuf),
+}
+
+/// The store. Clone-cheap (`Arc` inside).
+#[derive(Clone)]
+pub struct ObjectStore {
+    backend: Arc<Backend>,
+}
+
+impl ObjectStore {
+    /// In-memory store (tests, benches, ephemeral platforms).
+    pub fn memory() -> ObjectStore {
+        ObjectStore { backend: Arc::new(Backend::Mem(Mutex::new(BTreeMap::new()))) }
+    }
+
+    /// Filesystem store rooted at `dir` (sharded by key prefix like git).
+    pub fn filesystem(dir: impl Into<PathBuf>) -> Result<ObjectStore> {
+        let dir = dir.into();
+        std::fs::create_dir_all(&dir).with_context(|| format!("creating {}", dir.display()))?;
+        Ok(ObjectStore { backend: Arc::new(Backend::Fs(dir)) })
+    }
+
+    fn fs_path(dir: &PathBuf, id: &ObjectId) -> PathBuf {
+        dir.join(&id.0[..2]).join(&id.0[2..])
+    }
+
+    /// Store bytes; returns the content address. Idempotent.
+    pub fn put(&self, bytes: &[u8]) -> Result<ObjectId> {
+        let id = ObjectId::of(bytes);
+        match &*self.backend {
+            Backend::Mem(m) => {
+                m.lock().unwrap().entry(id.clone()).or_insert_with(|| Arc::new(bytes.to_vec()));
+            }
+            Backend::Fs(dir) => {
+                let path = Self::fs_path(dir, &id);
+                if !path.exists() {
+                    std::fs::create_dir_all(path.parent().unwrap())?;
+                    // Write via temp + rename for atomicity.
+                    let tmp = path.with_extension("tmp");
+                    std::fs::write(&tmp, bytes)?;
+                    std::fs::rename(&tmp, &path)?;
+                }
+            }
+        }
+        Ok(id)
+    }
+
+    /// Fetch bytes, verifying content integrity.
+    pub fn get(&self, id: &ObjectId) -> Result<Vec<u8>> {
+        let bytes = match &*self.backend {
+            Backend::Mem(m) => m
+                .lock()
+                .unwrap()
+                .get(id)
+                .cloned()
+                .map(|a| a.as_ref().clone())
+                .ok_or_else(|| anyhow!("object {} not found", id))?,
+            Backend::Fs(dir) => {
+                let path = Self::fs_path(dir, id);
+                std::fs::read(&path).with_context(|| format!("object {} not found", id))?
+            }
+        };
+        let actual = ObjectId::of(&bytes);
+        if &actual != id {
+            return Err(anyhow!("integrity failure: wanted {}, content hashes to {}", id, actual));
+        }
+        Ok(bytes)
+    }
+
+    pub fn has(&self, id: &ObjectId) -> bool {
+        match &*self.backend {
+            Backend::Mem(m) => m.lock().unwrap().contains_key(id),
+            Backend::Fs(dir) => Self::fs_path(dir, id).exists(),
+        }
+    }
+
+    pub fn delete(&self, id: &ObjectId) -> bool {
+        match &*self.backend {
+            Backend::Mem(m) => m.lock().unwrap().remove(id).is_some(),
+            Backend::Fs(dir) => std::fs::remove_file(Self::fs_path(dir, id)).is_ok(),
+        }
+    }
+
+    /// (object count, total bytes). O(n) on the fs backend.
+    pub fn usage(&self) -> (usize, u64) {
+        match &*self.backend {
+            Backend::Mem(m) => {
+                let m = m.lock().unwrap();
+                (m.len(), m.values().map(|v| v.len() as u64).sum())
+            }
+            Backend::Fs(dir) => {
+                let mut count = 0;
+                let mut bytes = 0;
+                if let Ok(shards) = std::fs::read_dir(dir) {
+                    for shard in shards.flatten() {
+                        if let Ok(files) = std::fs::read_dir(shard.path()) {
+                            for f in files.flatten() {
+                                if let Ok(meta) = f.metadata() {
+                                    if meta.is_file() {
+                                        count += 1;
+                                        bytes += meta.len();
+                                    }
+                                }
+                            }
+                        }
+                    }
+                }
+                (count, bytes)
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip_memory() {
+        let s = ObjectStore::memory();
+        let id = s.put(b"hello nsml").unwrap();
+        assert_eq!(s.get(&id).unwrap(), b"hello nsml");
+        assert!(s.has(&id));
+        assert!(!s.has(&ObjectId::of(b"other")));
+    }
+
+    #[test]
+    fn content_addressing_dedups() {
+        let s = ObjectStore::memory();
+        let a = s.put(b"same").unwrap();
+        let b = s.put(b"same").unwrap();
+        assert_eq!(a, b);
+        assert_eq!(s.usage(), (1, 4));
+    }
+
+    #[test]
+    fn distinct_content_distinct_ids() {
+        let a = ObjectId::of(b"a");
+        let b = ObjectId::of(b"b");
+        assert_ne!(a, b);
+        assert_eq!(a.0.len(), 64);
+    }
+
+    #[test]
+    fn missing_object_errors() {
+        let s = ObjectStore::memory();
+        assert!(s.get(&ObjectId::of(b"nope")).is_err());
+    }
+
+    #[test]
+    fn delete_frees() {
+        let s = ObjectStore::memory();
+        let id = s.put(b"x").unwrap();
+        assert!(s.delete(&id));
+        assert!(!s.delete(&id));
+        assert!(!s.has(&id));
+    }
+
+    #[test]
+    fn fs_backend_roundtrip_and_shard_layout() {
+        let dir = std::env::temp_dir().join(format!("nsml-os-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ObjectStore::filesystem(&dir).unwrap();
+        let id = s.put(b"persisted bytes").unwrap();
+        assert!(s.has(&id));
+        assert_eq!(s.get(&id).unwrap(), b"persisted bytes");
+        // Shard dir layout: <root>/<2 hex>/<62 hex>.
+        assert!(dir.join(&id.0[..2]).join(&id.0[2..]).exists());
+        // Reopen sees the same data (durability).
+        let s2 = ObjectStore::filesystem(&dir).unwrap();
+        assert_eq!(s2.get(&id).unwrap(), b"persisted bytes");
+        let (n, bytes) = s2.usage();
+        assert_eq!(n, 1);
+        assert_eq!(bytes, 15);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fs_integrity_check_detects_corruption() {
+        let dir = std::env::temp_dir().join(format!("nsml-os-corrupt-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ObjectStore::filesystem(&dir).unwrap();
+        let id = s.put(b"good data").unwrap();
+        let path = dir.join(&id.0[..2]).join(&id.0[2..]);
+        std::fs::write(&path, b"tampered!").unwrap();
+        let err = s.get(&id).unwrap_err().to_string();
+        assert!(err.contains("integrity"), "{}", err);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,315 @@
+//! Tiny declarative CLI argument parser (clap stand-in).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, `-k value`, positional
+//! arguments, subcommand dispatch, defaults, and auto-generated `--help`.
+
+use std::collections::BTreeMap;
+
+/// Specification for one option.
+#[derive(Debug, Clone)]
+struct OptSpec {
+    long: String,
+    short: Option<char>,
+    help: String,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// A declarative argument parser for one (sub)command.
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    name: String,
+    about: String,
+    opts: Vec<OptSpec>,
+    positionals: Vec<(String, String, bool)>, // (name, help, required)
+    allow_trailing: bool,
+}
+
+/// Parse result: option values + positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positionals: Vec<String>,
+    trailing: Vec<String>,
+}
+
+impl ArgSpec {
+    pub fn new(name: &str, about: &str) -> ArgSpec {
+        ArgSpec {
+            name: name.to_string(),
+            about: about.to_string(),
+            opts: Vec::new(),
+            positionals: Vec::new(),
+            allow_trailing: false,
+        }
+    }
+
+    /// Add a boolean flag (`--verbose`).
+    pub fn flag(mut self, long: &str, short: Option<char>, help: &str) -> Self {
+        self.opts.push(OptSpec {
+            long: long.to_string(),
+            short,
+            help: help.to_string(),
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Add a valued option (`--gpus 2`), optionally with a default.
+    pub fn opt(mut self, long: &str, short: Option<char>, help: &str, default: Option<&str>) -> Self {
+        self.opts.push(OptSpec {
+            long: long.to_string(),
+            short,
+            help: help.to_string(),
+            takes_value: true,
+            default: default.map(str::to_string),
+        });
+        self
+    }
+
+    /// Add a positional argument.
+    pub fn pos(mut self, name: &str, help: &str, required: bool) -> Self {
+        self.positionals.push((name.to_string(), help.to_string(), required));
+        self
+    }
+
+    /// Allow extra trailing positionals (collected into `Parsed::trailing`).
+    pub fn trailing(mut self) -> Self {
+        self.allow_trailing = true;
+        self
+    }
+
+    /// Render a help string.
+    pub fn help(&self) -> String {
+        let mut s = format!("{} — {}\n\nUSAGE:\n  {}", self.name, self.about, self.name);
+        if !self.opts.is_empty() {
+            s.push_str(" [OPTIONS]");
+        }
+        for (p, _, req) in &self.positionals {
+            if *req {
+                s.push_str(&format!(" <{}>", p));
+            } else {
+                s.push_str(&format!(" [{}]", p));
+            }
+        }
+        if self.allow_trailing {
+            s.push_str(" [...]");
+        }
+        s.push('\n');
+        if !self.positionals.is_empty() {
+            s.push_str("\nARGS:\n");
+            for (p, h, _) in &self.positionals {
+                s.push_str(&format!("  {:<18} {}\n", p, h));
+            }
+        }
+        if !self.opts.is_empty() {
+            s.push_str("\nOPTIONS:\n");
+            for o in &self.opts {
+                let mut left = String::new();
+                if let Some(c) = o.short {
+                    left.push_str(&format!("-{}, ", c));
+                } else {
+                    left.push_str("    ");
+                }
+                left.push_str(&format!("--{}", o.long));
+                if o.takes_value {
+                    left.push_str(" <v>");
+                }
+                let mut help = o.help.clone();
+                if let Some(d) = &o.default {
+                    help.push_str(&format!(" [default: {}]", d));
+                }
+                s.push_str(&format!("  {:<20} {}\n", left, help));
+            }
+        }
+        s
+    }
+
+    /// Parse the given argument list.
+    pub fn parse(&self, args: &[String]) -> Result<Parsed, String> {
+        let mut out = Parsed::default();
+        for o in &self.opts {
+            if let Some(d) = &o.default {
+                out.values.insert(o.long.clone(), d.clone());
+            }
+            if !o.takes_value {
+                out.flags.insert(o.long.clone(), false);
+            }
+        }
+        let mut i = 0;
+        while i < args.len() {
+            let a = &args[i];
+            if a == "--help" || a == "-h" {
+                return Err(self.help());
+            }
+            if let Some(rest) = a.strip_prefix("--") {
+                let (key, inline_val) = match rest.split_once('=') {
+                    Some((k, v)) => (k.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.long == key)
+                    .ok_or_else(|| format!("unknown option --{} (try --help)", key))?;
+                if spec.takes_value {
+                    let v = match inline_val {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            args.get(i).cloned().ok_or_else(|| format!("--{} needs a value", key))?
+                        }
+                    };
+                    out.values.insert(key, v);
+                } else {
+                    if inline_val.is_some() {
+                        return Err(format!("--{} does not take a value", key));
+                    }
+                    out.flags.insert(key, true);
+                }
+            } else if let Some(short) = a.strip_prefix('-').filter(|s| s.len() == 1) {
+                let c = short.chars().next().unwrap();
+                let spec = self
+                    .opts
+                    .iter()
+                    .find(|o| o.short == Some(c))
+                    .ok_or_else(|| format!("unknown option -{} (try --help)", c))?;
+                if spec.takes_value {
+                    i += 1;
+                    let v = args.get(i).cloned().ok_or_else(|| format!("-{} needs a value", c))?;
+                    out.values.insert(spec.long.clone(), v);
+                } else {
+                    out.flags.insert(spec.long.clone(), true);
+                }
+            } else if out.positionals.len() < self.positionals.len() {
+                out.positionals.push(a.clone());
+            } else if self.allow_trailing {
+                out.trailing.push(a.clone());
+            } else {
+                return Err(format!("unexpected argument '{}'", a));
+            }
+            i += 1;
+        }
+        for (idx, (name, _, required)) in self.positionals.iter().enumerate() {
+            if *required && out.positionals.len() <= idx {
+                return Err(format!("missing required argument <{}>\n\n{}", name, self.help()));
+            }
+        }
+        Ok(out)
+    }
+}
+
+impl Parsed {
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(String::as_str)
+    }
+
+    pub fn flag(&self, key: &str) -> bool {
+        self.flags.get(key).copied().unwrap_or(false)
+    }
+
+    pub fn pos(&self, idx: usize) -> Option<&str> {
+        self.positionals.get(idx).map(String::as_str)
+    }
+
+    pub fn trailing(&self) -> &[String] {
+        &self.trailing
+    }
+
+    /// Typed getters with error messages.
+    pub fn get_usize(&self, key: &str) -> Result<usize, String> {
+        self.get(key)
+            .ok_or_else(|| format!("missing --{}", key))?
+            .parse()
+            .map_err(|e| format!("--{}: {}", key, e))
+    }
+
+    pub fn get_f64(&self, key: &str) -> Result<f64, String> {
+        self.get(key)
+            .ok_or_else(|| format!("missing --{}", key))?
+            .parse()
+            .map_err(|e| format!("--{}: {}", key, e))
+    }
+}
+
+#[cfg(test)]
+fn svec(xs: &[&str]) -> Vec<String> {
+    xs.iter().map(|s| s.to_string()).collect()
+}
+
+/// Split `argv` into (subcommand, rest); empty subcommand if none given.
+pub fn split_subcommand(args: &[String]) -> (String, Vec<String>) {
+    match args.first() {
+        Some(cmd) if !cmd.starts_with('-') => (cmd.clone(), args[1..].to_vec()),
+        _ => (String::new(), args.to_vec()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> ArgSpec {
+        ArgSpec::new("nsml run", "run a model")
+            .opt("dataset", Some('d'), "dataset name", None)
+            .opt("gpus", Some('g'), "gpu count", Some("1"))
+            .flag("verbose", Some('v'), "chatty")
+            .pos("entry", "entry file", true)
+            .trailing()
+    }
+
+    #[test]
+    fn parses_mixed() {
+        let p = spec()
+            .parse(&svec(&["main.py", "-d", "mnist", "--gpus=4", "--verbose", "x", "y"]))
+            .unwrap();
+        assert_eq!(p.pos(0), Some("main.py"));
+        assert_eq!(p.get("dataset"), Some("mnist"));
+        assert_eq!(p.get_usize("gpus").unwrap(), 4);
+        assert!(p.flag("verbose"));
+        assert_eq!(p.trailing(), &["x".to_string(), "y".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = spec().parse(&svec(&["main.py"])).unwrap();
+        assert_eq!(p.get_usize("gpus").unwrap(), 1);
+        assert!(!p.flag("verbose"));
+        assert_eq!(p.get("dataset"), None);
+    }
+
+    #[test]
+    fn missing_required_positional() {
+        assert!(spec().parse(&[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_rejected() {
+        assert!(spec().parse(&svec(&["main.py", "--wat"])).is_err());
+    }
+
+    #[test]
+    fn value_missing_rejected() {
+        assert!(spec().parse(&svec(&["main.py", "--dataset"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let h = spec().help();
+        assert!(h.contains("--dataset"));
+        assert!(h.contains("[default: 1]"));
+        let err = spec().parse(&svec(&["--help"])).unwrap_err();
+        assert!(err.contains("USAGE"));
+    }
+
+    #[test]
+    fn subcommand_split() {
+        let (cmd, rest) = split_subcommand(&svec(&["run", "main.py", "-d", "x"]));
+        assert_eq!(cmd, "run");
+        assert_eq!(rest.len(), 3);
+        let (cmd, _) = split_subcommand(&svec(&["--help"]));
+        assert_eq!(cmd, "");
+    }
+}

@@ -1,0 +1,207 @@
+//! Mini-criterion: a benchmark harness for `harness = false` benches.
+//!
+//! Provides warmup, adaptive iteration counts, summary statistics,
+//! pairwise comparison ("A is 3.2× faster than B"), and a machine-readable
+//! JSON dump alongside the human-readable report.
+
+use super::json::Json;
+use super::stats;
+use super::table::{fms, Table};
+use std::time::Instant;
+
+/// One measured benchmark result.
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub samples_ms: Vec<f64>,
+    /// Optional units processed per iteration (for throughput reporting).
+    pub units_per_iter: Option<f64>,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        stats(&self.samples_ms).mean
+    }
+
+    pub fn p50_ms(&self) -> f64 {
+        stats(&self.samples_ms).p50
+    }
+
+    /// Units per second, if units were declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter.map(|u| u / (self.mean_ms() / 1000.0))
+    }
+}
+
+/// Benchmark runner: collects results, prints a report.
+pub struct Bench {
+    suite: String,
+    warmup_iters: usize,
+    sample_count: usize,
+    results: Vec<BenchResult>,
+}
+
+impl Bench {
+    pub fn new(suite: &str) -> Bench {
+        // NSML_BENCH_FAST=1 shrinks sampling for CI-style smoke runs.
+        let fast = std::env::var("NSML_BENCH_FAST").is_ok();
+        Bench {
+            suite: suite.to_string(),
+            warmup_iters: if fast { 1 } else { 3 },
+            sample_count: if fast { 5 } else { 15 },
+            results: Vec::new(),
+        }
+    }
+
+    pub fn with_samples(mut self, n: usize) -> Self {
+        self.sample_count = n;
+        self
+    }
+
+    /// Measure `f` (one call = one iteration).
+    pub fn run<F: FnMut()>(&mut self, name: &str, mut f: F) -> &BenchResult {
+        self.run_units(name, None, &mut f)
+    }
+
+    /// Measure `f` that processes `units` items per call.
+    pub fn run_with_units<F: FnMut()>(&mut self, name: &str, units: f64, mut f: F) -> &BenchResult {
+        self.run_units(name, Some(units), &mut f)
+    }
+
+    fn run_units(&mut self, name: &str, units: Option<f64>, f: &mut dyn FnMut()) -> &BenchResult {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut samples = Vec::with_capacity(self.sample_count);
+        for _ in 0..self.sample_count {
+            let t0 = Instant::now();
+            f();
+            samples.push(t0.elapsed().as_secs_f64() * 1000.0);
+        }
+        eprintln!("  measured {:<44} p50={}", name, fms(stats(&samples).p50));
+        self.results.push(BenchResult {
+            name: name.to_string(),
+            samples_ms: samples,
+            units_per_iter: units,
+        });
+        self.results.last().unwrap()
+    }
+
+    /// Record an externally measured sample set (for virtual-time benches).
+    pub fn record(&mut self, name: &str, samples_ms: Vec<f64>, units: Option<f64>) {
+        self.results.push(BenchResult { name: name.to_string(), samples_ms, units_per_iter: units });
+    }
+
+    pub fn result(&self, name: &str) -> Option<&BenchResult> {
+        self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Print the human-readable report; returns it as a string too.
+    pub fn report(&self) -> String {
+        let mut t = Table::new(&["benchmark", "p50", "mean", "p95", "std", "throughput"]).right(&[1, 2, 3, 4, 5]);
+        for r in &self.results {
+            let s = stats(&r.samples_ms);
+            let tp = match r.throughput() {
+                Some(x) if x >= 1000.0 => format!("{:.0}/s", x),
+                Some(x) => format!("{:.2}/s", x),
+                None => "-".to_string(),
+            };
+            t.row(&[
+                r.name.clone(),
+                fms(s.p50),
+                fms(s.mean),
+                fms(s.p95),
+                fms(s.std),
+                tp,
+            ]);
+        }
+        let mut out = format!("\n== {} ==\n{}", self.suite, t.render());
+        for line in self.comparisons() {
+            out.push_str(&line);
+            out.push('\n');
+        }
+        println!("{}", out);
+        out
+    }
+
+    /// Pairwise speedups vs the first result (the baseline).
+    fn comparisons(&self) -> Vec<String> {
+        let mut lines = Vec::new();
+        if let Some(base) = self.results.first() {
+            let b = base.mean_ms();
+            for r in &self.results[1..] {
+                let ratio = b / r.mean_ms();
+                if ratio >= 1.0 {
+                    lines.push(format!("  {} is {:.2}x faster than {}", r.name, ratio, base.name));
+                } else {
+                    lines.push(format!("  {} is {:.2}x slower than {}", r.name, 1.0 / ratio, base.name));
+                }
+            }
+        }
+        lines
+    }
+
+    /// Dump machine-readable results to `target/bench-results/<suite>.json`.
+    pub fn save_json(&self) {
+        let mut arr = Vec::new();
+        for r in &self.results {
+            let s = stats(&r.samples_ms);
+            let mut o = Json::obj();
+            o.set("name", r.name.as_str().into())
+                .set("mean_ms", s.mean.into())
+                .set("p50_ms", s.p50.into())
+                .set("p95_ms", s.p95.into())
+                .set("std_ms", s.std.into())
+                .set("samples", (s.n as u64).into());
+            if let Some(tp) = r.throughput() {
+                o.set("throughput_per_s", tp.into());
+            }
+            arr.push(o);
+        }
+        let mut doc = Json::obj();
+        doc.set("suite", self.suite.as_str().into()).set("results", Json::Arr(arr));
+        let dir = std::path::Path::new("target/bench-results");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.json", self.suite.replace([' ', '/'], "_")));
+        let _ = std::fs::write(path, doc.to_pretty());
+    }
+
+    /// `report()` + `save_json()`.
+    pub fn finish(&self) {
+        self.report();
+        self.save_json();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_and_reports() {
+        std::env::set_var("NSML_BENCH_FAST", "1");
+        let mut b = Bench::new("unit-test-suite").with_samples(3);
+        b.run("noop", || {});
+        b.run_with_units("spin", 100.0, || {
+            let mut x = 0u64;
+            for i in 0..1000 {
+                x = x.wrapping_add(i);
+            }
+            std::hint::black_box(x);
+        });
+        let rep = b.report();
+        assert!(rep.contains("noop"));
+        assert!(rep.contains("spin"));
+        assert!(b.result("spin").unwrap().throughput().unwrap() > 0.0);
+        assert!(rep.contains("faster") || rep.contains("slower"));
+    }
+
+    #[test]
+    fn record_external_samples() {
+        let mut b = Bench::new("virtual");
+        b.record("simulated", vec![1.0, 2.0, 3.0], Some(10.0));
+        let r = b.result("simulated").unwrap();
+        assert!((r.mean_ms() - 2.0).abs() < 1e-9);
+        assert!((r.throughput().unwrap() - 5000.0).abs() < 1e-6);
+    }
+}

@@ -1,0 +1,78 @@
+//! Human-friendly unique id generation.
+//!
+//! NSML sessions get kaggle/nsml-style ids like `nsml/mnist/7-brave-hornet`;
+//! this module provides the monotonic counter + name mangle.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+static COUNTER: AtomicU64 = AtomicU64::new(1);
+
+const ADJ: &[&str] = &[
+    "brave", "calm", "deft", "eager", "fuzzy", "grand", "happy", "ideal", "jolly", "keen",
+    "lucid", "merry", "noble", "prime", "quick", "rapid", "sharp", "tidy", "vivid", "witty",
+];
+const NOUN: &[&str] = &[
+    "ant", "bear", "crane", "dove", "eagle", "fox", "gull", "hornet", "ibis", "jay",
+    "koala", "lynx", "mole", "newt", "otter", "panda", "quail", "raven", "seal", "tiger",
+];
+
+/// Next global sequence number (process-wide, monotone).
+pub fn next_seq() -> u64 {
+    COUNTER.fetch_add(1, Ordering::Relaxed)
+}
+
+/// Reset the counter (tests only).
+pub fn reset_for_test() {
+    COUNTER.store(1, Ordering::SeqCst);
+}
+
+/// A readable session suffix like `7-brave-hornet`, deterministic in `seq`.
+pub fn session_suffix(seq: u64) -> String {
+    let a = ADJ[(seq.wrapping_mul(2654435761) % ADJ.len() as u64) as usize];
+    let n = NOUN[(seq.wrapping_mul(40503) % NOUN.len() as u64) as usize];
+    format!("{}-{}-{}", seq, a, n)
+}
+
+/// Full session id: `user/dataset/seq-adj-noun` (paper's SESSION handle).
+pub fn session_id(user: &str, dataset: &str) -> String {
+    format!("{}/{}/{}", user, dataset, session_suffix(next_seq()))
+}
+
+/// Sanitize a string for use as a filesystem path component.
+pub fn sanitize(s: &str) -> String {
+    s.chars().map(|c| if c.is_ascii_alphanumeric() || c == '-' || c == '_' || c == '.' { c } else { '_' }).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn seq_monotone() {
+        let a = next_seq();
+        let b = next_seq();
+        assert!(b > a);
+    }
+
+    #[test]
+    fn suffix_deterministic() {
+        assert_eq!(session_suffix(7), session_suffix(7));
+        assert_ne!(session_suffix(7), session_suffix(8));
+        assert!(session_suffix(3).starts_with("3-"));
+    }
+
+    #[test]
+    fn session_id_shape() {
+        let id = session_id("kim", "mnist");
+        let parts: Vec<&str> = id.split('/').collect();
+        assert_eq!(parts.len(), 3);
+        assert_eq!(parts[0], "kim");
+        assert_eq!(parts[1], "mnist");
+    }
+
+    #[test]
+    fn sanitize_paths() {
+        assert_eq!(sanitize("kim/mnist/1-a-b"), "kim_mnist_1-a-b");
+        assert_eq!(sanitize("ok-file_1.txt"), "ok-file_1.txt");
+    }
+}

@@ -1,0 +1,86 @@
+//! Self-contained utility substrates.
+//!
+//! This image is offline and only ships the `xla` crate's dependency
+//! closure, so the usual ecosystem crates (serde, clap, criterion,
+//! proptest, rand, …) are unavailable. Everything the platform needs
+//! beyond that closure is implemented here from scratch:
+//!
+//! * [`json`] — JSON parser/serializer (artifact manifests, API, persistence)
+//! * [`rng`] — PCG64 PRNG with normal/choice/shuffle helpers
+//! * [`argparse`] — declarative CLI argument parser
+//! * [`table`] — plain-text table rendering
+//! * [`plot`] — ASCII + SVG line charts (TensorBoard/Visdom stand-in)
+//! * [`tomlcfg`] — TOML-lite config parser
+//! * [`bench`] — criterion-like benchmark harness for `harness = false` benches
+//! * [`clock`] — real + virtual clocks (virtual time drives the simulators)
+//! * [`idgen`] — human-friendly unique ids (`nsml`-style session names)
+//! * [`quickcheck`] — minimal property-testing harness
+
+pub mod json;
+pub mod rng;
+pub mod argparse;
+pub mod table;
+pub mod plot;
+pub mod tomlcfg;
+pub mod bench;
+pub mod clock;
+pub mod idgen;
+pub mod quickcheck;
+
+/// Compute simple summary statistics over a slice.
+pub fn stats(xs: &[f64]) -> Stats {
+    if xs.is_empty() {
+        return Stats { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0 };
+    }
+    let n = xs.len();
+    let mean = xs.iter().sum::<f64>() / n as f64;
+    let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+    let mut sorted: Vec<f64> = xs.to_vec();
+    sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let pct = |p: f64| -> f64 {
+        let idx = ((n as f64 - 1.0) * p).round() as usize;
+        sorted[idx.min(n - 1)]
+    };
+    Stats {
+        n,
+        mean,
+        std: var.sqrt(),
+        min: sorted[0],
+        max: sorted[n - 1],
+        p50: pct(0.5),
+        p95: pct(0.95),
+    }
+}
+
+/// Summary statistics produced by [`stats`].
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Stats {
+    pub n: usize,
+    pub mean: f64,
+    pub std: f64,
+    pub min: f64,
+    pub max: f64,
+    pub p50: f64,
+    pub p95: f64,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stats_basic() {
+        let s = stats(&[1.0, 2.0, 3.0, 4.0, 5.0]);
+        assert_eq!(s.n, 5);
+        assert!((s.mean - 3.0).abs() < 1e-12);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 5.0);
+        assert_eq!(s.p50, 3.0);
+    }
+
+    #[test]
+    fn stats_empty() {
+        let s = stats(&[]);
+        assert_eq!(s.n, 0);
+    }
+}

@@ -1,0 +1,222 @@
+//! Learning-curve plotting: ASCII charts for the CLI (`nsml plot`) and SVG
+//! charts for the web UI — the platform's TensorBoard/Visdom stand-in.
+
+/// A named series of (x, y) points.
+#[derive(Debug, Clone)]
+pub struct Series {
+    pub name: String,
+    pub points: Vec<(f64, f64)>,
+}
+
+impl Series {
+    pub fn new(name: &str, points: Vec<(f64, f64)>) -> Series {
+        Series { name: name.to_string(), points }
+    }
+
+    pub fn from_ys(name: &str, ys: &[f64]) -> Series {
+        Series::new(name, ys.iter().enumerate().map(|(i, &y)| (i as f64, y)).collect())
+    }
+}
+
+fn bounds(series: &[Series]) -> Option<(f64, f64, f64, f64)> {
+    let mut it = series.iter().flat_map(|s| s.points.iter()).copied();
+    let (x0, y0) = it.next()?;
+    let mut b = (x0, x0, y0, y0);
+    for (x, y) in it {
+        b.0 = b.0.min(x);
+        b.1 = b.1.max(x);
+        b.2 = b.2.min(y);
+        b.3 = b.3.max(y);
+    }
+    // Avoid zero-size ranges.
+    if b.0 == b.1 {
+        b.1 += 1.0;
+    }
+    if b.2 == b.3 {
+        b.3 += 1.0;
+    }
+    Some(b)
+}
+
+const MARKS: &[char] = &['*', 'o', '+', 'x', '#', '@'];
+
+/// Render an ASCII line chart (scatter of the series points on a grid).
+pub fn ascii_chart(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let Some((xmin, xmax, ymin, ymax)) = bounds(series) else {
+        return format!("{}\n(no data)\n", title);
+    };
+    let mut grid = vec![vec![' '; width]; height];
+    for (si, s) in series.iter().enumerate() {
+        let mark = MARKS[si % MARKS.len()];
+        for &(x, y) in &s.points {
+            let cx = ((x - xmin) / (xmax - xmin) * (width - 1) as f64).round() as usize;
+            let cy = ((y - ymin) / (ymax - ymin) * (height - 1) as f64).round() as usize;
+            let row = height - 1 - cy.min(height - 1);
+            grid[row][cx.min(width - 1)] = mark;
+        }
+    }
+    let mut out = String::new();
+    out.push_str(title);
+    out.push('\n');
+    out.push_str(&format!("{:>10.4} ┤", ymax));
+    out.push_str(&grid[0].iter().collect::<String>());
+    out.push('\n');
+    for row in &grid[1..height - 1] {
+        out.push_str("           │");
+        out.push_str(&row.iter().collect::<String>());
+        out.push('\n');
+    }
+    out.push_str(&format!("{:>10.4} ┤", ymin));
+    out.push_str(&grid[height - 1].iter().collect::<String>());
+    out.push('\n');
+    out.push_str(&format!("           └{}\n", "─".repeat(width)));
+    out.push_str(&format!("            {:<10.4}{:>w$.4}\n", xmin, xmax, w = width.saturating_sub(10)));
+    for (si, s) in series.iter().enumerate() {
+        out.push_str(&format!("            {} {}\n", MARKS[si % MARKS.len()], s.name));
+    }
+    out
+}
+
+/// Render an SVG line chart (for the web UI).
+pub fn svg_chart(title: &str, series: &[Series], width: usize, height: usize) -> String {
+    let colors = ["#1f77b4", "#ff7f0e", "#2ca02c", "#d62728", "#9467bd", "#8c564b"];
+    let (w, h) = (width as f64, height as f64);
+    let (ml, mr, mt, mb) = (56.0, 12.0, 28.0, 34.0); // margins
+    let mut svg = format!(
+        r#"<svg xmlns="http://www.w3.org/2000/svg" width="{width}" height="{height}" font-family="monospace" font-size="11">"#
+    );
+    svg.push_str(&format!(
+        r##"<rect width="{width}" height="{height}" fill="white" stroke="#ccc"/>"##
+    ));
+    svg.push_str(&format!(
+        r#"<text x="{}" y="18" font-size="13" text-anchor="middle">{}</text>"#,
+        w / 2.0,
+        xml_escape(title)
+    ));
+    let Some((xmin, xmax, ymin, ymax)) = bounds(series) else {
+        svg.push_str("</svg>");
+        return svg;
+    };
+    let px = |x: f64| ml + (x - xmin) / (xmax - xmin) * (w - ml - mr);
+    let py = |y: f64| h - mb - (y - ymin) / (ymax - ymin) * (h - mt - mb);
+    // Axes + gridlines with labels.
+    for i in 0..=4 {
+        let frac = i as f64 / 4.0;
+        let yv = ymin + frac * (ymax - ymin);
+        let ypix = py(yv);
+        svg.push_str(&format!(
+            r##"<line x1="{ml}" y1="{ypix:.1}" x2="{:.1}" y2="{ypix:.1}" stroke="#eee"/>"##,
+            w - mr
+        ));
+        svg.push_str(&format!(
+            r#"<text x="{:.1}" y="{:.1}" text-anchor="end">{}</text>"#,
+            ml - 4.0,
+            ypix + 4.0,
+            short(yv)
+        ));
+        let xv = xmin + frac * (xmax - xmin);
+        let xpix = px(xv);
+        svg.push_str(&format!(
+            r#"<text x="{:.1}" y="{:.1}" text-anchor="middle">{}</text>"#,
+            xpix,
+            h - mb + 16.0,
+            short(xv)
+        ));
+    }
+    svg.push_str(&format!(
+        r##"<line x1="{ml}" y1="{:.1}" x2="{:.1}" y2="{:.1}" stroke="#333"/>"##,
+        h - mb,
+        w - mr,
+        h - mb
+    ));
+    svg.push_str(&format!(r##"<line x1="{ml}" y1="{mt}" x2="{ml}" y2="{:.1}" stroke="#333"/>"##, h - mb));
+    for (si, s) in series.iter().enumerate() {
+        if s.points.is_empty() {
+            continue;
+        }
+        let color = colors[si % colors.len()];
+        let path: Vec<String> = s
+            .points
+            .iter()
+            .enumerate()
+            .map(|(i, &(x, y))| {
+                format!("{}{:.1},{:.1}", if i == 0 { "M" } else { "L" }, px(x), py(y))
+            })
+            .collect();
+        svg.push_str(&format!(
+            r#"<path d="{}" fill="none" stroke="{}" stroke-width="1.5"/>"#,
+            path.join(" "),
+            color
+        ));
+        svg.push_str(&format!(
+            r#"<text x="{:.1}" y="{:.1}" fill="{}">{}</text>"#,
+            ml + 8.0,
+            mt + 14.0 * (si as f64 + 1.0),
+            color,
+            xml_escape(&s.name)
+        ));
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
+fn short(v: f64) -> String {
+    if v == 0.0 {
+        "0".into()
+    } else if v.abs() >= 10000.0 || v.abs() < 0.001 {
+        format!("{:.1e}", v)
+    } else if v == v.trunc() {
+        format!("{}", v as i64)
+    } else {
+        format!("{:.3}", v)
+    }
+}
+
+/// Escape text for embedding in XML/HTML.
+pub fn xml_escape(s: &str) -> String {
+    s.replace('&', "&amp;").replace('<', "&lt;").replace('>', "&gt;").replace('"', "&quot;")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ascii_contains_marks_and_legend() {
+        let s = Series::from_ys("loss", &[5.0, 3.0, 2.0, 1.5, 1.2, 1.1]);
+        let out = ascii_chart("training", &[s], 40, 10);
+        assert!(out.contains('*'));
+        assert!(out.contains("loss"));
+        assert!(out.contains("training"));
+        assert!(out.lines().count() > 10);
+    }
+
+    #[test]
+    fn ascii_empty_ok() {
+        let out = ascii_chart("t", &[], 40, 10);
+        assert!(out.contains("no data"));
+    }
+
+    #[test]
+    fn ascii_constant_series_ok() {
+        let s = Series::from_ys("flat", &[1.0, 1.0, 1.0]);
+        let out = ascii_chart("t", &[s], 20, 5);
+        assert!(out.contains('*'));
+    }
+
+    #[test]
+    fn svg_well_formed_enough() {
+        let a = Series::from_ys("train", &[3.0, 2.0, 1.0]);
+        let b = Series::from_ys("val", &[3.5, 2.5, 1.8]);
+        let svg = svg_chart("loss", &[a, b], 480, 280);
+        assert!(svg.starts_with("<svg"));
+        assert!(svg.ends_with("</svg>"));
+        assert_eq!(svg.matches("<path").count(), 2);
+        assert!(svg.contains("train") && svg.contains("val"));
+    }
+
+    #[test]
+    fn escape_works() {
+        assert_eq!(xml_escape("a<b>&\"c\""), "a&lt;b&gt;&amp;&quot;c&quot;");
+    }
+}

@@ -1,0 +1,173 @@
+//! Minimal property-testing harness (proptest stand-in).
+//!
+//! `forall(seed, cases, gen, prop)` runs `prop` on `cases` random inputs
+//! drawn by `gen`. On failure it performs greedy shrinking via the
+//! [`Shrink`] trait and panics with the seed + minimal counterexample so
+//! the failure is reproducible.
+
+use super::rng::Rng;
+use std::fmt::Debug;
+
+/// Types that can propose smaller versions of themselves.
+pub trait Shrink: Sized + Clone {
+    /// Candidate strictly-smaller values, in decreasing aggressiveness.
+    fn shrink(&self) -> Vec<Self> {
+        Vec::new()
+    }
+}
+
+impl Shrink for u64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self > 0 {
+            v.push(0);
+            v.push(self / 2);
+            v.push(self - 1);
+        }
+        v.dedup();
+        v
+    }
+}
+
+impl Shrink for usize {
+    fn shrink(&self) -> Vec<Self> {
+        (*self as u64).shrink().into_iter().map(|x| x as usize).collect()
+    }
+}
+
+impl Shrink for f64 {
+    fn shrink(&self) -> Vec<Self> {
+        let mut v = Vec::new();
+        if *self != 0.0 {
+            v.push(0.0);
+            v.push(self / 2.0);
+            v.push(self.trunc());
+        }
+        v.retain(|x| x != self);
+        v
+    }
+}
+
+impl<T: Shrink> Shrink for Vec<T> {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out = Vec::new();
+        if self.is_empty() {
+            return out;
+        }
+        // Halve, drop one element, shrink one element.
+        out.push(self[..self.len() / 2].to_vec());
+        if self.len() > 1 {
+            let mut v = self.clone();
+            v.pop();
+            out.push(v);
+        }
+        for i in 0..self.len().min(4) {
+            for cand in self[i].shrink() {
+                let mut v = self.clone();
+                v[i] = cand;
+                out.push(v);
+            }
+        }
+        out
+    }
+}
+
+impl<A: Shrink, B: Shrink> Shrink for (A, B) {
+    fn shrink(&self) -> Vec<Self> {
+        let mut out: Vec<Self> = self.0.shrink().into_iter().map(|a| (a, self.1.clone())).collect();
+        out.extend(self.1.shrink().into_iter().map(|b| (self.0.clone(), b)));
+        out
+    }
+}
+
+/// Run a property over `cases` random inputs; shrink + panic on failure.
+pub fn forall<T, G, P>(seed: u64, cases: usize, mut gen: G, mut prop: P)
+where
+    T: Shrink + Debug,
+    G: FnMut(&mut Rng) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            // Greedy shrink: keep taking the first failing candidate.
+            let mut cur = input;
+            let mut cur_msg = msg;
+            let mut budget = 200;
+            'outer: while budget > 0 {
+                for cand in cur.shrink() {
+                    budget -= 1;
+                    if let Err(m) = prop(&cand) {
+                        cur = cand;
+                        cur_msg = m;
+                        continue 'outer;
+                    }
+                    if budget == 0 {
+                        break;
+                    }
+                }
+                break;
+            }
+            panic!(
+                "property failed (seed={}, case={}): {}\nminimal counterexample: {:?}",
+                seed, case, cur_msg, cur
+            );
+        }
+    }
+}
+
+/// Assert helper for property bodies.
+pub fn ensure(cond: bool, msg: &str) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.to_string())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        forall(1, 50, |r| r.below(100), |_| {
+            count += 1;
+            Ok(())
+        });
+        // 50 cases, no shrink calls.
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "minimal counterexample")]
+    fn failing_property_panics_with_counterexample() {
+        forall(2, 100, |r| r.below(1000), |&x| ensure(x < 500, "too big"));
+    }
+
+    #[test]
+    fn shrinking_reaches_small_case() {
+        let caught = std::panic::catch_unwind(|| {
+            forall(3, 100, |r| r.below(10_000), |&x| ensure(x < 100, "big"));
+        });
+        let msg = format!("{:?}", caught.unwrap_err().downcast_ref::<String>().unwrap());
+        // Greedy shrink should land near the boundary (definitely < 1000).
+        let num: u64 = msg
+            .split("counterexample: ")
+            .nth(1)
+            .unwrap()
+            .trim_matches(|c: char| !c.is_ascii_digit())
+            .parse()
+            .unwrap();
+        assert!(num >= 100 && num < 1000, "shrunk to {}", num);
+    }
+
+    #[test]
+    fn vec_shrink_reduces_len() {
+        let v = vec![5u64, 6, 7, 8];
+        let cands = v.shrink();
+        assert!(cands.iter().any(|c| c.len() < v.len()));
+    }
+}

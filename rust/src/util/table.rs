@@ -1,0 +1,157 @@
+//! Plain-text table rendering for the CLI (leaderboards, `nsml ps`, …).
+
+/// A simple text table builder with column alignment.
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+    right_align: Vec<bool>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            right_align: vec![false; headers.len()],
+        }
+    }
+
+    /// Right-align the given column indexes (numbers usually).
+    pub fn right(mut self, cols: &[usize]) -> Self {
+        for &c in cols {
+            if c < self.right_align.len() {
+                self.right_align[c] = true;
+            }
+        }
+        self
+    }
+
+    pub fn row(&mut self, cells: &[String]) -> &mut Self {
+        let mut v = cells.to_vec();
+        v.resize(self.headers.len(), String::new());
+        self.rows.push(v);
+        self
+    }
+
+    pub fn row_strs(&mut self, cells: &[&str]) -> &mut Self {
+        self.row(&cells.iter().map(|s| s.to_string()).collect::<Vec<_>>())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.rows.is_empty()
+    }
+
+    pub fn len(&self) -> usize {
+        self.rows.len()
+    }
+
+    /// Render with a header separator, space-padded columns.
+    pub fn render(&self) -> String {
+        let ncols = self.headers.len();
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.chars().count()).collect();
+        for row in &self.rows {
+            for (i, cell) in row.iter().enumerate().take(ncols) {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let fmt_row = |cells: &[String], out: &mut String| {
+            for (i, cell) in cells.iter().enumerate().take(ncols) {
+                if i > 0 {
+                    out.push_str("  ");
+                }
+                let pad = widths[i].saturating_sub(cell.chars().count());
+                if self.right_align[i] {
+                    out.push_str(&" ".repeat(pad));
+                    out.push_str(cell);
+                } else {
+                    out.push_str(cell);
+                    if i + 1 < ncols {
+                        out.push_str(&" ".repeat(pad));
+                    }
+                }
+            }
+            out.push('\n');
+        };
+        let mut out = String::new();
+        fmt_row(&self.headers, &mut out);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncols - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            fmt_row(row, &mut out);
+        }
+        out
+    }
+}
+
+/// Format a float compactly for tables (4 significant-ish digits).
+pub fn fnum(x: f64) -> String {
+    if x == 0.0 {
+        "0".to_string()
+    } else if x.abs() >= 1000.0 {
+        format!("{:.0}", x)
+    } else if x.abs() >= 10.0 {
+        format!("{:.2}", x)
+    } else if x.abs() >= 0.01 {
+        format!("{:.4}", x)
+    } else {
+        format!("{:.3e}", x)
+    }
+}
+
+/// Format milliseconds human-readably.
+pub fn fms(ms: f64) -> String {
+    if ms < 1.0 {
+        format!("{:.0}µs", ms * 1000.0)
+    } else if ms < 1000.0 {
+        format!("{:.2}ms", ms)
+    } else if ms < 60_000.0 {
+        format!("{:.2}s", ms / 1000.0)
+    } else {
+        format!("{:.1}min", ms / 60_000.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new(&["NAME", "SCORE"]).right(&[1]);
+        t.row_strs(&["alpha", "1.0"]);
+        t.row_strs(&["a-much-longer-name", "12.5"]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        assert!(lines[0].starts_with("NAME"));
+        assert!(lines[2].ends_with(" 1.0"));
+        assert!(lines[3].ends_with("12.5"));
+    }
+
+    #[test]
+    fn pads_short_rows() {
+        let mut t = Table::new(&["A", "B", "C"]);
+        t.row_strs(&["x"]);
+        assert!(t.render().contains('x'));
+        assert_eq!(t.len(), 1);
+    }
+
+    #[test]
+    fn fnum_ranges() {
+        assert_eq!(fnum(0.0), "0");
+        assert_eq!(fnum(1234.0), "1234");
+        assert_eq!(fnum(12.345), "12.35");
+        assert_eq!(fnum(0.5), "0.5000");
+        assert_eq!(fnum(0.0001), "1.000e-4");
+    }
+
+    #[test]
+    fn fms_ranges() {
+        assert_eq!(fms(0.5), "500µs");
+        assert_eq!(fms(12.0), "12.00ms");
+        assert_eq!(fms(2500.0), "2.50s");
+        assert_eq!(fms(120_000.0), "2.0min");
+    }
+}

@@ -1,0 +1,231 @@
+//! TOML-lite config parser for platform configuration files.
+//!
+//! Supports `[section]` headers, `key = value` with strings, integers,
+//! floats, booleans and flat arrays, plus `#` comments — the subset an
+//! nsml.toml actually needs.
+
+use std::collections::BTreeMap;
+
+/// A parsed config: `section.key -> Value` (top-level keys use section "").
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct Config {
+    entries: BTreeMap<(String, String), Value>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum Value {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    Arr(Vec<Value>),
+}
+
+impl Value {
+    pub fn as_str(&self) -> Option<&str> {
+        match self {
+            Value::Str(s) => Some(s),
+            _ => None,
+        }
+    }
+    pub fn as_i64(&self) -> Option<i64> {
+        match self {
+            Value::Int(i) => Some(*i),
+            _ => None,
+        }
+    }
+    pub fn as_f64(&self) -> Option<f64> {
+        match self {
+            Value::Float(f) => Some(*f),
+            Value::Int(i) => Some(*i as f64),
+            _ => None,
+        }
+    }
+    pub fn as_bool(&self) -> Option<bool> {
+        match self {
+            Value::Bool(b) => Some(*b),
+            _ => None,
+        }
+    }
+}
+
+impl Config {
+    pub fn parse(text: &str) -> Result<Config, String> {
+        let mut cfg = Config::default();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = strip_comment(raw).trim().to_string();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|s| s.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line
+                .split_once('=')
+                .ok_or_else(|| format!("line {}: expected key = value", lineno + 1))?;
+            let value = parse_value(v.trim()).map_err(|e| format!("line {}: {}", lineno + 1, e))?;
+            cfg.entries.insert((section.clone(), k.trim().to_string()), value);
+        }
+        Ok(cfg)
+    }
+
+    pub fn get(&self, section: &str, key: &str) -> Option<&Value> {
+        self.entries.get(&(section.to_string(), key.to_string()))
+    }
+
+    pub fn str_or(&self, section: &str, key: &str, default: &str) -> String {
+        self.get(section, key).and_then(Value::as_str).unwrap_or(default).to_string()
+    }
+
+    pub fn int_or(&self, section: &str, key: &str, default: i64) -> i64 {
+        self.get(section, key).and_then(Value::as_i64).unwrap_or(default)
+    }
+
+    pub fn float_or(&self, section: &str, key: &str, default: f64) -> f64 {
+        self.get(section, key).and_then(Value::as_f64).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, section: &str, key: &str, default: bool) -> bool {
+        self.get(section, key).and_then(Value::as_bool).unwrap_or(default)
+    }
+
+    pub fn sections(&self) -> Vec<String> {
+        let mut v: Vec<String> = self.entries.keys().map(|(s, _)| s.clone()).collect();
+        v.dedup();
+        v
+    }
+}
+
+fn strip_comment(line: &str) -> &str {
+    // Respect '#' inside quoted strings.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str) -> Result<Value, String> {
+    if s.is_empty() {
+        return Err("empty value".into());
+    }
+    if let Some(inner) = s.strip_prefix('"').and_then(|x| x.strip_suffix('"')) {
+        return Ok(Value::Str(inner.replace("\\\"", "\"").replace("\\\\", "\\")));
+    }
+    if s == "true" {
+        return Ok(Value::Bool(true));
+    }
+    if s == "false" {
+        return Ok(Value::Bool(false));
+    }
+    if let Some(inner) = s.strip_prefix('[').and_then(|x| x.strip_suffix(']')) {
+        let inner = inner.trim();
+        if inner.is_empty() {
+            return Ok(Value::Arr(vec![]));
+        }
+        let items: Result<Vec<Value>, String> =
+            split_top_level(inner).iter().map(|p| parse_value(p.trim())).collect();
+        return Ok(Value::Arr(items?));
+    }
+    if let Ok(i) = s.parse::<i64>() {
+        return Ok(Value::Int(i));
+    }
+    if let Ok(f) = s.parse::<f64>() {
+        return Ok(Value::Float(f));
+    }
+    Err(format!("cannot parse value '{}'", s))
+}
+
+fn split_top_level(s: &str) -> Vec<String> {
+    let mut parts = Vec::new();
+    let mut cur = String::new();
+    let mut in_str = false;
+    for c in s.chars() {
+        match c {
+            '"' => {
+                in_str = !in_str;
+                cur.push(c);
+            }
+            ',' if !in_str => {
+                parts.push(cur.clone());
+                cur.clear();
+            }
+            _ => cur.push(c),
+        }
+    }
+    if !cur.trim().is_empty() {
+        parts.push(cur);
+    }
+    parts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"
+# nsml platform config
+name = "alpha-cluster"   # inline comment
+[cluster]
+nodes = 10
+gpus_per_node = 8
+gpu_mem_gb = 24.0
+[scheduler]
+policy = "best_fit"
+fast_path = true
+priorities = [0, 1, 2]
+tags = ["a", "b,c"]
+"#;
+
+    #[test]
+    fn parses_sections_and_types() {
+        let c = Config::parse(SAMPLE).unwrap();
+        assert_eq!(c.str_or("", "name", "?"), "alpha-cluster");
+        assert_eq!(c.int_or("cluster", "nodes", 0), 10);
+        assert_eq!(c.float_or("cluster", "gpu_mem_gb", 0.0), 24.0);
+        assert!(c.bool_or("scheduler", "fast_path", false));
+        assert_eq!(c.str_or("scheduler", "policy", "?"), "best_fit");
+    }
+
+    #[test]
+    fn arrays() {
+        let c = Config::parse(SAMPLE).unwrap();
+        match c.get("scheduler", "priorities").unwrap() {
+            Value::Arr(v) => assert_eq!(v.len(), 3),
+            _ => panic!(),
+        }
+        match c.get("scheduler", "tags").unwrap() {
+            Value::Arr(v) => {
+                assert_eq!(v[1].as_str(), Some("b,c")); // comma inside quotes survives
+            }
+            _ => panic!(),
+        }
+    }
+
+    #[test]
+    fn defaults_on_missing() {
+        let c = Config::parse("").unwrap();
+        assert_eq!(c.int_or("x", "y", 7), 7);
+        assert_eq!(c.str_or("x", "y", "dflt"), "dflt");
+    }
+
+    #[test]
+    fn errors_are_line_numbered() {
+        let err = Config::parse("[s]\nbad line").unwrap_err();
+        assert!(err.contains("line 2"), "{}", err);
+    }
+
+    #[test]
+    fn int_vs_float_distinguished() {
+        let c = Config::parse("a = 3\nb = 3.5").unwrap();
+        assert_eq!(c.get("", "a"), Some(&Value::Int(3)));
+        assert_eq!(c.get("", "b"), Some(&Value::Float(3.5)));
+        assert_eq!(c.float_or("", "a", 0.0), 3.0); // int coerces to float
+    }
+}

@@ -1,0 +1,441 @@
+//! Web UI (paper §3.2): "The *web UI* wraps NSML-CLI in a web application
+//! and is more intuitive … provides visualizations such as graphs, logs,
+//! and demos."
+//!
+//! nginx is unavailable offline, so this is a from-scratch minimal
+//! HTTP/1.1 server (std TcpListener + a thread per connection) exposing:
+//!
+//! * `GET /`                     — HTML dashboard (sessions, cluster, boards)
+//! * `GET /board/<dataset>`      — HTML leaderboard
+//! * `GET /session/<id…>`        — HTML session page with SVG curves
+//! * `GET /plot/<id…>.svg`       — standalone SVG learning curves
+//! * `GET /api/sessions`         — JSON
+//! * `GET /api/session/<id…>`    — JSON (with metrics)
+//! * `GET /api/board/<dataset>`  — JSON
+//! * `GET /api/cluster`          — JSON
+//!
+//! Routing logic is a pure function ([`handle`]) so tests exercise it
+//! without sockets.
+
+use crate::cluster::Cluster;
+use crate::events::EventLog;
+use crate::leaderboard::Leaderboard;
+use crate::session::{SessionRecord, SessionStore};
+use crate::util::json::Json;
+use crate::util::plot::{svg_chart, xml_escape, Series};
+use std::io::{Read, Write};
+use std::net::TcpListener;
+
+/// Shareable snapshot handles the server reads from (all thread-safe).
+#[derive(Clone)]
+pub struct WebState {
+    pub sessions: SessionStore,
+    pub leaderboard: Leaderboard,
+    pub cluster: Option<Cluster>,
+    pub events: EventLog,
+}
+
+/// An HTTP response.
+pub struct Response {
+    pub status: u16,
+    pub content_type: &'static str,
+    pub body: String,
+}
+
+impl Response {
+    fn html(body: String) -> Response {
+        Response { status: 200, content_type: "text/html; charset=utf-8", body }
+    }
+
+    fn json(j: Json) -> Response {
+        Response { status: 200, content_type: "application/json", body: j.to_string() }
+    }
+
+    fn svg(body: String) -> Response {
+        Response { status: 200, content_type: "image/svg+xml", body }
+    }
+
+    fn not_found(msg: &str) -> Response {
+        Response { status: 404, content_type: "text/plain", body: format!("not found: {}\n", msg) }
+    }
+}
+
+/// Route a request (pure; no I/O).
+pub fn handle(state: &WebState, method: &str, path: &str) -> Response {
+    if method != "GET" {
+        return Response { status: 405, content_type: "text/plain", body: "only GET\n".into() };
+    }
+    let path = path.split('?').next().unwrap_or(path);
+    match path {
+        "/" => Response::html(dashboard_html(state)),
+        "/api/sessions" => Response::json(sessions_json(state)),
+        "/api/cluster" => Response::json(cluster_json(state)),
+        p if p.starts_with("/api/board/") => {
+            let ds = &p["/api/board/".len()..];
+            board_json(state, ds)
+        }
+        p if p.starts_with("/api/session/") => {
+            let id = &p["/api/session/".len()..];
+            match state.sessions.get(id) {
+                Some(rec) => Response::json(session_json(&rec, true)),
+                None => Response::not_found(id),
+            }
+        }
+        p if p.starts_with("/plot/") && p.ends_with(".svg") => {
+            let id = &p["/plot/".len()..p.len() - 4];
+            match state.sessions.get(id) {
+                Some(rec) => Response::svg(session_svg(&rec)),
+                None => Response::not_found(id),
+            }
+        }
+        p if p.starts_with("/board/") => {
+            let ds = &p["/board/".len()..];
+            Response::html(board_html(state, ds))
+        }
+        p if p.starts_with("/session/") => {
+            let id = &p["/session/".len()..];
+            match state.sessions.get(id) {
+                Some(rec) => Response::html(session_html(&rec)),
+                None => Response::not_found(id),
+            }
+        }
+        other => Response::not_found(other),
+    }
+}
+
+// ---------------------------------------------------------------------
+// JSON views
+// ---------------------------------------------------------------------
+
+fn session_json(rec: &SessionRecord, with_metrics: bool) -> Json {
+    let mut o = Json::obj();
+    o.set("id", rec.spec.id.as_str().into())
+        .set("user", rec.spec.user.as_str().into())
+        .set("dataset", rec.spec.dataset.as_str().into())
+        .set("model", rec.spec.model.as_str().into())
+        .set("state", rec.state.as_str().into())
+        .set("steps_done", rec.steps_done.into())
+        .set("total_steps", rec.spec.total_steps.into())
+        .set("lr", rec.spec.lr.into())
+        .set("best_metric", rec.best_metric.map(Json::Num).unwrap_or(Json::Null))
+        .set("recoveries", (rec.recoveries as u64).into());
+    if with_metrics {
+        let mut metrics = Json::obj();
+        for name in rec.metrics.names() {
+            let pts: Vec<Json> = rec
+                .metrics
+                .series(&name)
+                .into_iter()
+                .map(|(s, v)| Json::Arr(vec![s.into(), v.into()]))
+                .collect();
+            metrics.set(&name, Json::Arr(pts));
+        }
+        o.set("metrics", metrics);
+    }
+    o
+}
+
+fn sessions_json(state: &WebState) -> Json {
+    Json::Arr(state.sessions.list().iter().map(|r| session_json(r, false)).collect())
+}
+
+fn cluster_json(state: &WebState) -> Json {
+    let mut o = Json::obj();
+    match &state.cluster {
+        None => {
+            o.set("available", false.into());
+        }
+        Some(c) => {
+            let (total, free) = c.gpu_totals();
+            let nodes: Vec<Json> = c
+                .snapshot()
+                .iter()
+                .map(|n| {
+                    let mut j = Json::obj();
+                    j.set("hostname", n.hostname.as_str().into())
+                        .set("alive", n.alive.into())
+                        .set("total_gpus", n.total_gpus.into())
+                        .set("free_gpus", n.free_gpus.into())
+                        .set("jobs", Json::Arr(n.jobs.iter().map(|s| Json::Str(s.clone())).collect()));
+                    j
+                })
+                .collect();
+            o.set("available", true.into())
+                .set("total_gpus", total.into())
+                .set("free_gpus", free.into())
+                .set("utilization", c.utilization().into())
+                .set("nodes", Json::Arr(nodes));
+        }
+    }
+    o
+}
+
+fn board_json(state: &WebState, dataset: &str) -> Response {
+    if !state.leaderboard.datasets().contains(&dataset.to_string()) {
+        return Response::not_found(dataset);
+    }
+    let rows: Vec<Json> = state
+        .leaderboard
+        .top(dataset, 100)
+        .iter()
+        .enumerate()
+        .map(|(i, s)| {
+            let mut o = Json::obj();
+            o.set("rank", (i + 1).into())
+                .set("session", s.session.as_str().into())
+                .set("user", s.user.as_str().into())
+                .set("model", s.model.as_str().into())
+                .set("metric", s.metric_name.as_str().into())
+                .set("value", s.value.into())
+                .set("step", s.step.into());
+            o
+        })
+        .collect();
+    Response::json(Json::Arr(rows))
+}
+
+// ---------------------------------------------------------------------
+// HTML views
+// ---------------------------------------------------------------------
+
+const STYLE: &str = "<style>body{font-family:monospace;margin:2em;background:#fafafa}
+table{border-collapse:collapse}td,th{border:1px solid #ccc;padding:4px 10px;text-align:left}
+th{background:#eee}h1,h2{color:#234}a{color:#1a6}</style>";
+
+fn page(title: &str, body: String) -> String {
+    format!(
+        "<!doctype html><html><head><title>{}</title>{}</head><body><h1>{}</h1>{}</body></html>",
+        xml_escape(title),
+        STYLE,
+        xml_escape(title),
+        body
+    )
+}
+
+fn dashboard_html(state: &WebState) -> String {
+    let mut body = String::new();
+    if let Some(c) = &state.cluster {
+        let (total, free) = c.gpu_totals();
+        body.push_str(&format!(
+            "<p>cluster: {} nodes alive, {}/{} GPUs in use ({:.0}% utilization)</p>",
+            c.alive_count(),
+            total - free,
+            total,
+            c.utilization() * 100.0
+        ));
+    }
+    body.push_str("<h2>Sessions</h2><table><tr><th>session</th><th>state</th><th>steps</th><th>best metric</th><th>plot</th></tr>");
+    for r in state.sessions.list() {
+        body.push_str(&format!(
+            "<tr><td><a href=\"/session/{id}\">{id}</a></td><td>{}</td><td>{}/{}</td><td>{}</td><td><a href=\"/plot/{id}.svg\">svg</a></td></tr>",
+            r.state.as_str(),
+            r.steps_done,
+            r.spec.total_steps,
+            r.best_metric.map(|v| format!("{:.4}", v)).unwrap_or_else(|| "-".into()),
+            id = xml_escape(&r.spec.id),
+        ));
+    }
+    body.push_str("</table><h2>Leaderboards</h2><ul>");
+    for ds in state.leaderboard.datasets() {
+        body.push_str(&format!("<li><a href=\"/board/{0}\">{0}</a> ({1} entries)</li>", ds, state.leaderboard.board_len(&ds)));
+    }
+    body.push_str("</ul>");
+    page("NSML dashboard", body)
+}
+
+fn board_html(state: &WebState, dataset: &str) -> String {
+    let mut body = String::from("<table><tr><th>rank</th><th>session</th><th>user</th><th>model</th><th>value</th><th>step</th></tr>");
+    for (i, s) in state.leaderboard.top(dataset, 100).iter().enumerate() {
+        body.push_str(&format!(
+            "<tr><td>{0}</td><td><a href=\"/session/{1}\">{1}</a></td><td>{2}</td><td>{3}</td><td>{4:.4}</td><td>{5}</td></tr>",
+            i + 1,
+            xml_escape(&s.session),
+            xml_escape(&s.user),
+            xml_escape(&s.model),
+            s.value,
+            s.step
+        ));
+    }
+    body.push_str("</table><p><a href=\"/\">back</a></p>");
+    page(&format!("leaderboard: {}", dataset), body)
+}
+
+fn session_svg(rec: &SessionRecord) -> String {
+    let series: Vec<Series> =
+        rec.metrics.names().iter().map(|n| rec.metrics.plot_series(n)).collect();
+    svg_chart(&rec.spec.id, &series, 640, 360)
+}
+
+fn session_html(rec: &SessionRecord) -> String {
+    let mut body = format!(
+        "<p>state: {} | steps: {}/{} | lr: {} | model: {} | dataset: {}</p>",
+        rec.state.as_str(),
+        rec.steps_done,
+        rec.spec.total_steps,
+        rec.spec.lr,
+        xml_escape(&rec.spec.model),
+        xml_escape(&rec.spec.dataset)
+    );
+    body.push_str(&session_svg(rec));
+    body.push_str("<p><a href=\"/\">back</a></p>");
+    page(&rec.spec.id.clone(), body)
+}
+
+// ---------------------------------------------------------------------
+// The actual server
+// ---------------------------------------------------------------------
+
+/// Serve until the process exits. Returns the bound port.
+pub fn serve(state: WebState, port: u16) -> std::io::Result<(u16, std::thread::JoinHandle<()>)> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let bound = listener.local_addr()?.port();
+    let handle = std::thread::spawn(move || {
+        for stream in listener.incoming() {
+            let Ok(mut stream) = stream else { continue };
+            let state = state.clone();
+            std::thread::spawn(move || {
+                let mut buf = [0u8; 8192];
+                let mut req = Vec::new();
+                // Read until end of headers (GET only; no bodies).
+                loop {
+                    match stream.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => {
+                            req.extend_from_slice(&buf[..n]);
+                            if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 64 * 1024 {
+                                break;
+                            }
+                        }
+                    }
+                }
+                let text = String::from_utf8_lossy(&req);
+                let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+                let method = parts.next().unwrap_or("GET").to_string();
+                let path = parts.next().unwrap_or("/").to_string();
+                let resp = handle(&state, &method, &path);
+                let _ = write!(
+                    stream,
+                    "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    resp.status,
+                    if resp.status == 200 { "OK" } else { "Not Found" },
+                    resp.content_type,
+                    resp.body.len(),
+                    resp.body
+                );
+            });
+        }
+    });
+    Ok((bound, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::session::{SessionRecord, SessionSpec};
+    use crate::util::clock::sim_clock;
+
+    fn state() -> WebState {
+        let (clock, _) = sim_clock();
+        let events = EventLog::new(clock.clone()).with_echo(false);
+        let sessions = SessionStore::new();
+        let mut rec = SessionRecord::new(SessionSpec::new("kim/mnist/1", "kim", "mnist", "mnist_mlp"), 0);
+        rec.steps_done = 50;
+        rec.best_metric = Some(0.9);
+        rec.metrics.log(10, "train_loss", 1.2);
+        rec.metrics.log(20, "train_loss", 0.8);
+        sessions.insert(rec);
+        let leaderboard = Leaderboard::new();
+        leaderboard.ensure_board("mnist", "accuracy", false);
+        leaderboard.submit(
+            "mnist",
+            crate::leaderboard::Submission {
+                session: "kim/mnist/1".into(),
+                user: "kim".into(),
+                model: "mnist_mlp".into(),
+                metric_name: "accuracy".into(),
+                value: 0.9,
+                step: 50,
+                at_ms: 1,
+            },
+        );
+        let cluster = Cluster::homogeneous(clock, events.clone(), 2, 4, 24.0);
+        WebState { sessions, leaderboard, cluster: Some(cluster), events }
+    }
+
+    #[test]
+    fn dashboard_lists_sessions_and_boards() {
+        let s = state();
+        let r = handle(&s, "GET", "/");
+        assert_eq!(r.status, 200);
+        assert!(r.body.contains("kim/mnist/1"));
+        assert!(r.body.contains("/board/mnist"));
+        assert!(r.body.contains("8 GPUs") || r.body.contains("0/8"));
+    }
+
+    #[test]
+    fn api_sessions_json_parses() {
+        let s = state();
+        let r = handle(&s, "GET", "/api/sessions");
+        let j = crate::util::json::parse(&r.body).unwrap();
+        let arr = j.as_arr().unwrap();
+        assert_eq!(arr.len(), 1);
+        assert_eq!(arr[0].get("state").unwrap().as_str(), Some("queued"));
+    }
+
+    #[test]
+    fn api_session_detail_has_metrics() {
+        let s = state();
+        let r = handle(&s, "GET", "/api/session/kim/mnist/1");
+        let j = crate::util::json::parse(&r.body).unwrap();
+        let pts = j.at(&["metrics", "train_loss"]).unwrap().as_arr().unwrap();
+        assert_eq!(pts.len(), 2);
+    }
+
+    #[test]
+    fn plot_svg_renders() {
+        let s = state();
+        let r = handle(&s, "GET", "/plot/kim/mnist/1.svg");
+        assert_eq!(r.status, 200);
+        assert!(r.body.starts_with("<svg"));
+        assert!(r.body.contains("train_loss"));
+    }
+
+    #[test]
+    fn board_json_and_html() {
+        let s = state();
+        let j = handle(&s, "GET", "/api/board/mnist");
+        assert_eq!(j.status, 200);
+        assert!(j.body.contains("\"rank\":1"));
+        let h = handle(&s, "GET", "/board/mnist");
+        assert!(h.body.contains("kim/mnist/1"));
+        assert_eq!(handle(&s, "GET", "/api/board/nope").status, 404);
+    }
+
+    #[test]
+    fn cluster_json() {
+        let s = state();
+        let r = handle(&s, "GET", "/api/cluster");
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("total_gpus").unwrap().as_i64(), Some(8));
+    }
+
+    #[test]
+    fn unknown_routes_404_and_post_405() {
+        let s = state();
+        assert_eq!(handle(&s, "GET", "/nope").status, 404);
+        assert_eq!(handle(&s, "GET", "/api/session/missing").status, 404);
+        assert_eq!(handle(&s, "POST", "/").status, 405);
+    }
+
+    #[test]
+    fn live_server_round_trip() {
+        let s = state();
+        let (port, _h) = serve(s, 0).unwrap();
+        let mut stream = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(stream, "GET /api/cluster HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut out = String::new();
+        stream.read_to_string(&mut out).unwrap();
+        assert!(out.starts_with("HTTP/1.1 200"));
+        assert!(out.contains("total_gpus"));
+    }
+}

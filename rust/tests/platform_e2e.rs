@@ -1,0 +1,160 @@
+//! Integration: the full platform across subsystems (experiment E1) plus
+//! persistence and the web API over live platform state.
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::session::SessionState;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn platform() -> Option<NsmlPlatform> {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = artifacts()?;
+    Some(NsmlPlatform::new(cfg).unwrap())
+}
+
+fn quick(steps: u64, seed: u64) -> RunOpts {
+    RunOpts {
+        total_steps: steps,
+        eval_every: (steps / 2).max(1),
+        checkpoint_every: (steps / 2).max(1),
+        seed,
+        ..Default::default()
+    }
+}
+
+#[test]
+fn all_four_alpha_tasks_complete_and_rank() {
+    let Some(p) = platform() else { return };
+    let mut ids = Vec::new();
+    for (i, ds) in ["mnist", "emotions", "movie-reviews", "faces"].iter().enumerate() {
+        ids.push((ds.to_string(), p.run("alpha", ds, quick(16, i as u64)).unwrap()));
+    }
+    p.run_to_completion(8, 10_000).unwrap();
+    for (ds, id) in &ids {
+        let rec = p.sessions.get(id).unwrap();
+        assert_eq!(rec.state, SessionState::Done, "{}", ds);
+        assert!(rec.best_metric.is_some(), "{}", ds);
+        assert_eq!(p.leaderboard.rank_of(ds, id), Some(1), "{}", ds);
+    }
+    // Every container stopped, every GPU released.
+    assert!(p.containers.running().is_empty());
+    let (total, free) = p.cluster.gpu_totals();
+    assert_eq!(total, free);
+}
+
+#[test]
+fn persistence_round_trip_across_platform_restart() {
+    let Some(art) = artifacts() else { return };
+    let state = std::env::temp_dir().join(format!("nsml-e2e-state-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&state);
+
+    let id = {
+        let mut cfg = PlatformConfig::test_default();
+        cfg.artifacts_dir = art.clone();
+        cfg.state_dir = Some(state.clone());
+        let p = NsmlPlatform::new(cfg).unwrap();
+        let id = p.run("kim", "mnist", quick(20, 0)).unwrap();
+        p.run_to_completion(10, 10_000).unwrap();
+        p.save_state().unwrap();
+        id
+    };
+
+    // "Restart" the platform over the same state dir.
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = art;
+    cfg.state_dir = Some(state.clone());
+    let p2 = NsmlPlatform::new(cfg).unwrap();
+    let rec = p2.sessions.get(&id).unwrap();
+    assert_eq!(rec.state, SessionState::Done);
+    assert!(rec.metrics.len() > 0);
+    assert_eq!(p2.leaderboard.rank_of("mnist", &id), Some(1));
+    // Checkpoints usable: inference works after restart.
+    let x = nsml::runtime::TensorData::f32(vec![0.5; 64 * 144], &[64, 144]);
+    assert_eq!(p2.infer(&id, &x).unwrap().len(), 640);
+
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+#[test]
+fn web_api_serves_live_platform_state() {
+    use std::io::{Read, Write};
+    let Some(p) = platform() else { return };
+    let id = p.run("web", "mnist", quick(10, 3)).unwrap();
+    p.run_to_completion(5, 10_000).unwrap();
+
+    let state = nsml::web::WebState {
+        sessions: p.sessions.clone(),
+        leaderboard: p.leaderboard.clone(),
+        cluster: Some(p.cluster.clone()),
+        events: p.events.clone(),
+    };
+    let (port, _handle) = nsml::web::serve(state, 0).unwrap();
+
+    let fetch = |path: &str| -> String {
+        let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(s, "GET {} HTTP/1.1\r\nHost: t\r\n\r\n", path).unwrap();
+        let mut out = String::new();
+        s.read_to_string(&mut out).unwrap();
+        out
+    };
+
+    let dash = fetch("/");
+    assert!(dash.starts_with("HTTP/1.1 200"));
+    assert!(dash.contains(&id));
+    let api = fetch("/api/sessions");
+    assert!(api.contains("\"state\":\"done\""));
+    let board = fetch("/api/board/mnist");
+    assert!(board.contains("\"rank\":1"));
+    let svg = fetch(&format!("/plot/{}.svg", id));
+    assert!(svg.contains("image/svg+xml"));
+    assert!(svg.contains("train_loss"));
+}
+
+#[test]
+fn gpu_requests_respected_and_fragmentation_visible() {
+    let Some(p) = platform() else { return };
+    // 3 nodes x 4 GPUs: 3 x 3-GPU jobs leave 1 GPU free per node (3 total
+    // free) — yet a 2-GPU job still fits; a 4-GPU job must queue.
+    for i in 0..3 {
+        let mut o = quick(1_000, i);
+        o.gpus = 3;
+        p.run("frag", "mnist", o).unwrap();
+    }
+    let mut small = quick(1_000, 9);
+    small.gpus = 1;
+    let small_id = p.run("frag", "mnist", small).unwrap();
+    let mut big = quick(1_000, 10);
+    big.gpus = 4;
+    let big_id = p.run("frag", "mnist", big).unwrap();
+
+    // Small placed immediately; big queued (the §2 anecdote in miniature).
+    assert!(p.sessions.get(&small_id).unwrap().node.is_some());
+    assert_eq!(p.sessions.get(&big_id).unwrap().node, None);
+    assert_eq!(p.master.queue_len(), 1);
+    // Stop everything; the big job then gets its node.
+    for rec in p.sessions.list() {
+        if rec.spec.id != big_id && !rec.state.is_terminal() {
+            p.stop(&rec.spec.id).unwrap();
+        }
+    }
+    assert!(p.sessions.get(&big_id).unwrap().node.is_some());
+    p.stop(&big_id).unwrap();
+}
+
+#[test]
+fn events_tell_the_story() {
+    let Some(p) = platform() else { return };
+    let id = p.run("story", "mnist", quick(10, 1)).unwrap();
+    p.run_to_completion(5, 10_000).unwrap();
+    let events = p.events.for_subject(&id);
+    let text: Vec<String> = events.iter().map(|e| e.message.clone()).collect();
+    let joined = text.join(" | ");
+    assert!(joined.contains("fast-path placed") || joined.contains("placed on"), "{}", joined);
+    assert!(joined.contains("container up"), "{}", joined);
+    assert!(joined.contains("training"), "{}", joined);
+    assert!(joined.contains("done at step"), "{}", joined);
+}

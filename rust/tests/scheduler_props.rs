@@ -1,0 +1,187 @@
+//! Property-based tests on scheduler/cluster invariants, driven by the
+//! in-repo quickcheck harness over random operation sequences.
+
+use nsml::cluster::{Cluster, NodeId, ResourceReq};
+use nsml::events::EventLog;
+use nsml::scheduler::{policy_by_name, JobSpec, Master, Priority};
+use nsml::util::clock::sim_clock;
+use nsml::util::quickcheck::{ensure, forall};
+use nsml::util::rng::Rng;
+
+fn mk_master(nodes: usize, gpus: usize, policy: &str) -> Master {
+    let (clock, _) = sim_clock();
+    let events = EventLog::new(clock.clone()).with_echo(false);
+    let cluster = Cluster::homogeneous(clock, events.clone(), nodes, gpus, 24.0);
+    Master::new(cluster, policy_by_name(policy, 7), events)
+}
+
+/// Op stream: 0..=59 submit, 60..=79 complete-oldest, 80..=89 kill node,
+/// 90..=99 revive node.
+fn run_ops(master: &Master, ops: &[u64]) {
+    let mut submitted = 0u64;
+    let mut live: Vec<String> = Vec::new();
+    for &op in ops {
+        match op % 100 {
+            0..=59 => {
+                let id = format!("j{}", submitted);
+                submitted += 1;
+                let gpus = 1 + (op / 100 % 4) as usize;
+                let pri = match op % 3 {
+                    0 => Priority::Low,
+                    1 => Priority::Normal,
+                    _ => Priority::High,
+                };
+                master.submit(JobSpec::new(&id, gpus).with_priority(pri));
+                live.push(id);
+            }
+            60..=79 => {
+                if let Some(id) = live.first().cloned() {
+                    live.remove(0);
+                    master.complete(&id);
+                }
+            }
+            80..=89 => {
+                let node = NodeId((op % 3) as u32);
+                let orphans = master.cluster().kill_node(node);
+                master.handle_orphans(&orphans);
+            }
+            _ => {
+                master.cluster().revive_node(NodeId((op % 3) as u32));
+                master.pump();
+            }
+        }
+    }
+}
+
+#[test]
+fn no_gpu_oversubscription_under_random_ops() {
+    forall(
+        11,
+        60,
+        |rng: &mut Rng| (0..120).map(|_| rng.below(1000)).collect::<Vec<u64>>(),
+        |ops| {
+            let master = mk_master(3, 4, "best_fit");
+            run_ops(&master, ops);
+            for view in master.cluster().snapshot() {
+                ensure(view.free_gpus <= view.total_gpus, "free exceeds total")?;
+                // Each running job's GPUs are within its node's capacity.
+            }
+            let (total, free) = master.cluster().gpu_totals();
+            ensure(free <= total, "free > total")?;
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn job_conservation_under_random_ops() {
+    forall(
+        12,
+        60,
+        |rng: &mut Rng| (0..150).map(|_| rng.below(1000)).collect::<Vec<u64>>(),
+        |ops| {
+            let master = mk_master(3, 4, "first_fit");
+            run_ops(&master, ops);
+            let s = master.stats();
+            let accounted =
+                master.running_jobs().len() as u64 + master.queue_len() as u64 + s.completed + s.cancelled;
+            ensure(
+                accounted == s.submitted,
+                &format!("conservation violated: {} accounted vs {} submitted ({:?})", accounted, s.submitted, s),
+            )
+        },
+    );
+}
+
+#[test]
+fn placements_always_fit_for_every_policy() {
+    for policy in ["best_fit", "first_fit", "worst_fit", "random"] {
+        forall(
+            13,
+            30,
+            |rng: &mut Rng| (0..100).map(|_| rng.below(1000)).collect::<Vec<u64>>(),
+            |ops| {
+                let master = mk_master(4, 8, policy);
+                run_ops(&master, ops);
+                // Every running job is on an alive node.
+                for (job, node) in master.running_jobs() {
+                    let snap = master.cluster().snapshot();
+                    let view = snap.iter().find(|v| v.id == node);
+                    ensure(view.is_some(), &format!("job {} on unknown node", job.id))?;
+                    ensure(
+                        view.unwrap().jobs.contains(&job.id),
+                        &format!("node does not list job {}", job.id),
+                    )?;
+                }
+                Ok(())
+            },
+        );
+    }
+}
+
+#[test]
+fn queue_drains_when_cluster_empties() {
+    forall(
+        14,
+        40,
+        |rng: &mut Rng| (0..40).map(|_| 1 + rng.below(4)).collect::<Vec<u64>>(),
+        |gpu_sizes| {
+            let master = mk_master(2, 4, "best_fit");
+            // Submit everything; then complete running jobs until both
+            // queue and cluster are empty. Work-conservation: as long as
+            // the queue is non-empty, completing jobs must eventually
+            // place more.
+            for (i, g) in gpu_sizes.iter().enumerate() {
+                master.submit(JobSpec::new(&format!("j{}", i), *g as usize));
+            }
+            let mut guard = 0;
+            while master.queue_len() > 0 || !master.running_jobs().is_empty() {
+                guard += 1;
+                ensure(guard < 10_000, "scheduler wedged")?;
+                let running = master.running_jobs();
+                if let Some((job, _)) = running.first() {
+                    master.complete(&job.id);
+                } else if master.queue_len() > 0 {
+                    let placed = master.pump();
+                    ensure(!placed.is_empty(), "queue non-empty, cluster idle, nothing placed")?;
+                }
+            }
+            let s = master.stats();
+            ensure(s.completed == gpu_sizes.len() as u64, "not all jobs completed")
+        },
+    );
+}
+
+#[test]
+fn election_has_at_most_one_leader_under_chaos() {
+    use nsml::scheduler::ElectionGroup;
+    forall(
+        15,
+        40,
+        |rng: &mut Rng| (0..60).map(|_| rng.below(100)).collect::<Vec<u64>>(),
+        |ops| {
+            let (clock, sim) = sim_clock();
+            let events = EventLog::new(clock.clone()).with_echo(false);
+            let group = ElectionGroup::new(clock, events, 4);
+            let mut epochs_seen = vec![group.epoch()];
+            for &op in ops {
+                match op % 10 {
+                    0..=2 => group.kill(nsml::scheduler::ReplicaId((op % 4) as u32)),
+                    3..=5 => group.revive(nsml::scheduler::ReplicaId((op % 4) as u32)),
+                    _ => {
+                        for r in group.replica_ids() {
+                            group.heartbeat(r);
+                        }
+                    }
+                }
+                sim.advance(op % 50);
+                group.tick();
+                // Leader, if any, must be an alive replica; epochs never regress.
+                let epoch = group.epoch();
+                ensure(epoch >= *epochs_seen.last().unwrap(), "epoch regressed")?;
+                epochs_seen.push(epoch);
+            }
+            Ok(())
+        },
+    );
+}
