@@ -1,0 +1,112 @@
+//! Dispatch overhead of the v1 service layer: the same operations issued
+//! as `PlatformService::dispatch(ApiRequest)` vs direct facade calls,
+//! plus the wire tax (JSON parse + dispatch + serialize) on top. The
+//! acceptance bar for the service layer is dispatch ≤ 2× direct.
+//!
+//! Run: `cargo bench --bench bench_api`
+
+use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, RunParams};
+use nsml::util::bench::Bench;
+
+fn main() {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = "artifacts".into();
+    let service = PlatformService::new(NsmlPlatform::new(cfg).unwrap());
+
+    // Seed real state so queries return non-trivial payloads.
+    let mut ids = Vec::new();
+    for i in 0..4 {
+        let mut p = RunParams::new("bench", "mnist");
+        p.total_steps = 8;
+        p.eval_every = 4;
+        p.checkpoint_every = 4;
+        p.seed = i;
+        match service.dispatch(ApiRequest::Run(p)) {
+            ApiResponse::Submitted { session } => ids.push(session),
+            other => panic!("run dispatch failed: {:?}", other),
+        }
+    }
+    match service.dispatch(ApiRequest::RunToCompletion { chunk: 8, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("run_to_completion failed: {:?}", other),
+    }
+    let id = ids[0].clone();
+    let platform = service.platform();
+
+    let mut bench = Bench::new("api_dispatch");
+
+    // Query pairs: facade vs dispatch.
+    bench.run("facade: sessions.list", || {
+        assert_eq!(platform.sessions.list().len(), 4);
+    });
+    bench.run("dispatch: list_sessions", || {
+        match service.dispatch(ApiRequest::ListSessions) {
+            ApiResponse::Sessions { sessions } => assert_eq!(sessions.len(), 4),
+            other => panic!("{:?}", other),
+        }
+    });
+
+    bench.run("facade: sessions.get", || {
+        assert!(platform.sessions.get(&id).is_some());
+    });
+    bench.run("dispatch: get_session", || {
+        let req = ApiRequest::GetSession { session: id.clone() };
+        assert!(matches!(service.dispatch(req), ApiResponse::Session { .. }));
+    });
+
+    bench.run("facade: leaderboard.top", || {
+        assert!(!platform.leaderboard.top("mnist", 100).is_empty());
+    });
+    bench.run("dispatch: board", || {
+        let req = ApiRequest::Board { dataset: "mnist".into(), limit: 100 };
+        assert!(matches!(service.dispatch(req), ApiResponse::Board { .. }));
+    });
+
+    bench.run("facade: cluster snapshot", || {
+        let (_total, _free) = platform.cluster.gpu_totals();
+        assert_eq!(platform.cluster.snapshot().len(), 3);
+    });
+    bench.run("dispatch: cluster_status", || {
+        assert!(matches!(service.dispatch(ApiRequest::ClusterStatus), ApiResponse::Cluster { .. }));
+    });
+
+    // Mutation pair: stopping an already-terminal session exercises the
+    // full control path (event log, scheduler bookkeeping) on both sides.
+    bench.run("facade: stop (terminal)", || {
+        platform.stop(&id).unwrap();
+    });
+    bench.run("dispatch: stop (terminal)", || {
+        let req = ApiRequest::Stop { session: id.clone() };
+        assert!(matches!(service.dispatch(req), ApiResponse::Ack { .. }));
+    });
+
+    // The wire tax: parse the JSON envelope, dispatch, serialize back.
+    let wire_req = ApiRequest::ListSessions.to_json().to_string();
+    bench.run("wire: dispatch_json list_sessions", || {
+        let out = service.dispatch_json(&wire_req);
+        assert!(out.contains("\"kind\":\"sessions\""));
+    });
+
+    bench.finish();
+
+    println!("dispatch overhead (p50 dispatch / p50 facade):");
+    let mut worst: f64 = 0.0;
+    for (facade, dispatch) in [
+        ("facade: sessions.list", "dispatch: list_sessions"),
+        ("facade: sessions.get", "dispatch: get_session"),
+        ("facade: leaderboard.top", "dispatch: board"),
+        ("facade: cluster snapshot", "dispatch: cluster_status"),
+        ("facade: stop (terminal)", "dispatch: stop (terminal)"),
+    ] {
+        let f = bench.result(facade).unwrap().p50_ms();
+        let d = bench.result(dispatch).unwrap().p50_ms();
+        let ratio = if f > 0.0 { d / f } else { f64::NAN };
+        worst = worst.max(ratio);
+        println!("  {:<28} {:>6.2}x  ({:.4}ms vs {:.4}ms)", dispatch, ratio, d, f);
+    }
+    println!(
+        "worst ratio: {:.2}x — {}",
+        worst,
+        if worst <= 2.0 { "OK (within the 2x budget)" } else { "WARN: above the 2x budget" }
+    );
+}

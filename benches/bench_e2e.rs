@@ -1,50 +1,75 @@
 //! E13: platform end-to-end capacity — sessions/sec through the full
 //! submit → schedule → container → train → leaderboard pipeline, and the
-//! coordination overhead (everything but training) isolated.
+//! coordination overhead (everything but training) isolated. Submissions
+//! go through `PlatformService::dispatch` (the production entry point);
+//! `bench_api` isolates the cost of that layer itself.
 //!
 //! Run: `cargo bench --bench bench_e2e`
 
-use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, RunParams};
 use nsml::util::bench::Bench;
+
+fn submit(service: &PlatformService, params: RunParams) {
+    match service.dispatch(ApiRequest::Run(params)) {
+        ApiResponse::Submitted { .. } => {}
+        other => panic!("run dispatch failed: {:?}", other),
+    }
+}
+
+fn drain(service: &PlatformService, chunk: u64) {
+    match service.dispatch(ApiRequest::RunToCompletion { chunk, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("run_to_completion failed: {:?}", other),
+    }
+}
 
 fn main() {
     let mut cfg = PlatformConfig::test_default();
     cfg.artifacts_dir = "artifacts".into();
-    let platform = NsmlPlatform::new(cfg).unwrap();
+    let service = PlatformService::new(NsmlPlatform::new(cfg).unwrap());
     let mut bench = Bench::new("platform_e2e").with_samples(5);
 
     // Tiny real sessions: 8 training steps each, 4 sessions per iteration.
-    let opts = RunOpts { total_steps: 8, eval_every: 8, checkpoint_every: 8, ..Default::default() };
+    let opts = |seed: u64| {
+        let mut p = RunParams::new("bench", "mnist");
+        p.total_steps = 8;
+        p.eval_every = 8;
+        p.checkpoint_every = 8;
+        p.seed = seed;
+        p
+    };
     bench.run_with_units("4 concurrent mnist sessions (8 steps each)", 4.0, || {
         for i in 0..4 {
-            let mut o = opts.clone();
-            o.seed = i;
-            platform.run("bench", "mnist", o).unwrap();
+            submit(&service, opts(i));
         }
-        platform.run_to_completion(8, 10_000).unwrap();
+        drain(&service, 8);
     });
 
     // Coordination overhead only: a session whose model is the cheapest
     // (mnist) with a single step — dominated by schedule+container+
     // checkpoint+leaderboard machinery.
-    let one = RunOpts { total_steps: 1, eval_every: 1, checkpoint_every: 1, ..Default::default() };
     bench.run_with_units("1-step session (coordination overhead)", 1.0, || {
-        platform.run("bench", "mnist", one.clone()).unwrap();
-        platform.run_to_completion(1, 10_000).unwrap();
+        let mut p = opts(0);
+        p.total_steps = 1;
+        p.eval_every = 1;
+        p.checkpoint_every = 1;
+        submit(&service, p);
+        drain(&service, 1);
     });
 
     // Mixed-model wave across the cluster (all four alpha tasks).
     bench.run_with_units("mixed wave: 4 models x 8 steps", 4.0, || {
         for (i, ds) in ["mnist", "emotions", "movie-reviews", "faces"].iter().enumerate() {
-            let mut o = opts.clone();
-            o.seed = 10 + i as u64;
-            platform.run("bench", ds, o).unwrap();
+            let mut p = opts(10 + i as u64);
+            p.dataset = ds.to_string();
+            submit(&service, p);
         }
-        platform.run_to_completion(8, 10_000).unwrap();
+        drain(&service, 8);
     });
 
     bench.finish();
 
+    let platform = service.platform();
     let stats = platform.master.stats();
     println!(
         "scheduler totals: submitted={} fast_path={} queued={} completed={}",

@@ -1,12 +1,17 @@
 //! AutoML (paper §3.1, experiment E10): hyperparameter optimization over
 //! real platform sessions, with performance prediction and best-model
 //! saving. Compares exhaustive grid vs successive halving on the same
-//! candidate set — same winner, a fraction of the budget.
+//! candidate set — same winner, a fraction of the budget — then places a
+//! whole candidate ladder as cluster-parallel sessions with a single
+//! `SubmitTrialBatch` dispatch through the service layer.
 //!
 //! Run with: `cargo run --release --example automl_search`
 
-use nsml::api::{NsmlPlatform, PlatformConfig, PlatformTrialRunner};
-use nsml::automl::{GridSearch, SuccessiveHalving};
+use nsml::api::{
+    ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, PlatformTrialRunner,
+    TrialSpec,
+};
+use nsml::automl::{log_grid, GridSearch, SuccessiveHalving};
 use nsml::util::table::{fnum, Table};
 
 const CANDIDATE_LRS: [f64; 6] = [0.0003, 0.003, 0.03, 0.1, 0.5, 3.0];
@@ -27,17 +32,18 @@ fn runner(platform: &NsmlPlatform, tag: u64) -> anyhow::Result<PlatformTrialRunn
 }
 
 fn main() -> anyhow::Result<()> {
-    let platform = NsmlPlatform::new(PlatformConfig::default())?;
+    let service = PlatformService::new(NsmlPlatform::new(PlatformConfig::default())?);
+    let platform = service.platform();
     println!("== AutoML: lr search over real MNIST sessions ==\n");
 
     let t0 = std::time::Instant::now();
-    let mut grid_runner = runner(&platform, 1)?;
+    let mut grid_runner = runner(platform, 1)?;
     let grid = GridSearch { lrs: CANDIDATE_LRS.to_vec(), steps_per_trial: BUDGET_PER_TRIAL }
         .run(&mut grid_runner);
     let grid_wall = t0.elapsed();
 
     let t1 = std::time::Instant::now();
-    let mut sh_runner = runner(&platform, 2)?;
+    let mut sh_runner = runner(platform, 2)?;
     let sh = SuccessiveHalving {
         lrs: CANDIDATE_LRS.to_vec(),
         total_steps_per_trial: BUDGET_PER_TRIAL,
@@ -79,6 +85,49 @@ fn main() -> anyhow::Result<()> {
     // "The systems should save the model of best score."
     let ck = sh_runner.save_best(sh.best_trial)?;
     println!("\nbest model checkpoint: step {} object {}", ck.step, ck.params);
+
+    // Cluster-parallel grid: one SubmitTrialBatch dispatch places the
+    // whole lr ladder as independent scheduled sessions.
+    let trials: Vec<TrialSpec> = log_grid(CANDIDATE_LRS.len(), -3.5, 0.5)
+        .into_iter()
+        .map(|lr| TrialSpec { lr, seed: 7, total_steps: BUDGET_PER_TRIAL, gpus: 1 })
+        .collect();
+    let batch = ApiRequest::SubmitTrialBatch {
+        user: "automl3".into(),
+        dataset: "mnist".into(),
+        trials: trials.clone(),
+    };
+    let sessions = match service.dispatch(batch) {
+        ApiResponse::BatchSubmitted { sessions } => sessions,
+        other => anyhow::bail!("batch dispatch failed: {:?}", other),
+    };
+    println!("\nbatched parallel grid: {} trials placed in one dispatch", sessions.len());
+    // Drive until every *batch* session finishes (the in-process trial
+    // runners above left their sessions non-terminal in the store, so
+    // run_to_completion would never converge here). Bounded like
+    // run_to_completion's max_rounds so a wedged session errors out
+    // instead of spinning forever.
+    let mut rounds = 0;
+    while sessions.iter().any(|id| !platform.sessions.get(id).unwrap().state.is_terminal()) {
+        match service.dispatch(ApiRequest::Drive { chunk: 20 }) {
+            ApiResponse::Progressed { .. } => {}
+            other => anyhow::bail!("drive failed: {:?}", other),
+        }
+        rounds += 1;
+        anyhow::ensure!(rounds < 100_000, "batch sessions still pending after {} drive rounds", rounds);
+    }
+    let mut best_batch: Option<(f64, f64)> = None; // (lr, accuracy)
+    for (t, id) in trials.iter().zip(&sessions) {
+        let rec = platform.sessions.get(id).unwrap();
+        let acc = rec.best_metric.unwrap_or(0.0);
+        println!("  lr={:<9} -> best accuracy {:.4}  ({})", fnum(t.lr), acc, id);
+        if best_batch.map_or(true, |(_, b)| acc > b) {
+            best_batch = Some((t.lr, acc));
+        }
+    }
+    let (batch_lr, batch_acc) = best_batch.unwrap();
+    assert!(batch_acc > 0.5, "parallel grid should find a working lr (best acc {})", batch_acc);
+    println!("parallel grid winner: lr={} (accuracy {:.4})", fnum(batch_lr), batch_acc);
 
     assert!(sh.steps_spent < grid.steps_spent, "halving must use less budget");
     let order_of = |lr: f64| lr.log10();

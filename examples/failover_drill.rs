@@ -5,13 +5,14 @@
 //!
 //! Run with: `cargo run --release --example failover_drill`
 
-use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, RunParams};
 use nsml::scheduler::ReplicaId;
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = PlatformConfig::default();
     cfg.sched_replicas = 3;
-    let platform = NsmlPlatform::new(cfg)?;
+    let service = PlatformService::new(NsmlPlatform::new(cfg)?);
+    let platform = service.platform();
     println!("== NSML failover drill ==\n");
 
     // --- Part 1: scheduler leader election (E6) -----------------------
@@ -34,17 +35,25 @@ fn main() -> anyhow::Result<()> {
     assert_eq!(platform.election.leader().unwrap().0, ReplicaId(1));
 
     // --- Part 2: worker-node failure mid-training (E12) ---------------
-    let opts = RunOpts { total_steps: 120, checkpoint_every: 20, eval_every: 30, ..Default::default() };
-    let id = platform.run("drill", "mnist", opts)?;
+    // Everything below is service dispatches: run, drive, kill_node,
+    // run_to_completion — the wire-level version of the drill.
+    let mut params = RunParams::new("drill", "mnist");
+    params.total_steps = 120;
+    params.checkpoint_every = 20;
+    params.eval_every = 30;
+    let id = match service.dispatch(ApiRequest::Run(params)).into_result()? {
+        ApiResponse::Submitted { session } => session,
+        other => anyhow::bail!("unexpected reply: {:?}", other),
+    };
     while platform.sessions.get(&id).unwrap().steps_done < 40 {
-        platform.drive(20)?;
+        service.dispatch(ApiRequest::Drive { chunk: 20 }).into_result()?;
     }
     let node = platform.sessions.get(&id).unwrap().node.unwrap();
     let steps_before = platform.sessions.get(&id).unwrap().steps_done;
     println!("\nsession {} at step {} on {}; killing the node…", id, steps_before, node);
-    platform.kill_node(node);
+    service.dispatch(ApiRequest::KillNode { node: node.0 }).into_result()?;
 
-    platform.run_to_completion(20, 100_000)?;
+    service.dispatch(ApiRequest::RunToCompletion { chunk: 20, max_rounds: 100_000 }).into_result()?;
     let rec = platform.sessions.get(&id).unwrap();
     println!(
         "session finished: state={} steps={} recoveries={} (resumed from checkpoint <= step {})",

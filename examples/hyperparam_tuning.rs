@@ -10,7 +10,7 @@
 //!
 //! Run with: `cargo run --release --example hyperparam_tuning`
 
-use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, RunParams};
 use nsml::util::plot::ascii_chart;
 
 const BAD_LR: f64 = 2.0;
@@ -18,34 +18,42 @@ const GOOD_LR: f64 = 0.1;
 const STEPS: u64 = 240;
 
 fn main() -> anyhow::Result<()> {
-    let platform = NsmlPlatform::new(PlatformConfig::default())?;
+    let service = PlatformService::new(NsmlPlatform::new(PlatformConfig::default())?);
+    let platform = service.platform();
     println!("== §3.3 hyperparameter tuning in training time ==\n");
 
-    let opts = |seed| RunOpts {
-        total_steps: STEPS,
-        lr: Some(BAD_LR),
-        eval_every: 20,
-        checkpoint_every: 40,
-        seed,
-        ..Default::default()
+    let params = || {
+        let mut p = RunParams::new("kim", "mnist");
+        p.total_steps = STEPS;
+        p.lr = Some(BAD_LR);
+        p.eval_every = 20;
+        p.checkpoint_every = 40;
+        p.seed = 1;
+        p
+    };
+    let submit = |p| -> anyhow::Result<String> {
+        match service.dispatch(ApiRequest::Run(p)).into_result()? {
+            ApiResponse::Submitted { session } => Ok(session),
+            other => anyhow::bail!("unexpected reply: {:?}", other),
+        }
     };
 
     // A: stuck with the bad lr.
-    let stuck = platform.run("kim", "mnist", opts(1))?;
+    let stuck = submit(params())?;
     // B: will be rescued by a mid-training edit.
-    let tuned = platform.run("kim", "mnist", opts(1))?;
+    let tuned = submit(params())?;
 
     // Train both to 1/3 of the budget.
     while platform.sessions.get(&tuned).unwrap().steps_done < STEPS / 3 {
-        platform.drive(20)?;
+        service.dispatch(ApiRequest::Drive { chunk: 20 }).into_result()?;
     }
 
-    // Pause B, edit lr (the nsml REPL flow), resume.
-    platform.pause(&tuned)?;
+    // Pause B, edit lr, resume — the nsml REPL flow, as three dispatches.
+    service.dispatch(ApiRequest::Pause { session: tuned.clone() }).into_result()?;
     println!("paused {} at step {}; lr {} -> {}", tuned, platform.sessions.get(&tuned).unwrap().steps_done, BAD_LR, GOOD_LR);
-    platform.resume(&tuned, Some(GOOD_LR))?;
+    service.dispatch(ApiRequest::Resume { session: tuned.clone(), lr: Some(GOOD_LR) }).into_result()?;
 
-    platform.run_to_completion(20, 100_000)?;
+    service.dispatch(ApiRequest::RunToCompletion { chunk: 20, max_rounds: 100_000 }).into_result()?;
 
     let rec_stuck = platform.sessions.get(&stuck).unwrap();
     let rec_tuned = platform.sessions.get(&tuned).unwrap();

@@ -2,18 +2,21 @@
 //!
 //! Boots the full platform (cluster → scheduler → containers → storage →
 //! PJRT runtime), trains the MNIST model for a few hundred steps through
-//! the complete `nsml run` path, logs the loss curve, and prints the
-//! leaderboard. This is the run recorded in EXPERIMENTS.md.
+//! the complete `nsml run` path — dispatched through the v1 service
+//! layer, the same surface the CLI and `POST /api/v1/*` use — logs the
+//! loss curve, and prints the leaderboard. This is the run recorded in
+//! EXPERIMENTS.md.
 //!
 //! Run with: `cargo run --release --example quickstart`
 
-use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, RunParams};
 use nsml::util::plot::ascii_chart;
 
 fn main() -> anyhow::Result<()> {
     let mut cfg = PlatformConfig::default(); // 10 nodes × 8 GPUs, best-fit
     cfg.latency = nsml::container::LatencyModel::default(); // virtual ms
-    let platform = NsmlPlatform::new(cfg)?;
+    let service = PlatformService::new(NsmlPlatform::new(cfg)?);
+    let platform = service.platform();
 
     println!("== NSML quickstart ==");
     println!(
@@ -23,13 +26,22 @@ fn main() -> anyhow::Result<()> {
         platform.election.leader().map(|(l, _)| l.to_string()).unwrap_or_default()
     );
 
-    // nsml run quickstart.py -d mnist --steps 300
-    let opts = RunOpts { total_steps: 300, eval_every: 25, checkpoint_every: 75, ..Default::default() };
-    let id = platform.run("quickstart", "mnist", opts)?;
+    // nsml run quickstart.py -d mnist --steps 300 (one service dispatch)
+    let mut params = RunParams::new("quickstart", "mnist");
+    params.total_steps = 300;
+    params.eval_every = 25;
+    params.checkpoint_every = 75;
+    let id = match service.dispatch(ApiRequest::Run(params)) {
+        ApiResponse::Submitted { session } => session,
+        other => anyhow::bail!("run dispatch failed: {:?}", other),
+    };
     println!("submitted session {}", id);
 
     let t0 = std::time::Instant::now();
-    platform.run_to_completion(25, 10_000)?;
+    match service.dispatch(ApiRequest::RunToCompletion { chunk: 25, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => anyhow::bail!("run_to_completion dispatch failed: {:?}", other),
+    }
     let wall = t0.elapsed();
 
     let rec = platform.sessions.get(&id).unwrap();

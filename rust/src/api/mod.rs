@@ -1,22 +1,48 @@
-//! The platform facade: everything Figure 1 shows, wired together.
+//! The platform API, in three layers (paper Figure 1 + §3.2's "the web
+//! UI wraps NSML-CLI"):
 //!
-//! [`NsmlPlatform`] owns the scheduler (with leader election), the
-//! simulated cluster, the containerized substrate, the storage
-//! containers, session management, the leaderboard and the PJRT runtime.
-//! The CLI (`nsml …`), the web UI and the examples/benches all drive the
-//! platform exclusively through this facade.
+//! * **Facade** ([`NsmlPlatform`], this module) — owns and wires every
+//!   subsystem: scheduler (with leader election), simulated cluster,
+//!   containerized substrate, storage containers, session management,
+//!   leaderboard and the PJRT runtime. Typed, in-process, the only place
+//!   subsystems are composed.
+//! * **Service** ([`PlatformService`], [`service`]) — the single command/
+//!   query entry point: `dispatch(ApiRequest) -> ApiResponse`. All
+//!   researcher-facing actions (run, pause, resume-with-new-lr, stop,
+//!   infer, board queries, trial batches, …) flow through it; mutations
+//!   are audited into the event log. [`ServiceHandle`] +
+//!   [`service_channel`] carry dispatches across threads for clients
+//!   (like the web server) that cannot own the platform.
+//! * **Wire** ([`wire`]) — the serializable vocabulary: exhaustive
+//!   [`ApiRequest`]/[`ApiResponse`] enums with JSON round-trips via
+//!   `util::json`, versioned envelopes ([`API_VERSION`]) and the uniform
+//!   [`ApiError`] `{code, message, session?}` envelope.
+//!
+//! Consumers: the CLI builds requests and renders responses; the web UI
+//! exposes the same verbs as `POST /api/v1/<verb>`; examples and benches
+//! drive control-plane actions through `dispatch` too. Only queries that
+//! need rich in-process data (metric series, rendering) read the facade
+//! directly.
 //!
 //! Concurrency model: platform control state (cluster, scheduler,
 //! sessions, leaderboard) is thread-safe, but model *execution* happens
 //! on the facade's thread — mirroring how each NSML ML container owns its
-//! GPUs while the master merely coordinates.
+//! GPUs while the master merely coordinates. Hence the channel-based
+//! [`ServiceHandle`] rather than a shared `Arc<Platform>`.
 
 mod config;
 mod persist;
+pub mod service;
 mod trial;
+pub mod wire;
 
 pub use config::PlatformConfig;
+pub use service::{service_channel, PlatformService, ServiceCall, ServiceHandle};
 pub use trial::PlatformTrialRunner;
+pub use wire::{
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ErrorCode, NodeStatusView, RunParams,
+    SessionView, TrialSpec, ALL_KINDS, ALL_VERBS, API_VERSION,
+};
 
 use crate::cluster::Cluster;
 use crate::container::{ContainerManager, ImageSpec};
@@ -324,7 +350,20 @@ impl NsmlPlatform {
             }
             self.sim.advance(10);
         }
-        Err(anyhow!("run_to_completion: sessions still pending after cap"))
+        let stuck: Vec<String> = self
+            .sessions
+            .list()
+            .into_iter()
+            .filter(|r| !r.state.is_terminal() && r.state != SessionState::Paused)
+            .map(|r| format!("{} ({}, step {}/{})", r.spec.id, r.state.as_str(), r.steps_done, r.spec.total_steps))
+            .collect();
+        Err(anyhow!(
+            "run_to_completion: {} session(s) still pending after {} rounds of {} steps: [{}]",
+            stuck.len(),
+            max_rounds,
+            chunk,
+            stuck.join(", ")
+        ))
     }
 
     /// Session completed: leaderboard submission + resource release.

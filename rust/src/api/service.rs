@@ -1,0 +1,460 @@
+//! The command/query service over the platform facade.
+//!
+//! [`PlatformService`] owns an [`NsmlPlatform`] and exposes exactly one
+//! entry point — [`PlatformService::dispatch`] — which executes any
+//! [`ApiRequest`] and always returns an [`ApiResponse`] (errors included;
+//! dispatch never panics on bad input). Every mutation is audited into
+//! the platform event log under source `"api"`, so `nsml logs` shows who
+//! asked for what.
+//!
+//! Two calling conventions:
+//!
+//! * **In-process** — construct the service and call `dispatch`
+//!   synchronously (the CLI and examples do this).
+//! * **Cross-thread** — the platform is not `Send` (single-threaded model
+//!   execution by design), so remote callers like the web server's
+//!   connection threads talk over a channel: [`service_channel`] yields a
+//!   cloneable [`ServiceHandle`] whose [`ServiceHandle::call`] blocks
+//!   until the owning thread pumps the request through
+//!   [`PlatformService::serve`] (or [`PlatformService::serve_one`]).
+
+use super::wire::{
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, NodeStatusView, SessionView,
+};
+use super::{NsmlPlatform, RunOpts};
+use crate::cluster::NodeId;
+use crate::runtime::TensorData;
+use std::sync::mpsc;
+
+/// One queued request plus its reply slot (see [`service_channel`]).
+pub struct ServiceCall {
+    req: ApiRequest,
+    reply: mpsc::Sender<ApiResponse>,
+}
+
+impl ServiceCall {
+    /// The request awaiting dispatch.
+    pub fn request(&self) -> &ApiRequest {
+        &self.req
+    }
+
+    /// Send the reply (consumes the call; a dropped caller is ignored).
+    pub fn respond(self, resp: ApiResponse) {
+        let _ = self.reply.send(resp);
+    }
+}
+
+/// Cloneable, `Send` handle that forwards requests to the thread that
+/// owns the platform.
+#[derive(Clone)]
+pub struct ServiceHandle {
+    tx: mpsc::Sender<ServiceCall>,
+}
+
+impl ServiceHandle {
+    /// Dispatch a request and block for the reply. If the service side
+    /// is gone, returns an `internal` error envelope instead of hanging.
+    pub fn call(&self, req: ApiRequest) -> ApiResponse {
+        let (reply, rx) = mpsc::channel();
+        if self.tx.send(ServiceCall { req, reply }).is_err() {
+            return ApiResponse::Error { error: ApiError::internal("platform service is not running") };
+        }
+        rx.recv().unwrap_or_else(|_| ApiResponse::Error {
+            error: ApiError::internal("platform service dropped the request"),
+        })
+    }
+}
+
+/// Create a handle/receiver pair. The receiver side is pumped by the
+/// thread that owns the [`PlatformService`].
+pub fn service_channel() -> (ServiceHandle, mpsc::Receiver<ServiceCall>) {
+    let (tx, rx) = mpsc::channel();
+    (ServiceHandle { tx }, rx)
+}
+
+/// The versioned service layer over the facade.
+pub struct PlatformService {
+    platform: NsmlPlatform,
+}
+
+impl PlatformService {
+    pub fn new(platform: NsmlPlatform) -> PlatformService {
+        PlatformService { platform }
+    }
+
+    /// Read access to the owned facade (queries, persistence, rendering).
+    pub fn platform(&self) -> &NsmlPlatform {
+        &self.platform
+    }
+
+    pub fn into_platform(self) -> NsmlPlatform {
+        self.platform
+    }
+
+    /// Execute one request. Total: every outcome is an `ApiResponse`.
+    pub fn dispatch(&self, req: ApiRequest) -> ApiResponse {
+        self.audit(&req);
+        match req {
+            ApiRequest::Run(params) => match self.platform.run(&params.user, &params.dataset, params.run_opts()) {
+                Ok(id) => ApiResponse::Submitted { session: id },
+                Err(e) => ApiResponse::Error { error: ApiError::invalid(format!("run: {:#}", e)) },
+            },
+            ApiRequest::Pause { session } => self.session_ctl(&session, "pause", |p| p.pause(&session)),
+            ApiRequest::Resume { session, lr } => {
+                self.session_ctl(&session, "resume", |p| p.resume(&session, lr))
+            }
+            ApiRequest::Stop { session } => self.session_ctl(&session, "stop", |p| p.stop(&session)),
+            ApiRequest::Infer { session, x, shape } => {
+                if self.platform.sessions.get(&session).is_none() {
+                    return self.not_found(&session);
+                }
+                // Overflow-safe element count; dims must be positive.
+                let elems = shape
+                    .iter()
+                    .try_fold(1i64, |acc, &d| if d > 0 { acc.checked_mul(d) } else { None });
+                if shape.is_empty() || elems != Some(x.len() as i64) {
+                    return ApiResponse::Error {
+                        error: ApiError::invalid(format!(
+                            "infer: shape {:?} does not describe {} values",
+                            shape,
+                            x.len()
+                        ))
+                        .with_session(&session),
+                    };
+                }
+                match self.platform.infer(&session, &TensorData::f32(x, &shape)) {
+                    Ok(probs) => ApiResponse::Probs { probs },
+                    Err(e) => ApiResponse::Error {
+                        error: ApiError::failed(format!("infer: {:#}", e)).with_session(&session),
+                    },
+                }
+            }
+            ApiRequest::Drive { chunk } => match self.platform.drive(chunk) {
+                Ok(n) => ApiResponse::Progressed { sessions: n },
+                Err(e) => ApiResponse::Error { error: ApiError::internal(format!("drive: {:#}", e)) },
+            },
+            ApiRequest::RunToCompletion { chunk, max_rounds } => {
+                match self.platform.run_to_completion(chunk, max_rounds) {
+                    Ok(()) => ApiResponse::Ack { verb: "run_to_completion".into(), session: None },
+                    Err(e) => ApiResponse::Error { error: ApiError::internal(format!("{:#}", e)) },
+                }
+            }
+            ApiRequest::KillNode { node } => {
+                if (node as usize) >= self.platform.cluster.node_count() {
+                    return ApiResponse::Error {
+                        error: ApiError::not_found(format!("no node {}", node)),
+                    };
+                }
+                self.platform.kill_node(NodeId(node));
+                ApiResponse::Ack { verb: "kill_node".into(), session: None }
+            }
+            ApiRequest::ListSessions => ApiResponse::Sessions {
+                sessions: self.platform.sessions.list().iter().map(SessionView::from_record).collect(),
+            },
+            ApiRequest::GetSession { session } => match self.platform.sessions.get(&session) {
+                Some(rec) => ApiResponse::Session { session: SessionView::from_record(&rec) },
+                None => self.not_found(&session),
+            },
+            ApiRequest::Board { dataset, limit } => {
+                if !self.platform.leaderboard.datasets().contains(&dataset) {
+                    return ApiResponse::Error {
+                        error: ApiError::not_found(format!("no leaderboard for dataset '{}'", dataset)),
+                    };
+                }
+                let rows = self
+                    .platform
+                    .leaderboard
+                    .top(&dataset, limit.max(1))
+                    .into_iter()
+                    .enumerate()
+                    .map(|(i, s)| BoardRow {
+                        rank: i + 1,
+                        session: s.session,
+                        user: s.user,
+                        model: s.model,
+                        metric: s.metric_name,
+                        value: s.value,
+                        step: s.step,
+                    })
+                    .collect();
+                ApiResponse::Board { dataset, rows }
+            }
+            ApiRequest::ClusterStatus => ApiResponse::Cluster { cluster: self.cluster_view() },
+            ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
+                if trials.is_empty() {
+                    return ApiResponse::Error {
+                        error: ApiError::invalid("submit_trial_batch: empty trial list"),
+                    };
+                }
+                let mut sessions = Vec::with_capacity(trials.len());
+                for (i, t) in trials.iter().enumerate() {
+                    let opts = RunOpts {
+                        gpus: t.gpus.max(1),
+                        total_steps: t.total_steps,
+                        lr: Some(t.lr),
+                        seed: t.seed,
+                        checkpoint_every: (t.total_steps / 4).max(1),
+                        eval_every: (t.total_steps / 8).max(1),
+                        ..RunOpts::default()
+                    };
+                    match self.platform.run(&user, &dataset, opts) {
+                        Ok(id) => sessions.push(id),
+                        Err(e) => {
+                            // Stop the partial batch so no orphan trials linger.
+                            for id in &sessions {
+                                let _ = self.platform.stop(id);
+                            }
+                            return ApiResponse::Error {
+                                error: ApiError::invalid(format!(
+                                    "submit_trial_batch: trial {} of {} failed: {:#}",
+                                    i,
+                                    trials.len(),
+                                    e
+                                )),
+                            };
+                        }
+                    }
+                }
+                self.platform.events.info(
+                    "api",
+                    "",
+                    format!("trial batch placed: {} sessions on '{}'", sessions.len(), dataset),
+                );
+                ApiResponse::BatchSubmitted { sessions }
+            }
+        }
+    }
+
+    /// Parse a JSON request envelope, dispatch it, serialize the reply.
+    /// Parse errors and unknown verbs become error envelopes, never
+    /// panics.
+    pub fn dispatch_json(&self, text: &str) -> String {
+        let resp = match crate::util::json::parse(text) {
+            Err(e) => ApiResponse::Error { error: ApiError::invalid(format!("request parse: {}", e)) },
+            Ok(j) => match ApiRequest::from_json(&j) {
+                Err(error) => ApiResponse::Error { error },
+                Ok(req) => self.dispatch(req),
+            },
+        };
+        resp.to_json().to_string()
+    }
+
+    /// Pump queued [`ServiceCall`]s until every [`ServiceHandle`] is
+    /// dropped. Run this on the thread that owns the platform.
+    pub fn serve(&self, rx: &mpsc::Receiver<ServiceCall>) {
+        while self.serve_one(rx) {}
+    }
+
+    /// Pump exactly one queued call; returns false once the channel is
+    /// closed. Useful for tests that serve a known number of requests.
+    pub fn serve_one(&self, rx: &mpsc::Receiver<ServiceCall>) -> bool {
+        match rx.recv() {
+            Ok(call) => {
+                let resp = self.dispatch(call.req);
+                let _ = call.reply.send(resp);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
+    fn not_found(&self, session: &str) -> ApiResponse {
+        ApiResponse::Error {
+            error: ApiError::not_found(format!("unknown session '{}'", session)).with_session(session),
+        }
+    }
+
+    /// Shared pattern for pause/resume/stop: not-found vs wrong-state.
+    fn session_ctl(
+        &self,
+        session: &str,
+        verb: &str,
+        f: impl FnOnce(&NsmlPlatform) -> anyhow::Result<()>,
+    ) -> ApiResponse {
+        if self.platform.sessions.get(session).is_none() {
+            return self.not_found(session);
+        }
+        match f(&self.platform) {
+            Ok(()) => ApiResponse::Ack { verb: verb.to_string(), session: Some(session.to_string()) },
+            Err(e) => ApiResponse::Error {
+                error: ApiError::failed(format!("{}: {:#}", verb, e)).with_session(session),
+            },
+        }
+    }
+
+    fn cluster_view(&self) -> ClusterView {
+        let (total, free) = self.platform.cluster.gpu_totals();
+        ClusterView {
+            nodes: self
+                .platform
+                .cluster
+                .snapshot()
+                .iter()
+                .map(|n| NodeStatusView {
+                    hostname: n.hostname.clone(),
+                    alive: n.alive,
+                    total_gpus: n.total_gpus,
+                    free_gpus: n.free_gpus,
+                    jobs: n.jobs.clone(),
+                })
+                .collect(),
+            total_gpus: total,
+            free_gpus: free,
+            utilization: self.platform.cluster.utilization(),
+            queue_len: self.platform.master.queue_len(),
+            policy: self.platform.master.policy_name().to_string(),
+            fast_path: self.platform.master.fast_path,
+            leader: self.platform.election.leader().map(|(l, _)| l.to_string()),
+            epoch: self.platform.election.epoch(),
+        }
+    }
+
+    /// Audit mutations into the event log (queries stay silent; `drive`
+    /// is logged at debug so pump loops don't flood the log).
+    fn audit(&self, req: &ApiRequest) {
+        if !req.is_mutation() {
+            return;
+        }
+        let (subject, detail) = match req {
+            ApiRequest::Run(p) => (String::new(), format!("user={} dataset={}", p.user, p.dataset)),
+            ApiRequest::Pause { session } | ApiRequest::Stop { session } => (session.clone(), String::new()),
+            ApiRequest::Resume { session, lr } => (
+                session.clone(),
+                lr.map(|lr| format!("lr={}", lr)).unwrap_or_default(),
+            ),
+            ApiRequest::KillNode { node } => (String::new(), format!("node={}", node)),
+            ApiRequest::RunToCompletion { chunk, max_rounds } => {
+                (String::new(), format!("chunk={} max_rounds={}", chunk, max_rounds))
+            }
+            ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
+                (String::new(), format!("user={} dataset={} trials={}", user, dataset, trials.len()))
+            }
+            _ => (String::new(), String::new()),
+        };
+        let line = if detail.is_empty() {
+            format!("dispatch {}", req.verb())
+        } else {
+            format!("dispatch {} {}", req.verb(), detail)
+        };
+        if matches!(req, ApiRequest::Drive { .. }) {
+            self.platform.events.debug("api", &subject, "dispatch drive");
+        } else {
+            self.platform.events.info("api", &subject, line);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::api::PlatformConfig;
+    use std::path::PathBuf;
+
+    fn service() -> Option<PlatformService> {
+        let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+        if !dir.join("manifest.json").exists() {
+            eprintln!("skipping: artifacts not built");
+            return None;
+        }
+        let mut cfg = PlatformConfig::test_default();
+        cfg.artifacts_dir = dir;
+        Some(PlatformService::new(NsmlPlatform::new(cfg).unwrap()))
+    }
+
+    #[test]
+    fn unknown_session_is_not_found() {
+        let Some(s) = service() else { return };
+        for req in [
+            ApiRequest::Pause { session: "nope".into() },
+            ApiRequest::Resume { session: "nope".into(), lr: None },
+            ApiRequest::Stop { session: "nope".into() },
+            ApiRequest::GetSession { session: "nope".into() },
+            ApiRequest::Infer { session: "nope".into(), x: vec![0.0], shape: vec![1] },
+        ] {
+            match s.dispatch(req.clone()) {
+                ApiResponse::Error { error } => {
+                    assert_eq!(error.code, crate::api::ErrorCode::NotFound, "{:?}", req);
+                    assert_eq!(error.session.as_deref(), Some("nope"));
+                }
+                other => panic!("{:?} -> {:?}", req, other),
+            }
+        }
+    }
+
+    #[test]
+    fn bad_dataset_and_bad_node_reported() {
+        let Some(s) = service() else { return };
+        let resp = s.dispatch(ApiRequest::Run(crate::api::RunParams::new("kim", "no-such-dataset")));
+        match resp {
+            ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::InvalidArgument),
+            other => panic!("{:?}", other),
+        }
+        match s.dispatch(ApiRequest::KillNode { node: 99 }) {
+            ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::NotFound),
+            other => panic!("{:?}", other),
+        }
+        match s.dispatch(ApiRequest::Board { dataset: "no-such".into(), limit: 5 }) {
+            ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::NotFound),
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn dispatch_json_never_panics() {
+        let Some(s) = service() else { return };
+        for garbage in ["", "{", "[1,2]", r#"{"v":1}"#, r#"{"v":1,"verb":"nope","args":{}}"#] {
+            let out = s.dispatch_json(garbage);
+            let j = crate::util::json::parse(&out).unwrap();
+            assert_eq!(j.get("kind").unwrap().as_str(), Some("error"), "input {:?}", garbage);
+        }
+        let ok = s.dispatch_json(r#"{"v":1,"verb":"cluster_status","args":{}}"#);
+        let j = crate::util::json::parse(&ok).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("cluster"));
+        assert_eq!(j.at(&["data", "cluster", "total_gpus"]).unwrap().as_i64(), Some(12));
+    }
+
+    #[test]
+    fn mutations_are_audited() {
+        let Some(s) = service() else { return };
+        let resp = s.dispatch(ApiRequest::Run(crate::api::RunParams::new("audit", "mnist")));
+        assert!(!resp.is_error(), "{:?}", resp);
+        let api_events = s.platform().events.query(Some("api"), crate::events::Level::Info);
+        assert!(
+            api_events.iter().any(|e| e.message.contains("dispatch run") && e.message.contains("user=audit")),
+            "{:?}",
+            api_events.iter().map(|e| &e.message).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn service_handle_round_trips_across_threads() {
+        let Some(s) = service() else { return };
+        let (handle, rx) = service_channel();
+        let client = std::thread::spawn(move || {
+            let resp = handle.call(ApiRequest::ClusterStatus);
+            let listed = handle.call(ApiRequest::ListSessions);
+            (resp, listed)
+        });
+        // Serve exactly the two calls, then let the handle drop.
+        assert!(s.serve_one(&rx));
+        assert!(s.serve_one(&rx));
+        let (resp, listed) = client.join().unwrap();
+        match resp {
+            ApiResponse::Cluster { cluster } => assert_eq!(cluster.total_gpus, 12),
+            other => panic!("{:?}", other),
+        }
+        assert!(matches!(listed, ApiResponse::Sessions { .. }));
+        // Channel closed -> serve returns false.
+        assert!(!s.serve_one(&rx));
+    }
+
+    #[test]
+    fn dead_service_yields_error_envelope() {
+        let (handle, rx) = service_channel();
+        drop(rx);
+        match handle.call(ApiRequest::ListSessions) {
+            ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::Internal),
+            other => panic!("{:?}", other),
+        }
+    }
+}

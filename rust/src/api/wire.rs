@@ -1,0 +1,987 @@
+//! The v1 wire format: every platform verb as serializable data.
+//!
+//! [`ApiRequest`] / [`ApiResponse`] are the exhaustive command/query
+//! vocabulary of the platform. Both round-trip losslessly through
+//! `util::json` (`to_json` / `from_json`), so any client that can speak
+//! JSON — the CLI, the web UI's `POST /api/v1/*` routes, a notebook, a
+//! remote automl driver — drives the platform through the exact same
+//! surface. Failures travel as a uniform [`ApiError`] envelope instead of
+//! ad-hoc strings.
+//!
+//! Envelope shapes (all versioned with [`API_VERSION`]):
+//!
+//! ```json
+//! {"v":1,"verb":"resume","args":{"session":"kim/mnist/1","lr":0.05}}
+//! {"v":1,"kind":"ack","data":{"verb":"resume","session":"kim/mnist/1"}}
+//! {"v":1,"kind":"error","data":{"error":{"code":"not_found","message":"…"}}}
+//! ```
+
+use crate::session::{SessionRecord, SessionState};
+use crate::util::json::Json;
+use std::fmt;
+
+/// Wire protocol version; bump on breaking envelope changes.
+pub const API_VERSION: u64 = 1;
+
+/// Every request verb, in the order of the [`ApiRequest`] variants.
+pub const ALL_VERBS: &[&str] = &[
+    "run",
+    "pause",
+    "resume",
+    "stop",
+    "infer",
+    "drive",
+    "run_to_completion",
+    "kill_node",
+    "list_sessions",
+    "get_session",
+    "board",
+    "cluster_status",
+    "submit_trial_batch",
+];
+
+/// Every response kind, in the order of the [`ApiResponse`] variants.
+pub const ALL_KINDS: &[&str] = &[
+    "submitted",
+    "batch_submitted",
+    "ack",
+    "progressed",
+    "probs",
+    "sessions",
+    "session",
+    "board",
+    "cluster",
+    "error",
+];
+
+// ---------------------------------------------------------------------
+// Error envelope
+// ---------------------------------------------------------------------
+
+/// Coarse error class, mapped to HTTP status by the web layer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ErrorCode {
+    /// The addressed session/dataset/node does not exist.
+    NotFound,
+    /// The request itself is malformed or names an unknown verb/dataset.
+    InvalidArgument,
+    /// The request is well-formed but the target is in the wrong state
+    /// (e.g. pausing a session that is not active).
+    FailedPrecondition,
+    /// The platform failed while executing a valid request.
+    Internal,
+}
+
+impl ErrorCode {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ErrorCode::NotFound => "not_found",
+            ErrorCode::InvalidArgument => "invalid_argument",
+            ErrorCode::FailedPrecondition => "failed_precondition",
+            ErrorCode::Internal => "internal",
+        }
+    }
+
+    pub fn from_str(s: &str) -> Option<ErrorCode> {
+        match s {
+            "not_found" => Some(ErrorCode::NotFound),
+            "invalid_argument" => Some(ErrorCode::InvalidArgument),
+            "failed_precondition" => Some(ErrorCode::FailedPrecondition),
+            "internal" => Some(ErrorCode::Internal),
+            _ => None,
+        }
+    }
+}
+
+/// The uniform error envelope carried by [`ApiResponse::Error`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct ApiError {
+    pub code: ErrorCode,
+    pub message: String,
+    /// The session the error is about, when there is one.
+    pub session: Option<String>,
+}
+
+impl ApiError {
+    pub fn not_found(message: impl Into<String>) -> ApiError {
+        ApiError { code: ErrorCode::NotFound, message: message.into(), session: None }
+    }
+
+    pub fn invalid(message: impl Into<String>) -> ApiError {
+        ApiError { code: ErrorCode::InvalidArgument, message: message.into(), session: None }
+    }
+
+    pub fn failed(message: impl Into<String>) -> ApiError {
+        ApiError { code: ErrorCode::FailedPrecondition, message: message.into(), session: None }
+    }
+
+    pub fn internal(message: impl Into<String>) -> ApiError {
+        ApiError { code: ErrorCode::Internal, message: message.into(), session: None }
+    }
+
+    pub fn with_session(mut self, id: &str) -> ApiError {
+        self.session = Some(id.to_string());
+        self
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("code", self.code.as_str().into()).set("message", self.message.as_str().into());
+        if let Some(s) = &self.session {
+            o.set("session", s.as_str().into());
+        }
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<ApiError, ApiError> {
+        let code = need_str(j, "code")?;
+        Ok(ApiError {
+            code: ErrorCode::from_str(&code)
+                .ok_or_else(|| ApiError::invalid(format!("unknown error code '{}'", code)))?,
+            message: need_str(j, "message")?,
+            session: opt_str(j, "session")?,
+        })
+    }
+}
+
+impl fmt::Display for ApiError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match &self.session {
+            Some(s) => write!(f, "[{}] {} (session {})", self.code.as_str(), self.message, s),
+            None => write!(f, "[{}] {}", self.code.as_str(), self.message),
+        }
+    }
+}
+
+impl std::error::Error for ApiError {}
+
+// ---------------------------------------------------------------------
+// Requests
+// ---------------------------------------------------------------------
+
+/// The `nsml run` arguments on the wire (mirror of `RunOpts` + identity).
+#[derive(Debug, Clone, PartialEq)]
+pub struct RunParams {
+    pub user: String,
+    pub dataset: String,
+    pub gpus: usize,
+    pub total_steps: u64,
+    pub lr: Option<f64>,
+    pub seed: u64,
+    pub use_scan: bool,
+    /// Priority name (`low` | `normal` | `high`).
+    pub priority: String,
+    pub checkpoint_every: u64,
+    pub eval_every: u64,
+}
+
+impl RunParams {
+    pub fn new(user: &str, dataset: &str) -> RunParams {
+        let d = super::RunOpts::default();
+        RunParams {
+            user: user.to_string(),
+            dataset: dataset.to_string(),
+            gpus: d.gpus,
+            total_steps: d.total_steps,
+            lr: d.lr,
+            seed: d.seed,
+            use_scan: d.use_scan,
+            priority: d.priority.as_str().to_string(),
+            checkpoint_every: d.checkpoint_every,
+            eval_every: d.eval_every,
+        }
+    }
+
+    /// Convert to the facade's typed options.
+    pub fn run_opts(&self) -> super::RunOpts {
+        super::RunOpts {
+            gpus: self.gpus,
+            total_steps: self.total_steps,
+            lr: self.lr,
+            seed: self.seed,
+            use_scan: self.use_scan,
+            priority: crate::scheduler::Priority::from_str(&self.priority),
+            checkpoint_every: self.checkpoint_every,
+            eval_every: self.eval_every,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("user", self.user.as_str().into())
+            .set("dataset", self.dataset.as_str().into())
+            .set("gpus", self.gpus.into())
+            .set("total_steps", self.total_steps.into())
+            .set("lr", self.lr.map(Json::Num).unwrap_or(Json::Null))
+            .set("seed", self.seed.into())
+            .set("use_scan", self.use_scan.into())
+            .set("priority", self.priority.as_str().into())
+            .set("checkpoint_every", self.checkpoint_every.into())
+            .set("eval_every", self.eval_every.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<RunParams, ApiError> {
+        let mut p = RunParams::new(&need_str(j, "user")?, &need_str(j, "dataset")?);
+        if let Some(v) = opt_u64(j, "gpus")? {
+            p.gpus = v as usize;
+        }
+        if let Some(v) = opt_u64(j, "total_steps")? {
+            p.total_steps = v;
+        }
+        p.lr = opt_f64(j, "lr")?;
+        if let Some(v) = opt_u64(j, "seed")? {
+            p.seed = v;
+        }
+        if let Some(v) = opt_bool(j, "use_scan")? {
+            p.use_scan = v;
+        }
+        if let Some(v) = opt_str(j, "priority")? {
+            p.priority = v;
+        }
+        if let Some(v) = opt_u64(j, "checkpoint_every")? {
+            p.checkpoint_every = v;
+        }
+        if let Some(v) = opt_u64(j, "eval_every")? {
+            p.eval_every = v;
+        }
+        Ok(p)
+    }
+}
+
+/// One hyperparameter trial inside a [`ApiRequest::SubmitTrialBatch`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrialSpec {
+    pub lr: f64,
+    pub seed: u64,
+    pub total_steps: u64,
+    pub gpus: usize,
+}
+
+impl TrialSpec {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("lr", self.lr.into())
+            .set("seed", self.seed.into())
+            .set("total_steps", self.total_steps.into())
+            .set("gpus", self.gpus.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<TrialSpec, ApiError> {
+        Ok(TrialSpec {
+            lr: need_f64(j, "lr")?,
+            seed: opt_u64(j, "seed")?.unwrap_or(0),
+            total_steps: need_u64(j, "total_steps")?,
+            gpus: opt_u64(j, "gpus")?.unwrap_or(1) as usize,
+        })
+    }
+}
+
+/// Every command and query the platform accepts — the single API surface
+/// shared by CLI, web, examples and benches.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiRequest {
+    /// Submit a training session (`nsml run`).
+    Run(RunParams),
+    /// Pause a running session (checkpoints first).
+    Pause { session: String },
+    /// Resume a paused session, optionally with a new learning rate.
+    Resume { session: String, lr: Option<f64> },
+    /// Stop a session outright.
+    Stop { session: String },
+    /// Run inference against a session's best checkpoint.
+    Infer { session: String, x: Vec<f32>, shape: Vec<i64> },
+    /// Advance every active session by up to `chunk` steps.
+    Drive { chunk: u64 },
+    /// Drive until every session is terminal (bounded by `max_rounds`).
+    RunToCompletion { chunk: u64, max_rounds: usize },
+    /// Inject a node failure (drills); affected sessions auto-recover.
+    KillNode { node: u32 },
+    /// All session records.
+    ListSessions,
+    /// One session record.
+    GetSession { session: String },
+    /// Top entries of a dataset's leaderboard.
+    Board { dataset: String, limit: usize },
+    /// Cluster + scheduler snapshot.
+    ClusterStatus,
+    /// Place N hyperparameter trials in one dispatch (automl batching).
+    SubmitTrialBatch { user: String, dataset: String, trials: Vec<TrialSpec> },
+}
+
+impl ApiRequest {
+    pub fn verb(&self) -> &'static str {
+        match self {
+            ApiRequest::Run(_) => "run",
+            ApiRequest::Pause { .. } => "pause",
+            ApiRequest::Resume { .. } => "resume",
+            ApiRequest::Stop { .. } => "stop",
+            ApiRequest::Infer { .. } => "infer",
+            ApiRequest::Drive { .. } => "drive",
+            ApiRequest::RunToCompletion { .. } => "run_to_completion",
+            ApiRequest::KillNode { .. } => "kill_node",
+            ApiRequest::ListSessions => "list_sessions",
+            ApiRequest::GetSession { .. } => "get_session",
+            ApiRequest::Board { .. } => "board",
+            ApiRequest::ClusterStatus => "cluster_status",
+            ApiRequest::SubmitTrialBatch { .. } => "submit_trial_batch",
+        }
+    }
+
+    /// True for verbs that change platform state (these are audited).
+    pub fn is_mutation(&self) -> bool {
+        !matches!(
+            self,
+            ApiRequest::ListSessions
+                | ApiRequest::GetSession { .. }
+                | ApiRequest::Board { .. }
+                | ApiRequest::ClusterStatus
+                | ApiRequest::Infer { .. }
+        )
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut args = Json::obj();
+        match self {
+            ApiRequest::Run(p) => {
+                args = p.to_json();
+            }
+            ApiRequest::Pause { session } | ApiRequest::Stop { session } | ApiRequest::GetSession { session } => {
+                args.set("session", session.as_str().into());
+            }
+            ApiRequest::Resume { session, lr } => {
+                args.set("session", session.as_str().into())
+                    .set("lr", lr.map(Json::Num).unwrap_or(Json::Null));
+            }
+            ApiRequest::Infer { session, x, shape } => {
+                args.set("session", session.as_str().into())
+                    .set("x", Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect()))
+                    .set("shape", Json::Arr(shape.iter().map(|&d| Json::Num(d as f64)).collect()));
+            }
+            ApiRequest::Drive { chunk } => {
+                args.set("chunk", (*chunk).into());
+            }
+            ApiRequest::RunToCompletion { chunk, max_rounds } => {
+                args.set("chunk", (*chunk).into()).set("max_rounds", (*max_rounds).into());
+            }
+            ApiRequest::KillNode { node } => {
+                args.set("node", (*node).into());
+            }
+            ApiRequest::ListSessions | ApiRequest::ClusterStatus => {}
+            ApiRequest::Board { dataset, limit } => {
+                args.set("dataset", dataset.as_str().into()).set("limit", (*limit).into());
+            }
+            ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
+                args.set("user", user.as_str().into())
+                    .set("dataset", dataset.as_str().into())
+                    .set("trials", Json::Arr(trials.iter().map(|t| t.to_json()).collect()));
+            }
+        }
+        envelope("verb", self.verb(), "args", args)
+    }
+
+    /// Parse a full request envelope (version + verb + args).
+    pub fn from_json(j: &Json) -> Result<ApiRequest, ApiError> {
+        check_version(j)?;
+        let verb = need_str(j, "verb")?;
+        let empty = Json::obj();
+        let args = j.get("args").unwrap_or(&empty);
+        ApiRequest::from_verb_args(&verb, args)
+    }
+
+    /// Build a request from a verb name (e.g. the `POST /api/v1/<verb>`
+    /// path) and its argument object.
+    pub fn from_verb_args(verb: &str, args: &Json) -> Result<ApiRequest, ApiError> {
+        match verb {
+            "run" => Ok(ApiRequest::Run(RunParams::from_json(args)?)),
+            "pause" => Ok(ApiRequest::Pause { session: need_str(args, "session")? }),
+            "resume" => Ok(ApiRequest::Resume {
+                session: need_str(args, "session")?,
+                lr: opt_f64(args, "lr")?,
+            }),
+            "stop" => Ok(ApiRequest::Stop { session: need_str(args, "session")? }),
+            "infer" => {
+                let x = need_arr(args, "x")?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| ApiError::invalid("infer: 'x' must be an array of numbers"))?;
+                let shape = need_arr(args, "shape")?
+                    .iter()
+                    .map(|v| v.as_i64())
+                    .collect::<Option<Vec<i64>>>()
+                    .ok_or_else(|| ApiError::invalid("infer: 'shape' must be an array of integers"))?;
+                Ok(ApiRequest::Infer { session: need_str(args, "session")?, x, shape })
+            }
+            "drive" => Ok(ApiRequest::Drive { chunk: need_u64(args, "chunk")? }),
+            "run_to_completion" => Ok(ApiRequest::RunToCompletion {
+                chunk: need_u64(args, "chunk")?,
+                max_rounds: need_u64(args, "max_rounds")? as usize,
+            }),
+            "kill_node" => Ok(ApiRequest::KillNode { node: need_u64(args, "node")? as u32 }),
+            "list_sessions" => Ok(ApiRequest::ListSessions),
+            "get_session" => Ok(ApiRequest::GetSession { session: need_str(args, "session")? }),
+            "board" => Ok(ApiRequest::Board {
+                dataset: need_str(args, "dataset")?,
+                limit: opt_u64(args, "limit")?.unwrap_or(100) as usize,
+            }),
+            "cluster_status" => Ok(ApiRequest::ClusterStatus),
+            "submit_trial_batch" => {
+                let trials = need_arr(args, "trials")?
+                    .iter()
+                    .map(TrialSpec::from_json)
+                    .collect::<Result<Vec<TrialSpec>, ApiError>>()?;
+                Ok(ApiRequest::SubmitTrialBatch {
+                    user: need_str(args, "user")?,
+                    dataset: need_str(args, "dataset")?,
+                    trials,
+                })
+            }
+            other => Err(ApiError::invalid(format!(
+                "unknown verb '{}' (expected one of: {})",
+                other,
+                ALL_VERBS.join(", ")
+            ))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Response views
+// ---------------------------------------------------------------------
+
+/// Serializable session snapshot (no metric series; use the web metrics
+/// endpoint or the facade for those).
+#[derive(Debug, Clone, PartialEq)]
+pub struct SessionView {
+    pub id: String,
+    pub user: String,
+    pub dataset: String,
+    pub model: String,
+    pub state: SessionState,
+    pub node: Option<u32>,
+    pub steps_done: u64,
+    pub total_steps: u64,
+    pub lr: f64,
+    pub best_metric: Option<f64>,
+    pub recoveries: u32,
+}
+
+impl SessionView {
+    pub fn from_record(rec: &SessionRecord) -> SessionView {
+        SessionView {
+            id: rec.spec.id.clone(),
+            user: rec.spec.user.clone(),
+            dataset: rec.spec.dataset.clone(),
+            model: rec.spec.model.clone(),
+            state: rec.state,
+            node: rec.node.map(|n| n.0),
+            steps_done: rec.steps_done,
+            total_steps: rec.spec.total_steps,
+            lr: rec.spec.lr,
+            best_metric: rec.best_metric,
+            recoveries: rec.recoveries,
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id.as_str().into())
+            .set("user", self.user.as_str().into())
+            .set("dataset", self.dataset.as_str().into())
+            .set("model", self.model.as_str().into())
+            .set("state", self.state.as_str().into())
+            .set("node", self.node.map(|n| Json::from(n)).unwrap_or(Json::Null))
+            .set("steps_done", self.steps_done.into())
+            .set("total_steps", self.total_steps.into())
+            .set("lr", self.lr.into())
+            .set("best_metric", self.best_metric.map(Json::Num).unwrap_or(Json::Null))
+            .set("recoveries", self.recoveries.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<SessionView, ApiError> {
+        let state = need_str(j, "state")?;
+        Ok(SessionView {
+            id: need_str(j, "id")?,
+            user: need_str(j, "user")?,
+            dataset: need_str(j, "dataset")?,
+            model: need_str(j, "model")?,
+            state: SessionState::from_str(&state)
+                .ok_or_else(|| ApiError::invalid(format!("unknown session state '{}'", state)))?,
+            node: opt_u64(j, "node")?.map(|n| n as u32),
+            steps_done: need_u64(j, "steps_done")?,
+            total_steps: need_u64(j, "total_steps")?,
+            lr: need_f64(j, "lr")?,
+            best_metric: opt_f64(j, "best_metric")?,
+            recoveries: opt_u64(j, "recoveries")?.unwrap_or(0) as u32,
+        })
+    }
+}
+
+/// One leaderboard row.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BoardRow {
+    pub rank: usize,
+    pub session: String,
+    pub user: String,
+    pub model: String,
+    pub metric: String,
+    pub value: f64,
+    pub step: u64,
+}
+
+impl BoardRow {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("rank", self.rank.into())
+            .set("session", self.session.as_str().into())
+            .set("user", self.user.as_str().into())
+            .set("model", self.model.as_str().into())
+            .set("metric", self.metric.as_str().into())
+            .set("value", self.value.into())
+            .set("step", self.step.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<BoardRow, ApiError> {
+        Ok(BoardRow {
+            rank: need_u64(j, "rank")? as usize,
+            session: need_str(j, "session")?,
+            user: need_str(j, "user")?,
+            model: need_str(j, "model")?,
+            metric: need_str(j, "metric")?,
+            value: need_f64(j, "value")?,
+            step: need_u64(j, "step")?,
+        })
+    }
+}
+
+/// One node in a [`ClusterView`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct NodeStatusView {
+    pub hostname: String,
+    pub alive: bool,
+    pub total_gpus: usize,
+    pub free_gpus: usize,
+    pub jobs: Vec<String>,
+}
+
+impl NodeStatusView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("hostname", self.hostname.as_str().into())
+            .set("alive", self.alive.into())
+            .set("total_gpus", self.total_gpus.into())
+            .set("free_gpus", self.free_gpus.into())
+            .set("jobs", Json::Arr(self.jobs.iter().map(|s| Json::Str(s.clone())).collect()));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<NodeStatusView, ApiError> {
+        Ok(NodeStatusView {
+            hostname: need_str(j, "hostname")?,
+            alive: need_bool(j, "alive")?,
+            total_gpus: need_u64(j, "total_gpus")? as usize,
+            free_gpus: need_u64(j, "free_gpus")? as usize,
+            jobs: need_arr(j, "jobs")?
+                .iter()
+                .map(|v| v.as_str().map(str::to_string))
+                .collect::<Option<Vec<String>>>()
+                .ok_or_else(|| ApiError::invalid("node 'jobs' must be strings"))?,
+        })
+    }
+}
+
+/// Cluster + scheduler snapshot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterView {
+    pub nodes: Vec<NodeStatusView>,
+    pub total_gpus: usize,
+    pub free_gpus: usize,
+    pub utilization: f64,
+    pub queue_len: usize,
+    pub policy: String,
+    pub fast_path: bool,
+    pub leader: Option<String>,
+    pub epoch: u64,
+}
+
+impl ClusterView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("nodes", Json::Arr(self.nodes.iter().map(|n| n.to_json()).collect()))
+            .set("total_gpus", self.total_gpus.into())
+            .set("free_gpus", self.free_gpus.into())
+            .set("utilization", self.utilization.into())
+            .set("queue_len", self.queue_len.into())
+            .set("policy", self.policy.as_str().into())
+            .set("fast_path", self.fast_path.into())
+            .set("leader", self.leader.as_deref().map(Json::from).unwrap_or(Json::Null))
+            .set("epoch", self.epoch.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<ClusterView, ApiError> {
+        Ok(ClusterView {
+            nodes: need_arr(j, "nodes")?
+                .iter()
+                .map(NodeStatusView::from_json)
+                .collect::<Result<Vec<NodeStatusView>, ApiError>>()?,
+            total_gpus: need_u64(j, "total_gpus")? as usize,
+            free_gpus: need_u64(j, "free_gpus")? as usize,
+            utilization: need_f64(j, "utilization")?,
+            queue_len: need_u64(j, "queue_len")? as usize,
+            policy: need_str(j, "policy")?,
+            fast_path: need_bool(j, "fast_path")?,
+            leader: opt_str(j, "leader")?,
+            epoch: need_u64(j, "epoch")?,
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Responses
+// ---------------------------------------------------------------------
+
+/// Every reply the service produces. Exactly one variant per outcome
+/// shape; errors always travel as [`ApiResponse::Error`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ApiResponse {
+    /// A session was placed or queued.
+    Submitted { session: String },
+    /// A trial batch was placed; ids in trial order.
+    BatchSubmitted { sessions: Vec<String> },
+    /// A mutation succeeded with nothing to return.
+    Ack { verb: String, session: Option<String> },
+    /// `drive` advanced this many sessions.
+    Progressed { sessions: usize },
+    /// Inference output probabilities.
+    Probs { probs: Vec<f32> },
+    Sessions { sessions: Vec<SessionView> },
+    Session { session: SessionView },
+    Board { dataset: String, rows: Vec<BoardRow> },
+    Cluster { cluster: ClusterView },
+    Error { error: ApiError },
+}
+
+impl ApiResponse {
+    pub fn kind(&self) -> &'static str {
+        match self {
+            ApiResponse::Submitted { .. } => "submitted",
+            ApiResponse::BatchSubmitted { .. } => "batch_submitted",
+            ApiResponse::Ack { .. } => "ack",
+            ApiResponse::Progressed { .. } => "progressed",
+            ApiResponse::Probs { .. } => "probs",
+            ApiResponse::Sessions { .. } => "sessions",
+            ApiResponse::Session { .. } => "session",
+            ApiResponse::Board { .. } => "board",
+            ApiResponse::Cluster { .. } => "cluster",
+            ApiResponse::Error { .. } => "error",
+        }
+    }
+
+    pub fn is_error(&self) -> bool {
+        matches!(self, ApiResponse::Error { .. })
+    }
+
+    /// Unwrap into a uniform `Result` for callers that only need
+    /// success/failure (the CLI).
+    pub fn into_result(self) -> Result<ApiResponse, ApiError> {
+        match self {
+            ApiResponse::Error { error } => Err(error),
+            other => Ok(other),
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut data = Json::obj();
+        match self {
+            ApiResponse::Submitted { session } => {
+                data.set("session", session.as_str().into());
+            }
+            ApiResponse::BatchSubmitted { sessions } => {
+                data.set("sessions", Json::Arr(sessions.iter().map(|s| Json::Str(s.clone())).collect()));
+            }
+            ApiResponse::Ack { verb, session } => {
+                data.set("verb", verb.as_str().into())
+                    .set("session", session.as_deref().map(Json::from).unwrap_or(Json::Null));
+            }
+            ApiResponse::Progressed { sessions } => {
+                data.set("sessions", (*sessions).into());
+            }
+            ApiResponse::Probs { probs } => {
+                data.set("probs", Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()));
+            }
+            ApiResponse::Sessions { sessions } => {
+                data.set("sessions", Json::Arr(sessions.iter().map(|s| s.to_json()).collect()));
+            }
+            ApiResponse::Session { session } => {
+                data.set("session", session.to_json());
+            }
+            ApiResponse::Board { dataset, rows } => {
+                data.set("dataset", dataset.as_str().into())
+                    .set("rows", Json::Arr(rows.iter().map(|r| r.to_json()).collect()));
+            }
+            ApiResponse::Cluster { cluster } => {
+                data.set("cluster", cluster.to_json());
+            }
+            ApiResponse::Error { error } => {
+                data.set("error", error.to_json());
+            }
+        }
+        envelope("kind", self.kind(), "data", data)
+    }
+
+    pub fn from_json(j: &Json) -> Result<ApiResponse, ApiError> {
+        check_version(j)?;
+        let kind = need_str(j, "kind")?;
+        let empty = Json::obj();
+        let data = j.get("data").unwrap_or(&empty);
+        match kind.as_str() {
+            "submitted" => Ok(ApiResponse::Submitted { session: need_str(data, "session")? }),
+            "batch_submitted" => Ok(ApiResponse::BatchSubmitted {
+                sessions: need_arr(data, "sessions")?
+                    .iter()
+                    .map(|v| v.as_str().map(str::to_string))
+                    .collect::<Option<Vec<String>>>()
+                    .ok_or_else(|| ApiError::invalid("'sessions' must be strings"))?,
+            }),
+            "ack" => Ok(ApiResponse::Ack {
+                verb: need_str(data, "verb")?,
+                session: opt_str(data, "session")?,
+            }),
+            "progressed" => Ok(ApiResponse::Progressed { sessions: need_u64(data, "sessions")? as usize }),
+            "probs" => Ok(ApiResponse::Probs {
+                probs: need_arr(data, "probs")?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| ApiError::invalid("'probs' must be numbers"))?,
+            }),
+            "sessions" => Ok(ApiResponse::Sessions {
+                sessions: need_arr(data, "sessions")?
+                    .iter()
+                    .map(SessionView::from_json)
+                    .collect::<Result<Vec<SessionView>, ApiError>>()?,
+            }),
+            "session" => Ok(ApiResponse::Session {
+                session: SessionView::from_json(need(data, "session")?)?,
+            }),
+            "board" => Ok(ApiResponse::Board {
+                dataset: need_str(data, "dataset")?,
+                rows: need_arr(data, "rows")?
+                    .iter()
+                    .map(BoardRow::from_json)
+                    .collect::<Result<Vec<BoardRow>, ApiError>>()?,
+            }),
+            "cluster" => Ok(ApiResponse::Cluster { cluster: ClusterView::from_json(need(data, "cluster")?)? }),
+            "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
+            other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Envelope + field helpers
+// ---------------------------------------------------------------------
+
+fn envelope(tag_key: &str, tag: &str, payload_key: &str, payload: Json) -> Json {
+    let mut env = Json::obj();
+    env.set("v", API_VERSION.into()).set(tag_key, tag.into()).set(payload_key, payload);
+    env
+}
+
+fn check_version(j: &Json) -> Result<(), ApiError> {
+    match j.get("v").map(as_safe_u64) {
+        Some(Some(v)) if v == API_VERSION => Ok(()),
+        Some(Some(v)) => {
+            Err(ApiError::invalid(format!("unsupported api version {} (this is v{})", v, API_VERSION)))
+        }
+        Some(None) => Err(ApiError::invalid("version field 'v' must be an integer")),
+        None => Err(ApiError::invalid("missing api version field 'v'")),
+    }
+}
+
+fn need<'a>(j: &'a Json, key: &str) -> Result<&'a Json, ApiError> {
+    j.get(key).ok_or_else(|| ApiError::invalid(format!("missing field '{}'", key)))
+}
+
+fn need_str(j: &Json, key: &str) -> Result<String, ApiError> {
+    need(j, key)?
+        .as_str()
+        .map(str::to_string)
+        .ok_or_else(|| ApiError::invalid(format!("field '{}' must be a string", key)))
+}
+
+/// Integers ride in JSON numbers (f64), which are exact only up to
+/// 2^53; anything beyond — or fractional — is rejected rather than
+/// silently rounded.
+const MAX_SAFE_INT: f64 = 9_007_199_254_740_992.0; // 2^53
+
+fn as_safe_u64(v: &Json) -> Option<u64> {
+    v.as_f64()
+        .filter(|f| *f >= 0.0 && *f <= MAX_SAFE_INT && f.fract() == 0.0)
+        .map(|f| f as u64)
+}
+
+fn need_u64(j: &Json, key: &str) -> Result<u64, ApiError> {
+    as_safe_u64(need(j, key)?).ok_or_else(|| {
+        ApiError::invalid(format!("field '{}' must be a non-negative integer (<= 2^53)", key))
+    })
+}
+
+fn need_f64(j: &Json, key: &str) -> Result<f64, ApiError> {
+    need(j, key)?.as_f64().ok_or_else(|| ApiError::invalid(format!("field '{}' must be a number", key)))
+}
+
+fn need_bool(j: &Json, key: &str) -> Result<bool, ApiError> {
+    need(j, key)?.as_bool().ok_or_else(|| ApiError::invalid(format!("field '{}' must be a boolean", key)))
+}
+
+fn need_arr<'a>(j: &'a Json, key: &str) -> Result<&'a [Json], ApiError> {
+    need(j, key)?.as_arr().ok_or_else(|| ApiError::invalid(format!("field '{}' must be an array", key)))
+}
+
+/// Optional field: absent or `null` is `None`; present with the wrong
+/// type is an error, not a silent fallback to the default.
+fn opt_field<'a>(j: &'a Json, key: &str) -> Option<&'a Json> {
+    match j.get(key) {
+        None | Some(Json::Null) => None,
+        Some(v) => Some(v),
+    }
+}
+
+fn opt_str(j: &Json, key: &str) -> Result<Option<String>, ApiError> {
+    match opt_field(j, key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_str()
+            .map(|s| Some(s.to_string()))
+            .ok_or_else(|| ApiError::invalid(format!("field '{}' must be a string", key))),
+    }
+}
+
+fn opt_f64(j: &Json, key: &str) -> Result<Option<f64>, ApiError> {
+    match opt_field(j, key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_f64()
+            .map(Some)
+            .ok_or_else(|| ApiError::invalid(format!("field '{}' must be a number", key))),
+    }
+}
+
+fn opt_u64(j: &Json, key: &str) -> Result<Option<u64>, ApiError> {
+    match opt_field(j, key) {
+        None => Ok(None),
+        Some(v) => as_safe_u64(v).map(Some).ok_or_else(|| {
+            ApiError::invalid(format!("field '{}' must be a non-negative integer (<= 2^53)", key))
+        }),
+    }
+}
+
+fn opt_bool(j: &Json, key: &str) -> Result<Option<bool>, ApiError> {
+    match opt_field(j, key) {
+        None => Ok(None),
+        Some(v) => v
+            .as_bool()
+            .map(Some)
+            .ok_or_else(|| ApiError::invalid(format!("field '{}' must be a boolean", key))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    #[test]
+    fn version_is_checked() {
+        let ok = ApiRequest::ListSessions.to_json().to_string();
+        assert!(ApiRequest::from_json(&parse(&ok).unwrap()).is_ok());
+        let bad = ok.replace("\"v\":1", "\"v\":2");
+        let err = ApiRequest::from_json(&parse(&bad).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::InvalidArgument);
+        let missing = parse(r#"{"verb":"list_sessions"}"#).unwrap();
+        assert!(ApiRequest::from_json(&missing).is_err());
+    }
+
+    #[test]
+    fn unknown_verb_is_invalid_argument() {
+        let err = ApiRequest::from_verb_args("frobnicate", &Json::obj()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::InvalidArgument);
+        assert!(err.message.contains("frobnicate"));
+    }
+
+    #[test]
+    fn run_args_default_like_run_opts() {
+        let p = ApiRequest::from_verb_args("run", &parse(r#"{"user":"kim","dataset":"mnist"}"#).unwrap())
+            .unwrap();
+        match p {
+            ApiRequest::Run(p) => {
+                let d = crate::api::RunOpts::default();
+                assert_eq!(p.gpus, d.gpus);
+                assert_eq!(p.total_steps, d.total_steps);
+                assert_eq!(p.lr, d.lr);
+                assert_eq!(p.run_opts().priority, d.priority);
+            }
+            other => panic!("expected Run, got {:?}", other),
+        }
+    }
+
+    #[test]
+    fn error_envelope_round_trips() {
+        let e = ApiError::failed("not active").with_session("kim/mnist/1");
+        let resp = ApiResponse::Error { error: e.clone() };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(format!("{}", e), "[failed_precondition] not active (session kim/mnist/1)");
+    }
+
+    #[test]
+    fn missing_fields_are_named() {
+        let err = ApiRequest::from_verb_args("pause", &Json::obj()).unwrap_err();
+        assert!(err.message.contains("session"), "{}", err);
+        let err = ApiRequest::from_verb_args("board", &Json::obj()).unwrap_err();
+        assert!(err.message.contains("dataset"), "{}", err);
+    }
+
+    #[test]
+    fn mistyped_optional_fields_rejected() {
+        // Wrong-typed optionals must 400, not silently fall back to defaults.
+        let args = parse(r#"{"user":"a","dataset":"mnist","total_steps":"500"}"#).unwrap();
+        let err = ApiRequest::from_verb_args("run", &args).unwrap_err();
+        assert!(err.message.contains("total_steps"), "{}", err);
+        let args = parse(r#"{"session":"s","lr":"0.05"}"#).unwrap();
+        let err = ApiRequest::from_verb_args("resume", &args).unwrap_err();
+        assert!(err.message.contains("lr"), "{}", err);
+        // Explicit null still means "absent".
+        let args = parse(r#"{"session":"s","lr":null}"#).unwrap();
+        assert_eq!(
+            ApiRequest::from_verb_args("resume", &args).unwrap(),
+            ApiRequest::Resume { session: "s".into(), lr: None }
+        );
+    }
+
+    #[test]
+    fn unsafe_integers_rejected() {
+        // Fractional and beyond-2^53 numbers must error, not round.
+        let err = ApiRequest::from_verb_args("drive", &parse(r#"{"chunk":5.7}"#).unwrap()).unwrap_err();
+        assert_eq!(err.code, ErrorCode::InvalidArgument);
+        let err = ApiRequest::from_verb_args("drive", &parse(r#"{"chunk":9007199254740994}"#).unwrap())
+            .unwrap_err();
+        assert_eq!(err.code, ErrorCode::InvalidArgument);
+        assert!(ApiRequest::from_verb_args("drive", &parse(r#"{"chunk":25}"#).unwrap()).is_ok());
+    }
+
+    #[test]
+    fn mutation_classification() {
+        assert!(ApiRequest::Pause { session: "s".into() }.is_mutation());
+        assert!(ApiRequest::Drive { chunk: 1 }.is_mutation());
+        assert!(!ApiRequest::ListSessions.is_mutation());
+        assert!(!ApiRequest::Infer { session: "s".into(), x: vec![], shape: vec![] }.is_mutation());
+        assert!(!ApiRequest::Board { dataset: "mnist".into(), limit: 5 }.is_mutation());
+    }
+}

@@ -15,4 +15,4 @@ pub mod search;
 
 pub use curve::CurveFit;
 pub use hyperband::Hyperband;
-pub use search::{GridSearch, RandomSearch, SearchOutcome, SuccessiveHalving, TrialRunner};
+pub use search::{log_grid, GridSearch, RandomSearch, SearchOutcome, SuccessiveHalving, TrialRunner};

@@ -33,6 +33,16 @@ pub struct SearchOutcome {
     pub trials: Vec<(f64, f64, u64)>,
 }
 
+/// Log-spaced learning-rate ladder over `[10^lo, 10^hi]` — the shared
+/// candidate generator for grid searches, `nsml automl`, and
+/// service-level trial batches (`ApiRequest::SubmitTrialBatch`).
+pub fn log_grid(candidates: usize, lo_log10: f64, hi_log10: f64) -> Vec<f64> {
+    let n = candidates.max(1);
+    (0..n)
+        .map(|i| 10f64.powf(lo_log10 + (hi_log10 - lo_log10) * i as f64 / (n.max(2) - 1) as f64))
+        .collect()
+}
+
 /// Exhaustive grid: every candidate gets the full budget. The baseline.
 pub struct GridSearch {
     pub lrs: Vec<f64>,
@@ -250,6 +260,18 @@ mod tests {
         assert!(out.steps_spent < 12 * 90, "spent {}", out.steps_spent);
         // Full budget went to at least one candidate.
         assert!(out.trials.iter().any(|t| t.2 == 90));
+    }
+
+    #[test]
+    fn log_grid_spans_range() {
+        let g = log_grid(6, -3.5, 0.5);
+        assert_eq!(g.len(), 6);
+        assert!((g[0] - 10f64.powf(-3.5)).abs() < 1e-12);
+        assert!((g[5] - 10f64.powf(0.5)).abs() < 1e-9);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+        let single = log_grid(1, -2.0, 0.0);
+        assert_eq!(single.len(), 1);
+        assert!((single[0] - 0.01).abs() < 1e-12);
     }
 
     #[test]

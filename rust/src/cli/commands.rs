@@ -1,11 +1,15 @@
-//! Implementations of the `nsml` subcommands over the platform facade.
+//! Implementations of the `nsml` subcommands. Session-control commands
+//! build [`ApiRequest`]s, dispatch them through the [`PlatformService`],
+//! and render the typed [`ApiResponse`] — the CLI is a wire-format
+//! client, exactly like the web UI's `POST /api/v1/*` routes.
 
 use super::with_globals;
-use crate::api::{NsmlPlatform, PlatformConfig, PlatformTrialRunner, RunOpts};
-use crate::automl::{GridSearch, RandomSearch, SuccessiveHalving};
+use crate::api::{
+    ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, PlatformTrialRunner,
+    RunParams,
+};
+use crate::automl::{log_grid, GridSearch, RandomSearch, SuccessiveHalving};
 use crate::data::digits::{ascii_digit, draw_digit, DIM};
-use crate::runtime::TensorData;
-use crate::scheduler::Priority;
 use crate::storage::codepack;
 use crate::util::argparse::{ArgSpec, Parsed};
 use crate::util::plot::ascii_chart;
@@ -22,6 +26,15 @@ fn platform_from(parsed: &Parsed) -> Result<NsmlPlatform, String> {
     // the logs without 45-s real stalls.
     cfg.latency = crate::container::LatencyModel::fast();
     NsmlPlatform::new(cfg).map_err(|e| format!("platform init: {:#}", e))
+}
+
+fn service_from(parsed: &Parsed) -> Result<PlatformService, String> {
+    Ok(PlatformService::new(platform_from(parsed)?))
+}
+
+/// Unwrap a dispatch reply: error envelopes become the command error.
+fn ok(resp: ApiResponse) -> Result<ApiResponse, String> {
+    resp.into_result().map_err(|e| e.to_string())
 }
 
 // ---------------------------------------------------------------------
@@ -44,27 +57,31 @@ pub fn cmd_run(args: &[String]) -> CmdResult {
     );
     let p = spec.parse(args)?;
     let dataset = p.get("dataset").ok_or("missing --dataset (-d)")?.to_string();
-    let platform = platform_from(&p)?;
+    let service = service_from(&p)?;
 
     // Pack the "user code" exactly like NSML-CLI does before submitting.
     let entry = p.pos(0).unwrap_or("main.py");
     let code: Vec<(&str, &[u8])> = vec![(entry, b"# packed by nsml-cli (reproduction)\n".as_slice())];
-    let code_id = codepack::store_codepack(&platform.objects, &code).map_err(|e| e.to_string())?;
+    let code_id = codepack::store_codepack(&service.platform().objects, &code).map_err(|e| e.to_string())?;
 
-    let opts = RunOpts {
-        gpus: p.get_usize("gpus")?,
-        total_steps: p.get_usize("steps")? as u64,
-        lr: p.get("lr").map(|s| s.parse().map_err(|e| format!("--lr: {}", e))).transpose()?,
-        seed: p.get_usize("seed")? as u64,
-        use_scan: p.flag("scan"),
-        priority: Priority::from_str(p.get("priority").unwrap_or("normal")),
-        checkpoint_every: (p.get_usize("steps")? as u64 / 4).max(1),
-        eval_every: (p.get_usize("steps")? as u64 / 8).max(1),
+    let steps = p.get_usize("steps")? as u64;
+    let mut params = RunParams::new(p.get("user").unwrap(), &dataset);
+    params.gpus = p.get_usize("gpus")?;
+    params.total_steps = steps;
+    params.lr = p.get("lr").map(|s| s.parse().map_err(|e| format!("--lr: {}", e))).transpose()?;
+    params.seed = p.get_usize("seed")? as u64;
+    params.use_scan = p.flag("scan");
+    params.priority = p.get("priority").unwrap_or("normal").to_string();
+    params.checkpoint_every = (steps / 4).max(1);
+    params.eval_every = (steps / 8).max(1);
+
+    let id = match ok(service.dispatch(ApiRequest::Run(params)))? {
+        ApiResponse::Submitted { session } => session,
+        other => return Err(format!("unexpected reply to run: {:?}", other)),
     };
-    let user = p.get("user").unwrap().to_string();
-    let id = platform.run(&user, &dataset, opts).map_err(|e| format!("{:#}", e))?;
     println!("session: {}  (code {})", id, code_id);
-    platform.run_to_completion(25, 100_000).map_err(|e| format!("{:#}", e))?;
+    ok(service.dispatch(ApiRequest::RunToCompletion { chunk: 25, max_rounds: 100_000 }))?;
+    let platform = service.platform();
     platform.save_state().map_err(|e| format!("{:#}", e))?;
 
     let rec = platform.sessions.get(&id).unwrap();
@@ -81,6 +98,56 @@ pub fn cmd_run(args: &[String]) -> CmdResult {
     }
     println!("{}", platform.leaderboard.render(&dataset));
     Ok(())
+}
+
+// ---------------------------------------------------------------------
+// nsml pause / resume / stop — session control through the service (§3.3)
+// ---------------------------------------------------------------------
+
+pub fn cmd_pause(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml pause", "checkpoint and pause a running session")
+            .pos("session", "session id", true),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let session = p.pos(0).unwrap().to_string();
+    ack(&service, service.dispatch(ApiRequest::Pause { session }))
+}
+
+pub fn cmd_resume(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml resume", "resume a paused session, optionally with a new lr")
+            .pos("session", "session id", true)
+            .opt("lr", None, "new learning rate (in-training tuning)", None),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let session = p.pos(0).unwrap().to_string();
+    let lr = p.get("lr").map(|s| s.parse().map_err(|e| format!("--lr: {}", e))).transpose()?;
+    ack(&service, service.dispatch(ApiRequest::Resume { session, lr }))
+}
+
+pub fn cmd_stop(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml stop", "stop a session outright").pos("session", "session id", true),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let session = p.pos(0).unwrap().to_string();
+    ack(&service, service.dispatch(ApiRequest::Stop { session }))
+}
+
+/// Render an `Ack` reply and persist the resulting state.
+fn ack(service: &PlatformService, resp: ApiResponse) -> CmdResult {
+    match ok(resp)? {
+        ApiResponse::Ack { verb, session } => {
+            println!("{}: ok{}", verb, session.map(|s| format!(" ({})", s)).unwrap_or_default());
+            service.platform().save_state().map_err(|e| format!("{:#}", e))?;
+            Ok(())
+        }
+        other => Err(format!("unexpected reply: {:?}", other)),
+    }
 }
 
 // ---------------------------------------------------------------------
@@ -112,9 +179,33 @@ pub fn cmd_dataset(args: &[String]) -> CmdResult {
                     .pos("dataset", "dataset name", true),
             )
             .parse(&rest)?;
-            let platform = platform_from(&p)?;
-            println!("{}", platform.leaderboard.render(p.pos(0).unwrap()));
-            Ok(())
+            let service = service_from(&p)?;
+            let dataset = p.pos(0).unwrap().to_string();
+            let req = ApiRequest::Board { dataset, limit: 100 };
+            match ok(service.dispatch(req))? {
+                ApiResponse::Board { dataset, rows } => {
+                    let mut t = Table::new(&["RANK", "SESSION", "USER", "MODEL", "METRIC", "VALUE", "STEP"])
+                        .right(&[0, 5, 6]);
+                    for r in &rows {
+                        t.row(&[
+                            format!("{}", r.rank),
+                            r.session.clone(),
+                            r.user.clone(),
+                            r.model.clone(),
+                            r.metric.clone(),
+                            fnum(r.value),
+                            format!("{}", r.step),
+                        ]);
+                    }
+                    if t.is_empty() {
+                        println!("leaderboard '{}' has no entries yet", dataset);
+                    } else {
+                        println!("{}", t.render());
+                    }
+                    Ok(())
+                }
+                other => Err(format!("unexpected reply: {:?}", other)),
+            }
         }
         other => Err(format!("unknown dataset subcommand '{}' (ls | board)", other)),
     }
@@ -126,16 +217,20 @@ pub fn cmd_dataset(args: &[String]) -> CmdResult {
 
 pub fn cmd_ps(args: &[String]) -> CmdResult {
     let p = with_globals(ArgSpec::new("nsml ps", "list sessions")).parse(args)?;
-    let platform = platform_from(&p)?;
+    let service = service_from(&p)?;
+    let views = match ok(service.dispatch(ApiRequest::ListSessions))? {
+        ApiResponse::Sessions { sessions } => sessions,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
     let mut t = Table::new(&["SESSION", "MODEL", "STATE", "STEPS", "BEST", "RECOVERIES"]).right(&[3, 4, 5]);
-    for r in platform.sessions.list() {
+    for v in &views {
         t.row(&[
-            r.spec.id.clone(),
-            r.spec.model.clone(),
-            r.state.as_str().to_string(),
-            format!("{}/{}", r.steps_done, r.spec.total_steps),
-            r.best_metric.map(fnum).unwrap_or_else(|| "-".into()),
-            format!("{}", r.recoveries),
+            v.id.clone(),
+            v.model.clone(),
+            v.state.as_str().to_string(),
+            format!("{}/{}", v.steps_done, v.total_steps),
+            v.best_metric.map(fnum).unwrap_or_else(|| "-".into()),
+            format!("{}", v.recoveries),
         ]);
     }
     if t.is_empty() {
@@ -199,14 +294,14 @@ pub fn cmd_infer(args: &[String]) -> CmdResult {
             .flag("add-lines", None, "then add the 2's extra strokes (Fig. 4)"),
     )
     .parse(args)?;
-    let platform = platform_from(&p)?;
+    let service = service_from(&p)?;
     let id = p.pos(0).unwrap();
     let digit = p.get_usize("digit")?.min(9);
 
     let mut img = vec![0.0f32; DIM];
     draw_digit(digit, 0, 0, 1.0, &mut img);
     println!("input:\n{}", ascii_digit(&img));
-    let probs = classify(&platform, id, &img)?;
+    let probs = classify(&service, id, &img)?;
     print_probs(&probs);
 
     if p.flag("add-lines") {
@@ -217,17 +312,22 @@ pub fn cmd_infer(args: &[String]) -> CmdResult {
             *a = a.max(*b);
         }
         println!("after adding lines:\n{}", ascii_digit(&img));
-        let probs = classify(&platform, id, &img)?;
+        let probs = classify(&service, id, &img)?;
         print_probs(&probs);
     }
     Ok(())
 }
 
-fn classify(platform: &NsmlPlatform, session: &str, img: &[f32]) -> Result<Vec<f32>, String> {
-    let batch = img.repeat(64); // model batch is fixed at 64
-    let x = TensorData::f32(batch, &[64, DIM as i64]);
-    let probs = platform.infer(session, &x).map_err(|e| format!("{:#}", e))?;
-    Ok(probs[..10].to_vec())
+fn classify(service: &PlatformService, session: &str, img: &[f32]) -> Result<Vec<f32>, String> {
+    let req = ApiRequest::Infer {
+        session: session.to_string(),
+        x: img.repeat(64), // model batch is fixed at 64
+        shape: vec![64, DIM as i64],
+    };
+    match ok(service.dispatch(req))? {
+        ApiResponse::Probs { probs } => Ok(probs[..10].to_vec()),
+        other => Err(format!("unexpected reply: {:?}", other)),
+    }
 }
 
 fn print_probs(probs: &[f32]) {
@@ -273,9 +373,7 @@ pub fn cmd_automl(args: &[String]) -> CmdResult {
     )
     .map_err(|e| format!("{:#}", e))?;
 
-    let lrs: Vec<f64> = (0..candidates)
-        .map(|i| 10f64.powf(-3.5 + 4.0 * i as f64 / (candidates.max(2) - 1) as f64))
-        .collect();
+    let lrs = log_grid(candidates, -3.5, 0.5);
     let strategy = p.get("strategy").unwrap().to_string();
     let out = match strategy.as_str() {
         "grid" => GridSearch { lrs, steps_per_trial: steps }.run(&mut runner),
@@ -309,20 +407,24 @@ pub fn cmd_automl(args: &[String]) -> CmdResult {
 
 pub fn cmd_cluster(args: &[String]) -> CmdResult {
     let p = with_globals(ArgSpec::new("nsml cluster", "cluster & scheduler status")).parse(args)?;
-    let platform = platform_from(&p)?;
-    let (total, free) = platform.cluster.gpu_totals();
+    let service = service_from(&p)?;
+    let view = match ok(service.dispatch(ApiRequest::ClusterStatus))? {
+        ApiResponse::Cluster { cluster } => cluster,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
     println!(
-        "cluster: {} nodes, {} GPUs ({} free) | scheduler: {} (fast_path={}) | leader: {:?} epoch {}",
-        platform.cluster.node_count(),
-        total,
-        free,
-        platform.master.policy_name(),
-        platform.master.fast_path,
-        platform.election.leader().map(|(l, _)| l.to_string()),
-        platform.election.epoch(),
+        "cluster: {} nodes, {} GPUs ({} free) | scheduler: {} (fast_path={}) | leader: {:?} epoch {} | queue {}",
+        view.nodes.len(),
+        view.total_gpus,
+        view.free_gpus,
+        view.policy,
+        view.fast_path,
+        view.leader,
+        view.epoch,
+        view.queue_len,
     );
     let mut t = Table::new(&["NODE", "ALIVE", "GPUS FREE", "JOBS"]).right(&[2]);
-    for n in platform.cluster.snapshot() {
+    for n in &view.nodes {
         t.row(&[
             n.hostname.clone(),
             format!("{}", n.alive),
@@ -360,18 +462,23 @@ pub fn cmd_web(args: &[String]) -> CmdResult {
             .flag("once", None, "bind, print the URL, and exit (for tests)"),
     )
     .parse(args)?;
-    let platform = platform_from(&p)?;
+    let service = service_from(&p)?;
+    let (api, rx) = crate::api::service_channel();
+    let platform = service.platform();
     let state = crate::web::WebState {
         sessions: platform.sessions.clone(),
         leaderboard: platform.leaderboard.clone(),
         cluster: Some(platform.cluster.clone()),
         events: platform.events.clone(),
+        api: Some(api),
     };
     let port: u16 = p.get_usize("port")? as u16;
-    let (bound, handle) = crate::web::serve(state, port).map_err(|e| e.to_string())?;
-    println!("nsml web ui: http://127.0.0.1:{}/", bound);
+    let (bound, _handle) = crate::web::serve(state, port).map_err(|e| e.to_string())?;
+    println!("nsml web ui: http://127.0.0.1:{}/  (mutations: POST /api/v1/<verb>)", bound);
     if !p.flag("once") {
-        let _ = handle.join();
+        // This thread owns the platform; pump web dispatches through the
+        // service until the process exits.
+        service.serve(&rx);
     }
     Ok(())
 }
@@ -435,6 +542,40 @@ mod tests {
         );
         assert_eq!(crate::cli::main(&s(&["ps", "--state", &state])), 0);
         assert_eq!(crate::cli::main(&s(&["dataset", "board", "mnist", "--state", &state])), 0);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn control_verbs_dispatch_through_service() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("ctl");
+        assert_eq!(
+            crate::cli::main(&s(&[
+                "run", "main.py", "-d", "mnist", "--steps", "20", "--quiet", "--state", &state
+            ])),
+            0
+        );
+        // Recover the session id from the persisted state.
+        let text = std::fs::read_to_string(PathBuf::from(&state).join("state.json")).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        let id = doc
+            .get("sessions")
+            .and_then(|s| s.as_arr())
+            .and_then(|a| a.first())
+            .and_then(|r| r.at(&["spec", "id"]))
+            .and_then(|j| j.as_str())
+            .expect("session id in state")
+            .to_string();
+        // Stop acks even on a finished session (idempotent terminal path).
+        assert_eq!(crate::cli::main(&s(&["stop", &id, "--state", &state])), 0);
+        // Pause on a non-active session is a failed precondition.
+        assert_eq!(crate::cli::main(&s(&["pause", &id, "--state", &state])), 1);
+        // Unknown sessions map to not_found.
+        assert_eq!(crate::cli::main(&s(&["stop", "missing", "--state", &state])), 1);
+        assert_eq!(crate::cli::main(&s(&["resume", "missing", "--state", &state])), 1);
         let _ = std::fs::remove_dir_all(&state);
     }
 

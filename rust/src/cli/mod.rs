@@ -3,6 +3,9 @@
 //! `nsml [OPTIONS] COMMAND [ARGS]...` with the paper's commands:
 //!
 //! * `nsml run -d DATASET`          — pack code, submit, train, report
+//! * `nsml pause SESSION`           — checkpoint + pause a running session
+//! * `nsml resume SESSION [--lr X]` — resume, optionally with a new lr (§3.3)
+//! * `nsml stop SESSION`            — stop a session outright
 //! * `nsml dataset ls`              — list datasets
 //! * `nsml dataset board DATASET`   — the kaggle-like leaderboard
 //! * `nsml ps` / `nsml logs` / `nsml plot SESSION`
@@ -10,8 +13,12 @@
 //! * `nsml automl -d DATASET`       — hyperparameter search
 //! * `nsml cluster` / `nsml models` / `nsml web`
 //!
-//! CLI invocations compose through the state directory (default `.nsml`),
-//! which plays the role of NSML's always-on cloud.
+//! Session-control subcommands build [`crate::api::ApiRequest`]s and go
+//! through [`crate::api::PlatformService::dispatch`] — the same wire
+//! surface the web UI's `POST /api/v1/*` routes use — then render the
+//! typed [`crate::api::ApiResponse`]. CLI invocations compose through
+//! the state directory (default `.nsml`), which plays the role of NSML's
+//! always-on cloud.
 
 mod commands;
 
@@ -23,6 +30,9 @@ USAGE: nsml COMMAND [ARGS]...
 
 COMMANDS:
   run        submit and train a session:  nsml run main.py -d mnist
+  pause      pause a running session:     nsml pause SESSION
+  resume     resume a paused session:     nsml resume SESSION --lr 0.05
+  stop       stop a session outright:     nsml stop SESSION
   dataset    manage datasets:             nsml dataset ls | board DATASET
   ps         list sessions
   logs       show a session's event log:  nsml logs SESSION
@@ -43,6 +53,9 @@ pub fn main(args: &[String]) -> i32 {
     let (cmd, rest) = split_subcommand(args);
     let result = match cmd.as_str() {
         "run" => commands::cmd_run(&rest),
+        "pause" => commands::cmd_pause(&rest),
+        "resume" => commands::cmd_resume(&rest),
+        "stop" => commands::cmd_stop(&rest),
         "dataset" => commands::cmd_dataset(&rest),
         "ps" => commands::cmd_ps(&rest),
         "logs" => commands::cmd_logs(&rest),

@@ -43,6 +43,20 @@ impl SessionState {
         }
     }
 
+    /// Inverse of [`SessionState::as_str`] (wire-format deserialization).
+    pub fn from_str(s: &str) -> Option<SessionState> {
+        match s {
+            "queued" => Some(SessionState::Queued),
+            "preparing" => Some(SessionState::Preparing),
+            "running" => Some(SessionState::Running),
+            "paused" => Some(SessionState::Paused),
+            "done" => Some(SessionState::Done),
+            "failed" => Some(SessionState::Failed),
+            "stopped" => Some(SessionState::Stopped),
+            _ => None,
+        }
+    }
+
     pub fn is_terminal(&self) -> bool {
         matches!(self, SessionState::Done | SessionState::Failed | SessionState::Stopped)
     }
@@ -197,5 +211,21 @@ mod tests {
         assert!(!SessionState::Running.is_terminal());
         assert!(!SessionState::Paused.is_terminal());
         assert_eq!(SessionState::Paused.as_str(), "paused");
+    }
+
+    #[test]
+    fn state_strings_round_trip() {
+        for s in [
+            SessionState::Queued,
+            SessionState::Preparing,
+            SessionState::Running,
+            SessionState::Paused,
+            SessionState::Done,
+            SessionState::Failed,
+            SessionState::Stopped,
+        ] {
+            assert_eq!(SessionState::from_str(s.as_str()), Some(s));
+        }
+        assert_eq!(SessionState::from_str("nope"), None);
     }
 }

@@ -13,10 +13,20 @@
 //! * `GET /api/session/<id…>`    — JSON (with metrics)
 //! * `GET /api/board/<dataset>`  — JSON
 //! * `GET /api/cluster`          — JSON
+//! * `POST /api/v1/<verb>`       — dispatch any `ApiRequest` verb (`run`,
+//!   `pause`, `resume`, `stop`, `infer`, `drive`, `run_to_completion`,
+//!   `kill_node`, `list_sessions`, `get_session`, `board`,
+//!   `cluster_status`, `submit_trial_batch`) into the attached
+//!   [`PlatformService`](crate::api::PlatformService); the JSON body is
+//!   the verb's `args` object and the reply is an `ApiResponse`
+//!   envelope. Error codes map to HTTP: `not_found`→404,
+//!   `invalid_argument`→400, `failed_precondition`→409, `internal`→500.
 //!
-//! Routing logic is a pure function ([`handle`]) so tests exercise it
-//! without sockets.
+//! Path segments are percent-decoded before routing; unsupported methods
+//! get `405` with an `Allow` header. Routing logic is a pure function
+//! ([`handle`]) so tests exercise it without sockets.
 
+use crate::api::{ApiError, ApiRequest, ApiResponse, ErrorCode, ServiceHandle};
 use crate::cluster::Cluster;
 use crate::events::EventLog;
 use crate::leaderboard::Leaderboard;
@@ -26,13 +36,17 @@ use crate::util::plot::{svg_chart, xml_escape, Series};
 use std::io::{Read, Write};
 use std::net::TcpListener;
 
-/// Shareable snapshot handles the server reads from (all thread-safe).
+/// Shareable snapshot handles the server reads from (all thread-safe),
+/// plus the optional dispatcher for `POST /api/v1/*` mutations.
 #[derive(Clone)]
 pub struct WebState {
     pub sessions: SessionStore,
     pub leaderboard: Leaderboard,
     pub cluster: Option<Cluster>,
     pub events: EventLog,
+    /// When attached, POST verbs dispatch into the platform service on
+    /// its owning thread; when `None`, mutations answer 503.
+    pub api: Option<ServiceHandle>,
 }
 
 /// An HTTP response.
@@ -40,32 +54,133 @@ pub struct Response {
     pub status: u16,
     pub content_type: &'static str,
     pub body: String,
+    /// `Allow` header value for 405 responses.
+    pub allow: Option<&'static str>,
 }
 
 impl Response {
     fn html(body: String) -> Response {
-        Response { status: 200, content_type: "text/html; charset=utf-8", body }
+        Response { status: 200, content_type: "text/html; charset=utf-8", body, allow: None }
     }
 
     fn json(j: Json) -> Response {
-        Response { status: 200, content_type: "application/json", body: j.to_string() }
+        Response { status: 200, content_type: "application/json", body: j.to_string(), allow: None }
     }
 
     fn svg(body: String) -> Response {
-        Response { status: 200, content_type: "image/svg+xml", body }
+        Response { status: 200, content_type: "image/svg+xml", body, allow: None }
     }
 
     fn not_found(msg: &str) -> Response {
-        Response { status: 404, content_type: "text/plain", body: format!("not found: {}\n", msg) }
+        Response { status: 404, content_type: "text/plain", body: format!("not found: {}\n", msg), allow: None }
+    }
+
+    fn method_not_allowed(allow: &'static str) -> Response {
+        Response {
+            status: 405,
+            content_type: "text/plain",
+            body: format!("method not allowed (allow: {})\n", allow),
+            allow: Some(allow),
+        }
     }
 }
 
-/// Route a request (pure; no I/O).
-pub fn handle(state: &WebState, method: &str, path: &str) -> Response {
-    if method != "GET" {
-        return Response { status: 405, content_type: "text/plain", body: "only GET\n".into() };
+fn status_text(status: u16) -> &'static str {
+    match status {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        405 => "Method Not Allowed",
+        409 => "Conflict",
+        411 => "Length Required",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        _ => "Unknown",
     }
+}
+
+/// Decode `%XX` escapes in a path (invalid escapes pass through as-is).
+fn percent_decode(s: &str) -> String {
+    let bytes = s.as_bytes();
+    let mut out = Vec::with_capacity(bytes.len());
+    let mut i = 0;
+    while i < bytes.len() {
+        if bytes[i] == b'%' && i + 2 < bytes.len() {
+            let hex = |b: u8| (b as char).to_digit(16);
+            if let (Some(hi), Some(lo)) = (hex(bytes[i + 1]), hex(bytes[i + 2])) {
+                out.push((hi * 16 + lo) as u8);
+                i += 3;
+                continue;
+            }
+        }
+        out.push(bytes[i]);
+        i += 1;
+    }
+    String::from_utf8_lossy(&out).into_owned()
+}
+
+/// Route a request (pure; no I/O). `body` is the request body (only
+/// meaningful for POST).
+pub fn handle(state: &WebState, method: &str, path: &str, body: &str) -> Response {
     let path = path.split('?').next().unwrap_or(path);
+    let path = percent_decode(path);
+    match method {
+        "GET" => handle_get(state, &path),
+        "POST" => match path.strip_prefix("/api/v1/") {
+            Some(verb) => handle_api_post(state, verb, body),
+            None => Response::method_not_allowed("GET"),
+        },
+        _ => {
+            if path.starts_with("/api/v1/") {
+                Response::method_not_allowed("POST")
+            } else {
+                Response::method_not_allowed("GET, POST")
+            }
+        }
+    }
+}
+
+/// The v1 dispatch surface: `POST /api/v1/<verb>` with the args object
+/// as body (empty body = `{}`); the web UI thus *wraps* the CLI verbs.
+fn handle_api_post(state: &WebState, verb: &str, body: &str) -> Response {
+    let Some(api) = &state.api else {
+        return Response {
+            status: 503,
+            content_type: "text/plain",
+            body: "platform service not attached (read-only web ui)\n".into(),
+            allow: None,
+        };
+    };
+    let resp = if body.trim().is_empty() {
+        match ApiRequest::from_verb_args(verb, &Json::obj()) {
+            Ok(req) => api.call(req),
+            Err(error) => ApiResponse::Error { error },
+        }
+    } else {
+        match crate::util::json::parse(body) {
+            Err(e) => ApiResponse::Error { error: ApiError::invalid(format!("request body: {}", e)) },
+            Ok(args) => match ApiRequest::from_verb_args(verb, &args) {
+                Ok(req) => api.call(req),
+                Err(error) => ApiResponse::Error { error },
+            },
+        }
+    };
+    let status = match &resp {
+        ApiResponse::Error { error } => match error.code {
+            ErrorCode::NotFound => 404,
+            ErrorCode::InvalidArgument => 400,
+            ErrorCode::FailedPrecondition => 409,
+            ErrorCode::Internal => 500,
+        },
+        _ => 200,
+    };
+    Response { status, content_type: "application/json", body: resp.to_json().to_string(), allow: None }
+}
+
+fn handle_get(state: &WebState, path: &str) -> Response {
+    if path.starts_with("/api/v1/") {
+        return Response::method_not_allowed("POST");
+    }
     match path {
         "/" => Response::html(dashboard_html(state)),
         "/api/sessions" => Response::json(sessions_json(state)),
@@ -296,30 +411,78 @@ pub fn serve(state: WebState, port: u16) -> std::io::Result<(u16, std::thread::J
             std::thread::spawn(move || {
                 let mut buf = [0u8; 8192];
                 let mut req = Vec::new();
-                // Read until end of headers (GET only; no bodies).
+                // Read headers, then keep reading until Content-Length
+                // bytes of body have arrived (POST bodies). The header
+                // terminator is searched incrementally and headers are
+                // parsed once, so receipt stays O(n).
+                let mut header_end: Option<usize> = None;
+                let mut body_len = 0usize;
+                let mut scanned = 0usize;
                 loop {
-                    match stream.read(&mut buf) {
-                        Ok(0) | Err(_) => break,
-                        Ok(n) => {
-                            req.extend_from_slice(&buf[..n]);
-                            if req.windows(4).any(|w| w == b"\r\n\r\n") || req.len() > 64 * 1024 {
-                                break;
-                            }
+                    if header_end.is_none() {
+                        // Resume the terminator scan where the last read
+                        // left off (back up 3 bytes for a split match).
+                        let start = scanned.saturating_sub(3);
+                        if let Some(pos) = req[start..].windows(4).position(|w| w == b"\r\n\r\n") {
+                            let he = start + pos + 4;
+                            header_end = Some(he);
+                            body_len = String::from_utf8_lossy(&req[..he])
+                                .lines()
+                                .find_map(|l| {
+                                    let (k, v) = l.split_once(':')?;
+                                    k.trim()
+                                        .eq_ignore_ascii_case("content-length")
+                                        .then(|| v.trim().parse::<usize>().ok())?
+                                })
+                                .unwrap_or(0);
+                        }
+                        scanned = req.len();
+                    }
+                    if let Some(he) = header_end {
+                        if req.len() >= he + body_len {
+                            break;
                         }
                     }
+                    if req.len() > 4 * 1024 * 1024 {
+                        break;
+                    }
+                    match stream.read(&mut buf) {
+                        Ok(0) | Err(_) => break,
+                        Ok(n) => req.extend_from_slice(&buf[..n]),
+                    }
                 }
-                let text = String::from_utf8_lossy(&req);
-                let mut parts = text.lines().next().unwrap_or("").split_whitespace();
+                let header_end = header_end.unwrap_or(req.len());
+                let head = String::from_utf8_lossy(&req[..header_end]).to_string();
+                let body = String::from_utf8_lossy(&req[header_end..]).to_string();
+                let mut parts = head.lines().next().unwrap_or("").split_whitespace();
                 let method = parts.next().unwrap_or("GET").to_string();
                 let path = parts.next().unwrap_or("/").to_string();
-                let resp = handle(&state, &method, &path);
+                // Only Content-Length framing is supported; a POST
+                // without it (e.g. chunked) would be read
+                // nondeterministically, so reject it outright.
+                let has_length = head.lines().any(|l| {
+                    l.split_once(':').map_or(false, |(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
+                });
+                let resp = if method == "POST" && !has_length {
+                    Response {
+                        status: 411,
+                        content_type: "text/plain",
+                        body: "length required: POST needs Content-Length\n".into(),
+                        allow: None,
+                    }
+                } else {
+                    handle(&state, &method, &path, &body)
+                };
+                let allow_header =
+                    resp.allow.map(|a| format!("Allow: {}\r\n", a)).unwrap_or_default();
                 let _ = write!(
                     stream,
-                    "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n{}",
+                    "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: close\r\n\r\n{}",
                     resp.status,
-                    if resp.status == 200 { "OK" } else { "Not Found" },
+                    status_text(resp.status),
                     resp.content_type,
                     resp.body.len(),
+                    allow_header,
                     resp.body
                 );
             });
@@ -359,13 +522,13 @@ mod tests {
             },
         );
         let cluster = Cluster::homogeneous(clock, events.clone(), 2, 4, 24.0);
-        WebState { sessions, leaderboard, cluster: Some(cluster), events }
+        WebState { sessions, leaderboard, cluster: Some(cluster), events, api: None }
     }
 
     #[test]
     fn dashboard_lists_sessions_and_boards() {
         let s = state();
-        let r = handle(&s, "GET", "/");
+        let r = handle(&s, "GET", "/", "");
         assert_eq!(r.status, 200);
         assert!(r.body.contains("kim/mnist/1"));
         assert!(r.body.contains("/board/mnist"));
@@ -375,7 +538,7 @@ mod tests {
     #[test]
     fn api_sessions_json_parses() {
         let s = state();
-        let r = handle(&s, "GET", "/api/sessions");
+        let r = handle(&s, "GET", "/api/sessions", "");
         let j = crate::util::json::parse(&r.body).unwrap();
         let arr = j.as_arr().unwrap();
         assert_eq!(arr.len(), 1);
@@ -385,16 +548,30 @@ mod tests {
     #[test]
     fn api_session_detail_has_metrics() {
         let s = state();
-        let r = handle(&s, "GET", "/api/session/kim/mnist/1");
+        let r = handle(&s, "GET", "/api/session/kim/mnist/1", "");
         let j = crate::util::json::parse(&r.body).unwrap();
         let pts = j.at(&["metrics", "train_loss"]).unwrap().as_arr().unwrap();
         assert_eq!(pts.len(), 2);
     }
 
     #[test]
+    fn percent_encoded_paths_decode() {
+        let s = state();
+        // kim/mnist/1 with the slashes percent-encoded.
+        let r = handle(&s, "GET", "/api/session/kim%2Fmnist%2F1", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("id").unwrap().as_str(), Some("kim/mnist/1"));
+        // Invalid escapes pass through untouched.
+        assert_eq!(percent_decode("a%2Fb"), "a/b");
+        assert_eq!(percent_decode("a%zzb"), "a%zzb");
+        assert_eq!(percent_decode("100%"), "100%");
+    }
+
+    #[test]
     fn plot_svg_renders() {
         let s = state();
-        let r = handle(&s, "GET", "/plot/kim/mnist/1.svg");
+        let r = handle(&s, "GET", "/plot/kim/mnist/1.svg", "");
         assert_eq!(r.status, 200);
         assert!(r.body.starts_with("<svg"));
         assert!(r.body.contains("train_loss"));
@@ -403,28 +580,83 @@ mod tests {
     #[test]
     fn board_json_and_html() {
         let s = state();
-        let j = handle(&s, "GET", "/api/board/mnist");
+        let j = handle(&s, "GET", "/api/board/mnist", "");
         assert_eq!(j.status, 200);
         assert!(j.body.contains("\"rank\":1"));
-        let h = handle(&s, "GET", "/board/mnist");
+        let h = handle(&s, "GET", "/board/mnist", "");
         assert!(h.body.contains("kim/mnist/1"));
-        assert_eq!(handle(&s, "GET", "/api/board/nope").status, 404);
+        assert_eq!(handle(&s, "GET", "/api/board/nope", "").status, 404);
     }
 
     #[test]
     fn cluster_json() {
         let s = state();
-        let r = handle(&s, "GET", "/api/cluster");
+        let r = handle(&s, "GET", "/api/cluster", "");
         let j = crate::util::json::parse(&r.body).unwrap();
         assert_eq!(j.get("total_gpus").unwrap().as_i64(), Some(8));
     }
 
     #[test]
-    fn unknown_routes_404_and_post_405() {
+    fn unknown_routes_404_and_method_routing() {
         let s = state();
-        assert_eq!(handle(&s, "GET", "/nope").status, 404);
-        assert_eq!(handle(&s, "GET", "/api/session/missing").status, 404);
-        assert_eq!(handle(&s, "POST", "/").status, 405);
+        assert_eq!(handle(&s, "GET", "/nope", "").status, 404);
+        assert_eq!(handle(&s, "GET", "/api/session/missing", "").status, 404);
+        // POST outside /api/v1/ -> 405 with Allow: GET.
+        let r = handle(&s, "POST", "/", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
+        // GET on a v1 verb -> 405 with Allow: POST.
+        let r = handle(&s, "GET", "/api/v1/run", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("POST"));
+        // Exotic methods advertise both.
+        let r = handle(&s, "DELETE", "/", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET, POST"));
+    }
+
+    #[test]
+    fn post_without_service_is_503() {
+        let s = state();
+        let r = handle(&s, "POST", "/api/v1/list_sessions", "");
+        assert_eq!(r.status, 503);
+    }
+
+    #[test]
+    fn post_with_service_dispatches_and_maps_errors() {
+        // A stub service thread that answers canned responses without a
+        // real platform: not_found for get_session, sessions otherwise.
+        let (api, rx) = crate::api::service_channel();
+        std::thread::spawn(move || {
+            while let Ok(call) = rx.recv() {
+                let resp = match call.request() {
+                    ApiRequest::GetSession { session } => ApiResponse::Error {
+                        error: ApiError::not_found(format!("unknown session '{}'", session)),
+                    },
+                    _ => ApiResponse::Sessions { sessions: vec![] },
+                };
+                call.respond(resp);
+            }
+        });
+        let mut s = state();
+        s.api = Some(api);
+
+        let ok = handle(&s, "POST", "/api/v1/list_sessions", "");
+        assert_eq!(ok.status, 200);
+        let j = crate::util::json::parse(&ok.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("sessions"));
+
+        let nf = handle(&s, "POST", "/api/v1/get_session", r#"{"session":"missing"}"#);
+        assert_eq!(nf.status, 404);
+        assert!(nf.body.contains("not_found"));
+
+        // Bad args never reach the service: 400 straight from the wire layer.
+        let bad = handle(&s, "POST", "/api/v1/pause", "{}");
+        assert_eq!(bad.status, 400);
+        let garbled = handle(&s, "POST", "/api/v1/pause", "{not json");
+        assert_eq!(garbled.status, 400);
+        let unknown = handle(&s, "POST", "/api/v1/frobnicate", "");
+        assert_eq!(unknown.status, 400);
     }
 
     #[test]

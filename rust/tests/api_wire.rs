@@ -1,0 +1,310 @@
+//! Wire-format guarantees: every `ApiRequest`/`ApiResponse` variant
+//! round-trips through JSON, and a full session lifecycle
+//! (run → pause → resume(new lr) → stop) can be driven purely through
+//! `PlatformService::dispatch`.
+
+use nsml::api::{
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, NodeStatusView, NsmlPlatform,
+    PlatformConfig, PlatformService, RunParams, SessionView, TrialSpec, ALL_KINDS, ALL_VERBS,
+};
+use nsml::session::SessionState;
+use nsml::util::json::parse;
+use std::collections::BTreeSet;
+use std::path::PathBuf;
+
+fn sample_requests() -> Vec<ApiRequest> {
+    let mut run = RunParams::new("kim", "mnist");
+    run.gpus = 2;
+    run.total_steps = 120;
+    run.lr = Some(0.05);
+    run.seed = 3;
+    run.use_scan = true;
+    run.priority = "high".into();
+    run.checkpoint_every = 30;
+    run.eval_every = 15;
+    vec![
+        ApiRequest::Run(run),
+        ApiRequest::Pause { session: "kim/mnist/1".into() },
+        ApiRequest::Resume { session: "kim/mnist/1".into(), lr: Some(0.01) },
+        ApiRequest::Resume { session: "kim/mnist/1".into(), lr: None },
+        ApiRequest::Stop { session: "kim/mnist/1".into() },
+        ApiRequest::Infer { session: "kim/mnist/1".into(), x: vec![0.0, 0.5, 1.0], shape: vec![1, 3] },
+        ApiRequest::Drive { chunk: 25 },
+        ApiRequest::RunToCompletion { chunk: 20, max_rounds: 10_000 },
+        ApiRequest::KillNode { node: 2 },
+        ApiRequest::ListSessions,
+        ApiRequest::GetSession { session: "kim/mnist/1".into() },
+        ApiRequest::Board { dataset: "mnist".into(), limit: 10 },
+        ApiRequest::ClusterStatus,
+        ApiRequest::SubmitTrialBatch {
+            user: "automl".into(),
+            dataset: "mnist".into(),
+            trials: vec![
+                TrialSpec { lr: 0.1, seed: 0, total_steps: 40, gpus: 1 },
+                TrialSpec { lr: 0.001, seed: 1, total_steps: 40, gpus: 2 },
+            ],
+        },
+    ]
+}
+
+fn sample_view() -> SessionView {
+    SessionView {
+        id: "kim/mnist/1".into(),
+        user: "kim".into(),
+        dataset: "mnist".into(),
+        model: "mnist_mlp".into(),
+        state: SessionState::Paused,
+        node: Some(1),
+        steps_done: 40,
+        total_steps: 120,
+        lr: 0.05,
+        best_metric: Some(0.91),
+        recoveries: 1,
+    }
+}
+
+fn sample_responses() -> Vec<ApiResponse> {
+    vec![
+        ApiResponse::Submitted { session: "kim/mnist/1".into() },
+        ApiResponse::BatchSubmitted { sessions: vec!["a/mnist/1".into(), "a/mnist/2".into()] },
+        ApiResponse::Ack { verb: "pause".into(), session: Some("kim/mnist/1".into()) },
+        ApiResponse::Ack { verb: "run_to_completion".into(), session: None },
+        ApiResponse::Progressed { sessions: 3 },
+        ApiResponse::Probs { probs: vec![0.125, 0.5, 0.375] },
+        ApiResponse::Sessions { sessions: vec![sample_view()] },
+        ApiResponse::Session {
+            session: SessionView { state: SessionState::Done, node: None, best_metric: None, ..sample_view() }
+        },
+        ApiResponse::Board {
+            dataset: "mnist".into(),
+            rows: vec![BoardRow {
+                rank: 1,
+                session: "kim/mnist/1".into(),
+                user: "kim".into(),
+                model: "mnist_mlp".into(),
+                metric: "accuracy".into(),
+                value: 0.91,
+                step: 120,
+            }],
+        },
+        ApiResponse::Cluster {
+            cluster: ClusterView {
+                nodes: vec![NodeStatusView {
+                    hostname: "node-0".into(),
+                    alive: true,
+                    total_gpus: 4,
+                    free_gpus: 2,
+                    jobs: vec!["kim/mnist/1".into()],
+                }],
+                total_gpus: 4,
+                free_gpus: 2,
+                utilization: 0.5,
+                queue_len: 1,
+                policy: "best_fit".into(),
+                fast_path: true,
+                leader: Some("sched-0".into()),
+                epoch: 2,
+            },
+        },
+        ApiResponse::Error {
+            error: ApiError::failed("session kim/mnist/1 is not active").with_session("kim/mnist/1"),
+        },
+    ]
+}
+
+#[test]
+fn every_request_variant_round_trips() {
+    let samples = sample_requests();
+    let verbs: BTreeSet<&str> = samples.iter().map(|r| r.verb()).collect();
+    assert_eq!(
+        verbs,
+        ALL_VERBS.iter().copied().collect::<BTreeSet<&str>>(),
+        "sample set must cover every verb"
+    );
+    for req in samples {
+        let text = req.to_json().to_string();
+        let back = ApiRequest::from_json(&parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{} failed to parse back: {} ({})", req.verb(), e, text));
+        assert_eq!(back, req, "wire round-trip for {}:\n{}", req.verb(), text);
+    }
+}
+
+#[test]
+fn every_response_variant_round_trips() {
+    let samples = sample_responses();
+    let kinds: BTreeSet<&str> = samples.iter().map(|r| r.kind()).collect();
+    assert_eq!(
+        kinds,
+        ALL_KINDS.iter().copied().collect::<BTreeSet<&str>>(),
+        "sample set must cover every kind"
+    );
+    for resp in samples {
+        let text = resp.to_json().to_string();
+        let back = ApiResponse::from_json(&parse(&text).unwrap())
+            .unwrap_or_else(|e| panic!("{} failed to parse back: {} ({})", resp.kind(), e, text));
+        assert_eq!(back, resp, "wire round-trip for {}:\n{}", resp.kind(), text);
+    }
+}
+
+#[test]
+fn request_verbs_match_post_route_names() {
+    // `POST /api/v1/<verb>` builds requests from (verb, args); every verb
+    // must therefore reconstruct from its own envelope's parts.
+    for req in sample_requests() {
+        let env = req.to_json();
+        let args = env.get("args").unwrap();
+        let back = ApiRequest::from_verb_args(req.verb(), args).unwrap();
+        assert_eq!(back, req);
+    }
+}
+
+// ---------------------------------------------------------------------
+// End-to-end lifecycle purely through dispatch
+// ---------------------------------------------------------------------
+
+fn service() -> Option<PlatformService> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = dir;
+    Some(PlatformService::new(NsmlPlatform::new(cfg).unwrap()))
+}
+
+fn get_view(s: &PlatformService, id: &str) -> SessionView {
+    match s.dispatch(ApiRequest::GetSession { session: id.to_string() }) {
+        ApiResponse::Session { session } => session,
+        other => panic!("get_session: {:?}", other),
+    }
+}
+
+#[test]
+fn dispatch_drives_run_pause_resume_stop() {
+    let Some(s) = service() else { return };
+
+    // run
+    let mut params = RunParams::new("wire", "mnist");
+    params.total_steps = 120;
+    params.checkpoint_every = 30;
+    params.eval_every = 30;
+    let id = match s.dispatch(ApiRequest::Run(params)) {
+        ApiResponse::Submitted { session } => session,
+        other => panic!("run: {:?}", other),
+    };
+
+    // drive until mid-training
+    while get_view(&s, &id).steps_done < 30 {
+        match s.dispatch(ApiRequest::Drive { chunk: 10 }) {
+            ApiResponse::Progressed { .. } => {}
+            other => panic!("drive: {:?}", other),
+        }
+    }
+
+    // pause
+    match s.dispatch(ApiRequest::Pause { session: id.clone() }) {
+        ApiResponse::Ack { verb, session } => {
+            assert_eq!(verb, "pause");
+            assert_eq!(session.as_deref(), Some(id.as_str()));
+        }
+        other => panic!("pause: {:?}", other),
+    }
+    assert_eq!(get_view(&s, &id).state, SessionState::Paused);
+    // A paused session does not advance.
+    let frozen = get_view(&s, &id).steps_done;
+    s.dispatch(ApiRequest::Drive { chunk: 10 });
+    assert_eq!(get_view(&s, &id).steps_done, frozen);
+
+    // resume with a new lr (the §3.3 in-training edit)
+    match s.dispatch(ApiRequest::Resume { session: id.clone(), lr: Some(0.05) }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("resume: {:?}", other),
+    }
+    assert_eq!(get_view(&s, &id).state, SessionState::Running);
+
+    // finish
+    match s.dispatch(ApiRequest::RunToCompletion { chunk: 20, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("run_to_completion: {:?}", other),
+    }
+    let done = get_view(&s, &id);
+    assert_eq!(done.state, SessionState::Done);
+    assert_eq!(done.steps_done, 120);
+
+    // infer against the finished session, over the wire
+    let x: Vec<f32> = vec![0.5; 64 * 144];
+    match s.dispatch(ApiRequest::Infer { session: id.clone(), x, shape: vec![64, 144] }) {
+        ApiResponse::Probs { probs } => assert_eq!(probs.len(), 640),
+        other => panic!("infer: {:?}", other),
+    }
+
+    // the board lists it
+    match s.dispatch(ApiRequest::Board { dataset: "mnist".into(), limit: 10 }) {
+        ApiResponse::Board { rows, .. } => {
+            assert!(rows.iter().any(|r| r.session == id), "{:?}", rows);
+        }
+        other => panic!("board: {:?}", other),
+    }
+
+    // stop a terminal session still acks (idempotent cleanup path)
+    match s.dispatch(ApiRequest::Stop { session: id.clone() }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("stop: {:?}", other),
+    }
+
+    // the audit trail recorded every mutation verb
+    let audit: Vec<String> = s
+        .platform()
+        .events
+        .query(Some("api"), nsml::events::Level::Info)
+        .iter()
+        .map(|e| e.message.clone())
+        .collect();
+    for verb in ["dispatch run", "dispatch pause", "dispatch resume", "dispatch stop"] {
+        assert!(audit.iter().any(|m| m.starts_with(verb)), "missing '{}' in {:?}", verb, audit);
+    }
+}
+
+#[test]
+fn trial_batch_places_and_completes_all() {
+    let Some(s) = service() else { return };
+    let trials: Vec<TrialSpec> = [0.001, 0.1, 1.0]
+        .iter()
+        .map(|&lr| TrialSpec { lr, seed: 2, total_steps: 16, gpus: 1 })
+        .collect();
+    let sessions = match s.dispatch(ApiRequest::SubmitTrialBatch {
+        user: "batch".into(),
+        dataset: "mnist".into(),
+        trials,
+    }) {
+        ApiResponse::BatchSubmitted { sessions } => sessions,
+        other => panic!("batch: {:?}", other),
+    };
+    assert_eq!(sessions.len(), 3);
+    match s.dispatch(ApiRequest::RunToCompletion { chunk: 8, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("run_to_completion: {:?}", other),
+    }
+    for id in &sessions {
+        assert_eq!(get_view(&s, id).state, SessionState::Done, "{}", id);
+    }
+    // A failing batch reports which trial broke and places nothing new.
+    let before = match s.dispatch(ApiRequest::ListSessions) {
+        ApiResponse::Sessions { sessions } => sessions.len(),
+        other => panic!("{:?}", other),
+    };
+    let resp = s.dispatch(ApiRequest::SubmitTrialBatch {
+        user: "batch".into(),
+        dataset: "no-such-dataset".into(),
+        trials: vec![TrialSpec { lr: 0.1, seed: 0, total_steps: 8, gpus: 1 }],
+    });
+    match resp {
+        ApiResponse::Error { error } => assert!(error.message.contains("trial 0"), "{}", error),
+        other => panic!("{:?}", other),
+    }
+    match s.dispatch(ApiRequest::ListSessions) {
+        ApiResponse::Sessions { sessions } => assert_eq!(sessions.len(), before),
+        other => panic!("{:?}", other),
+    }
+}

@@ -91,6 +91,7 @@ fn web_api_serves_live_platform_state() {
         leaderboard: p.leaderboard.clone(),
         cluster: Some(p.cluster.clone()),
         events: p.events.clone(),
+        api: None,
     };
     let (port, _handle) = nsml::web::serve(state, 0).unwrap();
 
@@ -112,6 +113,86 @@ fn web_api_serves_live_platform_state() {
     let svg = fetch(&format!("/plot/{}.svg", id));
     assert!(svg.contains("image/svg+xml"));
     assert!(svg.contains("train_loss"));
+}
+
+#[test]
+fn web_post_api_v1_mutates_through_the_service() {
+    use std::io::{Read, Write};
+    let Some(p) = platform() else { return };
+    let service = nsml::api::PlatformService::new(p);
+    let (api, rx) = nsml::api::service_channel();
+    let state = nsml::web::WebState {
+        sessions: service.platform().sessions.clone(),
+        leaderboard: service.platform().leaderboard.clone(),
+        cluster: Some(service.platform().cluster.clone()),
+        events: service.platform().events.clone(),
+        api: Some(api),
+    };
+    let (port, _handle) = nsml::web::serve(state, 0).unwrap();
+
+    // HTTP client on a side thread; this thread (the platform owner)
+    // pumps exactly the dispatches the client issues.
+    let client = std::thread::spawn(move || {
+        let post = |path: &str, body: &str| -> String {
+            let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            write!(
+                s,
+                "POST {} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+                path,
+                body.len(),
+                body
+            )
+            .unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let run = post("/api/v1/run", r#"{"user":"web","dataset":"mnist","total_steps":10,"eval_every":5,"checkpoint_every":5}"#);
+        let done = post("/api/v1/run_to_completion", r#"{"chunk":5,"max_rounds":10000}"#);
+        let missing = post("/api/v1/get_session", r#"{"session":"missing"}"#);
+        (run, done, missing)
+    });
+    // Serve the client's three dispatches, then collect its results.
+    let service_thread_work = || {
+        for _ in 0..3 {
+            assert!(service.serve_one(&rx));
+        }
+    };
+    service_thread_work();
+    let (run, done, missing) = client.join().unwrap();
+
+    assert!(run.starts_with("HTTP/1.1 200"), "{}", run);
+    assert!(run.contains("\"kind\":\"submitted\""), "{}", run);
+    assert!(done.starts_with("HTTP/1.1 200"), "{}", done);
+    assert!(done.contains("\"kind\":\"ack\""), "{}", done);
+    assert!(missing.starts_with("HTTP/1.1 404"), "{}", missing);
+    assert!(missing.contains("not_found"), "{}", missing);
+
+    // The mutation really happened on the platform.
+    let sessions = service.platform().sessions.list();
+    assert_eq!(sessions.len(), 1);
+    assert_eq!(sessions[0].state, SessionState::Done);
+    assert_eq!(sessions[0].spec.user, "web");
+}
+
+#[test]
+fn web_405_includes_allow_header() {
+    use std::io::{Read, Write};
+    let Some(p) = platform() else { return };
+    let state = nsml::web::WebState {
+        sessions: p.sessions.clone(),
+        leaderboard: p.leaderboard.clone(),
+        cluster: Some(p.cluster.clone()),
+        events: p.events.clone(),
+        api: None,
+    };
+    let (port, _handle) = nsml::web::serve(state, 0).unwrap();
+    let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+    write!(s, "PUT / HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let mut out = String::new();
+    s.read_to_string(&mut out).unwrap();
+    assert!(out.starts_with("HTTP/1.1 405"), "{}", out);
+    assert!(out.contains("Allow: GET, POST"), "{}", out);
 }
 
 #[test]

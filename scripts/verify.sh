@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Tier-1 verification: build, test, and format-check the Rust platform.
+#
+# Usage: bash scripts/verify.sh
+#
+# Runs from rust/ so cargo picks up the crate there; artifacts must be
+# built first (`make artifacts`) for the platform-level tests to run —
+# without them those tests skip and only the pure-logic tests gate.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --release =="
+cargo build --release
+
+echo "== cargo test -q =="
+cargo test -q
+
+echo "== cargo fmt --check =="
+cargo fmt --check
+
+echo "verify OK"
