@@ -6,20 +6,20 @@
 
 use nsml::api::{NsmlPlatform, PlatformConfig, PlatformTrialRunner};
 use nsml::automl::{GridSearch, RandomSearch, SuccessiveHalving};
+use nsml::executor::ExecutorPool;
 use nsml::util::bench::Bench;
 use nsml::util::table::{fnum, Table};
+use std::sync::Arc;
 
 const LRS: [f64; 6] = [0.0003, 0.003, 0.03, 0.1, 0.5, 3.0];
 const BUDGET: u64 = 48;
 
-fn runner(platform: &NsmlPlatform, tag: u64, n: usize) -> PlatformTrialRunner {
+fn runner(platform: &NsmlPlatform, pool: &Arc<ExecutorPool>, tag: u64, n: usize) -> PlatformTrialRunner {
     PlatformTrialRunner::new(
-        platform.engine().clone(),
+        pool.clone(),
         "mnist",
         &format!("bench{}", tag),
-        platform.checkpoints.clone(),
         platform.sessions.clone(),
-        platform.events.clone(),
         platform.clock.clone(),
         n,
         tag,
@@ -31,21 +31,22 @@ fn main() {
     let mut cfg = PlatformConfig::test_default();
     cfg.artifacts_dir = "artifacts".into();
     let platform = NsmlPlatform::new(cfg).unwrap();
+    // One shared trial pool: rungs fan out across its workers.
+    let pool = platform.new_trial_pool();
     let mut bench = Bench::new("automl").with_samples(3);
     let mut table = Table::new(&["STRATEGY", "BEST LR", "BEST LOSS", "STEPS SPENT", "% OF GRID"]).right(&[1, 2, 3, 4]);
 
     let mut tag = 0u64;
-    let mut grid_spent = 0u64;
 
     // Grid (exhaustive baseline).
     let mut result = None;
     bench.run("grid search (6 lrs x 48 steps)", || {
         tag += 1;
-        let mut r = runner(&platform, tag, LRS.len());
+        let mut r = runner(&platform, &pool, tag, LRS.len());
         result = Some(GridSearch { lrs: LRS.to_vec(), steps_per_trial: BUDGET }.run(&mut r));
     });
     let grid = result.unwrap();
-    grid_spent = grid.steps_spent;
+    let grid_spent = grid.steps_spent;
     table.row(&[
         "grid".into(),
         fnum(grid.best_lr),
@@ -58,7 +59,7 @@ fn main() {
     let mut result = None;
     bench.run("successive halving (eta=2, 3 rungs)", || {
         tag += 1;
-        let mut r = runner(&platform, tag, LRS.len());
+        let mut r = runner(&platform, &pool, tag, LRS.len());
         result = Some(
             SuccessiveHalving { lrs: LRS.to_vec(), total_steps_per_trial: BUDGET, eta: 2, rungs: 3 }
                 .run(&mut r),
@@ -77,7 +78,7 @@ fn main() {
     let mut result = None;
     bench.run("random search + curve prediction", || {
         tag += 1;
-        let mut r = runner(&platform, tag, 6);
+        let mut r = runner(&platform, &pool, tag, 6);
         result = Some(
             RandomSearch {
                 candidates: 6,

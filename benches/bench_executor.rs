@@ -1,0 +1,164 @@
+//! The executor headline: wall-clock for an 8-session training batch,
+//! serial (inline, one thread — the pre-pool platform behaviour) vs the
+//! worker pool at 1 and 4 workers. Acceptance bar: the 4-worker pool is
+//! ≥2× faster than serial on a ≥4-core machine.
+//!
+//! Run: `cargo bench --bench bench_executor`
+//! Smoke: `BENCH_SMOKE=1 cargo bench --bench bench_executor`
+
+use nsml::cluster::NodeId;
+use nsml::data::generator_for;
+use nsml::events::EventLog;
+use nsml::executor::{ExecutorPool, SessionOutcome, WorkerCtx};
+use nsml::runtime::Engine;
+use nsml::session::{SessionRecord, SessionRun, SessionSpec, SessionStore};
+use nsml::storage::{CheckpointStore, ObjectStore};
+use nsml::util::bench::{smoke, Bench};
+use nsml::util::clock::sim_clock;
+use std::sync::Arc;
+
+const SESSIONS: usize = 8;
+const CHUNK: u64 = 12;
+
+fn ctx() -> WorkerCtx {
+    let (clock, _) = sim_clock();
+    WorkerCtx {
+        artifacts_dir: "artifacts".into(),
+        checkpoints: CheckpointStore::new(ObjectStore::memory()),
+        sessions: SessionStore::new(),
+        events: EventLog::new(clock.clone()).with_echo(false),
+        clock,
+    }
+}
+
+fn spec(tag: &str, i: usize, steps: u64) -> SessionSpec {
+    let mut spec =
+        SessionSpec::new(&format!("bench/exec/{}-{}", tag, i), "bench", "mnist", "mnist_mlp");
+    spec.total_steps = steps;
+    spec.eval_every = 0;
+    spec.checkpoint_every = 0;
+    spec.seed = i as u64;
+    spec
+}
+
+/// Serial baseline: the pre-pool execution model — every run stepped
+/// inline on the calling thread, sharing one engine.
+fn run_serial(ctx: &WorkerCtx, engine: &Arc<Engine>, tag: &str, steps: u64) {
+    let mut runs = Vec::new();
+    for i in 0..SESSIONS {
+        let spec = spec(tag, i, steps);
+        ctx.sessions.insert(SessionRecord::new(spec.clone(), 0));
+        let gen = generator_for(&spec.model, spec.seed).unwrap();
+        runs.push(
+            SessionRun::start(
+                engine.clone(),
+                spec,
+                gen,
+                ctx.checkpoints.clone(),
+                ctx.sessions.clone(),
+                ctx.events.clone(),
+                ctx.clock.clone(),
+            )
+            .unwrap(),
+        );
+    }
+    let mut pending = runs.len();
+    while pending > 0 {
+        pending = 0;
+        for run in &mut runs {
+            if run.steps_done() < steps {
+                run.step_chunk(CHUNK).unwrap();
+                if run.steps_done() < steps {
+                    pending += 1;
+                }
+            }
+        }
+    }
+}
+
+/// Pool run: submit the batch spread across workers, then drive fork-
+/// join step rounds until every session completes.
+fn run_pool(ctx: &WorkerCtx, pool: &ExecutorPool, tag: &str, steps: u64) {
+    for i in 0..SESSIONS {
+        let spec = spec(tag, i, steps);
+        ctx.sessions.insert(SessionRecord::new(spec.clone(), 0));
+        pool.submit(spec, false, Some(NodeId(i as u32))).unwrap();
+    }
+    let mut done = 0;
+    while done < SESSIONS {
+        for (id, outcome) in pool.step_round(CHUNK) {
+            match outcome {
+                SessionOutcome::Completed => done += 1,
+                SessionOutcome::Failed(e) => panic!("session {} failed: {}", id, e),
+                _ => {}
+            }
+        }
+    }
+}
+
+fn main() {
+    let steps: u64 = if smoke() { 12 } else { 48 };
+    let mut bench = Bench::new("executor");
+    let cores = std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1);
+    println!(
+        "executor bench: {} sessions x {} steps, chunk {}, {} cores{}",
+        SESSIONS,
+        steps,
+        CHUNK,
+        cores,
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    // Serial baseline (shared engine, inline stepping).
+    let serial_ctx = ctx();
+    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts` first"));
+    let mut tag = 0usize;
+    bench.run(&format!("serial inline x{} sessions", SESSIONS), || {
+        tag += 1;
+        run_serial(&serial_ctx, &engine, &format!("serial-{}", tag), steps);
+    });
+
+    // Pool with a single worker: same machinery, no parallelism — shows
+    // the pure pool overhead.
+    let pool1_ctx = ctx();
+    let pool1 = ExecutorPool::new(1, pool1_ctx.clone());
+    bench.run("pool x1 worker", || {
+        tag += 1;
+        run_pool(&pool1_ctx, &pool1, &format!("p1-{}", tag), steps);
+    });
+
+    // Pool with 4 workers: the headline.
+    let pool4_ctx = ctx();
+    let pool4 = ExecutorPool::new(4, pool4_ctx.clone());
+    bench.run("pool x4 workers", || {
+        tag += 1;
+        run_pool(&pool4_ctx, &pool4, &format!("p4-{}", tag), steps);
+    });
+
+    bench.finish();
+
+    let serial = bench.result(&format!("serial inline x{} sessions", SESSIONS)).unwrap().mean_ms();
+    let p1 = bench.result("pool x1 worker").unwrap().mean_ms();
+    let p4 = bench.result("pool x4 workers").unwrap().mean_ms();
+    let speedup = serial / p4;
+    println!(
+        "speedup: pool x4 is {:.2}x vs serial ({:.1}ms -> {:.1}ms); pool x1 overhead {:.2}x",
+        speedup,
+        serial,
+        p4,
+        p1 / serial,
+    );
+    if smoke() {
+        println!("smoke mode: skipping the >=2x speedup assertion");
+    } else if cores < 4 {
+        println!("only {} cores: skipping the >=2x speedup assertion", cores);
+    } else {
+        assert!(
+            speedup >= 2.0,
+            "expected >=2x speedup for {} sessions on 4 workers, got {:.2}x",
+            SESSIONS,
+            speedup
+        );
+        println!("OK: >=2x speedup bar met");
+    }
+}

@@ -9,10 +9,10 @@
 use nsml::data::generator_for;
 use nsml::runtime::{Batch, Engine, TrainableModel};
 use nsml::util::bench::Bench;
-use std::rc::Rc;
+use std::sync::Arc;
 
 fn main() {
-    let engine = Rc::new(Engine::new("artifacts").expect("run `make artifacts` first"));
+    let engine = Arc::new(Engine::new("artifacts").expect("run `make artifacts` first"));
     let mut bench = Bench::new("session");
 
     for name in engine.manifest().model_names() {

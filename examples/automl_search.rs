@@ -12,19 +12,23 @@ use nsml::api::{
     TrialSpec,
 };
 use nsml::automl::{log_grid, GridSearch, SuccessiveHalving};
+use nsml::executor::ExecutorPool;
 use nsml::util::table::{fnum, Table};
+use std::sync::Arc;
 
 const CANDIDATE_LRS: [f64; 6] = [0.0003, 0.003, 0.03, 0.1, 0.5, 3.0];
 const BUDGET_PER_TRIAL: u64 = 60;
 
-fn runner(platform: &NsmlPlatform, tag: u64) -> anyhow::Result<PlatformTrialRunner> {
+fn runner(
+    platform: &NsmlPlatform,
+    pool: &Arc<ExecutorPool>,
+    tag: u64,
+) -> anyhow::Result<PlatformTrialRunner> {
     Ok(PlatformTrialRunner::new(
-        platform.engine().clone(),
+        pool.clone(),
         "mnist",
         &format!("automl{}", tag),
-        platform.checkpoints.clone(),
         platform.sessions.clone(),
-        platform.events.clone(),
         platform.clock.clone(),
         CANDIDATE_LRS.len(),
         tag,
@@ -36,14 +40,17 @@ fn main() -> anyhow::Result<()> {
     let platform = service.platform();
     println!("== AutoML: lr search over real MNIST sessions ==\n");
 
+    // Trials train inside a dedicated executor pool: each grid/halving
+    // rung fans its candidates out across the workers.
+    let pool = platform.new_trial_pool();
     let t0 = std::time::Instant::now();
-    let mut grid_runner = runner(platform, 1)?;
+    let mut grid_runner = runner(platform, &pool, 1)?;
     let grid = GridSearch { lrs: CANDIDATE_LRS.to_vec(), steps_per_trial: BUDGET_PER_TRIAL }
         .run(&mut grid_runner);
     let grid_wall = t0.elapsed();
 
     let t1 = std::time::Instant::now();
-    let mut sh_runner = runner(platform, 2)?;
+    let mut sh_runner = runner(platform, &pool, 2)?;
     let sh = SuccessiveHalving {
         lrs: CANDIDATE_LRS.to_vec(),
         total_steps_per_trial: BUDGET_PER_TRIAL,

@@ -9,8 +9,7 @@ use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformS
 use nsml::scheduler::ReplicaId;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = PlatformConfig::default();
-    cfg.sched_replicas = 3;
+    let cfg = PlatformConfig { sched_replicas: 3, ..PlatformConfig::default() };
     let service = PlatformService::new(NsmlPlatform::new(cfg)?);
     let platform = service.platform();
     println!("== NSML failover drill ==\n");

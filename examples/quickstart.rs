@@ -13,8 +13,10 @@ use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformS
 use nsml::util::plot::ascii_chart;
 
 fn main() -> anyhow::Result<()> {
-    let mut cfg = PlatformConfig::default(); // 10 nodes × 8 GPUs, best-fit
-    cfg.latency = nsml::container::LatencyModel::default(); // virtual ms
+    let cfg = PlatformConfig {
+        latency: nsml::container::LatencyModel::default(), // virtual ms
+        ..PlatformConfig::default()                        // 10 nodes × 8 GPUs, best-fit
+    };
     let service = PlatformService::new(NsmlPlatform::new(cfg)?);
     let platform = service.platform();
 

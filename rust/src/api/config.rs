@@ -26,6 +26,8 @@ pub struct PlatformConfig {
     /// Default owner of the built-in datasets.
     pub system_user: String,
     pub seed: u64,
+    /// Executor worker threads driving sessions in parallel.
+    pub workers: usize,
 }
 
 impl Default for PlatformConfig {
@@ -42,6 +44,7 @@ impl Default for PlatformConfig {
             state_dir: None,
             system_user: "nsml".to_string(),
             seed: 0,
+            workers: 4,
         }
     }
 }
@@ -89,6 +92,7 @@ impl PlatformConfig {
             },
             system_user: cfg.str_or("platform", "system_user", &dflt.system_user),
             seed: cfg.int_or("platform", "seed", 0) as u64,
+            workers: (cfg.int_or("executor", "workers", dflt.workers as i64).max(1)) as usize,
         })
     }
 }
@@ -120,6 +124,8 @@ image_build_ms = 100
 [platform]
 state_dir = "/tmp/nsml-state"
 seed = 9
+[executor]
+workers = 2
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -131,6 +137,7 @@ seed = 9
         assert_eq!(c.latency.boot_ms, LatencyModel::default().boot_ms);
         assert_eq!(c.state_dir, Some(PathBuf::from("/tmp/nsml-state")));
         assert_eq!(c.seed, 9);
+        assert_eq!(c.workers, 2);
     }
 
     #[test]

@@ -25,13 +25,18 @@
 //! directly.
 //!
 //! Concurrency model: platform control state (cluster, scheduler,
-//! sessions, leaderboard) is thread-safe, but model *execution* happens
-//! on the facade's thread — mirroring how each NSML ML container owns its
-//! GPUs while the master merely coordinates. Hence the channel-based
-//! [`ServiceHandle`] rather than a shared `Arc<Platform>`.
+//! sessions, leaderboard) is thread-safe, and model *execution* runs on
+//! the [`crate::executor`] worker pool — each worker thread owns its
+//! live runs and a thread-local PJRT engine, mirroring how each NSML ML
+//! container owns its GPUs while the master merely coordinates. The
+//! facade stays the single coordinator: `drive` fans a step budget out
+//! to every worker and joins on the outcomes, and session-control verbs
+//! are routed to the owning worker's mailbox. The channel-based
+//! [`ServiceHandle`] still carries dispatches from clients (like the web
+//! server) that cannot own the platform.
 
 mod config;
-mod persist;
+pub mod persist;
 pub mod service;
 mod trial;
 pub mod wire;
@@ -46,19 +51,18 @@ pub use wire::{
 
 use crate::cluster::Cluster;
 use crate::container::{ContainerManager, ImageSpec};
-use crate::data::{dataset_for, generator_for, model_for_dataset, register_all};
+use crate::data::{dataset_for, model_for_dataset, register_all};
 use crate::events::EventLog;
+use crate::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
 use crate::leaderboard::{Leaderboard, Submission};
 use crate::runtime::{Engine, TensorData, TrainableModel};
 use crate::scheduler::{ElectionGroup, JobSpec, Master, SubmitOutcome};
-use crate::session::{RunStatus, SessionRecord, SessionRun, SessionSpec, SessionState, SessionStore};
+use crate::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
 use crate::storage::{CheckpointStore, DatasetRegistry, ObjectStore};
 use crate::util::clock::{sim_clock, SharedClock, SimClock};
 use crate::util::idgen;
 use anyhow::{anyhow, Context, Result};
-use std::cell::RefCell;
-use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Options for `nsml run` (subset of the paper's CLI flags).
 #[derive(Debug, Clone)]
@@ -105,9 +109,12 @@ pub struct NsmlPlatform {
     pub leaderboard: Leaderboard,
     /// Utilization/queue time series sampled by the drive loop (§3.1).
     pub monitor: crate::cluster::UtilizationMonitor,
-    engine: Rc<Engine>,
-    /// Live training executions keyed by session id.
-    active: RefCell<BTreeMap<String, SessionRun>>,
+    /// Facade-local engine for inference/manifest queries. Training
+    /// engines live inside the executor workers.
+    engine: Arc<Engine>,
+    /// The parallel session execution pool; live runs are owned by its
+    /// worker threads, keyed here only through the routing table.
+    executor: Arc<ExecutorPool>,
 }
 
 impl NsmlPlatform {
@@ -137,9 +144,20 @@ impl NsmlPlatform {
         };
         let datasets = DatasetRegistry::new(objects.clone());
         let checkpoints = CheckpointStore::new(objects.clone());
-        let engine = Rc::new(Engine::new(&config.artifacts_dir).with_context(|| {
+        let engine = Arc::new(Engine::new(&config.artifacts_dir).with_context(|| {
             format!("loading artifacts from {} (run `make artifacts`)", config.artifacts_dir.display())
         })?);
+        let sessions = SessionStore::new();
+        let executor = Arc::new(ExecutorPool::new(
+            config.workers,
+            WorkerCtx {
+                artifacts_dir: config.artifacts_dir.clone(),
+                checkpoints: checkpoints.clone(),
+                sessions: sessions.clone(),
+                events: events.clone(),
+                clock: clock.clone(),
+            },
+        ));
         let platform = NsmlPlatform {
             clock,
             sim,
@@ -151,11 +169,11 @@ impl NsmlPlatform {
             objects,
             datasets,
             checkpoints,
-            sessions: SessionStore::new(),
+            sessions,
             leaderboard: Leaderboard::new(),
             monitor: crate::cluster::UtilizationMonitor::new(),
             engine,
-            active: RefCell::new(BTreeMap::new()),
+            executor,
             config,
         };
         platform.bootstrap()?;
@@ -175,8 +193,30 @@ impl NsmlPlatform {
         Ok(())
     }
 
-    pub fn engine(&self) -> &Rc<Engine> {
+    pub fn engine(&self) -> &Arc<Engine> {
         &self.engine
+    }
+
+    /// The parallel session execution pool.
+    pub fn executor(&self) -> &Arc<ExecutorPool> {
+        &self.executor
+    }
+
+    /// A fresh worker pool sharing this platform's stores — automl
+    /// searches run their trial sessions here so the main pool's step
+    /// rounds never touch them.
+    pub fn new_trial_pool(&self) -> Arc<ExecutorPool> {
+        Arc::new(ExecutorPool::new(self.config.workers, self.worker_ctx()))
+    }
+
+    fn worker_ctx(&self) -> WorkerCtx {
+        WorkerCtx {
+            artifacts_dir: self.config.artifacts_dir.clone(),
+            checkpoints: self.checkpoints.clone(),
+            sessions: self.sessions.clone(),
+            events: self.events.clone(),
+            clock: self.clock.clone(),
+        }
     }
 
     // ------------------------------------------------------------------
@@ -237,33 +277,15 @@ impl NsmlPlatform {
             self.containers.launch(id, node, &image, &rec.spec.dataset, dataset_info.nominal_size_gb);
         self.sessions.update(id, |r| r.container = Some(container.id.clone()));
 
-        let gen = generator_for(&rec.spec.model, rec.spec.seed)
-            .ok_or_else(|| anyhow!("no data generator for model {}", rec.spec.model))?;
         let has_ckpt = self.checkpoints.latest(id).is_some();
-        let run = if has_ckpt {
+        if has_ckpt {
             // Auto-recovery (§4.2): resume from the last backup.
             self.sessions.update(id, |r| r.recoveries += 1);
-            SessionRun::resume(
-                self.engine.clone(),
-                rec.spec.clone(),
-                gen,
-                self.checkpoints.clone(),
-                self.sessions.clone(),
-                self.events.clone(),
-                self.clock.clone(),
-            )?
-        } else {
-            SessionRun::start(
-                self.engine.clone(),
-                rec.spec.clone(),
-                gen,
-                self.checkpoints.clone(),
-                self.sessions.clone(),
-                self.events.clone(),
-                self.clock.clone(),
-            )?
-        };
-        self.active.borrow_mut().insert(id.to_string(), run);
+        }
+        // Hand the run to the executor: the scheduler's node choice maps
+        // onto a worker, which constructs the (fresh or resumed) run on
+        // its own thread and acks before we return.
+        self.executor.submit(rec.spec.clone(), has_ckpt, Some(node))?;
         Ok(())
     }
 
@@ -291,27 +313,22 @@ impl NsmlPlatform {
         // 2. Leader lease check (a healthy leader is a no-op).
         self.election.tick();
 
-        // 3. Step active runs.
-        let ids: Vec<String> = self.active.borrow().keys().cloned().collect();
+        // 3. Step active runs — one parallel round across the worker
+        //    pool. Workers step their sessions concurrently; the round
+        //    has joined by the time step_round returns, so drive keeps
+        //    its synchronous contract (all progress done on return).
         let mut progressed = 0;
-        for id in ids {
-            // Skip sessions whose state got externally flipped (paused/stopped).
-            let state = self.sessions.get(&id).map(|r| r.state);
-            if state != Some(SessionState::Running) {
-                continue;
-            }
-            let status = {
-                let mut active = self.active.borrow_mut();
-                let Some(run) = active.get_mut(&id) else { continue };
-                run.step_chunk(chunk)
-            };
-            progressed += 1;
-            match status {
-                Ok(RunStatus::Completed) => self.finalize(&id)?,
-                Ok(RunStatus::InProgress) => {}
-                Err(e) => {
+        for (id, outcome) in self.executor.step_round(chunk) {
+            match outcome {
+                SessionOutcome::Skipped => {} // externally paused/stopped
+                SessionOutcome::Progressed => progressed += 1,
+                SessionOutcome::Completed => {
+                    progressed += 1;
+                    self.finalize(&id)?;
+                }
+                SessionOutcome::Failed(e) => {
+                    progressed += 1;
                     self.events.error("platform", &id, format!("session failed: {}", e));
-                    self.active.borrow_mut().remove(&id);
                     self.containers.stop_job(&id);
                     for (job, node) in self.master.complete(&id) {
                         self.prepare_and_start(&job.id, node)?;
@@ -367,8 +384,8 @@ impl NsmlPlatform {
     }
 
     /// Session completed: leaderboard submission + resource release.
+    /// (The worker already dropped the run and marked the record done.)
     fn finalize(&self, id: &str) -> Result<()> {
-        self.active.borrow_mut().remove(id);
         let rec = self.sessions.get(id).ok_or_else(|| anyhow!("unknown session {}", id))?;
         if let Some(best) = rec.best_metric {
             let manifest = self.engine.manifest().model(&rec.spec.model)?;
@@ -396,7 +413,7 @@ impl NsmlPlatform {
     /// from checkpoints when re-placed.
     fn on_orphans(&self, orphans: &[String]) {
         for id in orphans {
-            self.active.borrow_mut().remove(id);
+            self.executor.detach(id);
             self.containers.stop_job(id);
             self.sessions.update(id, |r| {
                 if !r.state.is_terminal() {
@@ -421,22 +438,16 @@ impl NsmlPlatform {
     // Session control (pause / edit / resume / stop — §3.3)
     // ------------------------------------------------------------------
 
-    /// Pause a running session (checkpoints first).
+    /// Pause a running session (checkpoints first). The command is
+    /// routed to the owning worker's mailbox and acked synchronously.
     pub fn pause(&self, id: &str) -> Result<()> {
-        let mut active = self.active.borrow_mut();
-        let run = active.get_mut(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
-        run.pause()?;
-        Ok(())
+        self.executor.control(id, SessionCommand::Pause)
     }
 
     /// Resume a paused session, optionally with a new learning rate —
     /// the paper's in-training hyperparameter tuning.
     pub fn resume(&self, id: &str, new_lr: Option<f64>) -> Result<()> {
-        let mut active = self.active.borrow_mut();
-        let run = active.get_mut(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
-        if let Some(lr) = new_lr {
-            run.set_lr(lr);
-        }
+        self.executor.control(id, SessionCommand::Resume { lr: new_lr })?;
         self.sessions.update(id, |r| r.state = SessionState::Running);
         Ok(())
     }
@@ -444,7 +455,7 @@ impl NsmlPlatform {
     /// Stop a session outright. Freed resources immediately go to queued
     /// work.
     pub fn stop(&self, id: &str) -> Result<()> {
-        self.active.borrow_mut().remove(id);
+        self.executor.detach(id);
         self.containers.stop_job(id);
         self.master.cancel_queued(id);
         let placed = self.master.complete(id);

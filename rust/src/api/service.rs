@@ -11,12 +11,15 @@
 //!
 //! * **In-process** — construct the service and call `dispatch`
 //!   synchronously (the CLI and examples do this).
-//! * **Cross-thread** — the platform is not `Send` (single-threaded model
-//!   execution by design), so remote callers like the web server's
-//!   connection threads talk over a channel: [`service_channel`] yields a
-//!   cloneable [`ServiceHandle`] whose [`ServiceHandle::call`] blocks
-//!   until the owning thread pumps the request through
+//! * **Cross-thread** — the platform facade is not `Send` (it holds a
+//!   thread-local PJRT engine for inference; training runs on the
+//!   [`crate::executor`] worker pool), so remote callers like the web
+//!   server's connection threads talk over a channel: [`service_channel`]
+//!   yields a cloneable [`ServiceHandle`] whose [`ServiceHandle::call`]
+//!   blocks until the owning thread pumps the request through
 //!   [`PlatformService::serve`] (or [`PlatformService::serve_one`]).
+//!   Dispatches that advance training (`drive`, `run_to_completion`)
+//!   fan the work out across the executor pool before replying.
 
 use super::wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, NodeStatusView, SessionView,

@@ -1,41 +1,42 @@
 //! Glue between the AutoML searchers and real platform sessions: each
-//! trial is a genuine training session (model, data, checkpoints) driven
-//! incrementally — what §3.1's "automatically optimize the
-//! hyperparameters" does on the deployed system.
+//! trial is a genuine training session (model, data, checkpoints) that
+//! lives inside an executor worker and is driven incrementally — what
+//! §3.1's "automatically optimize the hyperparameters" does on the
+//! deployed system. Batched rungs ([`TrialRunner::extend_many`]) fan
+//! out across the pool, so all surviving candidates of a grid/halving
+//! rung train concurrently.
 
 use crate::automl::TrialRunner;
-use crate::data::{generator_for, model_for_dataset};
-use crate::events::EventLog;
-use crate::runtime::Engine;
-use crate::session::{SessionRecord, SessionRun, SessionSpec, SessionStore};
-use crate::storage::CheckpointStore;
+use crate::data::model_for_dataset;
+use crate::executor::{ExecutorPool, SessionCommand};
+use crate::session::{SessionRecord, SessionSpec, SessionStore};
 use crate::util::clock::SharedClock;
 use anyhow::Result;
-use std::rc::Rc;
+use std::sync::Arc;
 
-/// Runs AutoML trials as real sessions on the platform runtime.
+/// Fixed generator seed for the held-out scoring stream (kept from the
+/// pre-pool runner so search outcomes are comparable).
+const EVAL_SEED: u64 = 9_999;
+
+/// Runs AutoML trials as real sessions inside an executor pool.
 pub struct PlatformTrialRunner {
-    engine: Rc<Engine>,
+    pool: Arc<ExecutorPool>,
     dataset: String,
     model: String,
     user: String,
-    ckpts: CheckpointStore,
     sessions: SessionStore,
-    events: EventLog,
     clock: SharedClock,
     seed: u64,
-    runs: Vec<Option<SessionRun>>,
+    started: Vec<bool>,
     pub session_ids: Vec<String>,
 }
 
 impl PlatformTrialRunner {
     pub fn new(
-        engine: Rc<Engine>,
+        pool: Arc<ExecutorPool>,
         dataset: &str,
         user: &str,
-        ckpts: CheckpointStore,
         sessions: SessionStore,
-        events: EventLog,
         clock: SharedClock,
         candidates: usize,
         seed: u64,
@@ -44,22 +45,20 @@ impl PlatformTrialRunner {
             .ok_or_else(|| anyhow::anyhow!("no model for dataset '{}'", dataset))?
             .to_string();
         Ok(PlatformTrialRunner {
-            engine,
+            pool,
             dataset: dataset.to_string(),
             model,
             user: user.to_string(),
-            ckpts,
             sessions,
-            events,
             clock,
             seed,
-            runs: (0..candidates).map(|_| None).collect(),
+            started: vec![false; candidates],
             session_ids: vec![String::new(); candidates],
         })
     }
 
     fn ensure_run(&mut self, trial: usize, lr: f64) -> Result<()> {
-        if self.runs[trial].is_some() {
+        if self.started[trial] {
             return Ok(());
         }
         let id = format!("{}/{}/automl-{}", self.user, self.dataset, trial);
@@ -70,56 +69,71 @@ impl PlatformTrialRunner {
         spec.eval_every = 0;
         spec.checkpoint_every = 0;
         self.sessions.insert(SessionRecord::new(spec.clone(), self.clock.now_ms()));
-        let gen = generator_for(&self.model, spec.seed).unwrap();
-        let run = SessionRun::start(
-            self.engine.clone(),
-            spec,
-            gen,
-            self.ckpts.clone(),
-            self.sessions.clone(),
-            self.events.clone(),
-            self.clock.clone(),
-        )?;
+        self.pool.submit(spec, false, None)?;
         self.session_ids[trial] = id;
-        self.runs[trial] = Some(run);
+        self.started[trial] = true;
         Ok(())
     }
 
     /// Persist the winner's model ("save the model of best score", §3.1).
     pub fn save_best(&mut self, trial: usize) -> Result<crate::storage::Checkpoint> {
-        let run = self.runs[trial].as_mut().expect("winner trial must have run");
-        run.checkpoint()
+        self.pool.checkpoint(&self.session_ids[trial])
+    }
+}
+
+impl Drop for PlatformTrialRunner {
+    /// Release this search's live runs from the pool. Trial specs use a
+    /// near-infinite step budget, so they never complete on their own —
+    /// without this, every search would leave its model parameters
+    /// resident in the worker threads for the pool's lifetime.
+    fn drop(&mut self) {
+        for (started, id) in self.started.iter().zip(&self.session_ids) {
+            if *started {
+                self.pool.detach(id);
+            }
+        }
     }
 }
 
 impl TrialRunner for PlatformTrialRunner {
     fn extend(&mut self, trial: usize, lr: f64, steps: u64) -> Vec<(f64, f64)> {
-        self.ensure_run(trial, lr).expect("trial start");
-        let run = self.runs[trial].as_mut().unwrap();
-        run.set_lr(lr);
-        run.step_chunk(steps).expect("trial step");
-        self.sessions
-            .get(&self.session_ids[trial])
-            .map(|r| r.metrics.series("train_loss"))
-            .unwrap_or_default()
+        self.extend_many(&[(trial, lr, steps)]).pop().unwrap_or_default()
+    }
+
+    /// One rung of parallel training: every listed trial gets its own
+    /// step budget, dispatched to its owning worker; the workers train
+    /// concurrently and this joins on all of them.
+    fn extend_many(&mut self, work: &[(usize, f64, u64)]) -> Vec<Vec<(f64, f64)>> {
+        for &(trial, lr, _) in work {
+            self.ensure_run(trial, lr).expect("trial start");
+            // Mid-search lr edits ride the same mailbox as user edits.
+            // A trial that already failed is simply left dead.
+            let _ = self.pool.control(&self.session_ids[trial], SessionCommand::SetLr(lr));
+        }
+        let batch: Vec<(String, u64)> =
+            work.iter().map(|&(trial, _, steps)| (self.session_ids[trial].clone(), steps)).collect();
+        // Failures (e.g. a diverged lr producing non-finite loss) mark
+        // the record failed; the trial scores INFINITY from then on.
+        let _ = self.pool.step_many(&batch);
+        work.iter()
+            .map(|&(trial, ..)| {
+                self.sessions
+                    .get(&self.session_ids[trial])
+                    .map(|r| r.metrics.series("train_loss"))
+                    .unwrap_or_default()
+            })
+            .collect()
     }
 
     fn current_loss(&mut self, trial: usize) -> f64 {
-        match self.runs[trial].as_mut() {
-            None => f64::INFINITY,
-            Some(run) => {
-                // Evaluate on the held-out stream; eval loss is the score.
-                let id = self.session_ids[trial].clone();
-                let before = self.sessions.get(&id).map(|r| r.metrics.len());
-                // Trigger an eval via a zero-step finish-free path: call
-                // evaluate directly through the model.
-                let _ = before;
-                let gen = generator_for(&self.model, 9_999).unwrap();
-                let mut gen = gen;
-                let batch = gen.eval_batch(run.model().manifest().batch);
-                run.model().evaluate(&batch).map(|(loss, _)| loss as f64).unwrap_or(f64::INFINITY)
-            }
+        if !self.started[trial] {
+            return f64::INFINITY;
         }
+        // Evaluate on the held-out stream; eval loss is the score.
+        self.pool
+            .evaluate(&self.session_ids[trial], EVAL_SEED)
+            .map(|(loss, _)| loss)
+            .unwrap_or(f64::INFINITY)
     }
 }
 
@@ -127,38 +141,37 @@ impl TrialRunner for PlatformTrialRunner {
 mod tests {
     use super::*;
     use crate::automl::{GridSearch, SuccessiveHalving};
-    use crate::storage::ObjectStore;
+    use crate::events::EventLog;
+    use crate::executor::WorkerCtx;
+    use crate::storage::{CheckpointStore, ObjectStore};
     use crate::util::clock::sim_clock;
     use std::path::PathBuf;
 
-    fn runner(candidates: usize) -> Option<PlatformTrialRunner> {
+    fn runner(candidates: usize, workers: usize) -> Option<PlatformTrialRunner> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
         if !dir.join("manifest.json").exists() {
             eprintln!("skipping: artifacts not built");
             return None;
         }
-        let engine = Rc::new(Engine::new(&dir).unwrap());
         let (clock, _) = sim_clock();
         let events = EventLog::new(clock.clone()).with_echo(false);
+        let ctx = WorkerCtx {
+            artifacts_dir: dir,
+            checkpoints: CheckpointStore::new(ObjectStore::memory()),
+            sessions: SessionStore::new(),
+            events,
+            clock: clock.clone(),
+        };
+        let pool = Arc::new(ExecutorPool::new(workers, ctx.clone()));
         Some(
-            PlatformTrialRunner::new(
-                engine,
-                "mnist",
-                "automl",
-                CheckpointStore::new(ObjectStore::memory()),
-                SessionStore::new(),
-                events,
-                clock,
-                candidates,
-                0,
-            )
-            .unwrap(),
+            PlatformTrialRunner::new(pool, "mnist", "automl", ctx.sessions, clock, candidates, 0)
+                .unwrap(),
         )
     }
 
     #[test]
     fn grid_search_over_real_sessions() {
-        let Some(mut r) = runner(3) else { return };
+        let Some(mut r) = runner(3, 2) else { return };
         let out = GridSearch { lrs: vec![0.0001, 0.1, 5.0], steps_per_trial: 30 }.run(&mut r);
         // lr=5.0 diverges or stalls, lr=0.0001 barely moves; 0.1 wins.
         assert!((out.best_lr - 0.1).abs() < 1e-9, "best {}", out.best_lr);
@@ -170,7 +183,7 @@ mod tests {
 
     #[test]
     fn successive_halving_spends_less() {
-        let Some(mut r) = runner(4) else { return };
+        let Some(mut r) = runner(4, 2) else { return };
         let sh = SuccessiveHalving {
             lrs: vec![0.0001, 0.01, 0.1, 5.0],
             total_steps_per_trial: 40,
@@ -180,5 +193,21 @@ mod tests {
         .run(&mut r);
         assert!(sh.steps_spent < 4 * 40, "spent {}", sh.steps_spent);
         assert!(sh.best_lr == 0.1 || sh.best_lr == 0.01, "best {}", sh.best_lr);
+    }
+
+    #[test]
+    fn trials_spread_across_workers() {
+        let Some(mut r) = runner(4, 4) else { return };
+        let out = GridSearch { lrs: vec![0.05, 0.08, 0.1, 0.2], steps_per_trial: 8 }.run(&mut r);
+        assert!(out.best_loss.is_finite());
+        // Round-robin placement: 4 trials land on 4 distinct workers.
+        let owners: std::collections::BTreeSet<usize> =
+            r.session_ids.iter().filter_map(|id| r.pool.owner_of(id)).collect();
+        assert_eq!(owners.len(), 4, "owners {:?}", owners);
+        // Dropping the runner releases its (never-completing) runs.
+        let pool = r.pool.clone();
+        assert_eq!(pool.len(), 4);
+        drop(r);
+        assert!(pool.is_empty());
     }
 }

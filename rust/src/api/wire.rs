@@ -82,6 +82,7 @@ impl ErrorCode {
         }
     }
 
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Option<ErrorCode> {
         match s {
             "not_found" => Some(ErrorCode::NotFound),

@@ -18,6 +18,14 @@ pub trait TrialRunner {
     /// Final evaluation metric of the trial at its current state (loss;
     /// lower is better).
     fn current_loss(&mut self, trial: usize) -> f64;
+    /// Train a whole rung of `(trial, lr, steps)` work items, returning
+    /// one curve per item in input order. The default runs them
+    /// serially; parallel runners (the platform's executor-pool runner)
+    /// override this to train all items concurrently — every strategy
+    /// below batches its per-rung work through here.
+    fn extend_many(&mut self, work: &[(usize, f64, u64)]) -> Vec<Vec<(f64, f64)>> {
+        work.iter().map(|&(trial, lr, steps)| self.extend(trial, lr, steps)).collect()
+    }
 }
 
 /// Result of a search.
@@ -51,10 +59,14 @@ pub struct GridSearch {
 
 impl GridSearch {
     pub fn run(&self, runner: &mut dyn TrialRunner) -> SearchOutcome {
+        // The whole grid is one rung: every candidate trains at once on
+        // a parallel runner.
+        let work: Vec<(usize, f64, u64)> =
+            self.lrs.iter().enumerate().map(|(i, &lr)| (i, lr, self.steps_per_trial)).collect();
+        runner.extend_many(&work);
         let mut trials = Vec::new();
         let mut spent = 0;
         for (i, &lr) in self.lrs.iter().enumerate() {
-            runner.extend(i, lr, self.steps_per_trial);
             spent += self.steps_per_trial;
             trials.push((lr, runner.current_loss(i), self.steps_per_trial));
         }
@@ -87,12 +99,14 @@ impl RandomSearch {
         let lrs = self.sample_lrs();
         let probe = ((self.steps_per_trial as f64 * self.probe_frac) as u64).max(3);
         let mut spent = 0;
-        // Probe phase: short runs + curve prediction.
+        // Probe phase: short runs (one parallel rung) + curve prediction.
+        let probe_work: Vec<(usize, f64, u64)> =
+            lrs.iter().enumerate().map(|(i, &lr)| (i, lr, probe)).collect();
+        let curves = runner.extend_many(&probe_work);
         let mut predicted: Vec<(usize, f64)> = Vec::new();
-        for (i, &lr) in lrs.iter().enumerate() {
-            let curve = runner.extend(i, lr, probe);
+        for (i, curve) in curves.iter().enumerate() {
             spent += probe;
-            let pred = predict_final(&curve, self.steps_per_trial as f64)
+            let pred = predict_final(curve, self.steps_per_trial as f64)
                 .unwrap_or_else(|| runner.current_loss(i));
             predicted.push((i, pred));
         }
@@ -103,9 +117,11 @@ impl RandomSearch {
         for &(i, pred) in predicted.iter() {
             trials[i].1 = pred;
         }
-        for &(i, _) in predicted.iter().take(promote) {
-            let remaining = self.steps_per_trial - probe;
-            runner.extend(i, lrs[i], remaining);
+        let remaining = self.steps_per_trial - probe;
+        let promote_work: Vec<(usize, f64, u64)> =
+            predicted.iter().take(promote).map(|&(i, _)| (i, lrs[i], remaining)).collect();
+        runner.extend_many(&promote_work);
+        for &(i, _, _) in &promote_work {
             spent += remaining;
             trials[i] = (lrs[i], runner.current_loss(i), self.steps_per_trial);
         }
@@ -133,9 +149,12 @@ impl SuccessiveHalving {
         let mut spent = 0;
         for rung in 0..self.rungs {
             let steps = (base * (self.eta as f64).powi(rung as i32)).round() as u64;
+            // All survivors of the rung train together (parallel on a
+            // pool-backed runner), then get scored.
+            let work: Vec<(usize, f64, u64)> = alive.iter().map(|&i| (i, self.lrs[i], steps)).collect();
+            runner.extend_many(&work);
             let mut scored: Vec<(usize, f64)> = Vec::new();
             for &i in &alive {
-                runner.extend(i, self.lrs[i], steps);
                 given[i] += steps;
                 spent += steps;
                 scored.push((i, runner.current_loss(i)));

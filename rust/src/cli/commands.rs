@@ -19,12 +19,14 @@ use std::path::PathBuf;
 type CmdResult = Result<(), String>;
 
 fn platform_from(parsed: &Parsed) -> Result<NsmlPlatform, String> {
-    let mut cfg = PlatformConfig::default();
-    cfg.artifacts_dir = PathBuf::from(parsed.get("artifacts").unwrap_or("artifacts"));
-    cfg.state_dir = Some(PathBuf::from(parsed.get("state").unwrap_or(".nsml")));
-    // CLI runs use the fast latency model so virtual costs are visible in
-    // the logs without 45-s real stalls.
-    cfg.latency = crate::container::LatencyModel::fast();
+    let cfg = PlatformConfig {
+        artifacts_dir: PathBuf::from(parsed.get("artifacts").unwrap_or("artifacts")),
+        state_dir: Some(PathBuf::from(parsed.get("state").unwrap_or(".nsml"))),
+        // CLI runs use the fast latency model so virtual costs are
+        // visible in the logs without 45-s real stalls.
+        latency: crate::container::LatencyModel::fast(),
+        ..PlatformConfig::default()
+    };
     NsmlPlatform::new(cfg).map_err(|e| format!("platform init: {:#}", e))
 }
 
@@ -360,13 +362,13 @@ pub fn cmd_automl(args: &[String]) -> CmdResult {
     let steps = p.get_usize("steps")? as u64;
     let seed = p.get_usize("seed")? as u64;
 
+    // Trials train inside their own executor pool (one worker per
+    // configured executor thread), so rungs run cluster-parallel.
     let mut runner = PlatformTrialRunner::new(
-        platform.engine().clone(),
+        platform.new_trial_pool(),
         &dataset,
         p.get("user").unwrap(),
-        platform.checkpoints.clone(),
         platform.sessions.clone(),
-        platform.events.clone(),
         platform.clock.clone(),
         candidates,
         seed,

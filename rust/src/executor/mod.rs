@@ -1,0 +1,56 @@
+//! Parallel session execution: a fixed-size, `Send`-capable worker
+//! pool that trains many sessions concurrently (the throughput layer
+//! behind the paper's "parallel runs with different job priorities",
+//! §3.1, and the NSML follow-up's executor tier).
+//!
+//! # Architecture
+//!
+//! ```text
+//!              NsmlPlatform (facade thread)
+//!   run/pause/resume/stop/drive            automl trial runner
+//!        │                                        │
+//!        ▼                                        ▼
+//!   ExecutorPool ──────── routing table: session id → worker
+//!        │ submit/control/step_round/step_many  (mpsc mailboxes)
+//!   ┌────┴─────┬──────────┬──────────┐
+//!   ▼          ▼          ▼          ▼
+//! worker 0   worker 1   worker 2   worker 3      (std::thread)
+//!  Engine     Engine     Engine     Engine       (thread-local PJRT)
+//!  SessionRun SessionRun SessionRun SessionRun   (owned, never Send)
+//! ```
+//!
+//! * **Ownership inversion.** Before this module the platform owned
+//!   every live [`SessionRun`](crate::session::SessionRun) in a
+//!   `RefCell` map and stepped them serially. Now each *worker thread*
+//!   owns its runs; the platform holds only the routing table. The
+//!   session-execution path crosses threads exclusively through `Send`
+//!   messages ([`WorkerCtx`] handles are `Arc`-backed stores; specs,
+//!   commands and outcomes are plain data), while the non-`Send` PJRT
+//!   state (client, executables, parameters, generators) is built
+//!   inside each worker and never leaves it.
+//! * **Placement mapping.** The scheduler's node decision maps onto a
+//!   worker (`node % workers`, see
+//!   [`ExecutorPool::submit`]), so sessions co-located on a simulated
+//!   node share one engine compile cache — the analogue of NSML ML
+//!   containers sharing a GPU host.
+//! * **Fork-join rounds.** [`ExecutorPool::step_round`] broadcasts a
+//!   step budget to every worker and joins on the outcomes. Workers
+//!   run concurrently; callers keep the deterministic, synchronous
+//!   `drive()` contract the rest of the platform (and its tests) rely
+//!   on. [`ExecutorPool::step_many`] is the per-session variant that
+//!   lets automl rungs train all surviving candidates in parallel.
+//! * **Per-session mailboxes.** Control verbs (pause, resume with a
+//!   new lr, lr edit, rewind) are routed through the owning worker's
+//!   mailbox keyed by session id and acknowledged synchronously, so a
+//!   command observed as `Ok` has already happened.
+//!
+//! Failure isolation: a session that errors (non-finite loss, bad
+//! spec) is dropped from its worker and reported as
+//! [`SessionOutcome::Failed`]; other sessions — including those on the
+//! same worker — are unaffected.
+
+mod pool;
+mod worker;
+
+pub use pool::ExecutorPool;
+pub use worker::{SessionCommand, SessionOutcome, SessionProbe, WorkerCtx};

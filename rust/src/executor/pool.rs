@@ -1,0 +1,246 @@
+//! The pool side: fixed worker set, session→worker routing, and the
+//! fork-join step round that gives the platform parallel training with
+//! serial-drive semantics.
+
+use super::worker::{
+    worker_loop, SessionCommand, SessionOutcome, SessionProbe, WorkerCtx, WorkerMsg,
+};
+use crate::cluster::NodeId;
+use crate::session::SessionSpec;
+use crate::storage::Checkpoint;
+use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+struct WorkerHandle {
+    tx: Sender<WorkerMsg>,
+    thread: Option<JoinHandle<()>>,
+}
+
+/// A fixed-size pool of session-execution workers.
+///
+/// The pool owns the routing table (which worker holds which live
+/// session — the per-session mailbox address) and exposes:
+///
+/// * [`submit`](ExecutorPool::submit) — place a session on a worker;
+///   the scheduler's node choice maps deterministically onto a worker,
+///   so co-located sessions share an engine cache like co-located NSML
+///   containers share a GPU host.
+/// * [`control`](ExecutorPool::control) — route a pause/resume/lr-edit/
+///   rewind command to the owning worker and wait for the ack.
+/// * [`step_round`](ExecutorPool::step_round) — broadcast "advance by
+///   `chunk` steps" to every worker and join on the per-session
+///   outcomes. Workers step concurrently; the caller keeps the old
+///   serial `drive()` semantics (all progress is done when it returns).
+/// * [`step_many`](ExecutorPool::step_many) — per-session step budgets
+///   fanned out and joined (the automl rung driver).
+pub struct ExecutorPool {
+    workers: Vec<WorkerHandle>,
+    routes: Mutex<BTreeMap<String, usize>>,
+    rr: AtomicUsize,
+}
+
+impl ExecutorPool {
+    /// Spawn `workers` threads (at least one) over a shared context.
+    pub fn new(workers: usize, ctx: WorkerCtx) -> ExecutorPool {
+        let n = workers.max(1);
+        let mut handles = Vec::with_capacity(n);
+        for i in 0..n {
+            let (tx, rx) = channel();
+            let wctx = ctx.clone();
+            let thread = std::thread::Builder::new()
+                .name(format!("nsml-worker-{}", i))
+                .spawn(move || worker_loop(i, wctx, rx))
+                .expect("spawn executor worker");
+            handles.push(WorkerHandle { tx, thread: Some(thread) });
+        }
+        ExecutorPool { workers: handles, routes: Mutex::new(BTreeMap::new()), rr: AtomicUsize::new(0) }
+    }
+
+    pub fn worker_count(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Ids of all live (pool-owned) sessions.
+    pub fn active(&self) -> Vec<String> {
+        self.routes.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.routes.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Which worker owns a session (None if not live in the pool).
+    pub fn owner_of(&self, id: &str) -> Option<usize> {
+        self.routes.lock().unwrap().get(id).copied()
+    }
+
+    /// Place a session on a worker and construct its run (fresh start
+    /// or checkpoint resume). `placement` is the scheduler's node
+    /// decision: node → worker is a stable modular mapping; without a
+    /// placement the pool round-robins.
+    pub fn submit(&self, spec: SessionSpec, resume: bool, placement: Option<NodeId>) -> Result<()> {
+        let w = match placement {
+            Some(node) => node.0 as usize % self.workers.len(),
+            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.workers.len(),
+        };
+        let id = spec.id.clone();
+        let (reply, rx) = channel();
+        self.workers[w]
+            .tx
+            .send(WorkerMsg::Spawn { spec, resume, reply })
+            .map_err(|_| anyhow!("executor worker {} is gone", w))?;
+        rx.recv()
+            .map_err(|_| anyhow!("executor worker {} died during spawn", w))?
+            .map_err(|e| anyhow!(e))?;
+        self.routes.lock().unwrap().insert(id, w);
+        Ok(())
+    }
+
+    /// Route a session-control command to the owning worker's mailbox
+    /// and block for its ack.
+    pub fn control(&self, id: &str, cmd: SessionCommand) -> Result<()> {
+        let w = self.owner_of(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        let (reply, rx) = channel();
+        self.workers[w]
+            .tx
+            .send(WorkerMsg::Control { id: id.to_string(), cmd, reply })
+            .map_err(|_| anyhow!("executor worker {} is gone", w))?;
+        rx.recv()
+            .map_err(|_| anyhow!("executor worker {} died during {:?}", w, cmd))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Drop a session's run without touching its record (stop/orphan).
+    /// Synchronous, so a re-submit (checkpoint recovery) can never race
+    /// the old run. A session the pool does not own is a no-op.
+    pub fn detach(&self, id: &str) {
+        let w = match self.routes.lock().unwrap().remove(id) {
+            Some(w) => w,
+            None => return,
+        };
+        let (reply, rx) = channel();
+        if self.workers[w].tx.send(WorkerMsg::Detach { id: id.to_string(), reply }).is_ok() {
+            let _ = rx.recv();
+        }
+    }
+
+    /// Advance every live `Running` session by up to `chunk` steps.
+    /// Workers step their sessions concurrently; this returns once all
+    /// workers report, with one outcome per owned session. Sessions
+    /// that completed or failed are already dropped from the pool.
+    pub fn step_round(&self, chunk: u64) -> Vec<(String, SessionOutcome)> {
+        let mut pending = Vec::with_capacity(self.workers.len());
+        for w in &self.workers {
+            let (reply, rx) = channel();
+            if w.tx.send(WorkerMsg::StepRound { chunk, reply }).is_ok() {
+                pending.push(rx);
+            }
+        }
+        let mut out = Vec::new();
+        for rx in pending {
+            if let Ok(mut v) = rx.recv() {
+                out.append(&mut v);
+            }
+        }
+        let mut routes = self.routes.lock().unwrap();
+        for (id, oc) in &out {
+            if matches!(oc, SessionOutcome::Completed | SessionOutcome::Failed(_)) {
+                routes.remove(id);
+            }
+        }
+        out
+    }
+
+    /// Step a specific set of sessions, each by its own budget, in
+    /// parallel across their owning workers. Returns one result per
+    /// input id, in input order.
+    pub fn step_many(&self, work: &[(String, u64)]) -> Vec<(String, Result<SessionOutcome, String>)> {
+        let mut pending = Vec::with_capacity(work.len());
+        for (id, steps) in work {
+            let Some(w) = self.owner_of(id) else {
+                pending.push((id.clone(), Err(format!("session {} is not active", id))));
+                continue;
+            };
+            let (reply, rx) = channel();
+            match self.workers[w].tx.send(WorkerMsg::StepSession {
+                id: id.clone(),
+                steps: *steps,
+                reply,
+            }) {
+                Ok(()) => pending.push((id.clone(), Ok(rx))),
+                Err(_) => pending.push((id.clone(), Err(format!("executor worker {} is gone", w)))),
+            }
+        }
+        let mut out = Vec::with_capacity(pending.len());
+        for (id, slot) in pending {
+            let res = match slot {
+                Ok(rx) => match rx.recv() {
+                    Ok(r) => r,
+                    Err(_) => Err("executor worker died mid-step".to_string()),
+                },
+                Err(e) => Err(e),
+            };
+            if !matches!(res, Ok(SessionOutcome::Progressed) | Ok(SessionOutcome::Skipped)) {
+                // Completed or failed: the worker dropped the run.
+                self.routes.lock().unwrap().remove(&id);
+            }
+            out.push((id, res));
+        }
+        out
+    }
+
+    /// Held-out evaluation of a live session: (loss, metric).
+    pub fn evaluate(&self, id: &str, eval_seed: u64) -> Result<(f64, f64)> {
+        let w = self.owner_of(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        let (reply, rx) = channel();
+        self.workers[w]
+            .tx
+            .send(WorkerMsg::Evaluate { id: id.to_string(), eval_seed, reply })
+            .map_err(|_| anyhow!("executor worker {} is gone", w))?;
+        rx.recv()
+            .map_err(|_| anyhow!("executor worker {} died during evaluate", w))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Checkpoint a live session now; returns the checkpoint record.
+    pub fn checkpoint(&self, id: &str) -> Result<Checkpoint> {
+        let w = self.owner_of(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        let (reply, rx) = channel();
+        self.workers[w]
+            .tx
+            .send(WorkerMsg::Checkpoint { id: id.to_string(), reply })
+            .map_err(|_| anyhow!("executor worker {} is gone", w))?;
+        rx.recv()
+            .map_err(|_| anyhow!("executor worker {} died during checkpoint", w))?
+            .map_err(|e| anyhow!(e))
+    }
+
+    /// Peek at a live run's current step/lr (None if not pool-owned).
+    pub fn inspect(&self, id: &str) -> Option<SessionProbe> {
+        let w = self.owner_of(id)?;
+        let (reply, rx) = channel();
+        self.workers[w].tx.send(WorkerMsg::Inspect { id: id.to_string(), reply }).ok()?;
+        rx.recv().ok()?
+    }
+}
+
+impl Drop for ExecutorPool {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(WorkerMsg::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(t) = w.thread.take() {
+                let _ = t.join();
+            }
+        }
+    }
+}

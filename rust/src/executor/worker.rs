@@ -1,0 +1,263 @@
+//! The worker side of the pool: one OS thread that owns live
+//! [`SessionRun`]s and the thread-local PJRT engine that executes them.
+//!
+//! Everything that crosses the thread boundary — [`WorkerMsg`] and its
+//! replies — is `Send` plain data (specs, command enums, checkpoint
+//! metadata, outcome reports). The non-`Send` execution state (the
+//! `xla` client, compiled executables, live model parameters, data
+//! generators) is constructed *inside* the worker thread on first use
+//! and never leaves it. That is what makes the session-execution path
+//! safe to parallelize without making the PJRT types themselves
+//! thread-safe.
+
+use crate::data::generator_for;
+use crate::events::EventLog;
+use crate::runtime::Engine;
+use crate::session::{RunStatus, SessionRun, SessionSpec, SessionState, SessionStore};
+use crate::storage::{Checkpoint, CheckpointStore};
+use crate::util::clock::SharedClock;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
+
+/// Everything a worker needs to build and drive sessions. All fields
+/// are `Send + Sync` handles onto the platform's shared control state
+/// (stores are `Arc<Mutex<..>>` inside); the engine is *not* here — each
+/// worker creates its own from `artifacts_dir`.
+#[derive(Clone)]
+pub struct WorkerCtx {
+    pub artifacts_dir: PathBuf,
+    pub checkpoints: CheckpointStore,
+    pub sessions: SessionStore,
+    pub events: EventLog,
+    pub clock: SharedClock,
+}
+
+/// A control-plane command routed to the worker that owns a session
+/// (the §3.3 pause/resume/edit verbs, executed inside the pool).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SessionCommand {
+    /// Checkpoint and mark paused.
+    Pause,
+    /// Apply an optional new learning rate; the facade flips the
+    /// session record back to `Running` afterwards.
+    Resume { lr: Option<f64> },
+    /// Edit the learning rate mid-training.
+    SetLr(f64),
+    /// Rewind to an earlier checkpointed step.
+    Rewind(u64),
+}
+
+/// What happened to one session during a step round.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum SessionOutcome {
+    /// Stepped, more work remains.
+    Progressed,
+    /// Reached `total_steps`; the run has been dropped from the worker.
+    Completed,
+    /// Training errored (e.g. non-finite loss); run dropped.
+    Failed(String),
+    /// Not in `Running` state (paused/stopped externally); untouched.
+    Skipped,
+}
+
+/// A snapshot of a live run's in-worker state (tests and the CLI peek
+/// at the effective lr after an in-training edit).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct SessionProbe {
+    pub steps_done: u64,
+    pub lr: f32,
+}
+
+/// The worker mailbox vocabulary. Every request that needs an answer
+/// carries its own reply channel, so the pool can fan a message out to
+/// many workers and collect replies without blocking the workers on
+/// each other.
+pub(super) enum WorkerMsg {
+    /// Construct a run (fresh or checkpoint-resume) for `spec`.
+    Spawn { spec: SessionSpec, resume: bool, reply: Sender<Result<(), String>> },
+    /// Apply a session-control command to an owned run.
+    Control { id: String, cmd: SessionCommand, reply: Sender<Result<(), String>> },
+    /// Step every owned `Running` session by up to `chunk` steps.
+    StepRound { chunk: u64, reply: Sender<Vec<(String, SessionOutcome)>> },
+    /// Step one owned session by up to `steps` (automl trial driving).
+    StepSession { id: String, steps: u64, reply: Sender<Result<SessionOutcome, String>> },
+    /// Evaluate an owned run on a held-out batch; replies (loss, metric).
+    Evaluate { id: String, eval_seed: u64, reply: Sender<Result<(f64, f64), String>> },
+    /// Checkpoint an owned run now; replies with the checkpoint record.
+    Checkpoint { id: String, reply: Sender<Result<Checkpoint, String>> },
+    /// Peek at a run's current step/lr.
+    Inspect { id: String, reply: Sender<Option<SessionProbe>> },
+    /// Drop a run without touching its session record (stop/orphan).
+    Detach { id: String, reply: Sender<()> },
+    /// Exit the worker loop.
+    Shutdown,
+}
+
+/// The worker thread body: a mailbox loop over owned runs.
+pub(super) fn worker_loop(index: usize, ctx: WorkerCtx, rx: Receiver<WorkerMsg>) {
+    // The engine (PJRT client + compile cache) is created lazily so
+    // idle workers cost nothing but a parked thread.
+    let mut engine: Option<Arc<Engine>> = None;
+    let mut runs: BTreeMap<String, SessionRun> = BTreeMap::new();
+    while let Ok(msg) = rx.recv() {
+        match msg {
+            WorkerMsg::Spawn { spec, resume, reply } => {
+                let res = spawn_run(index, &ctx, &mut engine, &mut runs, spec, resume);
+                let _ = reply.send(res);
+            }
+            WorkerMsg::Control { id, cmd, reply } => {
+                let res = match runs.get_mut(&id) {
+                    None => Err(format!("session {} is not active", id)),
+                    Some(run) => apply_command(run, cmd),
+                };
+                let _ = reply.send(res);
+            }
+            WorkerMsg::StepRound { chunk, reply } => {
+                let mut out = Vec::new();
+                let ids: Vec<String> = runs.keys().cloned().collect();
+                for id in ids {
+                    // Skip sessions whose state got externally flipped
+                    // (paused/stopped) since the last round.
+                    if ctx.sessions.get(&id).map(|r| r.state) != Some(SessionState::Running) {
+                        out.push((id, SessionOutcome::Skipped));
+                        continue;
+                    }
+                    let run = runs.get_mut(&id).expect("run for listed id");
+                    match run.step_chunk(chunk) {
+                        Ok(RunStatus::InProgress) => out.push((id, SessionOutcome::Progressed)),
+                        Ok(RunStatus::Completed) => {
+                            runs.remove(&id);
+                            out.push((id, SessionOutcome::Completed));
+                        }
+                        Err(e) => {
+                            runs.remove(&id);
+                            out.push((id, SessionOutcome::Failed(format!("{:#}", e))));
+                        }
+                    }
+                }
+                let _ = reply.send(out);
+            }
+            WorkerMsg::StepSession { id, steps, reply } => {
+                let res = match runs.get_mut(&id) {
+                    None => Err(format!("session {} is not active", id)),
+                    Some(run) => match run.step_chunk(steps) {
+                        Ok(RunStatus::InProgress) => Ok(SessionOutcome::Progressed),
+                        Ok(RunStatus::Completed) => {
+                            runs.remove(&id);
+                            Ok(SessionOutcome::Completed)
+                        }
+                        Err(e) => {
+                            runs.remove(&id);
+                            Err(format!("{:#}", e))
+                        }
+                    },
+                };
+                let _ = reply.send(res);
+            }
+            WorkerMsg::Evaluate { id, eval_seed, reply } => {
+                let res = match runs.get_mut(&id) {
+                    None => Err(format!("session {} is not active", id)),
+                    Some(run) => evaluate_held_out(run, eval_seed),
+                };
+                let _ = reply.send(res);
+            }
+            WorkerMsg::Checkpoint { id, reply } => {
+                let res = match runs.get_mut(&id) {
+                    None => Err(format!("session {} is not active", id)),
+                    Some(run) => run.checkpoint().map_err(|e| format!("{:#}", e)),
+                };
+                let _ = reply.send(res);
+            }
+            WorkerMsg::Inspect { id, reply } => {
+                let probe = runs
+                    .get(&id)
+                    .map(|run| SessionProbe { steps_done: run.steps_done(), lr: run.lr() });
+                let _ = reply.send(probe);
+            }
+            WorkerMsg::Detach { id, reply } => {
+                runs.remove(&id);
+                let _ = reply.send(());
+            }
+            WorkerMsg::Shutdown => break,
+        }
+    }
+}
+
+fn spawn_run(
+    index: usize,
+    ctx: &WorkerCtx,
+    engine: &mut Option<Arc<Engine>>,
+    runs: &mut BTreeMap<String, SessionRun>,
+    spec: SessionSpec,
+    resume: bool,
+) -> Result<(), String> {
+    if engine.is_none() {
+        let e = Engine::new(&ctx.artifacts_dir)
+            .map_err(|e| format!("worker {}: engine init: {:#}", index, e))?;
+        ctx.events.debug(
+            "executor",
+            "",
+            format!("worker {} engine up ({})", index, e.platform_name()),
+        );
+        *engine = Some(Arc::new(e));
+    }
+    let engine = engine.as_ref().expect("engine just initialized").clone();
+    let gen = generator_for(&spec.model, spec.seed)
+        .ok_or_else(|| format!("no data generator for model {}", spec.model))?;
+    let id = spec.id.clone();
+    let run = if resume {
+        SessionRun::resume(
+            engine,
+            spec,
+            gen,
+            ctx.checkpoints.clone(),
+            ctx.sessions.clone(),
+            ctx.events.clone(),
+            ctx.clock.clone(),
+        )
+    } else {
+        SessionRun::start(
+            engine,
+            spec,
+            gen,
+            ctx.checkpoints.clone(),
+            ctx.sessions.clone(),
+            ctx.events.clone(),
+            ctx.clock.clone(),
+        )
+    }
+    .map_err(|e| format!("{:#}", e))?;
+    runs.insert(id, run);
+    Ok(())
+}
+
+fn apply_command(run: &mut SessionRun, cmd: SessionCommand) -> Result<(), String> {
+    match cmd {
+        SessionCommand::Pause => run.pause().map(|_| ()).map_err(|e| format!("{:#}", e)),
+        SessionCommand::Resume { lr } => {
+            if let Some(lr) = lr {
+                run.set_lr(lr);
+            }
+            Ok(())
+        }
+        SessionCommand::SetLr(lr) => {
+            run.set_lr(lr);
+            Ok(())
+        }
+        SessionCommand::Rewind(step) => run.rewind_to(step).map_err(|e| format!("{:#}", e)),
+    }
+}
+
+/// Score a run on a held-out batch drawn from a fixed eval seed (the
+/// automl "current loss" probe; mirrors the pre-pool trial runner).
+fn evaluate_held_out(run: &mut SessionRun, eval_seed: u64) -> Result<(f64, f64), String> {
+    let mut gen = generator_for(&run.spec.model, eval_seed)
+        .ok_or_else(|| format!("no data generator for model {}", run.spec.model))?;
+    let batch = gen.eval_batch(run.model().manifest().batch);
+    run.model()
+        .evaluate(&batch)
+        .map(|(loss, metric)| (loss as f64, metric as f64))
+        .map_err(|e| format!("{:#}", e))
+}

@@ -8,7 +8,8 @@
 //!   containerized execution substrate with image reuse and shared
 //!   dataset mounts, a content-addressed object store, training-session
 //!   management with pause/resume and in-training hyperparameter edits,
-//!   a per-dataset leaderboard, AutoML search, a CLI, and a web UI.
+//!   a parallel session-execution worker pool ([`executor`]), a
+//!   per-dataset leaderboard, AutoML search, a CLI, and a web UI.
 //! * **Layer 2** — the four alpha-test models (MNIST MLP, emotion CNN,
 //!   movie-rating RNN, face GAN) written in JAX and AOT-lowered to HLO
 //!   text at build time (`python/compile/`).
@@ -30,6 +31,7 @@ pub mod storage;
 pub mod runtime;
 pub mod data;
 pub mod session;
+pub mod executor;
 pub mod leaderboard;
 pub mod automl;
 pub mod api;

@@ -2,10 +2,9 @@
 
 use super::manifest::Manifest;
 use anyhow::{Context, Result};
-use std::cell::RefCell;
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 /// Compile statistics (exposed in `nsml cluster` / benches).
@@ -16,14 +15,18 @@ pub struct CompileStats {
     pub compile_ms_total: f64,
 }
 
-/// One process-wide PJRT client + cache of compiled executables, keyed by
-/// artifact path. Single-threaded by design (see module docs): the
-/// platform funnels model execution through the session runner.
+/// One PJRT client + cache of compiled executables, keyed by artifact
+/// path. The underlying `xla` types are not `Send`, so an engine never
+/// crosses threads: each executor worker builds its own (thread-local)
+/// engine, and model execution funnels through the session runner that
+/// owns it. The interior cache/stats use a `Mutex` purely so shared
+/// `Arc<Engine>` handles on one thread (runner + trial evaluator) can
+/// borrow concurrently without `RefCell` panics.
 pub struct Engine {
     client: xla::PjRtClient,
     manifest: Manifest,
-    cache: RefCell<BTreeMap<String, Rc<xla::PjRtLoadedExecutable>>>,
-    stats: RefCell<CompileStats>,
+    cache: Mutex<BTreeMap<String, Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<CompileStats>,
 }
 
 impl Engine {
@@ -34,8 +37,8 @@ impl Engine {
         Ok(Engine {
             client,
             manifest,
-            cache: RefCell::new(BTreeMap::new()),
-            stats: RefCell::new(CompileStats::default()),
+            cache: Mutex::new(BTreeMap::new()),
+            stats: Mutex::new(CompileStats::default()),
         })
     }
 
@@ -48,24 +51,24 @@ impl Engine {
     }
 
     /// Load + compile (or fetch cached) the executable for a model entry.
-    pub fn executable(&self, model: &str, entry: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+    pub fn executable(&self, model: &str, entry: &str) -> Result<Arc<xla::PjRtLoadedExecutable>> {
         let path = self.manifest.artifact_path(model, entry)?;
         let key = path.to_string_lossy().to_string();
-        if let Some(exe) = self.cache.borrow().get(&key) {
-            self.stats.borrow_mut().cache_hits += 1;
+        if let Some(exe) = self.cache.lock().unwrap().get(&key) {
+            self.stats.lock().unwrap().cache_hits += 1;
             return Ok(exe.clone());
         }
         let t0 = Instant::now();
         let proto = xla::HloModuleProto::from_text_file(&key)
             .with_context(|| format!("parsing HLO text {}", key))?;
         let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = Rc::new(self.client.compile(&comp).with_context(|| format!("compiling {}", key))?);
+        let exe = Arc::new(self.client.compile(&comp).with_context(|| format!("compiling {}", key))?);
         {
-            let mut s = self.stats.borrow_mut();
+            let mut s = self.stats.lock().unwrap();
             s.compiles += 1;
             s.compile_ms_total += t0.elapsed().as_secs_f64() * 1000.0;
         }
-        self.cache.borrow_mut().insert(key, exe.clone());
+        self.cache.lock().unwrap().insert(key, exe.clone());
         Ok(exe)
     }
 
@@ -89,7 +92,7 @@ impl Engine {
     }
 
     pub fn stats(&self) -> CompileStats {
-        *self.stats.borrow()
+        *self.stats.lock().unwrap()
     }
 }
 

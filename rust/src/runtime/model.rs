@@ -9,12 +9,12 @@ use super::engine::Engine;
 use super::manifest::ModelManifest;
 use super::tensor::{Batch, TensorData};
 use anyhow::{anyhow, Result};
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// A model instance bound to an engine, holding its parameters host-side
 /// between steps.
 pub struct TrainableModel {
-    engine: Rc<Engine>,
+    engine: Arc<Engine>,
     manifest: ModelManifest,
     params: Vec<xla::Literal>,
     pub steps_taken: u64,
@@ -22,7 +22,7 @@ pub struct TrainableModel {
 
 impl TrainableModel {
     /// Create with parameters from the AOT `init(seed)` executable.
-    pub fn init(engine: Rc<Engine>, model: &str, seed: i32) -> Result<TrainableModel> {
+    pub fn init(engine: Arc<Engine>, model: &str, seed: i32) -> Result<TrainableModel> {
         let manifest = engine.manifest().model(model)?.clone();
         let params = engine.run(model, "init", &[xla::Literal::scalar(seed)])?;
         if params.len() != manifest.param_shapes.len() {
@@ -36,7 +36,7 @@ impl TrainableModel {
     }
 
     /// Create with parameters restored from serialized checkpoint bytes.
-    pub fn from_checkpoint(engine: Rc<Engine>, model: &str, bytes: &[u8]) -> Result<TrainableModel> {
+    pub fn from_checkpoint(engine: Arc<Engine>, model: &str, bytes: &[u8]) -> Result<TrainableModel> {
         let manifest = engine.manifest().model(model)?.clone();
         let params = deserialize_params(bytes, &manifest.param_shapes)?;
         Ok(TrainableModel { engine, manifest, params, steps_taken: 0 })
@@ -208,9 +208,9 @@ mod tests {
     use super::*;
     use std::path::PathBuf;
 
-    fn engine() -> Option<Rc<Engine>> {
+    fn engine() -> Option<Arc<Engine>> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json").exists().then(|| Rc::new(Engine::new(&dir).unwrap()))
+        dir.join("manifest.json").exists().then(|| Arc::new(Engine::new(&dir).unwrap()))
     }
 
     fn mnist_batch(seed: u64, m: &ModelManifest) -> Batch {

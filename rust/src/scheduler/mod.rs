@@ -37,6 +37,9 @@ pub enum Priority {
 }
 
 impl Priority {
+    /// Parse a wire-format priority (inherent, not `FromStr`: parsing is
+    /// total here — unknown strings fall back to `Normal`).
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Priority {
         match s {
             "low" => Priority::Low,

@@ -44,6 +44,7 @@ impl SessionState {
     }
 
     /// Inverse of [`SessionState::as_str`] (wire-format deserialization).
+    #[allow(clippy::should_implement_trait)]
     pub fn from_str(s: &str) -> Option<SessionState> {
         match s {
             "queued" => Some(SessionState::Queued),

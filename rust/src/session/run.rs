@@ -10,7 +10,7 @@ use crate::storage::{Checkpoint, CheckpointStore};
 use crate::util::clock::SharedClock;
 use anyhow::{anyhow, Result};
 use std::collections::BTreeMap;
-use std::rc::Rc;
+use std::sync::Arc;
 
 /// Result of driving a session chunk.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,7 +40,7 @@ pub struct SessionRun {
 impl SessionRun {
     /// Start fresh: init params from the session seed.
     pub fn start(
-        engine: Rc<Engine>,
+        engine: Arc<Engine>,
         spec: SessionSpec,
         gen: Box<dyn DataGen>,
         ckpts: CheckpointStore,
@@ -71,7 +71,7 @@ impl SessionRun {
     /// Resume a paused/killed session from its latest checkpoint
     /// (the §3.3 "download a model from storage container and resume").
     pub fn resume(
-        engine: Rc<Engine>,
+        engine: Arc<Engine>,
         spec: SessionSpec,
         gen: Box<dyn DataGen>,
         ckpts: CheckpointStore,
@@ -280,9 +280,9 @@ mod tests {
     use crate::util::clock::sim_clock;
     use std::path::PathBuf;
 
-    fn engine() -> Option<Rc<Engine>> {
+    fn engine() -> Option<Arc<Engine>> {
         let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
-        dir.join("manifest.json").exists().then(|| Rc::new(Engine::new(&dir).unwrap()))
+        dir.join("manifest.json").exists().then(|| Arc::new(Engine::new(&dir).unwrap()))
     }
 
     fn setup(spec: &SessionSpec) -> (CheckpointStore, SessionStore, EventLog, SharedClock) {

@@ -9,6 +9,16 @@ use super::stats;
 use super::table::{fms, Table};
 use std::time::Instant;
 
+/// True when the process runs in smoke mode (`BENCH_SMOKE=1` or a
+/// `--smoke` argv flag): CI builds every bench and executes it with a
+/// tiny iteration count purely to catch bit-rot. Benches should use
+/// this to shrink their workloads (fewer sessions, fewer steps) and to
+/// skip performance assertions that only hold at full scale.
+pub fn smoke() -> bool {
+    std::env::var("BENCH_SMOKE").map(|v| v != "0").unwrap_or(false)
+        || std::env::args().any(|a| a == "--smoke")
+}
+
 /// One measured benchmark result.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
@@ -43,12 +53,20 @@ pub struct Bench {
 
 impl Bench {
     pub fn new(suite: &str) -> Bench {
-        // NSML_BENCH_FAST=1 shrinks sampling for CI-style smoke runs.
+        // NSML_BENCH_FAST=1 shrinks sampling; BENCH_SMOKE / --smoke
+        // shrinks harder (the CI bit-rot gate runs 1 warmup + 2 samples).
         let fast = std::env::var("NSML_BENCH_FAST").is_ok();
+        let smoke = smoke();
         Bench {
             suite: suite.to_string(),
-            warmup_iters: if fast { 1 } else { 3 },
-            sample_count: if fast { 5 } else { 15 },
+            warmup_iters: if fast || smoke { 1 } else { 3 },
+            sample_count: if smoke {
+                2
+            } else if fast {
+                5
+            } else {
+                15
+            },
             results: Vec::new(),
         }
     }
@@ -194,6 +212,18 @@ mod tests {
         assert!(rep.contains("spin"));
         assert!(b.result("spin").unwrap().throughput().unwrap() > 0.0);
         assert!(rep.contains("faster") || rep.contains("slower"));
+    }
+
+    #[test]
+    fn smoke_mode_shrinks_sampling() {
+        std::env::set_var("BENCH_SMOKE", "1");
+        assert!(smoke());
+        let b = Bench::new("smoke-suite");
+        assert_eq!(b.sample_count, 2);
+        assert_eq!(b.warmup_iters, 1);
+        std::env::set_var("BENCH_SMOKE", "0");
+        assert!(!smoke());
+        std::env::remove_var("BENCH_SMOKE");
     }
 
     #[test]

@@ -25,6 +25,11 @@
 //! Path segments are percent-decoded before routing; unsupported methods
 //! get `405` with an `Allow` header. Routing logic is a pure function
 //! ([`handle`]) so tests exercise it without sockets.
+//!
+//! Mutations dispatched here land on the platform thread, which drives
+//! training through the [`crate::executor`] worker pool — a web `drive`
+//! request therefore advances every running session in parallel across
+//! the pool's workers before its reply comes back.
 
 use crate::api::{ApiError, ApiRequest, ApiResponse, ErrorCode, ServiceHandle};
 use crate::cluster::Cluster;

@@ -1,0 +1,242 @@
+//! Integration: the parallel session execution engine. Sessions train
+//! inside the worker pool; control verbs (pause / resume-with-new-lr /
+//! stop) and failure isolation work on pool-owned runs, both through
+//! the raw [`ExecutorPool`] API and through the platform facade.
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::cluster::NodeId;
+use nsml::events::EventLog;
+use nsml::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
+use nsml::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
+use nsml::storage::{CheckpointStore, ObjectStore};
+use nsml::util::clock::sim_clock;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    dir.join("manifest.json").exists().then_some(dir)
+}
+
+fn pool_ctx() -> Option<WorkerCtx> {
+    let dir = artifacts()?;
+    let (clock, _) = sim_clock();
+    Some(WorkerCtx {
+        artifacts_dir: dir,
+        checkpoints: CheckpointStore::new(ObjectStore::memory()),
+        sessions: SessionStore::new(),
+        events: EventLog::new(clock.clone()).with_echo(false),
+        clock,
+    })
+}
+
+fn platform(workers: usize) -> Option<NsmlPlatform> {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = artifacts()?;
+    cfg.workers = workers;
+    Some(NsmlPlatform::new(cfg).unwrap())
+}
+
+fn spec(id: &str, seed: u64, steps: u64) -> SessionSpec {
+    let mut s = SessionSpec::new(id, "pool", "mnist", "mnist_mlp");
+    s.total_steps = steps;
+    s.eval_every = steps / 2;
+    s.checkpoint_every = steps / 2;
+    s.seed = seed;
+    s
+}
+
+#[test]
+fn pool_trains_batch_concurrently_to_completion() {
+    let Some(ctx) = pool_ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pool = ExecutorPool::new(4, ctx.clone());
+    for i in 0..8u32 {
+        let sp = spec(&format!("pool/mnist/{}", i), i as u64, 24);
+        ctx.sessions.insert(SessionRecord::new(sp.clone(), 0));
+        pool.submit(sp, false, Some(NodeId(i))).unwrap();
+    }
+    assert_eq!(pool.len(), 8);
+    // Placement maps nodes onto all 4 workers.
+    let owners: std::collections::BTreeSet<usize> =
+        (0..8).filter_map(|i| pool.owner_of(&format!("pool/mnist/{}", i))).collect();
+    assert_eq!(owners.len(), 4, "{:?}", owners);
+
+    let mut done = 0;
+    let mut rounds = 0;
+    while done < 8 {
+        for (id, oc) in pool.step_round(12) {
+            match oc {
+                SessionOutcome::Completed => done += 1,
+                SessionOutcome::Failed(e) => panic!("{}: {}", id, e),
+                _ => {}
+            }
+        }
+        rounds += 1;
+        assert!(rounds < 100, "batch did not converge");
+    }
+    assert!(pool.is_empty());
+    for i in 0..8 {
+        let rec = ctx.sessions.get(&format!("pool/mnist/{}", i)).unwrap();
+        assert_eq!(rec.state, SessionState::Done, "{}", rec.spec.id);
+        assert_eq!(rec.steps_done, 24);
+        assert!(rec.metrics.series("train_loss").len() >= 24);
+    }
+}
+
+#[test]
+fn pause_lr_edit_resume_stop_inside_pool() {
+    let Some(ctx) = pool_ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pool = ExecutorPool::new(2, ctx.clone());
+    let a = spec("pool/mnist/a", 1, 60);
+    let b = spec("pool/mnist/b", 2, 60);
+    for sp in [&a, &b] {
+        ctx.sessions.insert(SessionRecord::new(sp.clone(), 0));
+        pool.submit(sp.clone(), false, None).unwrap();
+    }
+    pool.step_round(20);
+
+    // Pause A mid-training: checkpoint written, state flipped.
+    pool.control(&a.id, SessionCommand::Pause).unwrap();
+    assert_eq!(ctx.sessions.get(&a.id).unwrap().state, SessionState::Paused);
+    assert!(!ctx.checkpoints.list(&a.id).is_empty());
+    let paused_at = pool.inspect(&a.id).unwrap().steps_done;
+
+    // A paused session is skipped by rounds; B keeps training.
+    let outcomes = pool.step_round(10);
+    let oc_a = outcomes.iter().find(|(id, _)| id == &a.id).unwrap();
+    assert_eq!(oc_a.1, SessionOutcome::Skipped);
+    assert_eq!(pool.inspect(&a.id).unwrap().steps_done, paused_at);
+    assert!(pool.inspect(&b.id).unwrap().steps_done > 20);
+
+    // Resume with an edited lr (§3.3 in-training tuning): the command
+    // lands on the owning worker; the new lr is live in the run.
+    pool.control(&a.id, SessionCommand::Resume { lr: Some(0.007) }).unwrap();
+    ctx.sessions.update(&a.id, |r| r.state = SessionState::Running);
+    let probe = pool.inspect(&a.id).unwrap();
+    assert!((probe.lr - 0.007).abs() < 1e-6, "lr {}", probe.lr);
+
+    // Train past the pause point, then rewind to its checkpoint — the
+    // §3.3 "reproduce past state" verb, routed through the mailbox.
+    pool.step_round(10);
+    assert!(pool.inspect(&a.id).unwrap().steps_done > paused_at);
+    pool.control(&a.id, SessionCommand::Rewind(paused_at)).unwrap();
+    assert_eq!(pool.inspect(&a.id).unwrap().steps_done, paused_at);
+    // Rewinding to a step that was never checkpointed fails cleanly.
+    assert!(pool.control(&a.id, SessionCommand::Rewind(paused_at + 1)).is_err());
+
+    // Stop B outright: detached from its worker, A unaffected.
+    pool.detach(&b.id);
+    assert!(pool.owner_of(&b.id).is_none());
+    assert!(pool.inspect(&b.id).is_none());
+
+    // A still trains to completion with the edited lr.
+    let mut done = false;
+    for _ in 0..20 {
+        if pool
+            .step_round(20)
+            .iter()
+            .any(|(id, oc)| id == &a.id && *oc == SessionOutcome::Completed)
+        {
+            done = true;
+            break;
+        }
+    }
+    assert!(done, "paused+resumed session never completed");
+    let rec = ctx.sessions.get(&a.id).unwrap();
+    assert_eq!(rec.state, SessionState::Done);
+    assert_eq!(rec.steps_done, 60);
+}
+
+#[test]
+fn bad_spec_fails_spawn_without_poisoning_pool() {
+    let Some(ctx) = pool_ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pool = ExecutorPool::new(2, ctx.clone());
+    // Unknown model: the worker rejects the spawn; the pool stays usable.
+    let mut bad = spec("pool/bad/1", 0, 10);
+    bad.model = "no-such-model".into();
+    assert!(pool.submit(bad, false, None).is_err());
+    assert!(pool.is_empty());
+
+    let good = spec("pool/good/1", 3, 10);
+    ctx.sessions.insert(SessionRecord::new(good.clone(), 0));
+    pool.submit(good.clone(), false, None).unwrap();
+    let mut completed = false;
+    for _ in 0..10 {
+        if pool
+            .step_round(10)
+            .iter()
+            .any(|(id, oc)| id == &good.id && *oc == SessionOutcome::Completed)
+        {
+            completed = true;
+            break;
+        }
+    }
+    assert!(completed);
+    assert_eq!(ctx.sessions.get(&good.id).unwrap().state, SessionState::Done);
+}
+
+#[test]
+fn facade_session_control_rides_the_pool() {
+    let Some(p) = platform(4) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    assert_eq!(p.executor().worker_count(), 4);
+    let opts = RunOpts { total_steps: 60, eval_every: 20, checkpoint_every: 20, ..Default::default() };
+    let a = p.run("kim", "mnist", opts.clone()).unwrap();
+    let b = p.run("kim", "mnist", RunOpts { seed: 1, ..opts }).unwrap();
+    p.drive(20).unwrap();
+
+    // Pause + resume with a new lr through the facade.
+    p.pause(&a).unwrap();
+    assert_eq!(p.sessions.get(&a).unwrap().state, SessionState::Paused);
+    p.resume(&a, Some(0.02)).unwrap();
+    assert_eq!(p.sessions.get(&a).unwrap().state, SessionState::Running);
+    assert!((p.executor().inspect(&a).unwrap().lr - 0.02).abs() < 1e-6);
+
+    // Stop B mid-run; A still completes.
+    p.stop(&b).unwrap();
+    assert_eq!(p.sessions.get(&b).unwrap().state, SessionState::Stopped);
+    p.run_to_completion(20, 1_000).unwrap();
+    let rec = p.sessions.get(&a).unwrap();
+    assert_eq!(rec.state, SessionState::Done);
+    assert_eq!(rec.steps_done, 60);
+    // Pausing a terminal session is a failed precondition.
+    assert!(p.pause(&a).is_err());
+}
+
+#[test]
+fn eight_sessions_complete_across_four_workers_via_facade() {
+    let Some(p) = platform(4) else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let mut ids = Vec::new();
+    for i in 0..8 {
+        let opts = RunOpts {
+            total_steps: 16,
+            eval_every: 8,
+            checkpoint_every: 8,
+            seed: i,
+            ..Default::default()
+        };
+        ids.push(p.run("batch", "mnist", opts).unwrap());
+    }
+    p.run_to_completion(8, 10_000).unwrap();
+    for id in &ids {
+        assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
+    }
+    // All resources released once the pool drained.
+    assert!(p.executor().is_empty());
+    assert!(p.containers.running().is_empty());
+    let (total, free) = p.cluster.gpu_totals();
+    assert_eq!(total, free);
+}

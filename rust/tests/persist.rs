@@ -1,0 +1,130 @@
+//! Coverage for `api::persist`: state round-trips (sessions with
+//! metrics and paused state, checkpoints, leaderboard) and rejection of
+//! malformed state files. Pure-logic — no artifacts needed.
+
+use nsml::api::persist::{load, save};
+use nsml::leaderboard::{Leaderboard, Submission};
+use nsml::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
+use nsml::storage::{CheckpointStore, ObjectStore};
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nsml-persist-it-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fresh_stores() -> (SessionStore, Leaderboard, CheckpointStore) {
+    let lb = Leaderboard::new();
+    lb.ensure_board("mnist", "accuracy", false);
+    (SessionStore::new(), lb, CheckpointStore::new(ObjectStore::memory()))
+}
+
+#[test]
+fn populated_paused_session_round_trips() {
+    let dir = tmp_dir("paused");
+    let (sessions, lb, ckpts) = fresh_stores();
+
+    // A mid-flight paused session with a full metric history — the
+    // §3.3 "pause, edit, resume later" shape that must survive a
+    // platform restart.
+    let mut spec = SessionSpec::new("lee/mnist/7", "lee", "mnist", "mnist_mlp");
+    spec.lr = 0.03;
+    spec.seed = 11;
+    spec.total_steps = 200;
+    spec.checkpoint_every = 25;
+    spec.eval_every = 10;
+    let mut rec = SessionRecord::new(spec, 1_000);
+    rec.state = SessionState::Paused;
+    rec.steps_done = 75;
+    rec.best_metric = Some(0.81);
+    rec.recoveries = 1;
+    for step in (10..=70).step_by(10) {
+        rec.metrics.log(step, "train_loss", 2.0 / step as f64);
+        rec.metrics.log(step, "accuracy", step as f64 / 100.0);
+    }
+    sessions.insert(rec);
+
+    // Two checkpoints: the periodic one and the pause checkpoint.
+    let mut hp = BTreeMap::new();
+    hp.insert("lr".to_string(), 0.03);
+    hp.insert("seed".to_string(), 11.0);
+    ckpts.save("lee/mnist/7", 50, 0.4, &hp, b"params-at-50", 2_000).unwrap();
+    ckpts.save("lee/mnist/7", 75, 0.3, &hp, b"params-at-75", 3_000).unwrap();
+
+    lb.submit(
+        "mnist",
+        Submission {
+            session: "lee/mnist/7".into(),
+            user: "lee".into(),
+            model: "mnist_mlp".into(),
+            metric_name: "accuracy".into(),
+            value: 0.81,
+            step: 70,
+            at_ms: 3_000,
+        },
+    );
+
+    save(&dir, &sessions, &lb, &ckpts).unwrap();
+
+    let (sessions2, lb2, ckpts2) = fresh_stores();
+    load(&dir, &sessions2, &lb2, &ckpts2).unwrap();
+
+    let r = sessions2.get("lee/mnist/7").unwrap();
+    assert_eq!(r.state, SessionState::Paused);
+    assert_eq!(r.steps_done, 75);
+    assert_eq!(r.best_metric, Some(0.81));
+    assert_eq!(r.recoveries, 1);
+    assert_eq!(r.spec.lr, 0.03);
+    assert_eq!(r.spec.seed, 11);
+    assert_eq!(r.spec.checkpoint_every, 25);
+    assert_eq!(r.metrics.series("train_loss").len(), 7);
+    assert_eq!(r.metrics.series("accuracy").len(), 7);
+
+    // Checkpoint index: both snapshots, pause checkpoint latest, with
+    // the hyperparameters needed for an lr-edit resume.
+    assert_eq!(ckpts2.list("lee/mnist/7").len(), 2);
+    let latest = ckpts2.latest("lee/mnist/7").unwrap();
+    assert_eq!(latest.step, 75);
+    assert_eq!(latest.hparams["lr"], 0.03);
+    assert_eq!(latest.hparams["seed"], 11.0);
+    assert!(ckpts2.at_step("lee/mnist/7", 50).is_some());
+
+    // Leaderboard survived.
+    assert_eq!(lb2.best("mnist").unwrap().value, 0.81);
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn malformed_state_json_is_rejected() {
+    let dir = tmp_dir("malformed");
+    std::fs::create_dir_all(&dir).unwrap();
+    std::fs::write(dir.join("state.json"), b"{ this is not json ").unwrap();
+
+    let (sessions, lb, ckpts) = fresh_stores();
+    let err = load(&dir, &sessions, &lb, &ckpts).unwrap_err();
+    assert!(err.to_string().contains("state.json"), "{}", err);
+    // Nothing was partially loaded.
+    assert!(sessions.is_empty());
+    assert!(ckpts.dump().is_empty());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn truncated_record_surfaces_an_error() {
+    let dir = tmp_dir("truncated");
+    std::fs::create_dir_all(&dir).unwrap();
+    // Valid JSON, but a session record without its spec.
+    std::fs::write(
+        dir.join("state.json"),
+        br#"{"format": 1, "sessions": [{"state": "done", "steps_done": 5}]}"#,
+    )
+    .unwrap();
+    let (sessions, lb, ckpts) = fresh_stores();
+    assert!(load(&dir, &sessions, &lb, &ckpts).is_err());
+
+    let _ = std::fs::remove_dir_all(&dir);
+}

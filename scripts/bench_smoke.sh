@@ -1,0 +1,34 @@
+#!/usr/bin/env bash
+# Bench bit-rot gate: compile every benches/bench_*.rs, then execute
+# each with a tiny iteration count (BENCH_SMOKE=1 → 1 warmup, 2 samples,
+# shrunken workloads, perf assertions skipped).
+#
+# Usage: bash scripts/bench_smoke.sh
+#
+# Benches that exercise the platform need the AOT artifacts
+# (rust/artifacts/manifest.json, built via `make artifacts`); when they
+# are absent we still build everything — catching signature/API rot —
+# and skip only the execution phase.
+set -euo pipefail
+
+cd "$(dirname "$0")/../rust"
+
+echo "== cargo build --benches =="
+cargo build --release --benches
+
+if [ ! -f artifacts/manifest.json ]; then
+  echo "artifacts not built (rust/artifacts/manifest.json missing):"
+  echo "benches compiled OK; skipping the execution phase"
+  exit 0
+fi
+
+status=0
+for bench in ../benches/bench_*.rs; do
+  name="$(basename "$bench" .rs)"
+  echo "== BENCH_SMOKE=1 cargo bench --bench $name =="
+  if ! BENCH_SMOKE=1 cargo bench --bench "$name"; then
+    echo "FAILED: $name"
+    status=1
+  fi
+done
+exit $status

@@ -16,6 +16,13 @@ cargo build --release
 echo "== cargo test -q =="
 cargo test -q
 
+echo "== cargo clippy --all-targets -- -D warnings =="
+if cargo clippy --version >/dev/null 2>&1; then
+    cargo clippy --all-targets -- -D warnings
+else
+    echo "clippy component not installed; skipping (CI runs it as its own job)"
+fi
+
 echo "== cargo fmt --check =="
 cargo fmt --check
 
