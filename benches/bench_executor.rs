@@ -1,7 +1,13 @@
-//! The executor headline: wall-clock for an 8-session training batch,
+//! The executor headlines: wall-clock for an 8-session training batch,
 //! serial (inline, one thread — the pre-pool platform behaviour) vs the
-//! worker pool at 1 and 4 workers. Acceptance bar: the 4-worker pool is
-//! ≥2× faster than serial on a ≥4-core machine.
+//! worker pool at 1 and 4 workers, plus the work-steal ablation — the
+//! same batch pinned to a single node (the skewed scheduler decision)
+//! with static `node % workers` routing vs stealing enabled.
+//!
+//! Acceptance bars on a ≥4-core machine:
+//!  * the 4-worker pool is ≥2× faster than serial, and
+//!  * work-steal is ≥1.5× faster than static routing when all 8
+//!    sessions land on one node (static serializes them on one worker).
 //!
 //! Run: `cargo bench --bench bench_executor`
 //! Smoke: `BENCH_SMOKE=1 cargo bench --bench bench_executor`
@@ -76,13 +82,20 @@ fn run_serial(ctx: &WorkerCtx, engine: &Arc<Engine>, tag: &str, steps: u64) {
     }
 }
 
-/// Pool run: submit the batch spread across workers, then drive fork-
-/// join step rounds until every session completes.
-fn run_pool(ctx: &WorkerCtx, pool: &ExecutorPool, tag: &str, steps: u64) {
+/// Pool run: submit the batch, then drive fork-join step rounds until
+/// every session completes. `node_of` maps session index → pinned node
+/// (spread for the headline, all-zero for the skewed scenario).
+fn run_pool(
+    ctx: &WorkerCtx,
+    pool: &ExecutorPool,
+    tag: &str,
+    steps: u64,
+    node_of: impl Fn(usize) -> u32,
+) {
     for i in 0..SESSIONS {
         let spec = spec(tag, i, steps);
         ctx.sessions.insert(SessionRecord::new(spec.clone(), 0));
-        pool.submit(spec, false, Some(NodeId(i as u32))).unwrap();
+        pool.submit(spec, false, Some(NodeId(node_of(i)))).unwrap();
     }
     let mut done = 0;
     while done < SESSIONS {
@@ -124,15 +137,31 @@ fn main() {
     let pool1 = ExecutorPool::new(1, pool1_ctx.clone());
     bench.run("pool x1 worker", || {
         tag += 1;
-        run_pool(&pool1_ctx, &pool1, &format!("p1-{}", tag), steps);
+        run_pool(&pool1_ctx, &pool1, &format!("p1-{}", tag), steps, |i| i as u32);
     });
 
-    // Pool with 4 workers: the headline.
+    // Pool with 4 workers, sessions spread over nodes: the headline.
     let pool4_ctx = ctx();
     let pool4 = ExecutorPool::new(4, pool4_ctx.clone());
     bench.run("pool x4 workers", || {
         tag += 1;
-        run_pool(&pool4_ctx, &pool4, &format!("p4-{}", tag), steps);
+        run_pool(&pool4_ctx, &pool4, &format!("p4-{}", tag), steps, |i| i as u32);
+    });
+
+    // Skewed load: the scheduler pinned every session to node 0. Static
+    // routing serializes the batch on worker 0; stealing rebalances it.
+    let static_ctx = ctx();
+    let static_pool = ExecutorPool::with_stealing(4, static_ctx.clone(), false);
+    bench.run("skewed x4 static routing", || {
+        tag += 1;
+        run_pool(&static_ctx, &static_pool, &format!("sk-static-{}", tag), steps, |_| 0);
+    });
+
+    let steal_ctx = ctx();
+    let steal_pool = ExecutorPool::with_stealing(4, steal_ctx.clone(), true);
+    bench.run("skewed x4 work-steal", || {
+        tag += 1;
+        run_pool(&steal_ctx, &steal_pool, &format!("sk-steal-{}", tag), steps, |_| 0);
     });
 
     bench.finish();
@@ -140,7 +169,10 @@ fn main() {
     let serial = bench.result(&format!("serial inline x{} sessions", SESSIONS)).unwrap().mean_ms();
     let p1 = bench.result("pool x1 worker").unwrap().mean_ms();
     let p4 = bench.result("pool x4 workers").unwrap().mean_ms();
+    let sk_static = bench.result("skewed x4 static routing").unwrap().mean_ms();
+    let sk_steal = bench.result("skewed x4 work-steal").unwrap().mean_ms();
     let speedup = serial / p4;
+    let steal_speedup = sk_static / sk_steal;
     println!(
         "speedup: pool x4 is {:.2}x vs serial ({:.1}ms -> {:.1}ms); pool x1 overhead {:.2}x",
         speedup,
@@ -148,10 +180,17 @@ fn main() {
         p4,
         p1 / serial,
     );
+    println!(
+        "work-steal: {:.2}x vs static routing on a skewed node ({:.1}ms -> {:.1}ms), {} steals",
+        steal_speedup,
+        sk_static,
+        sk_steal,
+        steal_pool.total_steals(),
+    );
     if smoke() {
-        println!("smoke mode: skipping the >=2x speedup assertion");
+        println!("smoke mode: skipping the speedup assertions");
     } else if cores < 4 {
-        println!("only {} cores: skipping the >=2x speedup assertion", cores);
+        println!("only {} cores: skipping the speedup assertions", cores);
     } else {
         assert!(
             speedup >= 2.0,
@@ -159,6 +198,13 @@ fn main() {
             SESSIONS,
             speedup
         );
-        println!("OK: >=2x speedup bar met");
+        assert!(
+            steal_speedup >= 1.5,
+            "expected work-steal >=1.5x over static routing for {} sessions pinned to one node, got {:.2}x",
+            SESSIONS,
+            steal_speedup
+        );
+        assert!(steal_pool.total_steals() > 0, "work-steal pool recorded no steals");
+        println!("OK: >=2x pool and >=1.5x work-steal bars met");
     }
 }

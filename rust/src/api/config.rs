@@ -28,6 +28,9 @@ pub struct PlatformConfig {
     pub seed: u64,
     /// Executor worker threads driving sessions in parallel.
     pub workers: usize,
+    /// Let idle executor workers steal pending sessions from loaded
+    /// peers (off = static `node % workers` routing).
+    pub work_steal: bool,
 }
 
 impl Default for PlatformConfig {
@@ -45,6 +48,7 @@ impl Default for PlatformConfig {
             system_user: "nsml".to_string(),
             seed: 0,
             workers: 4,
+            work_steal: true,
         }
     }
 }
@@ -93,6 +97,7 @@ impl PlatformConfig {
             system_user: cfg.str_or("platform", "system_user", &dflt.system_user),
             seed: cfg.int_or("platform", "seed", 0) as u64,
             workers: (cfg.int_or("executor", "workers", dflt.workers as i64).max(1)) as usize,
+            work_steal: cfg.bool_or("executor", "work_steal", dflt.work_steal),
         })
     }
 }
@@ -126,6 +131,7 @@ state_dir = "/tmp/nsml-state"
 seed = 9
 [executor]
 workers = 2
+work_steal = false
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -138,6 +144,7 @@ workers = 2
         assert_eq!(c.state_dir, Some(PathBuf::from("/tmp/nsml-state")));
         assert_eq!(c.seed, 9);
         assert_eq!(c.workers, 2);
+        assert!(!c.work_steal);
     }
 
     #[test]

@@ -30,10 +30,17 @@
 //! live runs and a thread-local PJRT engine, mirroring how each NSML ML
 //! container owns its GPUs while the master merely coordinates. The
 //! facade stays the single coordinator: `drive` fans a step budget out
-//! to every worker and joins on the outcomes, and session-control verbs
-//! are routed to the owning worker's mailbox. The channel-based
-//! [`ServiceHandle`] still carries dispatches from clients (like the web
-//! server) that cannot own the platform.
+//! to every worker and joins on the outcomes, idle workers steal
+//! pending sessions from loaded peers before stepping (configurable via
+//! `[executor] work_steal`), and session-control verbs are routed to
+//! the owning worker's mailbox — which re-homes when a session is
+//! stolen. Each drive round also records per-worker telemetry
+//! (busy-time, live sessions, queue depth, steals) into the
+//! [`UtilizationMonitor`](crate::cluster::UtilizationMonitor), surfaced
+//! by the `executor_status` verb, `nsml cluster` and
+//! `GET /api/v1/executor`. The channel-based [`ServiceHandle`] still
+//! carries dispatches from clients (like the web server) that cannot
+//! own the platform.
 
 mod config;
 pub mod persist;
@@ -45,8 +52,9 @@ pub use config::PlatformConfig;
 pub use service::{service_channel, PlatformService, ServiceCall, ServiceHandle};
 pub use trial::PlatformTrialRunner;
 pub use wire::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ErrorCode, NodeStatusView, RunParams,
-    SessionView, TrialSpec, ALL_KINDS, ALL_VERBS, API_VERSION,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ErrorCode, ExecutorStats,
+    NodeStatusView, RunParams, SessionView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS,
+    API_VERSION,
 };
 
 use crate::cluster::Cluster;
@@ -148,7 +156,7 @@ impl NsmlPlatform {
             format!("loading artifacts from {} (run `make artifacts`)", config.artifacts_dir.display())
         })?);
         let sessions = SessionStore::new();
-        let executor = Arc::new(ExecutorPool::new(
+        let executor = Arc::new(ExecutorPool::with_stealing(
             config.workers,
             WorkerCtx {
                 artifacts_dir: config.artifacts_dir.clone(),
@@ -157,6 +165,7 @@ impl NsmlPlatform {
                 events: events.clone(),
                 clock: clock.clone(),
             },
+            config.work_steal,
         ));
         let platform = NsmlPlatform {
             clock,
@@ -206,7 +215,11 @@ impl NsmlPlatform {
     /// searches run their trial sessions here so the main pool's step
     /// rounds never touch them.
     pub fn new_trial_pool(&self) -> Arc<ExecutorPool> {
-        Arc::new(ExecutorPool::new(self.config.workers, self.worker_ctx()))
+        Arc::new(ExecutorPool::with_stealing(
+            self.config.workers,
+            self.worker_ctx(),
+            self.config.work_steal,
+        ))
     }
 
     fn worker_ctx(&self) -> WorkerCtx {
@@ -329,10 +342,11 @@ impl NsmlPlatform {
                 SessionOutcome::Failed(e) => {
                     progressed += 1;
                     self.events.error("platform", &id, format!("session failed: {}", e));
-                    self.containers.stop_job(&id);
-                    for (job, node) in self.master.complete(&id) {
-                        self.prepare_and_start(&job.id, node)?;
-                    }
+                    // Training failures flip the record inside the run;
+                    // materialization failures (bad resume checkpoint,
+                    // engine init) reach here with it still non-terminal.
+                    self.sessions.mark_failed(&id, &e);
+                    self.release_and_backfill(&id)?;
                 }
             }
         }
@@ -342,8 +356,24 @@ impl NsmlPlatform {
             self.prepare_and_start(&job.id, node)?;
         }
 
-        // 5. Ops telemetry.
+        // 5. Ops telemetry: cluster-level sample + one per-worker
+        //    executor sample for this round.
         self.monitor.sample(&self.cluster, self.master.queue_len());
+        let now = self.clock.now_ms();
+        self.monitor.record_workers(
+            self.executor
+                .stats()
+                .iter()
+                .map(|s| crate::cluster::monitor::WorkerSample {
+                    at_ms: now,
+                    worker: s.worker,
+                    busy_ms: s.busy_ms,
+                    live_sessions: s.live_sessions,
+                    queue_depth: s.queue_depth,
+                    steals: s.steals,
+                })
+                .collect(),
+        );
         Ok(progressed)
     }
 
@@ -402,6 +432,14 @@ impl NsmlPlatform {
                 },
             );
         }
+        self.release_and_backfill(id)?;
+        Ok(())
+    }
+
+    /// The shared tail of every completion/failure path: tear down the
+    /// session's container, free its cluster allocation, and hand the
+    /// capacity to queued jobs.
+    fn release_and_backfill(&self, id: &str) -> Result<()> {
         self.containers.stop_job(id);
         for (job, node) in self.master.complete(id) {
             self.prepare_and_start(&job.id, node)?;
@@ -441,15 +479,32 @@ impl NsmlPlatform {
     /// Pause a running session (checkpoints first). The command is
     /// routed to the owning worker's mailbox and acked synchronously.
     pub fn pause(&self, id: &str) -> Result<()> {
-        self.executor.control(id, SessionCommand::Pause)
+        self.control_session(id, SessionCommand::Pause)
     }
 
     /// Resume a paused session, optionally with a new learning rate —
     /// the paper's in-training hyperparameter tuning.
     pub fn resume(&self, id: &str, new_lr: Option<f64>) -> Result<()> {
-        self.executor.control(id, SessionCommand::Resume { lr: new_lr })?;
+        self.control_session(id, SessionCommand::Resume { lr: new_lr })?;
         self.sessions.update(id, |r| r.state = SessionState::Running);
         Ok(())
+    }
+
+    /// Route a control command to the executor. A command addressed to
+    /// a still-pending session materializes it first; if that fails
+    /// terminally (record flipped to Failed), release the session's
+    /// cluster fallout exactly like a drive-round failure would —
+    /// otherwise its node allocation would leak.
+    fn control_session(&self, id: &str, cmd: SessionCommand) -> Result<()> {
+        let res = self.executor.control(id, cmd);
+        if res.is_err() && self.sessions.get(id).map(|r| r.state) == Some(SessionState::Failed) {
+            // Keep the caller's error primary, but a backfill placement
+            // that fails must not vanish silently.
+            if let Err(e) = self.release_and_backfill(id) {
+                self.events.error("platform", id, format!("backfill after failed control: {:#}", e));
+            }
+        }
+        res
     }
 
     /// Stop a session outright. Freed resources immediately go to queued
@@ -575,7 +630,12 @@ mod tests {
         let node = p.sessions.get(&id).unwrap().node.unwrap();
         p.kill_node(node);
         let rec = p.sessions.get(&id).unwrap();
-        assert!(rec.state == SessionState::Queued || rec.state == SessionState::Running);
+        // Requeued, or already re-placed (Preparing until the next
+        // round materializes the resumed run, Running after).
+        assert!(matches!(
+            rec.state,
+            SessionState::Queued | SessionState::Preparing | SessionState::Running
+        ));
         p.run_to_completion(20, 200).unwrap();
         let rec = p.sessions.get(&id).unwrap();
         assert_eq!(rec.state, SessionState::Done);

@@ -22,7 +22,8 @@
 //!   fan the work out across the executor pool before replying.
 
 use super::wire::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, NodeStatusView, SessionView,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ExecutorStats, NodeStatusView,
+    SessionView, WorkerStatView,
 };
 use super::{NsmlPlatform, RunOpts};
 use crate::cluster::NodeId;
@@ -183,6 +184,7 @@ impl PlatformService {
                 ApiResponse::Board { dataset, rows }
             }
             ApiRequest::ClusterStatus => ApiResponse::Cluster { cluster: self.cluster_view() },
+            ApiRequest::ExecutorStatus => ApiResponse::Executor { executor: self.executor_view() },
             ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
                 if trials.is_empty() {
                     return ApiResponse::Error {
@@ -312,6 +314,28 @@ impl PlatformService {
         }
     }
 
+    /// Executor-pool snapshot: per-worker load + steal telemetry (the
+    /// `nsml cluster` table and `GET /api/v1/executor`).
+    fn executor_view(&self) -> ExecutorStats {
+        let stats = self.platform.executor().stats();
+        ExecutorStats {
+            live_sessions: stats.iter().map(|s| s.live_sessions).sum(),
+            queue_depth: stats.iter().map(|s| s.queue_depth).sum(),
+            total_steals: stats.iter().map(|s| s.steals).sum(),
+            work_steal: self.platform.executor().stealing(),
+            workers: stats
+                .iter()
+                .map(|s| WorkerStatView {
+                    worker: s.worker,
+                    live_sessions: s.live_sessions,
+                    queue_depth: s.queue_depth,
+                    steals: s.steals,
+                    busy_ms: s.busy_ms,
+                })
+                .collect(),
+        }
+    }
+
     /// Audit mutations into the event log (queries stay silent; `drive`
     /// is logged at debug so pump loops don't flood the log).
     fn audit(&self, req: &ApiRequest) {
@@ -414,6 +438,21 @@ mod tests {
         let j = crate::util::json::parse(&ok).unwrap();
         assert_eq!(j.get("kind").unwrap().as_str(), Some("cluster"));
         assert_eq!(j.at(&["data", "cluster", "total_gpus"]).unwrap().as_i64(), Some(12));
+    }
+
+    #[test]
+    fn executor_status_reports_pool_shape() {
+        let Some(s) = service() else { return };
+        match s.dispatch(ApiRequest::ExecutorStatus) {
+            ApiResponse::Executor { executor } => {
+                assert_eq!(executor.workers.len(), s.platform().executor().worker_count());
+                assert!(executor.work_steal);
+                assert_eq!(executor.live_sessions, 0);
+                assert_eq!(executor.queue_depth, 0);
+                assert_eq!(executor.total_steals, 0);
+            }
+            other => panic!("{:?}", other),
+        }
     }
 
     #[test]

@@ -37,6 +37,7 @@ pub const ALL_VERBS: &[&str] = &[
     "get_session",
     "board",
     "cluster_status",
+    "executor_status",
     "submit_trial_batch",
 ];
 
@@ -51,6 +52,7 @@ pub const ALL_KINDS: &[&str] = &[
     "session",
     "board",
     "cluster",
+    "executor",
     "error",
 ];
 
@@ -307,6 +309,8 @@ pub enum ApiRequest {
     Board { dataset: String, limit: usize },
     /// Cluster + scheduler snapshot.
     ClusterStatus,
+    /// Executor-pool snapshot: per-worker load + steal telemetry.
+    ExecutorStatus,
     /// Place N hyperparameter trials in one dispatch (automl batching).
     SubmitTrialBatch { user: String, dataset: String, trials: Vec<TrialSpec> },
 }
@@ -326,6 +330,7 @@ impl ApiRequest {
             ApiRequest::GetSession { .. } => "get_session",
             ApiRequest::Board { .. } => "board",
             ApiRequest::ClusterStatus => "cluster_status",
+            ApiRequest::ExecutorStatus => "executor_status",
             ApiRequest::SubmitTrialBatch { .. } => "submit_trial_batch",
         }
     }
@@ -338,6 +343,7 @@ impl ApiRequest {
                 | ApiRequest::GetSession { .. }
                 | ApiRequest::Board { .. }
                 | ApiRequest::ClusterStatus
+                | ApiRequest::ExecutorStatus
                 | ApiRequest::Infer { .. }
         )
     }
@@ -369,7 +375,7 @@ impl ApiRequest {
             ApiRequest::KillNode { node } => {
                 args.set("node", (*node).into());
             }
-            ApiRequest::ListSessions | ApiRequest::ClusterStatus => {}
+            ApiRequest::ListSessions | ApiRequest::ClusterStatus | ApiRequest::ExecutorStatus => {}
             ApiRequest::Board { dataset, limit } => {
                 args.set("dataset", dataset.as_str().into()).set("limit", (*limit).into());
             }
@@ -428,6 +434,7 @@ impl ApiRequest {
                 limit: opt_u64(args, "limit")?.unwrap_or(100) as usize,
             }),
             "cluster_status" => Ok(ApiRequest::ClusterStatus),
+            "executor_status" => Ok(ApiRequest::ExecutorStatus),
             "submit_trial_batch" => {
                 let trials = need_arr(args, "trials")?
                     .iter()
@@ -642,6 +649,81 @@ impl ClusterView {
     }
 }
 
+/// One executor worker's telemetry row (work-steal observability).
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkerStatView {
+    pub worker: usize,
+    /// Live (materialized) sessions the worker owns.
+    pub live_sessions: usize,
+    /// Depth of the worker's pending deque.
+    pub queue_depth: usize,
+    /// Pending sessions stolen from peers since pool start.
+    pub steals: u64,
+    /// Cumulative wall-clock busy time, in milliseconds.
+    pub busy_ms: f64,
+}
+
+impl WorkerStatView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("worker", self.worker.into())
+            .set("live_sessions", self.live_sessions.into())
+            .set("queue_depth", self.queue_depth.into())
+            .set("steals", self.steals.into())
+            .set("busy_ms", self.busy_ms.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<WorkerStatView, ApiError> {
+        Ok(WorkerStatView {
+            worker: need_u64(j, "worker")? as usize,
+            live_sessions: need_u64(j, "live_sessions")? as usize,
+            queue_depth: need_u64(j, "queue_depth")? as usize,
+            steals: need_u64(j, "steals")?,
+            busy_ms: need_f64(j, "busy_ms")?,
+        })
+    }
+}
+
+/// Executor-pool snapshot: per-worker load plus pool-level totals.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ExecutorStats {
+    pub workers: Vec<WorkerStatView>,
+    /// Live sessions across all workers.
+    pub live_sessions: usize,
+    /// Pending (not yet materialized) sessions across all deques.
+    pub queue_depth: usize,
+    /// Total sessions stolen since pool start.
+    pub total_steals: u64,
+    /// Whether work stealing is enabled on the pool.
+    pub work_steal: bool,
+}
+
+impl ExecutorStats {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("workers", Json::Arr(self.workers.iter().map(|w| w.to_json()).collect()))
+            .set("live_sessions", self.live_sessions.into())
+            .set("queue_depth", self.queue_depth.into())
+            .set("total_steals", self.total_steals.into())
+            .set("work_steal", self.work_steal.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<ExecutorStats, ApiError> {
+        Ok(ExecutorStats {
+            workers: need_arr(j, "workers")?
+                .iter()
+                .map(WorkerStatView::from_json)
+                .collect::<Result<Vec<WorkerStatView>, ApiError>>()?,
+            live_sessions: need_u64(j, "live_sessions")? as usize,
+            queue_depth: need_u64(j, "queue_depth")? as usize,
+            total_steals: need_u64(j, "total_steals")?,
+            work_steal: need_bool(j, "work_steal")?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------
 // Responses
 // ---------------------------------------------------------------------
@@ -664,6 +746,7 @@ pub enum ApiResponse {
     Session { session: SessionView },
     Board { dataset: String, rows: Vec<BoardRow> },
     Cluster { cluster: ClusterView },
+    Executor { executor: ExecutorStats },
     Error { error: ApiError },
 }
 
@@ -679,6 +762,7 @@ impl ApiResponse {
             ApiResponse::Session { .. } => "session",
             ApiResponse::Board { .. } => "board",
             ApiResponse::Cluster { .. } => "cluster",
+            ApiResponse::Executor { .. } => "executor",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -727,6 +811,9 @@ impl ApiResponse {
             }
             ApiResponse::Cluster { cluster } => {
                 data.set("cluster", cluster.to_json());
+            }
+            ApiResponse::Executor { executor } => {
+                data.set("executor", executor.to_json());
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -778,6 +865,9 @@ impl ApiResponse {
                     .collect::<Result<Vec<BoardRow>, ApiError>>()?,
             }),
             "cluster" => Ok(ApiResponse::Cluster { cluster: ClusterView::from_json(need(data, "cluster")?)? }),
+            "executor" => Ok(ApiResponse::Executor {
+                executor: ExecutorStats::from_json(need(data, "executor")?)?,
+            }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
         }

@@ -435,6 +435,31 @@ pub fn cmd_cluster(args: &[String]) -> CmdResult {
         ]);
     }
     println!("{}", t.render());
+
+    // Executor-pool telemetry: per-worker load + steal counters.
+    let ex = match ok(service.dispatch(ApiRequest::ExecutorStatus))? {
+        ApiResponse::Executor { executor } => executor,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
+    println!(
+        "executor: {} workers (work_steal={}) | live {} | queued {} | steals {}",
+        ex.workers.len(),
+        ex.work_steal,
+        ex.live_sessions,
+        ex.queue_depth,
+        ex.total_steals,
+    );
+    let mut t = Table::new(&["WORKER", "BUSY", "LIVE", "QUEUE", "STEALS"]).right(&[1, 2, 3, 4]);
+    for w in &ex.workers {
+        t.row(&[
+            format!("w{}", w.worker),
+            fms(w.busy_ms),
+            format!("{}", w.live_sessions),
+            format!("{}", w.queue_depth),
+            format!("{}", w.steals),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }
 

@@ -1,9 +1,19 @@
 //! Utilization monitoring (§3.1: "Better computational resource
 //! management to improve utilization and job scheduling").
 //!
-//! Samples cluster utilization / queue depth / alive-node count over
-//! (virtual) time into a time series the CLI, web UI and benches can
-//! render — the ops view a platform team actually watches.
+//! Two time series feed the CLI, web UI and benches:
+//!
+//! * [`Sample`] — cluster-level utilization / free GPUs / queue depth /
+//!   alive-node count, recorded by the platform drive loop.
+//! * [`WorkerSample`] — per-executor-worker busy-time, live sessions,
+//!   pending-queue depth and steal count, recorded after every
+//!   fork-join step round from
+//!   [`ExecutorPool::stats`](crate::executor::ExecutorPool::stats).
+//!
+//! Together they are the ops view a platform team actually watches:
+//! the first shows *whether* the cluster is loaded, the second shows
+//! whether the executor spread that load evenly (and how much the
+//! work-stealer had to intervene).
 
 use super::Cluster;
 use crate::util::clock::Millis;
@@ -20,10 +30,31 @@ pub struct Sample {
     pub queue_depth: usize,
 }
 
+/// Retention cap for the per-worker series: old samples age out FIFO
+/// so a long-lived drive loop cannot grow the monitor without bound.
+const MAX_WORKER_SAMPLES: usize = 4096;
+
+/// One per-executor-worker sample (recorded each drive round).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerSample {
+    pub at_ms: Millis,
+    /// Worker index within the executor pool.
+    pub worker: usize,
+    /// Cumulative wall-clock busy time (message execution) so far.
+    pub busy_ms: f64,
+    /// Live sessions owned by the worker at sample time.
+    pub live_sessions: usize,
+    /// Pending-deque depth at sample time.
+    pub queue_depth: usize,
+    /// Cumulative sessions stolen from peers so far.
+    pub steals: u64,
+}
+
 /// Rolling utilization history.
 #[derive(Clone, Default)]
 pub struct UtilizationMonitor {
     samples: Arc<Mutex<Vec<Sample>>>,
+    worker_samples: Arc<Mutex<Vec<WorkerSample>>>,
 }
 
 impl UtilizationMonitor {
@@ -95,6 +126,55 @@ impl UtilizationMonitor {
             self.all().iter().map(|s| (s.at_ms as f64, s.queue_depth as f64)).collect(),
         )
     }
+
+    // -- per-worker executor series -----------------------------------
+
+    /// Append one round's per-worker samples (one entry per worker).
+    /// Retention is capped at [`MAX_WORKER_SAMPLES`]; the oldest
+    /// samples age out first.
+    pub fn record_workers(&self, samples: Vec<WorkerSample>) {
+        let mut w = self.worker_samples.lock().unwrap();
+        w.extend(samples);
+        if w.len() > MAX_WORKER_SAMPLES {
+            let excess = w.len() - MAX_WORKER_SAMPLES;
+            w.drain(..excess);
+        }
+    }
+
+    /// Full per-worker sample history, in recording order.
+    pub fn worker_history(&self) -> Vec<WorkerSample> {
+        self.worker_samples.lock().unwrap().clone()
+    }
+
+    /// The most recent sample of each worker (the live per-worker view
+    /// `nsml cluster` renders).
+    pub fn latest_workers(&self) -> Vec<WorkerSample> {
+        let mut latest: std::collections::BTreeMap<usize, WorkerSample> =
+            std::collections::BTreeMap::new();
+        for s in self.worker_samples.lock().unwrap().iter() {
+            latest.insert(s.worker, *s);
+        }
+        latest.into_values().collect()
+    }
+
+    /// Total sessions stolen across workers, per the latest samples.
+    pub fn total_steals(&self) -> u64 {
+        self.latest_workers().iter().map(|s| s.steals).sum()
+    }
+
+    /// One worker's busy-time series for the plot renderers.
+    pub fn worker_busy_series(&self, worker: usize) -> Series {
+        Series::new(
+            &format!("w{} busy_ms", worker),
+            self.worker_samples
+                .lock()
+                .unwrap()
+                .iter()
+                .filter(|s| s.worker == worker)
+                .map(|s| (s.at_ms as f64, s.busy_ms))
+                .collect(),
+        )
+    }
 }
 
 #[cfg(test)]
@@ -162,5 +242,50 @@ mod tests {
         assert_eq!(mon.mean_utilization(), 0.0);
         assert_eq!(mon.starvation_fraction(), 0.0);
         assert_eq!(mon.peak_queue_depth(), 0);
+        assert!(mon.latest_workers().is_empty());
+        assert_eq!(mon.total_steals(), 0);
+    }
+
+    #[test]
+    fn worker_samples_keep_latest_per_worker() {
+        let mon = UtilizationMonitor::new();
+        let s = |at_ms, worker, busy_ms, live, depth, steals| WorkerSample {
+            at_ms,
+            worker,
+            busy_ms,
+            live_sessions: live,
+            queue_depth: depth,
+            steals,
+        };
+        mon.record_workers(vec![s(10, 0, 1.0, 2, 1, 0), s(10, 1, 0.5, 1, 0, 1)]);
+        mon.record_workers(vec![s(20, 0, 3.0, 1, 0, 0), s(20, 1, 2.5, 2, 0, 3)]);
+        assert_eq!(mon.worker_history().len(), 4);
+        let latest = mon.latest_workers();
+        assert_eq!(latest.len(), 2);
+        assert_eq!(latest[0].busy_ms, 3.0);
+        assert_eq!(latest[1].steals, 3);
+        assert_eq!(mon.total_steals(), 3);
+        // Per-worker busy series grows monotonically over time.
+        let series = mon.worker_busy_series(1);
+        assert_eq!(series.points, vec![(10.0, 0.5), (20.0, 2.5)]);
+    }
+
+    #[test]
+    fn worker_series_retention_is_capped() {
+        let mon = UtilizationMonitor::new();
+        for i in 0..(MAX_WORKER_SAMPLES + 10) {
+            mon.record_workers(vec![WorkerSample {
+                at_ms: i as u64,
+                worker: 0,
+                busy_ms: 0.0,
+                live_sessions: 0,
+                queue_depth: 0,
+                steals: 0,
+            }]);
+        }
+        let h = mon.worker_history();
+        assert_eq!(h.len(), MAX_WORKER_SAMPLES);
+        // Oldest samples aged out first.
+        assert_eq!(h[0].at_ms, 10);
     }
 }

@@ -1,7 +1,7 @@
 //! Parallel session execution: a fixed-size, `Send`-capable worker
-//! pool that trains many sessions concurrently (the throughput layer
-//! behind the paper's "parallel runs with different job priorities",
-//! §3.1, and the NSML follow-up's executor tier).
+//! pool with work stealing that trains many sessions concurrently (the
+//! throughput layer behind the paper's "parallel runs with different
+//! job priorities", §3.1, and the NSML follow-up's executor tier).
 //!
 //! # Architecture
 //!
@@ -10,29 +10,36 @@
 //!   run/pause/resume/stop/drive            automl trial runner
 //!        │                                        │
 //!        ▼                                        ▼
-//!   ExecutorPool ──────── routing table: session id → worker
-//!        │ submit/control/step_round/step_many  (mpsc mailboxes)
+//!   ExecutorPool ──── routing table: session id → worker (mailbox)
+//!        │ submit → injector / per-worker pending deques
+//!        │ control/step_round/step_many          (mpsc mailboxes)
 //!   ┌────┴─────┬──────────┬──────────┐
 //!   ▼          ▼          ▼          ▼
 //! worker 0   worker 1   worker 2   worker 3      (std::thread)
 //!  Engine     Engine     Engine     Engine       (thread-local PJRT)
 //!  SessionRun SessionRun SessionRun SessionRun   (owned, never Send)
+//!      ▲ own deque → injector → steal oldest from most-loaded peer
 //! ```
 //!
-//! * **Ownership inversion.** Before this module the platform owned
-//!   every live [`SessionRun`](crate::session::SessionRun) in a
-//!   `RefCell` map and stepped them serially. Now each *worker thread*
-//!   owns its runs; the platform holds only the routing table. The
-//!   session-execution path crosses threads exclusively through `Send`
-//!   messages ([`WorkerCtx`] handles are `Arc`-backed stores; specs,
-//!   commands and outcomes are plain data), while the non-`Send` PJRT
-//!   state (client, executables, parameters, generators) is built
-//!   inside each worker and never leaves it.
-//! * **Placement mapping.** The scheduler's node decision maps onto a
-//!   worker (`node % workers`, see
-//!   [`ExecutorPool::submit`]), so sessions co-located on a simulated
-//!   node share one engine compile cache — the analogue of NSML ML
-//!   containers sharing a GPU host.
+//! * **Ownership inversion.** The platform never owns a live
+//!   [`SessionRun`](crate::session::SessionRun): each *worker thread*
+//!   owns its runs, and the pool holds only the queues and the routing
+//!   table. The session-execution path crosses threads exclusively
+//!   through `Send` messages ([`WorkerCtx`] handles are `Arc`-backed
+//!   stores; specs, commands and outcomes are plain data), while the
+//!   non-`Send` PJRT state (client, executables, parameters,
+//!   generators) is built inside each worker and never leaves it.
+//! * **Placement and work stealing.** A submission queues as pending
+//!   data: the scheduler's node decision maps onto a worker's deque
+//!   (`node % workers`, so co-located sessions share an engine compile
+//!   cache — the analogue of NSML ML containers sharing a GPU host),
+//!   and placement-less work lands in a shared injector. At the start
+//!   of every round a worker below its fair share of the pool's load
+//!   first drains its own deque, then the injector, then *steals* the
+//!   oldest pending session from the most-loaded peer — so a skewed
+//!   node→worker mapping no longer serializes the batch on one thread.
+//!   Stealing re-homes the session's route (its command-mailbox
+//!   address), so pause/resume/lr-edit keep reaching the owning thread.
 //! * **Fork-join rounds.** [`ExecutorPool::step_round`] broadcasts a
 //!   step budget to every worker and joins on the outcomes. Workers
 //!   run concurrently; callers keep the deterministic, synchronous
@@ -43,6 +50,10 @@
 //!   new lr, lr edit, rewind) are routed through the owning worker's
 //!   mailbox keyed by session id and acknowledged synchronously, so a
 //!   command observed as `Ok` has already happened.
+//! * **Telemetry.** Each worker accumulates busy-time, live-session,
+//!   queue-depth and steal counters ([`WorkerStats`]), surfaced through
+//!   [`ExecutorPool::stats`] to `UtilizationMonitor`, `nsml cluster`
+//!   and the web API's `GET /api/v1/executor`.
 //!
 //! Failure isolation: a session that errors (non-finite loss, bad
 //! spec) is dropped from its worker and reported as
@@ -50,7 +61,9 @@
 //! same worker — are unaffected.
 
 mod pool;
+mod queue;
 mod worker;
 
 pub use pool::ExecutorPool;
+pub use queue::WorkerStats;
 pub use worker::{SessionCommand, SessionOutcome, SessionProbe, WorkerCtx};

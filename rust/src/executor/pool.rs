@@ -1,18 +1,20 @@
-//! The pool side: fixed worker set, session→worker routing, and the
-//! fork-join step round that gives the platform parallel training with
+//! The pool side: fixed worker set, the work-distribution queues
+//! (injector + per-worker deques), session routing, and the fork-join
+//! step round that gives the platform parallel training with
 //! serial-drive semantics.
 
+use super::queue::{PendingSession, Route, Shared, WorkerStats};
 use super::worker::{
     worker_loop, SessionCommand, SessionOutcome, SessionProbe, WorkerCtx, WorkerMsg,
 };
 use crate::cluster::NodeId;
+use crate::data::generator_for;
 use crate::session::SessionSpec;
 use crate::storage::Checkpoint;
 use anyhow::{anyhow, Result};
-use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Sender};
-use std::sync::Mutex;
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
 struct WorkerHandle {
@@ -20,94 +22,152 @@ struct WorkerHandle {
     thread: Option<JoinHandle<()>>,
 }
 
-/// A fixed-size pool of session-execution workers.
+/// A fixed-size pool of session-execution workers with work stealing.
 ///
-/// The pool owns the routing table (which worker holds which live
-/// session — the per-session mailbox address) and exposes:
+/// Submissions do not land on a worker directly: they queue as pending
+/// sessions — on the preferred worker's deque when the scheduler chose
+/// a node (`node % workers`), or in the shared injector when it did
+/// not. Workers materialize pending sessions at the start of each
+/// fork-join round, and a worker below its fair share steals the oldest
+/// pending session from the most-loaded peer, so a skewed node→worker
+/// mapping no longer leaves workers idle. Stealing re-homes the
+/// session's route, which is also its command-mailbox address.
 ///
-/// * [`submit`](ExecutorPool::submit) — place a session on a worker;
-///   the scheduler's node choice maps deterministically onto a worker,
-///   so co-located sessions share an engine cache like co-located NSML
-///   containers share a GPU host.
+/// The pool exposes:
+///
+/// * [`submit`](ExecutorPool::submit) — queue a session (validated
+///   eagerly; materialized by whichever worker claims it).
 /// * [`control`](ExecutorPool::control) — route a pause/resume/lr-edit/
 ///   rewind command to the owning worker and wait for the ack.
-/// * [`step_round`](ExecutorPool::step_round) — broadcast "advance by
-///   `chunk` steps" to every worker and join on the per-session
-///   outcomes. Workers step concurrently; the caller keeps the old
-///   serial `drive()` semantics (all progress is done when it returns).
+/// * [`step_round`](ExecutorPool::step_round) — broadcast "adopt
+///   pending work, then advance by `chunk` steps" to every worker and
+///   join on the per-session outcomes. Workers step concurrently; the
+///   caller keeps the old serial `drive()` semantics (all progress is
+///   done when it returns).
 /// * [`step_many`](ExecutorPool::step_many) — per-session step budgets
 ///   fanned out and joined (the automl rung driver).
+/// * [`stats`](ExecutorPool::stats) — per-worker busy-time, live
+///   sessions, queue depth and steal counts for the ops surfaces
+///   (`nsml cluster`, `GET /api/v1/executor`).
 pub struct ExecutorPool {
     workers: Vec<WorkerHandle>,
-    routes: Mutex<BTreeMap<String, usize>>,
+    shared: Arc<Shared>,
     rr: AtomicUsize,
 }
 
 impl ExecutorPool {
-    /// Spawn `workers` threads (at least one) over a shared context.
+    /// Spawn `workers` threads (at least one) over a shared context,
+    /// with work stealing enabled.
     pub fn new(workers: usize, ctx: WorkerCtx) -> ExecutorPool {
+        ExecutorPool::with_stealing(workers, ctx, true)
+    }
+
+    /// Like [`new`](ExecutorPool::new) but with work stealing switched
+    /// off: sessions stay pinned to their `node % workers` target (the
+    /// pre-steal executor behaviour, kept as the bench baseline).
+    pub fn with_stealing(workers: usize, ctx: WorkerCtx, stealing: bool) -> ExecutorPool {
         let n = workers.max(1);
+        let shared = Arc::new(Shared::new(n, stealing));
         let mut handles = Vec::with_capacity(n);
         for i in 0..n {
             let (tx, rx) = channel();
             let wctx = ctx.clone();
+            let wshared = shared.clone();
             let thread = std::thread::Builder::new()
                 .name(format!("nsml-worker-{}", i))
-                .spawn(move || worker_loop(i, wctx, rx))
+                .spawn(move || worker_loop(i, wctx, wshared, rx))
                 .expect("spawn executor worker");
             handles.push(WorkerHandle { tx, thread: Some(thread) });
         }
-        ExecutorPool { workers: handles, routes: Mutex::new(BTreeMap::new()), rr: AtomicUsize::new(0) }
+        ExecutorPool { workers: handles, shared, rr: AtomicUsize::new(0) }
     }
 
     pub fn worker_count(&self) -> usize {
         self.workers.len()
     }
 
-    /// Ids of all live (pool-owned) sessions.
+    /// Is work stealing enabled on this pool?
+    pub fn stealing(&self) -> bool {
+        self.shared.stealing()
+    }
+
+    /// Ids of all live or pending (pool-owned) sessions.
     pub fn active(&self) -> Vec<String> {
-        self.routes.lock().unwrap().keys().cloned().collect()
+        self.shared.routed_ids()
     }
 
     pub fn len(&self) -> usize {
-        self.routes.lock().unwrap().len()
+        self.shared.route_count()
     }
 
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
 
-    /// Which worker owns a session (None if not live in the pool).
+    /// Which worker owns a session — its live run or its pending-deque
+    /// slot (`None` if unknown or still in the injector).
     pub fn owner_of(&self, id: &str) -> Option<usize> {
-        self.routes.lock().unwrap().get(id).copied()
+        self.shared.route_of(id).and_then(|r| r.worker())
     }
 
-    /// Place a session on a worker and construct its run (fresh start
-    /// or checkpoint resume). `placement` is the scheduler's node
-    /// decision: node → worker is a stable modular mapping; without a
-    /// placement the pool round-robins.
+    /// Per-worker telemetry: live sessions, pending queue depth, steal
+    /// count and cumulative busy time, indexed by worker.
+    pub fn stats(&self) -> Vec<WorkerStats> {
+        self.shared.stats()
+    }
+
+    /// Total sessions stolen across all workers since pool start.
+    pub fn total_steals(&self) -> u64 {
+        self.stats().iter().map(|s| s.steals).sum()
+    }
+
+    /// Queue a session for execution (fresh start or checkpoint
+    /// resume). `placement` is the scheduler's node decision: node →
+    /// worker is a stable modular mapping onto that worker's pending
+    /// deque; without a placement the session lands in the shared
+    /// injector (or round-robins when stealing is off). The spec is
+    /// validated here so unknown models fail fast; materialization
+    /// happens on whichever worker claims the session.
     pub fn submit(&self, spec: SessionSpec, resume: bool, placement: Option<NodeId>) -> Result<()> {
-        let w = match placement {
-            Some(node) => node.0 as usize % self.workers.len(),
-            None => self.rr.fetch_add(1, Ordering::Relaxed) % self.workers.len(),
-        };
-        let id = spec.id.clone();
-        let (reply, rx) = channel();
-        self.workers[w]
-            .tx
-            .send(WorkerMsg::Spawn { spec, resume, reply })
-            .map_err(|_| anyhow!("executor worker {} is gone", w))?;
-        rx.recv()
-            .map_err(|_| anyhow!("executor worker {} died during spawn", w))?
-            .map_err(|e| anyhow!(e))?;
-        self.routes.lock().unwrap().insert(id, w);
+        if generator_for(&spec.model, spec.seed).is_none() {
+            return Err(anyhow!("no data generator for model {}", spec.model));
+        }
+        let pending = PendingSession { spec, resume };
+        match placement {
+            Some(node) => {
+                self.shared.push_pending(node.0 as usize % self.workers.len(), pending);
+            }
+            None if self.shared.stealing() => self.shared.inject(pending),
+            None => {
+                let w = self.rr.fetch_add(1, Ordering::Relaxed) % self.workers.len();
+                self.shared.push_pending(w, pending);
+            }
+        }
         Ok(())
+    }
+
+    /// Resolve the worker an id-addressed message should go to,
+    /// assigning injected sessions to the least-loaded worker first.
+    fn mailbox_of(&self, id: &str) -> Result<usize> {
+        match self.shared.route_of(id) {
+            None => Err(anyhow!("session {} is not active", id)),
+            Some(Route::Injected) => self
+                .shared
+                .adopt_injected(id)
+                .ok_or_else(|| anyhow!("session {} is not active", id)),
+            Some(r) => r.worker().ok_or_else(|| anyhow!("session {} is not active", id)),
+        }
+    }
+
+    /// Prune routes for sessions a worker dropped (completed/failed).
+    fn prune_route(&self, id: &str) {
+        self.shared.remove_route(id);
     }
 
     /// Route a session-control command to the owning worker's mailbox
     /// and block for its ack.
     pub fn control(&self, id: &str, cmd: SessionCommand) -> Result<()> {
-        let w = self.owner_of(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        let w = self.mailbox_of(id)?;
         let (reply, rx) = channel();
         self.workers[w]
             .tx
@@ -120,12 +180,17 @@ impl ExecutorPool {
 
     /// Drop a session's run without touching its record (stop/orphan).
     /// Synchronous, so a re-submit (checkpoint recovery) can never race
-    /// the old run. A session the pool does not own is a no-op.
+    /// the old run: a still-queued session is purged in place, a live
+    /// one is dropped through its worker's mailbox, and one caught
+    /// mid-steal is tombstoned so the thief discards it on arrival. A
+    /// session the pool does not own is a no-op.
     pub fn detach(&self, id: &str) {
-        let w = match self.routes.lock().unwrap().remove(id) {
-            Some(w) => w,
-            None => return,
-        };
+        if let Some(w) = self.shared.detach(id) {
+            self.send_detach(w, id);
+        }
+    }
+
+    fn send_detach(&self, w: usize, id: &str) {
         let (reply, rx) = channel();
         if self.workers[w].tx.send(WorkerMsg::Detach { id: id.to_string(), reply }).is_ok() {
             let _ = rx.recv();
@@ -133,9 +198,11 @@ impl ExecutorPool {
     }
 
     /// Advance every live `Running` session by up to `chunk` steps.
-    /// Workers step their sessions concurrently; this returns once all
-    /// workers report, with one outcome per owned session. Sessions
-    /// that completed or failed are already dropped from the pool.
+    /// Each worker first adopts its share of pending work (draining its
+    /// deque, the injector, then stealing from loaded peers), then
+    /// steps its sessions; this returns once all workers report, with
+    /// one outcome per owned session. Sessions that completed or failed
+    /// are already dropped from the pool.
     pub fn step_round(&self, chunk: u64) -> Vec<(String, SessionOutcome)> {
         let mut pending = Vec::with_capacity(self.workers.len());
         for w in &self.workers {
@@ -150,10 +217,9 @@ impl ExecutorPool {
                 out.append(&mut v);
             }
         }
-        let mut routes = self.routes.lock().unwrap();
         for (id, oc) in &out {
             if matches!(oc, SessionOutcome::Completed | SessionOutcome::Failed(_)) {
-                routes.remove(id);
+                self.prune_route(id);
             }
         }
         out
@@ -165,7 +231,7 @@ impl ExecutorPool {
     pub fn step_many(&self, work: &[(String, u64)]) -> Vec<(String, Result<SessionOutcome, String>)> {
         let mut pending = Vec::with_capacity(work.len());
         for (id, steps) in work {
-            let Some(w) = self.owner_of(id) else {
+            let Ok(w) = self.mailbox_of(id) else {
                 pending.push((id.clone(), Err(format!("session {} is not active", id))));
                 continue;
             };
@@ -190,7 +256,7 @@ impl ExecutorPool {
             };
             if !matches!(res, Ok(SessionOutcome::Progressed) | Ok(SessionOutcome::Skipped)) {
                 // Completed or failed: the worker dropped the run.
-                self.routes.lock().unwrap().remove(&id);
+                self.prune_route(&id);
             }
             out.push((id, res));
         }
@@ -199,7 +265,7 @@ impl ExecutorPool {
 
     /// Held-out evaluation of a live session: (loss, metric).
     pub fn evaluate(&self, id: &str, eval_seed: u64) -> Result<(f64, f64)> {
-        let w = self.owner_of(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        let w = self.mailbox_of(id)?;
         let (reply, rx) = channel();
         self.workers[w]
             .tx
@@ -212,7 +278,7 @@ impl ExecutorPool {
 
     /// Checkpoint a live session now; returns the checkpoint record.
     pub fn checkpoint(&self, id: &str) -> Result<Checkpoint> {
-        let w = self.owner_of(id).ok_or_else(|| anyhow!("session {} is not active", id))?;
+        let w = self.mailbox_of(id)?;
         let (reply, rx) = channel();
         self.workers[w]
             .tx
@@ -225,7 +291,7 @@ impl ExecutorPool {
 
     /// Peek at a live run's current step/lr (None if not pool-owned).
     pub fn inspect(&self, id: &str) -> Option<SessionProbe> {
-        let w = self.owner_of(id)?;
+        let w = self.mailbox_of(id).ok()?;
         let (reply, rx) = channel();
         self.workers[w].tx.send(WorkerMsg::Inspect { id: id.to_string(), reply }).ok()?;
         rx.recv().ok()?

@@ -1,0 +1,436 @@
+//! Work-distribution state shared between the pool and its workers:
+//! the injector queue for placement-less submissions, one pending deque
+//! per worker, the session routing table (the mailbox address book) and
+//! the per-worker telemetry counters surfaced by `nsml cluster` and
+//! `GET /api/v1/executor`.
+//!
+//! Only *pending* sessions — plain `Send` data ([`PendingSession`]) —
+//! ever move between workers. A materialized
+//! [`SessionRun`](crate::session::SessionRun) holds non-`Send` PJRT
+//! state and stays on the thread that built it; load balancing therefore
+//! happens at adoption time: an idle worker first drains its own deque,
+//! then the injector, then steals the oldest pending session from the
+//! most-loaded peer (see `Worker::adopt_pending` in `worker.rs`).
+
+use crate::session::SessionSpec;
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// A submitted session that no worker has materialized yet. Unlike a
+/// live run this is plain `Send` data, so it may hop between workers —
+/// whichever worker claims it builds the `SessionRun` (fresh start or
+/// checkpoint resume) on its own thread.
+pub(super) struct PendingSession {
+    pub spec: SessionSpec,
+    pub resume: bool,
+}
+
+/// Where a session currently lives. The routing table *is* the command
+/// mailbox address: control verbs are delivered to `worker()`. Stealing
+/// a session re-homes its route, so pause/resume/lr-edit keep finding
+/// the run after an ownership transfer.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub(super) enum Route {
+    /// In the shared injector queue; no owner yet.
+    Injected,
+    /// In worker `i`'s pending deque (submitted, not yet materialized).
+    Pending(usize),
+    /// Materialized: worker `i` owns the live run and its mailbox.
+    Live(usize),
+    /// Detached while a steal was in flight: a tombstone that makes
+    /// the thief's [`Shared::register_live`] abort instead of
+    /// resurrecting a session the caller already detached.
+    Detached,
+}
+
+impl Route {
+    pub fn worker(&self) -> Option<usize> {
+        match self {
+            Route::Injected | Route::Detached => None,
+            Route::Pending(w) | Route::Live(w) => Some(*w),
+        }
+    }
+}
+
+/// One worker's telemetry snapshot (see
+/// [`ExecutorPool::stats`](super::ExecutorPool::stats)).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct WorkerStats {
+    /// Worker index (0-based, stable for the pool's lifetime).
+    pub worker: usize,
+    /// Live (materialized) sessions the worker owns right now.
+    pub live_sessions: usize,
+    /// Depth of the worker's pending deque.
+    pub queue_depth: usize,
+    /// Pending sessions this worker has stolen from peers since start.
+    pub steals: u64,
+    /// Cumulative wall-clock time spent executing mailbox messages.
+    pub busy_ms: f64,
+}
+
+/// The state every pool handle and worker thread shares.
+pub(super) struct Shared {
+    /// Placement-less submissions; any worker may claim one.
+    injector: Mutex<VecDeque<PendingSession>>,
+    /// One pending deque per worker (the preferred owner's inbox).
+    deques: Vec<Mutex<VecDeque<PendingSession>>>,
+    routes: Mutex<BTreeMap<String, Route>>,
+    live: Vec<AtomicUsize>,
+    steals: Vec<AtomicU64>,
+    busy_nanos: Vec<AtomicU64>,
+    /// Work-steal enabled? Off reproduces the static `node % workers`
+    /// routing of the pre-steal executor (kept as the bench baseline).
+    stealing: bool,
+}
+
+impl Shared {
+    pub fn new(workers: usize, stealing: bool) -> Shared {
+        Shared {
+            injector: Mutex::new(VecDeque::new()),
+            deques: (0..workers).map(|_| Mutex::new(VecDeque::new())).collect(),
+            routes: Mutex::new(BTreeMap::new()),
+            live: (0..workers).map(|_| AtomicUsize::new(0)).collect(),
+            steals: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            busy_nanos: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            stealing,
+        }
+    }
+
+    pub fn stealing(&self) -> bool {
+        self.stealing
+    }
+
+    // -- routing ------------------------------------------------------
+
+    pub fn route_of(&self, id: &str) -> Option<Route> {
+        self.routes.lock().unwrap().get(id).copied()
+    }
+
+    pub fn set_route(&self, id: &str, route: Route) {
+        self.routes.lock().unwrap().insert(id.to_string(), route);
+    }
+
+    pub fn remove_route(&self, id: &str) -> Option<Route> {
+        self.routes.lock().unwrap().remove(id)
+    }
+
+    pub fn routed_ids(&self) -> Vec<String> {
+        self.routes.lock().unwrap().keys().cloned().collect()
+    }
+
+    pub fn route_count(&self) -> usize {
+        self.routes.lock().unwrap().len()
+    }
+
+    // -- queues -------------------------------------------------------
+
+    /// Enqueue a pending session on worker `w`'s deque.
+    pub fn push_pending(&self, w: usize, p: PendingSession) {
+        self.set_route(&p.spec.id, Route::Pending(w));
+        self.deques[w].lock().unwrap().push_back(p);
+    }
+
+    /// Enqueue a placement-less session into the shared injector.
+    pub fn inject(&self, p: PendingSession) {
+        self.set_route(&p.spec.id, Route::Injected);
+        self.injector.lock().unwrap().push_back(p);
+    }
+
+    /// Pop the oldest pending session from worker `w`'s own deque,
+    /// counting the claim into `w`'s live tally before the deque lock
+    /// is released — a mid-materialization session must stay visible
+    /// to peers' load math (fair share, least-loaded, steal targets).
+    pub fn pop_own(&self, w: usize) -> Option<PendingSession> {
+        let mut dq = self.deques[w].lock().unwrap();
+        let p = dq.pop_front();
+        if p.is_some() {
+            self.live[w].fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+
+    /// Pop the oldest injected session, counting the claim for worker
+    /// `w` (see [`Shared::pop_own`]).
+    pub fn pop_injected(&self, w: usize) -> Option<PendingSession> {
+        let mut inj = self.injector.lock().unwrap();
+        let p = inj.pop_front();
+        if p.is_some() {
+            self.live[w].fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+
+    /// Steal the oldest pending session from the most-loaded peer of
+    /// `thief` (load = pending depth + live runs). Counts the claim
+    /// for the thief. Returns `None` when no peer has pending work.
+    pub fn steal_for(&self, thief: usize) -> Option<PendingSession> {
+        let mut best: Option<(usize, usize)> = None;
+        for (w, dq) in self.deques.iter().enumerate() {
+            if w == thief {
+                continue;
+            }
+            // Depth under the lock first, live second: a pop counts
+            // its claim before releasing the deque lock, so this order
+            // never observes a session in neither tally.
+            let depth = dq.lock().unwrap().len();
+            if depth == 0 {
+                continue;
+            }
+            let load = depth + self.live_count(w);
+            if best.map_or(0, |(_, l)| l) < load {
+                best = Some((w, load));
+            }
+        }
+        let (victim, _) = best?;
+        let mut dq = self.deques[victim].lock().unwrap();
+        let stolen = dq.pop_front()?;
+        self.live[thief].fetch_add(1, Ordering::Relaxed);
+        drop(dq);
+        self.steals[thief].fetch_add(1, Ordering::Relaxed);
+        Some(stolen)
+    }
+
+    /// Remove a specific pending session from worker `w`'s deque (the
+    /// target of an id-addressed message that has not materialized
+    /// yet). Counts the claim for `w`.
+    pub fn take_pending(&self, w: usize, id: &str) -> Option<PendingSession> {
+        let mut dq = self.deques[w].lock().unwrap();
+        let pos = dq.iter().position(|p| p.spec.id == id)?;
+        let p = dq.remove(pos);
+        if p.is_some() {
+            self.live[w].fetch_add(1, Ordering::Relaxed);
+        }
+        p
+    }
+
+    /// Move an injected session onto the least-loaded worker's deque so
+    /// an id-addressed message has a concrete owner. Returns the worker
+    /// (`None` if the session is gone — or was detached mid-move).
+    pub fn adopt_injected(&self, id: &str) -> Option<usize> {
+        let p = {
+            let mut inj = self.injector.lock().unwrap();
+            let pos = inj.iter().position(|p| p.spec.id == id)?;
+            inj.remove(pos)?
+        };
+        let w = self.least_loaded();
+        // Re-route under the lock: a detach that raced the move left a
+        // tombstone — consume it and drop the session instead of
+        // resurrecting it on a deque.
+        {
+            let mut routes = self.routes.lock().unwrap();
+            if matches!(routes.get(id), Some(Route::Detached)) {
+                routes.remove(id);
+                return None;
+            }
+            routes.insert(id.to_string(), Route::Pending(w));
+        }
+        self.deques[w].lock().unwrap().push_back(p);
+        Some(w)
+    }
+
+    /// Atomically detach a session: remove its route and purge it from
+    /// the queues. When the route says `Pending(w)` but the deque
+    /// misses (a steal is in flight), a [`Route::Detached`] tombstone
+    /// is left so the thief's [`Shared::register_live`] aborts instead
+    /// of resurrecting the session. Returns `Some(worker)` when a
+    /// (possibly) materialized run must also be dropped through that
+    /// worker's mailbox.
+    pub fn detach(&self, id: &str) -> Option<usize> {
+        let mut routes = self.routes.lock().unwrap();
+        match routes.remove(id) {
+            None | Some(Route::Detached) => None,
+            Some(Route::Injected) => {
+                // Nested routes → injector lock (same direction as the
+                // deque nesting below; never nested in reverse).
+                let purged = {
+                    let mut inj = self.injector.lock().unwrap();
+                    inj.iter().position(|p| p.spec.id == id).map(|pos| inj.remove(pos))
+                };
+                if purged.is_none() {
+                    // Claimed mid-move/materialization: tombstone so
+                    // the claimer's registration aborts.
+                    routes.insert(id.to_string(), Route::Detached);
+                }
+                None
+            }
+            Some(Route::Pending(w)) => {
+                // Nested routes → deque lock; no code path nests the
+                // reverse order, so this cannot deadlock.
+                let purged = {
+                    let mut dq = self.deques[w].lock().unwrap();
+                    dq.iter().position(|p| p.spec.id == id).map(|pos| dq.remove(pos))
+                };
+                if purged.is_some() {
+                    return None;
+                }
+                routes.insert(id.to_string(), Route::Detached);
+                Some(w)
+            }
+            Some(Route::Live(w)) => Some(w),
+        }
+    }
+
+    /// Register a materialized run's route (re-homing the mailbox to
+    /// worker `w`) — unless a detach raced the materialization: then
+    /// the tombstone is consumed, `false` is returned, and the caller
+    /// must drop the run it just built.
+    pub fn register_live(&self, id: &str, w: usize) -> bool {
+        let mut routes = self.routes.lock().unwrap();
+        if matches!(routes.get(id), Some(Route::Detached)) {
+            routes.remove(id);
+            return false;
+        }
+        routes.insert(id.to_string(), Route::Live(w));
+        true
+    }
+
+    // -- load accounting ----------------------------------------------
+
+    pub fn live_count(&self, w: usize) -> usize {
+        self.live[w].load(Ordering::Relaxed)
+    }
+
+    /// Release one claim from worker `w`'s live tally (run dropped,
+    /// spawn failed, or a detach raced the materialization). The
+    /// matching increment happens inside the pop/steal/take claims.
+    pub fn live_dec(&self, w: usize) {
+        self.live[w].fetch_sub(1, Ordering::Relaxed);
+    }
+
+    fn pending_total(&self) -> usize {
+        self.injector.lock().unwrap().len()
+            + self.deques.iter().map(|d| d.lock().unwrap().len()).sum::<usize>()
+    }
+
+    /// Ceiling of (pending + live) / workers: the per-worker adoption
+    /// cap that makes concurrent stealing converge to a balanced split.
+    pub fn fair_share(&self) -> usize {
+        // Pending first, live second (see steal_for): a claim leaves a
+        // queue only after its live increment is in place, so this
+        // order never observes a session in neither tally and the cap
+        // never undercounts.
+        let total = self.pending_total()
+            + self.live.iter().map(|a| a.load(Ordering::Relaxed)).sum::<usize>();
+        total.div_ceil(self.deques.len()).max(1)
+    }
+
+    fn least_loaded(&self) -> usize {
+        let mut best = 0;
+        let mut best_load = usize::MAX;
+        for (w, dq) in self.deques.iter().enumerate() {
+            // Depth under the lock first, live second (see steal_for).
+            let load = dq.lock().unwrap().len() + self.live_count(w);
+            if load < best_load {
+                best = w;
+                best_load = load;
+            }
+        }
+        best
+    }
+
+    // -- telemetry ----------------------------------------------------
+
+    pub fn add_busy(&self, w: usize, elapsed: std::time::Duration) {
+        self.busy_nanos[w].fetch_add(elapsed.as_nanos() as u64, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> Vec<WorkerStats> {
+        (0..self.deques.len())
+            .map(|w| WorkerStats {
+                worker: w,
+                live_sessions: self.live_count(w),
+                queue_depth: self.deques[w].lock().unwrap().len(),
+                steals: self.steals[w].load(Ordering::Relaxed),
+                busy_ms: self.busy_nanos[w].load(Ordering::Relaxed) as f64 / 1e6,
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(id: &str) -> PendingSession {
+        PendingSession {
+            spec: SessionSpec::new(id, "u", "mnist", "mnist_mlp"),
+            resume: false,
+        }
+    }
+
+    #[test]
+    fn steal_targets_most_loaded_peer() {
+        let s = Shared::new(3, true);
+        s.push_pending(0, pending("a"));
+        s.push_pending(0, pending("b"));
+        s.push_pending(1, pending("c"));
+        // Worker 2 steals from worker 0 (load 2 beats load 1), oldest first.
+        let got = s.steal_for(2).unwrap();
+        assert_eq!(got.spec.id, "a");
+        assert_eq!(s.stats()[2].steals, 1);
+        assert_eq!(s.stats()[0].queue_depth, 1);
+        // A worker never steals from itself.
+        assert_eq!(s.steal_for(1).unwrap().spec.id, "b");
+        assert_eq!(s.steal_for(0).unwrap().spec.id, "c");
+        assert!(s.steal_for(0).is_none());
+    }
+
+    #[test]
+    fn fair_share_and_injector() {
+        let s = Shared::new(4, true);
+        assert_eq!(s.fair_share(), 1); // empty pool still caps at >= 1
+        for i in 0..8 {
+            s.inject(pending(&format!("t{}", i)));
+        }
+        assert_eq!(s.fair_share(), 2);
+        assert_eq!(s.route_of("t0"), Some(Route::Injected));
+        // Adopting an injected session gives it a concrete owner.
+        let w = s.adopt_injected("t3").unwrap();
+        assert_eq!(s.route_of("t3"), Some(Route::Pending(w)));
+        assert!(s.take_pending(w, "t3").is_some());
+        // Oldest-first injector order; claims keep the total invariant
+        // (live + pending stays 8, so the fair share does too).
+        assert_eq!(s.pop_injected(0).unwrap().spec.id, "t0");
+        assert_eq!(s.fair_share(), 2);
+    }
+
+    #[test]
+    fn claims_count_toward_least_loaded() {
+        let s = Shared::new(2, true);
+        s.push_pending(0, pending("a"));
+        s.push_pending(0, pending("b"));
+        // Worker 0 claims both: they leave the deque but stay visible
+        // in its live tally while they materialize.
+        assert!(s.pop_own(0).is_some());
+        assert!(s.pop_own(0).is_some());
+        assert_eq!(s.live_count(0), 2);
+        s.inject(pending("x"));
+        assert_eq!(s.adopt_injected("x"), Some(1));
+        s.live_dec(0);
+        assert_eq!(s.live_count(0), 1);
+    }
+
+    #[test]
+    fn detach_mid_steal_tombstones_the_route() {
+        let s = Shared::new(2, true);
+        s.push_pending(0, pending("a"));
+        // Worker 1 steals "a" but has not registered it yet.
+        let stolen = s.steal_for(1).unwrap();
+        assert_eq!(stolen.spec.id, "a");
+        // A detach arriving in that window cannot find the pending
+        // item; it plants a tombstone instead of succeeding silently.
+        assert_eq!(s.detach("a"), Some(0));
+        // The thief's registration aborts and consumes the tombstone.
+        assert!(!s.register_live("a", 1));
+        assert!(s.route_of("a").is_none());
+        // A normal (unraced) registration still re-homes the route.
+        s.push_pending(0, pending("b"));
+        let b = s.steal_for(1).unwrap();
+        assert!(s.register_live(&b.spec.id, 1));
+        assert_eq!(s.route_of("b"), Some(Route::Live(1)));
+        // Detach of a live run reports the owning worker.
+        assert_eq!(s.detach("b"), Some(1));
+        assert!(s.route_of("b").is_none());
+    }
+}

@@ -9,7 +9,21 @@
 //! and never leaves it. That is what makes the session-execution path
 //! safe to parallelize without making the PJRT types themselves
 //! thread-safe.
+//!
+//! # Adoption and stealing
+//!
+//! Sessions are not handed to a worker directly: they queue as
+//! `PendingSession`s (plain data) in the shared injector / per-worker
+//! deques, and each fork-join round starts with an adoption pass. A
+//! worker below the pool's fair share first drains its own deque, then
+//! the injector, then steals the oldest pending session from the
+//! most-loaded peer — materializing each claimed session into a
+//! [`SessionRun`] on its own thread. The shared routing table is
+//! updated at materialization time, so a stolen session's command
+//! mailbox (pause / resume / lr-edit / rewind) re-homes to the thief
+//! and control verbs keep landing on the thread that owns the run.
 
+use super::queue::{PendingSession, Shared};
 use crate::data::generator_for;
 use crate::events::EventLog;
 use crate::runtime::Engine;
@@ -20,6 +34,7 @@ use std::collections::BTreeMap;
 use std::path::PathBuf;
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::Arc;
+use std::time::Instant;
 
 /// Everything a worker needs to build and drive sessions. All fields
 /// are `Send + Sync` handles onto the platform's shared control state
@@ -73,13 +88,13 @@ pub struct SessionProbe {
 /// The worker mailbox vocabulary. Every request that needs an answer
 /// carries its own reply channel, so the pool can fan a message out to
 /// many workers and collect replies without blocking the workers on
-/// each other.
+/// each other. Id-addressed messages materialize their target first if
+/// it is still pending on this worker's deque.
 pub(super) enum WorkerMsg {
-    /// Construct a run (fresh or checkpoint-resume) for `spec`.
-    Spawn { spec: SessionSpec, resume: bool, reply: Sender<Result<(), String>> },
     /// Apply a session-control command to an owned run.
     Control { id: String, cmd: SessionCommand, reply: Sender<Result<(), String>> },
-    /// Step every owned `Running` session by up to `chunk` steps.
+    /// Adopt pending work, then step every owned `Running` session by
+    /// up to `chunk` steps.
     StepRound { chunk: u64, reply: Sender<Vec<(String, SessionOutcome)>> },
     /// Step one owned session by up to `steps` (automl trial driving).
     StepSession { id: String, steps: u64, reply: Sender<Result<SessionOutcome, String>> },
@@ -95,119 +110,244 @@ pub(super) enum WorkerMsg {
     Shutdown,
 }
 
-/// The worker thread body: a mailbox loop over owned runs.
-pub(super) fn worker_loop(index: usize, ctx: WorkerCtx, rx: Receiver<WorkerMsg>) {
+/// The per-thread worker state: owned runs + the lazily-built engine.
+struct Worker {
+    index: usize,
+    ctx: WorkerCtx,
+    shared: Arc<Shared>,
     // The engine (PJRT client + compile cache) is created lazily so
     // idle workers cost nothing but a parked thread.
-    let mut engine: Option<Arc<Engine>> = None;
-    let mut runs: BTreeMap<String, SessionRun> = BTreeMap::new();
+    engine: Option<Arc<Engine>>,
+    runs: BTreeMap<String, SessionRun>,
+}
+
+/// The worker thread body: a mailbox loop over owned runs.
+pub(super) fn worker_loop(index: usize, ctx: WorkerCtx, shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
+    let mut w = Worker { index, ctx, shared, engine: None, runs: BTreeMap::new() };
     while let Ok(msg) = rx.recv() {
+        if matches!(msg, WorkerMsg::Shutdown) {
+            break;
+        }
+        let t0 = Instant::now();
+        w.handle(msg);
+        w.shared.add_busy(index, t0.elapsed());
+    }
+}
+
+impl Worker {
+    fn handle(&mut self, msg: WorkerMsg) {
         match msg {
-            WorkerMsg::Spawn { spec, resume, reply } => {
-                let res = spawn_run(index, &ctx, &mut engine, &mut runs, spec, resume);
-                let _ = reply.send(res);
-            }
             WorkerMsg::Control { id, cmd, reply } => {
-                let res = match runs.get_mut(&id) {
+                let res = self.ensure_local(&id).and_then(|_| match self.runs.get_mut(&id) {
                     None => Err(format!("session {} is not active", id)),
                     Some(run) => apply_command(run, cmd),
-                };
+                });
                 let _ = reply.send(res);
             }
             WorkerMsg::StepRound { chunk, reply } => {
-                let mut out = Vec::new();
-                let ids: Vec<String> = runs.keys().cloned().collect();
-                for id in ids {
-                    // Skip sessions whose state got externally flipped
-                    // (paused/stopped) since the last round.
-                    if ctx.sessions.get(&id).map(|r| r.state) != Some(SessionState::Running) {
-                        out.push((id, SessionOutcome::Skipped));
-                        continue;
-                    }
-                    let run = runs.get_mut(&id).expect("run for listed id");
-                    match run.step_chunk(chunk) {
-                        Ok(RunStatus::InProgress) => out.push((id, SessionOutcome::Progressed)),
-                        Ok(RunStatus::Completed) => {
-                            runs.remove(&id);
-                            out.push((id, SessionOutcome::Completed));
-                        }
-                        Err(e) => {
-                            runs.remove(&id);
-                            out.push((id, SessionOutcome::Failed(format!("{:#}", e))));
-                        }
-                    }
-                }
-                let _ = reply.send(out);
+                let _ = reply.send(self.step_round(chunk));
             }
             WorkerMsg::StepSession { id, steps, reply } => {
-                let res = match runs.get_mut(&id) {
+                let res = self.ensure_local(&id).and_then(|_| match self.runs.get_mut(&id) {
                     None => Err(format!("session {} is not active", id)),
                     Some(run) => match run.step_chunk(steps) {
                         Ok(RunStatus::InProgress) => Ok(SessionOutcome::Progressed),
-                        Ok(RunStatus::Completed) => {
-                            runs.remove(&id);
-                            Ok(SessionOutcome::Completed)
-                        }
-                        Err(e) => {
-                            runs.remove(&id);
-                            Err(format!("{:#}", e))
-                        }
+                        Ok(RunStatus::Completed) => Ok(SessionOutcome::Completed),
+                        Err(e) => Err(format!("{:#}", e)),
                     },
-                };
+                });
+                // Completed (or failed mid-step): drop the run. A
+                // "not active" error has no run, so this is a no-op.
+                if !matches!(res, Ok(SessionOutcome::Progressed)) {
+                    self.drop_run(&id);
+                }
                 let _ = reply.send(res);
             }
             WorkerMsg::Evaluate { id, eval_seed, reply } => {
-                let res = match runs.get_mut(&id) {
+                let res = self.ensure_local(&id).and_then(|_| match self.runs.get_mut(&id) {
                     None => Err(format!("session {} is not active", id)),
                     Some(run) => evaluate_held_out(run, eval_seed),
-                };
+                });
                 let _ = reply.send(res);
             }
             WorkerMsg::Checkpoint { id, reply } => {
-                let res = match runs.get_mut(&id) {
+                let res = self.ensure_local(&id).and_then(|_| match self.runs.get_mut(&id) {
                     None => Err(format!("session {} is not active", id)),
                     Some(run) => run.checkpoint().map_err(|e| format!("{:#}", e)),
-                };
+                });
                 let _ = reply.send(res);
             }
             WorkerMsg::Inspect { id, reply } => {
-                let probe = runs
+                // Read-only peek: never materializes a pending session.
+                let probe = self
+                    .runs
                     .get(&id)
                     .map(|run| SessionProbe { steps_done: run.steps_done(), lr: run.lr() });
                 let _ = reply.send(probe);
             }
             WorkerMsg::Detach { id, reply } => {
-                runs.remove(&id);
+                self.drop_run(&id);
                 let _ = reply.send(());
             }
-            WorkerMsg::Shutdown => break,
+            WorkerMsg::Shutdown => unreachable!("handled by worker_loop"),
+        }
+    }
+
+    /// One fork-join round: adopt pending work (own deque → injector →
+    /// steal), then step every owned `Running` session.
+    fn step_round(&mut self, chunk: u64) -> Vec<(String, SessionOutcome)> {
+        let mut out = self.adopt_pending();
+        let ids: Vec<String> = self.runs.keys().cloned().collect();
+        for id in ids {
+            // Skip sessions whose state got externally flipped
+            // (paused/stopped) since the last round.
+            if self.ctx.sessions.get(&id).map(|r| r.state) != Some(SessionState::Running) {
+                out.push((id, SessionOutcome::Skipped));
+                continue;
+            }
+            let run = self.runs.get_mut(&id).expect("run for listed id");
+            match run.step_chunk(chunk) {
+                Ok(RunStatus::InProgress) => out.push((id, SessionOutcome::Progressed)),
+                Ok(RunStatus::Completed) => {
+                    self.drop_run(&id);
+                    out.push((id, SessionOutcome::Completed));
+                }
+                Err(e) => {
+                    let msg = format!("{:#}", e);
+                    self.drop_run(&id);
+                    out.push((id, SessionOutcome::Failed(msg)));
+                }
+            }
+        }
+        out
+    }
+
+    /// Claim pending sessions until this worker holds its fair share of
+    /// the pool's total work (own deque first, then the injector, then
+    /// stealing from the most-loaded peer). With stealing disabled the
+    /// worker simply drains everything routed to it. Returns spawn
+    /// failures as `Failed` outcomes for the round report.
+    fn adopt_pending(&mut self) -> Vec<(String, SessionOutcome)> {
+        let mut failures = Vec::new();
+        let fair = self.shared.fair_share();
+        loop {
+            if self.shared.stealing() && self.shared.live_count(self.index) >= fair {
+                break;
+            }
+            let next = self
+                .shared
+                .pop_own(self.index)
+                .or_else(|| self.shared.pop_injected(self.index))
+                .or_else(|| {
+                    if self.shared.stealing() {
+                        self.shared.steal_for(self.index)
+                    } else {
+                        None
+                    }
+                });
+            let Some(p) = next else { break };
+            let id = p.spec.id.clone();
+            if let Err(e) = self.spawn(p) {
+                failures.push((id, SessionOutcome::Failed(e)));
+            }
+        }
+        failures
+    }
+
+    /// Materialize an id-addressed session if it still sits on this
+    /// worker's own pending deque (control verbs may arrive before the
+    /// first step round). A failed spawn is terminal — record marked
+    /// Failed, route removed — never a silently dropped session.
+    fn ensure_local(&mut self, id: &str) -> Result<(), String> {
+        if self.runs.contains_key(id) {
+            return Ok(());
+        }
+        let Some(p) = self.shared.take_pending(self.index, id) else {
+            return Ok(());
+        };
+        match self.spawn(p) {
+            Ok(()) => Ok(()),
+            Err(e) => {
+                self.fail_session(id, &e);
+                Err(e)
+            }
+        }
+    }
+
+    /// Terminal bookkeeping for a session whose materialization failed
+    /// on an id-addressed message. (The step-round adoption path
+    /// reports a `Failed` outcome instead; the pool and platform
+    /// handle the fallout there.)
+    fn fail_session(&self, id: &str, err: &str) {
+        self.ctx.events.error("executor", id, format!("materialization failed: {}", err));
+        self.ctx.sessions.mark_failed(id, err);
+        self.shared.remove_route(id);
+    }
+
+    /// Build the run (fresh start or checkpoint resume) on this thread
+    /// and register ownership (route re-homed to us). The claim was
+    /// already counted into this worker's live tally at pop time; a
+    /// failure — or a detach that raced the materialization — releases
+    /// it here.
+    fn spawn(&mut self, p: PendingSession) -> Result<(), String> {
+        match self.try_spawn(p) {
+            Ok(true) => Ok(()),
+            Ok(false) => {
+                // Detached while materializing: the fresh run was
+                // dropped; release the claim.
+                self.shared.live_dec(self.index);
+                Ok(())
+            }
+            Err(e) => {
+                self.shared.live_dec(self.index);
+                Err(e)
+            }
+        }
+    }
+
+    /// Returns `Ok(false)` when a concurrent detach tombstoned the
+    /// session while it was being built (the run is discarded).
+    fn try_spawn(&mut self, p: PendingSession) -> Result<bool, String> {
+        if self.engine.is_none() {
+            let e = Engine::new(&self.ctx.artifacts_dir)
+                .map_err(|e| format!("worker {}: engine init: {:#}", self.index, e))?;
+            self.ctx.events.debug(
+                "executor",
+                "",
+                format!("worker {} engine up ({})", self.index, e.platform_name()),
+            );
+            self.engine = Some(Arc::new(e));
+        }
+        let engine = self.engine.as_ref().expect("engine just initialized").clone();
+        let PendingSession { spec, resume } = p;
+        let gen = generator_for(&spec.model, spec.seed)
+            .ok_or_else(|| format!("no data generator for model {}", spec.model))?;
+        let id = spec.id.clone();
+        let run = build_run(&self.ctx, engine, spec, gen, resume).map_err(|e| format!("{:#}", e))?;
+        if !self.shared.register_live(&id, self.index) {
+            return Ok(false);
+        }
+        self.runs.insert(id, run);
+        Ok(true)
+    }
+
+    /// Drop a live run and its load accounting (the route entry is the
+    /// pool's to clean up).
+    fn drop_run(&mut self, id: &str) {
+        if self.runs.remove(id).is_some() {
+            self.shared.live_dec(self.index);
         }
     }
 }
 
-fn spawn_run(
-    index: usize,
+fn build_run(
     ctx: &WorkerCtx,
-    engine: &mut Option<Arc<Engine>>,
-    runs: &mut BTreeMap<String, SessionRun>,
+    engine: Arc<Engine>,
     spec: SessionSpec,
+    gen: Box<dyn crate::data::DataGen>,
     resume: bool,
-) -> Result<(), String> {
-    if engine.is_none() {
-        let e = Engine::new(&ctx.artifacts_dir)
-            .map_err(|e| format!("worker {}: engine init: {:#}", index, e))?;
-        ctx.events.debug(
-            "executor",
-            "",
-            format!("worker {} engine up ({})", index, e.platform_name()),
-        );
-        *engine = Some(Arc::new(e));
-    }
-    let engine = engine.as_ref().expect("engine just initialized").clone();
-    let gen = generator_for(&spec.model, spec.seed)
-        .ok_or_else(|| format!("no data generator for model {}", spec.model))?;
-    let id = spec.id.clone();
-    let run = if resume {
+) -> anyhow::Result<SessionRun> {
+    if resume {
         SessionRun::resume(
             engine,
             spec,
@@ -228,9 +368,6 @@ fn spawn_run(
             ctx.clock.clone(),
         )
     }
-    .map_err(|e| format!("{:#}", e))?;
-    runs.insert(id, run);
-    Ok(())
 }
 
 fn apply_command(run: &mut SessionRun, cmd: SessionCommand) -> Result<(), String> {

@@ -20,7 +20,41 @@
 //! `artifacts/*.hlo.txt` through the PJRT CPU client (`xla` crate) and
 //! executes them from the session hot path.
 //!
-//! Start with [`api::NsmlPlatform`] or the `nsml` binary.
+//! # Module map
+//!
+//! Requests flow top-down; each layer only calls the one below it:
+//!
+//! * [`cli`] / [`web`] — user surfaces; both speak the versioned wire
+//!   vocabulary ([`api::ApiRequest`] / [`api::ApiResponse`]).
+//! * [`api`] — the three-layer API: wire format, the
+//!   [`api::PlatformService::dispatch`] command/query entry point, and
+//!   the [`api::NsmlPlatform`] facade that composes every subsystem.
+//! * [`executor`] — the work-stealing session-execution worker pool;
+//!   each `std::thread` worker owns its live runs and a thread-local
+//!   PJRT engine.
+//! * [`scheduler`] / [`cluster`] / [`container`] — placement policies
+//!   with leader election over a simulated GPU cluster (heartbeats,
+//!   failure injection, utilization monitoring) and the containerized
+//!   execution substrate.
+//! * [`session`] / [`runtime`] / [`data`] — training state machines
+//!   over the PJRT engine and the procedural dataset generators.
+//! * [`storage`] / [`leaderboard`] / [`automl`] / [`events`] /
+//!   [`util`] — object store + checkpoints, per-dataset ranking,
+//!   hyperparameter search, the audit log, and dependency-free
+//!   utilities (JSON, TOML, argparse, tables, plots, bench harness).
+//!
+//! # Quickstart
+//!
+//! ```bash
+//! bash scripts/verify.sh              # build + test + lint gate
+//! cargo run --example quickstart      # submit, train, rank a session
+//! cargo run -- run main.py -d mnist   # the same through the CLI
+//! ```
+//!
+//! Start with [`api::NsmlPlatform`] or the `nsml` binary. The repo's
+//! `README.md` has the CLI tour; `docs/ARCHITECTURE.md` walks a `run`
+//! dispatch and a fork-join step round (including the work-steal path)
+//! through every layer; `docs/BENCHMARKS.md` documents the perf gates.
 
 pub mod util;
 pub mod events;

@@ -165,6 +165,19 @@ impl SessionStore {
         }
     }
 
+    /// Flip a non-terminal record to `Failed` with a reason (no-op on
+    /// terminal records; keeps the first recorded failure message).
+    pub fn mark_failed(&self, id: &str, err: &str) -> bool {
+        self.update(id, |r| {
+            if !r.state.is_terminal() {
+                r.state = SessionState::Failed;
+                if r.failure.is_none() {
+                    r.failure = Some(err.to_string());
+                }
+            }
+        })
+    }
+
     pub fn list(&self) -> Vec<SessionRecord> {
         self.inner.lock().unwrap().values().cloned().collect()
     }

@@ -13,10 +13,14 @@
 //! * `GET /api/session/<id…>`    — JSON (with metrics)
 //! * `GET /api/board/<dataset>`  — JSON
 //! * `GET /api/cluster`          — JSON
+//! * `GET /api/v1/executor`      — JSON executor-pool telemetry
+//!   (per-worker busy-time, live sessions, queue depth, steal counts)
+//!   dispatched as an `executor_status` query through the attached
+//!   service
 //! * `POST /api/v1/<verb>`       — dispatch any `ApiRequest` verb (`run`,
 //!   `pause`, `resume`, `stop`, `infer`, `drive`, `run_to_completion`,
 //!   `kill_node`, `list_sessions`, `get_session`, `board`,
-//!   `cluster_status`, `submit_trial_batch`) into the attached
+//!   `cluster_status`, `executor_status`, `submit_trial_batch`) into the attached
 //!   [`PlatformService`](crate::api::PlatformService); the JSON body is
 //!   the verb's `args` object and the reply is an `ApiResponse`
 //!   envelope. Error codes map to HTTP: `not_found`→404,
@@ -149,12 +153,7 @@ pub fn handle(state: &WebState, method: &str, path: &str, body: &str) -> Respons
 /// as body (empty body = `{}`); the web UI thus *wraps* the CLI verbs.
 fn handle_api_post(state: &WebState, verb: &str, body: &str) -> Response {
     let Some(api) = &state.api else {
-        return Response {
-            status: 503,
-            content_type: "text/plain",
-            body: "platform service not attached (read-only web ui)\n".into(),
-            allow: None,
-        };
+        return service_unavailable();
     };
     let resp = if body.trim().is_empty() {
         match ApiRequest::from_verb_args(verb, &Json::obj()) {
@@ -170,6 +169,20 @@ fn handle_api_post(state: &WebState, verb: &str, body: &str) -> Response {
             },
         }
     };
+    api_response(resp)
+}
+
+fn service_unavailable() -> Response {
+    Response {
+        status: 503,
+        content_type: "text/plain",
+        body: "platform service not attached (read-only web ui)\n".into(),
+        allow: None,
+    }
+}
+
+/// Serialize an `ApiResponse` envelope with its HTTP status mapping.
+fn api_response(resp: ApiResponse) -> Response {
     let status = match &resp {
         ApiResponse::Error { error } => match error.code {
             ErrorCode::NotFound => 404,
@@ -182,8 +195,20 @@ fn handle_api_post(state: &WebState, verb: &str, body: &str) -> Response {
     Response { status, content_type: "application/json", body: resp.to_json().to_string(), allow: None }
 }
 
+/// `GET /api/v1/executor`: the executor-status query as a read route,
+/// so dashboards can poll per-worker load without a POST body.
+fn executor_json(state: &WebState) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::ExecutorStatus))
+}
+
 fn handle_get(state: &WebState, path: &str) -> Response {
     if path.starts_with("/api/v1/") {
+        if path == "/api/v1/executor" {
+            return executor_json(state);
+        }
         return Response::method_not_allowed("POST");
     }
     match path {
@@ -625,6 +650,59 @@ mod tests {
         let s = state();
         let r = handle(&s, "POST", "/api/v1/list_sessions", "");
         assert_eq!(r.status, 503);
+        // The executor read route needs the service too.
+        assert_eq!(handle(&s, "GET", "/api/v1/executor", "").status, 503);
+    }
+
+    #[test]
+    fn executor_route_serves_worker_telemetry() {
+        use crate::api::{ExecutorStats, WorkerStatView};
+        // Stub service answering a canned executor snapshot.
+        let (api, rx) = crate::api::service_channel();
+        std::thread::spawn(move || {
+            while let Ok(call) = rx.recv() {
+                let resp = match call.request() {
+                    ApiRequest::ExecutorStatus => ApiResponse::Executor {
+                        executor: ExecutorStats {
+                            workers: vec![
+                                WorkerStatView {
+                                    worker: 0,
+                                    live_sessions: 2,
+                                    queue_depth: 0,
+                                    steals: 0,
+                                    busy_ms: 12.5,
+                                },
+                                WorkerStatView {
+                                    worker: 1,
+                                    live_sessions: 2,
+                                    queue_depth: 0,
+                                    steals: 2,
+                                    busy_ms: 11.0,
+                                },
+                            ],
+                            live_sessions: 4,
+                            queue_depth: 0,
+                            total_steals: 2,
+                            work_steal: true,
+                        },
+                    },
+                    _ => ApiResponse::Sessions { sessions: vec![] },
+                };
+                call.respond(resp);
+            }
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/executor", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("executor"));
+        assert_eq!(j.at(&["data", "executor", "total_steals"]).unwrap().as_i64(), Some(2));
+        let workers = j.at(&["data", "executor", "workers"]).unwrap().as_arr().unwrap();
+        assert_eq!(workers.len(), 2);
+        assert_eq!(workers[1].get("steals").unwrap().as_i64(), Some(2));
+        // Other GET paths under /api/v1/ still require POST.
+        assert_eq!(handle(&s, "GET", "/api/v1/cluster_status", "").status, 405);
     }
 
     #[test]

@@ -4,8 +4,9 @@
 //! `PlatformService::dispatch`.
 
 use nsml::api::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, NodeStatusView, NsmlPlatform,
-    PlatformConfig, PlatformService, RunParams, SessionView, TrialSpec, ALL_KINDS, ALL_VERBS,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ExecutorStats, NodeStatusView,
+    NsmlPlatform, PlatformConfig, PlatformService, RunParams, SessionView, TrialSpec,
+    WorkerStatView, ALL_KINDS, ALL_VERBS,
 };
 use nsml::session::SessionState;
 use nsml::util::json::parse;
@@ -36,6 +37,7 @@ fn sample_requests() -> Vec<ApiRequest> {
         ApiRequest::GetSession { session: "kim/mnist/1".into() },
         ApiRequest::Board { dataset: "mnist".into(), limit: 10 },
         ApiRequest::ClusterStatus,
+        ApiRequest::ExecutorStatus,
         ApiRequest::SubmitTrialBatch {
             user: "automl".into(),
             dataset: "mnist".into(),
@@ -104,6 +106,30 @@ fn sample_responses() -> Vec<ApiResponse> {
                 fast_path: true,
                 leader: Some("sched-0".into()),
                 epoch: 2,
+            },
+        },
+        ApiResponse::Executor {
+            executor: ExecutorStats {
+                workers: vec![
+                    WorkerStatView {
+                        worker: 0,
+                        live_sessions: 3,
+                        queue_depth: 1,
+                        steals: 0,
+                        busy_ms: 42.5,
+                    },
+                    WorkerStatView {
+                        worker: 1,
+                        live_sessions: 2,
+                        queue_depth: 0,
+                        steals: 2,
+                        busy_ms: 39.0,
+                    },
+                ],
+                live_sessions: 5,
+                queue_depth: 1,
+                total_steals: 2,
+                work_steal: true,
             },
         },
         ApiResponse::Error {

@@ -1,7 +1,10 @@
 //! Integration: the parallel session execution engine. Sessions train
 //! inside the worker pool; control verbs (pause / resume-with-new-lr /
 //! stop) and failure isolation work on pool-owned runs, both through
-//! the raw [`ExecutorPool`] API and through the platform facade.
+//! the raw [`ExecutorPool`] API and through the platform facade. The
+//! work-steal path is covered end-to-end: a skewed submission is stolen
+//! by an idle worker, commands follow the re-homed mailbox, and the
+//! stolen session's metric history stays contiguous.
 
 use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
 use nsml::cluster::NodeId;
@@ -150,6 +153,138 @@ fn pause_lr_edit_resume_stop_inside_pool() {
     let rec = ctx.sessions.get(&a.id).unwrap();
     assert_eq!(rec.state, SessionState::Done);
     assert_eq!(rec.steps_done, 60);
+}
+
+#[test]
+fn stolen_session_rehomes_commands_and_keeps_history() {
+    let Some(ctx) = pool_ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pool = ExecutorPool::new(2, ctx.clone());
+    // Four sessions all pinned to node 0 — static `node % workers`
+    // routing would serialize them on worker 0 while worker 1 idles.
+    let ids: Vec<String> = (0..4u64).map(|i| format!("steal/mnist/{}", i)).collect();
+    for (i, id) in ids.iter().enumerate() {
+        let sp = spec(id, i as u64, 40);
+        ctx.sessions.insert(SessionRecord::new(sp.clone(), 0));
+        pool.submit(sp, false, Some(NodeId(0))).unwrap();
+    }
+    // Before the first round everything queues on worker 0's deque.
+    let before = pool.stats();
+    assert_eq!(before[0].queue_depth, 4, "{:?}", before);
+    assert_eq!(before[1].queue_depth, 0, "{:?}", before);
+
+    pool.step_round(10);
+
+    // Work-steal balanced the batch 2/2; worker 1's share was stolen.
+    let stats = pool.stats();
+    assert_eq!(stats[0].live_sessions, 2, "{:?}", stats);
+    assert_eq!(stats[1].live_sessions, 2, "{:?}", stats);
+    assert_eq!(stats[0].queue_depth + stats[1].queue_depth, 0, "{:?}", stats);
+    assert_eq!(stats[1].steals, 2, "{:?}", stats);
+    assert_eq!(pool.total_steals(), 2);
+
+    // Pick a stolen session: its node mapped to worker 0, but worker 1
+    // owns it now — the route (mailbox address) was re-homed.
+    let stolen = ids.iter().find(|id| pool.owner_of(id) == Some(1)).expect("a stolen session");
+
+    // Pause mid-run: the command must reach the new owner (a stale
+    // route to worker 0 would answer "not active").
+    pool.control(stolen, SessionCommand::Pause).unwrap();
+    assert_eq!(ctx.sessions.get(stolen).unwrap().state, SessionState::Paused);
+    assert!(!ctx.checkpoints.list(stolen).is_empty());
+    let paused_at = pool.inspect(stolen).unwrap().steps_done;
+
+    // While paused, rounds skip it (other sessions keep training).
+    pool.step_round(10);
+    assert_eq!(pool.inspect(stolen).unwrap().steps_done, paused_at);
+
+    // lr-edit + resume through the stolen mailbox.
+    pool.control(stolen, SessionCommand::Resume { lr: Some(0.004) }).unwrap();
+    ctx.sessions.update(stolen, |r| r.state = SessionState::Running);
+    let probe = pool.inspect(stolen).unwrap();
+    assert!((probe.lr - 0.004).abs() < 1e-6, "lr {}", probe.lr);
+
+    // Everything trains to completion despite the skewed placement.
+    let mut done = 0;
+    let mut rounds = 0;
+    while done < 4 {
+        for (id, oc) in pool.step_round(10) {
+            match oc {
+                SessionOutcome::Completed => done += 1,
+                SessionOutcome::Failed(e) => panic!("{}: {}", id, e),
+                _ => {}
+            }
+        }
+        rounds += 1;
+        assert!(rounds < 100, "skewed batch did not converge");
+    }
+    assert!(pool.is_empty());
+
+    // The stolen session's metric history is contiguous: exactly one
+    // train_loss point per step 1..=40, no gaps or replays across the
+    // steal + pause + resume.
+    let rec = ctx.sessions.get(stolen).unwrap();
+    assert_eq!(rec.state, SessionState::Done);
+    assert_eq!(rec.steps_done, 40);
+    let series = rec.metrics.series("train_loss");
+    assert_eq!(series.len(), 40, "history length");
+    for (i, (step, _)) in series.iter().enumerate() {
+        assert_eq!(*step, (i + 1) as f64, "gap at index {}", i);
+    }
+}
+
+#[test]
+fn failed_materialization_is_terminal_not_stranded() {
+    let Some(ctx) = pool_ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    let pool = ExecutorPool::new(1, ctx.clone());
+    // Known model, but resume without any checkpoint: submit-time
+    // validation passes and materialization fails later.
+    let sp = spec("ghost/mnist/0", 0, 20);
+    ctx.sessions.insert(SessionRecord::new(sp.clone(), 0));
+    pool.submit(sp, true, None).unwrap();
+    assert_eq!(pool.len(), 1);
+    // An id-addressed command forces materialization; the failure is
+    // terminal (record Failed, route gone), never a silent strand.
+    let err = pool.control("ghost/mnist/0", SessionCommand::SetLr(0.1)).unwrap_err();
+    assert!(err.to_string().contains("checkpoint"), "{}", err);
+    assert_eq!(ctx.sessions.get("ghost/mnist/0").unwrap().state, SessionState::Failed);
+    assert!(pool.is_empty());
+}
+
+#[test]
+fn static_routing_pool_never_steals() {
+    let Some(ctx) = pool_ctx() else {
+        eprintln!("skipping: artifacts not built");
+        return;
+    };
+    // The bench baseline: work_steal off keeps the skewed batch pinned.
+    let pool = ExecutorPool::with_stealing(2, ctx.clone(), false);
+    assert!(!pool.stealing());
+    for i in 0..3u64 {
+        let sp = spec(&format!("static/mnist/{}", i), i, 20);
+        ctx.sessions.insert(SessionRecord::new(sp.clone(), 0));
+        pool.submit(sp, false, Some(NodeId(0))).unwrap();
+    }
+    let mut done = 0;
+    for _ in 0..50 {
+        done += pool
+            .step_round(10)
+            .iter()
+            .filter(|(_, oc)| *oc == SessionOutcome::Completed)
+            .count();
+        if done == 3 {
+            break;
+        }
+    }
+    assert_eq!(done, 3);
+    let stats = pool.stats();
+    assert_eq!(stats[0].steals + stats[1].steals, 0, "{:?}", stats);
+    assert!(stats[1].live_sessions == 0 && stats[1].queue_depth == 0, "{:?}", stats);
 }
 
 #[test]
