@@ -1,0 +1,106 @@
+//! Event-spine headline: incremental subscriber reads vs the old
+//! clone-on-read `EventLog::all()` at a full 100k-event ring, plus raw
+//! publish and 8-way fan-out throughput.
+//!
+//! The old `EventLog` cloned its entire bounded deque on every read, so
+//! a dashboard polling "what's new" paid for 100k clones per poll. The
+//! bus's sequence-numbered cursors clone only the events published
+//! since the last poll.
+//!
+//! Acceptance bar: reading one 128-event tail through a subscription is
+//! ≥5× faster than one `EventLog::all()` snapshot at 100k events.
+//!
+//! Run: `cargo bench --bench bench_events`
+//! Smoke: `BENCH_SMOKE=1 cargo bench --bench bench_events`
+
+use nsml::events::{EventKind, EventLog, Level};
+use nsml::util::bench::{smoke, Bench};
+use nsml::util::clock::sim_clock;
+
+/// Events published (and read) per subscription-poll iteration.
+const BURST: usize = 128;
+/// Concurrent subscribers in the fan-out scenario.
+const SUBSCRIBERS: usize = 8;
+
+fn publish_burst(log: &EventLog, n: usize) {
+    for i in 0..n {
+        log.bus().publish(
+            Level::Info,
+            "bench",
+            "bench/events/1",
+            EventKind::MetricReported { name: "train_loss".into(), step: i as u64, value: 0.5 },
+        );
+    }
+}
+
+fn main() {
+    let backlog: usize = if smoke() { 2_000 } else { 100_000 };
+    let mut bench = Bench::new("events");
+    println!(
+        "events bench: {} backlog, {}-event bursts, {} fan-out subscribers{}",
+        backlog,
+        BURST,
+        SUBSCRIBERS,
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    let (clock, _) = sim_clock();
+    let log = EventLog::new(clock);
+    publish_burst(&log, backlog);
+    assert_eq!(log.len(), backlog);
+
+    // Baseline: the legacy full-ring clone every reader used to pay.
+    bench.run_with_units(&format!("EventLog::all clone at {}", backlog), backlog as f64, || {
+        std::hint::black_box(log.all().len());
+    });
+
+    // Cursor read: publish a burst, then one subscriber reads only the
+    // tail — the `nsml logs -f` / `GET /api/v1/events` polling shape.
+    let mut sub = log.bus().subscribe();
+    bench.run_with_units("subscription tail read", BURST as f64, || {
+        publish_burst(&log, BURST);
+        let got = sub.poll();
+        assert_eq!(got.len(), BURST);
+        std::hint::black_box(got.len());
+    });
+
+    // Fan-out: every consumer (leaderboard, monitor, web pollers…)
+    // holds its own cursor over the same ring.
+    let mut subs: Vec<_> = (0..SUBSCRIBERS).map(|_| log.bus().subscribe()).collect();
+    bench.run_with_units(
+        &format!("fan-out x{} subscribers", SUBSCRIBERS),
+        (SUBSCRIBERS * BURST) as f64,
+        || {
+            publish_burst(&log, BURST);
+            for sub in &mut subs {
+                assert_eq!(sub.poll().len(), BURST);
+            }
+        },
+    );
+
+    // Raw publish throughput (ring append + seq assignment).
+    bench.run_with_units("publish burst", BURST as f64, || {
+        publish_burst(&log, BURST);
+    });
+
+    bench.finish();
+
+    let all_ms = bench.result(&format!("EventLog::all clone at {}", backlog)).unwrap().mean_ms();
+    let tail_ms = bench.result("subscription tail read").unwrap().mean_ms();
+    let speedup = all_ms / tail_ms;
+    println!(
+        "subscriber tail read is {:.1}x faster than the full clone ({:.3}ms -> {:.3}ms)",
+        speedup, all_ms, tail_ms
+    );
+    if smoke() {
+        println!("smoke mode: skipping the speedup assertion");
+    } else {
+        assert!(
+            speedup >= 5.0,
+            "expected subscription reads >=5x faster than EventLog::all() at {} events, got {:.2}x",
+            backlog,
+            speedup
+        );
+        println!("OK: >=5x incremental-read bar met");
+    }
+}

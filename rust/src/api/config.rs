@@ -31,6 +31,12 @@ pub struct PlatformConfig {
     /// Let idle executor workers steal pending sessions from loaded
     /// peers (off = static `node % workers` routing).
     pub work_steal: bool,
+    /// Echo bus events to stderr as they publish (`[events] echo`).
+    /// Explicit config only — the old `NSML_LOG` env sniffing is gone,
+    /// so tests and the CLI control echo deterministically.
+    pub event_echo: bool,
+    /// Event-bus ring retention in events (`[events] capacity`).
+    pub event_capacity: usize,
 }
 
 impl Default for PlatformConfig {
@@ -49,6 +55,8 @@ impl Default for PlatformConfig {
             seed: 0,
             workers: 4,
             work_steal: true,
+            event_echo: false,
+            event_capacity: crate::events::DEFAULT_CAPACITY,
         }
     }
 }
@@ -98,6 +106,9 @@ impl PlatformConfig {
             seed: cfg.int_or("platform", "seed", 0) as u64,
             workers: (cfg.int_or("executor", "workers", dflt.workers as i64).max(1)) as usize,
             work_steal: cfg.bool_or("executor", "work_steal", dflt.work_steal),
+            event_echo: cfg.bool_or("events", "echo", dflt.event_echo),
+            event_capacity: (cfg.int_or("events", "capacity", dflt.event_capacity as i64).max(1))
+                as usize,
         })
     }
 }
@@ -132,6 +143,9 @@ seed = 9
 [executor]
 workers = 2
 work_steal = false
+[events]
+echo = true
+capacity = 500
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -145,11 +159,16 @@ work_steal = false
         assert_eq!(c.seed, 9);
         assert_eq!(c.workers, 2);
         assert!(!c.work_steal);
+        assert!(c.event_echo);
+        assert_eq!(c.event_capacity, 500);
     }
 
     #[test]
     fn empty_toml_is_defaults() {
         let c = PlatformConfig::from_toml_str("").unwrap();
         assert_eq!(c.nodes, PlatformConfig::default().nodes);
+        // Echo is opt-in config, never sniffed from the environment.
+        assert!(!c.event_echo);
+        assert_eq!(c.event_capacity, crate::events::DEFAULT_CAPACITY);
     }
 }

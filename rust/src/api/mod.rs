@@ -24,6 +24,15 @@
 //! need rich in-process data (metric series, rendering) read the facade
 //! directly.
 //!
+//! Observability flows through the typed event bus
+//! ([`crate::events::EventBus`]): subsystems publish structured events,
+//! and the facade's derived-consumer subscription (pumped each `drive`
+//! round) turns `done` transitions into leaderboard submissions and
+//! util/worker samples into [`UtilizationMonitor`](crate::cluster::UtilizationMonitor)
+//! records — those views are projections of the event stream, not
+//! independently mutated state. `events_since` pages the same stream
+//! over the wire.
+//!
 //! Concurrency model: platform control state (cluster, scheduler,
 //! sessions, leaderboard) is thread-safe, and model *execution* runs on
 //! the [`crate::executor`] worker pool — each worker thread owns its
@@ -60,7 +69,7 @@ pub use wire::{
 use crate::cluster::Cluster;
 use crate::container::{ContainerManager, ImageSpec};
 use crate::data::{dataset_for, model_for_dataset, register_all};
-use crate::events::EventLog;
+use crate::events::{EventKind, EventLog, Level, Subscription};
 use crate::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
 use crate::leaderboard::{Leaderboard, Submission};
 use crate::runtime::{Engine, TensorData, TrainableModel};
@@ -123,6 +132,12 @@ pub struct NsmlPlatform {
     /// The parallel session execution pool; live runs are owned by its
     /// worker threads, keyed here only through the routing table.
     executor: Arc<ExecutorPool>,
+    /// Cursor for the derived-view consumers. Pumped after every drive
+    /// round, it is the *only* write path into the leaderboard and the
+    /// utilization monitor: `done` state events become board
+    /// submissions, `util`/`worker` sample events become monitor
+    /// records. Everything those views show was first a bus event.
+    consumers: std::sync::Mutex<Subscription>,
 }
 
 impl NsmlPlatform {
@@ -133,7 +148,12 @@ impl NsmlPlatform {
         // so tests/benches are deterministic and instant while relative
         // costs (cold vs warm start, failover) stay measurable.
         let (clock, sim) = sim_clock();
-        let events = EventLog::new(clock.clone());
+        let events = EventLog::new(clock.clone())
+            .with_echo(config.event_echo)
+            .with_capacity(config.event_capacity);
+        // Subscribe the derived-view consumers before any subsystem can
+        // publish, so no completion or sample event is ever missed.
+        let consumers = std::sync::Mutex::new(events.bus().subscribe());
         let cluster = Cluster::homogeneous(
             clock.clone(),
             events.clone(),
@@ -183,6 +203,7 @@ impl NsmlPlatform {
             monitor: crate::cluster::UtilizationMonitor::new(),
             engine,
             executor,
+            consumers,
             config,
         };
         platform.bootstrap()?;
@@ -256,6 +277,12 @@ impl NsmlPlatform {
         spec.use_scan = opts.use_scan;
 
         self.sessions.insert(SessionRecord::new(spec.clone(), self.clock.now_ms()));
+        self.events.bus().publish(
+            Level::Debug,
+            "platform",
+            &id,
+            EventKind::StateChanged { from: "new".into(), to: "queued".into(), step: 0 },
+        );
         let job = JobSpec {
             id: id.clone(),
             user: user.to_string(),
@@ -277,6 +304,7 @@ impl NsmlPlatform {
     /// Container bring-up + session start (or auto-resume) on a node.
     fn prepare_and_start(&self, id: &str, node: crate::cluster::NodeId) -> Result<()> {
         let rec = self.sessions.get(id).ok_or_else(|| anyhow!("unknown session {}", id))?;
+        self.publish_transition(id, Some((rec.state, rec.steps_done)), "preparing", Level::Debug);
         self.sessions.update(id, |r| {
             r.state = SessionState::Preparing;
             r.node = Some(node);
@@ -342,10 +370,14 @@ impl NsmlPlatform {
                 SessionOutcome::Failed(e) => {
                     progressed += 1;
                     self.events.error("platform", &id, format!("session failed: {}", e));
-                    // Training failures flip the record inside the run;
+                    // Training failures flip the record inside the run
+                    // (which publishes the failed transition itself);
                     // materialization failures (bad resume checkpoint,
-                    // engine init) reach here with it still non-terminal.
+                    // engine init) reach here with it still
+                    // non-terminal, so the transition is published here.
+                    let prev = self.sessions.get(&id).map(|r| (r.state, r.steps_done));
                     self.sessions.mark_failed(&id, &e);
+                    self.publish_transition(&id, prev, "failed", Level::Error);
                     self.release_and_backfill(&id)?;
                 }
             }
@@ -356,24 +388,175 @@ impl NsmlPlatform {
             self.prepare_and_start(&job.id, node)?;
         }
 
-        // 5. Ops telemetry: cluster-level sample + one per-worker
-        //    executor sample for this round.
-        self.monitor.sample(&self.cluster, self.master.queue_len());
-        let now = self.clock.now_ms();
-        self.monitor.record_workers(
-            self.executor
-                .stats()
-                .iter()
-                .map(|s| crate::cluster::monitor::WorkerSample {
-                    at_ms: now,
+        // 5. Ops telemetry rides the bus: publish one cluster-level
+        //    sample and one per-worker snapshot for this round, then…
+        let (_, free) = self.cluster.gpu_totals();
+        self.events.bus().publish(
+            Level::Debug,
+            "platform",
+            "",
+            EventKind::UtilizationSampled {
+                utilization: self.cluster.utilization(),
+                free_gpus: free,
+                alive_nodes: self.cluster.alive_count(),
+                queue_depth: self.master.queue_len(),
+            },
+        );
+        for s in self.executor.stats() {
+            self.events.bus().publish(
+                Level::Debug,
+                "executor",
+                "",
+                EventKind::WorkerSampled {
                     worker: s.worker,
                     busy_ms: s.busy_ms,
                     live_sessions: s.live_sessions,
                     queue_depth: s.queue_depth,
                     steals: s.steals,
-                })
-                .collect(),
+                },
+            );
+        }
+        // 6. …pump the derived consumers: completions reach the
+        //    leaderboard, samples reach the monitor — via the bus, not
+        //    direct calls.
+        self.pump_consumers();
+        Ok(progressed)
+    }
+
+    /// Drain the consumer subscription into the derived views. This is
+    /// the single write path for the leaderboard and the utilization
+    /// monitor (acceptance: no direct submit/record calls from session
+    /// or executor paths).
+    fn pump_consumers(&self) {
+        // Poll under the lock, process outside it: submissions take the
+        // leaderboard/session locks and must not nest inside ours.
+        let (drained, newly_dropped) = {
+            let mut sub = self.consumers.lock().unwrap();
+            let before = sub.dropped();
+            let events = sub.poll();
+            (events, sub.dropped() - before)
+        };
+        for e in drained {
+            match &e.kind {
+                EventKind::StateChanged { to, .. } if to == "done" => {
+                    self.submit_completed(&e.subject, e.at_ms);
+                }
+                EventKind::UtilizationSampled {
+                    utilization,
+                    free_gpus,
+                    alive_nodes,
+                    queue_depth,
+                } => {
+                    self.monitor.record_sample(crate::cluster::monitor::Sample {
+                        at_ms: e.at_ms,
+                        utilization: *utilization,
+                        free_gpus: *free_gpus,
+                        alive_nodes: *alive_nodes,
+                        queue_depth: *queue_depth,
+                    });
+                }
+                EventKind::WorkerSampled {
+                    worker,
+                    busy_ms,
+                    live_sessions,
+                    queue_depth,
+                    steals,
+                } => {
+                    self.monitor.record_worker(crate::cluster::monitor::WorkerSample {
+                        at_ms: e.at_ms,
+                        worker: *worker,
+                        busy_ms: *busy_ms,
+                        live_sessions: *live_sessions,
+                        queue_depth: *queue_depth,
+                        steals: *steals,
+                    });
+                }
+                _ => {}
+            }
+        }
+        // Ring overflow between pumps could have aged out a `done`
+        // event before we read it — a completion must never miss the
+        // leaderboard, so reconcile every Done record (submit keeps the
+        // better score, so resubmitting already-ranked sessions is a
+        // no-op). Lost util/worker samples are accepted: telemetry is a
+        // lossy series by design.
+        if newly_dropped > 0 {
+            self.events.warn(
+                "platform",
+                "",
+                format!("consumer lag: {} events aged out unread; reconciling", newly_dropped),
+            );
+            for rec in self.sessions.by_state(SessionState::Done) {
+                // Stamp with the real completion time, not the
+                // reconcile time — tie-breaks rank earlier finishers
+                // first even when their done event was dropped.
+                let at_ms = rec.finished_at_ms.unwrap_or_else(|| self.clock.now_ms());
+                self.submit_completed(&rec.spec.id, at_ms);
+            }
+        }
+    }
+
+    /// Publish a `StateChanged` transition for `id` at `level`, given
+    /// the `(state, steps)` captured *before* the store update — a
+    /// record that was already terminal publishes nothing.
+    fn publish_transition(
+        &self,
+        id: &str,
+        prev: Option<(SessionState, u64)>,
+        to: &str,
+        level: Level,
+    ) {
+        if let Some((state, steps)) = prev.filter(|(s, _)| !s.is_terminal()) {
+            self.events.bus().publish(
+                level,
+                "platform",
+                id,
+                EventKind::StateChanged {
+                    from: state.as_str().into(),
+                    to: to.to_string(),
+                    step: steps,
+                },
+            );
+        }
+    }
+
+    /// Leaderboard submission for a session whose `done` transition
+    /// arrived on the bus; `at_ms` is the completion event's timestamp.
+    fn submit_completed(&self, id: &str, at_ms: u64) {
+        let Some(rec) = self.sessions.get(id) else { return };
+        let Some(best) = rec.best_metric else { return };
+        let manifest = match self.engine.manifest().model(&rec.spec.model) {
+            Ok(m) => m,
+            Err(e) => {
+                self.events.error("platform", id, format!("board submit: {:#}", e));
+                return;
+            }
+        };
+        self.leaderboard.submit(
+            &rec.spec.dataset,
+            Submission {
+                session: id.to_string(),
+                user: rec.spec.user.clone(),
+                model: rec.spec.model.clone(),
+                metric_name: manifest.metric_name.clone(),
+                value: best,
+                step: rec.steps_done,
+                at_ms,
+            },
         );
+    }
+
+    /// One pump-loop round: `drive`, then advance virtual time so
+    /// heartbeat/lease logic stays live between rounds. The shared body
+    /// of [`run_to_completion`](Self::run_to_completion) and the CLI's
+    /// `nsml logs -f` follow loop.
+    pub fn drive_round(&self, chunk: u64) -> Result<usize> {
+        let progressed = self.drive(chunk)?;
+        self.cluster.heartbeat_all();
+        if let Some((leader, _)) = self.election.leader() {
+            self.election.heartbeat(leader);
+        }
+        self.sim.advance(10);
         Ok(progressed)
     }
 
@@ -389,13 +572,7 @@ impl NsmlPlatform {
             if pending == 0 {
                 return Ok(());
             }
-            self.drive(chunk)?;
-            // Advance virtual time so heartbeat/lease logic stays live.
-            self.cluster.heartbeat_all();
-            if let Some((leader, _)) = self.election.leader() {
-                self.election.heartbeat(leader);
-            }
-            self.sim.advance(10);
+            self.drive_round(chunk)?;
         }
         let stuck: Vec<String> = self
             .sessions
@@ -413,27 +590,12 @@ impl NsmlPlatform {
         ))
     }
 
-    /// Session completed: leaderboard submission + resource release.
-    /// (The worker already dropped the run and marked the record done.)
+    /// Session completed: release its resources. The leaderboard
+    /// submission is *not* made here — the run's `done` StateChanged
+    /// event drives it when the consumer subscription is pumped at the
+    /// end of this drive round.
     fn finalize(&self, id: &str) -> Result<()> {
-        let rec = self.sessions.get(id).ok_or_else(|| anyhow!("unknown session {}", id))?;
-        if let Some(best) = rec.best_metric {
-            let manifest = self.engine.manifest().model(&rec.spec.model)?;
-            self.leaderboard.submit(
-                &rec.spec.dataset,
-                Submission {
-                    session: id.to_string(),
-                    user: rec.spec.user.clone(),
-                    model: rec.spec.model.clone(),
-                    metric_name: manifest.metric_name.clone(),
-                    value: best,
-                    step: rec.steps_done,
-                    at_ms: self.clock.now_ms(),
-                },
-            );
-        }
-        self.release_and_backfill(id)?;
-        Ok(())
+        self.release_and_backfill(id)
     }
 
     /// The shared tail of every completion/failure path: tear down the
@@ -453,12 +615,14 @@ impl NsmlPlatform {
         for id in orphans {
             self.executor.detach(id);
             self.containers.stop_job(id);
+            let prev = self.sessions.get(id).map(|r| (r.state, r.steps_done));
             self.sessions.update(id, |r| {
                 if !r.state.is_terminal() {
                     r.state = SessionState::Queued;
                     r.node = None;
                 }
             });
+            self.publish_transition(id, prev, "queued", Level::Warn);
         }
         let (_requeued, placed) = self.master.handle_orphans(orphans);
         for (job, node) in placed {
@@ -486,7 +650,17 @@ impl NsmlPlatform {
     /// the paper's in-training hyperparameter tuning.
     pub fn resume(&self, id: &str, new_lr: Option<f64>) -> Result<()> {
         self.control_session(id, SessionCommand::Resume { lr: new_lr })?;
-        self.sessions.update(id, |r| r.state = SessionState::Running);
+        let prev = self
+            .sessions
+            .get(id)
+            .filter(|r| r.state != SessionState::Running)
+            .map(|r| (r.state, r.steps_done));
+        self.publish_transition(id, prev, "running", Level::Info);
+        self.sessions.update(id, |r| {
+            if !r.state.is_terminal() {
+                r.state = SessionState::Running;
+            }
+        });
         Ok(())
     }
 
@@ -514,11 +688,13 @@ impl NsmlPlatform {
         self.containers.stop_job(id);
         self.master.cancel_queued(id);
         let placed = self.master.complete(id);
+        let prev = self.sessions.get(id).map(|r| (r.state, r.steps_done));
         self.sessions.update(id, |r| {
             if !r.state.is_terminal() {
                 r.state = SessionState::Stopped;
             }
         });
+        self.publish_transition(id, prev, "stopped", Level::Info);
         self.events.info("platform", id, "stopped by user");
         for (job, node) in placed {
             self.prepare_and_start(&job.id, node)?;

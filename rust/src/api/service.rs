@@ -185,6 +185,26 @@ impl PlatformService {
             }
             ApiRequest::ClusterStatus => ApiResponse::Cluster { cluster: self.cluster_view() },
             ApiRequest::ExecutorStatus => ApiResponse::Executor { executor: self.executor_view() },
+            ApiRequest::EventsSince { since, kind, subject, limit } => {
+                if let Some(k) = &kind {
+                    if !crate::events::ALL_EVENT_KINDS.contains(&k.as_str()) {
+                        return ApiResponse::Error {
+                            error: ApiError::invalid(format!(
+                                "unknown event kind '{}' (expected one of: {})",
+                                k,
+                                crate::events::ALL_EVENT_KINDS.join(", ")
+                            )),
+                        };
+                    }
+                }
+                let filter = crate::events::EventFilter { kind, subject, ..Default::default() };
+                let batch = self.platform.events.bus().read_since(since, limit, &filter);
+                ApiResponse::Events {
+                    events: batch.events,
+                    next: batch.next,
+                    dropped: batch.dropped,
+                }
+            }
             ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
                 if trials.is_empty() {
                     return ApiResponse::Error {
@@ -462,10 +482,56 @@ mod tests {
         assert!(!resp.is_error(), "{:?}", resp);
         let api_events = s.platform().events.query(Some("api"), crate::events::Level::Info);
         assert!(
-            api_events.iter().any(|e| e.message.contains("dispatch run") && e.message.contains("user=audit")),
+            api_events.iter().any(|e| {
+                let m = e.message();
+                m.contains("dispatch run") && m.contains("user=audit")
+            }),
             "{:?}",
-            api_events.iter().map(|e| &e.message).collect::<Vec<_>>()
+            api_events.iter().map(|e| e.message()).collect::<Vec<_>>()
         );
+    }
+
+    #[test]
+    fn events_since_pages_the_bus() {
+        let Some(s) = service() else { return };
+        // Unknown kinds are rejected before touching the bus.
+        match s.dispatch(ApiRequest::EventsSince {
+            since: 0,
+            kind: Some("frobnicate".into()),
+            subject: None,
+            limit: 10,
+        }) {
+            ApiResponse::Error { error } => {
+                assert_eq!(error.code, crate::api::ErrorCode::InvalidArgument)
+            }
+            other => panic!("{:?}", other),
+        }
+        // Submit a run; its typed placement decision lands on the bus.
+        let resp = s.dispatch(ApiRequest::Run(crate::api::RunParams::new("ev", "mnist")));
+        assert!(!resp.is_error(), "{:?}", resp);
+        let next = match s.dispatch(ApiRequest::EventsSince {
+            since: 0,
+            kind: Some("placement".into()),
+            subject: None,
+            limit: 100,
+        }) {
+            ApiResponse::Events { events, next, dropped } => {
+                assert_eq!(dropped, 0);
+                assert_eq!(events.len(), 1);
+                assert!(matches!(
+                    events[0].kind,
+                    crate::events::EventKind::PlacementDecided { from_queue: false, .. }
+                ));
+                next
+            }
+            other => panic!("{:?}", other),
+        };
+        // The returned cursor resumes past everything already read.
+        let req = ApiRequest::EventsSince { since: next, kind: None, subject: None, limit: 100 };
+        match s.dispatch(req) {
+            ApiResponse::Events { events, .. } => assert!(events.is_empty(), "{:?}", events),
+            other => panic!("{:?}", other),
+        }
     }
 
     #[test]

@@ -16,12 +16,18 @@
 //! {"v":1,"kind":"error","data":{"error":{"code":"not_found","message":"…"}}}
 //! ```
 
+use crate::events::Event;
 use crate::session::{SessionRecord, SessionState};
 use crate::util::json::Json;
 use std::fmt;
 
 /// Wire protocol version; bump on breaking envelope changes.
 pub const API_VERSION: u64 = 1;
+
+/// Largest `events_since` page a wire client may request. One page is
+/// cloned out of the bus ring under its lock, so this bounds both the
+/// response size and the publisher stall.
+pub const MAX_EVENT_PAGE: u64 = 10_000;
 
 /// Every request verb, in the order of the [`ApiRequest`] variants.
 pub const ALL_VERBS: &[&str] = &[
@@ -38,6 +44,7 @@ pub const ALL_VERBS: &[&str] = &[
     "board",
     "cluster_status",
     "executor_status",
+    "events_since",
     "submit_trial_batch",
 ];
 
@@ -53,6 +60,7 @@ pub const ALL_KINDS: &[&str] = &[
     "board",
     "cluster",
     "executor",
+    "events",
     "error",
 ];
 
@@ -311,6 +319,13 @@ pub enum ApiRequest {
     ClusterStatus,
     /// Executor-pool snapshot: per-worker load + steal telemetry.
     ExecutorStatus,
+    /// Cursor-paged incremental read of the platform event bus:
+    /// events with `seq >= since`, optionally filtered by kind name
+    /// and/or subject, at most `limit` per page (`GET /api/v1/events`,
+    /// `nsml logs -f`). `limit` is 1..=[`MAX_EVENT_PAGE`] on the wire —
+    /// unbounded reads (which would clone the whole ring under its
+    /// lock) stay an in-process-only capability.
+    EventsSince { since: u64, kind: Option<String>, subject: Option<String>, limit: usize },
     /// Place N hyperparameter trials in one dispatch (automl batching).
     SubmitTrialBatch { user: String, dataset: String, trials: Vec<TrialSpec> },
 }
@@ -331,6 +346,7 @@ impl ApiRequest {
             ApiRequest::Board { .. } => "board",
             ApiRequest::ClusterStatus => "cluster_status",
             ApiRequest::ExecutorStatus => "executor_status",
+            ApiRequest::EventsSince { .. } => "events_since",
             ApiRequest::SubmitTrialBatch { .. } => "submit_trial_batch",
         }
     }
@@ -344,6 +360,7 @@ impl ApiRequest {
                 | ApiRequest::Board { .. }
                 | ApiRequest::ClusterStatus
                 | ApiRequest::ExecutorStatus
+                | ApiRequest::EventsSince { .. }
                 | ApiRequest::Infer { .. }
         )
     }
@@ -376,6 +393,12 @@ impl ApiRequest {
                 args.set("node", (*node).into());
             }
             ApiRequest::ListSessions | ApiRequest::ClusterStatus | ApiRequest::ExecutorStatus => {}
+            ApiRequest::EventsSince { since, kind, subject, limit } => {
+                args.set("since", (*since).into())
+                    .set("kind", kind.as_deref().map(Json::from).unwrap_or(Json::Null))
+                    .set("subject", subject.as_deref().map(Json::from).unwrap_or(Json::Null))
+                    .set("limit", (*limit).into());
+            }
             ApiRequest::Board { dataset, limit } => {
                 args.set("dataset", dataset.as_str().into()).set("limit", (*limit).into());
             }
@@ -435,6 +458,21 @@ impl ApiRequest {
             }),
             "cluster_status" => Ok(ApiRequest::ClusterStatus),
             "executor_status" => Ok(ApiRequest::ExecutorStatus),
+            "events_since" => {
+                let limit = opt_u64(args, "limit")?.unwrap_or(256);
+                if limit == 0 || limit > MAX_EVENT_PAGE {
+                    return Err(ApiError::invalid(format!(
+                        "events_since: 'limit' must be 1..={} (got {})",
+                        MAX_EVENT_PAGE, limit
+                    )));
+                }
+                Ok(ApiRequest::EventsSince {
+                    since: opt_u64(args, "since")?.unwrap_or(0),
+                    kind: opt_str(args, "kind")?,
+                    subject: opt_str(args, "subject")?,
+                    limit: limit as usize,
+                })
+            }
             "submit_trial_batch" => {
                 let trials = need_arr(args, "trials")?
                     .iter()
@@ -747,6 +785,10 @@ pub enum ApiResponse {
     Board { dataset: String, rows: Vec<BoardRow> },
     Cluster { cluster: ClusterView },
     Executor { executor: ExecutorStats },
+    /// One page of the event bus: events since the request cursor,
+    /// the cursor to resume from, and how many events the reader lost
+    /// to ring overflow (0 when it kept up).
+    Events { events: Vec<Event>, next: u64, dropped: u64 },
     Error { error: ApiError },
 }
 
@@ -763,6 +805,7 @@ impl ApiResponse {
             ApiResponse::Board { .. } => "board",
             ApiResponse::Cluster { .. } => "cluster",
             ApiResponse::Executor { .. } => "executor",
+            ApiResponse::Events { .. } => "events",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -814,6 +857,11 @@ impl ApiResponse {
             }
             ApiResponse::Executor { executor } => {
                 data.set("executor", executor.to_json());
+            }
+            ApiResponse::Events { events, next, dropped } => {
+                data.set("events", Json::Arr(events.iter().map(|e| e.to_json()).collect()))
+                    .set("next", (*next).into())
+                    .set("dropped", (*dropped).into());
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -867,6 +915,14 @@ impl ApiResponse {
             "cluster" => Ok(ApiResponse::Cluster { cluster: ClusterView::from_json(need(data, "cluster")?)? }),
             "executor" => Ok(ApiResponse::Executor {
                 executor: ExecutorStats::from_json(need(data, "executor")?)?,
+            }),
+            "events" => Ok(ApiResponse::Events {
+                events: need_arr(data, "events")?
+                    .iter()
+                    .map(|e| Event::from_json(e).map_err(ApiError::invalid))
+                    .collect::<Result<Vec<Event>, ApiError>>()?,
+                next: need_u64(data, "next")?,
+                dropped: need_u64(data, "dropped")?,
             }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
@@ -1074,5 +1130,40 @@ mod tests {
         assert!(!ApiRequest::ListSessions.is_mutation());
         assert!(!ApiRequest::Infer { session: "s".into(), x: vec![], shape: vec![] }.is_mutation());
         assert!(!ApiRequest::Board { dataset: "mnist".into(), limit: 5 }.is_mutation());
+        assert!(!ApiRequest::EventsSince { since: 0, kind: None, subject: None, limit: 10 }
+            .is_mutation());
+    }
+
+    #[test]
+    fn events_since_defaults() {
+        // All arguments optional: bare POST /api/v1/events_since works.
+        match ApiRequest::from_verb_args("events_since", &Json::obj()).unwrap() {
+            ApiRequest::EventsSince { since, kind, subject, limit } => {
+                assert_eq!(since, 0);
+                assert_eq!(kind, None);
+                assert_eq!(subject, None);
+                assert_eq!(limit, 256);
+            }
+            other => panic!("{:?}", other),
+        }
+        let args =
+            parse(r#"{"since":42,"kind":"state","subject":"kim/mnist/1","limit":5}"#).unwrap();
+        match ApiRequest::from_verb_args("events_since", &args).unwrap() {
+            ApiRequest::EventsSince { since, kind, subject, limit } => {
+                assert_eq!(since, 42);
+                assert_eq!(kind.as_deref(), Some("state"));
+                assert_eq!(subject.as_deref(), Some("kim/mnist/1"));
+                assert_eq!(limit, 5);
+            }
+            other => panic!("{:?}", other),
+        }
+        // Page size is bounded on the wire: 0 (= unlimited internally)
+        // and beyond-cap values are rejected, not passed through.
+        for bad in [r#"{"limit":0}"#, r#"{"limit":10001}"#] {
+            let err =
+                ApiRequest::from_verb_args("events_since", &parse(bad).unwrap()).unwrap_err();
+            assert_eq!(err.code, ErrorCode::InvalidArgument, "{}", bad);
+            assert!(err.message.contains("limit"), "{}", err);
+        }
     }
 }

@@ -244,15 +244,59 @@ pub fn cmd_ps(args: &[String]) -> CmdResult {
 }
 
 pub fn cmd_logs(args: &[String]) -> CmdResult {
-    let p = with_globals(ArgSpec::new("nsml logs", "show session events").pos("session", "session id", true))
-        .parse(args)?;
+    let p = with_globals(
+        ArgSpec::new("nsml logs", "show session events")
+            .pos("session", "session id", true)
+            .flag("follow", Some('f'), "drive the platform and stream events until done")
+            .opt("chunk", None, "steps per drive round in follow mode", Some("25")),
+    )
+    .parse(args)?;
     let platform = platform_from(&p)?;
     let id = p.pos(0).unwrap();
     let rec = platform.sessions.get(id).ok_or_else(|| format!("no session '{}'", id))?;
     println!("session {} — state {}", id, rec.state.as_str());
-    for e in platform.events.for_subject(id) {
+
+    // A polling subscription over the event bus: history replays first,
+    // then each follow round prints only what that round published.
+    let mut sub = platform
+        .events
+        .bus()
+        .subscribe_from_start()
+        .with_filter(crate::events::EventFilter::default().with_subject(id));
+    for e in sub.poll() {
         println!("{}", e.render());
     }
+
+    if p.flag("follow") {
+        let chunk = p.get_usize("chunk")?.max(1) as u64;
+        // Same safety cap as run_to_completion: a session starved by
+        // paused peers must not spin this loop forever.
+        for _ in 0..100_000u32 {
+            let Some(rec) = platform.sessions.get(id) else { break };
+            if rec.state.is_terminal() {
+                break;
+            }
+            if rec.state == crate::session::SessionState::Paused {
+                println!("(session is paused — resume it to continue following)");
+                break;
+            }
+            // drive_round keeps virtual-time heartbeats/leases alive
+            // between rounds, exactly like run_to_completion.
+            platform.drive_round(chunk).map_err(|e| format!("{:#}", e))?;
+            for e in sub.poll() {
+                println!("{}", e.render());
+            }
+        }
+        if sub.dropped() > 0 {
+            eprintln!("({} events dropped: ring overflow while following)", sub.dropped());
+        }
+        platform.save_state().map_err(|e| format!("{:#}", e))?;
+        if let Some(rec) = platform.sessions.get(id) {
+            println!("session {} — state {}", id, rec.state.as_str());
+        }
+    }
+
+    let rec = platform.sessions.get(id).ok_or_else(|| format!("no session '{}'", id))?;
     for pt in rec.metrics.points().iter().rev().take(10).rev() {
         println!("  step {:>6}  {:<12} {}", pt.step, pt.name, fnum(pt.value));
     }
@@ -603,6 +647,37 @@ mod tests {
         // Unknown sessions map to not_found.
         assert_eq!(crate::cli::main(&s(&["stop", "missing", "--state", &state])), 1);
         assert_eq!(crate::cli::main(&s(&["resume", "missing", "--state", &state])), 1);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn logs_follow_drives_a_resumed_session_to_done() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("logsf");
+        assert_eq!(
+            crate::cli::main(&s(&[
+                "run", "main.py", "-d", "mnist", "--steps", "20", "--quiet", "--state", &state
+            ])),
+            0
+        );
+        let text = std::fs::read_to_string(PathBuf::from(&state).join("state.json")).unwrap();
+        let doc = crate::util::json::parse(&text).unwrap();
+        let id = doc
+            .get("sessions")
+            .and_then(|s| s.as_arr())
+            .and_then(|a| a.first())
+            .and_then(|r| r.at(&["spec", "id"]))
+            .and_then(|j| j.as_str())
+            .expect("session id in state")
+            .to_string();
+        // Plain logs on a finished session prints history and exits 0.
+        assert_eq!(crate::cli::main(&s(&["logs", &id, "--state", &state])), 0);
+        // Follow mode on a terminal session is a no-op that still exits 0.
+        assert_eq!(crate::cli::main(&s(&["logs", &id, "-f", "--state", &state])), 0);
+        assert_eq!(crate::cli::main(&s(&["logs", "missing", "--state", &state])), 1);
         let _ = std::fs::remove_dir_all(&state);
     }
 

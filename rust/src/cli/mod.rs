@@ -8,7 +8,7 @@
 //! * `nsml stop SESSION`            — stop a session outright
 //! * `nsml dataset ls`              — list datasets
 //! * `nsml dataset board DATASET`   — the kaggle-like leaderboard
-//! * `nsml ps` / `nsml logs` / `nsml plot SESSION`
+//! * `nsml ps` / `nsml logs [-f]` / `nsml plot SESSION`
 //! * `nsml infer SESSION`           — interactive digit demo (Fig. 4)
 //! * `nsml automl -d DATASET`       — hyperparameter search
 //! * `nsml cluster` / `nsml models` / `nsml web`
@@ -35,7 +35,8 @@ COMMANDS:
   stop       stop a session outright:     nsml stop SESSION
   dataset    manage datasets:             nsml dataset ls | board DATASET
   ps         list sessions
-  logs       show a session's event log:  nsml logs SESSION
+  logs       show a session's event log:  nsml logs SESSION [-f]
+             (-f follows: drives training and streams new events)
   plot       ASCII learning curves:       nsml plot SESSION
   infer      interactive MNIST demo:      nsml infer SESSION --digit 1 --add-lines
   automl     hyperparameter search:       nsml automl -d mnist --strategy asha

@@ -62,16 +62,24 @@ impl UtilizationMonitor {
         UtilizationMonitor::default()
     }
 
-    /// Record the cluster's current state (call from the platform loop).
+    /// Record the cluster's current state (direct-read convenience for
+    /// tests; the platform populates the monitor through
+    /// [`record_sample`](Self::record_sample) off the event bus).
     pub fn sample(&self, cluster: &Cluster, queue_depth: usize) {
         let (_, free) = cluster.gpu_totals();
-        let s = Sample {
+        self.record_sample(Sample {
             at_ms: cluster.clock().now_ms(),
             utilization: cluster.utilization(),
             free_gpus: free,
             alive_nodes: cluster.alive_count(),
             queue_depth,
-        };
+        });
+    }
+
+    /// Record a pre-built cluster sample (the bus-consumer path: the
+    /// drive loop publishes `UtilizationSampled` events and the
+    /// platform's consumer subscription materializes them here).
+    pub fn record_sample(&self, s: Sample) {
         self.samples.lock().unwrap().push(s);
     }
 
@@ -139,6 +147,12 @@ impl UtilizationMonitor {
             let excess = w.len() - MAX_WORKER_SAMPLES;
             w.drain(..excess);
         }
+    }
+
+    /// Record a single worker sample (the bus-consumer path, one
+    /// `WorkerSampled` event at a time). Same capped retention.
+    pub fn record_worker(&self, s: WorkerSample) {
+        self.record_workers(vec![s]);
     }
 
     /// Full per-worker sample history, in recording order.

@@ -1,0 +1,394 @@
+//! The publish/subscribe core: a bounded, sequence-numbered event ring
+//! plus cheap incremental cursors.
+//!
+//! Every published [`Event`] gets the next sequence number in a single
+//! total order. The ring retains the most recent `capacity` events;
+//! readers address events *by sequence number*, so a reader that falls
+//! more than a full ring behind loses exactly the aged-out span — and
+//! learns how much it lost through [`EventBatch::dropped`] /
+//! [`Subscription::dropped`] instead of silently skipping.
+//!
+//! Reads are incremental by construction: [`EventBus::read_since`]
+//! clones only the events past the cursor (at most `limit`), never the
+//! whole ring. The full-snapshot path survives as
+//! [`EventBus::snapshot`] for the legacy `EventLog` shim — and as the
+//! clone-on-read baseline that `benches/bench_events.rs` measures the
+//! cursor path against.
+
+use super::{Event, EventKind, Level};
+use crate::util::clock::SharedClock;
+use std::collections::VecDeque;
+use std::sync::{Arc, Mutex};
+
+/// Default ring retention (events), matching the old `EventLog` cap.
+pub const DEFAULT_CAPACITY: usize = 100_000;
+
+struct Ring {
+    buf: VecDeque<Event>,
+    /// Sequence number the *next* published event will get.
+    next_seq: u64,
+}
+
+impl Ring {
+    /// Oldest retained sequence number.
+    fn first_seq(&self) -> u64 {
+        self.next_seq - self.buf.len() as u64
+    }
+}
+
+/// A filter over events; empty fields match everything.
+#[derive(Debug, Clone, Default)]
+pub struct EventFilter {
+    /// Exact [`EventKind::name`] match (e.g. "metric").
+    pub kind: Option<String>,
+    /// Exact subject match (a session id).
+    pub subject: Option<String>,
+    /// Exact source match (e.g. "scheduler").
+    pub source: Option<String>,
+    /// Minimum severity.
+    pub min_level: Option<Level>,
+}
+
+impl EventFilter {
+    pub fn with_kind(mut self, kind: &str) -> Self {
+        self.kind = Some(kind.to_string());
+        self
+    }
+
+    pub fn with_subject(mut self, subject: &str) -> Self {
+        self.subject = Some(subject.to_string());
+        self
+    }
+
+    pub fn with_source(mut self, source: &str) -> Self {
+        self.source = Some(source.to_string());
+        self
+    }
+
+    pub fn with_min_level(mut self, level: Level) -> Self {
+        self.min_level = Some(level);
+        self
+    }
+
+    pub fn matches(&self, e: &Event) -> bool {
+        self.kind.as_deref().map_or(true, |k| e.kind.name() == k)
+            && self.subject.as_deref().map_or(true, |s| e.subject == s)
+            && self.source.as_deref().map_or(true, |s| e.source == s)
+            && self.min_level.map_or(true, |l| e.level >= l)
+    }
+}
+
+/// One incremental read's result.
+#[derive(Debug, Clone)]
+pub struct EventBatch {
+    /// Matching events, oldest first.
+    pub events: Vec<Event>,
+    /// Cursor to pass to the next read (first unseen sequence number).
+    pub next: u64,
+    /// Events that aged out of the ring before this cursor could read
+    /// them (reader lag), 0 when the reader kept up.
+    pub dropped: u64,
+}
+
+/// The shared event bus. Cloning shares the ring; `echo` is a
+/// per-handle debugging aid (events print to stderr as they publish).
+#[derive(Clone)]
+pub struct EventBus {
+    ring: Arc<Mutex<Ring>>,
+    clock: SharedClock,
+    capacity: usize,
+    echo: bool,
+}
+
+impl EventBus {
+    pub fn new(clock: SharedClock) -> EventBus {
+        EventBus {
+            ring: Arc::new(Mutex::new(Ring { buf: VecDeque::new(), next_seq: 0 })),
+            clock,
+            capacity: DEFAULT_CAPACITY,
+            echo: false,
+        }
+    }
+
+    /// Echo events to stderr as they publish (live `nsml logs -f`
+    /// feel). Controlled by `[events] echo` in the platform config —
+    /// never sniffed from the environment.
+    pub fn with_echo(mut self, echo: bool) -> Self {
+        self.echo = echo;
+        self
+    }
+
+    /// Override the ring retention (events).
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.capacity = capacity.max(1);
+        self
+    }
+
+    /// Publish one event; returns its sequence number.
+    pub fn publish(&self, level: Level, source: &str, subject: &str, kind: EventKind) -> u64 {
+        let echo_line;
+        let seq;
+        {
+            let mut ring = self.ring.lock().unwrap();
+            seq = ring.next_seq;
+            let e = Event {
+                seq,
+                at_ms: self.clock.now_ms(),
+                level,
+                source: source.to_string(),
+                subject: subject.to_string(),
+                kind,
+            };
+            // Render inside the lock (cheap), write outside it: a slow
+            // stderr consumer must not stall every publisher/reader.
+            echo_line = self.echo.then(|| e.render());
+            ring.next_seq = seq + 1;
+            if ring.buf.len() >= self.capacity {
+                ring.buf.pop_front();
+            }
+            ring.buf.push_back(e);
+        }
+        if let Some(line) = echo_line {
+            eprintln!("{}", line);
+        }
+        seq
+    }
+
+    /// The cursor a brand-new reader should start from (sequence number
+    /// of the next event to be published).
+    pub fn head(&self) -> u64 {
+        self.ring.lock().unwrap().next_seq
+    }
+
+    /// Oldest sequence number still retained.
+    pub fn first(&self) -> u64 {
+        self.ring.lock().unwrap().first_seq()
+    }
+
+    /// Retained event count.
+    pub fn len(&self) -> usize {
+        self.ring.lock().unwrap().buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Incremental read: up to `limit` events matching `filter` with
+    /// `seq >= cursor` (0 = unlimited), plus the cursor to resume from
+    /// and how many events aged out unread. Cost is proportional to the
+    /// events scanned past the cursor — never a full-ring clone.
+    pub fn read_since(&self, cursor: u64, limit: usize, filter: &EventFilter) -> EventBatch {
+        let limit = if limit == 0 { usize::MAX } else { limit };
+        let ring = self.ring.lock().unwrap();
+        let first = ring.first_seq();
+        let dropped = first.saturating_sub(cursor);
+        let start = cursor.max(first);
+        let mut events = Vec::new();
+        let mut next = start;
+        for e in ring.buf.iter().skip((start - first) as usize) {
+            next = e.seq + 1;
+            if filter.matches(e) {
+                events.push(e.clone());
+                if events.len() >= limit {
+                    return EventBatch { events, next, dropped };
+                }
+            }
+        }
+        EventBatch { events, next: ring.next_seq.max(next), dropped }
+    }
+
+    /// A cursor positioned at the current head: `poll` yields only
+    /// events published after this call.
+    pub fn subscribe(&self) -> Subscription {
+        Subscription {
+            cursor: self.head(),
+            bus: self.clone(),
+            filter: EventFilter::default(),
+            dropped: 0,
+        }
+    }
+
+    /// A cursor over the full retained history, then live events.
+    pub fn subscribe_from_start(&self) -> Subscription {
+        Subscription { cursor: 0, bus: self.clone(), filter: EventFilter::default(), dropped: 0 }
+    }
+
+    /// Full clone of the retained ring (legacy `EventLog::all` path;
+    /// prefer a [`Subscription`] for anything called repeatedly).
+    pub fn snapshot(&self) -> Vec<Event> {
+        self.ring.lock().unwrap().buf.iter().cloned().collect()
+    }
+}
+
+/// A stateful incremental reader: remembers its cursor, accumulates a
+/// dropped-events counter when it falls a full ring behind, and
+/// optionally filters. Polling is cheap — only events published since
+/// the last poll are cloned out.
+pub struct Subscription {
+    bus: EventBus,
+    filter: EventFilter,
+    cursor: u64,
+    dropped: u64,
+}
+
+impl Subscription {
+    /// Restrict this subscription to events matching `filter`.
+    pub fn with_filter(mut self, filter: EventFilter) -> Self {
+        self.filter = filter;
+        self
+    }
+
+    /// All matching events published since the last poll.
+    pub fn poll(&mut self) -> Vec<Event> {
+        self.poll_max(0)
+    }
+
+    /// Like [`poll`](Subscription::poll) but at most `limit` events
+    /// (0 = unlimited); call again to continue.
+    pub fn poll_max(&mut self, limit: usize) -> Vec<Event> {
+        let batch = self.bus.read_since(self.cursor, limit, &self.filter);
+        self.cursor = batch.next;
+        self.dropped += batch.dropped;
+        batch.events
+    }
+
+    /// First unseen sequence number.
+    pub fn cursor(&self) -> u64 {
+        self.cursor
+    }
+
+    /// Total events this subscriber lost to ring overflow.
+    pub fn dropped(&self) -> u64 {
+        self.dropped
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    fn bus() -> EventBus {
+        let (clock, _) = sim_clock();
+        EventBus::new(clock)
+    }
+
+    fn log(bus: &EventBus, source: &str, subject: &str, msg: &str) -> u64 {
+        bus.publish(Level::Info, source, subject, EventKind::LogLine { message: msg.into() })
+    }
+
+    #[test]
+    fn sequence_numbers_are_total_order() {
+        let b = bus();
+        assert_eq!(b.head(), 0);
+        log(&b, "a", "", "one");
+        log(&b, "b", "", "two");
+        let all = b.snapshot();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all[0].seq, 0);
+        assert_eq!(all[1].seq, 1);
+        assert_eq!(b.head(), 2);
+        assert_eq!(b.first(), 0);
+    }
+
+    #[test]
+    fn subscription_reads_incrementally() {
+        let b = bus();
+        log(&b, "x", "", "before");
+        let mut sub = b.subscribe();
+        assert!(sub.poll().is_empty(), "subscribe starts at head");
+        log(&b, "x", "", "after-1");
+        log(&b, "x", "", "after-2");
+        let got = sub.poll();
+        assert_eq!(got.len(), 2);
+        assert_eq!(got[0].message(), "after-1");
+        assert!(sub.poll().is_empty(), "poll drains");
+        // From-start subscriptions replay history first.
+        let mut replay = b.subscribe_from_start();
+        assert_eq!(replay.poll().len(), 3);
+    }
+
+    #[test]
+    fn lag_is_counted_not_silently_skipped() {
+        let (clock, _) = sim_clock();
+        let b = EventBus::new(clock).with_capacity(10);
+        let mut sub = b.subscribe();
+        for i in 0..25 {
+            log(&b, "x", "", &format!("{}", i));
+        }
+        // 25 published, 10 retained: the subscriber lost 15.
+        let got = sub.poll();
+        assert_eq!(got.len(), 10);
+        assert_eq!(got[0].message(), "15");
+        assert_eq!(sub.dropped(), 15);
+        // Once caught up, no further drops accrue.
+        log(&b, "x", "", "fresh");
+        assert_eq!(sub.poll().len(), 1);
+        assert_eq!(sub.dropped(), 15);
+    }
+
+    #[test]
+    fn filters_match_kind_subject_source_level() {
+        let b = bus();
+        log(&b, "scheduler", "job-1", "queued");
+        b.publish(
+            Level::Debug,
+            "session",
+            "job-1",
+            EventKind::MetricReported { name: "loss".into(), step: 1, value: 0.5 },
+        );
+        b.publish(Level::Error, "cluster", "node-2", EventKind::LogLine { message: "dead".into() });
+
+        let by_kind = b.read_since(0, 0, &EventFilter::default().with_kind("metric"));
+        assert_eq!(by_kind.events.len(), 1);
+        let by_subject = b.read_since(0, 0, &EventFilter::default().with_subject("job-1"));
+        assert_eq!(by_subject.events.len(), 2);
+        let by_source = b.read_since(0, 0, &EventFilter::default().with_source("cluster"));
+        assert_eq!(by_source.events.len(), 1);
+        let by_level = b.read_since(0, 0, &EventFilter::default().with_min_level(Level::Warn));
+        assert_eq!(by_level.events.len(), 1);
+        // A filtered read still advances past non-matching events.
+        assert_eq!(by_kind.next, b.head());
+    }
+
+    #[test]
+    fn limited_reads_page_through() {
+        let b = bus();
+        for i in 0..7 {
+            log(&b, "x", "", &format!("{}", i));
+        }
+        let filter = EventFilter::default();
+        let first = b.read_since(0, 3, &filter);
+        assert_eq!(first.events.len(), 3);
+        assert_eq!(first.next, 3);
+        let second = b.read_since(first.next, 3, &filter);
+        assert_eq!(second.events.len(), 3);
+        let last = b.read_since(second.next, 3, &filter);
+        assert_eq!(last.events.len(), 1);
+        assert_eq!(last.next, b.head());
+        // Reading at the head returns nothing and stays put.
+        let empty = b.read_since(b.head(), 3, &filter);
+        assert!(empty.events.is_empty());
+        assert_eq!(empty.next, b.head());
+    }
+
+    #[test]
+    fn cross_thread_publish_and_poll() {
+        let b = bus();
+        let mut sub = b.subscribe();
+        let publisher = {
+            let b = b.clone();
+            std::thread::spawn(move || {
+                for i in 0..100 {
+                    log(&b, "worker", "s", &format!("{}", i));
+                }
+            })
+        };
+        publisher.join().unwrap();
+        let got = sub.poll();
+        assert_eq!(got.len(), 100);
+        // Order is the publish order.
+        assert!(got.windows(2).all(|w| w[0].seq + 1 == w[1].seq));
+    }
+}

@@ -1,0 +1,156 @@
+//! Compatibility shim: the old string-based `EventLog` API, now a thin
+//! wrapper over the typed [`EventBus`].
+//!
+//! `emit`/`info`/`warn`/`error`/`debug` publish
+//! [`EventKind::LogLine`] events; the read methods (`all`,
+//! `for_subject`, `query`) are snapshot-style and kept only so existing
+//! call sites migrate incrementally — new consumers should hold a
+//! [`Subscription`](super::Subscription) (incremental, lag-aware)
+//! against [`EventLog::bus`] instead.
+
+use super::{Event, EventBus, EventFilter, EventKind, Level};
+use crate::util::clock::SharedClock;
+
+/// String-emit facade over the platform event bus.
+#[derive(Clone)]
+pub struct EventLog {
+    bus: EventBus,
+}
+
+impl EventLog {
+    pub fn new(clock: SharedClock) -> EventLog {
+        EventLog { bus: EventBus::new(clock) }
+    }
+
+    /// Wrap an existing bus (share one spine between facades).
+    pub fn with_bus(bus: EventBus) -> EventLog {
+        EventLog { bus }
+    }
+
+    /// Echo events to stderr as they arrive (live `nsml logs -f` feel).
+    /// Explicit only: set from `[events] echo` config or test code,
+    /// never sniffed from the environment.
+    pub fn with_echo(mut self, echo: bool) -> Self {
+        self.bus = self.bus.with_echo(echo);
+        self
+    }
+
+    /// Override the bus ring retention (events).
+    pub fn with_capacity(mut self, capacity: usize) -> Self {
+        self.bus = self.bus.with_capacity(capacity);
+        self
+    }
+
+    /// The typed bus underneath — publish typed events and open
+    /// subscriptions through this.
+    pub fn bus(&self) -> &EventBus {
+        &self.bus
+    }
+
+    pub fn emit(&self, level: Level, source: &str, subject: &str, message: impl Into<String>) {
+        self.bus.publish(level, source, subject, EventKind::LogLine { message: message.into() });
+    }
+
+    pub fn info(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Info, source, subject, msg);
+    }
+
+    pub fn warn(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Warn, source, subject, msg);
+    }
+
+    pub fn error(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Error, source, subject, msg);
+    }
+
+    pub fn debug(&self, source: &str, subject: &str, msg: impl Into<String>) {
+        self.emit(Level::Debug, source, subject, msg);
+    }
+
+    /// All retained events (cloned snapshot — the slow path the bench
+    /// gates subscriptions against; avoid in loops).
+    pub fn all(&self) -> Vec<Event> {
+        self.bus.snapshot()
+    }
+
+    /// Retained events whose subject matches exactly.
+    pub fn for_subject(&self, subject: &str) -> Vec<Event> {
+        self.bus.read_since(0, 0, &EventFilter::default().with_subject(subject)).events
+    }
+
+    /// Retained events from a given source at or above a level.
+    pub fn query(&self, source: Option<&str>, min_level: Level) -> Vec<Event> {
+        let filter = EventFilter {
+            source: source.map(str::to_string),
+            min_level: Some(min_level),
+            ..Default::default()
+        };
+        self.bus.read_since(0, 0, &filter).events
+    }
+
+    pub fn len(&self) -> usize {
+        self.bus.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    #[test]
+    fn emit_and_query() {
+        let (clock, sim) = sim_clock();
+        let log = EventLog::new(clock).with_echo(false);
+        log.info("scheduler", "job-1", "queued");
+        sim.advance(10);
+        log.warn("cluster", "node-2", "heartbeat late");
+        log.error("scheduler", "job-1", "failed");
+
+        assert_eq!(log.len(), 3);
+        assert_eq!(log.for_subject("job-1").len(), 2);
+        let warns = log.query(None, Level::Warn);
+        assert_eq!(warns.len(), 2);
+        assert_eq!(log.query(Some("cluster"), Level::Debug).len(), 1);
+        assert_eq!(warns[0].at_ms, 10);
+    }
+
+    #[test]
+    fn render_matches_legacy_format() {
+        let (clock, _) = sim_clock();
+        let log = EventLog::new(clock).with_echo(false);
+        log.info("session", "kim/mnist/1", "started");
+        let e = &log.all()[0];
+        let s = e.render();
+        assert!(s.contains("INFO"));
+        assert!(s.contains("kim/mnist/1"));
+        assert!(s.contains("started"));
+    }
+
+    #[test]
+    fn bounded_capacity() {
+        let (clock, _) = sim_clock();
+        let log = EventLog::new(clock).with_echo(false).with_capacity(10);
+        for i in 0..25 {
+            log.info("x", "", format!("{}", i));
+        }
+        assert_eq!(log.len(), 10);
+        assert_eq!(log.all()[0].message(), "15");
+    }
+
+    #[test]
+    fn string_emits_are_typed_log_lines_on_the_bus() {
+        let (clock, _) = sim_clock();
+        let log = EventLog::new(clock).with_echo(false);
+        let mut sub = log.bus().subscribe();
+        log.info("platform", "s-1", "stopped by user");
+        let got = sub.poll();
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0].kind, EventKind::LogLine { message: "stopped by user".into() });
+        assert_eq!(got[0].kind.name(), "log");
+    }
+}

@@ -1,12 +1,36 @@
-//! Platform event log: structured, timestamped events from every subsystem.
+//! The platform event spine: a typed publish/subscribe bus.
 //!
-//! NSML surfaces "what happened to my job" through logs and the web UI;
-//! this module is the shared spine: subsystems emit [`Event`]s into an
-//! [`EventLog`], the CLI (`nsml logs`) and web UI read them back.
+//! NSML's promise is that researchers see "what happened to my job"
+//! without manual bookkeeping (§3.1–§3.4). Every subsystem publishes
+//! structured [`Event`]s — an [`EventKind`] payload plus level, source
+//! and subject — into a bounded, sequence-numbered [`EventBus`] ring.
+//! Consumers read *incrementally* through [`Subscription`] cursors (or
+//! raw [`EventBus::read_since`] calls): a reader only ever clones the
+//! events published since its cursor, and falling behind a full ring is
+//! surfaced as a per-subscriber dropped-events counter, never a
+//! full-deque clone.
+//!
+//! Producers: the scheduler publishes [`EventKind::PlacementDecided`],
+//! the executor [`EventKind::WorkerStolen`], sessions
+//! [`EventKind::StateChanged`] / [`EventKind::MetricReported`] /
+//! [`EventKind::CheckpointSaved`], and the platform drive loop
+//! [`EventKind::UtilizationSampled`] / [`EventKind::WorkerSampled`].
+//! Consumers: the leaderboard and `UtilizationMonitor` are *derived*
+//! from bus subscriptions (see `api::NsmlPlatform`), `nsml logs -f`
+//! follows a polling subscription, and `GET /api/v1/events` pages a
+//! cursor over the wire (`events_since` verb).
+//!
+//! [`EventLog`] survives as a thin compatibility shim over the bus
+//! (string emit + snapshot reads) so call sites migrate incrementally.
 
-use crate::util::clock::{Millis, SharedClock};
-use std::collections::VecDeque;
-use std::sync::{Arc, Mutex};
+mod bus;
+mod log;
+
+pub use bus::{EventBatch, EventBus, EventFilter, Subscription, DEFAULT_CAPACITY};
+pub use log::EventLog;
+
+use crate::util::clock::Millis;
+use crate::util::json::Json;
 
 /// Event severity.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
@@ -26,24 +50,263 @@ impl Level {
             Level::Error => "ERROR",
         }
     }
+
+    /// Inverse of [`Level::as_str`] (wire-format deserialization).
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Option<Level> {
+        match s {
+            "DEBUG" => Some(Level::Debug),
+            "INFO" => Some(Level::Info),
+            "WARN" => Some(Level::Warn),
+            "ERROR" => Some(Level::Error),
+            _ => None,
+        }
+    }
 }
 
-/// A structured platform event.
-#[derive(Debug, Clone)]
+/// Every kind name, in the order of the [`EventKind`] variants (wire
+/// filter validation and docs).
+pub const ALL_EVENT_KINDS: &[&str] =
+    &["log", "metric", "state", "checkpoint", "placement", "steal", "util", "worker"];
+
+/// The typed payload of an [`Event`]. Plain data only — the events
+/// module sits below every other subsystem, so states, nodes and
+/// workers travel as strings/integers, not domain types.
+#[derive(Debug, Clone, PartialEq)]
+pub enum EventKind {
+    /// Free-form message (the legacy `EventLog::emit` path).
+    LogLine { message: String },
+    /// A session reported a metric value (eval loss, task metric).
+    MetricReported { name: String, step: u64, value: f64 },
+    /// A session changed lifecycle state. `to` is always a
+    /// `SessionState::as_str` name; `from` is too, except `"new"` on
+    /// the initial submission transition (record creation → queued).
+    StateChanged { from: String, to: String, step: u64 },
+    /// A session persisted a checkpoint (`object` = params address).
+    CheckpointSaved { step: u64, object: String },
+    /// The scheduler placed a job on a node.
+    PlacementDecided { node: u32, from_queue: bool },
+    /// An idle executor worker stole a pending session from a peer.
+    WorkerStolen { thief: usize, victim: usize },
+    /// One drive round's cluster-level utilization sample.
+    UtilizationSampled {
+        utilization: f64,
+        free_gpus: usize,
+        alive_nodes: usize,
+        queue_depth: usize,
+    },
+    /// One drive round's snapshot of a single executor worker.
+    WorkerSampled {
+        worker: usize,
+        busy_ms: f64,
+        live_sessions: usize,
+        queue_depth: usize,
+        steals: u64,
+    },
+}
+
+impl EventKind {
+    /// Stable kind name (wire filters, `ALL_EVENT_KINDS`).
+    pub fn name(&self) -> &'static str {
+        match self {
+            EventKind::LogLine { .. } => "log",
+            EventKind::MetricReported { .. } => "metric",
+            EventKind::StateChanged { .. } => "state",
+            EventKind::CheckpointSaved { .. } => "checkpoint",
+            EventKind::PlacementDecided { .. } => "placement",
+            EventKind::WorkerStolen { .. } => "steal",
+            EventKind::UtilizationSampled { .. } => "util",
+            EventKind::WorkerSampled { .. } => "worker",
+        }
+    }
+
+    /// Human-readable rendering (the `nsml logs` line body).
+    pub fn message(&self) -> String {
+        match self {
+            EventKind::LogLine { message } => message.clone(),
+            EventKind::MetricReported { name, step, value } => {
+                format!("metric {} = {} at step {}", name, value, step)
+            }
+            EventKind::StateChanged { from, to, step } => {
+                format!("state {} -> {} at step {}", from, to, step)
+            }
+            EventKind::CheckpointSaved { step, object } => {
+                format!("checkpoint at step {} ({})", step, object)
+            }
+            EventKind::PlacementDecided { node, from_queue } => {
+                if *from_queue {
+                    format!("placed on node-{} from queue", node)
+                } else {
+                    format!("fast-path placed on node-{}", node)
+                }
+            }
+            EventKind::WorkerStolen { thief, victim } => {
+                format!("stolen by worker {} from worker {}", thief, victim)
+            }
+            EventKind::UtilizationSampled { utilization, free_gpus, alive_nodes, queue_depth } => {
+                format!(
+                    "utilization {:.2}, {} free GPUs, {} alive nodes, queue {}",
+                    utilization, free_gpus, alive_nodes, queue_depth
+                )
+            }
+            EventKind::WorkerSampled { worker, busy_ms, live_sessions, queue_depth, steals } => {
+                format!(
+                    "worker {}: busy {:.1}ms, {} live, {} queued, {} steals",
+                    worker, busy_ms, live_sessions, queue_depth, steals
+                )
+            }
+        }
+    }
+
+    /// Payload fields as a JSON object (kind name travels separately).
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        match self {
+            EventKind::LogLine { message } => {
+                o.set("message", message.as_str().into());
+            }
+            EventKind::MetricReported { name, step, value } => {
+                o.set("name", name.as_str().into())
+                    .set("step", (*step).into())
+                    .set("value", (*value).into());
+            }
+            EventKind::StateChanged { from, to, step } => {
+                o.set("from", from.as_str().into())
+                    .set("to", to.as_str().into())
+                    .set("step", (*step).into());
+            }
+            EventKind::CheckpointSaved { step, object } => {
+                o.set("step", (*step).into()).set("object", object.as_str().into());
+            }
+            EventKind::PlacementDecided { node, from_queue } => {
+                o.set("node", (*node).into()).set("from_queue", (*from_queue).into());
+            }
+            EventKind::WorkerStolen { thief, victim } => {
+                o.set("thief", (*thief).into()).set("victim", (*victim).into());
+            }
+            EventKind::UtilizationSampled { utilization, free_gpus, alive_nodes, queue_depth } => {
+                o.set("utilization", (*utilization).into())
+                    .set("free_gpus", (*free_gpus).into())
+                    .set("alive_nodes", (*alive_nodes).into())
+                    .set("queue_depth", (*queue_depth).into());
+            }
+            EventKind::WorkerSampled { worker, busy_ms, live_sessions, queue_depth, steals } => {
+                o.set("worker", (*worker).into())
+                    .set("busy_ms", (*busy_ms).into())
+                    .set("live_sessions", (*live_sessions).into())
+                    .set("queue_depth", (*queue_depth).into())
+                    .set("steals", (*steals).into());
+            }
+        }
+        o
+    }
+
+    /// Rebuild a payload from its kind name + field object.
+    pub fn from_json(name: &str, data: &Json) -> Result<EventKind, String> {
+        let str_of = |k: &str| {
+            data.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("event '{}' payload missing string '{}'", name, k))
+        };
+        let u64_of = |k: &str| {
+            data.get(k)
+                .and_then(Json::as_f64)
+                .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                .map(|f| f as u64)
+                .ok_or_else(|| format!("event '{}' payload missing integer '{}'", name, k))
+        };
+        let f64_of = |k: &str| {
+            data.get(k)
+                .and_then(Json::as_f64)
+                .ok_or_else(|| format!("event '{}' payload missing number '{}'", name, k))
+        };
+        let bool_of = |k: &str| {
+            data.get(k)
+                .and_then(Json::as_bool)
+                .ok_or_else(|| format!("event '{}' payload missing boolean '{}'", name, k))
+        };
+        match name {
+            "log" => Ok(EventKind::LogLine { message: str_of("message")? }),
+            "metric" => Ok(EventKind::MetricReported {
+                name: str_of("name")?,
+                step: u64_of("step")?,
+                value: f64_of("value")?,
+            }),
+            "state" => Ok(EventKind::StateChanged {
+                from: str_of("from")?,
+                to: str_of("to")?,
+                step: u64_of("step")?,
+            }),
+            "checkpoint" => Ok(EventKind::CheckpointSaved {
+                step: u64_of("step")?,
+                object: str_of("object")?,
+            }),
+            "placement" => {
+                let node = u64_of("node")?;
+                if node > u32::MAX as u64 {
+                    return Err(format!("event 'placement' field 'node' out of range: {}", node));
+                }
+                Ok(EventKind::PlacementDecided {
+                    node: node as u32,
+                    from_queue: bool_of("from_queue")?,
+                })
+            }
+            "steal" => Ok(EventKind::WorkerStolen {
+                thief: u64_of("thief")? as usize,
+                victim: u64_of("victim")? as usize,
+            }),
+            "util" => Ok(EventKind::UtilizationSampled {
+                utilization: f64_of("utilization")?,
+                free_gpus: u64_of("free_gpus")? as usize,
+                alive_nodes: u64_of("alive_nodes")? as usize,
+                queue_depth: u64_of("queue_depth")? as usize,
+            }),
+            "worker" => Ok(EventKind::WorkerSampled {
+                worker: u64_of("worker")? as usize,
+                busy_ms: f64_of("busy_ms")?,
+                live_sessions: u64_of("live_sessions")? as usize,
+                queue_depth: u64_of("queue_depth")? as usize,
+                steals: u64_of("steals")?,
+            }),
+            other => Err(format!(
+                "unknown event kind '{}' (expected one of: {})",
+                other,
+                ALL_EVENT_KINDS.join(", ")
+            )),
+        }
+    }
+}
+
+/// A structured platform event, sequence-numbered by the bus.
+#[derive(Debug, Clone, PartialEq)]
 pub struct Event {
+    /// Position in the bus's total order (cursor arithmetic).
+    pub seq: u64,
     pub at_ms: Millis,
     pub level: Level,
     /// Emitting subsystem, e.g. "scheduler", "session".
     pub source: String,
     /// Correlation key, e.g. a session or job id ("" if none).
     pub subject: String,
-    pub message: String,
+    pub kind: EventKind,
 }
 
 impl Event {
+    /// Human-readable body (the old `Event.message` field).
+    pub fn message(&self) -> String {
+        self.kind.message()
+    }
+
     pub fn render(&self) -> String {
         if self.subject.is_empty() {
-            format!("[{:>8}ms {:<5} {}] {}", self.at_ms, self.level.as_str(), self.source, self.message)
+            format!(
+                "[{:>8}ms {:<5} {}] {}",
+                self.at_ms,
+                self.level.as_str(),
+                self.source,
+                self.message()
+            )
         } else {
             format!(
                 "[{:>8}ms {:<5} {}] ({}) {}",
@@ -51,144 +314,140 @@ impl Event {
                 self.level.as_str(),
                 self.source,
                 self.subject,
-                self.message
+                self.message()
             )
         }
     }
-}
 
-/// Bounded in-memory event log, shareable across threads.
-#[derive(Clone)]
-pub struct EventLog {
-    inner: Arc<Mutex<VecDeque<Event>>>,
-    clock: SharedClock,
-    capacity: usize,
-    echo: bool,
-}
-
-impl EventLog {
-    pub fn new(clock: SharedClock) -> EventLog {
-        EventLog {
-            inner: Arc::new(Mutex::new(VecDeque::new())),
-            clock,
-            capacity: 100_000,
-            echo: std::env::var("NSML_LOG").is_ok(),
-        }
+    /// Wire shape: flat envelope + kind-tagged payload. `message` is
+    /// included for display-only consumers and ignored on parse.
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seq", self.seq.into())
+            .set("at_ms", self.at_ms.into())
+            .set("level", self.level.as_str().into())
+            .set("source", self.source.as_str().into())
+            .set("subject", self.subject.as_str().into())
+            .set("kind", self.kind.name().into())
+            .set("data", self.kind.to_json())
+            .set("message", self.message().as_str().into());
+        o
     }
 
-    /// Echo events to stderr as they arrive (live `nsml logs -f` feel).
-    pub fn with_echo(mut self, echo: bool) -> Self {
-        self.echo = echo;
-        self
-    }
-
-    pub fn emit(&self, level: Level, source: &str, subject: &str, message: impl Into<String>) {
-        let e = Event {
-            at_ms: self.clock.now_ms(),
-            level,
-            source: source.to_string(),
-            subject: subject.to_string(),
-            message: message.into(),
+    pub fn from_json(j: &Json) -> Result<Event, String> {
+        let str_of = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("event missing string field '{}'", k))
         };
-        if self.echo {
-            eprintln!("{}", e.render());
-        }
-        let mut q = self.inner.lock().unwrap();
-        if q.len() >= self.capacity {
-            q.pop_front();
-        }
-        q.push_back(e);
-    }
-
-    pub fn info(&self, source: &str, subject: &str, msg: impl Into<String>) {
-        self.emit(Level::Info, source, subject, msg);
-    }
-
-    pub fn warn(&self, source: &str, subject: &str, msg: impl Into<String>) {
-        self.emit(Level::Warn, source, subject, msg);
-    }
-
-    pub fn error(&self, source: &str, subject: &str, msg: impl Into<String>) {
-        self.emit(Level::Error, source, subject, msg);
-    }
-
-    pub fn debug(&self, source: &str, subject: &str, msg: impl Into<String>) {
-        self.emit(Level::Debug, source, subject, msg);
-    }
-
-    /// All events (cloned snapshot).
-    pub fn all(&self) -> Vec<Event> {
-        self.inner.lock().unwrap().iter().cloned().collect()
-    }
-
-    /// Events whose subject matches exactly.
-    pub fn for_subject(&self, subject: &str) -> Vec<Event> {
-        self.inner.lock().unwrap().iter().filter(|e| e.subject == subject).cloned().collect()
-    }
-
-    /// Events from a given source at or above a level.
-    pub fn query(&self, source: Option<&str>, min_level: Level) -> Vec<Event> {
-        self.inner
-            .lock()
-            .unwrap()
-            .iter()
-            .filter(|e| e.level >= min_level && source.map_or(true, |s| e.source == s))
-            .cloned()
-            .collect()
-    }
-
-    pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().len()
-    }
-
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+        let u64_of = |k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                .map(|f| f as u64)
+                .ok_or_else(|| format!("event missing integer field '{}'", k))
+        };
+        let level = str_of("level")?;
+        let kind_name = str_of("kind")?;
+        let empty = Json::obj();
+        let data = j.get("data").unwrap_or(&empty);
+        Ok(Event {
+            seq: u64_of("seq")?,
+            at_ms: u64_of("at_ms")?,
+            level: Level::from_str(&level).ok_or_else(|| format!("unknown level '{}'", level))?,
+            source: str_of("source")?,
+            subject: str_of("subject")?,
+            kind: EventKind::from_json(&kind_name, data)?,
+        })
     }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::clock::sim_clock;
+    use crate::util::json::parse;
+
+    fn sample_kinds() -> Vec<EventKind> {
+        vec![
+            EventKind::LogLine { message: "container up".into() },
+            EventKind::MetricReported { name: "accuracy".into(), step: 40, value: 0.91 },
+            EventKind::StateChanged { from: "running".into(), to: "done".into(), step: 120 },
+            EventKind::CheckpointSaved { step: 30, object: "sha-abc".into() },
+            EventKind::PlacementDecided { node: 2, from_queue: true },
+            EventKind::WorkerStolen { thief: 1, victim: 0 },
+            EventKind::UtilizationSampled {
+                utilization: 0.5,
+                free_gpus: 4,
+                alive_nodes: 3,
+                queue_depth: 2,
+            },
+            EventKind::WorkerSampled {
+                worker: 3,
+                busy_ms: 12.5,
+                live_sessions: 2,
+                queue_depth: 1,
+                steals: 4,
+            },
+        ]
+    }
 
     #[test]
-    fn emit_and_query() {
-        let (clock, sim) = sim_clock();
-        let log = EventLog::new(clock).with_echo(false);
-        log.info("scheduler", "job-1", "queued");
-        sim.advance(10);
-        log.warn("cluster", "node-2", "heartbeat late");
-        log.error("scheduler", "job-1", "failed");
+    fn every_kind_round_trips_through_json() {
+        let kinds = sample_kinds();
+        let names: Vec<&str> = kinds.iter().map(|k| k.name()).collect();
+        assert_eq!(names, ALL_EVENT_KINDS, "sample set must cover every kind");
+        for kind in kinds {
+            let e = Event {
+                seq: 7,
+                at_ms: 1234,
+                level: Level::Info,
+                source: "test".into(),
+                subject: "kim/mnist/1".into(),
+                kind,
+            };
+            let text = e.to_json().to_string();
+            let back = Event::from_json(&parse(&text).unwrap())
+                .unwrap_or_else(|err| panic!("{}: {}", text, err));
+            assert_eq!(back, e, "{}", text);
+        }
+    }
 
-        assert_eq!(log.len(), 3);
-        assert_eq!(log.for_subject("job-1").len(), 2);
-        let warns = log.query(None, Level::Warn);
-        assert_eq!(warns.len(), 2);
-        assert_eq!(log.query(Some("cluster"), Level::Debug).len(), 1);
-        assert_eq!(warns[0].at_ms, 10);
+    #[test]
+    fn unknown_kind_and_missing_fields_are_named() {
+        let err = EventKind::from_json("frobnicate", &Json::obj()).unwrap_err();
+        assert!(err.contains("frobnicate"), "{}", err);
+        let err = EventKind::from_json("metric", &Json::obj()).unwrap_err();
+        assert!(err.contains("name"), "{}", err);
     }
 
     #[test]
     fn render_format() {
-        let (clock, _) = sim_clock();
-        let log = EventLog::new(clock).with_echo(false);
-        log.info("session", "kim/mnist/1", "started");
-        let e = &log.all()[0];
+        let e = Event {
+            seq: 0,
+            at_ms: 10,
+            level: Level::Info,
+            source: "session".into(),
+            subject: "kim/mnist/1".into(),
+            kind: EventKind::LogLine { message: "started".into() },
+        };
         let s = e.render();
         assert!(s.contains("INFO"));
         assert!(s.contains("kim/mnist/1"));
         assert!(s.contains("started"));
+        // Subject-less events omit the parenthesized correlation key.
+        let bare = Event { subject: String::new(), ..e };
+        assert!(!bare.render().contains('('));
     }
 
     #[test]
-    fn bounded_capacity() {
-        let (clock, _) = sim_clock();
-        let mut log = EventLog::new(clock).with_echo(false);
-        log.capacity = 10;
-        for i in 0..25 {
-            log.info("x", "", format!("{}", i));
+    fn levels_order_and_round_trip() {
+        assert!(Level::Error > Level::Warn);
+        assert!(Level::Warn > Level::Info);
+        assert!(Level::Info > Level::Debug);
+        for l in [Level::Debug, Level::Info, Level::Warn, Level::Error] {
+            assert_eq!(Level::from_str(l.as_str()), Some(l));
         }
-        assert_eq!(log.len(), 10);
-        assert_eq!(log.all()[0].message, "15");
+        assert_eq!(Level::from_str("TRACE"), None);
     }
 }

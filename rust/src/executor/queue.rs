@@ -163,8 +163,10 @@ impl Shared {
 
     /// Steal the oldest pending session from the most-loaded peer of
     /// `thief` (load = pending depth + live runs). Counts the claim
-    /// for the thief. Returns `None` when no peer has pending work.
-    pub fn steal_for(&self, thief: usize) -> Option<PendingSession> {
+    /// for the thief. Returns the session plus the victim worker (for
+    /// the thief's `WorkerStolen` event); `None` when no peer has
+    /// pending work.
+    pub fn steal_for(&self, thief: usize) -> Option<(PendingSession, usize)> {
         let mut best: Option<(usize, usize)> = None;
         for (w, dq) in self.deques.iter().enumerate() {
             if w == thief {
@@ -188,7 +190,7 @@ impl Shared {
         self.live[thief].fetch_add(1, Ordering::Relaxed);
         drop(dq);
         self.steals[thief].fetch_add(1, Ordering::Relaxed);
-        Some(stolen)
+        Some((stolen, victim))
     }
 
     /// Remove a specific pending session from worker `w`'s deque (the
@@ -366,13 +368,14 @@ mod tests {
         s.push_pending(0, pending("b"));
         s.push_pending(1, pending("c"));
         // Worker 2 steals from worker 0 (load 2 beats load 1), oldest first.
-        let got = s.steal_for(2).unwrap();
+        let (got, victim) = s.steal_for(2).unwrap();
         assert_eq!(got.spec.id, "a");
+        assert_eq!(victim, 0);
         assert_eq!(s.stats()[2].steals, 1);
         assert_eq!(s.stats()[0].queue_depth, 1);
         // A worker never steals from itself.
-        assert_eq!(s.steal_for(1).unwrap().spec.id, "b");
-        assert_eq!(s.steal_for(0).unwrap().spec.id, "c");
+        assert_eq!(s.steal_for(1).unwrap().0.spec.id, "b");
+        assert_eq!(s.steal_for(0).unwrap().0.spec.id, "c");
         assert!(s.steal_for(0).is_none());
     }
 
@@ -416,7 +419,7 @@ mod tests {
         let s = Shared::new(2, true);
         s.push_pending(0, pending("a"));
         // Worker 1 steals "a" but has not registered it yet.
-        let stolen = s.steal_for(1).unwrap();
+        let (stolen, _) = s.steal_for(1).unwrap();
         assert_eq!(stolen.spec.id, "a");
         // A detach arriving in that window cannot find the pending
         // item; it plants a tombstone instead of succeeding silently.
@@ -426,7 +429,7 @@ mod tests {
         assert!(s.route_of("a").is_none());
         // A normal (unraced) registration still re-homes the route.
         s.push_pending(0, pending("b"));
-        let b = s.steal_for(1).unwrap();
+        let (b, _) = s.steal_for(1).unwrap();
         assert!(s.register_live(&b.spec.id, 1));
         assert_eq!(s.route_of("b"), Some(Route::Live(1)));
         // Detach of a live run reports the owning worker.

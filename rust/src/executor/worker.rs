@@ -25,7 +25,7 @@
 
 use super::queue::{PendingSession, Shared};
 use crate::data::generator_for;
-use crate::events::EventLog;
+use crate::events::{EventKind, EventLog, Level};
 use crate::runtime::Engine;
 use crate::session::{RunStatus, SessionRun, SessionSpec, SessionState, SessionStore};
 use crate::storage::{Checkpoint, CheckpointStore};
@@ -240,7 +240,15 @@ impl Worker {
                 .or_else(|| self.shared.pop_injected(self.index))
                 .or_else(|| {
                     if self.shared.stealing() {
-                        self.shared.steal_for(self.index)
+                        self.shared.steal_for(self.index).map(|(p, victim)| {
+                            self.ctx.events.bus().publish(
+                                Level::Debug,
+                                "executor",
+                                &p.spec.id,
+                                EventKind::WorkerStolen { thief: self.index, victim },
+                            );
+                            p
+                        })
                     } else {
                         None
                     }

@@ -182,6 +182,45 @@ mod tests {
     }
 
     #[test]
+    fn resubmit_keeps_best_lower_is_better() {
+        // Under lower_is_better the *smaller* score must survive a
+        // worse (larger) resubmission — the mirror of the accuracy case.
+        let lb = Leaderboard::new();
+        lb.ensure_board("movie-reviews", "rmse", true);
+        lb.submit("movie-reviews", sub("a", 1.5, 1));
+        lb.submit("movie-reviews", sub("a", 0.9, 2)); // better: kept
+        lb.submit("movie-reviews", sub("a", 1.2, 3)); // worse: ignored
+        assert_eq!(lb.board_len("movie-reviews"), 1);
+        let best = lb.best("movie-reviews").unwrap();
+        assert!((best.value - 0.9).abs() < 1e-12);
+        assert_eq!(best.at_ms, 2, "the kept submission is the better one, not the latest");
+    }
+
+    #[test]
+    fn tie_ordering_is_deterministic() {
+        // Equal value and equal timestamp: session id breaks the tie,
+        // and the order must not depend on submission order.
+        let lb = Leaderboard::new();
+        lb.ensure_board("mnist", "accuracy", false);
+        lb.submit("mnist", sub("zeta", 0.9, 5));
+        lb.submit("mnist", sub("alpha", 0.9, 5));
+        lb.submit("mnist", sub("mid", 0.9, 5));
+        let order: Vec<String> = lb.top("mnist", 10).iter().map(|s| s.session.clone()).collect();
+        assert_eq!(order, vec!["alpha", "mid", "zeta"]);
+
+        let lb2 = Leaderboard::new();
+        lb2.ensure_board("mnist", "accuracy", false);
+        lb2.submit("mnist", sub("mid", 0.9, 5));
+        lb2.submit("mnist", sub("alpha", 0.9, 5));
+        lb2.submit("mnist", sub("zeta", 0.9, 5));
+        let order2: Vec<String> = lb2.top("mnist", 10).iter().map(|s| s.session.clone()).collect();
+        assert_eq!(order2, order, "tie order is independent of submission order");
+        // Ranks reflect the same deterministic order.
+        assert_eq!(lb2.rank_of("mnist", "alpha"), Some(1));
+        assert_eq!(lb2.rank_of("mnist", "zeta"), Some(3));
+    }
+
+    #[test]
     fn tie_break_earlier_submission() {
         let lb = Leaderboard::new();
         lb.ensure_board("mnist", "accuracy", false);

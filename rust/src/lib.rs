@@ -38,10 +38,16 @@
 //!   execution substrate.
 //! * [`session`] / [`runtime`] / [`data`] — training state machines
 //!   over the PJRT engine and the procedural dataset generators.
-//! * [`storage`] / [`leaderboard`] / [`automl`] / [`events`] /
-//!   [`util`] — object store + checkpoints, per-dataset ranking,
-//!   hyperparameter search, the audit log, and dependency-free
-//!   utilities (JSON, TOML, argparse, tables, plots, bench harness).
+//! * [`events`] — the typed publish/subscribe event spine: every
+//!   subsystem publishes structured events (placements, state
+//!   transitions, metrics, checkpoints, steals, samples) into a
+//!   bounded sequence-numbered bus; the leaderboard and utilization
+//!   monitor are derived consumers, and `nsml logs -f` /
+//!   `GET /api/v1/events` stream it incrementally.
+//! * [`storage`] / [`leaderboard`] / [`automl`] / [`util`] — object
+//!   store + checkpoints, per-dataset ranking, hyperparameter search,
+//!   and dependency-free utilities (JSON, TOML, argparse, tables,
+//!   plots, bench harness).
 //!
 //! # Quickstart
 //!

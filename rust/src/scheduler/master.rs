@@ -6,7 +6,7 @@ use super::placement::PlacementPolicy;
 use super::queue::JobQueue;
 use super::JobSpec;
 use crate::cluster::{Cluster, NodeId};
-use crate::events::EventLog;
+use crate::events::{EventKind, EventLog, Level};
 use std::sync::Mutex;
 
 /// Result of a job submission.
@@ -84,7 +84,12 @@ impl Master {
                 if self.cluster.allocate(node, &job.id, &job.req).is_some() {
                     inner.stats.fast_path_hits += 1;
                     inner.running.insert(job.id.clone(), (job.clone(), node));
-                    self.events.info("scheduler", &job.id, format!("fast-path placed on {}", node));
+                    self.events.bus().publish(
+                        Level::Info,
+                        "scheduler",
+                        &job.id,
+                        EventKind::PlacementDecided { node: node.0, from_queue: false },
+                    );
                     return SubmitOutcome::PlacedImmediately(node);
                 }
             }
@@ -116,7 +121,12 @@ impl Master {
             }
             inner.stats.placed_from_queue += 1;
             inner.running.insert(job.id.clone(), (job.clone(), node));
-            self.events.info("scheduler", &job.id, format!("placed on {} from queue", node));
+            self.events.bus().publish(
+                Level::Info,
+                "scheduler",
+                &job.id,
+                EventKind::PlacementDecided { node: node.0, from_queue: true },
+            );
             placed.push((job, node));
         }
         placed

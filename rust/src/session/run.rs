@@ -4,7 +4,7 @@
 
 use super::{SessionSpec, SessionState, SessionStore};
 use crate::data::DataGen;
-use crate::events::EventLog;
+use crate::events::{EventKind, EventLog, Level};
 use crate::runtime::{Batch, Engine, TrainableModel};
 use crate::storage::{Checkpoint, CheckpointStore};
 use crate::util::clock::SharedClock;
@@ -50,6 +50,7 @@ impl SessionRun {
     ) -> Result<SessionRun> {
         let model = TrainableModel::init(engine, &spec.model, spec.seed as i32)?;
         events.info("session", &spec.id, format!("training {} on {} started", spec.model, spec.dataset));
+        publish_state(&events, &store, &spec.id, "running", 0);
         store.update(&spec.id, |r| r.state = SessionState::Running);
         let lr = spec.lr as f32;
         Ok(SessionRun {
@@ -90,6 +91,7 @@ impl SessionRun {
             &spec.id,
             format!("resumed from checkpoint at step {} (lr={})", ckpt.step, lr),
         );
+        publish_state(&events, &store, &spec.id, "running", ckpt.step);
         store.update(&spec.id, |r| r.state = SessionState::Running);
         Ok(SessionRun {
             steps_done: ckpt.step,
@@ -147,6 +149,7 @@ impl SessionRun {
                 l
             };
             if !loss.is_finite() {
+                publish_state(&self.events, &self.store, &self.spec.id, "failed", self.steps_done);
                 self.store.update(&self.spec.id, |r| {
                     r.state = SessionState::Failed;
                     r.failure = Some(format!("non-finite loss at step {}", self.steps_done));
@@ -186,6 +189,20 @@ impl SessionRun {
         let step = self.steps_done;
         let metric_name = self.model.manifest().metric_name.clone();
         let lower = self.model.manifest().lower_is_better;
+        // Typed metric emission: bus consumers (web dashboards, logs
+        // followers) see evals without reading the record store.
+        self.events.bus().publish(
+            Level::Debug,
+            "session",
+            &self.spec.id,
+            EventKind::MetricReported { name: "eval_loss".into(), step, value: loss as f64 },
+        );
+        self.events.bus().publish(
+            Level::Info,
+            "session",
+            &self.spec.id,
+            EventKind::MetricReported { name: metric_name.clone(), step, value: metric as f64 },
+        );
         self.store.update(&self.spec.id, |r| {
             r.metrics.log(step, "eval_loss", loss as f64);
             r.metrics.log(step, &metric_name, metric as f64);
@@ -217,14 +234,19 @@ impl SessionRun {
             &bytes,
             self.clock.now_ms(),
         )?;
-        self.events
-            .debug("session", &self.spec.id, format!("checkpoint at step {}", self.steps_done));
+        self.events.bus().publish(
+            Level::Debug,
+            "session",
+            &self.spec.id,
+            EventKind::CheckpointSaved { step: self.steps_done, object: ck.params.0.clone() },
+        );
         Ok(ck)
     }
 
     /// Pause: checkpoint + mark paused (user can now edit hparams).
     pub fn pause(&mut self) -> Result<Checkpoint> {
         let ck = self.checkpoint()?;
+        publish_state(&self.events, &self.store, &self.spec.id, "paused", self.steps_done);
         self.store.update(&self.spec.id, |r| r.state = SessionState::Paused);
         self.events.info("session", &self.spec.id, format!("paused at step {}", self.steps_done));
         Ok(ck)
@@ -249,6 +271,7 @@ impl SessionRun {
         self.checkpoint()?;
         let (loss, metric) = self.last_eval;
         let now = self.clock.now_ms();
+        publish_state(&self.events, &self.store, &self.spec.id, "done", self.steps_done);
         self.store.update(&self.spec.id, |r| {
             r.state = SessionState::Done;
             r.finished_at_ms = Some(now);
@@ -269,6 +292,22 @@ impl SessionRun {
     pub fn model(&self) -> &TrainableModel {
         &self.model
     }
+}
+
+/// Publish a typed `StateChanged` event. `from` is read from the store
+/// because the caller has not applied the transition yet (`"new"` when
+/// no record exists, matching the submission transition); `failed`
+/// transitions surface at error level so log followers see them.
+fn publish_state(events: &EventLog, store: &SessionStore, id: &str, to: &str, step: u64) {
+    let from =
+        store.get(id).map(|r| r.state.as_str().to_string()).unwrap_or_else(|| "new".into());
+    let level = if to == "failed" { Level::Error } else { Level::Info };
+    events.bus().publish(
+        level,
+        "session",
+        id,
+        EventKind::StateChanged { from, to: to.to_string(), step },
+    );
 }
 
 #[cfg(test)]

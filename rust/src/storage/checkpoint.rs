@@ -47,7 +47,13 @@ impl Checkpoint {
         let mut hparams = BTreeMap::new();
         if let Some(Json::Obj(m)) = j.get("hparams") {
             for (k, v) in m {
-                hparams.insert(k.clone(), v.as_f64().unwrap_or(0.0));
+                // A malformed value must fail the parse naming the key —
+                // silently coercing e.g. lr to 0.0 would make a resumed
+                // session train with a garbage hyperparameter.
+                let f = v.as_f64().ok_or_else(|| {
+                    anyhow!("checkpoint hparam '{}' is not a number: {}", k, v.to_string())
+                })?;
+                hparams.insert(k.clone(), f);
             }
         }
         Ok(Checkpoint {
@@ -214,6 +220,20 @@ mod tests {
         assert!((back.metric - 0.123).abs() < 1e-12);
         assert_eq!(back.hparams["lr"], 0.01);
         assert_eq!(back.params, ck.params);
+    }
+
+    #[test]
+    fn malformed_hparam_is_an_error_naming_the_key() {
+        let bad = br#"{"session":"s","step":1,"metric":0.5,"params":"obj-1",
+                       "saved_at_ms":0,"hparams":{"lr":"fast","seed":3}}"#;
+        let err = CheckpointStore::parse_record(bad).unwrap_err();
+        let msg = format!("{:#}", err);
+        assert!(msg.contains("lr"), "{}", msg);
+        assert!(msg.contains("not a number"), "{}", msg);
+        // Well-formed hparams still parse.
+        let ok = br#"{"session":"s","step":1,"metric":0.5,"params":"obj-1",
+                      "saved_at_ms":0,"hparams":{"lr":0.1}}"#;
+        assert_eq!(CheckpointStore::parse_record(ok).unwrap().hparams["lr"], 0.1);
     }
 
     #[test]

@@ -17,10 +17,18 @@
 //!   (per-worker busy-time, live sessions, queue depth, steal counts)
 //!   dispatched as an `executor_status` query through the attached
 //!   service
+//! * `GET /api/v1/events?since=<cursor>&kind=<name>&subject=<id>&limit=<n>`
+//!   — cursor-paged incremental read of the platform event bus
+//!   (dispatched as an `events_since` query). The reply carries the
+//!   matching events, the `next` cursor to resume from, and a
+//!   `dropped` count when the reader fell a full ring behind; polling
+//!   with the returned cursor streams new events without ever
+//!   re-reading old ones.
 //! * `POST /api/v1/<verb>`       — dispatch any `ApiRequest` verb (`run`,
 //!   `pause`, `resume`, `stop`, `infer`, `drive`, `run_to_completion`,
 //!   `kill_node`, `list_sessions`, `get_session`, `board`,
-//!   `cluster_status`, `executor_status`, `submit_trial_batch`) into the attached
+//!   `cluster_status`, `executor_status`, `events_since`,
+//!   `submit_trial_batch`) into the attached
 //!   [`PlatformService`](crate::api::PlatformService); the JSON body is
 //!   the verb's `args` object and the reply is an `ApiResponse`
 //!   envelope. Error codes map to HTTP: `not_found`→404,
@@ -131,10 +139,13 @@ fn percent_decode(s: &str) -> String {
 /// Route a request (pure; no I/O). `body` is the request body (only
 /// meaningful for POST).
 pub fn handle(state: &WebState, method: &str, path: &str, body: &str) -> Response {
-    let path = path.split('?').next().unwrap_or(path);
-    let path = percent_decode(path);
+    let (route, query) = match path.split_once('?') {
+        Some((r, q)) => (r, q),
+        None => (path, ""),
+    };
+    let path = percent_decode(route);
     match method {
-        "GET" => handle_get(state, &path),
+        "GET" => handle_get(state, &path, query),
         "POST" => match path.strip_prefix("/api/v1/") {
             Some(verb) => handle_api_post(state, verb, body),
             None => Response::method_not_allowed("GET"),
@@ -204,10 +215,60 @@ fn executor_json(state: &WebState) -> Response {
     api_response(api.call(ApiRequest::ExecutorStatus))
 }
 
-fn handle_get(state: &WebState, path: &str) -> Response {
+/// Decoded `key=value` pairs of a query string.
+fn parse_query(query: &str) -> Vec<(String, String)> {
+    query
+        .split('&')
+        .filter(|p| !p.is_empty())
+        .map(|p| {
+            let (k, v) = p.split_once('=').unwrap_or((p, ""));
+            (percent_decode(k), percent_decode(v))
+        })
+        .collect()
+}
+
+/// `GET /api/v1/events?since=&kind=&subject=&limit=`: the event-bus
+/// cursor read as a pollable route — the query string becomes an
+/// `events_since` dispatch, so the wire layer validates the arguments.
+fn events_json(state: &WebState, query: &str) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    let mut args = Json::obj();
+    for (k, v) in parse_query(query) {
+        match k.as_str() {
+            "since" | "limit" => match v.parse::<u64>() {
+                Ok(n) => {
+                    args.set(&k, n.into());
+                }
+                Err(_) => {
+                    return api_response(ApiResponse::Error {
+                        error: ApiError::invalid(format!(
+                            "events: query parameter '{}' must be a non-negative integer",
+                            k
+                        )),
+                    })
+                }
+            },
+            "kind" | "subject" => {
+                args.set(&k, v.as_str().into());
+            }
+            _ => {} // unknown parameters are ignored
+        }
+    }
+    match ApiRequest::from_verb_args("events_since", &args) {
+        Ok(req) => api_response(api.call(req)),
+        Err(error) => api_response(ApiResponse::Error { error }),
+    }
+}
+
+fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
     if path.starts_with("/api/v1/") {
         if path == "/api/v1/executor" {
             return executor_json(state);
+        }
+        if path == "/api/v1/events" {
+            return events_json(state, query);
         }
         return Response::method_not_allowed("POST");
     }
@@ -650,8 +711,70 @@ mod tests {
         let s = state();
         let r = handle(&s, "POST", "/api/v1/list_sessions", "");
         assert_eq!(r.status, 503);
-        // The executor read route needs the service too.
+        // The executor and events read routes need the service too.
         assert_eq!(handle(&s, "GET", "/api/v1/executor", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/events?since=0", "").status, 503);
+    }
+
+    #[test]
+    fn events_route_pages_cursor_reads() {
+        use crate::events::{Event, EventKind, Level};
+        // Stub service echoing the parsed events_since arguments back
+        // through a canned page, so the query-string plumbing is
+        // verified without a platform.
+        let (api, rx) = crate::api::service_channel();
+        std::thread::spawn(move || {
+            while let Ok(call) = rx.recv() {
+                let resp = match call.request() {
+                    ApiRequest::EventsSince { since, kind, subject, limit } => {
+                        assert_eq!(*since, 5);
+                        assert_eq!(kind.as_deref(), Some("state"));
+                        assert_eq!(subject.as_deref(), Some("kim/mnist/1"));
+                        assert_eq!(*limit, 2);
+                        ApiResponse::Events {
+                            events: vec![Event {
+                                seq: 6,
+                                at_ms: 100,
+                                level: Level::Info,
+                                source: "session".into(),
+                                subject: "kim/mnist/1".into(),
+                                kind: EventKind::StateChanged {
+                                    from: "running".into(),
+                                    to: "done".into(),
+                                    step: 40,
+                                },
+                            }],
+                            next: 7,
+                            dropped: 0,
+                        }
+                    }
+                    _ => ApiResponse::Sessions { sessions: vec![] },
+                };
+                call.respond(resp);
+            }
+        });
+        let mut s = state();
+        s.api = Some(api);
+        // Subject slashes travel percent-encoded in the query string.
+        let r = handle(
+            &s,
+            "GET",
+            "/api/v1/events?since=5&kind=state&subject=kim%2Fmnist%2F1&limit=2",
+            "",
+        );
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("events"));
+        assert_eq!(j.at(&["data", "next"]).unwrap().as_i64(), Some(7));
+        let events = j.at(&["data", "events"]).unwrap().as_arr().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].get("kind").unwrap().as_str(), Some("state"));
+        assert_eq!(events[0].at(&["data", "to"]).unwrap().as_str(), Some("done"));
+        // Rendered message rides along for dumb consumers.
+        assert!(events[0].get("message").unwrap().as_str().unwrap().contains("done"));
+        // Bad cursor values 400 before reaching the service.
+        let bad = handle(&s, "GET", "/api/v1/events?since=yesterday", "");
+        assert_eq!(bad.status, 400);
     }
 
     #[test]

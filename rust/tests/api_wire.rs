@@ -38,6 +38,13 @@ fn sample_requests() -> Vec<ApiRequest> {
         ApiRequest::Board { dataset: "mnist".into(), limit: 10 },
         ApiRequest::ClusterStatus,
         ApiRequest::ExecutorStatus,
+        ApiRequest::EventsSince {
+            since: 12,
+            kind: Some("state".into()),
+            subject: Some("kim/mnist/1".into()),
+            limit: 50,
+        },
+        ApiRequest::EventsSince { since: 0, kind: None, subject: None, limit: 256 },
         ApiRequest::SubmitTrialBatch {
             user: "automl".into(),
             dataset: "mnist".into(),
@@ -131,6 +138,32 @@ fn sample_responses() -> Vec<ApiResponse> {
                 total_steals: 2,
                 work_steal: true,
             },
+        },
+        ApiResponse::Events {
+            events: vec![
+                nsml::events::Event {
+                    seq: 41,
+                    at_ms: 900,
+                    level: nsml::events::Level::Info,
+                    source: "scheduler".into(),
+                    subject: "kim/mnist/1".into(),
+                    kind: nsml::events::EventKind::PlacementDecided { node: 2, from_queue: true },
+                },
+                nsml::events::Event {
+                    seq: 42,
+                    at_ms: 1000,
+                    level: nsml::events::Level::Info,
+                    source: "session".into(),
+                    subject: "kim/mnist/1".into(),
+                    kind: nsml::events::EventKind::StateChanged {
+                        from: "running".into(),
+                        to: "done".into(),
+                        step: 120,
+                    },
+                },
+            ],
+            next: 43,
+            dropped: 7,
         },
         ApiResponse::Error {
             error: ApiError::failed("session kim/mnist/1 is not active").with_session("kim/mnist/1"),
@@ -285,7 +318,7 @@ fn dispatch_drives_run_pause_resume_stop() {
         .events
         .query(Some("api"), nsml::events::Level::Info)
         .iter()
-        .map(|e| e.message.clone())
+        .map(|e| e.message())
         .collect();
     for verb in ["dispatch run", "dispatch pause", "dispatch resume", "dispatch stop"] {
         assert!(audit.iter().any(|m| m.starts_with(verb)), "missing '{}' in {:?}", verb, audit);

@@ -228,14 +228,74 @@ fn gpu_requests_respected_and_fragmentation_visible() {
 
 #[test]
 fn events_tell_the_story() {
+    use nsml::events::EventKind;
     let Some(p) = platform() else { return };
     let id = p.run("story", "mnist", quick(10, 1)).unwrap();
     p.run_to_completion(5, 10_000).unwrap();
     let events = p.events.for_subject(&id);
-    let text: Vec<String> = events.iter().map(|e| e.message.clone()).collect();
+    let text: Vec<String> = events.iter().map(|e| e.message()).collect();
     let joined = text.join(" | ");
     assert!(joined.contains("fast-path placed") || joined.contains("placed on"), "{}", joined);
     assert!(joined.contains("container up"), "{}", joined);
     assert!(joined.contains("training"), "{}", joined);
     assert!(joined.contains("done at step"), "{}", joined);
+    // The same story is typed, not just strings: placement, state
+    // transitions ending in done, metrics, and a checkpoint.
+    assert!(
+        events.iter().any(|e| matches!(e.kind, EventKind::PlacementDecided { .. })),
+        "{}",
+        joined
+    );
+    assert!(
+        events
+            .iter()
+            .any(|e| matches!(&e.kind, EventKind::StateChanged { to, .. } if to == "done")),
+        "{}",
+        joined
+    );
+    let has_metric = events.iter().any(|e| matches!(e.kind, EventKind::MetricReported { .. }));
+    assert!(has_metric, "{}", joined);
+    let has_ckpt = events.iter().any(|e| matches!(e.kind, EventKind::CheckpointSaved { .. }));
+    assert!(has_ckpt, "{}", joined);
+    // Sequence numbers are a strictly increasing total order.
+    assert!(events.windows(2).all(|w| w[0].seq < w[1].seq));
+}
+
+#[test]
+fn derived_views_are_fed_by_the_bus() {
+    use nsml::events::EventFilter;
+    let Some(p) = platform() else { return };
+    // A subscription opened before the run sees everything the derived
+    // views consumed.
+    let mut done_sub = p
+        .events
+        .bus()
+        .subscribe()
+        .with_filter(EventFilter::default().with_kind("state"));
+    let id = p.run("derived", "mnist", quick(10, 2)).unwrap();
+    p.run_to_completion(5, 10_000).unwrap();
+
+    // Leaderboard was populated by the pump (no direct submit call
+    // remains on the completion path) and matches the record.
+    let rec = p.sessions.get(&id).unwrap();
+    assert_eq!(rec.state, SessionState::Done);
+    assert_eq!(p.leaderboard.rank_of("mnist", &id), Some(1));
+    let board_best = p.leaderboard.best("mnist").unwrap();
+    assert_eq!(board_best.value, rec.best_metric.unwrap());
+    assert_eq!(board_best.step, rec.steps_done);
+
+    // The monitor's series came off the bus too: one cluster sample and
+    // one per-worker sample set per drive round.
+    assert!(!p.monitor.is_empty());
+    assert!(!p.monitor.latest_workers().is_empty());
+
+    // An independent subscription saw the same done transition the
+    // leaderboard consumer acted on.
+    let states = done_sub.poll();
+    assert!(
+        states.iter().any(|e| e.subject == id && e.message().contains("done")),
+        "{:?}",
+        states.iter().map(|e| e.render()).collect::<Vec<_>>()
+    );
+    assert_eq!(done_sub.dropped(), 0);
 }
