@@ -58,7 +58,7 @@ fn main() {
         assert!(!platform.leaderboard.top("mnist", 100).is_empty());
     });
     bench.run("dispatch: board", || {
-        let req = ApiRequest::Board { dataset: "mnist".into(), limit: 100 };
+        let req = ApiRequest::Board { dataset: "mnist".into(), limit: 100, user: None };
         assert!(matches!(service.dispatch(req), ApiResponse::Board { .. }));
     });
 

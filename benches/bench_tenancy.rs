@@ -1,0 +1,137 @@
+//! Tenancy headlines: two-user fairness on a saturated pool, and the
+//! wall-clock overhead of fair-share admission control.
+//!
+//! Acceptance bars (full mode; skipped in smoke):
+//!  * fairness — alice and bob each submit 8 sessions on a 1-node /
+//!    2-GPU pool (alice's whole burst first, the FIFO worst case);
+//!    their aggregate accounted GPU-seconds AND their last completion
+//!    times (virtual ms) end within 20% of each other. Under FIFO the
+//!    first user's batch would finish in half the span — the last-
+//!    finish gate is what proves the interleave.
+//!  * overhead — driving the same 16-session workload with tenancy
+//!    enabled costs ≤5% wall-clock over the no-tenancy drive.
+//!
+//! Run: `cargo bench --bench bench_tenancy`
+//! Smoke: `BENCH_SMOKE=1 cargo bench --bench bench_tenancy`
+
+use nsml::api::{NsmlPlatform, PlatformConfig, RunOpts};
+use nsml::session::SessionState;
+use nsml::util::bench::{smoke, Bench};
+
+const USERS: [&str; 2] = ["alice", "bob"];
+const PER_USER: usize = 8;
+
+fn cfg(tenancy: bool) -> PlatformConfig {
+    PlatformConfig {
+        nodes: 1,
+        gpus_per_node: 2,
+        latency: nsml::container::LatencyModel::fast(),
+        artifacts_dir: "artifacts".into(),
+        tenancy,
+        ..PlatformConfig::default()
+    }
+}
+
+fn opts(steps: u64, seed: u64) -> RunOpts {
+    RunOpts { total_steps: steps, eval_every: 0, checkpoint_every: 0, seed, ..Default::default() }
+}
+
+/// Submit alice's burst, then bob's, and drive everything to done.
+fn drive_two_users(p: &NsmlPlatform, steps: u64) {
+    for (u, user) in USERS.iter().enumerate() {
+        for i in 0..PER_USER {
+            p.run(user, "mnist", opts(steps, (u * PER_USER + i) as u64)).unwrap();
+        }
+    }
+    p.run_to_completion(steps.min(12), 100_000).unwrap();
+}
+
+fn within(a: f64, b: f64, tol: f64) -> bool {
+    (a - b).abs() <= tol * a.max(b)
+}
+
+/// `(mean, last)` completion times in virtual ms for a user's sessions.
+fn finish_stats_ms(p: &NsmlPlatform, user: &str) -> (f64, f64) {
+    let finishes: Vec<f64> = p
+        .sessions
+        .list()
+        .into_iter()
+        .filter(|r| r.spec.user == user)
+        .map(|r| {
+            assert_eq!(r.state, SessionState::Done, "{}", r.spec.id);
+            r.finished_at_ms.expect("done session has a finish time") as f64
+        })
+        .collect();
+    let mean = finishes.iter().sum::<f64>() / finishes.len() as f64;
+    let last = finishes.iter().fold(0.0f64, |a, &b| a.max(b));
+    (mean, last)
+}
+
+fn main() {
+    let steps: u64 = if smoke() { 8 } else { 24 };
+    println!(
+        "tenancy bench: {} users x {} sessions x {} steps on 1 node / 2 GPUs{}",
+        USERS.len(),
+        PER_USER,
+        steps,
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    // ---- fairness: one full tenancy-enabled run, inspected in depth.
+    let p = NsmlPlatform::new(cfg(true)).expect("run `make artifacts` first");
+    drive_two_users(&p, steps);
+    let now = p.clock.now_ms();
+    let gpu_sec: Vec<f64> =
+        USERS.iter().map(|u| p.tenancy.accountant.usage_at(u, now)).collect();
+    let fin: Vec<(f64, f64)> = USERS.iter().map(|u| finish_stats_ms(&p, u)).collect();
+    println!(
+        "fairness: gpu-seconds alice={:.3} bob={:.3} | finish (mean/last) alice={:.0}/{:.0}ms bob={:.0}/{:.0}ms",
+        gpu_sec[0], gpu_sec[1], fin[0].0, fin[0].1, fin[1].0, fin[1].1
+    );
+    if !smoke() {
+        assert!(
+            within(gpu_sec[0], gpu_sec[1], 0.20),
+            "aggregate GPU-seconds diverge >20%: {:?}",
+            gpu_sec
+        );
+        assert!(
+            within(fin[0].1, fin[1].1, 0.20),
+            "last completions diverge >20% (FIFO-like starvation): {:?}",
+            fin
+        );
+    }
+
+    // ---- overhead: tenancy-on vs tenancy-off wall-clock for the same
+    // workload (fresh platform per iteration so state never accretes).
+    let mut bench = Bench::new("tenancy");
+    bench.run("drive 16 sessions, tenancy off", || {
+        let p = NsmlPlatform::new(cfg(false)).expect("artifacts");
+        drive_two_users(&p, steps);
+    });
+    bench.run("drive 16 sessions, tenancy on", || {
+        let p = NsmlPlatform::new(cfg(true)).expect("artifacts");
+        drive_two_users(&p, steps);
+    });
+    bench.finish();
+
+    let off = bench.result("drive 16 sessions, tenancy off").unwrap().p50_ms();
+    let on = bench.result("drive 16 sessions, tenancy on").unwrap().p50_ms();
+    println!(
+        "admission overhead: {:+.2}% (off {:.1}ms -> on {:.1}ms)",
+        (on / off - 1.0) * 100.0,
+        off,
+        on
+    );
+    if smoke() {
+        println!("smoke mode: skipping the fairness/overhead assertions");
+    } else {
+        assert!(
+            on <= off * 1.05,
+            "fair-share admission must cost <=5% wall-clock, got {:.1}ms -> {:.1}ms ({:+.2}%)",
+            off,
+            on,
+            (on / off - 1.0) * 100.0
+        );
+        println!("OK: fairness within 20% and admission overhead <=5%");
+    }
+}

@@ -1,6 +1,7 @@
 //! Platform configuration (defaults mirror the paper's 80-P40 prototype).
 
 use crate::container::LatencyModel;
+use crate::tenancy::{PriorityClass, TenantQuota, TenantSpec};
 use crate::util::tomlcfg::Config;
 use std::path::PathBuf;
 
@@ -15,6 +16,9 @@ pub struct PlatformConfig {
     pub policy: String,
     /// §3.2 empty-queue fast path.
     pub fast_path: bool,
+    /// How many blocked jobs a scheduling pass may skip per priority
+    /// lane (`[scheduler] skip_window`; 0 = strict head-of-line).
+    pub skip_window: usize,
     /// Scheduler replicas for leader election.
     pub sched_replicas: usize,
     /// Container operation latencies (virtual milliseconds).
@@ -37,6 +41,16 @@ pub struct PlatformConfig {
     pub event_echo: bool,
     /// Event-bus ring retention in events (`[events] capacity`).
     pub event_capacity: usize,
+    /// Fair-share admission control + quota enforcement (`[tenancy]
+    /// enabled`). Off = submissions go straight to the scheduler (the
+    /// pre-tenancy behaviour, kept as the bench baseline).
+    pub tenancy: bool,
+    /// Default per-user quota (`[tenancy] max_concurrent / max_gpus /
+    /// gpu_second_budget / weight / class`; zeros mean unlimited).
+    pub tenant_quota: TenantQuota,
+    /// Per-user weight/class overrides from `[tenancy] users =
+    /// "name:weight:class,…"`.
+    pub tenant_users: Vec<TenantSpec>,
 }
 
 impl Default for PlatformConfig {
@@ -47,6 +61,7 @@ impl Default for PlatformConfig {
             gpu_mem_gb: 24.0,
             policy: "best_fit".to_string(),
             fast_path: true,
+            skip_window: crate::scheduler::DEFAULT_SKIP_WINDOW,
             sched_replicas: 3,
             latency: LatencyModel::default(),
             artifacts_dir: PathBuf::from("artifacts"),
@@ -57,6 +72,9 @@ impl Default for PlatformConfig {
             work_steal: true,
             event_echo: false,
             event_capacity: crate::events::DEFAULT_CAPACITY,
+            tenancy: true,
+            tenant_quota: TenantQuota::default(),
+            tenant_users: Vec::new(),
         }
     }
 }
@@ -83,6 +101,8 @@ impl PlatformConfig {
             gpu_mem_gb: cfg.float_or("cluster", "gpu_mem_gb", dflt.gpu_mem_gb),
             policy: cfg.str_or("scheduler", "policy", &dflt.policy),
             fast_path: cfg.bool_or("scheduler", "fast_path", dflt.fast_path),
+            skip_window: cfg.int_or("scheduler", "skip_window", dflt.skip_window as i64).max(0)
+                as usize,
             sched_replicas: cfg.int_or("scheduler", "replicas", dflt.sched_replicas as i64) as usize,
             latency: LatencyModel {
                 image_build_ms: cfg.int_or("latency", "image_build_ms", lat_dflt.image_build_ms as i64) as u64,
@@ -109,8 +129,49 @@ impl PlatformConfig {
             event_echo: cfg.bool_or("events", "echo", dflt.event_echo),
             event_capacity: (cfg.int_or("events", "capacity", dflt.event_capacity as i64).max(1))
                 as usize,
+            tenancy: cfg.bool_or("tenancy", "enabled", dflt.tenancy),
+            tenant_quota: TenantQuota {
+                max_concurrent: cfg.int_or("tenancy", "max_concurrent", 0).max(0) as usize,
+                max_gpus: cfg.int_or("tenancy", "max_gpus", 0).max(0) as usize,
+                gpu_second_budget: cfg.float_or("tenancy", "gpu_second_budget", 0.0).max(0.0),
+                weight: cfg.int_or("tenancy", "weight", 1).max(1) as u32,
+                class: {
+                    let name = cfg.str_or("tenancy", "class", "normal");
+                    PriorityClass::from_str(&name).ok_or_else(|| {
+                        format!("[tenancy] class: unknown priority class '{}'", name)
+                    })?
+                },
+            },
+            tenant_users: parse_tenant_users(&cfg.str_or("tenancy", "users", ""))?,
         })
     }
+}
+
+/// Parse `[tenancy] users = "name:weight:class,…"` — weight and class
+/// are optional per entry (`"alice:4:high, bob:2, carol"`).
+fn parse_tenant_users(text: &str) -> Result<Vec<TenantSpec>, String> {
+    let mut specs = Vec::new();
+    for entry in text.split(',').map(str::trim).filter(|e| !e.is_empty()) {
+        let mut parts = entry.split(':').map(str::trim);
+        let user = parts.next().unwrap_or("").to_string();
+        if user.is_empty() {
+            return Err(format!("[tenancy] users: empty user name in '{}'", entry));
+        }
+        let weight = match parts.next() {
+            None | Some("") => 1,
+            Some(w) => w
+                .parse::<u32>()
+                .map_err(|_| format!("[tenancy] users: bad weight in '{}'", entry))?
+                .max(1),
+        };
+        let class = match parts.next() {
+            None | Some("") => PriorityClass::Normal,
+            Some(c) => PriorityClass::from_str(c)
+                .ok_or_else(|| format!("[tenancy] users: unknown class in '{}'", entry))?,
+        };
+        specs.push(TenantSpec { user, weight, class });
+    }
+    Ok(specs)
 }
 
 #[cfg(test)]
@@ -134,6 +195,7 @@ gpus_per_node = 2
 [scheduler]
 policy = "first_fit"
 fast_path = false
+skip_window = 4
 replicas = 5
 [latency]
 image_build_ms = 100
@@ -146,12 +208,21 @@ work_steal = false
 [events]
 echo = true
 capacity = 500
+[tenancy]
+enabled = false
+max_concurrent = 3
+max_gpus = 8
+gpu_second_budget = 120.5
+weight = 2
+class = "low"
+users = "alice:4:high, bob:2, carol"
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
         assert_eq!(c.gpus_per_node, 2);
         assert_eq!(c.policy, "first_fit");
         assert!(!c.fast_path);
+        assert_eq!(c.skip_window, 4);
         assert_eq!(c.sched_replicas, 5);
         assert_eq!(c.latency.image_build_ms, 100);
         assert_eq!(c.latency.boot_ms, LatencyModel::default().boot_ms);
@@ -161,6 +232,36 @@ capacity = 500
         assert!(!c.work_steal);
         assert!(c.event_echo);
         assert_eq!(c.event_capacity, 500);
+        assert!(!c.tenancy);
+        assert_eq!(c.tenant_quota.max_concurrent, 3);
+        assert_eq!(c.tenant_quota.max_gpus, 8);
+        assert_eq!(c.tenant_quota.gpu_second_budget, 120.5);
+        assert_eq!(c.tenant_quota.weight, 2);
+        assert_eq!(c.tenant_quota.class, PriorityClass::Low);
+        assert_eq!(
+            c.tenant_users,
+            vec![
+                TenantSpec { user: "alice".into(), weight: 4, class: PriorityClass::High },
+                TenantSpec { user: "bob".into(), weight: 2, class: PriorityClass::Normal },
+                TenantSpec { user: "carol".into(), weight: 1, class: PriorityClass::Normal },
+            ]
+        );
+    }
+
+    #[test]
+    fn bad_tenancy_entries_are_rejected() {
+        for bad in [
+            "[tenancy]\nusers = \"alice:nope\"",
+            "[tenancy]\nusers = \"alice:2:frobnicate\"",
+            "[tenancy]\nusers = \":2:high\"",
+            "[tenancy]\nclass = \"frobnicate\"",
+        ] {
+            assert!(PlatformConfig::from_toml_str(bad).is_err(), "{}", bad);
+        }
+        // Stray separators are tolerated; entries stay parsed.
+        let c = PlatformConfig::from_toml_str("[tenancy]\nusers = \"alice, ,bob:3\"").unwrap();
+        assert_eq!(c.tenant_users.len(), 2);
+        assert_eq!(c.tenant_users[1].weight, 3);
     }
 
     #[test]
@@ -170,5 +271,10 @@ capacity = 500
         // Echo is opt-in config, never sniffed from the environment.
         assert!(!c.event_echo);
         assert_eq!(c.event_capacity, crate::events::DEFAULT_CAPACITY);
+        // Tenancy defaults: enabled, but every limit unlimited.
+        assert!(c.tenancy);
+        assert_eq!(c.tenant_quota, TenantQuota::default());
+        assert!(c.tenant_users.is_empty());
+        assert_eq!(c.skip_window, crate::scheduler::DEFAULT_SKIP_WINDOW);
     }
 }

@@ -33,6 +33,19 @@
 //! independently mutated state. `events_since` pages the same stream
 //! over the wire.
 //!
+//! Multi-tenancy ([`crate::tenancy`], `[tenancy]` config): submissions
+//! wait in a per-user weighted fair-share admission queue in front of
+//! the scheduler; `run` enqueues, and every capacity change
+//! (completion, stop, failure, preemption) pumps the queue through
+//! [`Master::can_place`](crate::scheduler::Master::can_place). The
+//! per-user GPU-second accountant is another derived bus consumer,
+//! and each drive round enforces quotas preemptively: an over-quota
+//! user's youngest running session is checkpointed, paused and parked
+//! for re-admission when someone else is waiting. Decisions publish as
+//! `admission` events; `tenant_report` / `set_quota` (wire),
+//! `GET /api/v1/tenants` (web) and `nsml tenants` / `nsml quota`
+//! (CLI) expose and edit the state.
+//!
 //! Concurrency model: platform control state (cluster, scheduler,
 //! sessions, leaderboard) is thread-safe, and model *execution* runs on
 //! the [`crate::executor`] worker pool — each worker thread owns its
@@ -62,8 +75,8 @@ pub use service::{service_channel, PlatformService, ServiceCall, ServiceHandle};
 pub use trial::PlatformTrialRunner;
 pub use wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ErrorCode, ExecutorStats,
-    NodeStatusView, RunParams, SessionView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS,
-    API_VERSION,
+    NodeStatusView, RunParams, SessionView, TenantView, TrialSpec, WorkerStatView, ALL_KINDS,
+    ALL_VERBS, API_VERSION,
 };
 
 use crate::cluster::Cluster;
@@ -76,6 +89,7 @@ use crate::runtime::{Engine, TensorData, TrainableModel};
 use crate::scheduler::{ElectionGroup, JobSpec, Master, SubmitOutcome};
 use crate::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
 use crate::storage::{CheckpointStore, DatasetRegistry, ObjectStore};
+use crate::tenancy::{PendingAdmission, Tenancy};
 use crate::util::clock::{sim_clock, SharedClock, SimClock};
 use crate::util::idgen;
 use anyhow::{anyhow, Context, Result};
@@ -124,6 +138,10 @@ pub struct NsmlPlatform {
     pub checkpoints: CheckpointStore,
     pub sessions: SessionStore,
     pub leaderboard: Leaderboard,
+    /// Multi-tenant fair share: per-user quotas, the weighted
+    /// admission queue in front of the scheduler, and the event-bus
+    /// derived GPU-second accountant (`[tenancy]` config).
+    pub tenancy: Tenancy,
     /// Utilization/queue time series sampled by the drive loop (§3.1).
     pub monitor: crate::cluster::UtilizationMonitor,
     /// Facade-local engine for inference/manifest queries. Training
@@ -164,6 +182,8 @@ impl NsmlPlatform {
         let policy = crate::scheduler::policy_by_name(&config.policy, config.seed);
         let mut master = Master::new(cluster.clone(), policy, events.clone());
         master.fast_path = config.fast_path;
+        let master = master.with_skip_window(config.skip_window);
+        let tenancy = Tenancy::new(config.tenant_quota, &config.tenant_users);
         let election = ElectionGroup::new(clock.clone(), events.clone(), config.sched_replicas);
         let containers = ContainerManager::new(clock.clone(), events.clone(), config.latency.clone());
         let objects = match &config.state_dir {
@@ -200,6 +220,7 @@ impl NsmlPlatform {
             checkpoints,
             sessions,
             leaderboard: Leaderboard::new(),
+            tenancy,
             monitor: crate::cluster::UtilizationMonitor::new(),
             engine,
             executor,
@@ -264,6 +285,27 @@ impl NsmlPlatform {
         let model = model_for_dataset(dataset)
             .ok_or_else(|| anyhow!("no model registered for dataset '{}'", dataset))?;
         self.datasets.get(dataset, user)?; // visibility check
+        // A job no node could ever fit would wedge its user's FIFO
+        // admission lane forever (the lane has no skip window by
+        // design — a user's own submissions stay ordered). Fail fast
+        // instead, like an unknown model does. Alive nodes set the
+        // bar; if the whole cluster is down, fall back to the full
+        // shape (nodes revive, a total outage should queue, not 400).
+        let snapshot = self.cluster.snapshot();
+        let largest = snapshot
+            .iter()
+            .filter(|n| n.alive)
+            .map(|n| n.total_gpus)
+            .max()
+            .or_else(|| snapshot.iter().map(|n| n.total_gpus).max())
+            .unwrap_or(0);
+        if opts.gpus > largest {
+            return Err(anyhow!(
+                "session requests {} GPUs but the largest node has {}",
+                opts.gpus,
+                largest
+            ));
+        }
         let manifest = self.engine.manifest().model(model)?;
         let id = idgen::session_id(user, dataset);
         let mut spec = SessionSpec::new(&id, user, dataset, model);
@@ -283,6 +325,8 @@ impl NsmlPlatform {
             &id,
             EventKind::StateChanged { from: "new".into(), to: "queued".into(), step: 0 },
         );
+        self.tenancy.registry.note_user(user);
+        self.tenancy.accountant.register(&id, user, opts.gpus);
         let job = JobSpec {
             id: id.clone(),
             user: user.to_string(),
@@ -290,15 +334,162 @@ impl NsmlPlatform {
             req: crate::cluster::ResourceReq::gpus(opts.gpus),
             priority: opts.priority,
         };
-        match self.master.submit(job) {
-            SubmitOutcome::PlacedImmediately(node) => {
-                self.prepare_and_start(&id, node)?;
-            }
-            SubmitOutcome::Queued { position } => {
-                self.events.info("platform", &id, format!("queued at position {}", position));
+        if self.config.tenancy {
+            // Fair share: the submission waits in its user's admission
+            // lane until quota and capacity both say yes.
+            self.tenancy.admission.enqueue(PendingAdmission { job, resume: false });
+            self.pump_admission()?;
+        } else {
+            match self.master.submit(job) {
+                SubmitOutcome::PlacedImmediately(node) => {
+                    self.prepare_and_start(&id, node)?;
+                }
+                SubmitOutcome::Queued { position } => {
+                    self.events.info("platform", &id, format!("queued at position {}", position));
+                }
             }
         }
         Ok(id)
+    }
+
+    /// Jobs waiting anywhere: the fair-share admission queue plus the
+    /// scheduler's own queue (allocation races, orphan requeues).
+    pub fn queued_total(&self) -> usize {
+        self.master.queue_len() + self.tenancy.admission.len()
+    }
+
+    /// Offer admissible pending submissions to the scheduler in
+    /// weighted fair-share order. Runs after every submission and
+    /// whenever capacity frees (completion, stop, failure, preemption)
+    /// — with tenancy disabled it is a no-op.
+    pub fn pump_admission(&self) -> Result<()> {
+        if !self.config.tenancy {
+            return Ok(());
+        }
+        loop {
+            let now = self.clock.now_ms();
+            let waiting = self.tenancy.admission.users_waiting();
+            if waiting.is_empty() {
+                return Ok(());
+            }
+            let pop = self.tenancy.admission.pop_next(
+                |user| {
+                    let q = self.tenancy.registry.quota_of(user);
+                    (q.class, q.weight)
+                },
+                |user, p| self.admissible(user, p, &waiting, now),
+            );
+            for (user, session) in &pop.deferred {
+                self.events.bus().publish(
+                    Level::Debug,
+                    "tenancy",
+                    session,
+                    EventKind::AdmissionDecided { decision: "defer".into(), user: user.clone() },
+                );
+            }
+            // Work-conserving fallback: two over-budget users make
+            // each other "contended", so the strict gate refuses both
+            // and the cluster would idle with work waiting. When no
+            // quota-clear waiter is being held out (the capacity is
+            // not morally anyone else's), admit the fair-share pick
+            // with the budget gate relaxed — hard limits
+            // (max_concurrent/max_gpus) still hold, and the strict
+            // pass already examined every head, so no new defer
+            // events surface here.
+            let admitted = match pop.admitted {
+                Some(p) => Some(p),
+                None => {
+                    let clear = self.quota_clear_waiters(&waiting, now);
+                    self.tenancy
+                        .admission
+                        .pop_next(
+                            |user| {
+                                let q = self.tenancy.registry.quota_of(user);
+                                (q.class, q.weight)
+                            },
+                            |user, p| {
+                                !clear.iter().any(|v| v != user)
+                                    && self.quota_admissible(user, p, false, now)
+                                    && self.master.can_place(&p.job.req)
+                            },
+                        )
+                        .admitted
+                }
+            };
+            let Some(p) = admitted else {
+                return Ok(());
+            };
+            let id = p.job.id.clone();
+            self.tenancy.registry.charge(&id, &p.job.user, p.job.req.gpus);
+            self.events.bus().publish(
+                Level::Info,
+                "tenancy",
+                &id,
+                EventKind::AdmissionDecided {
+                    decision: if p.resume { "readmit" } else { "admit" }.into(),
+                    user: p.job.user.clone(),
+                },
+            );
+            match self.master.submit(p.job) {
+                SubmitOutcome::PlacedImmediately(node) => self.prepare_and_start(&id, node)?,
+                // The master queued instead of placing (fast path off,
+                // or its queue is non-empty from an orphan requeue /
+                // allocation race). Capacity is spoken for but not yet
+                // allocated, so can_place would keep saying yes — stop
+                // admitting now or the whole burst would drain into the
+                // master FIFO and bypass fair-share ordering. The next
+                // pump (every drive round and capacity release) admits
+                // the next head.
+                SubmitOutcome::Queued { .. } => return Ok(()),
+            }
+        }
+    }
+
+    /// Quota + capacity gate for one pending submission.
+    fn admissible(&self, user: &str, p: &PendingAdmission, waiting: &[String], now: u64) -> bool {
+        let contended = waiting.iter().any(|u| u != user);
+        self.quota_admissible(user, p, contended, now) && self.master.can_place(&p.job.req)
+    }
+
+    /// The quota half of the admission gate (capacity aside): would
+    /// `user`'s submission be allowed under their limits right now?
+    /// An exhausted GPU-second budget only blocks while `contended` —
+    /// the admission queue stays work-conserving.
+    fn quota_admissible(&self, user: &str, p: &PendingAdmission, contended: bool, now: u64) -> bool {
+        let q = self.tenancy.registry.quota_of(user);
+        let (sessions, gpus) = self.tenancy.registry.occupancy(user);
+        if q.max_concurrent > 0 && sessions >= q.max_concurrent {
+            return false;
+        }
+        if q.max_gpus > 0 && gpus + p.job.req.gpus > q.max_gpus {
+            return false;
+        }
+        if contended
+            && q.gpu_second_budget > 0.0
+            && self.tenancy.accountant.usage_at(user, now) >= q.gpu_second_budget
+        {
+            return false;
+        }
+        true
+    }
+
+    /// The waiting users whose lane head passes the full (contended)
+    /// quota gate right now — the users idle or freed capacity is
+    /// being held for. Shared by the admission fallback and the
+    /// preemption-eligibility check. (Computed outside any admission
+    /// lock: `head_of` takes it.)
+    fn quota_clear_waiters(&self, waiting: &[String], now: u64) -> Vec<String> {
+        waiting
+            .iter()
+            .filter(|u| {
+                self.tenancy
+                    .admission
+                    .head_of(u)
+                    .map(|head| self.quota_admissible(u, &head, true, now))
+                    .unwrap_or(false)
+            })
+            .cloned()
+            .collect()
     }
 
     /// Container bring-up + session start (or auto-resume) on a node.
@@ -320,8 +511,14 @@ impl NsmlPlatform {
 
         let has_ckpt = self.checkpoints.latest(id).is_some();
         if has_ckpt {
-            // Auto-recovery (§4.2): resume from the last backup.
-            self.sessions.update(id, |r| r.recoveries += 1);
+            if rec.preempted {
+                // Preemption resume: quota enforcement, not a failure —
+                // clear the flag and leave `recoveries` untouched.
+                self.sessions.update(id, |r| r.preempted = false);
+            } else {
+                // Auto-recovery (§4.2): resume from the last backup.
+                self.sessions.update(id, |r| r.recoveries += 1);
+            }
         }
         // Hand the run to the executor: the scheduler's node choice maps
         // onto a worker, which constructs the (fresh or resumed) run on
@@ -383,7 +580,12 @@ impl NsmlPlatform {
             }
         }
 
-        // 4. Try to place queued work.
+        // 4. Fair-share quota enforcement (may preempt an over-quota
+        //    user's youngest session for a waiting one), then place
+        //    queued work: admission lanes first, then the master's own
+        //    queue (orphan requeues, allocation races).
+        self.enforce_quotas()?;
+        self.pump_admission()?;
         for (job, node) in self.master.pump() {
             self.prepare_and_start(&job.id, node)?;
         }
@@ -399,7 +601,7 @@ impl NsmlPlatform {
                 utilization: self.cluster.utilization(),
                 free_gpus: free,
                 alive_nodes: self.cluster.alive_count(),
-                queue_depth: self.master.queue_len(),
+                queue_depth: self.queued_total(),
             },
         );
         for s in self.executor.stats() {
@@ -437,6 +639,9 @@ impl NsmlPlatform {
             (events, sub.dropped() - before)
         };
         for e in drained {
+            // The GPU-second accountant is a derived consumer too:
+            // running-interval open/close rides the same state events.
+            self.tenancy.accountant.observe(&e);
             match &e.kind {
                 EventKind::StateChanged { to, .. } if to == "done" => {
                     self.submit_completed(&e.subject, e.at_ms);
@@ -492,6 +697,19 @@ impl NsmlPlatform {
                 // first even when their done event was dropped.
                 let at_ms = rec.finished_at_ms.unwrap_or_else(|| self.clock.now_ms());
                 self.submit_completed(&rec.spec.id, at_ms);
+            }
+            // The accountant needs the same care: a lost exit event
+            // would leave a GPU-second interval accruing forever
+            // (reading the owner as permanently over budget). Any
+            // session whose record stopped running gets its interval
+            // settled — at the recorded finish time when known.
+            let now = self.clock.now_ms();
+            for rec in self.sessions.list() {
+                if rec.state != SessionState::Running {
+                    self.tenancy
+                        .accountant
+                        .close_if_open(&rec.spec.id, rec.finished_at_ms.unwrap_or(now));
+                }
             }
         }
     }
@@ -599,14 +817,118 @@ impl NsmlPlatform {
     }
 
     /// The shared tail of every completion/failure path: tear down the
-    /// session's container, free its cluster allocation, and hand the
-    /// capacity to queued jobs.
+    /// session's container, credit the user's fair-share charge, free
+    /// the cluster allocation, and hand the capacity to queued jobs —
+    /// admission lanes first, then the master's own queue.
     fn release_and_backfill(&self, id: &str) -> Result<()> {
         self.containers.stop_job(id);
+        self.tenancy.registry.release(id);
         for (job, node) in self.master.complete(id) {
             self.prepare_and_start(&job.id, node)?;
         }
+        self.pump_admission()
+    }
+
+    // ------------------------------------------------------------------
+    // Fair-share quota enforcement (tenancy preemption)
+    // ------------------------------------------------------------------
+
+    /// Is `user` currently beyond any of their limits?
+    fn over_quota(&self, user: &str, now: u64) -> bool {
+        let q = self.tenancy.registry.quota_of(user);
+        let (sessions, gpus) = self.tenancy.registry.occupancy(user);
+        (q.max_concurrent > 0 && sessions > q.max_concurrent)
+            || (q.max_gpus > 0 && gpus > q.max_gpus)
+            || (q.gpu_second_budget > 0.0
+                && self.tenancy.accountant.usage_at(user, now) >= q.gpu_second_budget)
+    }
+
+    /// Preemptive admission control: every drive round, an over-quota
+    /// user with running work yields their *youngest* session when
+    /// another user is waiting for admission. The victim is
+    /// checkpointed, paused, evicted and parked at the front of its
+    /// owner's admission lane ([`preempt`](Self::preempt)); it resumes
+    /// from the checkpoint once the contention clears.
+    fn enforce_quotas(&self) -> Result<()> {
+        if !self.config.tenancy {
+            return Ok(());
+        }
+        let waiting = self.tenancy.admission.users_waiting();
+        if waiting.is_empty() {
+            return Ok(());
+        }
+        let now = self.clock.now_ms();
+        let clear = self.quota_clear_waiters(&waiting, now);
+        for user in self.tenancy.registry.users() {
+            // Preempting only helps if some *other* waiting user could
+            // actually be admitted into the freed capacity — a waiter
+            // blocked by their own quota (e.g. their max_concurrent)
+            // must not trigger eviction thrash for idle GPUs.
+            if !clear.iter().any(|u| *u != user) {
+                continue;
+            }
+            if !self.over_quota(&user, now) {
+                continue;
+            }
+            let victim = self
+                .sessions
+                .list()
+                .into_iter()
+                .filter(|r| r.spec.user == user && r.state == SessionState::Running)
+                .max_by(|a, b| {
+                    a.submitted_at_ms.cmp(&b.submitted_at_ms).then(a.spec.id.cmp(&b.spec.id))
+                });
+            if let Some(rec) = victim {
+                self.preempt(&rec.spec.id)?;
+            }
+        }
         Ok(())
+    }
+
+    /// Checkpoint, pause and evict one running session, freeing its
+    /// GPUs for waiting users. The session re-enters admission at the
+    /// front of its owner's lane and auto-resumes from the checkpoint
+    /// when re-admitted (the executor's pause/checkpoint machinery does
+    /// the heavy lifting). Best-effort: a session that cannot be
+    /// paused (already terminal, mid-materialization) is skipped with a
+    /// warning, never a drive-loop failure.
+    fn preempt(&self, id: &str) -> Result<()> {
+        let Some(rec) = self.sessions.get(id) else { return Ok(()) };
+        if let Err(e) = self.control_session(id, SessionCommand::Pause) {
+            self.events.warn("tenancy", id, format!("preempt skipped: {:#}", e));
+            return Ok(());
+        }
+        self.executor.detach(id);
+        self.containers.stop_job(id);
+        self.tenancy.registry.release(id);
+        let prev = self.sessions.get(id).map(|r| (r.state, r.steps_done));
+        self.sessions.update(id, |r| {
+            if !r.state.is_terminal() {
+                r.state = SessionState::Queued;
+                r.node = None;
+                r.preempted = true;
+                r.preemptions += 1;
+            }
+        });
+        self.publish_transition(id, prev, "queued", Level::Warn);
+        self.events.bus().publish(
+            Level::Warn,
+            "tenancy",
+            id,
+            EventKind::AdmissionDecided { decision: "preempt".into(), user: rec.spec.user.clone() },
+        );
+        let job = JobSpec {
+            id: id.to_string(),
+            user: rec.spec.user.clone(),
+            dataset: rec.spec.dataset.clone(),
+            req: crate::cluster::ResourceReq::gpus(rec.spec.gpus),
+            priority: rec.spec.priority,
+        };
+        self.tenancy.admission.enqueue_front(PendingAdmission { job, resume: true });
+        for (job, node) in self.master.complete(id) {
+            self.prepare_and_start(&job.id, node)?;
+        }
+        self.pump_admission()
     }
 
     /// Node-failure fallout: requeue affected sessions; they auto-resume
@@ -686,6 +1008,8 @@ impl NsmlPlatform {
     pub fn stop(&self, id: &str) -> Result<()> {
         self.executor.detach(id);
         self.containers.stop_job(id);
+        self.tenancy.admission.remove(id);
+        self.tenancy.registry.release(id);
         self.master.cancel_queued(id);
         let placed = self.master.complete(id);
         let prev = self.sessions.get(id).map(|r| (r.state, r.steps_done));
@@ -699,7 +1023,7 @@ impl NsmlPlatform {
         for (job, node) in placed {
             self.prepare_and_start(&job.id, node)?;
         }
-        Ok(())
+        self.pump_admission()
     }
 
     // ------------------------------------------------------------------
@@ -727,14 +1051,38 @@ impl NsmlPlatform {
 
     pub fn save_state(&self) -> Result<()> {
         if let Some(dir) = &self.config.state_dir {
-            persist::save(dir, &self.sessions, &self.leaderboard, &self.checkpoints)?;
+            persist::save(
+                dir,
+                &self.sessions,
+                &self.leaderboard,
+                &self.checkpoints,
+                &self.tenancy.registry,
+            )?;
         }
         Ok(())
     }
 
     fn load_state(&self) -> Result<()> {
         if let Some(dir) = &self.config.state_dir {
-            persist::load(dir, &self.sessions, &self.leaderboard, &self.checkpoints)?;
+            persist::load(
+                dir,
+                &self.sessions,
+                &self.leaderboard,
+                &self.checkpoints,
+                &self.tenancy.registry,
+            )?;
+            // Tenancy views must survive the restart too: every
+            // restored session's owner is a known tenant, and
+            // non-terminal sessions re-register their accounting
+            // metadata so a later resume is billed to the right user.
+            // (Accrued GPU-seconds themselves are process-local —
+            // budgets gate live usage, not history across restarts.)
+            for rec in self.sessions.list() {
+                self.tenancy.registry.note_user(&rec.spec.user);
+                if !rec.state.is_terminal() {
+                    self.tenancy.accountant.register(&rec.spec.id, &rec.spec.user, rec.spec.gpus);
+                }
+            }
         }
         Ok(())
     }
@@ -777,7 +1125,9 @@ mod tests {
     #[test]
     fn contention_queues_then_schedules() {
         let Some(p) = platform() else { return };
-        // 3 nodes × 4 GPUs; five 4-GPU jobs → two must queue.
+        // 3 nodes × 4 GPUs; five 4-GPU jobs → two must wait. Capacity-
+        // blocked submissions wait in the fair-share admission queue,
+        // not the master's own queue.
         let mut ids = Vec::new();
         for i in 0..5 {
             let mut o = quick_opts(20);
@@ -785,14 +1135,16 @@ mod tests {
             o.seed = i;
             ids.push(p.run("kim", "mnist", o).unwrap());
         }
-        assert!(p.master.queue_len() >= 2);
+        assert!(p.queued_total() >= 2);
+        assert_eq!(p.tenancy.admission.depth_of("kim"), 2);
         p.run_to_completion(20, 200).unwrap();
         for id in &ids {
             assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
         }
         let s = p.master.stats();
+        assert_eq!(s.submitted, 5);
         assert_eq!(s.completed, 5);
-        assert!(s.placed_from_queue >= 2);
+        assert_eq!(p.queued_total(), 0);
     }
 
     #[test]
@@ -846,10 +1198,11 @@ mod tests {
         let _a = p.run("kim", "mnist", o.clone()).unwrap();
         let _b = p.run("kim", "mnist", o.clone()).unwrap();
         let _c = p.run("kim", "mnist", o.clone()).unwrap();
-        // Fourth job queues; stop it before it ever runs.
+        // Fourth job waits for admission; stop it before it ever runs.
         let d = p.run("kim", "mnist", o).unwrap();
-        assert!(p.master.queue_len() >= 1);
+        assert!(p.queued_total() >= 1);
         p.stop(&d).unwrap();
+        assert_eq!(p.tenancy.admission.depth_of("kim"), 0);
         p.run_to_completion(20, 200).unwrap();
         assert_eq!(p.sessions.get(&d).unwrap().state, SessionState::Stopped);
     }
@@ -858,5 +1211,18 @@ mod tests {
     fn unknown_dataset_rejected() {
         let Some(p) = platform() else { return };
         assert!(p.run("kim", "no-such-dataset", RunOpts::default()).is_err());
+    }
+
+    #[test]
+    fn impossible_gpu_request_fails_fast() {
+        // 4-GPU nodes: a 5-GPU job could never place and would wedge
+        // its user's admission lane — rejected at submission instead.
+        let Some(p) = platform() else { return };
+        let mut o = quick_opts(10);
+        o.gpus = 5;
+        let err = p.run("kim", "mnist", o).unwrap_err();
+        assert!(err.to_string().contains("largest node"), "{}", err);
+        assert!(p.sessions.is_empty(), "no orphan record left behind");
+        assert_eq!(p.queued_total(), 0);
     }
 }

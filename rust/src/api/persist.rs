@@ -1,9 +1,11 @@
-//! Platform state persistence: sessions + leaderboard as JSON under the
-//! state directory, so `nsml` CLI invocations compose (run, then `nsml
-//! dataset board`, then `nsml plot`, …) like the real multi-process NSML.
+//! Platform state persistence: sessions + leaderboard + tenant quotas
+//! as JSON under the state directory, so `nsml` CLI invocations compose
+//! (run, then `nsml dataset board`, then `nsml quota`, …) like the real
+//! multi-process NSML.
 
 use crate::leaderboard::{Leaderboard, Submission};
 use crate::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
+use crate::tenancy::{PriorityClass, TenantQuota, TenantRegistry};
 use crate::util::json::{parse, Json};
 use anyhow::{anyhow, Result};
 use std::path::Path;
@@ -51,6 +53,8 @@ fn record_to_json(r: &SessionRecord) -> Json {
         .set("best_metric", r.best_metric.map(Json::Num).unwrap_or(Json::Null))
         .set("submitted_at_ms", r.submitted_at_ms.into())
         .set("recoveries", (r.recoveries as u64).into())
+        .set("preemptions", (r.preemptions as u64).into())
+        .set("preempted", r.preempted.into())
         .set("metrics", Json::Arr(metrics));
     o
 }
@@ -74,6 +78,8 @@ fn record_from_json(j: &Json) -> Result<SessionRecord> {
     rec.steps_done = j.get("steps_done").and_then(Json::as_i64).unwrap_or(0) as u64;
     rec.best_metric = j.get("best_metric").and_then(Json::as_f64);
     rec.recoveries = j.get("recoveries").and_then(Json::as_i64).unwrap_or(0) as u32;
+    rec.preemptions = j.get("preemptions").and_then(Json::as_i64).unwrap_or(0) as u32;
+    rec.preempted = j.get("preempted").and_then(Json::as_bool).unwrap_or(false);
     if let Some(points) = j.get("metrics").and_then(Json::as_arr) {
         for p in points {
             rec.metrics.log(
@@ -86,12 +92,14 @@ fn record_from_json(j: &Json) -> Result<SessionRecord> {
     Ok(rec)
 }
 
-/// Save sessions + leaderboard + checkpoint index under `<dir>/state.json`.
+/// Save sessions + leaderboard + checkpoint index + tenant quota
+/// overrides under `<dir>/state.json`.
 pub fn save(
     dir: &Path,
     sessions: &SessionStore,
     leaderboard: &Leaderboard,
     checkpoints: &crate::storage::CheckpointStore,
+    tenants: &TenantRegistry,
 ) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut doc = Json::obj();
@@ -126,6 +134,21 @@ pub fn save(
         boards.set(&ds, Json::Arr(subs));
     }
     doc.set("leaderboard", boards);
+    let quotas: Vec<Json> = tenants
+        .overrides()
+        .iter()
+        .map(|(user, q)| {
+            let mut o = Json::obj();
+            o.set("user", user.as_str().into())
+                .set("max_concurrent", q.max_concurrent.into())
+                .set("max_gpus", q.max_gpus.into())
+                .set("gpu_second_budget", q.gpu_second_budget.into())
+                .set("weight", q.weight.into())
+                .set("class", q.class.as_str().into());
+            o
+        })
+        .collect();
+    doc.set("quotas", Json::Arr(quotas));
     std::fs::write(dir.join("state.json"), doc.to_pretty())?;
     Ok(())
 }
@@ -136,6 +159,7 @@ pub fn load(
     sessions: &SessionStore,
     leaderboard: &Leaderboard,
     checkpoints: &crate::storage::CheckpointStore,
+    tenants: &TenantRegistry,
 ) -> Result<()> {
     let path = dir.join("state.json");
     if !path.exists() {
@@ -175,6 +199,29 @@ pub fn load(
             }
         }
     }
+    if let Some(quotas) = doc.get("quotas").and_then(Json::as_arr) {
+        for q in quotas {
+            let Some(user) = q.get("user").and_then(Json::as_str) else { continue };
+            tenants.set_quota(
+                user,
+                TenantQuota {
+                    max_concurrent: q.get("max_concurrent").and_then(Json::as_i64).unwrap_or(0)
+                        as usize,
+                    max_gpus: q.get("max_gpus").and_then(Json::as_i64).unwrap_or(0) as usize,
+                    gpu_second_budget: q
+                        .get("gpu_second_budget")
+                        .and_then(Json::as_f64)
+                        .unwrap_or(0.0),
+                    weight: (q.get("weight").and_then(Json::as_i64).unwrap_or(1).max(1)) as u32,
+                    class: q
+                        .get("class")
+                        .and_then(Json::as_str)
+                        .and_then(PriorityClass::from_str)
+                        .unwrap_or(PriorityClass::Normal),
+                },
+            );
+        }
+    }
     Ok(())
 }
 
@@ -196,6 +243,8 @@ mod tests {
         rec.steps_done = 100;
         rec.best_metric = Some(0.93);
         rec.recoveries = 2;
+        rec.preemptions = 1;
+        rec.preempted = true;
         rec.metrics.log(10, "train_loss", 1.5);
         rec.metrics.log(20, "accuracy", 0.8);
         sessions.insert(rec);
@@ -219,13 +268,33 @@ mod tests {
         let mut hp = std::collections::BTreeMap::new();
         hp.insert("lr".to_string(), 0.05);
         ckpts.save("kim/mnist/1", 100, 0.2, &hp, b"params", 7).unwrap();
-        save(&dir, &sessions, &lb, &ckpts).unwrap();
+        let tenants = TenantRegistry::new(TenantQuota::default());
+        tenants.set_quota(
+            "kim",
+            TenantQuota {
+                max_concurrent: 2,
+                max_gpus: 4,
+                gpu_second_budget: 30.5,
+                weight: 3,
+                class: PriorityClass::High,
+            },
+        );
+        save(&dir, &sessions, &lb, &ckpts, &tenants).unwrap();
 
         let sessions2 = SessionStore::new();
         let lb2 = Leaderboard::new();
         lb2.ensure_board("mnist", "accuracy", false);
         let ckpts2 = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
-        load(&dir, &sessions2, &lb2, &ckpts2).unwrap();
+        let tenants2 = TenantRegistry::new(TenantQuota::default());
+        load(&dir, &sessions2, &lb2, &ckpts2, &tenants2).unwrap();
+        // Quota overrides survive the round trip.
+        let q = tenants2.quota_of("kim");
+        assert_eq!(q.max_concurrent, 2);
+        assert_eq!(q.max_gpus, 4);
+        assert_eq!(q.gpu_second_budget, 30.5);
+        assert_eq!(q.weight, 3);
+        assert_eq!(q.class, PriorityClass::High);
+        assert_eq!(tenants2.quota_of("lee"), TenantQuota::default());
         // Checkpoint index survives the round trip.
         let restored = ckpts2.latest("kim/mnist/1").unwrap();
         assert_eq!(restored.step, 100);
@@ -236,6 +305,8 @@ mod tests {
         assert_eq!(r.steps_done, 100);
         assert_eq!(r.best_metric, Some(0.93));
         assert_eq!(r.recoveries, 2);
+        assert_eq!(r.preemptions, 1);
+        assert!(r.preempted);
         assert_eq!(r.spec.lr, 0.05);
         assert!(r.spec.use_scan);
         assert_eq!(r.metrics.series("train_loss"), vec![(10.0, 1.5)]);
@@ -250,7 +321,9 @@ mod tests {
         let sessions = SessionStore::new();
         let lb = Leaderboard::new();
         let ckpts = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
-        load(&dir, &sessions, &lb, &ckpts).unwrap();
+        let tenants = TenantRegistry::new(TenantQuota::default());
+        load(&dir, &sessions, &lb, &ckpts, &tenants).unwrap();
         assert!(sessions.is_empty());
+        assert!(tenants.overrides().is_empty());
     }
 }

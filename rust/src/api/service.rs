@@ -23,11 +23,13 @@
 
 use super::wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ExecutorStats, NodeStatusView,
-    SessionView, WorkerStatView,
+    SessionView, TenantView, WorkerStatView,
 };
 use super::{NsmlPlatform, RunOpts};
 use crate::cluster::NodeId;
 use crate::runtime::TensorData;
+use crate::tenancy::PriorityClass;
+use std::collections::BTreeMap;
 use std::sync::mpsc;
 
 /// One queued request plus its reply slot (see [`service_channel`]).
@@ -159,18 +161,24 @@ impl PlatformService {
                 Some(rec) => ApiResponse::Session { session: SessionView::from_record(&rec) },
                 None => self.not_found(&session),
             },
-            ApiRequest::Board { dataset, limit } => {
+            ApiRequest::Board { dataset, limit, user } => {
                 if !self.platform.leaderboard.datasets().contains(&dataset) {
                     return ApiResponse::Error {
                         error: ApiError::not_found(format!("no leaderboard for dataset '{}'", dataset)),
                     };
                 }
+                // Rank over the full board first, then slice: a
+                // filtered row keeps its global rank. Unfiltered
+                // queries only materialize the requested page.
+                let depth = if user.is_none() { limit.max(1) } else { usize::MAX };
                 let rows = self
                     .platform
                     .leaderboard
-                    .top(&dataset, limit.max(1))
+                    .top(&dataset, depth)
                     .into_iter()
                     .enumerate()
+                    .filter(|(_, s)| user.as_deref().map_or(true, |u| s.user == u))
+                    .take(limit.max(1))
                     .map(|(i, s)| BoardRow {
                         rank: i + 1,
                         session: s.session,
@@ -185,6 +193,52 @@ impl PlatformService {
             }
             ApiRequest::ClusterStatus => ApiResponse::Cluster { cluster: self.cluster_view() },
             ApiRequest::ExecutorStatus => ApiResponse::Executor { executor: self.executor_view() },
+            ApiRequest::TenantReport => ApiResponse::Tenants { tenants: self.tenant_views() },
+            ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
+                if user.is_empty() {
+                    return ApiResponse::Error {
+                        error: ApiError::invalid("set_quota: 'user' must be non-empty"),
+                    };
+                }
+                let class = match class.as_deref() {
+                    None => None,
+                    Some(name) => match PriorityClass::from_str(name) {
+                        Some(c) => Some(c),
+                        None => {
+                            return ApiResponse::Error {
+                                error: ApiError::invalid(format!(
+                                    "set_quota: unknown class '{}' (expected low | normal | high)",
+                                    name
+                                )),
+                            }
+                        }
+                    },
+                };
+                self.platform.tenancy.registry.update_quota(&user, |q| {
+                    if let Some(v) = max_concurrent {
+                        q.max_concurrent = v as usize;
+                    }
+                    if let Some(v) = max_gpus {
+                        q.max_gpus = v as usize;
+                    }
+                    if let Some(v) = gpu_second_budget {
+                        q.gpu_second_budget = v.max(0.0);
+                    }
+                    if let Some(v) = weight {
+                        q.weight = (v as u32).max(1);
+                    }
+                    if let Some(c) = class {
+                        q.class = c;
+                    }
+                });
+                // A raised quota may unblock deferred work right away.
+                if let Err(e) = self.platform.pump_admission() {
+                    return ApiResponse::Error {
+                        error: ApiError::internal(format!("set_quota: admission pump: {:#}", e)),
+                    };
+                }
+                ApiResponse::Ack { verb: "set_quota".into(), session: None }
+            }
             ApiRequest::EventsSince { since, kind, subject, limit } => {
                 if let Some(k) = &kind {
                     if !crate::events::ALL_EVENT_KINDS.contains(&k.as_str()) {
@@ -326,7 +380,7 @@ impl PlatformService {
             total_gpus: total,
             free_gpus: free,
             utilization: self.platform.cluster.utilization(),
-            queue_len: self.platform.master.queue_len(),
+            queue_len: self.platform.queued_total(),
             policy: self.platform.master.policy_name().to_string(),
             fast_path: self.platform.master.fast_path,
             leader: self.platform.election.leader().map(|(l, _)| l.to_string()),
@@ -356,6 +410,38 @@ impl PlatformService {
         }
     }
 
+    /// One fair-share row per known user (the `tenant_report` verb).
+    fn tenant_views(&self) -> Vec<TenantView> {
+        let p = &self.platform;
+        let now = p.clock.now_ms();
+        let mut preempts: BTreeMap<String, u64> = BTreeMap::new();
+        for rec in p.sessions.list() {
+            *preempts.entry(rec.spec.user.clone()).or_insert(0) += rec.preemptions as u64;
+        }
+        p.tenancy
+            .registry
+            .users()
+            .into_iter()
+            .map(|user| {
+                let q = p.tenancy.registry.quota_of(&user);
+                let (sessions, gpus) = p.tenancy.registry.occupancy(&user);
+                TenantView {
+                    weight: q.weight,
+                    class: q.class.as_str().to_string(),
+                    max_concurrent: q.max_concurrent,
+                    max_gpus: q.max_gpus,
+                    gpu_second_budget: q.gpu_second_budget,
+                    gpu_seconds_used: p.tenancy.accountant.usage_at(&user, now),
+                    active_sessions: sessions,
+                    gpus_in_use: gpus,
+                    waiting: p.tenancy.admission.depth_of(&user),
+                    preemptions: preempts.get(&user).copied().unwrap_or(0),
+                    user,
+                }
+            })
+            .collect()
+    }
+
     /// Audit mutations into the event log (queries stay silent; `drive`
     /// is logged at debug so pump loops don't flood the log).
     fn audit(&self, req: &ApiRequest) {
@@ -376,6 +462,7 @@ impl PlatformService {
             ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
                 (String::new(), format!("user={} dataset={} trials={}", user, dataset, trials.len()))
             }
+            ApiRequest::SetQuota { user, .. } => (String::new(), format!("user={}", user)),
             _ => (String::new(), String::new()),
         };
         let line = if detail.is_empty() {
@@ -440,7 +527,7 @@ mod tests {
             ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::NotFound),
             other => panic!("{:?}", other),
         }
-        match s.dispatch(ApiRequest::Board { dataset: "no-such".into(), limit: 5 }) {
+        match s.dispatch(ApiRequest::Board { dataset: "no-such".into(), limit: 5, user: None }) {
             ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::NotFound),
             other => panic!("{:?}", other),
         }

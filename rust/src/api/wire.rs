@@ -46,6 +46,8 @@ pub const ALL_VERBS: &[&str] = &[
     "executor_status",
     "events_since",
     "submit_trial_batch",
+    "tenant_report",
+    "set_quota",
 ];
 
 /// Every response kind, in the order of the [`ApiResponse`] variants.
@@ -61,6 +63,7 @@ pub const ALL_KINDS: &[&str] = &[
     "cluster",
     "executor",
     "events",
+    "tenants",
     "error",
 ];
 
@@ -313,8 +316,10 @@ pub enum ApiRequest {
     ListSessions,
     /// One session record.
     GetSession { session: String },
-    /// Top entries of a dataset's leaderboard.
-    Board { dataset: String, limit: usize },
+    /// Top entries of a dataset's leaderboard, optionally sliced to
+    /// one user's rows (ranks stay global, so a filtered row keeps the
+    /// rank it holds on the full board).
+    Board { dataset: String, limit: usize, user: Option<String> },
     /// Cluster + scheduler snapshot.
     ClusterStatus,
     /// Executor-pool snapshot: per-worker load + steal telemetry.
@@ -328,6 +333,21 @@ pub enum ApiRequest {
     EventsSince { since: u64, kind: Option<String>, subject: Option<String>, limit: usize },
     /// Place N hyperparameter trials in one dispatch (automl batching).
     SubmitTrialBatch { user: String, dataset: String, trials: Vec<TrialSpec> },
+    /// Per-user fair-share report: quotas, GPU-second usage, occupancy
+    /// and admission-queue depth for every known tenant.
+    TenantReport,
+    /// Edit a user's fair-share quota. Partial update: absent fields
+    /// keep their current values; limits use 0 for "unlimited".
+    /// Audited mutation.
+    SetQuota {
+        user: String,
+        max_concurrent: Option<u64>,
+        max_gpus: Option<u64>,
+        gpu_second_budget: Option<f64>,
+        weight: Option<u64>,
+        /// Priority class name (`low` | `normal` | `high`).
+        class: Option<String>,
+    },
 }
 
 impl ApiRequest {
@@ -348,6 +368,8 @@ impl ApiRequest {
             ApiRequest::ExecutorStatus => "executor_status",
             ApiRequest::EventsSince { .. } => "events_since",
             ApiRequest::SubmitTrialBatch { .. } => "submit_trial_batch",
+            ApiRequest::TenantReport => "tenant_report",
+            ApiRequest::SetQuota { .. } => "set_quota",
         }
     }
 
@@ -361,6 +383,7 @@ impl ApiRequest {
                 | ApiRequest::ClusterStatus
                 | ApiRequest::ExecutorStatus
                 | ApiRequest::EventsSince { .. }
+                | ApiRequest::TenantReport
                 | ApiRequest::Infer { .. }
         )
     }
@@ -392,15 +415,31 @@ impl ApiRequest {
             ApiRequest::KillNode { node } => {
                 args.set("node", (*node).into());
             }
-            ApiRequest::ListSessions | ApiRequest::ClusterStatus | ApiRequest::ExecutorStatus => {}
+            ApiRequest::ListSessions
+            | ApiRequest::ClusterStatus
+            | ApiRequest::ExecutorStatus
+            | ApiRequest::TenantReport => {}
+            ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
+                args.set("user", user.as_str().into())
+                    .set(
+                        "max_concurrent",
+                        max_concurrent.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+                    )
+                    .set("max_gpus", max_gpus.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null))
+                    .set("gpu_second_budget", gpu_second_budget.map(Json::Num).unwrap_or(Json::Null))
+                    .set("weight", weight.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null))
+                    .set("class", class.as_deref().map(Json::from).unwrap_or(Json::Null));
+            }
             ApiRequest::EventsSince { since, kind, subject, limit } => {
                 args.set("since", (*since).into())
                     .set("kind", kind.as_deref().map(Json::from).unwrap_or(Json::Null))
                     .set("subject", subject.as_deref().map(Json::from).unwrap_or(Json::Null))
                     .set("limit", (*limit).into());
             }
-            ApiRequest::Board { dataset, limit } => {
-                args.set("dataset", dataset.as_str().into()).set("limit", (*limit).into());
+            ApiRequest::Board { dataset, limit, user } => {
+                args.set("dataset", dataset.as_str().into())
+                    .set("limit", (*limit).into())
+                    .set("user", user.as_deref().map(Json::from).unwrap_or(Json::Null));
             }
             ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
                 args.set("user", user.as_str().into())
@@ -455,6 +494,7 @@ impl ApiRequest {
             "board" => Ok(ApiRequest::Board {
                 dataset: need_str(args, "dataset")?,
                 limit: opt_u64(args, "limit")?.unwrap_or(100) as usize,
+                user: opt_str(args, "user")?,
             }),
             "cluster_status" => Ok(ApiRequest::ClusterStatus),
             "executor_status" => Ok(ApiRequest::ExecutorStatus),
@@ -473,6 +513,15 @@ impl ApiRequest {
                     limit: limit as usize,
                 })
             }
+            "tenant_report" => Ok(ApiRequest::TenantReport),
+            "set_quota" => Ok(ApiRequest::SetQuota {
+                user: need_str(args, "user")?,
+                max_concurrent: opt_u64(args, "max_concurrent")?,
+                max_gpus: opt_u64(args, "max_gpus")?,
+                gpu_second_budget: opt_f64(args, "gpu_second_budget")?,
+                weight: opt_u64(args, "weight")?,
+                class: opt_str(args, "class")?,
+            }),
             "submit_trial_batch" => {
                 let trials = need_arr(args, "trials")?
                     .iter()
@@ -512,6 +561,8 @@ pub struct SessionView {
     pub lr: f64,
     pub best_metric: Option<f64>,
     pub recoveries: u32,
+    /// Fair-share evictions this session has survived.
+    pub preemptions: u32,
 }
 
 impl SessionView {
@@ -528,6 +579,7 @@ impl SessionView {
             lr: rec.spec.lr,
             best_metric: rec.best_metric,
             recoveries: rec.recoveries,
+            preemptions: rec.preemptions,
         }
     }
 
@@ -543,7 +595,8 @@ impl SessionView {
             .set("total_steps", self.total_steps.into())
             .set("lr", self.lr.into())
             .set("best_metric", self.best_metric.map(Json::Num).unwrap_or(Json::Null))
-            .set("recoveries", self.recoveries.into());
+            .set("recoveries", self.recoveries.into())
+            .set("preemptions", self.preemptions.into());
         o
     }
 
@@ -562,6 +615,7 @@ impl SessionView {
             lr: need_f64(j, "lr")?,
             best_metric: opt_f64(j, "best_metric")?,
             recoveries: opt_u64(j, "recoveries")?.unwrap_or(0) as u32,
+            preemptions: opt_u64(j, "preemptions")?.unwrap_or(0) as u32,
         })
     }
 }
@@ -762,6 +816,64 @@ impl ExecutorStats {
     }
 }
 
+/// One user's fair-share row (`tenant_report`, `GET /api/v1/tenants`,
+/// `nsml tenants`). Limits use 0 (or 0.0) for "unlimited".
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantView {
+    pub user: String,
+    /// Stride weight (admissions per round relative to peers).
+    pub weight: u32,
+    /// Priority class name (`low` | `normal` | `high`).
+    pub class: String,
+    pub max_concurrent: usize,
+    pub max_gpus: usize,
+    pub gpu_second_budget: f64,
+    /// Accounted GPU-seconds (virtual time), open intervals included.
+    pub gpu_seconds_used: f64,
+    /// Sessions currently charged against the user (queued-on-master,
+    /// preparing, running or paused-with-allocation).
+    pub active_sessions: usize,
+    pub gpus_in_use: usize,
+    /// Submissions waiting in the user's admission lane.
+    pub waiting: usize,
+    /// Total fair-share evictions across the user's sessions.
+    pub preemptions: u64,
+}
+
+impl TenantView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("user", self.user.as_str().into())
+            .set("weight", self.weight.into())
+            .set("class", self.class.as_str().into())
+            .set("max_concurrent", self.max_concurrent.into())
+            .set("max_gpus", self.max_gpus.into())
+            .set("gpu_second_budget", self.gpu_second_budget.into())
+            .set("gpu_seconds_used", self.gpu_seconds_used.into())
+            .set("active_sessions", self.active_sessions.into())
+            .set("gpus_in_use", self.gpus_in_use.into())
+            .set("waiting", self.waiting.into())
+            .set("preemptions", self.preemptions.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<TenantView, ApiError> {
+        Ok(TenantView {
+            user: need_str(j, "user")?,
+            weight: need_u64(j, "weight")? as u32,
+            class: need_str(j, "class")?,
+            max_concurrent: need_u64(j, "max_concurrent")? as usize,
+            max_gpus: need_u64(j, "max_gpus")? as usize,
+            gpu_second_budget: need_f64(j, "gpu_second_budget")?,
+            gpu_seconds_used: need_f64(j, "gpu_seconds_used")?,
+            active_sessions: need_u64(j, "active_sessions")? as usize,
+            gpus_in_use: need_u64(j, "gpus_in_use")? as usize,
+            waiting: need_u64(j, "waiting")? as usize,
+            preemptions: need_u64(j, "preemptions")?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------
 // Responses
 // ---------------------------------------------------------------------
@@ -789,6 +901,8 @@ pub enum ApiResponse {
     /// the cursor to resume from, and how many events the reader lost
     /// to ring overflow (0 when it kept up).
     Events { events: Vec<Event>, next: u64, dropped: u64 },
+    /// Per-user fair-share report (`tenant_report`).
+    Tenants { tenants: Vec<TenantView> },
     Error { error: ApiError },
 }
 
@@ -806,6 +920,7 @@ impl ApiResponse {
             ApiResponse::Cluster { .. } => "cluster",
             ApiResponse::Executor { .. } => "executor",
             ApiResponse::Events { .. } => "events",
+            ApiResponse::Tenants { .. } => "tenants",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -862,6 +977,9 @@ impl ApiResponse {
                 data.set("events", Json::Arr(events.iter().map(|e| e.to_json()).collect()))
                     .set("next", (*next).into())
                     .set("dropped", (*dropped).into());
+            }
+            ApiResponse::Tenants { tenants } => {
+                data.set("tenants", Json::Arr(tenants.iter().map(|t| t.to_json()).collect()));
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -923,6 +1041,12 @@ impl ApiResponse {
                     .collect::<Result<Vec<Event>, ApiError>>()?,
                 next: need_u64(data, "next")?,
                 dropped: need_u64(data, "dropped")?,
+            }),
+            "tenants" => Ok(ApiResponse::Tenants {
+                tenants: need_arr(data, "tenants")?
+                    .iter()
+                    .map(TenantView::from_json)
+                    .collect::<Result<Vec<TenantView>, ApiError>>()?,
             }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
@@ -1129,9 +1253,61 @@ mod tests {
         assert!(ApiRequest::Drive { chunk: 1 }.is_mutation());
         assert!(!ApiRequest::ListSessions.is_mutation());
         assert!(!ApiRequest::Infer { session: "s".into(), x: vec![], shape: vec![] }.is_mutation());
-        assert!(!ApiRequest::Board { dataset: "mnist".into(), limit: 5 }.is_mutation());
+        assert!(!ApiRequest::Board { dataset: "mnist".into(), limit: 5, user: None }.is_mutation());
         assert!(!ApiRequest::EventsSince { since: 0, kind: None, subject: None, limit: 10 }
             .is_mutation());
+        assert!(!ApiRequest::TenantReport.is_mutation());
+        assert!(ApiRequest::SetQuota {
+            user: "kim".into(),
+            max_concurrent: None,
+            max_gpus: None,
+            gpu_second_budget: None,
+            weight: None,
+            class: None,
+        }
+        .is_mutation());
+    }
+
+    #[test]
+    fn set_quota_partial_fields_parse() {
+        // Only the named fields travel; everything else stays None so
+        // the service applies a partial update.
+        let args = parse(r#"{"user":"kim","max_gpus":4,"class":"high"}"#).unwrap();
+        match ApiRequest::from_verb_args("set_quota", &args).unwrap() {
+            ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
+                assert_eq!(user, "kim");
+                assert_eq!(max_concurrent, None);
+                assert_eq!(max_gpus, Some(4));
+                assert_eq!(gpu_second_budget, None);
+                assert_eq!(weight, None);
+                assert_eq!(class.as_deref(), Some("high"));
+            }
+            other => panic!("{:?}", other),
+        }
+        // user is mandatory; mistyped optionals are named errors.
+        assert!(ApiRequest::from_verb_args("set_quota", &Json::obj()).is_err());
+        let bad = parse(r#"{"user":"kim","weight":"heavy"}"#).unwrap();
+        let err = ApiRequest::from_verb_args("set_quota", &bad).unwrap_err();
+        assert!(err.message.contains("weight"), "{}", err);
+    }
+
+    #[test]
+    fn board_user_filter_parses() {
+        let args = parse(r#"{"dataset":"mnist","user":"kim"}"#).unwrap();
+        match ApiRequest::from_verb_args("board", &args).unwrap() {
+            ApiRequest::Board { dataset, limit, user } => {
+                assert_eq!(dataset, "mnist");
+                assert_eq!(limit, 100);
+                assert_eq!(user.as_deref(), Some("kim"));
+            }
+            other => panic!("{:?}", other),
+        }
+        // Absent and explicit-null both mean "no filter".
+        let args = parse(r#"{"dataset":"mnist","user":null}"#).unwrap();
+        assert!(matches!(
+            ApiRequest::from_verb_args("board", &args).unwrap(),
+            ApiRequest::Board { user: None, .. }
+        ));
     }
 
     #[test]

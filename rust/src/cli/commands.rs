@@ -178,12 +178,14 @@ pub fn cmd_dataset(args: &[String]) -> CmdResult {
         "board" => {
             let p = with_globals(
                 ArgSpec::new("nsml dataset board", "show a dataset leaderboard")
-                    .pos("dataset", "dataset name", true),
+                    .pos("dataset", "dataset name", true)
+                    .opt("user", Some('u'), "only this user's rows (global ranks kept)", None),
             )
             .parse(&rest)?;
             let service = service_from(&p)?;
             let dataset = p.pos(0).unwrap().to_string();
-            let req = ApiRequest::Board { dataset, limit: 100 };
+            let req =
+                ApiRequest::Board { dataset, limit: 100, user: p.get("user").map(str::to_string) };
             match ok(service.dispatch(req))? {
                 ApiResponse::Board { dataset, rows } => {
                     let mut t = Table::new(&["RANK", "SESSION", "USER", "MODEL", "METRIC", "VALUE", "STEP"])
@@ -507,6 +509,112 @@ pub fn cmd_cluster(args: &[String]) -> CmdResult {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// nsml tenants / quota — multi-tenant fair share
+// ---------------------------------------------------------------------
+
+pub fn cmd_tenants(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new("nsml tenants", "per-user fair-share status")).parse(args)?;
+    let service = service_from(&p)?;
+    let views = match ok(service.dispatch(ApiRequest::TenantReport))? {
+        ApiResponse::Tenants { tenants } => tenants,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
+    if views.is_empty() {
+        println!("no tenants yet (run `nsml run -d mnist` first)");
+        return Ok(());
+    }
+    let mut t = Table::new(&[
+        "USER", "CLASS", "WEIGHT", "ACTIVE", "GPUS", "WAITING", "GPU-SEC", "BUDGET", "PREEMPTS",
+    ])
+    .right(&[2, 3, 4, 5, 6, 7, 8]);
+    for v in &views {
+        t.row(&[
+            v.user.clone(),
+            v.class.clone(),
+            format!("{}", v.weight),
+            format!("{}", v.active_sessions),
+            format!("{}", v.gpus_in_use),
+            format!("{}", v.waiting),
+            fnum(v.gpu_seconds_used),
+            if v.gpu_second_budget > 0.0 { fnum(v.gpu_second_budget) } else { "-".into() },
+            format!("{}", v.preemptions),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
+pub fn cmd_quota(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml quota", "show or set a user's fair-share quota")
+            .pos("user", "tenant user name", true)
+            .opt("max-concurrent", None, "max concurrent sessions (0 = unlimited)", None)
+            .opt("max-gpus", None, "max GPUs held at once (0 = unlimited)", None)
+            .opt("budget", None, "GPU-second budget (0 = unlimited)", None)
+            .opt("weight", None, "fair-share weight (>= 1)", None)
+            .opt("class", None, "priority class: low|normal|high", None),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let user = p.pos(0).unwrap().to_string();
+    let parse_u = |key: &str| -> Result<Option<u64>, String> {
+        p.get(key).map(|s| s.parse::<u64>().map_err(|e| format!("--{}: {}", key, e))).transpose()
+    };
+    let max_concurrent = parse_u("max-concurrent")?;
+    let max_gpus = parse_u("max-gpus")?;
+    let weight = parse_u("weight")?;
+    let budget = p
+        .get("budget")
+        .map(|s| s.parse::<f64>().map_err(|e| format!("--budget: {}", e)))
+        .transpose()?;
+    let class = p.get("class").map(str::to_string);
+    let editing = max_concurrent.is_some()
+        || max_gpus.is_some()
+        || budget.is_some()
+        || weight.is_some()
+        || class.is_some();
+    if editing {
+        match ok(service.dispatch(ApiRequest::SetQuota {
+            user: user.clone(),
+            max_concurrent,
+            max_gpus,
+            gpu_second_budget: budget,
+            weight,
+            class,
+        }))? {
+            ApiResponse::Ack { .. } => {
+                service.platform().save_state().map_err(|e| format!("{:#}", e))?;
+            }
+            other => return Err(format!("unexpected reply: {:?}", other)),
+        }
+    }
+    let views = match ok(service.dispatch(ApiRequest::TenantReport))? {
+        ApiResponse::Tenants { tenants } => tenants,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
+    match views.iter().find(|v| v.user == user) {
+        Some(v) => {
+            let lim = |x: usize| if x == 0 { "unlimited".to_string() } else { format!("{}", x) };
+            println!(
+                "user {}: class {} weight {} | max_concurrent {} | max_gpus {} | budget {} | used {} gpu-sec | active {} | waiting {} | preempts {}",
+                v.user,
+                v.class,
+                v.weight,
+                lim(v.max_concurrent),
+                lim(v.max_gpus),
+                if v.gpu_second_budget > 0.0 { fnum(v.gpu_second_budget) } else { "unlimited".into() },
+                fnum(v.gpu_seconds_used),
+                v.active_sessions,
+                v.waiting,
+                v.preemptions,
+            );
+        }
+        None => println!("user {} has the default quota (nothing recorded yet)", user),
+    }
+    Ok(())
+}
+
 pub fn cmd_models(args: &[String]) -> CmdResult {
     let p = with_globals(ArgSpec::new("nsml models", "list AOT-compiled models")).parse(args)?;
     let platform = platform_from(&p)?;
@@ -678,6 +786,39 @@ mod tests {
         // Follow mode on a terminal session is a no-op that still exits 0.
         assert_eq!(crate::cli::main(&s(&["logs", &id, "-f", "--state", &state])), 0);
         assert_eq!(crate::cli::main(&s(&["logs", "missing", "--state", &state])), 1);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn quota_and_tenants_compose_via_state() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("quota");
+        // Empty platform: tenants prints the no-tenants hint, quota
+        // reports the default for an unknown user.
+        assert_eq!(crate::cli::main(&s(&["tenants", "--state", &state])), 0);
+        assert_eq!(crate::cli::main(&s(&["quota", "ghost", "--state", &state])), 0);
+        // Set a quota; it persists into the state dir and the next
+        // invocation (a fresh platform) still sees it.
+        assert_eq!(
+            crate::cli::main(&s(&[
+                "quota", "kim", "--max-gpus", "4", "--weight", "2", "--class", "high", "--state",
+                &state
+            ])),
+            0
+        );
+        assert_eq!(crate::cli::main(&s(&["quota", "kim", "--state", &state])), 0);
+        let text = std::fs::read_to_string(PathBuf::from(&state).join("state.json")).unwrap();
+        assert!(text.contains("\"max_gpus\": 4") || text.contains("\"max_gpus\":4"), "{}", text);
+        // Bad inputs fail cleanly.
+        assert_eq!(crate::cli::main(&s(&["quota", "kim", "--weight", "heavy", "--state", &state])), 1);
+        assert_eq!(
+            crate::cli::main(&s(&["quota", "kim", "--class", "frobnicate", "--state", &state])),
+            1
+        );
+        assert_eq!(crate::cli::main(&s(&["tenants", "--state", &state])), 0);
         let _ = std::fs::remove_dir_all(&state);
     }
 

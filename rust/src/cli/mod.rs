@@ -11,6 +11,8 @@
 //! * `nsml ps` / `nsml logs [-f]` / `nsml plot SESSION`
 //! * `nsml infer SESSION`           — interactive digit demo (Fig. 4)
 //! * `nsml automl -d DATASET`       — hyperparameter search
+//! * `nsml tenants` / `nsml quota USER [--max-gpus N …]` — fair-share
+//!   status and per-user quota edits (weights, classes, budgets)
 //! * `nsml cluster` / `nsml models` / `nsml web`
 //!
 //! Session-control subcommands build [`crate::api::ApiRequest`]s and go
@@ -41,6 +43,8 @@ COMMANDS:
   infer      interactive MNIST demo:      nsml infer SESSION --digit 1 --add-lines
   automl     hyperparameter search:       nsml automl -d mnist --strategy asha
   cluster    cluster & scheduler status
+  tenants    per-user fair-share status (quotas, GPU-seconds, queue)
+  quota      show or set a user's quota:  nsml quota kim --max-gpus 4 --weight 2
   models     list AOT-compiled models
   web        serve the web UI:            nsml web --port 8080
 
@@ -64,6 +68,8 @@ pub fn main(args: &[String]) -> i32 {
         "infer" => commands::cmd_infer(&rest),
         "automl" => commands::cmd_automl(&rest),
         "cluster" => commands::cmd_cluster(&rest),
+        "tenants" => commands::cmd_tenants(&rest),
+        "quota" => commands::cmd_quota(&rest),
         "models" => commands::cmd_models(&rest),
         "web" => commands::cmd_web(&rest),
         "" | "help" | "--help" | "-h" => {

@@ -13,12 +13,14 @@
 //! Producers: the scheduler publishes [`EventKind::PlacementDecided`],
 //! the executor [`EventKind::WorkerStolen`], sessions
 //! [`EventKind::StateChanged`] / [`EventKind::MetricReported`] /
-//! [`EventKind::CheckpointSaved`], and the platform drive loop
-//! [`EventKind::UtilizationSampled`] / [`EventKind::WorkerSampled`].
-//! Consumers: the leaderboard and `UtilizationMonitor` are *derived*
-//! from bus subscriptions (see `api::NsmlPlatform`), `nsml logs -f`
-//! follows a polling subscription, and `GET /api/v1/events` pages a
-//! cursor over the wire (`events_since` verb).
+//! [`EventKind::CheckpointSaved`], the platform drive loop
+//! [`EventKind::UtilizationSampled`] / [`EventKind::WorkerSampled`],
+//! and the tenancy layer [`EventKind::AdmissionDecided`].
+//! Consumers: the leaderboard, `UtilizationMonitor` and the per-user
+//! GPU-second accountant are *derived* from bus subscriptions (see
+//! `api::NsmlPlatform`), `nsml logs -f` follows a polling
+//! subscription, and `GET /api/v1/events` pages a cursor over the
+//! wire (`events_since` verb).
 //!
 //! [`EventLog`] survives as a thin compatibility shim over the bus
 //! (string emit + snapshot reads) so call sites migrate incrementally.
@@ -67,7 +69,7 @@ impl Level {
 /// Every kind name, in the order of the [`EventKind`] variants (wire
 /// filter validation and docs).
 pub const ALL_EVENT_KINDS: &[&str] =
-    &["log", "metric", "state", "checkpoint", "placement", "steal", "util", "worker"];
+    &["log", "metric", "state", "checkpoint", "placement", "steal", "util", "worker", "admission"];
 
 /// The typed payload of an [`Event`]. Plain data only — the events
 /// module sits below every other subsystem, so states, nodes and
@@ -103,6 +105,12 @@ pub enum EventKind {
         queue_depth: usize,
         steals: u64,
     },
+    /// A fair-share admission decision for a pending submission
+    /// (subject = session id). `decision` is one of `admit`,
+    /// `readmit` (a preempted session re-entering), `defer` (held
+    /// back by quota or capacity; published once per submission), or
+    /// `preempt` (a running session evicted for a waiting user).
+    AdmissionDecided { decision: String, user: String },
 }
 
 impl EventKind {
@@ -117,6 +125,7 @@ impl EventKind {
             EventKind::WorkerStolen { .. } => "steal",
             EventKind::UtilizationSampled { .. } => "util",
             EventKind::WorkerSampled { .. } => "worker",
+            EventKind::AdmissionDecided { .. } => "admission",
         }
     }
 
@@ -154,6 +163,9 @@ impl EventKind {
                     "worker {}: busy {:.1}ms, {} live, {} queued, {} steals",
                     worker, busy_ms, live_sessions, queue_depth, steals
                 )
+            }
+            EventKind::AdmissionDecided { decision, user } => {
+                format!("admission {} (user {})", decision, user)
             }
         }
     }
@@ -196,6 +208,9 @@ impl EventKind {
                     .set("live_sessions", (*live_sessions).into())
                     .set("queue_depth", (*queue_depth).into())
                     .set("steals", (*steals).into());
+            }
+            EventKind::AdmissionDecided { decision, user } => {
+                o.set("decision", decision.as_str().into()).set("user", user.as_str().into());
             }
         }
         o
@@ -268,6 +283,10 @@ impl EventKind {
                 live_sessions: u64_of("live_sessions")? as usize,
                 queue_depth: u64_of("queue_depth")? as usize,
                 steals: u64_of("steals")?,
+            }),
+            "admission" => Ok(EventKind::AdmissionDecided {
+                decision: str_of("decision")?,
+                user: str_of("user")?,
             }),
             other => Err(format!(
                 "unknown event kind '{}' (expected one of: {})",
@@ -389,6 +408,7 @@ mod tests {
                 queue_depth: 1,
                 steals: 4,
             },
+            EventKind::AdmissionDecided { decision: "preempt".into(), user: "kim".into() },
         ]
     }
 

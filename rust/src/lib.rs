@@ -32,6 +32,10 @@
 //! * [`executor`] — the work-stealing session-execution worker pool;
 //!   each `std::thread` worker owns its live runs and a thread-local
 //!   PJRT engine.
+//! * [`tenancy`] — multi-tenant fair share: per-user quotas
+//!   ([`tenancy::TenantRegistry`]), a weighted stride admission queue
+//!   in front of the scheduler, event-bus-derived GPU-second
+//!   accounting, and preemption of over-quota users when others wait.
 //! * [`scheduler`] / [`cluster`] / [`container`] — placement policies
 //!   with leader election over a simulated GPU cluster (heartbeats,
 //!   failure injection, utilization monitoring) and the containerized
@@ -72,6 +76,7 @@ pub mod runtime;
 pub mod data;
 pub mod session;
 pub mod executor;
+pub mod tenancy;
 pub mod leaderboard;
 pub mod automl;
 pub mod api;

@@ -21,7 +21,7 @@ pub mod placement;
 pub mod queue;
 
 pub use election::{ElectionGroup, ReplicaId};
-pub use master::{Master, SchedStats, SubmitOutcome};
+pub use master::{Master, SchedStats, SubmitOutcome, DEFAULT_SKIP_WINDOW};
 pub use placement::{policy_by_name, BestFit, FirstFit, PlacementPolicy, RandomFit, WorstFit};
 pub use queue::JobQueue;
 

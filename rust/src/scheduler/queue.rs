@@ -162,6 +162,67 @@ mod tests {
     }
 
     #[test]
+    fn skip_window_boundary_is_exact() {
+        // window = 2: indexes 0..=2 are candidates; index 3 is beyond
+        // the starvation bound and must never be reached.
+        let mut q = JobQueue::with_skip_window(2);
+        for id in ["a", "b", "c", "d"] {
+            q.push(job(id, Priority::Normal));
+        }
+        assert!(q.pop_placeable(|j| j.id == "d").is_none(), "index 3 > window");
+        assert_eq!(q.len(), 4, "a blocked pass removes nothing");
+        // Index 2 == window: still reachable.
+        assert_eq!(q.pop_placeable(|j| j.id == "c").unwrap().id, "c");
+        assert_eq!(q.len(), 3);
+        // The window also clamps to the lane length (no out-of-bounds
+        // probing on short lanes).
+        let mut q = JobQueue::with_skip_window(100);
+        q.push(job("only", Priority::Normal));
+        assert!(q.pop_placeable(|_| false).is_none());
+        assert_eq!(q.pop_placeable(|_| true).unwrap().id, "only");
+    }
+
+    #[test]
+    fn requeue_front_preserves_lane_order_under_skip() {
+        // A requeued victim keeps its turn: FIFO from the front when
+        // everything fits...
+        let mut q = JobQueue::with_skip_window(4);
+        q.push(job("a", Priority::Normal));
+        q.push(job("b", Priority::Normal));
+        q.push_front(job("victim", Priority::Normal));
+        let order: Vec<String> =
+            std::iter::from_fn(|| q.pop_placeable(|_| true)).map(|j| j.id).collect();
+        assert_eq!(order, vec!["victim", "a", "b"]);
+        // ...and when the victim is blocked, the window admits later
+        // jobs while the victim keeps the head slot for its next shot.
+        let mut q = JobQueue::with_skip_window(4);
+        q.push(job("a", Priority::Normal));
+        q.push_front(job("victim", Priority::Normal));
+        assert_eq!(q.pop_placeable(|j| j.id == "a").unwrap().id, "a");
+        assert_eq!(q.peek().unwrap().id, "victim");
+        assert_eq!(q.len(), 1);
+    }
+
+    #[test]
+    fn blocked_high_head_gates_lower_lanes_even_with_requeue() {
+        // Cross-lane interaction: a requeued High victim at its lane
+        // head still gates Normal/Low entirely — the skip window only
+        // skips *within* a lane, never across a blocked higher lane.
+        let mut q = JobQueue::with_skip_window(8);
+        q.push(job("h-tail", Priority::High));
+        q.push_front(job("h-victim", Priority::High));
+        q.push(job("n", Priority::Normal));
+        q.push(job("l", Priority::Low));
+        assert!(q.pop_placeable(|j| j.priority != Priority::High).is_none());
+        // Unblock: the victim pops first, then its lane, then lower lanes.
+        assert_eq!(q.pop_placeable(|j| j.id == "h-victim").unwrap().id, "h-victim");
+        assert_eq!(q.pop_placeable(|_| true).unwrap().id, "h-tail");
+        assert_eq!(q.pop_placeable(|_| true).unwrap().id, "n");
+        assert_eq!(q.pop_placeable(|_| true).unwrap().id, "l");
+        assert!(q.is_empty());
+    }
+
+    #[test]
     fn remove_by_id() {
         let mut q = JobQueue::new();
         q.push(job("a", Priority::Normal));

@@ -115,6 +115,14 @@ pub struct SessionRecord {
     pub failure: Option<String>,
     /// Times this session was auto-recovered after a node loss (§4.2).
     pub recoveries: u32,
+    /// Times this session was preempted by fair-share quota
+    /// enforcement (checkpointed, paused and re-queued for a waiting
+    /// user).
+    pub preemptions: u32,
+    /// Currently evicted and waiting for re-admission: distinguishes
+    /// a preemption resume (quota enforcement) from a failure
+    /// recovery, so `recoveries` stays honest.
+    pub preempted: bool,
 }
 
 impl SessionRecord {
@@ -131,6 +139,8 @@ impl SessionRecord {
             finished_at_ms: None,
             failure: None,
             recoveries: 0,
+            preemptions: 0,
+            preempted: false,
         }
     }
 }

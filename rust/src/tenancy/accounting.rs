@@ -1,0 +1,177 @@
+//! Per-user GPU-second accounting, derived from the event bus.
+//!
+//! The accountant never sits on a training hot path: session code
+//! publishes the `StateChanged` events it already publishes, and the
+//! platform's consumer pump (the same subscription that feeds the
+//! leaderboard and utilization monitor) forwards each event to
+//! [`UsageAccountant::observe`]. A transition *into* `running` opens
+//! an interval for the session; the first transition *out of*
+//! `running` (paused, done, failed, stopped, queued) closes it and
+//! adds `gpus × seconds` (virtual time) to the owner's total. Live
+//! usage queries ([`UsageAccountant::usage_at`]) include still-open
+//! intervals, so quota enforcement sees a long-running session's
+//! consumption without waiting for it to stop.
+//!
+//! Session → (user, gpus) metadata is registered once at submission
+//! (a control-path call); events for unregistered subjects are
+//! ignored. Ring overflow can drop a closing event — the accountant
+//! is deliberately lossy in the same way the utilization monitor is.
+//! A dropped close would leave the interval accruing forever, so the
+//! platform's consumer pump reconciles on overflow: every session
+//! whose record is no longer `Running` gets its open interval closed
+//! via [`UsageAccountant::close_if_open`] (at its recorded finish
+//! time when known), bounding the error to the overflow window.
+
+use crate::events::{Event, EventKind};
+use crate::util::clock::Millis;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+#[derive(Default)]
+struct Inner {
+    /// session -> (user, gpus), registered at submission.
+    meta: BTreeMap<String, (String, usize)>,
+    /// session -> running-since (virtual ms) for open intervals.
+    open: BTreeMap<String, Millis>,
+    /// user -> closed GPU-seconds.
+    closed: BTreeMap<String, f64>,
+}
+
+/// Thread-safe GPU-second ledger (see module docs).
+#[derive(Default)]
+pub struct UsageAccountant {
+    inner: Mutex<Inner>,
+}
+
+impl UsageAccountant {
+    pub fn new() -> UsageAccountant {
+        UsageAccountant::default()
+    }
+
+    /// Register a session's owner and GPU count (called once at
+    /// submission, before any of its state events can publish).
+    pub fn register(&self, session: &str, user: &str, gpus: usize) {
+        self.inner
+            .lock()
+            .unwrap()
+            .meta
+            .insert(session.to_string(), (user.to_string(), gpus.max(1)));
+    }
+
+    /// Feed one bus event through the ledger (only `state` events
+    /// matter; everything else is a cheap no-op).
+    pub fn observe(&self, e: &Event) {
+        let EventKind::StateChanged { to, .. } = &e.kind else {
+            return;
+        };
+        let mut inner = self.inner.lock().unwrap();
+        if to == "running" {
+            if inner.meta.contains_key(&e.subject) && !inner.open.contains_key(&e.subject) {
+                inner.open.insert(e.subject.clone(), e.at_ms);
+            }
+        } else if let Some(since) = inner.open.remove(&e.subject) {
+            let (user, gpus) =
+                inner.meta.get(&e.subject).cloned().expect("open interval implies meta");
+            let add = e.at_ms.saturating_sub(since) as f64 / 1000.0 * gpus as f64;
+            *inner.closed.entry(user).or_insert(0.0) += add;
+        }
+    }
+
+    /// Close `session`'s open interval at `at_ms` if one exists
+    /// (overflow reconciliation: the exit event was lost, but the
+    /// session record proves it stopped running). No-op otherwise.
+    pub fn close_if_open(&self, session: &str, at_ms: Millis) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(since) = inner.open.remove(session) {
+            let (user, gpus) = inner.meta.get(session).cloned().expect("open interval implies meta");
+            let add = at_ms.saturating_sub(since) as f64 / 1000.0 * gpus as f64;
+            *inner.closed.entry(user).or_insert(0.0) += add;
+        }
+    }
+
+    /// `user`'s total GPU-seconds as of `now_ms` — closed intervals
+    /// plus every interval still running.
+    pub fn usage_at(&self, user: &str, now_ms: Millis) -> f64 {
+        let inner = self.inner.lock().unwrap();
+        let mut total = inner.closed.get(user).copied().unwrap_or(0.0);
+        for (session, since) in &inner.open {
+            if let Some((u, gpus)) = inner.meta.get(session) {
+                if u == user {
+                    total += now_ms.saturating_sub(*since) as f64 / 1000.0 * *gpus as f64;
+                }
+            }
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::Level;
+
+    fn state(subject: &str, to: &str, at_ms: Millis) -> Event {
+        Event {
+            seq: 0,
+            at_ms,
+            level: Level::Info,
+            source: "session".into(),
+            subject: subject.to_string(),
+            kind: EventKind::StateChanged { from: "x".into(), to: to.to_string(), step: 0 },
+        }
+    }
+
+    #[test]
+    fn intervals_accumulate_gpu_seconds() {
+        let acc = UsageAccountant::new();
+        acc.register("s1", "kim", 2);
+        acc.observe(&state("s1", "running", 1_000));
+        // Live usage includes the open interval.
+        assert!((acc.usage_at("kim", 3_000) - 4.0).abs() < 1e-9, "2 gpus x 2s");
+        acc.observe(&state("s1", "paused", 4_000));
+        assert!((acc.usage_at("kim", 9_999) - 6.0).abs() < 1e-9, "closed at 3s x 2 gpus");
+        // Resume opens a fresh interval.
+        acc.observe(&state("s1", "running", 10_000));
+        acc.observe(&state("s1", "done", 11_000));
+        assert!((acc.usage_at("kim", 99_999) - 8.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_sessions_and_other_users_ignored() {
+        let acc = UsageAccountant::new();
+        acc.observe(&state("ghost", "running", 0));
+        acc.observe(&state("ghost", "done", 5_000));
+        assert_eq!(acc.usage_at("anyone", 10_000), 0.0);
+        acc.register("s1", "kim", 1);
+        acc.observe(&state("s1", "running", 0));
+        assert_eq!(acc.usage_at("lee", 10_000), 0.0);
+        assert!((acc.usage_at("kim", 10_000) - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn lost_exit_event_is_reconcilable() {
+        // A ring overflow ate the 'done' transition: close_if_open
+        // settles the interval at the recorded finish time instead of
+        // letting it accrue forever.
+        let acc = UsageAccountant::new();
+        acc.register("s1", "kim", 2);
+        acc.observe(&state("s1", "running", 1_000));
+        acc.close_if_open("s1", 3_000);
+        assert!((acc.usage_at("kim", 999_999) - 4.0).abs() < 1e-9, "2 gpus x 2s, then frozen");
+        // Idempotent; and a no-op for sessions without an open interval.
+        acc.close_if_open("s1", 9_000);
+        acc.close_if_open("ghost", 9_000);
+        assert!((acc.usage_at("kim", 999_999) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn duplicate_transitions_are_safe() {
+        let acc = UsageAccountant::new();
+        acc.register("s1", "kim", 1);
+        acc.observe(&state("s1", "running", 1_000));
+        acc.observe(&state("s1", "running", 2_000)); // keeps the original start
+        acc.observe(&state("s1", "done", 3_000));
+        acc.observe(&state("s1", "done", 9_000)); // no open interval: no-op
+        assert!((acc.usage_at("kim", 99_999) - 2.0).abs() < 1e-9);
+    }
+}

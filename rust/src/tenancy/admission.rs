@@ -1,0 +1,350 @@
+//! The weighted fair-share admission queue — which pending submission
+//! is offered to the scheduler next.
+//!
+//! Submissions do not reach the scheduler's [`JobQueue`](crate::scheduler::JobQueue)
+//! directly: they wait here, one FIFO lane per user, and a **stride
+//! scheduler** picks across lanes. Every user carries a `pass` value;
+//! admitting one of their jobs advances it by `STRIDE_SCALE / weight`,
+//! so a weight-2 user is offered twice as many admissions as a
+//! weight-1 user under contention. Users in a higher
+//! [`PriorityClass`] always go first; ties inside a class break on
+//! pass, then name (deterministic). A user whose lane was empty
+//! re-enters at the minimum pass of the currently-waiting users — idle
+//! time earns no credit.
+//!
+//! Selection is head-of-lane only: a user's own submissions stay FIFO,
+//! but a blocked head (quota or capacity) lets *other users'* heads
+//! through — the queue is work-conserving across users, and the
+//! blocked user keeps its (minimal) pass so it is re-offered first
+//! once the blocker clears.
+
+use super::registry::PriorityClass;
+use crate::scheduler::JobSpec;
+use std::collections::{BTreeMap, BTreeSet, VecDeque};
+use std::sync::Mutex;
+
+/// Pass increment for a weight-1 admission; a user's stride is
+/// `STRIDE_SCALE / weight`.
+pub const STRIDE_SCALE: u64 = 1 << 16;
+
+/// One submission waiting for admission.
+#[derive(Debug, Clone)]
+pub struct PendingAdmission {
+    pub job: JobSpec,
+    /// True for a preempted session re-entering the queue: it resumes
+    /// from its checkpoint when re-admitted.
+    pub resume: bool,
+}
+
+/// One `pop_next` pass's outcome.
+#[derive(Debug)]
+pub struct AdmitPop {
+    /// The submission to offer to the scheduler, if any lane head was
+    /// admissible.
+    pub admitted: Option<PendingAdmission>,
+    /// `(user, session)` pairs whose lane head was rejected for the
+    /// *first* time this lifetime — the caller publishes one defer
+    /// decision each (later rejections stay silent).
+    pub deferred: Vec<(String, String)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    /// Per-user FIFO lanes (only non-empty lanes are kept).
+    lanes: BTreeMap<String, VecDeque<PendingAdmission>>,
+    /// Stride passes; persists across lane drain/refill.
+    passes: BTreeMap<String, u64>,
+    /// Session ids already reported as deferred (one event per entry).
+    deferred: BTreeSet<String>,
+    len: usize,
+}
+
+/// Thread-safe fair-share queue (see module docs).
+#[derive(Default)]
+pub struct AdmissionQueue {
+    inner: Mutex<Inner>,
+}
+
+impl AdmissionQueue {
+    pub fn new() -> AdmissionQueue {
+        AdmissionQueue::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Pending submissions waiting for `user`.
+    pub fn depth_of(&self, user: &str) -> usize {
+        self.inner.lock().unwrap().lanes.get(user).map(|q| q.len()).unwrap_or(0)
+    }
+
+    /// A clone of the submission at the head of `user`'s lane (the
+    /// only candidate a selection pass would consider).
+    pub fn head_of(&self, user: &str) -> Option<PendingAdmission> {
+        self.inner.lock().unwrap().lanes.get(user).and_then(|q| q.front()).cloned()
+    }
+
+    /// Users with at least one pending submission.
+    pub fn users_waiting(&self) -> Vec<String> {
+        self.inner.lock().unwrap().lanes.keys().cloned().collect()
+    }
+
+    /// Queue a submission at the back of its user's lane.
+    pub fn enqueue(&self, p: PendingAdmission) {
+        self.enqueue_inner(p, false);
+    }
+
+    /// Queue at the *front* of the user's lane (preempted sessions keep
+    /// their turn ahead of the user's own later submissions).
+    pub fn enqueue_front(&self, p: PendingAdmission) {
+        self.enqueue_inner(p, true);
+    }
+
+    fn enqueue_inner(&self, p: PendingAdmission, front: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        let user = p.job.user.clone();
+        if !inner.lanes.contains_key(&user) {
+            // Re-entering after an idle spell: catch the pass up to the
+            // waiting minimum so idle time never banks credit.
+            let min_pass = inner
+                .lanes
+                .keys()
+                .map(|u| inner.passes.get(u).copied().unwrap_or(0))
+                .min();
+            if let Some(m) = min_pass {
+                let pass = inner.passes.entry(user.clone()).or_insert(0);
+                if *pass < m {
+                    *pass = m;
+                }
+            }
+        }
+        let lane = inner.lanes.entry(user).or_default();
+        if front {
+            lane.push_front(p);
+        } else {
+            lane.push_back(p);
+        }
+        inner.len += 1;
+    }
+
+    /// Remove a pending submission by session id (stop before
+    /// admission). Returns whether anything was removed.
+    pub fn remove(&self, id: &str) -> bool {
+        let mut inner = self.inner.lock().unwrap();
+        let mut hit = None;
+        for (user, lane) in inner.lanes.iter_mut() {
+            if let Some(pos) = lane.iter().position(|p| p.job.id == id) {
+                lane.remove(pos);
+                hit = Some((user.clone(), lane.is_empty()));
+                break;
+            }
+        }
+        match hit {
+            Some((user, empty)) => {
+                if empty {
+                    inner.lanes.remove(&user);
+                }
+                inner.deferred.remove(id);
+                inner.len -= 1;
+                if inner.len == 0 {
+                    inner.passes.clear(); // fully drained: clean slate
+                }
+                true
+            }
+            None => false,
+        }
+    }
+
+    /// One fair-share selection pass. `meta` supplies each user's
+    /// `(class, weight)`; `admissible` gates a lane head (quota +
+    /// capacity — it must not call back into this queue). The first
+    /// admissible head in (class desc, pass asc, name asc) order is
+    /// popped and its user's pass advanced; rejected heads are
+    /// reported in [`AdmitPop::deferred`] the first time only.
+    pub fn pop_next(
+        &self,
+        meta: impl Fn(&str) -> (PriorityClass, u32),
+        mut admissible: impl FnMut(&str, &PendingAdmission) -> bool,
+    ) -> AdmitPop {
+        let mut inner = self.inner.lock().unwrap();
+        let mut deferred = Vec::new();
+        let mut order: Vec<(PriorityClass, u64, String)> = inner
+            .lanes
+            .keys()
+            .map(|u| {
+                let (class, _) = meta(u);
+                (class, inner.passes.get(u).copied().unwrap_or(0), u.clone())
+            })
+            .collect();
+        order.sort_by(|a, b| b.0.cmp(&a.0).then(a.1.cmp(&b.1)).then(a.2.cmp(&b.2)));
+        for (_, _, user) in order {
+            let Some(head) = inner.lanes.get(&user).and_then(|q| q.front()).cloned() else {
+                continue;
+            };
+            if admissible(&user, &head) {
+                let lane = inner.lanes.get_mut(&user).expect("non-empty lane");
+                let p = lane.pop_front().expect("lane head");
+                if lane.is_empty() {
+                    inner.lanes.remove(&user);
+                }
+                inner.len -= 1;
+                inner.deferred.remove(&p.job.id);
+                if inner.len == 0 {
+                    // Fully drained: reset the pass plane, so the next
+                    // burst starts fresh instead of a newcomer (pass 0)
+                    // out-admitting a long-established user whose pass
+                    // kept its absolute history.
+                    inner.passes.clear();
+                } else {
+                    let (_, weight) = meta(&user);
+                    let stride = STRIDE_SCALE / weight.max(1) as u64;
+                    let pass = inner.passes.entry(user).or_insert(0);
+                    *pass = pass.saturating_add(stride);
+                }
+                return AdmitPop { admitted: Some(p), deferred };
+            }
+            if inner.deferred.insert(head.job.id.clone()) {
+                deferred.push((user, head.job.id));
+            }
+        }
+        AdmitPop { admitted: None, deferred }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn pending(user: &str, id: &str) -> PendingAdmission {
+        PendingAdmission { job: JobSpec::new(id, 1).with_user(user), resume: false }
+    }
+
+    fn meta_table(
+        table: &[(&str, PriorityClass, u32)],
+    ) -> impl Fn(&str) -> (PriorityClass, u32) + '_ {
+        move |user| {
+            table
+                .iter()
+                .find(|(u, ..)| *u == user)
+                .map(|(_, c, w)| (*c, *w))
+                .unwrap_or((PriorityClass::Normal, 1))
+        }
+    }
+
+    fn drain_order(q: &AdmissionQueue, meta: impl Fn(&str) -> (PriorityClass, u32)) -> Vec<String> {
+        std::iter::from_fn(|| q.pop_next(&meta, |_, _| true).admitted)
+            .map(|p| p.job.user)
+            .collect()
+    }
+
+    #[test]
+    fn equal_weights_alternate() {
+        let q = AdmissionQueue::new();
+        for i in 0..3 {
+            q.enqueue(pending("a", &format!("a{}", i)));
+        }
+        for i in 0..3 {
+            q.enqueue(pending("b", &format!("b{}", i)));
+        }
+        let order = drain_order(&q, |_| (PriorityClass::Normal, 1));
+        assert_eq!(order, vec!["a", "b", "a", "b", "a", "b"]);
+        assert!(q.is_empty());
+    }
+
+    #[test]
+    fn weights_bias_the_interleave() {
+        // Weight 2 vs 1: over 6 admissions "heavy" gets two for each
+        // "light" one.
+        let q = AdmissionQueue::new();
+        for i in 0..4 {
+            q.enqueue(pending("heavy", &format!("h{}", i)));
+        }
+        for i in 0..2 {
+            q.enqueue(pending("light", &format!("l{}", i)));
+        }
+        let table = [("heavy", PriorityClass::Normal, 2), ("light", PriorityClass::Normal, 1)];
+        let order = drain_order(&q, meta_table(&table));
+        assert_eq!(order, vec!["heavy", "light", "heavy", "heavy", "light", "heavy"]);
+    }
+
+    #[test]
+    fn higher_class_always_first() {
+        let q = AdmissionQueue::new();
+        q.enqueue(pending("norm", "n0"));
+        q.enqueue(pending("vip", "v0"));
+        q.enqueue(pending("vip", "v1"));
+        let table = [("vip", PriorityClass::High, 1), ("norm", PriorityClass::Normal, 9)];
+        let order = drain_order(&q, meta_table(&table));
+        assert_eq!(order, vec!["vip", "vip", "norm"], "class beats weight");
+    }
+
+    #[test]
+    fn blocked_head_defers_once_and_yields_to_peers() {
+        let q = AdmissionQueue::new();
+        q.enqueue(pending("a", "a0"));
+        q.enqueue(pending("b", "b0"));
+        let meta = |_: &str| (PriorityClass::Normal, 1);
+        // a's head is blocked: b goes through; a0 is reported deferred
+        // exactly once.
+        let pop = q.pop_next(meta, |user, _| user != "a");
+        assert_eq!(pop.admitted.as_ref().unwrap().job.user, "b");
+        assert_eq!(pop.deferred, vec![("a".to_string(), "a0".to_string())]);
+        let pop = q.pop_next(meta, |user, _| user != "a");
+        assert!(pop.admitted.is_none());
+        assert!(pop.deferred.is_empty(), "second rejection stays silent");
+        // Unblocked: a0 finally admits.
+        let pop = q.pop_next(meta, |_, _| true);
+        assert_eq!(pop.admitted.unwrap().job.id, "a0");
+    }
+
+    #[test]
+    fn front_enqueue_keeps_the_victims_turn() {
+        let q = AdmissionQueue::new();
+        q.enqueue(pending("a", "a0"));
+        q.enqueue(pending("a", "a1"));
+        q.enqueue_front(PendingAdmission { job: JobSpec::new("victim", 1).with_user("a"), resume: true });
+        let meta = |_: &str| (PriorityClass::Normal, 1);
+        let first = q.pop_next(meta, |_, _| true).admitted.unwrap();
+        assert_eq!(first.job.id, "victim");
+        assert!(first.resume);
+        assert_eq!(q.pop_next(meta, |_, _| true).admitted.unwrap().job.id, "a0");
+    }
+
+    #[test]
+    fn idle_user_earns_no_credit() {
+        // "a" gets several admissions while "b" is absent; when "b"
+        // arrives its pass catches up, so it does not monopolize.
+        let q = AdmissionQueue::new();
+        let meta = |_: &str| (PriorityClass::Normal, 1);
+        for i in 0..4 {
+            q.enqueue(pending("a", &format!("a{}", i)));
+        }
+        // Admit two of a's jobs (pass advances to 2 strides).
+        assert_eq!(q.pop_next(meta, |_, _| true).admitted.unwrap().job.user, "a");
+        assert_eq!(q.pop_next(meta, |_, _| true).admitted.unwrap().job.user, "a");
+        for i in 0..3 {
+            q.enqueue(pending("b", &format!("b{}", i)));
+        }
+        // b starts at a's pass, not zero: strict alternation follows.
+        let order = drain_order(&q, meta);
+        assert_eq!(order, vec!["a", "b", "a", "b", "b"]);
+    }
+
+    #[test]
+    fn remove_by_id() {
+        let q = AdmissionQueue::new();
+        q.enqueue(pending("a", "a0"));
+        q.enqueue(pending("a", "a1"));
+        assert!(q.remove("a0"));
+        assert!(!q.remove("a0"));
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.depth_of("a"), 1);
+        assert!(q.remove("a1"));
+        assert!(q.users_waiting().is_empty());
+    }
+}

@@ -1,0 +1,245 @@
+//! Per-user quotas and resource occupancy — who may hold how much.
+//!
+//! The registry is the tenancy layer's source of truth for three
+//! things: each user's [`TenantQuota`] (explicit override or the
+//! `[tenancy]` config default), the set of users the platform has ever
+//! seen (so reports cover idle tenants too), and a *charge table* of
+//! cluster resources currently held per session. Charges are taken
+//! when a submission is admitted and credited back exactly once when
+//! the session releases its allocation (completion, stop, failure or
+//! preemption) — both operations are idempotent, so retrying a release
+//! on an already-credited session is a no-op, never a double credit.
+
+use std::collections::{BTreeMap, BTreeSet};
+use std::sync::Mutex;
+
+/// Coarse admission tier across users. Higher classes are always
+/// offered to the scheduler before lower ones; stride weights only
+/// order users *within* a class.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum PriorityClass {
+    Low = 0,
+    Normal = 1,
+    High = 2,
+}
+
+impl PriorityClass {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            PriorityClass::Low => "low",
+            PriorityClass::Normal => "normal",
+            PriorityClass::High => "high",
+        }
+    }
+
+    /// Inverse of [`PriorityClass::as_str`] (config + wire parsing).
+    #[allow(clippy::should_implement_trait)]
+    pub fn from_str(s: &str) -> Option<PriorityClass> {
+        match s {
+            "low" => Some(PriorityClass::Low),
+            "normal" => Some(PriorityClass::Normal),
+            "high" => Some(PriorityClass::High),
+            _ => None,
+        }
+    }
+}
+
+/// One user's fair-share contract. Limits use `0` (or `0.0`) to mean
+/// *unlimited*, so the all-zero default admits everything — tenancy
+/// only bites where an operator opted a user in.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TenantQuota {
+    /// Max sessions holding (or queued for) cluster resources at once.
+    pub max_concurrent: usize,
+    /// Max GPUs held across all of the user's sessions at once.
+    pub max_gpus: usize,
+    /// Lifetime GPU-second budget (virtual time); once exceeded the
+    /// user only runs when no quota-clear user is waiting (the gate is
+    /// work-conserving — capacity nobody else may claim is still
+    /// handed out), and their youngest session is preempted when an
+    /// admissible user is left waiting.
+    pub gpu_second_budget: f64,
+    /// Stride-scheduling weight: a weight-2 user is offered twice as
+    /// many admissions as a weight-1 user under contention.
+    pub weight: u32,
+    /// Admission tier (see [`PriorityClass`]).
+    pub class: PriorityClass,
+}
+
+impl Default for TenantQuota {
+    fn default() -> TenantQuota {
+        TenantQuota {
+            max_concurrent: 0,
+            max_gpus: 0,
+            gpu_second_budget: 0.0,
+            weight: 1,
+            class: PriorityClass::Normal,
+        }
+    }
+}
+
+/// A `[tenancy] users = "name:weight:class,…"` config entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TenantSpec {
+    pub user: String,
+    pub weight: u32,
+    pub class: PriorityClass,
+}
+
+struct Inner {
+    default_quota: TenantQuota,
+    /// Explicit per-user overrides; absent users get the default.
+    quotas: BTreeMap<String, TenantQuota>,
+    /// Sessions currently charged: session -> (user, gpus).
+    charged: BTreeMap<String, (String, usize)>,
+    /// Every user that ever submitted or was configured.
+    seen: BTreeSet<String>,
+}
+
+/// Thread-safe quota + occupancy store (see module docs).
+pub struct TenantRegistry {
+    inner: Mutex<Inner>,
+}
+
+impl TenantRegistry {
+    pub fn new(default_quota: TenantQuota) -> TenantRegistry {
+        TenantRegistry {
+            inner: Mutex::new(Inner {
+                default_quota,
+                quotas: BTreeMap::new(),
+                charged: BTreeMap::new(),
+                seen: BTreeSet::new(),
+            }),
+        }
+    }
+
+    /// The quota in force for `user` (explicit override or default).
+    pub fn quota_of(&self, user: &str) -> TenantQuota {
+        let inner = self.inner.lock().unwrap();
+        inner.quotas.get(user).copied().unwrap_or(inner.default_quota)
+    }
+
+    /// Replace `user`'s quota outright.
+    pub fn set_quota(&self, user: &str, quota: TenantQuota) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen.insert(user.to_string());
+        inner.quotas.insert(user.to_string(), quota);
+    }
+
+    /// Edit `user`'s quota in place, materializing it from the default
+    /// first if the user had no explicit override yet.
+    pub fn update_quota<F: FnOnce(&mut TenantQuota)>(&self, user: &str, f: F) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen.insert(user.to_string());
+        let dflt = inner.default_quota;
+        let q = inner.quotas.entry(user.to_string()).or_insert(dflt);
+        f(q);
+    }
+
+    /// Record that `user` exists (first submission), so reports list
+    /// them even before any quota override or admission.
+    pub fn note_user(&self, user: &str) {
+        self.inner.lock().unwrap().seen.insert(user.to_string());
+    }
+
+    /// Every known user (submitted at least once or explicitly quota'd).
+    pub fn users(&self) -> Vec<String> {
+        self.inner.lock().unwrap().seen.iter().cloned().collect()
+    }
+
+    /// Explicit quota overrides (for persistence).
+    pub fn overrides(&self) -> Vec<(String, TenantQuota)> {
+        self.inner.lock().unwrap().quotas.iter().map(|(u, q)| (u.clone(), *q)).collect()
+    }
+
+    /// Charge an admitted session against its user. Idempotent.
+    pub fn charge(&self, session: &str, user: &str, gpus: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen.insert(user.to_string());
+        inner.charged.entry(session.to_string()).or_insert_with(|| (user.to_string(), gpus));
+    }
+
+    /// Credit a session's charge back (terminal state or preemption).
+    /// Idempotent: returns the released `(user, gpus)` only the first
+    /// time.
+    pub fn release(&self, session: &str) -> Option<(String, usize)> {
+        self.inner.lock().unwrap().charged.remove(session)
+    }
+
+    /// Currently charged `(sessions, gpus)` held by `user`.
+    pub fn occupancy(&self, user: &str) -> (usize, usize) {
+        let inner = self.inner.lock().unwrap();
+        let mut sessions = 0;
+        let mut gpus = 0;
+        for (u, g) in inner.charged.values() {
+            if u == user {
+                sessions += 1;
+                gpus += *g;
+            }
+        }
+        (sessions, gpus)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_quota_is_unlimited() {
+        let q = TenantQuota::default();
+        assert_eq!(q.max_concurrent, 0);
+        assert_eq!(q.max_gpus, 0);
+        assert_eq!(q.gpu_second_budget, 0.0);
+        assert_eq!(q.weight, 1);
+        assert_eq!(q.class, PriorityClass::Normal);
+    }
+
+    #[test]
+    fn overrides_shadow_the_default() {
+        let r = TenantRegistry::new(TenantQuota { max_gpus: 8, ..TenantQuota::default() });
+        assert_eq!(r.quota_of("kim").max_gpus, 8);
+        r.set_quota("kim", TenantQuota { max_gpus: 2, ..TenantQuota::default() });
+        assert_eq!(r.quota_of("kim").max_gpus, 2);
+        // Other users still see the default.
+        assert_eq!(r.quota_of("lee").max_gpus, 8);
+        // Partial edits materialize from the default, not from zero.
+        r.update_quota("lee", |q| q.weight = 4);
+        let lee = r.quota_of("lee");
+        assert_eq!(lee.weight, 4);
+        assert_eq!(lee.max_gpus, 8);
+        assert_eq!(r.overrides().len(), 2);
+    }
+
+    #[test]
+    fn charge_and_release_are_idempotent() {
+        let r = TenantRegistry::new(TenantQuota::default());
+        r.charge("s1", "kim", 2);
+        r.charge("s1", "kim", 5); // double charge ignored
+        r.charge("s2", "kim", 1);
+        assert_eq!(r.occupancy("kim"), (2, 3));
+        assert_eq!(r.release("s1"), Some(("kim".to_string(), 2)));
+        assert_eq!(r.release("s1"), None); // double release is a no-op
+        assert_eq!(r.occupancy("kim"), (1, 1));
+        assert_eq!(r.occupancy("lee"), (0, 0));
+    }
+
+    #[test]
+    fn seen_users_accumulate() {
+        let r = TenantRegistry::new(TenantQuota::default());
+        r.note_user("b");
+        r.charge("s", "a", 1);
+        r.update_quota("c", |q| q.class = PriorityClass::High);
+        assert_eq!(r.users(), vec!["a".to_string(), "b".to_string(), "c".to_string()]);
+    }
+
+    #[test]
+    fn class_strings_round_trip() {
+        for c in [PriorityClass::Low, PriorityClass::Normal, PriorityClass::High] {
+            assert_eq!(PriorityClass::from_str(c.as_str()), Some(c));
+        }
+        assert_eq!(PriorityClass::from_str("frobnicate"), None);
+        assert!(PriorityClass::High > PriorityClass::Normal);
+        assert!(PriorityClass::Normal > PriorityClass::Low);
+    }
+}

@@ -17,6 +17,12 @@
 //!   (per-worker busy-time, live sessions, queue depth, steal counts)
 //!   dispatched as an `executor_status` query through the attached
 //!   service
+//! * `GET /api/v1/tenants`       — JSON per-user fair-share report
+//!   (quotas, GPU-second usage, occupancy, admission-queue depth)
+//!   dispatched as a `tenant_report` query
+//! * `GET /api/v1/board?dataset=<ds>&user=<u>&limit=<n>` — leaderboard
+//!   rows, optionally sliced to one user (global ranks kept),
+//!   dispatched as a `board` query
 //! * `GET /api/v1/events?since=<cursor>&kind=<name>&subject=<id>&limit=<n>`
 //!   — cursor-paged incremental read of the platform event bus
 //!   (dispatched as an `events_since` query). The reply carries the
@@ -28,7 +34,7 @@
 //!   `pause`, `resume`, `stop`, `infer`, `drive`, `run_to_completion`,
 //!   `kill_node`, `list_sessions`, `get_session`, `board`,
 //!   `cluster_status`, `executor_status`, `events_since`,
-//!   `submit_trial_batch`) into the attached
+//!   `submit_trial_batch`, `tenant_report`, `set_quota`) into the attached
 //!   [`PlatformService`](crate::api::PlatformService); the JSON body is
 //!   the verb's `args` object and the reply is an `ApiResponse`
 //!   envelope. Error codes map to HTTP: `not_found`→404,
@@ -215,6 +221,50 @@ fn executor_json(state: &WebState) -> Response {
     api_response(api.call(ApiRequest::ExecutorStatus))
 }
 
+/// `GET /api/v1/tenants`: the per-user fair-share report (quotas,
+/// GPU-second usage, admission-queue depth) as a read route.
+fn tenants_json(state: &WebState) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::TenantReport))
+}
+
+/// `GET /api/v1/board?dataset=&user=&limit=`: the leaderboard query as
+/// a read route — `user=` slices to one tenant's rows while keeping
+/// their global ranks. The query string becomes a `board` dispatch, so
+/// the wire layer validates the arguments.
+fn board_query_json(state: &WebState, query: &str) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    let mut args = Json::obj();
+    for (k, v) in parse_query(query) {
+        match k.as_str() {
+            "limit" => match v.parse::<u64>() {
+                Ok(n) => {
+                    args.set(&k, n.into());
+                }
+                Err(_) => {
+                    return api_response(ApiResponse::Error {
+                        error: ApiError::invalid(
+                            "board: query parameter 'limit' must be a non-negative integer",
+                        ),
+                    })
+                }
+            },
+            "dataset" | "user" => {
+                args.set(&k, v.as_str().into());
+            }
+            _ => {} // unknown parameters are ignored
+        }
+    }
+    match ApiRequest::from_verb_args("board", &args) {
+        Ok(req) => api_response(api.call(req)),
+        Err(error) => api_response(ApiResponse::Error { error }),
+    }
+}
+
 /// Decoded `key=value` pairs of a query string.
 fn parse_query(query: &str) -> Vec<(String, String)> {
     query
@@ -269,6 +319,12 @@ fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
         }
         if path == "/api/v1/events" {
             return events_json(state, query);
+        }
+        if path == "/api/v1/tenants" {
+            return tenants_json(state);
+        }
+        if path == "/api/v1/board" {
+            return board_query_json(state, query);
         }
         return Response::method_not_allowed("POST");
     }
@@ -711,9 +767,67 @@ mod tests {
         let s = state();
         let r = handle(&s, "POST", "/api/v1/list_sessions", "");
         assert_eq!(r.status, 503);
-        // The executor and events read routes need the service too.
+        // The executor/events/tenants/board read routes need the
+        // service too.
         assert_eq!(handle(&s, "GET", "/api/v1/executor", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/events?since=0", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/tenants", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist", "").status, 503);
+    }
+
+    #[test]
+    fn tenants_and_board_routes_dispatch_queries() {
+        use crate::api::TenantView;
+        // Stub service: a canned tenant report, and board dispatches
+        // echoing the parsed user filter.
+        let (api, rx) = crate::api::service_channel();
+        std::thread::spawn(move || {
+            while let Ok(call) = rx.recv() {
+                let resp = match call.request() {
+                    ApiRequest::TenantReport => ApiResponse::Tenants {
+                        tenants: vec![TenantView {
+                            user: "kim".into(),
+                            weight: 2,
+                            class: "high".into(),
+                            max_concurrent: 3,
+                            max_gpus: 8,
+                            gpu_second_budget: 60.0,
+                            gpu_seconds_used: 12.5,
+                            active_sessions: 1,
+                            gpus_in_use: 2,
+                            waiting: 1,
+                            preemptions: 1,
+                        }],
+                    },
+                    ApiRequest::Board { dataset, limit, user } => {
+                        assert_eq!(dataset, "mnist");
+                        assert_eq!(*limit, 5);
+                        assert_eq!(user.as_deref(), Some("kim"));
+                        ApiResponse::Board { dataset: dataset.clone(), rows: vec![] }
+                    }
+                    _ => ApiResponse::Sessions { sessions: vec![] },
+                };
+                call.respond(resp);
+            }
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/tenants", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("tenants"));
+        let tenants = j.at(&["data", "tenants"]).unwrap().as_arr().unwrap();
+        assert_eq!(tenants[0].get("user").unwrap().as_str(), Some("kim"));
+        assert_eq!(tenants[0].get("waiting").unwrap().as_i64(), Some(1));
+
+        let r = handle(&s, "GET", "/api/v1/board?dataset=mnist&user=kim&limit=5", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("board"));
+        // Bad limit 400s before reaching the service; a missing
+        // dataset is rejected by the wire layer.
+        assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist&limit=soon", "").status, 400);
+        assert_eq!(handle(&s, "GET", "/api/v1/board?user=kim", "").status, 400);
     }
 
     #[test]

@@ -5,7 +5,7 @@
 
 use nsml::api::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ExecutorStats, NodeStatusView,
-    NsmlPlatform, PlatformConfig, PlatformService, RunParams, SessionView, TrialSpec,
+    NsmlPlatform, PlatformConfig, PlatformService, RunParams, SessionView, TenantView, TrialSpec,
     WorkerStatView, ALL_KINDS, ALL_VERBS,
 };
 use nsml::session::SessionState;
@@ -35,9 +35,27 @@ fn sample_requests() -> Vec<ApiRequest> {
         ApiRequest::KillNode { node: 2 },
         ApiRequest::ListSessions,
         ApiRequest::GetSession { session: "kim/mnist/1".into() },
-        ApiRequest::Board { dataset: "mnist".into(), limit: 10 },
+        ApiRequest::Board { dataset: "mnist".into(), limit: 10, user: None },
+        ApiRequest::Board { dataset: "mnist".into(), limit: 10, user: Some("kim".into()) },
         ApiRequest::ClusterStatus,
         ApiRequest::ExecutorStatus,
+        ApiRequest::TenantReport,
+        ApiRequest::SetQuota {
+            user: "kim".into(),
+            max_concurrent: Some(2),
+            max_gpus: Some(4),
+            gpu_second_budget: Some(120.5),
+            weight: Some(3),
+            class: Some("high".into()),
+        },
+        ApiRequest::SetQuota {
+            user: "lee".into(),
+            max_concurrent: None,
+            max_gpus: None,
+            gpu_second_budget: None,
+            weight: None,
+            class: None,
+        },
         ApiRequest::EventsSince {
             since: 12,
             kind: Some("state".into()),
@@ -69,6 +87,7 @@ fn sample_view() -> SessionView {
         lr: 0.05,
         best_metric: Some(0.91),
         recoveries: 1,
+        preemptions: 2,
     }
 }
 
@@ -164,6 +183,36 @@ fn sample_responses() -> Vec<ApiResponse> {
             ],
             next: 43,
             dropped: 7,
+        },
+        ApiResponse::Tenants {
+            tenants: vec![
+                TenantView {
+                    user: "kim".into(),
+                    weight: 3,
+                    class: "high".into(),
+                    max_concurrent: 2,
+                    max_gpus: 4,
+                    gpu_second_budget: 120.5,
+                    gpu_seconds_used: 17.25,
+                    active_sessions: 1,
+                    gpus_in_use: 2,
+                    waiting: 1,
+                    preemptions: 1,
+                },
+                TenantView {
+                    user: "lee".into(),
+                    weight: 1,
+                    class: "normal".into(),
+                    max_concurrent: 0,
+                    max_gpus: 0,
+                    gpu_second_budget: 0.0,
+                    gpu_seconds_used: 0.0,
+                    active_sessions: 0,
+                    gpus_in_use: 0,
+                    waiting: 0,
+                    preemptions: 0,
+                },
+            ],
         },
         ApiResponse::Error {
             error: ApiError::failed("session kim/mnist/1 is not active").with_session("kim/mnist/1"),
@@ -299,7 +348,7 @@ fn dispatch_drives_run_pause_resume_stop() {
     }
 
     // the board lists it
-    match s.dispatch(ApiRequest::Board { dataset: "mnist".into(), limit: 10 }) {
+    match s.dispatch(ApiRequest::Board { dataset: "mnist".into(), limit: 10, user: None }) {
         ApiResponse::Board { rows, .. } => {
             assert!(rows.iter().any(|r| r.session == id), "{:?}", rows);
         }

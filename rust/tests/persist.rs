@@ -6,6 +6,7 @@ use nsml::api::persist::{load, save};
 use nsml::leaderboard::{Leaderboard, Submission};
 use nsml::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
 use nsml::storage::{CheckpointStore, ObjectStore};
+use nsml::tenancy::{PriorityClass, TenantQuota, TenantRegistry};
 use std::collections::BTreeMap;
 use std::path::PathBuf;
 
@@ -15,16 +16,21 @@ fn tmp_dir(tag: &str) -> PathBuf {
     dir
 }
 
-fn fresh_stores() -> (SessionStore, Leaderboard, CheckpointStore) {
+fn fresh_stores() -> (SessionStore, Leaderboard, CheckpointStore, TenantRegistry) {
     let lb = Leaderboard::new();
     lb.ensure_board("mnist", "accuracy", false);
-    (SessionStore::new(), lb, CheckpointStore::new(ObjectStore::memory()))
+    (
+        SessionStore::new(),
+        lb,
+        CheckpointStore::new(ObjectStore::memory()),
+        TenantRegistry::new(TenantQuota::default()),
+    )
 }
 
 #[test]
 fn populated_paused_session_round_trips() {
     let dir = tmp_dir("paused");
-    let (sessions, lb, ckpts) = fresh_stores();
+    let (sessions, lb, ckpts, tenants) = fresh_stores();
 
     // A mid-flight paused session with a full metric history — the
     // §3.3 "pause, edit, resume later" shape that must survive a
@@ -66,10 +72,20 @@ fn populated_paused_session_round_trips() {
         },
     );
 
-    save(&dir, &sessions, &lb, &ckpts).unwrap();
+    tenants.set_quota(
+        "lee",
+        TenantQuota {
+            max_concurrent: 1,
+            max_gpus: 2,
+            gpu_second_budget: 45.0,
+            weight: 2,
+            class: PriorityClass::Low,
+        },
+    );
+    save(&dir, &sessions, &lb, &ckpts, &tenants).unwrap();
 
-    let (sessions2, lb2, ckpts2) = fresh_stores();
-    load(&dir, &sessions2, &lb2, &ckpts2).unwrap();
+    let (sessions2, lb2, ckpts2, tenants2) = fresh_stores();
+    load(&dir, &sessions2, &lb2, &ckpts2, &tenants2).unwrap();
 
     let r = sessions2.get("lee/mnist/7").unwrap();
     assert_eq!(r.state, SessionState::Paused);
@@ -94,6 +110,14 @@ fn populated_paused_session_round_trips() {
     // Leaderboard survived.
     assert_eq!(lb2.best("mnist").unwrap().value, 0.81);
 
+    // Tenant quota override survived too.
+    let q = tenants2.quota_of("lee");
+    assert_eq!(q.max_concurrent, 1);
+    assert_eq!(q.max_gpus, 2);
+    assert_eq!(q.gpu_second_budget, 45.0);
+    assert_eq!(q.weight, 2);
+    assert_eq!(q.class, PriorityClass::Low);
+
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -103,8 +127,8 @@ fn malformed_state_json_is_rejected() {
     std::fs::create_dir_all(&dir).unwrap();
     std::fs::write(dir.join("state.json"), b"{ this is not json ").unwrap();
 
-    let (sessions, lb, ckpts) = fresh_stores();
-    let err = load(&dir, &sessions, &lb, &ckpts).unwrap_err();
+    let (sessions, lb, ckpts, tenants) = fresh_stores();
+    let err = load(&dir, &sessions, &lb, &ckpts, &tenants).unwrap_err();
     assert!(err.to_string().contains("state.json"), "{}", err);
     // Nothing was partially loaded.
     assert!(sessions.is_empty());
@@ -123,8 +147,8 @@ fn truncated_record_surfaces_an_error() {
         br#"{"format": 1, "sessions": [{"state": "done", "steps_done": 5}]}"#,
     )
     .unwrap();
-    let (sessions, lb, ckpts) = fresh_stores();
-    assert!(load(&dir, &sessions, &lb, &ckpts).is_err());
+    let (sessions, lb, ckpts, tenants) = fresh_stores();
+    assert!(load(&dir, &sessions, &lb, &ckpts, &tenants).is_err());
 
     let _ = std::fs::remove_dir_all(&dir);
 }

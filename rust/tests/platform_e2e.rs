@@ -212,10 +212,12 @@ fn gpu_requests_respected_and_fragmentation_visible() {
     big.gpus = 4;
     let big_id = p.run("frag", "mnist", big).unwrap();
 
-    // Small placed immediately; big queued (the §2 anecdote in miniature).
+    // Small placed immediately; big waits for admission (the §2
+    // anecdote in miniature — capacity-blocked work holds in the
+    // fair-share queue, not the master's).
     assert!(p.sessions.get(&small_id).unwrap().node.is_some());
     assert_eq!(p.sessions.get(&big_id).unwrap().node, None);
-    assert_eq!(p.master.queue_len(), 1);
+    assert_eq!(p.queued_total(), 1);
     // Stop everything; the big job then gets its node.
     for rec in p.sessions.list() {
         if rec.spec.id != big_id && !rec.state.is_terminal() {

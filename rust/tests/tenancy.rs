@@ -1,0 +1,419 @@
+//! Multi-tenant fair share, end to end: quota enforcement at
+//! admission, the preempt → re-admit → resume round trip, fair
+//! interleaving of two users' submissions, and the tenancy wire/web
+//! surfaces (`tenant_report`, `set_quota`, board user filter).
+
+use nsml::api::{ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, RunOpts};
+use nsml::events::{EventFilter, EventKind};
+use nsml::session::SessionState;
+use std::path::PathBuf;
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    Some(dir)
+}
+
+fn platform_with(nodes: usize, gpus_per_node: usize) -> Option<NsmlPlatform> {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = artifacts()?;
+    cfg.nodes = nodes;
+    cfg.gpus_per_node = gpus_per_node;
+    Some(NsmlPlatform::new(cfg).unwrap())
+}
+
+fn quick(steps: u64, seed: u64) -> RunOpts {
+    RunOpts {
+        total_steps: steps,
+        eval_every: (steps / 2).max(1),
+        checkpoint_every: (steps / 2).max(1),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Admission decisions (`admit`/`readmit`/`defer`/`preempt`) for a
+/// subject, in publish order.
+fn decisions_for(p: &NsmlPlatform, subject: &str) -> Vec<String> {
+    p.events
+        .bus()
+        .read_since(0, 0, &EventFilter::default().with_kind("admission").with_subject(subject))
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::AdmissionDecided { decision, .. } => Some(decision.clone()),
+            _ => None,
+        })
+        .collect()
+}
+
+#[test]
+fn concurrency_quota_defers_until_capacity_frees() {
+    let Some(p) = platform_with(3, 4) else { return };
+    p.tenancy.registry.update_quota("lim", |q| q.max_concurrent = 1);
+    let a = p.run("lim", "mnist", quick(16, 0)).unwrap();
+    let b = p.run("lim", "mnist", quick(16, 1)).unwrap();
+    // Plenty of free GPUs, but the quota holds b back.
+    assert!(p.sessions.get(&a).unwrap().node.is_some());
+    assert_eq!(p.sessions.get(&b).unwrap().node, None);
+    assert_eq!(p.tenancy.admission.depth_of("lim"), 1);
+    assert_eq!(decisions_for(&p, &a), vec!["admit"]);
+    assert_eq!(decisions_for(&p, &b), vec!["defer"]);
+
+    p.run_to_completion(8, 10_000).unwrap();
+    for id in [&a, &b] {
+        assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
+    }
+    // b was admitted once a's slot freed.
+    assert_eq!(decisions_for(&p, &b), vec!["defer", "admit"]);
+    assert_eq!(p.tenancy.registry.occupancy("lim"), (0, 0), "charges credited back");
+    // The accountant billed real GPU-seconds for both sessions.
+    assert!(p.tenancy.accountant.usage_at("lim", p.clock.now_ms()) > 0.0);
+}
+
+#[test]
+fn gpu_quota_caps_parallel_holdings() {
+    let Some(p) = platform_with(3, 4) else { return };
+    p.tenancy.registry.update_quota("gq", |q| q.max_gpus = 2);
+    let mut two = quick(16, 0);
+    two.gpus = 2;
+    let a = p.run("gq", "mnist", two.clone()).unwrap();
+    two.seed = 1;
+    let b = p.run("gq", "mnist", two).unwrap();
+    // 12 GPUs free, but the user may only hold 2 at once.
+    assert!(p.sessions.get(&a).unwrap().node.is_some());
+    assert_eq!(p.sessions.get(&b).unwrap().node, None);
+    p.run_to_completion(8, 10_000).unwrap();
+    assert_eq!(p.sessions.get(&b).unwrap().state, SessionState::Done);
+}
+
+#[test]
+fn budget_preemption_pauses_and_resumes_from_checkpoint() {
+    // Single-GPU pool: the budget hog must yield for the second user.
+    let Some(p) = platform_with(1, 1) else { return };
+    p.tenancy.registry.update_quota("hog", |q| q.gpu_second_budget = 0.001);
+    // Long enough that it cannot finish before the preemption round.
+    let a = p
+        .run(
+            "hog",
+            "mnist",
+            RunOpts { total_steps: 200, checkpoint_every: 50, eval_every: 100, ..Default::default() },
+        )
+        .unwrap();
+    // Train a few rounds; virtual time accrues GPU-seconds well past
+    // the 1ms budget.
+    for _ in 0..3 {
+        p.drive_round(10).unwrap();
+    }
+    assert!(p.tenancy.accountant.usage_at("hog", p.clock.now_ms()) > 0.001);
+    assert_eq!(p.sessions.get(&a).unwrap().state, SessionState::Running);
+
+    // Another user arrives; the pool is saturated, so they wait.
+    let b = p.run("fair", "mnist", quick(16, 1)).unwrap();
+    assert_eq!(p.sessions.get(&b).unwrap().node, None);
+
+    // The next drive round preempts the hog's session for them.
+    p.drive_round(10).unwrap();
+    let rec = p.sessions.get(&a).unwrap();
+    assert_eq!(rec.preemptions, 1, "one preemption recorded");
+    assert!(decisions_for(&p, &a).contains(&"preempt".to_string()));
+    assert!(p.sessions.get(&b).unwrap().node.is_some(), "waiting user got the GPU");
+
+    // Everything still finishes: b runs now, a re-admits afterwards
+    // and resumes from its preemption checkpoint.
+    p.run_to_completion(10, 10_000).unwrap();
+    let rec = p.sessions.get(&a).unwrap();
+    assert_eq!(rec.state, SessionState::Done);
+    assert_eq!(rec.steps_done, 200, "resumed, not restarted");
+    assert_eq!(rec.recoveries, 0, "preemption is not a failure recovery");
+    assert_eq!(rec.preemptions, 1);
+    assert!(!rec.preempted);
+    assert!(decisions_for(&p, &a).contains(&"readmit".to_string()));
+    assert_eq!(p.sessions.get(&b).unwrap().state, SessionState::Done);
+}
+
+#[test]
+fn quota_blocked_waiter_does_not_trigger_preemption() {
+    // An over-budget user must only yield when the waiter could
+    // actually use the freed capacity — a waiter blocked by their OWN
+    // quota (max_concurrent here) must not cause eviction thrash.
+    let Some(p) = platform_with(1, 2) else { return };
+    p.tenancy.registry.update_quota("hog", |q| q.gpu_second_budget = 0.001);
+    p.tenancy.registry.update_quota("capped", |q| q.max_concurrent = 1);
+    let hog = p
+        .run(
+            "hog",
+            "mnist",
+            RunOpts { total_steps: 200, checkpoint_every: 50, eval_every: 100, ..Default::default() },
+        )
+        .unwrap();
+    // Long enough to still be running when the second submission lands.
+    let c1 = p.run("capped", "mnist", quick(200, 1)).unwrap();
+    for _ in 0..3 {
+        p.drive_round(10).unwrap();
+    }
+    assert!(p.tenancy.accountant.usage_at("hog", p.clock.now_ms()) > 0.001, "hog over budget");
+    // capped's second submission waits on its own max_concurrent.
+    let c2 = p.run("capped", "mnist", quick(16, 2)).unwrap();
+    assert_eq!(p.sessions.get(&c2).unwrap().node, None);
+    for _ in 0..3 {
+        p.drive_round(10).unwrap();
+    }
+    // The hog kept its session: preempting would have idled the GPU.
+    let rec = p.sessions.get(&hog).unwrap();
+    assert_eq!(rec.preemptions, 0, "no thrash for a quota-blocked waiter");
+    assert_eq!(rec.state, SessionState::Running);
+    // Everything still drains once capped's first session finishes.
+    p.run_to_completion(10, 10_000).unwrap();
+    for id in [&hog, &c1, &c2] {
+        assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
+    }
+    assert_eq!(p.sessions.get(&hog).unwrap().preemptions, 0);
+}
+
+#[test]
+fn mutually_over_budget_users_still_drain() {
+    // Two users who both exhausted their budgets make each other
+    // "contended"; the strict gate alone would wedge both lanes with
+    // the GPU idle. The work-conserving fallback must drain them.
+    let Some(p) = platform_with(1, 1) else { return };
+    p.tenancy.registry.update_quota("alice", |q| q.gpu_second_budget = 0.001);
+    p.tenancy.registry.update_quota("bob", |q| q.gpu_second_budget = 0.001);
+    // Burn both budgets with one completed session each.
+    let a1 = p.run("alice", "mnist", quick(16, 0)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    let b1 = p.run("bob", "mnist", quick(16, 1)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    let now = p.clock.now_ms();
+    assert!(p.tenancy.accountant.usage_at("alice", now) > 0.001);
+    assert!(p.tenancy.accountant.usage_at("bob", now) > 0.001);
+    // A third user saturates the GPU; both over-budget users queue up.
+    let c1 = p.run("carol", "mnist", quick(16, 2)).unwrap();
+    let a2 = p.run("alice", "mnist", quick(16, 3)).unwrap();
+    let b2 = p.run("bob", "mnist", quick(16, 4)).unwrap();
+    assert_eq!(p.queued_total(), 2);
+    // Once carol finishes the budget gate must not idle the GPU.
+    p.run_to_completion(8, 10_000).unwrap();
+    for id in [&a1, &b1, &c1, &a2, &b2] {
+        assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
+    }
+}
+
+#[test]
+fn two_users_interleave_on_a_saturated_pool() {
+    let Some(p) = platform_with(1, 1) else { return };
+    let mut ids = Vec::new();
+    for i in 0..4 {
+        ids.push(p.run("alice", "mnist", quick(12, i)).unwrap());
+    }
+    for i in 0..4 {
+        ids.push(p.run("bob", "mnist", quick(12, 10 + i)).unwrap());
+    }
+    p.run_to_completion(12, 10_000).unwrap();
+    for id in &ids {
+        assert_eq!(p.sessions.get(id).unwrap().state, SessionState::Done, "{}", id);
+    }
+    // Admission order interleaves the users instead of draining
+    // alice's FIFO burst first: no run of 3+ same-user admissions, and
+    // bob's first admission comes before alice's last.
+    let admits: Vec<String> = p
+        .events
+        .bus()
+        .read_since(0, 0, &EventFilter::default().with_kind("admission"))
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::AdmissionDecided { decision, user } if decision == "admit" => {
+                Some(user.clone())
+            }
+            _ => None,
+        })
+        .collect();
+    assert_eq!(admits.len(), 8, "{:?}", admits);
+    let mut run = 1;
+    for w in admits.windows(2) {
+        run = if w[0] == w[1] { run + 1 } else { 1 };
+        assert!(run <= 2, "fair share must interleave, got {:?}", admits);
+    }
+    let bob_first = admits.iter().position(|u| u == "bob").unwrap();
+    let alice_last = admits.iter().rposition(|u| u == "alice").unwrap();
+    assert!(bob_first < alice_last, "{:?}", admits);
+}
+
+#[test]
+fn quota_verbs_round_trip_through_dispatch() {
+    let Some(p) = platform_with(3, 4) else { return };
+    let s = PlatformService::new(p);
+    // set_quota acks and the report reflects it.
+    let resp = s.dispatch(ApiRequest::SetQuota {
+        user: "kim".into(),
+        max_concurrent: Some(2),
+        max_gpus: Some(4),
+        gpu_second_budget: Some(9.5),
+        weight: Some(3),
+        class: Some("high".into()),
+    });
+    assert!(matches!(resp, ApiResponse::Ack { .. }), "{:?}", resp);
+    let tenants = match s.dispatch(ApiRequest::TenantReport) {
+        ApiResponse::Tenants { tenants } => tenants,
+        other => panic!("{:?}", other),
+    };
+    let kim = tenants.iter().find(|t| t.user == "kim").expect("kim listed");
+    assert_eq!(kim.max_concurrent, 2);
+    assert_eq!(kim.max_gpus, 4);
+    assert_eq!(kim.gpu_second_budget, 9.5);
+    assert_eq!(kim.weight, 3);
+    assert_eq!(kim.class, "high");
+
+    // Partial update: only the named field changes.
+    let resp = s.dispatch(ApiRequest::SetQuota {
+        user: "kim".into(),
+        max_concurrent: None,
+        max_gpus: Some(8),
+        gpu_second_budget: None,
+        weight: None,
+        class: None,
+    });
+    assert!(matches!(resp, ApiResponse::Ack { .. }), "{:?}", resp);
+    let q = s.platform().tenancy.registry.quota_of("kim");
+    assert_eq!(q.max_gpus, 8);
+    assert_eq!(q.max_concurrent, 2);
+
+    // Unknown class and empty user are invalid_argument.
+    for bad in [
+        ApiRequest::SetQuota {
+            user: "kim".into(),
+            max_concurrent: None,
+            max_gpus: None,
+            gpu_second_budget: None,
+            weight: None,
+            class: Some("frobnicate".into()),
+        },
+        ApiRequest::SetQuota {
+            user: String::new(),
+            max_concurrent: None,
+            max_gpus: None,
+            gpu_second_budget: None,
+            weight: None,
+            class: None,
+        },
+    ] {
+        match s.dispatch(bad) {
+            ApiResponse::Error { error } => {
+                assert_eq!(error.code, nsml::api::ErrorCode::InvalidArgument)
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    // The mutation is audited; the query is not.
+    let audit: Vec<String> = s
+        .platform()
+        .events
+        .query(Some("api"), nsml::events::Level::Info)
+        .iter()
+        .map(|e| e.message())
+        .collect();
+    assert!(audit.iter().any(|m| m.contains("dispatch set_quota user=kim")), "{:?}", audit);
+    assert!(!audit.iter().any(|m| m.contains("tenant_report")), "{:?}", audit);
+}
+
+#[test]
+fn report_tracks_usage_and_queue_depth() {
+    let Some(p) = platform_with(1, 1) else { return };
+    let s = PlatformService::new(p);
+    let resp = s.dispatch(ApiRequest::Run(nsml::api::RunParams::new("usr", "mnist")));
+    assert!(!resp.is_error(), "{:?}", resp);
+    // A second submission waits behind the saturated single GPU.
+    let resp = s.dispatch(ApiRequest::Run(nsml::api::RunParams::new("usr", "mnist")));
+    assert!(!resp.is_error(), "{:?}", resp);
+    let tenants = match s.dispatch(ApiRequest::TenantReport) {
+        ApiResponse::Tenants { tenants } => tenants,
+        other => panic!("{:?}", other),
+    };
+    let usr = tenants.iter().find(|t| t.user == "usr").unwrap();
+    assert_eq!(usr.active_sessions, 1);
+    assert_eq!(usr.gpus_in_use, 1);
+    assert_eq!(usr.waiting, 1);
+
+    match s.dispatch(ApiRequest::RunToCompletion { chunk: 25, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("{:?}", other),
+    }
+    let tenants = match s.dispatch(ApiRequest::TenantReport) {
+        ApiResponse::Tenants { tenants } => tenants,
+        other => panic!("{:?}", other),
+    };
+    let usr = tenants.iter().find(|t| t.user == "usr").unwrap();
+    assert_eq!(usr.active_sessions, 0);
+    assert_eq!(usr.waiting, 0);
+    assert!(usr.gpu_seconds_used > 0.0, "virtual GPU-seconds accounted");
+}
+
+#[test]
+fn board_filters_by_user_with_global_ranks() {
+    let Some(p) = platform_with(3, 4) else { return };
+    let s = PlatformService::new(p);
+    for (user, seed) in [("u1", 0u64), ("u2", 1), ("u1", 2)] {
+        let mut params = nsml::api::RunParams::new(user, "mnist");
+        params.total_steps = 16;
+        params.eval_every = 8;
+        params.checkpoint_every = 8;
+        params.seed = seed;
+        assert!(!s.dispatch(ApiRequest::Run(params)).is_error());
+    }
+    match s.dispatch(ApiRequest::RunToCompletion { chunk: 8, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("{:?}", other),
+    }
+    let all = match s.dispatch(ApiRequest::Board { dataset: "mnist".into(), limit: 10, user: None })
+    {
+        ApiResponse::Board { rows, .. } => rows,
+        other => panic!("{:?}", other),
+    };
+    assert_eq!(all.len(), 3);
+    let u1 = match s.dispatch(ApiRequest::Board {
+        dataset: "mnist".into(),
+        limit: 10,
+        user: Some("u1".into()),
+    }) {
+        ApiResponse::Board { rows, .. } => rows,
+        other => panic!("{:?}", other),
+    };
+    assert_eq!(u1.len(), 2);
+    assert!(u1.iter().all(|r| r.user == "u1"), "{:?}", u1);
+    // Filtered rows keep their global ranks.
+    for row in &u1 {
+        let global = all.iter().find(|r| r.session == row.session).unwrap();
+        assert_eq!(row.rank, global.rank, "{:?}", row);
+    }
+    // An unknown user filters to an empty page, not an error.
+    match s.dispatch(ApiRequest::Board {
+        dataset: "mnist".into(),
+        limit: 10,
+        user: Some("nobody".into()),
+    }) {
+        ApiResponse::Board { rows, .. } => assert!(rows.is_empty()),
+        other => panic!("{:?}", other),
+    }
+}
+
+#[test]
+fn disabled_tenancy_bypasses_admission() {
+    let Some(art) = artifacts() else { return };
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = art;
+    cfg.tenancy = false;
+    let p = NsmlPlatform::new(cfg).unwrap();
+    // Even a quota'd user goes straight to the scheduler.
+    p.tenancy.registry.update_quota("free", |q| q.max_concurrent = 1);
+    let a = p.run("free", "mnist", quick(12, 0)).unwrap();
+    let b = p.run("free", "mnist", quick(12, 1)).unwrap();
+    assert!(p.sessions.get(&a).unwrap().node.is_some());
+    assert!(p.sessions.get(&b).unwrap().node.is_some(), "no admission gate when disabled");
+    assert!(p.tenancy.admission.is_empty());
+    p.run_to_completion(6, 10_000).unwrap();
+}

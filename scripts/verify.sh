@@ -1,11 +1,13 @@
 #!/usr/bin/env bash
-# Tier-1 verification: build, test, and format-check the Rust platform.
+# Tier-1 verification: build, test, example-smoke, and format-check
+# the Rust platform.
 #
 # Usage: bash scripts/verify.sh
 #
 # Runs from rust/ so cargo picks up the crate there; artifacts must be
-# built first (`make artifacts`) for the platform-level tests to run —
-# without them those tests skip and only the pure-logic tests gate.
+# built first (`make artifacts`) for the platform-level tests and the
+# quickstart example smoke to run — without them those tests skip, the
+# example step is skipped, and only the pure-logic tests gate.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
@@ -18,6 +20,13 @@ cargo build --release --examples
 
 echo "== cargo test -q =="
 cargo test -q
+
+echo "== example smoke: cargo run --release --example quickstart =="
+if [ -f artifacts/manifest.json ]; then
+    cargo run --release --example quickstart
+else
+    echo "artifacts not built (rust/artifacts/manifest.json missing); skipping example smoke"
+fi
 
 echo "== cargo clippy --all-targets -- -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
