@@ -1,0 +1,172 @@
+//! Durability headline: WAL-mode per-mutation cost vs the legacy
+//! per-mutation full-state dump, and its scaling as the world grows.
+//!
+//! Before the durability subsystem, crash safety meant rewriting all
+//! of `state.json` on every mutation — O(sessions) per save. WAL mode
+//! appends one length-prefixed record per durable event and amortizes
+//! the full dump over `snapshot_every` records, so the per-mutation
+//! cost is dominated by one small write regardless of store size.
+//!
+//! Acceptance bars (skipped in smoke mode):
+//! * WAL-mode per-mutation cost at 10x the sessions is ≤1.5x the cost
+//!   at 1x — durability no longer scales with the world.
+//! * WAL-mode throughput is ≥5x the per-mutation full-dump baseline
+//!   at the 1x world.
+//!
+//! Run: `cargo bench --bench bench_persist`
+//! Smoke: `BENCH_SMOKE=1 cargo bench --bench bench_persist`
+
+use nsml::api::persist;
+use nsml::durability::Wal;
+use nsml::events::{Event, EventKind, Level};
+use nsml::leaderboard::{Leaderboard, Submission};
+use nsml::session::{SessionRecord, SessionSpec, SessionStore};
+use nsml::storage::{CheckpointStore, ObjectStore};
+use nsml::tenancy::{TenantQuota, TenantRegistry};
+use nsml::util::bench::{smoke, Bench};
+use std::path::PathBuf;
+
+/// Matches the `[durability] fsync_every` default.
+const FSYNC_EVERY: u64 = 64;
+
+fn tmp(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("nsml-bench-persist-{}-{}", tag, std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// A populated world of `n` mid-flight sessions with metric history —
+/// the thing `persist::save` has to rewrite wholesale every time.
+fn world(n: usize) -> (SessionStore, Leaderboard, CheckpointStore, TenantRegistry) {
+    let sessions = SessionStore::new();
+    let lb = Leaderboard::new();
+    lb.ensure_board("mnist", "accuracy", false);
+    let ckpts = CheckpointStore::new(ObjectStore::memory());
+    let tenants = TenantRegistry::new(TenantQuota::default());
+    for i in 0..n {
+        let user = format!("user{}", i % 8);
+        let id = format!("{}/mnist/{}", user, i);
+        let mut spec = SessionSpec::new(&id, &user, "mnist", "mnist_mlp");
+        spec.total_steps = 100;
+        let mut rec = SessionRecord::new(spec, i as u64);
+        rec.steps_done = 50;
+        rec.best_metric = Some(0.5 + i as f64 * 1e-6);
+        for step in (10..=50).step_by(10) {
+            rec.metrics.log(step, "train_loss", 1.0 / step as f64);
+            rec.metrics.log(step, "accuracy", step as f64 / 100.0);
+        }
+        sessions.insert(rec);
+        lb.submit(
+            "mnist",
+            Submission {
+                session: id,
+                user,
+                model: "mnist_mlp".into(),
+                metric_name: "accuracy".into(),
+                value: 0.5 + i as f64 * 1e-6,
+                step: 50,
+                at_ms: i as u64,
+            },
+        );
+    }
+    (sessions, lb, ckpts, tenants)
+}
+
+fn event(seq: u64) -> Event {
+    Event {
+        seq,
+        at_ms: seq * 10,
+        level: Level::Info,
+        source: "session".into(),
+        subject: "user0/mnist/0".into(),
+        kind: EventKind::MetricReported { name: "accuracy".into(), step: seq, value: 0.9 },
+    }
+}
+
+fn main() {
+    let (n, burst, snapshot_every): (usize, u64, u64) =
+        if smoke() { (40, 64, 64) } else { (400, 512, 512) };
+    let mut bench = Bench::new("persist");
+    println!(
+        "persist bench: {} sessions (x1), {} (x10), {}-mutation bursts, snapshot every {}{}",
+        n,
+        n * 10,
+        burst,
+        snapshot_every,
+        if smoke() { " [smoke]" } else { "" }
+    );
+
+    // Baseline: the legacy discipline — one full-state dump per
+    // mutation, at the 1x world.
+    let (sessions, lb, ckpts, tenants) = world(n);
+    let dump_dir = tmp("dump");
+    let dump_burst = 8u64;
+    let save_label = format!("full dump per mutation at {}", n);
+    bench.run_with_units(&save_label, dump_burst as f64, || {
+        for _ in 0..dump_burst {
+            persist::save(&dump_dir, &sessions, &lb, &ckpts, &tenants).unwrap();
+        }
+    });
+
+    // WAL mode at the same world: one record append per mutation, one
+    // full dump amortized over `snapshot_every` records (then the
+    // segment rotates — exactly the facade's snapshot cycle).
+    let mut run_wal_mode = |label: &str,
+                            bench: &mut Bench,
+                            sessions: &SessionStore,
+                            lb: &Leaderboard,
+                            ckpts: &CheckpointStore,
+                            tenants: &TenantRegistry| {
+        let dir = tmp(&label.replace(' ', "-"));
+        let (mut wal, _) = Wal::open(dir.join("wal.log"), FSYNC_EVERY).unwrap();
+        let mut seq = 0u64;
+        bench.run_with_units(label, burst as f64, || {
+            for _ in 0..burst {
+                wal.append(&event(seq)).unwrap();
+                seq += 1;
+                if seq % snapshot_every == 0 {
+                    persist::save(&dir, sessions, lb, ckpts, tenants).unwrap();
+                    wal.rotate().unwrap();
+                }
+            }
+        });
+        let _ = std::fs::remove_dir_all(&dir);
+    };
+
+    let wal_1x = format!("wal mode per mutation at {}", n);
+    run_wal_mode(&wal_1x, &mut bench, &sessions, &lb, &ckpts, &tenants);
+
+    let (sessions10, lb10, ckpts10, tenants10) = world(n * 10);
+    let wal_10x = format!("wal mode per mutation at {}", n * 10);
+    run_wal_mode(&wal_10x, &mut bench, &sessions10, &lb10, &ckpts10, &tenants10);
+
+    bench.finish();
+    let _ = std::fs::remove_dir_all(&dump_dir);
+
+    let per_unit = |label: &str, units: f64| bench.result(label).unwrap().mean_ms() / units;
+    let dump_ms = per_unit(&save_label, dump_burst as f64);
+    let wal1_ms = per_unit(&wal_1x, burst as f64);
+    let wal10_ms = per_unit(&wal_10x, burst as f64);
+    let growth = wal10_ms / wal1_ms;
+    let speedup = dump_ms / wal1_ms;
+    println!(
+        "per-mutation: full dump {:.4}ms | wal x1 {:.4}ms | wal x10 {:.4}ms (growth {:.2}x, speedup {:.1}x)",
+        dump_ms, wal1_ms, wal10_ms, growth, speedup
+    );
+    if smoke() {
+        println!("smoke mode: skipping the scaling/speedup assertions");
+    } else {
+        assert!(
+            growth <= 1.5,
+            "wal-mode per-mutation cost grew {:.2}x when sessions grew 10x (bar: <=1.5x)",
+            growth
+        );
+        assert!(
+            speedup >= 5.0,
+            "wal mode is only {:.2}x faster than per-mutation full dumps (bar: >=5x)",
+            speedup
+        );
+        println!("OK: <=1.5x scaling and >=5x throughput bars met");
+    }
+}

@@ -51,6 +51,20 @@ pub struct PlatformConfig {
     /// Per-user weight/class overrides from `[tenancy] users =
     /// "name:weight:class,…"`.
     pub tenant_users: Vec<TenantSpec>,
+    /// Event-sourced durability (`[durability] enabled`): a bus-fed
+    /// write-ahead log plus periodic compacted snapshots, replacing
+    /// the per-mutation full `state.json` rewrite. Only effective when
+    /// `state_dir` is set.
+    pub durability: bool,
+    /// Fsync the WAL once per N appended records
+    /// (`[durability] fsync_every`; 1 = every record).
+    pub wal_fsync_every: u64,
+    /// Take a compacted snapshot and rotate the WAL segment every N
+    /// appended records (`[durability] snapshot_every`).
+    pub snapshot_every: u64,
+    /// Sweep unreferenced checkpoint/codepack objects after each
+    /// snapshot (`[durability] gc`); `nsml gc` forces a sweep.
+    pub gc: bool,
 }
 
 impl Default for PlatformConfig {
@@ -75,6 +89,10 @@ impl Default for PlatformConfig {
             tenancy: true,
             tenant_quota: TenantQuota::default(),
             tenant_users: Vec::new(),
+            durability: true,
+            wal_fsync_every: 64,
+            snapshot_every: 512,
+            gc: true,
         }
     }
 }
@@ -143,6 +161,14 @@ impl PlatformConfig {
                 },
             },
             tenant_users: parse_tenant_users(&cfg.str_or("tenancy", "users", ""))?,
+            durability: cfg.bool_or("durability", "enabled", dflt.durability),
+            wal_fsync_every: cfg
+                .int_or("durability", "fsync_every", dflt.wal_fsync_every as i64)
+                .max(1) as u64,
+            snapshot_every: cfg
+                .int_or("durability", "snapshot_every", dflt.snapshot_every as i64)
+                .max(1) as u64,
+            gc: cfg.bool_or("durability", "gc", dflt.gc),
         })
     }
 }
@@ -216,6 +242,11 @@ gpu_second_budget = 120.5
 weight = 2
 class = "low"
 users = "alice:4:high, bob:2, carol"
+[durability]
+enabled = false
+fsync_every = 8
+snapshot_every = 100
+gc = false
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -246,6 +277,10 @@ users = "alice:4:high, bob:2, carol"
                 TenantSpec { user: "carol".into(), weight: 1, class: PriorityClass::Normal },
             ]
         );
+        assert!(!c.durability);
+        assert_eq!(c.wal_fsync_every, 8);
+        assert_eq!(c.snapshot_every, 100);
+        assert!(!c.gc);
     }
 
     #[test]
@@ -276,5 +311,10 @@ users = "alice:4:high, bob:2, carol"
         assert_eq!(c.tenant_quota, TenantQuota::default());
         assert!(c.tenant_users.is_empty());
         assert_eq!(c.skip_window, crate::scheduler::DEFAULT_SKIP_WINDOW);
+        // Durability defaults: on, batched fsync, periodic snapshots.
+        assert!(c.durability);
+        assert_eq!(c.wal_fsync_every, 64);
+        assert_eq!(c.snapshot_every, 512);
+        assert!(c.gc);
     }
 }

@@ -46,6 +46,20 @@
 //! `GET /api/v1/tenants` (web) and `nsml tenants` / `nsml quota`
 //! (CLI) expose and edit the state.
 //!
+//! Durability ([`crate::durability`], `[durability]` config): a
+//! dedicated bus subscription feeds an append-only fsync-batched WAL,
+//! so every state transition, metric, checkpoint and admission
+//! decision survives a crash without the old per-mutation
+//! `state.json` rewrite. Every `snapshot_every` records the facade
+//! takes a compacted snapshot (`persist::save` + usage-ledger
+//! metadata) and rotates the WAL; startup recovery replays the WAL
+//! tail through the same consumer paths ([`durability::replay`]),
+//! re-indexes post-snapshot checkpoints from the object store, and
+//! requeues sessions that were in flight. [`NsmlPlatform::gc`] runs
+//! mark-and-sweep over the object store after each snapshot (and via
+//! `nsml gc`), attributing per-tenant storage bytes. Status surfaces:
+//! `durability_status` (wire), `GET /api/v1/durability` (web).
+//!
 //! Concurrency model: platform control state (cluster, scheduler,
 //! sessions, leaderboard) is thread-safe, and model *execution* runs on
 //! the [`crate::executor`] worker pool — each worker thread owns its
@@ -74,14 +88,15 @@ pub use config::PlatformConfig;
 pub use service::{service_channel, PlatformService, ServiceCall, ServiceHandle};
 pub use trial::PlatformTrialRunner;
 pub use wire::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ErrorCode, ExecutorStats,
-    NodeStatusView, RunParams, SessionView, TenantView, TrialSpec, WorkerStatView, ALL_KINDS,
-    ALL_VERBS, API_VERSION,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ErrorCode,
+    ExecutorStats, NodeStatusView, RunParams, SessionView, TenantView, TrialSpec, WorkerStatView,
+    ALL_KINDS, ALL_VERBS, API_VERSION,
 };
 
 use crate::cluster::Cluster;
 use crate::container::{ContainerManager, ImageSpec};
 use crate::data::{dataset_for, model_for_dataset, register_all};
+use crate::durability::{self, Durability, SnapshotMeta, WalScan};
 use crate::events::{EventKind, EventLog, Level, Subscription};
 use crate::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
 use crate::leaderboard::{Leaderboard, Submission};
@@ -156,6 +171,9 @@ pub struct NsmlPlatform {
     /// submissions, `util`/`worker` sample events become monitor
     /// records. Everything those views show was first a bus event.
     consumers: std::sync::Mutex<Subscription>,
+    /// Event-sourced durability: WAL + snapshots + GC. `None` when no
+    /// state dir is configured or `[durability] enabled = false`.
+    durability: Option<Durability>,
 }
 
 impl NsmlPlatform {
@@ -172,6 +190,23 @@ impl NsmlPlatform {
         // Subscribe the derived-view consumers before any subsystem can
         // publish, so no completion or sample event is ever missed.
         let consumers = std::sync::Mutex::new(events.bus().subscribe());
+        // The WAL subscription has the same requirement — and opening
+        // the log now also hands us last run's tail for recovery.
+        let mut recovery = None;
+        let durability = match &config.state_dir {
+            Some(dir) if config.durability => {
+                let (d, scan, meta) = Durability::open(
+                    dir,
+                    events.bus().subscribe(),
+                    config.wal_fsync_every,
+                    config.snapshot_every,
+                    config.gc,
+                )?;
+                recovery = Some((scan, meta));
+                Some(d)
+            }
+            _ => None,
+        };
         let cluster = Cluster::homogeneous(
             clock.clone(),
             events.clone(),
@@ -225,11 +260,12 @@ impl NsmlPlatform {
             engine,
             executor,
             consumers,
+            durability,
             config,
         };
         platform.bootstrap()?;
         if platform.config.state_dir.is_some() {
-            platform.load_state()?;
+            platform.load_state(recovery)?;
         }
         Ok(platform)
     }
@@ -622,7 +658,34 @@ impl NsmlPlatform {
         //    leaderboard, samples reach the monitor — via the bus, not
         //    direct calls.
         self.pump_consumers();
+        // 7. …and the durability consumer: durable events reach the
+        //    WAL, and every `snapshot_every` records the world dump is
+        //    compacted and the log rotates.
+        self.pump_durability()?;
         Ok(progressed)
+    }
+
+    /// Drain the WAL subscription into the log; take a snapshot when
+    /// the cadence says so — or immediately when the subscription
+    /// lagged (ring overflow), because a full snapshot is the only way
+    /// to close the resulting WAL gap losslessly.
+    fn pump_durability(&self) -> Result<()> {
+        let Some(d) = &self.durability else { return Ok(()) };
+        let out = d.pump()?;
+        if out.overflowed {
+            self.events.warn(
+                "durability",
+                "",
+                format!(
+                    "WAL subscription lag: {} events aged out unlogged; snapshotting to close the gap",
+                    d.stats().wal_dropped
+                ),
+            );
+        }
+        if out.overflowed || out.snapshot_due {
+            self.snapshot_now()?;
+        }
+        Ok(())
     }
 
     /// Drain the consumer subscription into the derived views. This is
@@ -1049,42 +1112,234 @@ impl NsmlPlatform {
     // Persistence
     // ------------------------------------------------------------------
 
+    /// Persist the world. With durability on this is snapshot-on-demand
+    /// (drain the consumers, log the tail, compact, rotate) — the
+    /// per-mutation full rewrite is gone. With it off, the plain
+    /// `persist::save` of old.
     pub fn save_state(&self) -> Result<()> {
-        if let Some(dir) = &self.config.state_dir {
+        let Some(dir) = &self.config.state_dir else { return Ok(()) };
+        if self.durability.is_some() {
+            self.pump_consumers();
+            if let Some(d) = &self.durability {
+                d.pump()?;
+            }
+            self.snapshot_now()
+        } else {
             persist::save(
                 dir,
                 &self.sessions,
                 &self.leaderboard,
                 &self.checkpoints,
                 &self.tenancy.registry,
-            )?;
+            )
+        }
+    }
+
+    /// Compact: world dump + snapshot metadata (coverage bound + usage
+    /// ledger), then rotate the WAL segment the dump subsumes. GC runs
+    /// after each snapshot when `[durability] gc` is on.
+    fn snapshot_now(&self) -> Result<()> {
+        let (Some(dir), Some(d)) = (self.config.state_dir.as_ref(), self.durability.as_ref())
+        else {
+            return Ok(());
+        };
+        persist::save(dir, &self.sessions, &self.leaderboard, &self.checkpoints, &self.tenancy.registry)?;
+        let head = self.events.bus().head();
+        if head == 0 {
+            // Nothing ever published: no coverage bound to record, and
+            // writing `last_seq = 0` now would wrongly subsume the
+            // first real event (seq 0) on the next recovery.
+            return Ok(());
+        }
+        let (closed_usage, open_usage) = self.tenancy.accountant.dump();
+        let meta = SnapshotMeta {
+            last_seq: head - 1,
+            at_ms: self.clock.now_ms(),
+            closed_usage,
+            open_usage,
+        };
+        d.mark_snapshot(&meta)?;
+        if d.gc_enabled() {
+            if let Err(e) = self.gc() {
+                self.events.warn("durability", "", format!("post-snapshot gc failed: {:#}", e));
+            }
         }
         Ok(())
     }
 
-    fn load_state(&self) -> Result<()> {
-        if let Some(dir) = &self.config.state_dir {
-            persist::load(
-                dir,
-                &self.sessions,
-                &self.leaderboard,
-                &self.checkpoints,
-                &self.tenancy.registry,
-            )?;
-            // Tenancy views must survive the restart too: every
-            // restored session's owner is a known tenant, and
-            // non-terminal sessions re-register their accounting
-            // metadata so a later resume is billed to the right user.
-            // (Accrued GPU-seconds themselves are process-local —
-            // budgets gate live usage, not history across restarts.)
-            for rec in self.sessions.list() {
-                self.tenancy.registry.note_user(&rec.spec.user);
-                if !rec.state.is_terminal() {
-                    self.tenancy.accountant.register(&rec.spec.id, &rec.spec.user, rec.spec.gpus);
-                }
+    /// Mark-and-sweep the object store: checkpoint chains, dataset
+    /// manifests and code bundles stay, orphans go, and each tenant's
+    /// checkpoint bytes are written to the registry. Callable any time
+    /// (`nsml gc`); also runs after each snapshot when configured.
+    pub fn gc(&self) -> Result<durability::GcReport> {
+        let owner = |session: &str| -> Option<String> {
+            self.sessions
+                .get(session)
+                .map(|r| r.spec.user)
+                // Session ids are `user/dataset/N`, so even a session
+                // whose record predates the store still attributes.
+                .or_else(|| session.split('/').next().map(str::to_string))
+        };
+        let report =
+            durability::gc::sweep(&self.objects, &self.checkpoints, &self.datasets, &owner, &self.tenancy.registry);
+        self.events.info(
+            "durability",
+            "",
+            format!(
+                "gc: swept {} objects ({} B), {} live ({} B)",
+                report.swept_objects, report.swept_bytes, report.live_objects, report.live_bytes
+            ),
+        );
+        if let Some(d) = &self.durability {
+            d.note_gc(report.clone());
+        }
+        Ok(report)
+    }
+
+    /// Durability counters for the status surfaces; `None` when the
+    /// subsystem is off.
+    pub fn durability_status(&self) -> Option<durability::DurabilityStats> {
+        self.durability.as_ref().map(|d| d.stats())
+    }
+
+    /// Events the derived-view consumer subscription has lost to ring
+    /// overflow (each loss triggered a reconcile pass).
+    pub fn consumer_lag(&self) -> u64 {
+        self.consumers.lock().unwrap().dropped()
+    }
+
+    /// Restore persisted state, then (durability on) recover the WAL
+    /// tail: restore the usage ledger from the snapshot metadata,
+    /// re-index post-snapshot checkpoints, replay logged events through
+    /// the live consumer paths, and requeue sessions that were in
+    /// flight when the last process died.
+    fn load_state(&self, recovery: Option<(WalScan, Option<SnapshotMeta>)>) -> Result<()> {
+        let Some(dir) = &self.config.state_dir else { return Ok(()) };
+        persist::load(
+            dir,
+            &self.sessions,
+            &self.leaderboard,
+            &self.checkpoints,
+            &self.tenancy.registry,
+        )?;
+        // Tenancy views must survive the restart too: every restored
+        // session's owner is a known tenant, and non-terminal sessions
+        // re-register their accounting metadata so a later resume is
+        // billed to the right user.
+        for rec in self.sessions.list() {
+            self.tenancy.registry.note_user(&rec.spec.user);
+            if !rec.state.is_terminal() {
+                self.tenancy.accountant.register(&rec.spec.id, &rec.spec.user, rec.spec.gpus);
             }
         }
-        Ok(())
+        let Some((scan, meta)) = recovery else { return Ok(()) };
+        if scan.truncated_bytes > 0 {
+            self.events.warn(
+                "durability",
+                "",
+                format!("WAL torn tail: {} bytes truncated (crash mid-append)", scan.truncated_bytes),
+            );
+        }
+        // The accrued GPU-second ledger lives only in the snapshot
+        // metadata once the pre-snapshot WAL rotates away.
+        if let Some(m) = &meta {
+            self.tenancy.accountant.restore(&m.closed_usage, &m.open_usage);
+        }
+        // Checkpoints saved after the snapshot are missing from the
+        // persisted index; their metadata records are in the object
+        // store by design.
+        let reindexed = durability::rebuild_checkpoint_index(&self.objects, &self.checkpoints);
+        // Replay the tail through the same consumer paths the live
+        // platform pumps.
+        let resolve = |model: &str| -> Option<(String, bool)> {
+            self.engine
+                .manifest()
+                .model(model)
+                .ok()
+                .map(|m| (m.metric_name.clone(), m.lower_is_better))
+        };
+        let stats = durability::replay(
+            &scan.events,
+            meta.as_ref().map(|m| m.last_seq),
+            &self.sessions,
+            &self.leaderboard,
+            &self.tenancy.accountant,
+            &resolve,
+        );
+        // Keep virtual time monotonic across the restart: recovered
+        // records carry timestamps the new clock must not run behind.
+        let recovered_ms = scan
+            .events
+            .iter()
+            .map(|e| e.at_ms)
+            .chain(meta.as_ref().map(|m| m.at_ms))
+            .max()
+            .unwrap_or(0);
+        let now = self.clock.now_ms();
+        if recovered_ms > now {
+            self.sim.advance(recovered_ms - now);
+        }
+        if stats.applied > 0 || reindexed > 0 {
+            self.events.info(
+                "durability",
+                "",
+                format!(
+                    "recovered: {} WAL events replayed ({} snapshot-covered), {} completions resubmitted, {} checkpoints re-indexed",
+                    stats.applied, stats.skipped, stats.completions, reindexed
+                ),
+            );
+        }
+        // Sessions that were in flight when the process died go back
+        // through admission; ones with a checkpoint auto-resume.
+        // (Paused stays paused — that was a user decision.)
+        let now = self.clock.now_ms();
+        for rec in self.sessions.list() {
+            if rec.state.is_terminal() || rec.state == SessionState::Paused {
+                continue;
+            }
+            // The run itself is gone; settle any interval replay opened.
+            self.tenancy.accountant.close_if_open(&rec.spec.id, now);
+            let prev = Some((rec.state, rec.steps_done));
+            self.sessions.update(&rec.spec.id, |r| {
+                r.state = SessionState::Queued;
+                r.node = None;
+                r.container = None;
+            });
+            if rec.state != SessionState::Queued {
+                self.publish_transition(&rec.spec.id, prev, "queued", Level::Warn);
+            }
+            let job = JobSpec {
+                id: rec.spec.id.clone(),
+                user: rec.spec.user.clone(),
+                dataset: rec.spec.dataset.clone(),
+                req: crate::cluster::ResourceReq::gpus(rec.spec.gpus),
+                priority: rec.spec.priority,
+            };
+            let resume = self.checkpoints.latest(&rec.spec.id).is_some();
+            if self.config.tenancy {
+                self.tenancy.admission.enqueue(PendingAdmission { job, resume });
+            } else if let SubmitOutcome::PlacedImmediately(node) = self.master.submit(job) {
+                self.prepare_and_start(&rec.spec.id, node)?;
+            }
+        }
+        self.pump_admission()?;
+        // Baseline snapshot: the new process's bus numbers events from
+        // seq 0 again, so the replayed metadata and WAL tail (old seq
+        // space) must be retired before new records land in the log —
+        // mixing the two would confuse the next recovery's seq gate
+        // (and an applied-but-unrotated tail would replay twice).
+        if scan.events.is_empty() && meta.is_none() {
+            return Ok(()); // fresh durability dir — nothing to retire
+        }
+        if let Some(d) = &self.durability {
+            d.pump()?;
+        }
+        if self.events.bus().head() == 0 {
+            // Nothing published this boot yet; the baseline needs at
+            // least one event so it can record a coverage bound.
+            self.events.info("durability", "", "recovery baseline");
+        }
+        self.snapshot_now()
     }
 }
 

@@ -149,7 +149,11 @@ pub fn save(
         })
         .collect();
     doc.set("quotas", Json::Arr(quotas));
-    std::fs::write(dir.join("state.json"), doc.to_pretty())?;
+    // Temp file + atomic rename: a crash mid-save leaves either the
+    // old state.json or the new one on disk, never a torn file.
+    let tmp = dir.join("state.json.tmp");
+    std::fs::write(&tmp, doc.to_pretty())?;
+    std::fs::rename(&tmp, dir.join("state.json"))?;
     Ok(())
 }
 

@@ -22,8 +22,8 @@
 //!   fan the work out across the executor pool before replying.
 
 use super::wire::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ExecutorStats, NodeStatusView,
-    SessionView, TenantView, WorkerStatView,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ExecutorStats,
+    NodeStatusView, SessionView, TenantView, WorkerStatView,
 };
 use super::{NsmlPlatform, RunOpts};
 use crate::cluster::NodeId;
@@ -193,6 +193,9 @@ impl PlatformService {
             }
             ApiRequest::ClusterStatus => ApiResponse::Cluster { cluster: self.cluster_view() },
             ApiRequest::ExecutorStatus => ApiResponse::Executor { executor: self.executor_view() },
+            ApiRequest::DurabilityStatus => {
+                ApiResponse::Durability { durability: self.durability_view() }
+            }
             ApiRequest::TenantReport => ApiResponse::Tenants { tenants: self.tenant_views() },
             ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
                 if user.is_empty() {
@@ -410,6 +413,37 @@ impl PlatformService {
         }
     }
 
+    /// WAL/snapshot/GC counters (the `durability_status` verb and
+    /// `GET /api/v1/durability`). When the subsystem is off (no
+    /// `state_dir` or `[durability] enabled = false`) every counter
+    /// reads zero and `enabled` is false.
+    fn durability_view(&self) -> DurabilityView {
+        let Some(stats) = self.platform.durability_status() else {
+            return DurabilityView {
+                consumer_dropped: self.platform.consumer_lag(),
+                ..DurabilityView::default()
+            };
+        };
+        let gc = stats.last_gc.as_ref();
+        DurabilityView {
+            enabled: true,
+            wal_records: stats.wal_records,
+            wal_bytes: stats.wal_bytes,
+            wal_last_seq: stats.wal_last_seq,
+            records_since_snapshot: stats.records_since_snapshot,
+            snapshot_every: self.platform.config.snapshot_every,
+            snapshots: stats.snapshots,
+            last_snapshot_seq: stats.last_snapshot_seq,
+            wal_dropped: stats.wal_dropped,
+            consumer_dropped: self.platform.consumer_lag(),
+            gc_enabled: self.platform.config.gc,
+            gc_live_objects: gc.map(|g| g.live_objects).unwrap_or(0),
+            gc_live_bytes: gc.map(|g| g.live_bytes).unwrap_or(0),
+            gc_swept_objects: gc.map(|g| g.swept_objects).unwrap_or(0),
+            gc_swept_bytes: gc.map(|g| g.swept_bytes).unwrap_or(0),
+        }
+    }
+
     /// One fair-share row per known user (the `tenant_report` verb).
     fn tenant_views(&self) -> Vec<TenantView> {
         let p = &self.platform;
@@ -557,6 +591,20 @@ mod tests {
                 assert_eq!(executor.live_sessions, 0);
                 assert_eq!(executor.queue_depth, 0);
                 assert_eq!(executor.total_steals, 0);
+            }
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn durability_status_reads_disabled_without_state_dir() {
+        let Some(s) = service() else { return };
+        match s.dispatch(ApiRequest::DurabilityStatus) {
+            ApiResponse::Durability { durability } => {
+                assert!(!durability.enabled, "test_default has no state_dir");
+                assert_eq!(durability.wal_records, 0);
+                assert_eq!(durability.snapshots, 0);
+                assert!(!durability.gc_enabled);
             }
             other => panic!("{:?}", other),
         }

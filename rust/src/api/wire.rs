@@ -48,6 +48,7 @@ pub const ALL_VERBS: &[&str] = &[
     "submit_trial_batch",
     "tenant_report",
     "set_quota",
+    "durability_status",
 ];
 
 /// Every response kind, in the order of the [`ApiResponse`] variants.
@@ -64,6 +65,7 @@ pub const ALL_KINDS: &[&str] = &[
     "executor",
     "events",
     "tenants",
+    "durability",
     "error",
 ];
 
@@ -348,6 +350,9 @@ pub enum ApiRequest {
         /// Priority class name (`low` | `normal` | `high`).
         class: Option<String>,
     },
+    /// WAL / snapshot / GC counters (`nsml gc --status`,
+    /// `GET /api/v1/durability`).
+    DurabilityStatus,
 }
 
 impl ApiRequest {
@@ -370,6 +375,7 @@ impl ApiRequest {
             ApiRequest::SubmitTrialBatch { .. } => "submit_trial_batch",
             ApiRequest::TenantReport => "tenant_report",
             ApiRequest::SetQuota { .. } => "set_quota",
+            ApiRequest::DurabilityStatus => "durability_status",
         }
     }
 
@@ -384,6 +390,7 @@ impl ApiRequest {
                 | ApiRequest::ExecutorStatus
                 | ApiRequest::EventsSince { .. }
                 | ApiRequest::TenantReport
+                | ApiRequest::DurabilityStatus
                 | ApiRequest::Infer { .. }
         )
     }
@@ -418,7 +425,8 @@ impl ApiRequest {
             ApiRequest::ListSessions
             | ApiRequest::ClusterStatus
             | ApiRequest::ExecutorStatus
-            | ApiRequest::TenantReport => {}
+            | ApiRequest::TenantReport
+            | ApiRequest::DurabilityStatus => {}
             ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
                 args.set("user", user.as_str().into())
                     .set(
@@ -514,6 +522,7 @@ impl ApiRequest {
                 })
             }
             "tenant_report" => Ok(ApiRequest::TenantReport),
+            "durability_status" => Ok(ApiRequest::DurabilityStatus),
             "set_quota" => Ok(ApiRequest::SetQuota {
                 user: need_str(args, "user")?,
                 max_concurrent: opt_u64(args, "max_concurrent")?,
@@ -874,6 +883,88 @@ impl TenantView {
     }
 }
 
+/// Durability-subsystem counters (`durability_status`,
+/// `GET /api/v1/durability`): WAL segment size, snapshot cadence
+/// progress, subscription lag and the latest GC sweep. All zeros with
+/// `enabled = false` when the subsystem is off (no state dir, or
+/// `[durability] enabled = false`).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DurabilityView {
+    pub enabled: bool,
+    /// Records in the current WAL segment (resets on rotation).
+    pub wal_records: u64,
+    /// Bytes in the current WAL segment.
+    pub wal_bytes: u64,
+    /// Bus sequence number of the segment's newest record.
+    pub wal_last_seq: Option<u64>,
+    /// Durable records appended since the last snapshot.
+    pub records_since_snapshot: u64,
+    /// Snapshot cadence (`[durability] snapshot_every`).
+    pub snapshot_every: u64,
+    /// Snapshots taken this process.
+    pub snapshots: u64,
+    /// Coverage bound of the newest snapshot.
+    pub last_snapshot_seq: u64,
+    /// Events the WAL subscription lost to ring overflow (each loss
+    /// triggered an immediate healing snapshot).
+    pub wal_dropped: u64,
+    /// Events the derived-view consumer subscription lost (each loss
+    /// triggered a reconcile pass).
+    pub consumer_dropped: u64,
+    pub gc_enabled: bool,
+    /// Latest sweep's survivors / reclaimed totals (zeros before the
+    /// first sweep).
+    pub gc_live_objects: u64,
+    pub gc_live_bytes: u64,
+    pub gc_swept_objects: u64,
+    pub gc_swept_bytes: u64,
+}
+
+impl DurabilityView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("enabled", self.enabled.into())
+            .set("wal_records", self.wal_records.into())
+            .set("wal_bytes", self.wal_bytes.into())
+            .set(
+                "wal_last_seq",
+                self.wal_last_seq.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null),
+            )
+            .set("records_since_snapshot", self.records_since_snapshot.into())
+            .set("snapshot_every", self.snapshot_every.into())
+            .set("snapshots", self.snapshots.into())
+            .set("last_snapshot_seq", self.last_snapshot_seq.into())
+            .set("wal_dropped", self.wal_dropped.into())
+            .set("consumer_dropped", self.consumer_dropped.into())
+            .set("gc_enabled", self.gc_enabled.into())
+            .set("gc_live_objects", self.gc_live_objects.into())
+            .set("gc_live_bytes", self.gc_live_bytes.into())
+            .set("gc_swept_objects", self.gc_swept_objects.into())
+            .set("gc_swept_bytes", self.gc_swept_bytes.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<DurabilityView, ApiError> {
+        Ok(DurabilityView {
+            enabled: need_bool(j, "enabled")?,
+            wal_records: need_u64(j, "wal_records")?,
+            wal_bytes: need_u64(j, "wal_bytes")?,
+            wal_last_seq: opt_u64(j, "wal_last_seq")?,
+            records_since_snapshot: need_u64(j, "records_since_snapshot")?,
+            snapshot_every: need_u64(j, "snapshot_every")?,
+            snapshots: need_u64(j, "snapshots")?,
+            last_snapshot_seq: need_u64(j, "last_snapshot_seq")?,
+            wal_dropped: need_u64(j, "wal_dropped")?,
+            consumer_dropped: need_u64(j, "consumer_dropped")?,
+            gc_enabled: need_bool(j, "gc_enabled")?,
+            gc_live_objects: need_u64(j, "gc_live_objects")?,
+            gc_live_bytes: need_u64(j, "gc_live_bytes")?,
+            gc_swept_objects: need_u64(j, "gc_swept_objects")?,
+            gc_swept_bytes: need_u64(j, "gc_swept_bytes")?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------
 // Responses
 // ---------------------------------------------------------------------
@@ -903,6 +994,8 @@ pub enum ApiResponse {
     Events { events: Vec<Event>, next: u64, dropped: u64 },
     /// Per-user fair-share report (`tenant_report`).
     Tenants { tenants: Vec<TenantView> },
+    /// Durability counters (`durability_status`).
+    Durability { durability: DurabilityView },
     Error { error: ApiError },
 }
 
@@ -921,6 +1014,7 @@ impl ApiResponse {
             ApiResponse::Executor { .. } => "executor",
             ApiResponse::Events { .. } => "events",
             ApiResponse::Tenants { .. } => "tenants",
+            ApiResponse::Durability { .. } => "durability",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -980,6 +1074,9 @@ impl ApiResponse {
             }
             ApiResponse::Tenants { tenants } => {
                 data.set("tenants", Json::Arr(tenants.iter().map(|t| t.to_json()).collect()));
+            }
+            ApiResponse::Durability { durability } => {
+                data.set("durability", durability.to_json());
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -1047,6 +1144,9 @@ impl ApiResponse {
                     .iter()
                     .map(TenantView::from_json)
                     .collect::<Result<Vec<TenantView>, ApiError>>()?,
+            }),
+            "durability" => Ok(ApiResponse::Durability {
+                durability: DurabilityView::from_json(need(data, "durability")?)?,
             }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
@@ -1257,6 +1357,7 @@ mod tests {
         assert!(!ApiRequest::EventsSince { since: 0, kind: None, subject: None, limit: 10 }
             .is_mutation());
         assert!(!ApiRequest::TenantReport.is_mutation());
+        assert!(!ApiRequest::DurabilityStatus.is_mutation());
         assert!(ApiRequest::SetQuota {
             user: "kim".into(),
             max_concurrent: None,
@@ -1289,6 +1390,36 @@ mod tests {
         let bad = parse(r#"{"user":"kim","weight":"heavy"}"#).unwrap();
         let err = ApiRequest::from_verb_args("set_quota", &bad).unwrap_err();
         assert!(err.message.contains("weight"), "{}", err);
+    }
+
+    #[test]
+    fn durability_view_round_trips() {
+        let view = DurabilityView {
+            enabled: true,
+            wal_records: 12,
+            wal_bytes: 2048,
+            wal_last_seq: Some(99),
+            records_since_snapshot: 12,
+            snapshot_every: 512,
+            snapshots: 3,
+            last_snapshot_seq: 87,
+            wal_dropped: 0,
+            consumer_dropped: 0,
+            gc_enabled: true,
+            gc_live_objects: 40,
+            gc_live_bytes: 1 << 20,
+            gc_swept_objects: 7,
+            gc_swept_bytes: 4096,
+        };
+        let resp = ApiResponse::Durability { durability: view };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // A fresh-segment view (no records yet) keeps `None` through
+        // the null on the wire.
+        let resp = ApiResponse::Durability { durability: DurabilityView::default() };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(ApiRequest::DurabilityStatus.to_json().get("verb").and_then(Json::as_str), Some("durability_status"));
     }
 
     #[test]

@@ -13,6 +13,8 @@
 //! * `nsml automl -d DATASET`       — hyperparameter search
 //! * `nsml tenants` / `nsml quota USER [--max-gpus N …]` — fair-share
 //!   status and per-user quota edits (weights, classes, budgets)
+//! * `nsml gc [--status]`          — sweep orphaned objects (or print
+//!   the WAL/snapshot/GC durability counters)
 //! * `nsml cluster` / `nsml models` / `nsml web`
 //!
 //! Session-control subcommands build [`crate::api::ApiRequest`]s and go
@@ -45,6 +47,7 @@ COMMANDS:
   cluster    cluster & scheduler status
   tenants    per-user fair-share status (quotas, GPU-seconds, queue)
   quota      show or set a user's quota:  nsml quota kim --max-gpus 4 --weight 2
+  gc         sweep orphaned objects:      nsml gc [--status]
   models     list AOT-compiled models
   web        serve the web UI:            nsml web --port 8080
 
@@ -70,6 +73,7 @@ pub fn main(args: &[String]) -> i32 {
         "cluster" => commands::cmd_cluster(&rest),
         "tenants" => commands::cmd_tenants(&rest),
         "quota" => commands::cmd_quota(&rest),
+        "gc" => commands::cmd_gc(&rest),
         "models" => commands::cmd_models(&rest),
         "web" => commands::cmd_web(&rest),
         "" | "help" | "--help" | "-h" => {

@@ -1,0 +1,170 @@
+//! Object-store garbage collection: mark live, sweep the rest.
+//!
+//! The object store is content-addressed and append-only in normal
+//! operation, so orphans accumulate: params of checkpoints whose
+//! index entries were superseded, aborted uploads, datasets re-posted
+//! with different contents. The mark pass walks every *reachable*
+//! object — checkpoint params + metadata records for every indexed
+//! checkpoint (a live session's whole checkpoint chain is indexed,
+//! so nothing a resume could need is ever swept), every dataset
+//! manifest object regardless of visibility, and code bundles (zip
+//! archives are the reproducibility record of `nsml run`). The sweep
+//! deletes everything else.
+//!
+//! As a side effect the mark pass attributes each user's checkpoint
+//! bytes (params + records, deduped per user) to
+//! [`TenantRegistry::set_storage_bytes`], so storage joins
+//! GPU-seconds in the per-tenant accounting.
+
+use crate::storage::{CheckpointStore, DatasetRegistry, ObjectId, ObjectStore};
+use crate::tenancy::TenantRegistry;
+use std::collections::{BTreeMap, BTreeSet};
+
+/// What one sweep did.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct GcReport {
+    pub live_objects: u64,
+    pub live_bytes: u64,
+    pub swept_objects: u64,
+    pub swept_bytes: u64,
+    /// Checkpoint bytes attributed per user (also written to the
+    /// tenant registry).
+    pub per_user_bytes: Vec<(String, u64)>,
+}
+
+/// Mark-and-sweep over `store`. `owner_of` maps a session id to its
+/// owning user (the facade passes a session-store lookup).
+pub fn sweep(
+    store: &ObjectStore,
+    ckpts: &CheckpointStore,
+    datasets: &DatasetRegistry,
+    owner_of: &dyn Fn(&str) -> Option<String>,
+    registry: &TenantRegistry,
+) -> GcReport {
+    // Mark: dataset manifests (private ones too).
+    let mut live: BTreeSet<ObjectId> = datasets.all_object_ids().into_iter().collect();
+    // Mark: every indexed checkpoint's params + metadata record, and
+    // attribute their bytes to the session's owner.
+    let mut per_user: BTreeMap<String, BTreeSet<ObjectId>> = BTreeMap::new();
+    for ck in ckpts.dump() {
+        let record_id = ObjectId::of(&CheckpointStore::record_bytes(&ck));
+        live.insert(ck.params.clone());
+        live.insert(record_id.clone());
+        if let Some(user) = owner_of(&ck.session) {
+            let set = per_user.entry(user).or_default();
+            set.insert(ck.params.clone());
+            set.insert(record_id);
+        }
+    }
+    // Mark: code bundles. They are zip archives (see storage::codepack)
+    // and nothing else in the store is, so the magic header is a
+    // reliable liveness proof for the reproducibility record.
+    let all = store.list();
+    for id in &all {
+        if live.contains(id) {
+            continue;
+        }
+        if let Ok(bytes) = store.get(id) {
+            if bytes.starts_with(b"PK") {
+                live.insert(id.clone());
+            }
+        }
+    }
+
+    // Sweep everything unmarked; tally the survivors.
+    let mut report = GcReport::default();
+    for id in &all {
+        let size = store.size_of(id).unwrap_or(0);
+        if live.contains(id) {
+            report.live_objects += 1;
+            report.live_bytes += size;
+        } else if store.delete(id) {
+            report.swept_objects += 1;
+            report.swept_bytes += size;
+        }
+    }
+
+    // Per-tenant storage accounting (absolute overwrite — idempotent).
+    for (user, ids) in &per_user {
+        let bytes: u64 = ids.iter().filter_map(|id| store.size_of(id)).sum();
+        registry.set_storage_bytes(user, bytes);
+        report.per_user_bytes.push((user.clone(), bytes));
+    }
+    report
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::storage::codepack;
+    use crate::tenancy::TenantQuota;
+    use std::collections::BTreeMap;
+
+    fn owner(session: &str) -> Option<String> {
+        session.split('/').next().map(str::to_string)
+    }
+
+    #[test]
+    fn sweep_keeps_chains_datasets_codepacks_and_drops_junk() {
+        let store = ObjectStore::memory();
+        let ckpts = CheckpointStore::new(store.clone());
+        let datasets = DatasetRegistry::new(store.clone());
+        let registry = TenantRegistry::new(TenantQuota::default());
+
+        // A live session's full checkpoint chain (two checkpoints).
+        let mut hp = BTreeMap::new();
+        hp.insert("lr".to_string(), 0.1);
+        let ck1 = ckpts.save("kim/mnist/1", 50, 0.4, &hp, b"params-at-50", 1_000).unwrap();
+        let ck2 = ckpts.save("kim/mnist/1", 75, 0.3, &hp, b"params-at-75", 2_000).unwrap();
+        // A dataset (private: the mark pass must still see it).
+        datasets.push("secret", "lee", false, &[("f.bin", b"dataset bytes")], 0.1, "").unwrap();
+        // A code bundle.
+        let code =
+            codepack::store_codepack(&store, &[("main.py", b"print('hi')".as_slice())]).unwrap();
+        // Unreferenced junk: an aborted upload.
+        let junk = store.put(b"orphaned upload bytes").unwrap();
+
+        let before = store.usage().0;
+        let report = sweep(&store, &ckpts, &datasets, &owner, &registry);
+        assert_eq!(report.swept_objects, 1);
+        assert_eq!(report.swept_bytes, b"orphaned upload bytes".len() as u64);
+        assert_eq!(report.live_objects as usize, before - 1);
+        assert!(!store.has(&junk));
+        // The full chain survives — params and records of BOTH
+        // checkpoints, not just the latest.
+        assert!(store.has(&ck1.params));
+        assert!(store.has(&ck2.params));
+        assert!(store.has(&ObjectId::of(&CheckpointStore::record_bytes(&ck1))));
+        assert!(store.has(&ObjectId::of(&CheckpointStore::record_bytes(&ck2))));
+        assert!(store.has(&code));
+        assert_eq!(datasets.read_file("secret", "lee", "f.bin").unwrap(), b"dataset bytes");
+        // Checkpoints still load after the sweep.
+        assert_eq!(ckpts.load_params(&ckpts.latest("kim/mnist/1").unwrap()).unwrap(), b"params-at-75");
+
+        // Per-tenant storage accounting landed in the registry.
+        assert!(registry.storage_bytes_of("kim") > 0);
+        assert_eq!(registry.storage_bytes_of("lee"), 0, "datasets are not charged (yet)");
+        let kim = report
+            .per_user_bytes
+            .iter()
+            .find(|(u, _)| u == "kim")
+            .map(|(_, b)| *b)
+            .unwrap();
+        assert_eq!(kim, registry.storage_bytes_of("kim"));
+
+        // Idempotent: a second sweep finds nothing to delete.
+        let again = sweep(&store, &ckpts, &datasets, &owner, &registry);
+        assert_eq!(again.swept_objects, 0);
+        assert_eq!(again.live_objects, report.live_objects);
+    }
+
+    #[test]
+    fn empty_store_sweeps_nothing() {
+        let store = ObjectStore::memory();
+        let ckpts = CheckpointStore::new(store.clone());
+        let datasets = DatasetRegistry::new(store.clone());
+        let registry = TenantRegistry::new(TenantQuota::default());
+        let report = sweep(&store, &ckpts, &datasets, &owner, &registry);
+        assert_eq!(report, GcReport::default());
+    }
+}

@@ -1,0 +1,309 @@
+//! Event-sourced durability: WAL + snapshot/replay recovery +
+//! object-store GC.
+//!
+//! `persist::save` used to rewrite the whole world as one
+//! `state.json` on every mutation — O(sessions) per save and lossy
+//! on a crash mid-write. This subsystem turns durability into a
+//! *derived consumer* of the PR-4 event bus instead of a hot-path
+//! tax:
+//!
+//! * [`wal`] — an append-only, fsync-batched log fed by a dedicated
+//!   bus [`Subscription`]; every `StateChanged` / `MetricReported` /
+//!   `CheckpointSaved` / `AdmissionDecided` event becomes a
+//!   length-prefixed, checksummed record, and torn tails are
+//!   truncated on open.
+//! * [`snapshot`] — periodic compacted snapshots: the `persist::save`
+//!   world dump, demoted from per-mutation to every
+//!   `[durability] snapshot_every` WAL records, plus a
+//!   [`SnapshotMeta`] recording the bus sequence number the dump
+//!   covers and the usage-accounting ledger. After a snapshot the
+//!   WAL segment rotates.
+//! * [`recovery`] — startup = load the newest valid snapshot, then
+//!   replay the WAL tail (`seq > last_seq` only, hence idempotent)
+//!   through the same consumer paths the live platform pumps.
+//! * [`gc`] — mark-and-sweep over the content-addressed object
+//!   store: checkpoint chains, dataset manifests and code bundles
+//!   stay, orphans go, and per-tenant storage bytes join
+//!   GPU-seconds in the tenant registry.
+//!
+//! The facade (`api::NsmlPlatform`) owns one [`Durability`] manager:
+//! its subscription is created before any subsystem can publish, the
+//! drive loop pumps it once per round, `save_state` becomes
+//! snapshot-on-demand, and a lagging subscription (ring overflow)
+//! triggers an immediate full snapshot so nothing is ever silently
+//! lost. Surfaces: the `durability_status` wire verb,
+//! `GET /api/v1/durability`, and `nsml gc`.
+//!
+//! [`Subscription`]: crate::events::Subscription
+
+pub mod gc;
+pub mod recovery;
+pub mod snapshot;
+pub mod wal;
+
+pub use gc::GcReport;
+pub use recovery::{rebuild_checkpoint_index, replay, ReplayStats};
+pub use snapshot::SnapshotMeta;
+pub use wal::{Wal, WalScan};
+
+use crate::events::{Event, EventKind, Subscription};
+use anyhow::Result;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+/// WAL file name under the durability directory.
+pub const WAL_FILE: &str = "wal.log";
+
+/// Should this event reach the log? The durable kinds are exactly
+/// the ones recovery can apply; high-volume telemetry (util/worker
+/// samples, placement, steals, log lines) stays in the ring only.
+pub fn is_durable(e: &Event) -> bool {
+    matches!(
+        e.kind,
+        EventKind::StateChanged { .. }
+            | EventKind::MetricReported { .. }
+            | EventKind::CheckpointSaved { .. }
+            | EventKind::AdmissionDecided { .. }
+    )
+}
+
+/// One [`Durability::pump`]'s outcome.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct PumpOutcome {
+    /// Durable events appended this pump.
+    pub appended: u64,
+    /// The subscription lost events to ring overflow since the last
+    /// pump — the WAL has a gap and only a full snapshot closes it.
+    pub overflowed: bool,
+    /// `snapshot_every` records have accumulated since the last
+    /// snapshot.
+    pub snapshot_due: bool,
+}
+
+struct Inner {
+    wal: Wal,
+    sub: Subscription,
+    /// Durable records appended since the last snapshot.
+    records_since_snapshot: u64,
+    snapshots: u64,
+    last_snapshot_seq: u64,
+    last_gc: Option<GcReport>,
+}
+
+/// Counters for the `durability_status` surface.
+#[derive(Debug, Clone, Default)]
+pub struct DurabilityStats {
+    pub wal_records: u64,
+    pub wal_bytes: u64,
+    pub wal_last_seq: Option<u64>,
+    pub records_since_snapshot: u64,
+    pub snapshots: u64,
+    pub last_snapshot_seq: u64,
+    /// Events the WAL subscription lost to ring overflow (each loss
+    /// is healed by an immediate snapshot, but the counter remains).
+    pub wal_dropped: u64,
+    pub last_gc: Option<GcReport>,
+}
+
+/// The facade-owned durability manager (see module docs).
+pub struct Durability {
+    dir: PathBuf,
+    snapshot_every: u64,
+    gc_enabled: bool,
+    inner: Mutex<Inner>,
+}
+
+impl Durability {
+    /// Open (or create) the durability directory under `state_dir`,
+    /// scan the WAL, and load the snapshot metadata. `sub` must be a
+    /// subscription created before any subsystem publishes, so the
+    /// log sees every durable event from process start.
+    #[allow(clippy::type_complexity)]
+    pub fn open(
+        state_dir: &Path,
+        sub: Subscription,
+        fsync_every: u64,
+        snapshot_every: u64,
+        gc_enabled: bool,
+    ) -> Result<(Durability, WalScan, Option<SnapshotMeta>)> {
+        let dir = state_dir.join("durability");
+        let meta = SnapshotMeta::load(&dir)?;
+        let (wal, scan) = Wal::open(dir.join(WAL_FILE), fsync_every)?;
+        let durability = Durability {
+            dir,
+            snapshot_every: snapshot_every.max(1),
+            gc_enabled,
+            inner: Mutex::new(Inner {
+                wal,
+                sub,
+                records_since_snapshot: 0,
+                snapshots: 0,
+                last_snapshot_seq: meta.as_ref().map(|m| m.last_seq).unwrap_or(0),
+                last_gc: None,
+            }),
+        };
+        Ok((durability, scan, meta))
+    }
+
+    /// Drain the subscription and append every durable event.
+    pub fn pump(&self) -> Result<PumpOutcome> {
+        let mut inner = self.inner.lock().unwrap();
+        let before = inner.sub.dropped();
+        let events = inner.sub.poll();
+        let overflowed = inner.sub.dropped() > before;
+        let mut appended = 0;
+        for e in events.iter().filter(|e| is_durable(e)) {
+            inner.wal.append(e)?;
+            appended += 1;
+        }
+        inner.records_since_snapshot += appended;
+        Ok(PumpOutcome {
+            appended,
+            overflowed,
+            snapshot_due: inner.records_since_snapshot >= self.snapshot_every,
+        })
+    }
+
+    /// Record that a world dump covering `meta.last_seq` was just
+    /// written: persist the metadata atomically, rotate the WAL
+    /// segment it subsumes, and reset the snapshot cadence.
+    pub fn mark_snapshot(&self, meta: &SnapshotMeta) -> Result<()> {
+        let mut inner = self.inner.lock().unwrap();
+        meta.save(&self.dir)?;
+        inner.wal.rotate()?;
+        inner.records_since_snapshot = 0;
+        inner.snapshots += 1;
+        inner.last_snapshot_seq = meta.last_seq;
+        Ok(())
+    }
+
+    /// Flush unsynced WAL appends to stable storage.
+    pub fn sync(&self) -> Result<()> {
+        self.inner.lock().unwrap().wal.sync()
+    }
+
+    /// Remember the latest GC sweep for the status surface.
+    pub fn note_gc(&self, report: GcReport) {
+        self.inner.lock().unwrap().last_gc = Some(report);
+    }
+
+    pub fn gc_enabled(&self) -> bool {
+        self.gc_enabled
+    }
+
+    pub fn snapshot_every(&self) -> u64 {
+        self.snapshot_every
+    }
+
+    /// Durability directory (`<state_dir>/durability`).
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn stats(&self) -> DurabilityStats {
+        let inner = self.inner.lock().unwrap();
+        DurabilityStats {
+            wal_records: inner.wal.records(),
+            wal_bytes: inner.wal.bytes(),
+            wal_last_seq: inner.wal.last_seq(),
+            records_since_snapshot: inner.records_since_snapshot,
+            snapshots: inner.snapshots,
+            last_snapshot_seq: inner.last_snapshot_seq,
+            wal_dropped: inner.sub.dropped(),
+            last_gc: inner.last_gc.clone(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{EventBus, Level};
+    use crate::util::clock::sim_clock;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nsml-dur-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn publish_state(bus: &EventBus, subject: &str, to: &str, step: u64) {
+        bus.publish(
+            Level::Info,
+            "session",
+            subject,
+            EventKind::StateChanged { from: "x".into(), to: to.into(), step },
+        );
+    }
+
+    #[test]
+    fn pump_appends_only_durable_kinds_and_snapshots_on_cadence() {
+        let dir = tmp("pump");
+        let (clock, _sim) = sim_clock();
+        let bus = EventBus::new(clock);
+        let sub = bus.subscribe();
+        let (d, scan, meta) = Durability::open(&dir, sub, 4, 3, true).unwrap();
+        assert!(scan.events.is_empty());
+        assert!(meta.is_none());
+
+        publish_state(&bus, "s1", "running", 0);
+        bus.publish(Level::Debug, "platform", "", EventKind::LogLine { message: "noise".into() });
+        bus.publish(
+            Level::Debug,
+            "platform",
+            "",
+            EventKind::UtilizationSampled {
+                utilization: 0.5,
+                free_gpus: 1,
+                alive_nodes: 1,
+                queue_depth: 0,
+            },
+        );
+        publish_state(&bus, "s1", "done", 10);
+        let out = d.pump().unwrap();
+        assert_eq!(out.appended, 2, "telemetry noise stays out of the WAL");
+        assert!(!out.overflowed);
+        assert!(!out.snapshot_due, "2 of 3 records accumulated");
+
+        publish_state(&bus, "s2", "running", 0);
+        let out = d.pump().unwrap();
+        assert!(out.snapshot_due, "third record hits the cadence");
+        d.mark_snapshot(&SnapshotMeta { last_seq: bus.head() - 1, ..Default::default() }).unwrap();
+        let stats = d.stats();
+        assert_eq!(stats.wal_records, 0, "segment rotated");
+        assert_eq!(stats.snapshots, 1);
+        assert_eq!(stats.records_since_snapshot, 0);
+        assert_eq!(stats.last_snapshot_seq, bus.head() - 1);
+
+        // The rotated-away prefix is subsumed: a reopen replays nothing.
+        drop(d);
+        let sub2 = bus.subscribe();
+        let (d2, scan2, meta2) = Durability::open(&dir, sub2, 4, 3, true).unwrap();
+        assert!(scan2.events.is_empty());
+        assert_eq!(meta2.unwrap().last_seq, bus.head() - 1);
+        assert_eq!(d2.stats().last_snapshot_seq, bus.head() - 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn overflow_is_reported_once_per_loss() {
+        let dir = tmp("overflow");
+        let (clock, _sim) = sim_clock();
+        let bus = EventBus::new(clock).with_capacity(4);
+        let sub = bus.subscribe();
+        let (d, _, _) = Durability::open(&dir, sub, 1, 1_000, false).unwrap();
+        for i in 0..10 {
+            publish_state(&bus, "s", "running", i);
+        }
+        let out = d.pump().unwrap();
+        assert!(out.overflowed, "ring of 4 lost 6 of 10");
+        assert_eq!(out.appended, 4);
+        assert!(d.stats().wal_dropped >= 6);
+        // Caught up now: the next pump reports no new loss.
+        publish_state(&bus, "s", "done", 10);
+        let out = d.pump().unwrap();
+        assert!(!out.overflowed);
+        assert_eq!(out.appended, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,143 @@
+//! Snapshot metadata: which WAL prefix a compacted snapshot subsumes.
+//!
+//! The snapshot itself is the existing `persist::save` world dump
+//! (sessions, leaderboard, checkpoint index, quota overrides) — this
+//! module records what the dump *covers*: the highest bus sequence
+//! number whose effects it contains, so recovery replays only WAL
+//! records with `seq > last_seq`, and the usage-accounting ledger
+//! (closed per-user GPU-second totals plus still-open intervals),
+//! which lives nowhere else once the pre-snapshot WAL segment
+//! rotates away.
+//!
+//! Written via temp file + atomic rename: a crash leaves either the
+//! old metadata or the new, never a torn file. A crash *between* the
+//! metadata write and the WAL rotation is also safe — the stale
+//! segment's records all carry `seq <= last_seq` and replay skips
+//! them (replay is seq-gated, hence idempotent).
+
+use crate::util::json::{parse, Json};
+use anyhow::{anyhow, Result};
+use std::path::Path;
+
+/// File name under the durability directory.
+pub const META_FILE: &str = "snapshot.json";
+
+/// See the module docs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SnapshotMeta {
+    /// Highest bus sequence number the snapshot's world dump covers.
+    pub last_seq: u64,
+    /// Virtual time of the snapshot.
+    pub at_ms: u64,
+    /// Per-user closed GPU-second totals at snapshot time.
+    pub closed_usage: Vec<(String, f64)>,
+    /// Open `(session, running-since-ms)` intervals at snapshot time.
+    pub open_usage: Vec<(String, u64)>,
+}
+
+impl SnapshotMeta {
+    /// Write atomically under `dir`.
+    pub fn save(&self, dir: &Path) -> Result<()> {
+        std::fs::create_dir_all(dir)?;
+        let mut doc = Json::obj();
+        doc.set("format", 1u64.into())
+            .set("last_seq", self.last_seq.into())
+            .set("at_ms", self.at_ms.into());
+        let closed: Vec<Json> = self
+            .closed_usage
+            .iter()
+            .map(|(user, secs)| {
+                let mut o = Json::obj();
+                o.set("user", user.as_str().into()).set("gpu_seconds", (*secs).into());
+                o
+            })
+            .collect();
+        doc.set("closed_usage", Json::Arr(closed));
+        let open: Vec<Json> = self
+            .open_usage
+            .iter()
+            .map(|(session, since)| {
+                let mut o = Json::obj();
+                o.set("session", session.as_str().into()).set("since_ms", (*since).into());
+                o
+            })
+            .collect();
+        doc.set("open_usage", Json::Arr(open));
+        let tmp = dir.join(format!("{}.tmp", META_FILE));
+        std::fs::write(&tmp, doc.to_pretty())?;
+        std::fs::rename(&tmp, dir.join(META_FILE))?;
+        Ok(())
+    }
+
+    /// Load from `dir`; `None` when no snapshot has been taken yet.
+    pub fn load(dir: &Path) -> Result<Option<SnapshotMeta>> {
+        let path = dir.join(META_FILE);
+        if !path.exists() {
+            return Ok(None);
+        }
+        let text = std::fs::read_to_string(&path)?;
+        let doc = parse(&text).map_err(|e| anyhow!("{}: {}", META_FILE, e))?;
+        let u64_of = |k: &str| doc.get(k).and_then(Json::as_i64).unwrap_or(0) as u64;
+        let mut meta = SnapshotMeta {
+            last_seq: u64_of("last_seq"),
+            at_ms: u64_of("at_ms"),
+            closed_usage: Vec::new(),
+            open_usage: Vec::new(),
+        };
+        if let Some(arr) = doc.get("closed_usage").and_then(Json::as_arr) {
+            for o in arr {
+                let Some(user) = o.get("user").and_then(Json::as_str) else { continue };
+                let secs = o.get("gpu_seconds").and_then(Json::as_f64).unwrap_or(0.0);
+                meta.closed_usage.push((user.to_string(), secs));
+            }
+        }
+        if let Some(arr) = doc.get("open_usage").and_then(Json::as_arr) {
+            for o in arr {
+                let Some(session) = o.get("session").and_then(Json::as_str) else { continue };
+                let since = o.get("since_ms").and_then(Json::as_i64).unwrap_or(0) as u64;
+                meta.open_usage.push((session.to_string(), since));
+            }
+        }
+        Ok(Some(meta))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nsml-snapmeta-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn round_trips_and_missing_is_none() {
+        let dir = tmp("roundtrip");
+        assert_eq!(SnapshotMeta::load(&dir).unwrap(), None);
+        let meta = SnapshotMeta {
+            last_seq: 4242,
+            at_ms: 99_000,
+            closed_usage: vec![("kim".into(), 12.5), ("lee".into(), 0.25)],
+            open_usage: vec![("kim/mnist/1".into(), 88_000)],
+        };
+        meta.save(&dir).unwrap();
+        assert_eq!(SnapshotMeta::load(&dir).unwrap(), Some(meta.clone()));
+        // Overwrite wins (atomic rename, no append).
+        let newer = SnapshotMeta { last_seq: 9000, ..meta };
+        newer.save(&dir).unwrap();
+        assert_eq!(SnapshotMeta::load(&dir).unwrap().unwrap().last_seq, 9000);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn malformed_meta_is_an_error() {
+        let dir = tmp("malformed");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join(META_FILE), b"{ nope").unwrap();
+        assert!(SnapshotMeta::load(&dir).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

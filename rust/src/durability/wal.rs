@@ -1,0 +1,303 @@
+//! Append-only, fsync-batched write-ahead log of bus events.
+//!
+//! Record format: `[u32 LE payload length][u32 LE FNV-1a checksum]
+//! [payload]`, where the payload is the event's JSON envelope
+//! (`Event::to_json`). Appends go straight to the file and are
+//! fsynced once per `fsync_every` records, so the per-mutation cost
+//! is one small buffered write — not the O(sessions) `state.json`
+//! rewrite it replaces.
+//!
+//! On open the log is scanned front to back; the first record that
+//! fails its length bound, checksum or JSON parse marks a torn tail
+//! (a crash mid-append), and the file is truncated back to the last
+//! valid record. Everything before the tear replays losslessly.
+
+use crate::events::Event;
+use crate::util::json::parse;
+use anyhow::{Context, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Length sanity bound while scanning a possibly-corrupt log: no
+/// event envelope comes anywhere near this, so a larger claimed
+/// length means we are reading garbage, not a record header.
+const MAX_RECORD_BYTES: u32 = 16 * 1024 * 1024;
+
+/// 32-bit FNV-1a — dependency-free, cheap, and plenty to detect the
+/// partial writes torn-tail scanning cares about (this is not a
+/// content address; the object store does cryptographic hashing).
+pub fn checksum(bytes: &[u8]) -> u32 {
+    let mut h: u32 = 0x811c_9dc5;
+    for b in bytes {
+        h ^= *b as u32;
+        h = h.wrapping_mul(0x0100_0193);
+    }
+    h
+}
+
+/// What [`Wal::open`] found on disk.
+pub struct WalScan {
+    /// Every valid record, oldest first.
+    pub events: Vec<Event>,
+    /// Bytes cut off a torn tail (0 = the log was clean).
+    pub truncated_bytes: u64,
+}
+
+/// The open log. Single-writer by construction — the platform owns
+/// it behind a mutex and appends from the drive loop only.
+pub struct Wal {
+    path: PathBuf,
+    file: File,
+    fsync_every: u64,
+    /// Appends since the last fsync.
+    unsynced: u64,
+    /// Records in the current segment.
+    records: u64,
+    /// Bytes in the current segment.
+    bytes: u64,
+    /// Sequence number of the segment's newest record.
+    last_seq: Option<u64>,
+}
+
+impl Wal {
+    /// Open (creating if absent) the log at `path`, scan it, and
+    /// truncate any torn tail. `fsync_every` = 1 syncs every append.
+    pub fn open(path: impl Into<PathBuf>, fsync_every: u64) -> Result<(Wal, WalScan)> {
+        let path = path.into();
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent)?;
+        }
+        let mut file = OpenOptions::new()
+            .read(true)
+            .write(true)
+            .create(true)
+            .truncate(false)
+            .open(&path)
+            .with_context(|| format!("opening WAL {}", path.display()))?;
+        let mut raw = Vec::new();
+        file.read_to_end(&mut raw)?;
+        let (events, valid_len) = scan(&raw);
+        let truncated_bytes = raw.len() as u64 - valid_len;
+        if truncated_bytes > 0 {
+            file.set_len(valid_len)?;
+        }
+        file.seek(SeekFrom::Start(valid_len))?;
+        let wal = Wal {
+            path,
+            file,
+            fsync_every: fsync_every.max(1),
+            unsynced: 0,
+            records: events.len() as u64,
+            bytes: valid_len,
+            last_seq: events.last().map(|e| e.seq),
+        };
+        Ok((wal, WalScan { events, truncated_bytes }))
+    }
+
+    /// Append one event as a length-prefixed, checksummed record.
+    pub fn append(&mut self, e: &Event) -> Result<()> {
+        let payload = e.to_json().to_string().into_bytes();
+        let mut rec = Vec::with_capacity(8 + payload.len());
+        rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        rec.extend_from_slice(&checksum(&payload).to_le_bytes());
+        rec.extend_from_slice(&payload);
+        self.file.write_all(&rec)?;
+        self.records += 1;
+        self.bytes += rec.len() as u64;
+        self.last_seq = Some(e.seq);
+        self.unsynced += 1;
+        if self.unsynced >= self.fsync_every {
+            self.sync()?;
+        }
+        Ok(())
+    }
+
+    /// Flush any unsynced appends to stable storage.
+    pub fn sync(&mut self) -> Result<()> {
+        if self.unsynced > 0 {
+            self.file.sync_data()?;
+            self.unsynced = 0;
+        }
+        Ok(())
+    }
+
+    /// Start a fresh segment: a snapshot just subsumed every record,
+    /// so the current segment's contents are dead weight.
+    pub fn rotate(&mut self) -> Result<()> {
+        self.file.set_len(0)?;
+        self.file.seek(SeekFrom::Start(0))?;
+        self.file.sync_data()?;
+        self.unsynced = 0;
+        self.records = 0;
+        self.bytes = 0;
+        self.last_seq = None;
+        Ok(())
+    }
+
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    pub fn bytes(&self) -> u64 {
+        self.bytes
+    }
+
+    /// Sequence number of the newest record in the current segment.
+    pub fn last_seq(&self) -> Option<u64> {
+        self.last_seq
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+}
+
+/// Walk `raw` record by record; returns the parsed events and the
+/// byte length of the valid prefix (everything past it is torn).
+fn scan(raw: &[u8]) -> (Vec<Event>, u64) {
+    let mut events = Vec::new();
+    let mut off = 0usize;
+    while off + 8 <= raw.len() {
+        let len = u32::from_le_bytes(raw[off..off + 4].try_into().unwrap());
+        let sum = u32::from_le_bytes(raw[off + 4..off + 8].try_into().unwrap());
+        if len == 0 || len > MAX_RECORD_BYTES {
+            break;
+        }
+        let end = off + 8 + len as usize;
+        if end > raw.len() {
+            break;
+        }
+        let payload = &raw[off + 8..end];
+        if checksum(payload) != sum {
+            break;
+        }
+        let Ok(text) = std::str::from_utf8(payload) else { break };
+        let Ok(json) = parse(text) else { break };
+        let Ok(event) = Event::from_json(&json) else { break };
+        events.push(event);
+        off = end;
+    }
+    (events, off as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::events::{EventKind, Level};
+
+    fn event(seq: u64, to: &str) -> Event {
+        Event {
+            seq,
+            at_ms: seq * 10,
+            level: Level::Info,
+            source: "session".into(),
+            subject: "kim/mnist/1".into(),
+            kind: EventKind::StateChanged { from: "x".into(), to: to.into(), step: seq },
+        }
+    }
+
+    fn tmp(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("nsml-wal-{}-{}", tag, std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir.join("wal.log")
+    }
+
+    #[test]
+    fn append_reopen_round_trips() {
+        let path = tmp("roundtrip");
+        {
+            let (mut wal, scan) = Wal::open(&path, 2).unwrap();
+            assert!(scan.events.is_empty());
+            assert_eq!(scan.truncated_bytes, 0);
+            for i in 0..5 {
+                wal.append(&event(i, "running")).unwrap();
+            }
+            assert_eq!(wal.records(), 5);
+            assert_eq!(wal.last_seq(), Some(4));
+            assert!(wal.bytes() > 0);
+        } // dropped without an explicit sync — a "crash"
+        let (wal, scan) = Wal::open(&path, 2).unwrap();
+        assert_eq!(scan.events.len(), 5);
+        assert_eq!(scan.truncated_bytes, 0);
+        assert_eq!(scan.events[3], event(3, "running"));
+        assert_eq!(wal.records(), 5);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn torn_tail_is_truncated_on_open() {
+        let path = tmp("torn");
+        {
+            let (mut wal, _) = Wal::open(&path, 1).unwrap();
+            wal.append(&event(0, "running")).unwrap();
+            wal.append(&event(1, "done")).unwrap();
+        }
+        // Simulate a crash mid-append: a header promising more bytes
+        // than exist, followed by garbage.
+        let clean_len = std::fs::metadata(&path).unwrap().len();
+        let mut f = OpenOptions::new().append(true).open(&path).unwrap();
+        f.write_all(&500u32.to_le_bytes()).unwrap();
+        f.write_all(&0xdead_beefu32.to_le_bytes()).unwrap();
+        f.write_all(b"partial garbage").unwrap();
+        drop(f);
+
+        let (wal, scan) = Wal::open(&path, 1).unwrap();
+        assert_eq!(scan.events.len(), 2, "valid prefix survives");
+        assert!(scan.truncated_bytes > 0);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), clean_len, "tail cut off");
+        assert_eq!(wal.last_seq(), Some(1));
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn corrupted_checksum_stops_the_scan() {
+        let path = tmp("checksum");
+        {
+            let (mut wal, _) = Wal::open(&path, 1).unwrap();
+            for i in 0..3 {
+                wal.append(&event(i, "running")).unwrap();
+            }
+        }
+        // Flip one payload byte of the last record.
+        let mut raw = std::fs::read(&path).unwrap();
+        let n = raw.len();
+        raw[n - 3] ^= 0xff;
+        std::fs::write(&path, &raw).unwrap();
+        let (_, scan) = Wal::open(&path, 1).unwrap();
+        assert_eq!(scan.events.len(), 2, "only the corrupted record is lost");
+        assert!(scan.truncated_bytes > 0);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn rotate_starts_a_fresh_segment() {
+        let path = tmp("rotate");
+        let (mut wal, _) = Wal::open(&path, 8).unwrap();
+        for i in 0..4 {
+            wal.append(&event(i, "running")).unwrap();
+        }
+        wal.rotate().unwrap();
+        assert_eq!(wal.records(), 0);
+        assert_eq!(wal.bytes(), 0);
+        assert_eq!(wal.last_seq(), None);
+        assert_eq!(std::fs::metadata(&path).unwrap().len(), 0);
+        // Appends keep working after the reset.
+        wal.append(&event(9, "done")).unwrap();
+        assert_eq!(wal.records(), 1);
+        assert_eq!(wal.last_seq(), Some(9));
+        drop(wal);
+        let (_, scan) = Wal::open(&path, 8).unwrap();
+        assert_eq!(scan.events.len(), 1);
+        assert_eq!(scan.events[0].seq, 9);
+        let _ = std::fs::remove_dir_all(path.parent().unwrap());
+    }
+
+    #[test]
+    fn checksum_is_stable() {
+        // FNV-1a reference vectors.
+        assert_eq!(checksum(b""), 0x811c_9dc5);
+        assert_eq!(checksum(b"a"), 0xe40c_292c);
+        assert_eq!(checksum(b"foobar"), 0xbf9c_f968);
+    }
+}

@@ -48,6 +48,10 @@
 //!   bounded sequence-numbered bus; the leaderboard and utilization
 //!   monitor are derived consumers, and `nsml logs -f` /
 //!   `GET /api/v1/events` stream it incrementally.
+//! * [`durability`] — event-sourced crash safety: a WAL fed by a bus
+//!   subscription, periodic compacted snapshots with WAL rotation,
+//!   startup snapshot+replay recovery, and object-store GC with
+//!   per-tenant storage accounting.
 //! * [`storage`] / [`leaderboard`] / [`automl`] / [`util`] — object
 //!   store + checkpoints, per-dataset ranking, hyperparameter search,
 //!   and dependency-free utilities (JSON, TOML, argparse, tables,
@@ -77,6 +81,7 @@ pub mod data;
 pub mod session;
 pub mod executor;
 pub mod tenancy;
+pub mod durability;
 pub mod leaderboard;
 pub mod automl;
 pub mod api;

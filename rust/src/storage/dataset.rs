@@ -119,6 +119,17 @@ impl DatasetRegistry {
     pub fn store(&self) -> &ObjectStore {
         &self.store
     }
+
+    /// Every object referenced by any dataset, regardless of
+    /// visibility (the GC mark pass must see private manifests too).
+    pub fn all_object_ids(&self) -> Vec<ObjectId> {
+        let reg = self.inner.lock().unwrap();
+        let mut ids: Vec<ObjectId> =
+            reg.values().flat_map(|d| d.files.values().cloned()).collect();
+        ids.sort();
+        ids.dedup();
+        ids
+    }
 }
 
 #[cfg(test)]
@@ -174,6 +185,15 @@ mod tests {
         assert!(r.get("nope", "x").is_err());
         r.push("d", "kim", true, &[("a", b"1")], 1.0, "").unwrap();
         assert!(r.read_file("d", "kim", "b").is_err());
+    }
+
+    #[test]
+    fn all_object_ids_sees_private_manifests() {
+        let r = reg();
+        r.push("secret", "kim", false, &[("f", b"hidden")], 1.0, "").unwrap();
+        r.push("open", "kim", true, &[("g", b"shown"), ("h", b"hidden")], 1.0, "").unwrap();
+        // Two distinct objects ("hidden" dedups across datasets).
+        assert_eq!(r.all_object_ids().len(), 2);
     }
 
     #[test]

@@ -122,7 +122,63 @@ impl ObjectStore {
     pub fn delete(&self, id: &ObjectId) -> bool {
         match &*self.backend {
             Backend::Mem(m) => m.lock().unwrap().remove(id).is_some(),
-            Backend::Fs(dir) => std::fs::remove_file(Self::fs_path(dir, id)).is_ok(),
+            Backend::Fs(dir) => {
+                let path = Self::fs_path(dir, id);
+                let deleted = std::fs::remove_file(&path).is_ok();
+                if deleted {
+                    // Prune the fan-out shard dir if this was its last
+                    // object; remove_dir refuses non-empty dirs, so a
+                    // concurrent put can at worst make this a no-op.
+                    if let Some(shard) = path.parent() {
+                        let _ = std::fs::remove_dir(shard);
+                    }
+                }
+                deleted
+            }
+        }
+    }
+
+    /// Every stored content address (GC enumeration; recovery's
+    /// checkpoint-index rebuild). O(n) on the fs backend.
+    pub fn list(&self) -> Vec<ObjectId> {
+        match &*self.backend {
+            Backend::Mem(m) => m.lock().unwrap().keys().cloned().collect(),
+            Backend::Fs(dir) => {
+                let mut ids = Vec::new();
+                if let Ok(shards) = std::fs::read_dir(dir) {
+                    for shard in shards.flatten() {
+                        let prefix = shard.file_name().to_string_lossy().to_string();
+                        if prefix.len() != 2 {
+                            continue;
+                        }
+                        if let Ok(files) = std::fs::read_dir(shard.path()) {
+                            for f in files.flatten() {
+                                let rest = f.file_name().to_string_lossy().to_string();
+                                let full = format!("{}{}", prefix, rest);
+                                // Skip in-flight temp files and anything
+                                // that is not a 64-hex content address.
+                                if full.len() == 64
+                                    && full.chars().all(|c| c.is_ascii_hexdigit())
+                                {
+                                    ids.push(ObjectId(full));
+                                }
+                            }
+                        }
+                    }
+                }
+                ids.sort();
+                ids
+            }
+        }
+    }
+
+    /// Size in bytes of one object, if present.
+    pub fn size_of(&self, id: &ObjectId) -> Option<u64> {
+        match &*self.backend {
+            Backend::Mem(m) => m.lock().unwrap().get(id).map(|v| v.len() as u64),
+            Backend::Fs(dir) => {
+                std::fs::metadata(Self::fs_path(dir, id)).ok().filter(|m| m.is_file()).map(|m| m.len())
+            }
         }
     }
 
@@ -217,6 +273,53 @@ mod tests {
         let (n, bytes) = s2.usage();
         assert_eq!(n, 1);
         assert_eq!(bytes, 15);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fs_delete_prunes_empty_shard_and_usage_tracks() {
+        let dir = std::env::temp_dir().join(format!("nsml-os-prune-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let s = ObjectStore::filesystem(&dir).unwrap();
+        assert_eq!(s.usage(), (0, 0));
+        let a = s.put(b"object a").unwrap();
+        let b = s.put(b"object bb").unwrap();
+        assert_eq!(s.usage(), (2, 17));
+        // Delete one: count and bytes shrink, its shard dir is pruned
+        // once empty (a and b land in different shards w.h.p., but we
+        // only assert a's own shard is gone).
+        assert!(s.delete(&a));
+        assert_eq!(s.usage(), (1, 9));
+        assert!(!dir.join(&a.0[..2]).exists(), "empty fan-out dir must be pruned");
+        assert!(s.has(&b));
+        // Deleting a missing object is a no-op on usage.
+        assert!(!s.delete(&a));
+        assert_eq!(s.usage(), (1, 9));
+        assert!(s.delete(&b));
+        assert_eq!(s.usage(), (0, 0));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn list_and_size_of_cover_both_backends() {
+        let mem = ObjectStore::memory();
+        let a = mem.put(b"aaa").unwrap();
+        let b = mem.put(b"bbbb").unwrap();
+        let mut want = vec![a.clone(), b.clone()];
+        want.sort();
+        assert_eq!(mem.list(), want);
+        assert_eq!(mem.size_of(&a), Some(3));
+        assert_eq!(mem.size_of(&ObjectId::of(b"missing")), None);
+
+        let dir = std::env::temp_dir().join(format!("nsml-os-list-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let fs = ObjectStore::filesystem(&dir).unwrap();
+        fs.put(b"aaa").unwrap();
+        fs.put(b"bbbb").unwrap();
+        // A stray temp file must not surface as an object.
+        std::fs::write(dir.join(&a.0[..2]).join("leftover.tmp"), b"junk").unwrap();
+        assert_eq!(fs.list(), want);
+        assert_eq!(fs.size_of(&b), Some(4));
         let _ = std::fs::remove_dir_all(&dir);
     }
 

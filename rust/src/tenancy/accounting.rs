@@ -89,6 +89,33 @@ impl UsageAccountant {
         }
     }
 
+    /// Snapshot the ledger for durability: per-user closed GPU-second
+    /// totals plus the still-open `(session, running-since)` intervals.
+    /// The pre-snapshot WAL segment is rotated away, so anything not
+    /// captured here would be lost across a restart.
+    pub fn dump(&self) -> (Vec<(String, f64)>, Vec<(String, Millis)>) {
+        let inner = self.inner.lock().unwrap();
+        (
+            inner.closed.iter().map(|(u, s)| (u.clone(), *s)).collect(),
+            inner.open.iter().map(|(s, t)| (s.clone(), *t)).collect(),
+        )
+    }
+
+    /// Rebuild the ledger from a snapshot [`dump`](Self::dump). Meta
+    /// must already be registered: open intervals for unregistered
+    /// sessions are dropped (they could never close safely).
+    pub fn restore(&self, closed: &[(String, f64)], open: &[(String, Millis)]) {
+        let mut inner = self.inner.lock().unwrap();
+        for (user, secs) in closed {
+            *inner.closed.entry(user.clone()).or_insert(0.0) += *secs;
+        }
+        for (session, since) in open {
+            if inner.meta.contains_key(session) && !inner.open.contains_key(session) {
+                inner.open.insert(session.clone(), *since);
+            }
+        }
+    }
+
     /// `user`'s total GPU-seconds as of `now_ms` — closed intervals
     /// plus every interval still running.
     pub fn usage_at(&self, user: &str, now_ms: Millis) -> f64 {
@@ -162,6 +189,31 @@ mod tests {
         acc.close_if_open("s1", 9_000);
         acc.close_if_open("ghost", 9_000);
         assert!((acc.usage_at("kim", 999_999) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn dump_restore_round_trips_closed_and_open() {
+        let acc = UsageAccountant::new();
+        acc.register("s1", "kim", 2);
+        acc.register("s2", "lee", 1);
+        acc.observe(&state("s1", "running", 1_000));
+        acc.observe(&state("s1", "done", 3_000)); // kim: 4 closed
+        acc.observe(&state("s2", "running", 2_000)); // lee: open
+        let (closed, open) = acc.dump();
+
+        let fresh = UsageAccountant::new();
+        fresh.register("s2", "lee", 1);
+        fresh.restore(&closed, &open);
+        assert!((fresh.usage_at("kim", 99_999) - 4.0).abs() < 1e-9);
+        // Open interval survived and keeps accruing.
+        assert!((fresh.usage_at("lee", 5_000) - 3.0).abs() < 1e-9);
+        // Open intervals without registered meta are dropped, not
+        // resurrected as unclosable ghosts.
+        let bare = UsageAccountant::new();
+        bare.restore(&closed, &open);
+        assert_eq!(bare.usage_at("lee", 99_999), 0.0);
+        assert!((bare.usage_at("kim", 0) - 4.0).abs() < 1e-9);
+        bare.observe(&state("s2", "done", 9_000)); // must not panic
     }
 
     #[test]

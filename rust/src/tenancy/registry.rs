@@ -94,6 +94,9 @@ struct Inner {
     charged: BTreeMap<String, (String, usize)>,
     /// Every user that ever submitted or was configured.
     seen: BTreeSet<String>,
+    /// Object-store bytes attributed per user, refreshed by each GC
+    /// mark pass (checkpoint params + records of the user's sessions).
+    storage_bytes: BTreeMap<String, u64>,
 }
 
 /// Thread-safe quota + occupancy store (see module docs).
@@ -109,6 +112,7 @@ impl TenantRegistry {
                 quotas: BTreeMap::new(),
                 charged: BTreeMap::new(),
                 seen: BTreeSet::new(),
+                storage_bytes: BTreeMap::new(),
             }),
         }
     }
@@ -164,6 +168,20 @@ impl TenantRegistry {
     /// time.
     pub fn release(&self, session: &str) -> Option<(String, usize)> {
         self.inner.lock().unwrap().charged.remove(session)
+    }
+
+    /// Overwrite `user`'s attributed object-store bytes (idempotent —
+    /// each GC mark pass recomputes the absolute figure, so storage
+    /// joins GPU-seconds in the per-tenant accounting).
+    pub fn set_storage_bytes(&self, user: &str, bytes: u64) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen.insert(user.to_string());
+        inner.storage_bytes.insert(user.to_string(), bytes);
+    }
+
+    /// Object-store bytes attributed to `user` by the last GC pass.
+    pub fn storage_bytes_of(&self, user: &str) -> u64 {
+        self.inner.lock().unwrap().storage_bytes.get(user).copied().unwrap_or(0)
     }
 
     /// Currently charged `(sessions, gpus)` held by `user`.
@@ -222,6 +240,18 @@ mod tests {
         assert_eq!(r.release("s1"), None); // double release is a no-op
         assert_eq!(r.occupancy("kim"), (1, 1));
         assert_eq!(r.occupancy("lee"), (0, 0));
+    }
+
+    #[test]
+    fn storage_bytes_overwrite_and_default_to_zero() {
+        let r = TenantRegistry::new(TenantQuota::default());
+        assert_eq!(r.storage_bytes_of("kim"), 0);
+        r.set_storage_bytes("kim", 4096);
+        assert_eq!(r.storage_bytes_of("kim"), 4096);
+        // Absolute overwrite, not accumulation — GC recomputes.
+        r.set_storage_bytes("kim", 1024);
+        assert_eq!(r.storage_bytes_of("kim"), 1024);
+        assert!(r.users().contains(&"kim".to_string()));
     }
 
     #[test]

@@ -20,6 +20,10 @@
 //! * `GET /api/v1/tenants`       — JSON per-user fair-share report
 //!   (quotas, GPU-second usage, occupancy, admission-queue depth)
 //!   dispatched as a `tenant_report` query
+//! * `GET /api/v1/durability`    — JSON WAL/snapshot/GC counters
+//!   (records and bytes in the live segment, snapshot cadence
+//!   progress, subscription drop counts, last GC sweep) dispatched
+//!   as a `durability_status` query
 //! * `GET /api/v1/board?dataset=<ds>&user=<u>&limit=<n>` — leaderboard
 //!   rows, optionally sliced to one user (global ranks kept),
 //!   dispatched as a `board` query
@@ -34,7 +38,8 @@
 //!   `pause`, `resume`, `stop`, `infer`, `drive`, `run_to_completion`,
 //!   `kill_node`, `list_sessions`, `get_session`, `board`,
 //!   `cluster_status`, `executor_status`, `events_since`,
-//!   `submit_trial_batch`, `tenant_report`, `set_quota`) into the attached
+//!   `submit_trial_batch`, `tenant_report`, `set_quota`,
+//!   `durability_status`) into the attached
 //!   [`PlatformService`](crate::api::PlatformService); the JSON body is
 //!   the verb's `args` object and the reply is an `ApiResponse`
 //!   envelope. Error codes map to HTTP: `not_found`→404,
@@ -230,6 +235,16 @@ fn tenants_json(state: &WebState) -> Response {
     api_response(api.call(ApiRequest::TenantReport))
 }
 
+/// `GET /api/v1/durability`: the WAL/snapshot/GC counters as a read
+/// route, so dashboards can poll crash-safety health without a POST
+/// body.
+fn durability_json(state: &WebState) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::DurabilityStatus))
+}
+
 /// `GET /api/v1/board?dataset=&user=&limit=`: the leaderboard query as
 /// a read route — `user=` slices to one tenant's rows while keeping
 /// their global ranks. The query string becomes a `board` dispatch, so
@@ -322,6 +337,9 @@ fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
         }
         if path == "/api/v1/tenants" {
             return tenants_json(state);
+        }
+        if path == "/api/v1/durability" {
+            return durability_json(state);
         }
         if path == "/api/v1/board" {
             return board_query_json(state, query);
@@ -772,6 +790,7 @@ mod tests {
         assert_eq!(handle(&s, "GET", "/api/v1/executor", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/events?since=0", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/tenants", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/durability", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist", "").status, 503);
     }
 
@@ -828,6 +847,49 @@ mod tests {
         // dataset is rejected by the wire layer.
         assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist&limit=soon", "").status, 400);
         assert_eq!(handle(&s, "GET", "/api/v1/board?user=kim", "").status, 400);
+    }
+
+    #[test]
+    fn durability_route_serves_wal_counters() {
+        use crate::api::DurabilityView;
+        // Stub service answering a canned durability snapshot.
+        let (api, rx) = crate::api::service_channel();
+        std::thread::spawn(move || {
+            while let Ok(call) = rx.recv() {
+                let resp = match call.request() {
+                    ApiRequest::DurabilityStatus => ApiResponse::Durability {
+                        durability: DurabilityView {
+                            enabled: true,
+                            wal_records: 7,
+                            wal_bytes: 1024,
+                            wal_last_seq: Some(41),
+                            records_since_snapshot: 7,
+                            snapshot_every: 512,
+                            snapshots: 2,
+                            last_snapshot_seq: 34,
+                            wal_dropped: 0,
+                            consumer_dropped: 0,
+                            gc_enabled: true,
+                            gc_live_objects: 10,
+                            gc_live_bytes: 4096,
+                            gc_swept_objects: 1,
+                            gc_swept_bytes: 128,
+                        },
+                    },
+                    _ => ApiResponse::Sessions { sessions: vec![] },
+                };
+                call.respond(resp);
+            }
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/durability", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("durability"));
+        assert_eq!(j.at(&["data", "durability", "wal_records"]).unwrap().as_i64(), Some(7));
+        assert_eq!(j.at(&["data", "durability", "snapshots"]).unwrap().as_i64(), Some(2));
+        assert_eq!(j.at(&["data", "durability", "wal_last_seq"]).unwrap().as_i64(), Some(41));
     }
 
     #[test]

@@ -4,9 +4,9 @@
 //! `PlatformService::dispatch`.
 
 use nsml::api::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, ExecutorStats, NodeStatusView,
-    NsmlPlatform, PlatformConfig, PlatformService, RunParams, SessionView, TenantView, TrialSpec,
-    WorkerStatView, ALL_KINDS, ALL_VERBS,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ExecutorStats,
+    NodeStatusView, NsmlPlatform, PlatformConfig, PlatformService, RunParams, SessionView,
+    TenantView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS,
 };
 use nsml::session::SessionState;
 use nsml::util::json::parse;
@@ -56,6 +56,7 @@ fn sample_requests() -> Vec<ApiRequest> {
             weight: None,
             class: None,
         },
+        ApiRequest::DurabilityStatus,
         ApiRequest::EventsSince {
             since: 12,
             kind: Some("state".into()),
@@ -213,6 +214,25 @@ fn sample_responses() -> Vec<ApiResponse> {
                     preemptions: 0,
                 },
             ],
+        },
+        ApiResponse::Durability {
+            durability: DurabilityView {
+                enabled: true,
+                wal_records: 12,
+                wal_bytes: 2048,
+                wal_last_seq: Some(99),
+                records_since_snapshot: 12,
+                snapshot_every: 512,
+                snapshots: 3,
+                last_snapshot_seq: 87,
+                wal_dropped: 0,
+                consumer_dropped: 1,
+                gc_enabled: true,
+                gc_live_objects: 40,
+                gc_live_bytes: 1 << 20,
+                gc_swept_objects: 7,
+                gc_swept_bytes: 4096,
+            },
         },
         ApiResponse::Error {
             error: ApiError::failed("session kim/mnist/1 is not active").with_session("kim/mnist/1"),

@@ -28,6 +28,16 @@ else
     echo "artifacts not built (rust/artifacts/manifest.json missing); skipping example smoke"
 fi
 
+echo "== recovery smoke: cargo test --release --test durability =="
+if [ -f artifacts/manifest.json ]; then
+    # Optimized re-run of the crash-recovery suite: debug-mode training
+    # under `cargo test -q` above is slow enough that these stay shallow;
+    # release mode exercises the full crash/replay/GC scenarios.
+    cargo test --release --test durability
+else
+    echo "artifacts not built (rust/artifacts/manifest.json missing); skipping recovery smoke"
+fi
+
 echo "== cargo clippy --all-targets -- -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
