@@ -40,7 +40,7 @@ fn main() {
         assert_eq!(platform.sessions.list().len(), 4);
     });
     bench.run("dispatch: list_sessions", || {
-        match service.dispatch(ApiRequest::ListSessions) {
+        match service.dispatch(ApiRequest::list_sessions()) {
             ApiResponse::Sessions { sessions } => assert_eq!(sessions.len(), 4),
             other => panic!("{:?}", other),
         }
@@ -81,7 +81,7 @@ fn main() {
     });
 
     // The wire tax: parse the JSON envelope, dispatch, serialize back.
-    let wire_req = ApiRequest::ListSessions.to_json().to_string();
+    let wire_req = ApiRequest::list_sessions().to_json().to_string();
     bench.run("wire: dispatch_json list_sessions", || {
         let out = service.dispatch_json(&wire_req);
         assert!(out.contains("\"kind\":\"sessions\""));

@@ -1,0 +1,215 @@
+//! HTTP front-end throughput: the pooled keep-alive server vs the old
+//! thread-per-connection baseline, measured while the daemon drive loop
+//! trains sessions on the same platform (the `nsml serve` deployment
+//! shape). N concurrent clients hammer `GET /` — a route rendered
+//! straight off the shared stores, so the comparison isolates the HTTP
+//! layer itself: per-request connect + thread spawn (baseline) vs a
+//! reused socket into a bounded worker pool (pooled).
+//!
+//! Acceptance: pooled keep-alive sustains >= 2x the baseline's req/s at
+//! 16 concurrent clients, with bounded p99 per-request latency.
+//!
+//! Run: `cargo bench --bench bench_web` (BENCH_SMOKE=1 shrinks the
+//! client count and workload and skips the perf assertions).
+
+use nsml::api::{
+    ApiRequest, ApiResponse, DaemonOpts, NsmlPlatform, PlatformConfig, PlatformService, RunParams,
+};
+use nsml::util::bench::{self, Bench};
+use nsml::web::{serve_thread_per_conn, serve_with, ServeOpts, WebState};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+fn find(hay: &[u8], needle: &[u8], from: usize) -> Option<usize> {
+    hay.windows(needle.len()).skip(from).position(|w| w == needle).map(|p| p + from)
+}
+
+/// Read exactly one HTTP/1.1 response off a keep-alive socket: headers,
+/// then `Content-Length` bytes of body. Leftover bytes stay in `buf`.
+fn read_one_response(stream: &mut TcpStream, buf: &mut Vec<u8>) {
+    let mut scanned = 0;
+    let header_end = loop {
+        if let Some(pos) = find(buf, b"\r\n\r\n", scanned) {
+            break pos + 4;
+        }
+        scanned = buf.len().saturating_sub(3);
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read");
+        assert!(n > 0, "server closed the keep-alive socket mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "{}", head);
+    let body_len = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse::<usize>().unwrap())
+        })
+        .unwrap_or(0);
+    while buf.len() < header_end + body_len {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read body");
+        assert!(n > 0, "server closed the keep-alive socket mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    buf.drain(..header_end + body_len);
+}
+
+/// One socket, `n` sequential requests: the keep-alive client.
+fn keepalive_client(port: u16, n: usize) -> Vec<f64> {
+    let mut lat = Vec::with_capacity(n);
+    let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+    let mut buf = Vec::new();
+    for _ in 0..n {
+        let t0 = Instant::now();
+        write!(stream, "GET / HTTP/1.1\r\nHost: bench\r\n\r\n").expect("write");
+        read_one_response(&mut stream, &mut buf);
+        lat.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    lat
+}
+
+/// A fresh connection per request: how the old accept loop was used.
+fn reconnect_client(port: u16, n: usize) -> Vec<f64> {
+    let mut lat = Vec::with_capacity(n);
+    for _ in 0..n {
+        let t0 = Instant::now();
+        let mut s = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+        s.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        write!(s, "GET / HTTP/1.1\r\nHost: bench\r\nConnection: close\r\n\r\n").expect("write");
+        let mut out = Vec::new();
+        s.read_to_end(&mut out).expect("read");
+        assert!(out.starts_with(b"HTTP/1.1 200"));
+        lat.push(t0.elapsed().as_secs_f64() * 1000.0);
+    }
+    lat
+}
+
+/// Run `clients` concurrent client threads; returns (all per-request
+/// latencies in ms, aggregate req/s).
+fn phase(port: u16, clients: usize, per_client: usize, keepalive: bool) -> (Vec<f64>, f64) {
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..clients)
+        .map(|_| {
+            std::thread::spawn(move || {
+                if keepalive {
+                    keepalive_client(port, per_client)
+                } else {
+                    reconnect_client(port, per_client)
+                }
+            })
+        })
+        .collect();
+    let mut all = Vec::new();
+    for h in handles {
+        all.extend(h.join().expect("client thread"));
+    }
+    let rps = (clients * per_client) as f64 / t0.elapsed().as_secs_f64();
+    (all, rps)
+}
+
+fn pctl(samples: &mut [f64], q: f64) -> f64 {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    samples[((samples.len() as f64 - 1.0) * q).round() as usize]
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_web: artifacts not built (rust/artifacts/manifest.json); skipping");
+        return;
+    }
+    let smoke = bench::smoke();
+    let clients = if smoke { 2 } else { 16 };
+    let per_client = if smoke { 10 } else { 150 };
+
+    // Live platform with sessions that keep training for the whole
+    // measurement window; the main thread runs the daemon drive loop
+    // exactly as `nsml serve` does.
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = "artifacts".into();
+    let service = PlatformService::new(NsmlPlatform::new(cfg).unwrap());
+    for i in 0..4u64 {
+        let mut p = RunParams::new("bench", "mnist");
+        p.total_steps = if smoke { 64 } else { 1_000_000 };
+        p.eval_every = p.total_steps;
+        p.checkpoint_every = p.total_steps;
+        p.seed = i;
+        match service.dispatch(ApiRequest::Run(p)) {
+            ApiResponse::Submitted { .. } => {}
+            other => panic!("run dispatch failed: {:?}", other),
+        }
+    }
+
+    // Both servers render off the same shared stores. The handle must
+    // outlive the daemon (a disconnected channel would stop the loop).
+    let platform = service.platform();
+    let mk_state = || WebState {
+        sessions: platform.sessions.clone(),
+        leaderboard: platform.leaderboard.clone(),
+        cluster: Some(platform.cluster.clone()),
+        events: platform.events.clone(),
+        api: None,
+    };
+    let (_keep_api, rx) = nsml::api::service_channel();
+    let (base_port, _baseline) = serve_thread_per_conn(mk_state(), 0).unwrap();
+    let pooled =
+        serve_with(mk_state(), 0, ServeOpts { workers: clients.max(8), ..ServeOpts::default() })
+            .unwrap();
+    let pooled_port = pooled.port();
+
+    let opts = DaemonOpts {
+        chunk: 8,
+        idle_wait: Duration::from_millis(5),
+        ..DaemonOpts::default()
+    };
+    let stop = opts.stop.clone();
+    let meas = std::thread::spawn(move || {
+        let base = phase(base_port, clients, per_client, false);
+        let pool = phase(pooled_port, clients, per_client, true);
+        stop.store(true, Ordering::SeqCst);
+        (base, pool)
+    });
+    service.run_daemon(&rx, &opts).unwrap();
+    let ((mut base_lat, base_rps), (mut pool_lat, pool_rps)) = meas.join().expect("measurement");
+    pooled.shutdown();
+
+    let mut b = Bench::new("web_http");
+    b.record("thread-per-conn GET /", base_lat.clone(), None);
+    b.record("pooled keep-alive GET /", pool_lat.clone(), None);
+    b.finish();
+
+    let base_p99 = pctl(&mut base_lat, 0.99);
+    let pool_p99 = pctl(&mut pool_lat, 0.99);
+    let status = service.platform().service_status();
+    println!(
+        "{} clients x {} requests while the daemon drove {} rounds ({:.1} rounds/s)",
+        clients, per_client, status.rounds, status.rounds_per_sec
+    );
+    println!("  thread-per-conn:   {:>8.0} req/s   p99 {:>7.2}ms", base_rps, base_p99);
+    println!(
+        "  pooled keep-alive: {:>8.0} req/s   p99 {:>7.2}ms   ({:.2}x req/s)",
+        pool_rps,
+        pool_p99,
+        pool_rps / base_rps
+    );
+
+    if smoke {
+        println!("smoke mode: perf assertions skipped");
+        return;
+    }
+    assert!(
+        pool_rps >= 2.0 * base_rps,
+        "pooled keep-alive must sustain >= 2x the thread-per-conn baseline: {:.0} vs {:.0} req/s",
+        pool_rps,
+        base_rps
+    );
+    assert!(
+        pool_p99 <= 500.0,
+        "pooled p99 latency must stay bounded under load: {:.2}ms",
+        pool_p99
+    );
+}

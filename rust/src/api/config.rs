@@ -65,6 +65,18 @@ pub struct PlatformConfig {
     /// Sweep unreferenced checkpoint/codepack objects after each
     /// snapshot (`[durability] gc`); `nsml gc` forces a sweep.
     pub gc: bool,
+    /// HTTP worker-pool size for `nsml serve` / `nsml web`
+    /// (`[service] http_workers`).
+    pub http_workers: usize,
+    /// Steps each active session may advance per daemon drive round
+    /// (`[service] chunk`).
+    pub serve_chunk: u64,
+    /// How long the daemon loop blocks waiting for requests when no
+    /// session is runnable (`[service] idle_ms`).
+    pub serve_idle_ms: u64,
+    /// Per-connection keep-alive read timeout before the worker
+    /// recycles the socket (`[service] keepalive_ms`).
+    pub http_keepalive_ms: u64,
 }
 
 impl Default for PlatformConfig {
@@ -93,6 +105,10 @@ impl Default for PlatformConfig {
             wal_fsync_every: 64,
             snapshot_every: 512,
             gc: true,
+            http_workers: 8,
+            serve_chunk: 25,
+            serve_idle_ms: 50,
+            http_keepalive_ms: 500,
         }
     }
 }
@@ -169,6 +185,14 @@ impl PlatformConfig {
                 .int_or("durability", "snapshot_every", dflt.snapshot_every as i64)
                 .max(1) as u64,
             gc: cfg.bool_or("durability", "gc", dflt.gc),
+            http_workers: cfg.int_or("service", "http_workers", dflt.http_workers as i64).max(1)
+                as usize,
+            serve_chunk: cfg.int_or("service", "chunk", dflt.serve_chunk as i64).max(1) as u64,
+            serve_idle_ms: cfg.int_or("service", "idle_ms", dflt.serve_idle_ms as i64).max(1)
+                as u64,
+            http_keepalive_ms: cfg
+                .int_or("service", "keepalive_ms", dflt.http_keepalive_ms as i64)
+                .max(1) as u64,
         })
     }
 }
@@ -247,6 +271,11 @@ enabled = false
 fsync_every = 8
 snapshot_every = 100
 gc = false
+[service]
+http_workers = 3
+chunk = 10
+idle_ms = 5
+keepalive_ms = 250
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -281,6 +310,10 @@ gc = false
         assert_eq!(c.wal_fsync_every, 8);
         assert_eq!(c.snapshot_every, 100);
         assert!(!c.gc);
+        assert_eq!(c.http_workers, 3);
+        assert_eq!(c.serve_chunk, 10);
+        assert_eq!(c.serve_idle_ms, 5);
+        assert_eq!(c.http_keepalive_ms, 250);
     }
 
     #[test]
@@ -316,5 +349,10 @@ gc = false
         assert_eq!(c.wal_fsync_every, 64);
         assert_eq!(c.snapshot_every, 512);
         assert!(c.gc);
+        // Service defaults: pooled HTTP front end, 25ms drive chunks.
+        assert_eq!(c.http_workers, 8);
+        assert_eq!(c.serve_chunk, 25);
+        assert_eq!(c.serve_idle_ms, 50);
+        assert_eq!(c.http_keepalive_ms, 500);
     }
 }

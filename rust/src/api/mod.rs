@@ -60,6 +60,18 @@
 //! `nsml gc`), attributing per-tenant storage bytes. Status surfaces:
 //! `durability_status` (wire), `GET /api/v1/durability` (web).
 //!
+//! Service mode (`nsml serve`, `[service]` config): the platform can
+//! run as an always-on daemon. [`PlatformService::run_daemon`]
+//! alternates [`NsmlPlatform::drive_round`] with draining queued
+//! [`ServiceCall`]s — training advances continuously with no client
+//! `drive`s, and every dispatch is answered between rounds
+//! (pause-the-loop: a mutation never races a round). The web front end
+//! is a bounded worker pool speaking HTTP/1.1 keep-alive, with
+//! `GET /api/v1/events/stream` streaming the bus as Server-Sent
+//! Events. Loop telemetry (rounds, last-round duration, rounds/sec,
+//! dispatches) publishes as `loop` events and reads back through the
+//! `service_status` verb / `GET /api/v1/service`.
+//!
 //! Concurrency model: platform control state (cluster, scheduler,
 //! sessions, leaderboard) is thread-safe, and model *execution* runs on
 //! the [`crate::executor`] worker pool — each worker thread owns its
@@ -85,12 +97,12 @@ mod trial;
 pub mod wire;
 
 pub use config::PlatformConfig;
-pub use service::{service_channel, PlatformService, ServiceCall, ServiceHandle};
+pub use service::{service_channel, DaemonOpts, PlatformService, ServiceCall, ServiceHandle};
 pub use trial::PlatformTrialRunner;
 pub use wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ErrorCode,
-    ExecutorStats, NodeStatusView, RunParams, SessionView, TenantView, TrialSpec, WorkerStatView,
-    ALL_KINDS, ALL_VERBS, API_VERSION,
+    ExecutorStats, NodeStatusView, RunParams, ServiceStatusView, SessionView, TenantView,
+    TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS, API_VERSION,
 };
 
 use crate::cluster::Cluster;
@@ -174,6 +186,23 @@ pub struct NsmlPlatform {
     /// Event-sourced durability: WAL + snapshots + GC. `None` when no
     /// state dir is configured or `[durability] enabled = false`.
     durability: Option<Durability>,
+    /// Daemon drive-loop telemetry (rounds, durations, dispatches),
+    /// read back through the `service_status` verb. Updated only by
+    /// [`PlatformService::run_daemon`]; all zeros otherwise.
+    loop_stats: std::sync::Mutex<LoopStats>,
+}
+
+/// Mutable daemon-loop counters behind [`NsmlPlatform::service_status`].
+#[derive(Debug, Default)]
+struct LoopStats {
+    running: bool,
+    rounds: u64,
+    last_round_ms: f64,
+    progressed_total: u64,
+    dispatches: u64,
+    /// Wall-clock loop start; rounds/sec is measured against real time
+    /// (the drive loop's throughput), not virtual time.
+    started: Option<std::time::Instant>,
 }
 
 impl NsmlPlatform {
@@ -261,6 +290,7 @@ impl NsmlPlatform {
             executor,
             consumers,
             durability,
+            loop_stats: std::sync::Mutex::new(LoopStats::default()),
             config,
         };
         platform.bootstrap()?;
@@ -871,6 +901,74 @@ impl NsmlPlatform {
         ))
     }
 
+    /// Sessions the drive loop still has work for: non-terminal and
+    /// not user-paused (a paused session waits for `resume`, not
+    /// driving). The daemon idles on the request channel when this
+    /// reaches zero.
+    pub fn active_sessions(&self) -> usize {
+        self.sessions
+            .list()
+            .into_iter()
+            .filter(|r| !r.state.is_terminal() && r.state != SessionState::Paused)
+            .count()
+    }
+
+    // ------------------------------------------------------------------
+    // Daemon-loop telemetry (`service_status`, `GET /api/v1/service`)
+    // ------------------------------------------------------------------
+
+    /// A daemon loop is starting: reset the counters and begin the
+    /// rounds/sec wall-clock.
+    pub(crate) fn loop_started(&self) {
+        let mut s = self.loop_stats.lock().unwrap();
+        *s = LoopStats { running: true, started: Some(std::time::Instant::now()), ..LoopStats::default() };
+    }
+
+    /// The daemon loop exited; the accumulated counters stay readable.
+    pub(crate) fn loop_stopped(&self) {
+        self.loop_stats.lock().unwrap().running = false;
+    }
+
+    /// Record one completed daemon round and publish it on the bus.
+    pub(crate) fn loop_round_done(&self, round_ms: f64, progressed: usize) {
+        let (round, rounds_per_sec) = {
+            let mut s = self.loop_stats.lock().unwrap();
+            s.rounds += 1;
+            s.last_round_ms = round_ms;
+            s.progressed_total += progressed as u64;
+            (s.rounds, rate_of(&s))
+        };
+        self.events.bus().publish(
+            Level::Debug,
+            "service",
+            "",
+            EventKind::LoopSampled {
+                round,
+                round_ms,
+                progressed: progressed as u64,
+                rounds_per_sec,
+            },
+        );
+    }
+
+    /// Count one request the daemon answered between rounds.
+    pub(crate) fn loop_dispatched(&self) {
+        self.loop_stats.lock().unwrap().dispatches += 1;
+    }
+
+    /// The daemon loop's counters for the `service_status` verb.
+    pub fn service_status(&self) -> ServiceStatusView {
+        let s = self.loop_stats.lock().unwrap();
+        ServiceStatusView {
+            running: s.running,
+            rounds: s.rounds,
+            last_round_ms: s.last_round_ms,
+            rounds_per_sec: rate_of(&s),
+            progressed_total: s.progressed_total,
+            dispatches: s.dispatches,
+        }
+    }
+
     /// Session completed: release its resources. The leaderboard
     /// submission is *not* made here — the run's `done` StateChanged
     /// event drives it when the consumer subscription is pumped at the
@@ -1340,6 +1438,22 @@ impl NsmlPlatform {
             self.events.info("durability", "", "recovery baseline");
         }
         self.snapshot_now()
+    }
+}
+
+/// Rounds per wall-clock second since the loop started (0.0 before the
+/// first measurable tick — never a division by zero).
+fn rate_of(s: &LoopStats) -> f64 {
+    match s.started {
+        Some(t0) => {
+            let secs = t0.elapsed().as_secs_f64();
+            if secs > 0.0 {
+                s.rounds as f64 / secs
+            } else {
+                0.0
+            }
+        }
+        None => 0.0,
     }
 }
 

@@ -20,6 +20,19 @@
 //!   [`PlatformService::serve`] (or [`PlatformService::serve_one`]).
 //!   Dispatches that advance training (`drive`, `run_to_completion`)
 //!   fan the work out across the executor pool before replying.
+//!
+//! **Daemon mode** (`nsml serve`) combines both:
+//! [`PlatformService::run_daemon`] runs on the platform-owning thread
+//! and alternates continuous [`NsmlPlatform::drive_round`] calls with
+//! draining queued [`ServiceCall`]s, so training advances with no
+//! client `drive`s while HTTP threads keep dispatching. Requests are
+//! only answered *between* rounds — pause-the-loop semantics: a
+//! mutation never races a round that might touch the same session.
+//! The loop idles on the channel when no session is active, exits
+//! cleanly when every handle drops (or `stop` is raised, or the
+//! bounded-round budget runs out), and persists state on the way out.
+//! Loop telemetry (rounds, last-round duration, rounds/sec) lands on
+//! the bus as `loop` events and in the `service_status` counters.
 
 use super::wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ExecutorStats,
@@ -30,7 +43,9 @@ use crate::cluster::NodeId;
 use crate::runtime::TensorData;
 use crate::tenancy::PriorityClass;
 use std::collections::BTreeMap;
-use std::sync::mpsc;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc};
+use std::time::{Duration, Instant};
 
 /// One queued request plus its reply slot (see [`service_channel`]).
 pub struct ServiceCall {
@@ -76,6 +91,32 @@ impl ServiceHandle {
 pub fn service_channel() -> (ServiceHandle, mpsc::Receiver<ServiceCall>) {
     let (tx, rx) = mpsc::channel();
     (ServiceHandle { tx }, rx)
+}
+
+/// Knobs for [`PlatformService::run_daemon`] (`[service]` config).
+#[derive(Debug, Clone)]
+pub struct DaemonOpts {
+    /// Steps each active session may advance per round.
+    pub chunk: u64,
+    /// Stop after this many rounds, or as soon as no session is active
+    /// (0 = run until every handle drops or `stop` is raised).
+    pub max_rounds: u64,
+    /// How long one idle tick blocks on the request channel.
+    pub idle_wait: Duration,
+    /// Cooperative shutdown flag, typically shared with the HTTP
+    /// front end.
+    pub stop: Arc<AtomicBool>,
+}
+
+impl Default for DaemonOpts {
+    fn default() -> DaemonOpts {
+        DaemonOpts {
+            chunk: 25,
+            max_rounds: 0,
+            idle_wait: Duration::from_millis(50),
+            stop: Arc::new(AtomicBool::new(false)),
+        }
+    }
 }
 
 /// The versioned service layer over the facade.
@@ -154,8 +195,17 @@ impl PlatformService {
                 self.platform.kill_node(NodeId(node));
                 ApiResponse::Ack { verb: "kill_node".into(), session: None }
             }
-            ApiRequest::ListSessions => ApiResponse::Sessions {
-                sessions: self.platform.sessions.list().iter().map(SessionView::from_record).collect(),
+            ApiRequest::ListSessions { limit, offset, user } => ApiResponse::Sessions {
+                sessions: self
+                    .platform
+                    .sessions
+                    .list()
+                    .iter()
+                    .filter(|rec| user.as_deref().map_or(true, |u| rec.spec.user == u))
+                    .skip(offset)
+                    .take(limit.max(1))
+                    .map(SessionView::from_record)
+                    .collect(),
             },
             ApiRequest::GetSession { session } => match self.platform.sessions.get(&session) {
                 Some(rec) => ApiResponse::Session { session: SessionView::from_record(&rec) },
@@ -195,6 +245,9 @@ impl PlatformService {
             ApiRequest::ExecutorStatus => ApiResponse::Executor { executor: self.executor_view() },
             ApiRequest::DurabilityStatus => {
                 ApiResponse::Durability { durability: self.durability_view() }
+            }
+            ApiRequest::ServiceStatus => {
+                ApiResponse::Service { service: self.platform.service_status() }
             }
             ApiRequest::TenantReport => ApiResponse::Tenants { tenants: self.tenant_views() },
             ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
@@ -338,6 +391,73 @@ impl PlatformService {
             }
             Err(_) => false,
         }
+    }
+
+    /// The always-on drive loop behind `nsml serve`.
+    ///
+    /// Alternates [`NsmlPlatform::drive_round`] with draining every
+    /// queued [`ServiceCall`], so training advances continuously while
+    /// clients dispatch — and every request is answered *between*
+    /// rounds (a mutation never interleaves with a round). While no
+    /// session is active the loop blocks on the channel instead of
+    /// spinning. Returns after a clean shutdown — channel disconnected
+    /// (every [`ServiceHandle`] dropped), `opts.stop` raised, or the
+    /// bounded-round budget spent — and saves platform state on exit.
+    pub fn run_daemon(
+        &self,
+        rx: &mpsc::Receiver<ServiceCall>,
+        opts: &DaemonOpts,
+    ) -> anyhow::Result<()> {
+        self.platform.loop_started();
+        let result = self.daemon_loop(rx, opts);
+        self.platform.loop_stopped();
+        self.platform.save_state()?;
+        result
+    }
+
+    fn daemon_loop(&self, rx: &mpsc::Receiver<ServiceCall>, opts: &DaemonOpts) -> anyhow::Result<()> {
+        let mut rounds: u64 = 0;
+        loop {
+            if opts.stop.load(Ordering::SeqCst) {
+                return Ok(());
+            }
+            if opts.max_rounds > 0 && rounds >= opts.max_rounds {
+                return Ok(());
+            }
+            if self.platform.active_sessions() > 0 {
+                let t0 = Instant::now();
+                let progressed = self.platform.drive_round(opts.chunk)?;
+                self.platform.loop_round_done(t0.elapsed().as_secs_f64() * 1000.0, progressed);
+                rounds += 1;
+                // Pause-the-loop point: answer everything that queued
+                // up during the round before starting the next one.
+                loop {
+                    match rx.try_recv() {
+                        Ok(call) => self.serve_daemon_call(call),
+                        Err(mpsc::TryRecvError::Empty) => break,
+                        Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+                    }
+                }
+            } else {
+                // Idle: nothing to drive, so block (briefly) for work.
+                // A bounded run exits here instead of waiting out the
+                // budget one idle tick at a time.
+                if opts.max_rounds > 0 {
+                    return Ok(());
+                }
+                match rx.recv_timeout(opts.idle_wait) {
+                    Ok(call) => self.serve_daemon_call(call),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {}
+                    Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
+                }
+            }
+        }
+    }
+
+    fn serve_daemon_call(&self, call: ServiceCall) {
+        self.platform.loop_dispatched();
+        let resp = self.dispatch(call.req);
+        let _ = call.reply.send(resp);
     }
 
     fn not_found(&self, session: &str) -> ApiResponse {
@@ -675,7 +795,7 @@ mod tests {
         let (handle, rx) = service_channel();
         let client = std::thread::spawn(move || {
             let resp = handle.call(ApiRequest::ClusterStatus);
-            let listed = handle.call(ApiRequest::ListSessions);
+            let listed = handle.call(ApiRequest::list_sessions());
             (resp, listed)
         });
         // Serve exactly the two calls, then let the handle drop.
@@ -692,10 +812,104 @@ mod tests {
     }
 
     #[test]
+    fn list_sessions_pages_and_filters() {
+        let Some(s) = service() else { return };
+        for user in ["ann", "ann", "bob"] {
+            let resp = s.dispatch(ApiRequest::Run(crate::api::RunParams::new(user, "mnist")));
+            assert!(!resp.is_error(), "{:?}", resp);
+        }
+        let listed = |req: ApiRequest| match s.dispatch(req) {
+            ApiResponse::Sessions { sessions } => sessions,
+            other => panic!("{:?}", other),
+        };
+        assert_eq!(listed(ApiRequest::list_sessions()).len(), 3);
+        let page = listed(ApiRequest::ListSessions { limit: 2, offset: 0, user: None });
+        assert_eq!(page.len(), 2);
+        let rest = listed(ApiRequest::ListSessions { limit: 2, offset: 2, user: None });
+        assert_eq!(rest.len(), 1);
+        // Pages tile the full list without overlap.
+        assert!(page.iter().all(|s| s.id != rest[0].id));
+        // The user filter applies before paging: offset 1 of ann's
+        // sessions is her second, not a global slice.
+        let ann = listed(ApiRequest::ListSessions { limit: 10, offset: 1, user: Some("ann".into()) });
+        assert_eq!(ann.len(), 1);
+        assert_eq!(ann[0].user, "ann");
+        assert!(listed(ApiRequest::ListSessions {
+            limit: 10,
+            offset: 0,
+            user: Some("nobody".into())
+        })
+        .is_empty());
+    }
+
+    #[test]
+    fn daemon_drives_sessions_to_done_without_client_drives() {
+        let Some(s) = service() else { return };
+        // Idle platform: all-zero status, not running.
+        match s.dispatch(ApiRequest::ServiceStatus) {
+            ApiResponse::Service { service } => {
+                assert_eq!(service, crate::api::ServiceStatusView::default())
+            }
+            other => panic!("{:?}", other),
+        }
+        let (handle, rx) = service_channel();
+        let client = std::thread::spawn(move || {
+            let mut params = crate::api::RunParams::new("kim", "mnist");
+            params.total_steps = 40;
+            params.checkpoint_every = 20;
+            params.eval_every = 10;
+            match handle.call(ApiRequest::Run(params)) {
+                ApiResponse::Submitted { session } => session,
+                other => panic!("{:?}", other),
+            }
+            // Handle drops here; the daemon keeps driving to Done and
+            // then exits on the disconnected channel — no `drive` call
+            // ever crossed the wire.
+        });
+        let opts = DaemonOpts { idle_wait: Duration::from_millis(2), ..DaemonOpts::default() };
+        s.run_daemon(&rx, &opts).unwrap();
+        let id = client.join().unwrap();
+        let rec = s.platform().sessions.get(&id).unwrap();
+        assert_eq!(rec.state, crate::session::SessionState::Done, "{:?}", rec);
+        // Telemetry: rounds ticked, dispatches counted, loop stopped.
+        match s.dispatch(ApiRequest::ServiceStatus) {
+            ApiResponse::Service { service } => {
+                assert!(!service.running);
+                assert!(service.rounds > 0, "{:?}", service);
+                assert!(service.progressed_total > 0, "{:?}", service);
+                assert_eq!(service.dispatches, 1);
+                assert!(service.rounds_per_sec > 0.0);
+            }
+            other => panic!("{:?}", other),
+        }
+        // The loop also narrated itself on the bus.
+        let batch = s.platform().events.bus().read_since(
+            0,
+            0,
+            &crate::events::EventFilter { kind: Some("loop".into()), ..Default::default() },
+        );
+        assert!(!batch.events.is_empty());
+    }
+
+    #[test]
+    fn daemon_bounded_rounds_and_stop_flag_exit() {
+        let Some(s) = service() else { return };
+        // No active sessions + bounded budget: returns immediately.
+        let (_handle, rx) = service_channel();
+        let opts = DaemonOpts { max_rounds: 3, ..DaemonOpts::default() };
+        s.run_daemon(&rx, &opts).unwrap();
+        // A pre-raised stop flag wins over everything else.
+        let opts = DaemonOpts::default();
+        opts.stop.store(true, Ordering::SeqCst);
+        s.run_daemon(&rx, &opts).unwrap();
+        assert!(!s.platform.service_status().running);
+    }
+
+    #[test]
     fn dead_service_yields_error_envelope() {
         let (handle, rx) = service_channel();
         drop(rx);
-        match handle.call(ApiRequest::ListSessions) {
+        match handle.call(ApiRequest::list_sessions()) {
             ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::Internal),
             other => panic!("{:?}", other),
         }

@@ -49,6 +49,7 @@ pub const ALL_VERBS: &[&str] = &[
     "tenant_report",
     "set_quota",
     "durability_status",
+    "service_status",
 ];
 
 /// Every response kind, in the order of the [`ApiResponse`] variants.
@@ -66,6 +67,7 @@ pub const ALL_KINDS: &[&str] = &[
     "events",
     "tenants",
     "durability",
+    "service",
     "error",
 ];
 
@@ -85,6 +87,10 @@ pub enum ErrorCode {
     FailedPrecondition,
     /// The platform failed while executing a valid request.
     Internal,
+    /// The HTTP path does not name any API route (web layer only —
+    /// dispatch never produces it, but clients see it in the same
+    /// uniform envelope instead of a bare 404 body).
+    UnknownRoute,
 }
 
 impl ErrorCode {
@@ -94,6 +100,7 @@ impl ErrorCode {
             ErrorCode::InvalidArgument => "invalid_argument",
             ErrorCode::FailedPrecondition => "failed_precondition",
             ErrorCode::Internal => "internal",
+            ErrorCode::UnknownRoute => "unknown_route",
         }
     }
 
@@ -104,6 +111,7 @@ impl ErrorCode {
             "invalid_argument" => Some(ErrorCode::InvalidArgument),
             "failed_precondition" => Some(ErrorCode::FailedPrecondition),
             "internal" => Some(ErrorCode::Internal),
+            "unknown_route" => Some(ErrorCode::UnknownRoute),
             _ => None,
         }
     }
@@ -133,6 +141,10 @@ impl ApiError {
 
     pub fn internal(message: impl Into<String>) -> ApiError {
         ApiError { code: ErrorCode::Internal, message: message.into(), session: None }
+    }
+
+    pub fn unknown_route(message: impl Into<String>) -> ApiError {
+        ApiError { code: ErrorCode::UnknownRoute, message: message.into(), session: None }
     }
 
     pub fn with_session(mut self, id: &str) -> ApiError {
@@ -314,8 +326,12 @@ pub enum ApiRequest {
     RunToCompletion { chunk: u64, max_rounds: usize },
     /// Inject a node failure (drills); affected sessions auto-recover.
     KillNode { node: u32 },
-    /// All session records.
-    ListSessions,
+    /// Session records, newest-submitted last, paged uniformly with the
+    /// other list surfaces: skip `offset`, return at most `limit`,
+    /// optionally sliced to one `user`'s sessions (the filter applies
+    /// before paging). Defaults (`limit` 100, `offset` 0, no user) keep
+    /// old bare `list_sessions` envelopes working.
+    ListSessions { limit: usize, offset: usize, user: Option<String> },
     /// One session record.
     GetSession { session: String },
     /// Top entries of a dataset's leaderboard, optionally sliced to
@@ -353,9 +369,19 @@ pub enum ApiRequest {
     /// WAL / snapshot / GC counters (`nsml gc --status`,
     /// `GET /api/v1/durability`).
     DurabilityStatus,
+    /// Daemon drive-loop telemetry: rounds, last-round duration,
+    /// rounds/sec and dispatch counts (`nsml serve`,
+    /// `GET /api/v1/service`).
+    ServiceStatus,
 }
 
 impl ApiRequest {
+    /// The default `list_sessions` page: first 100 records, every user —
+    /// what a bare `{"verb":"list_sessions"}` envelope parses to.
+    pub fn list_sessions() -> ApiRequest {
+        ApiRequest::ListSessions { limit: 100, offset: 0, user: None }
+    }
+
     pub fn verb(&self) -> &'static str {
         match self {
             ApiRequest::Run(_) => "run",
@@ -366,7 +392,7 @@ impl ApiRequest {
             ApiRequest::Drive { .. } => "drive",
             ApiRequest::RunToCompletion { .. } => "run_to_completion",
             ApiRequest::KillNode { .. } => "kill_node",
-            ApiRequest::ListSessions => "list_sessions",
+            ApiRequest::ListSessions { .. } => "list_sessions",
             ApiRequest::GetSession { .. } => "get_session",
             ApiRequest::Board { .. } => "board",
             ApiRequest::ClusterStatus => "cluster_status",
@@ -376,6 +402,7 @@ impl ApiRequest {
             ApiRequest::TenantReport => "tenant_report",
             ApiRequest::SetQuota { .. } => "set_quota",
             ApiRequest::DurabilityStatus => "durability_status",
+            ApiRequest::ServiceStatus => "service_status",
         }
     }
 
@@ -383,7 +410,7 @@ impl ApiRequest {
     pub fn is_mutation(&self) -> bool {
         !matches!(
             self,
-            ApiRequest::ListSessions
+            ApiRequest::ListSessions { .. }
                 | ApiRequest::GetSession { .. }
                 | ApiRequest::Board { .. }
                 | ApiRequest::ClusterStatus
@@ -391,6 +418,7 @@ impl ApiRequest {
                 | ApiRequest::EventsSince { .. }
                 | ApiRequest::TenantReport
                 | ApiRequest::DurabilityStatus
+                | ApiRequest::ServiceStatus
                 | ApiRequest::Infer { .. }
         )
     }
@@ -422,11 +450,16 @@ impl ApiRequest {
             ApiRequest::KillNode { node } => {
                 args.set("node", (*node).into());
             }
-            ApiRequest::ListSessions
-            | ApiRequest::ClusterStatus
+            ApiRequest::ListSessions { limit, offset, user } => {
+                args.set("limit", (*limit).into())
+                    .set("offset", (*offset).into())
+                    .set("user", user.as_deref().map(Json::from).unwrap_or(Json::Null));
+            }
+            ApiRequest::ClusterStatus
             | ApiRequest::ExecutorStatus
             | ApiRequest::TenantReport
-            | ApiRequest::DurabilityStatus => {}
+            | ApiRequest::DurabilityStatus
+            | ApiRequest::ServiceStatus => {}
             ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
                 args.set("user", user.as_str().into())
                     .set(
@@ -497,7 +530,11 @@ impl ApiRequest {
                 max_rounds: need_u64(args, "max_rounds")? as usize,
             }),
             "kill_node" => Ok(ApiRequest::KillNode { node: need_u64(args, "node")? as u32 }),
-            "list_sessions" => Ok(ApiRequest::ListSessions),
+            "list_sessions" => Ok(ApiRequest::ListSessions {
+                limit: opt_u64(args, "limit")?.unwrap_or(100) as usize,
+                offset: opt_u64(args, "offset")?.unwrap_or(0) as usize,
+                user: opt_str(args, "user")?,
+            }),
             "get_session" => Ok(ApiRequest::GetSession { session: need_str(args, "session")? }),
             "board" => Ok(ApiRequest::Board {
                 dataset: need_str(args, "dataset")?,
@@ -523,6 +560,7 @@ impl ApiRequest {
             }
             "tenant_report" => Ok(ApiRequest::TenantReport),
             "durability_status" => Ok(ApiRequest::DurabilityStatus),
+            "service_status" => Ok(ApiRequest::ServiceStatus),
             "set_quota" => Ok(ApiRequest::SetQuota {
                 user: need_str(args, "user")?,
                 max_concurrent: opt_u64(args, "max_concurrent")?,
@@ -965,6 +1003,52 @@ impl DurabilityView {
     }
 }
 
+/// Daemon drive-loop counters (`service_status`, `GET /api/v1/service`):
+/// whether a background loop is running, how many rounds it has
+/// completed, how long the last round took and the sustained
+/// rounds-per-second since the loop started. `dispatches` counts the
+/// requests the loop answered between rounds. All zeros with `running =
+/// false` when no daemon loop has ever run in this process.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct ServiceStatusView {
+    /// A `run_daemon` loop is currently active.
+    pub running: bool,
+    /// Drive rounds completed by the loop.
+    pub rounds: u64,
+    /// Wall-clock duration of the most recent round, in milliseconds.
+    pub last_round_ms: f64,
+    /// Rounds per wall-clock second since the loop started.
+    pub rounds_per_sec: f64,
+    /// Sessions progressed across all rounds.
+    pub progressed_total: u64,
+    /// Requests the loop dispatched between rounds.
+    pub dispatches: u64,
+}
+
+impl ServiceStatusView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("running", self.running.into())
+            .set("rounds", self.rounds.into())
+            .set("last_round_ms", self.last_round_ms.into())
+            .set("rounds_per_sec", self.rounds_per_sec.into())
+            .set("progressed_total", self.progressed_total.into())
+            .set("dispatches", self.dispatches.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<ServiceStatusView, ApiError> {
+        Ok(ServiceStatusView {
+            running: need_bool(j, "running")?,
+            rounds: need_u64(j, "rounds")?,
+            last_round_ms: need_f64(j, "last_round_ms")?,
+            rounds_per_sec: need_f64(j, "rounds_per_sec")?,
+            progressed_total: need_u64(j, "progressed_total")?,
+            dispatches: need_u64(j, "dispatches")?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------
 // Responses
 // ---------------------------------------------------------------------
@@ -996,6 +1080,8 @@ pub enum ApiResponse {
     Tenants { tenants: Vec<TenantView> },
     /// Durability counters (`durability_status`).
     Durability { durability: DurabilityView },
+    /// Daemon drive-loop counters (`service_status`).
+    Service { service: ServiceStatusView },
     Error { error: ApiError },
 }
 
@@ -1015,6 +1101,7 @@ impl ApiResponse {
             ApiResponse::Events { .. } => "events",
             ApiResponse::Tenants { .. } => "tenants",
             ApiResponse::Durability { .. } => "durability",
+            ApiResponse::Service { .. } => "service",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -1077,6 +1164,9 @@ impl ApiResponse {
             }
             ApiResponse::Durability { durability } => {
                 data.set("durability", durability.to_json());
+            }
+            ApiResponse::Service { service } => {
+                data.set("service", service.to_json());
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -1147,6 +1237,9 @@ impl ApiResponse {
             }),
             "durability" => Ok(ApiResponse::Durability {
                 durability: DurabilityView::from_json(need(data, "durability")?)?,
+            }),
+            "service" => Ok(ApiResponse::Service {
+                service: ServiceStatusView::from_json(need(data, "service")?)?,
             }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
@@ -1270,7 +1363,7 @@ mod tests {
 
     #[test]
     fn version_is_checked() {
-        let ok = ApiRequest::ListSessions.to_json().to_string();
+        let ok = ApiRequest::list_sessions().to_json().to_string();
         assert!(ApiRequest::from_json(&parse(&ok).unwrap()).is_ok());
         let bad = ok.replace("\"v\":1", "\"v\":2");
         let err = ApiRequest::from_json(&parse(&bad).unwrap()).unwrap_err();
@@ -1351,7 +1444,8 @@ mod tests {
     fn mutation_classification() {
         assert!(ApiRequest::Pause { session: "s".into() }.is_mutation());
         assert!(ApiRequest::Drive { chunk: 1 }.is_mutation());
-        assert!(!ApiRequest::ListSessions.is_mutation());
+        assert!(!ApiRequest::list_sessions().is_mutation());
+        assert!(!ApiRequest::ServiceStatus.is_mutation());
         assert!(!ApiRequest::Infer { session: "s".into(), x: vec![], shape: vec![] }.is_mutation());
         assert!(!ApiRequest::Board { dataset: "mnist".into(), limit: 5, user: None }.is_mutation());
         assert!(!ApiRequest::EventsSince { since: 0, kind: None, subject: None, limit: 10 }
@@ -1472,5 +1566,53 @@ mod tests {
             assert_eq!(err.code, ErrorCode::InvalidArgument, "{}", bad);
             assert!(err.message.contains("limit"), "{}", err);
         }
+    }
+
+    #[test]
+    fn list_sessions_pagination_parses() {
+        // Bare envelope keeps the old everything-list behaviour.
+        assert_eq!(
+            ApiRequest::from_verb_args("list_sessions", &Json::obj()).unwrap(),
+            ApiRequest::list_sessions(),
+        );
+        let args = parse(r#"{"limit":2,"offset":4,"user":"kim"}"#).unwrap();
+        match ApiRequest::from_verb_args("list_sessions", &args).unwrap() {
+            ApiRequest::ListSessions { limit, offset, user } => {
+                assert_eq!(limit, 2);
+                assert_eq!(offset, 4);
+                assert_eq!(user.as_deref(), Some("kim"));
+            }
+            other => panic!("{:?}", other),
+        }
+        // Mistyped paging params are named errors, not silent defaults.
+        let err = ApiRequest::from_verb_args("list_sessions", &parse(r#"{"limit":-1}"#).unwrap())
+            .unwrap_err();
+        assert!(err.message.contains("limit"), "{}", err);
+        let err = ApiRequest::from_verb_args("list_sessions", &parse(r#"{"offset":1.5}"#).unwrap())
+            .unwrap_err();
+        assert!(err.message.contains("offset"), "{}", err);
+    }
+
+    #[test]
+    fn service_status_view_round_trips() {
+        let view = ServiceStatusView {
+            running: true,
+            rounds: 40,
+            last_round_ms: 2.5,
+            rounds_per_sec: 110.0,
+            progressed_total: 320,
+            dispatches: 7,
+        };
+        let resp = ApiResponse::Service { service: view };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // The idle (never-served) view is all zeros and still round-trips.
+        let resp = ApiResponse::Service { service: ServiceStatusView::default() };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(
+            ApiRequest::ServiceStatus.to_json().get("verb").and_then(Json::as_str),
+            Some("service_status")
+        );
     }
 }

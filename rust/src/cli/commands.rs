@@ -5,8 +5,8 @@
 
 use super::with_globals;
 use crate::api::{
-    ApiRequest, ApiResponse, NsmlPlatform, PlatformConfig, PlatformService, PlatformTrialRunner,
-    RunParams,
+    ApiRequest, ApiResponse, DaemonOpts, NsmlPlatform, PlatformConfig, PlatformService,
+    PlatformTrialRunner, RunParams,
 };
 use crate::automl::{log_grid, GridSearch, RandomSearch, SuccessiveHalving};
 use crate::data::digits::{ascii_digit, draw_digit, DIM};
@@ -222,7 +222,7 @@ pub fn cmd_dataset(args: &[String]) -> CmdResult {
 pub fn cmd_ps(args: &[String]) -> CmdResult {
     let p = with_globals(ArgSpec::new("nsml ps", "list sessions")).parse(args)?;
     let service = service_from(&p)?;
-    let views = match ok(service.dispatch(ApiRequest::ListSessions))? {
+    let views = match ok(service.dispatch(ApiRequest::list_sessions()))? {
         ApiResponse::Sessions { sessions } => sessions,
         other => return Err(format!("unexpected reply: {:?}", other)),
     };
@@ -710,13 +710,78 @@ pub fn cmd_web(args: &[String]) -> CmdResult {
         api: Some(api),
     };
     let port: u16 = p.get_usize("port")? as u16;
-    let (bound, _handle) = crate::web::serve(state, port).map_err(|e| e.to_string())?;
-    println!("nsml web ui: http://127.0.0.1:{}/  (mutations: POST /api/v1/<verb>)", bound);
-    if !p.flag("once") {
-        // This thread owns the platform; pump web dispatches through the
-        // service until the process exits.
-        service.serve(&rx);
+    let srv = crate::web::serve(state, port).map_err(|e| e.to_string())?;
+    println!("nsml web ui: http://127.0.0.1:{}/  (mutations: POST /api/v1/<verb>)", srv.port());
+    if p.flag("once") {
+        srv.shutdown();
+        return Ok(());
     }
+    // This thread owns the platform; pump web dispatches through the
+    // service until the process exits.
+    service.serve(&rx);
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// nsml serve — always-on service mode
+// ---------------------------------------------------------------------
+
+/// Daemon mode: the pooled HTTP front end answers reads, SSE streams,
+/// and mutations while this thread — the platform owner — continuously
+/// runs drive rounds, answering dispatches between rounds.
+pub fn cmd_serve(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml serve", "run the platform as a service: HTTP front end + drive loop")
+            .opt("port", Some('p'), "port (0 = ephemeral)", Some("8080"))
+            .opt("rounds", None, "exit after this many drive rounds (0 = serve forever)", Some("0"))
+            .opt("for-ms", None, "stop cleanly after this many wall-clock ms (0 = no deadline)", Some("0")),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let (api, rx) = crate::api::service_channel();
+    let platform = service.platform();
+    let state = crate::web::WebState {
+        sessions: platform.sessions.clone(),
+        leaderboard: platform.leaderboard.clone(),
+        cluster: Some(platform.cluster.clone()),
+        events: platform.events.clone(),
+        api: Some(api),
+    };
+    let cfg = &platform.config;
+    let opts = crate::web::ServeOpts {
+        workers: cfg.http_workers,
+        keepalive: std::time::Duration::from_millis(cfg.http_keepalive_ms),
+        ..crate::web::ServeOpts::default()
+    };
+    let daemon = DaemonOpts {
+        chunk: cfg.serve_chunk,
+        max_rounds: p.get_usize("rounds")? as u64,
+        idle_wait: std::time::Duration::from_millis(cfg.serve_idle_ms),
+        ..DaemonOpts::default()
+    };
+
+    let port: u16 = p.get_usize("port")? as u16;
+    let srv = crate::web::serve_with(state, port, opts).map_err(|e| e.to_string())?;
+    println!(
+        "nsml service: http://127.0.0.1:{}/  (drive loop on; SSE: GET /api/v1/events/stream)",
+        srv.port()
+    );
+
+    // Optional wall-clock deadline, so scripted smoke runs (and anything
+    // without a supervisor) can get a clean, state-saving shutdown.
+    let deadline_ms = p.get_usize("for-ms")? as u64;
+    if deadline_ms > 0 {
+        let stop = daemon.stop.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(std::time::Duration::from_millis(deadline_ms));
+            stop.store(true, std::sync::atomic::Ordering::SeqCst);
+        });
+    }
+
+    // This thread owns the platform: run the drive loop, answering web
+    // dispatches between rounds, until a stop condition fires.
+    service.run_daemon(&rx, &daemon).map_err(|e| format!("{:#}", e))?;
+    srv.shutdown();
     Ok(())
 }
 
@@ -899,6 +964,29 @@ mod tests {
         // report the durability counters.
         assert_eq!(crate::cli::main(&s(&["gc", "--state", &state])), 0);
         assert_eq!(crate::cli::main(&s(&["gc", "--status", "--state", &state])), 0);
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn serve_bounded_exits_cleanly() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("serve");
+        // Bounded rounds on an idle platform: the daemon notices there is
+        // nothing to drive and exits once the budget applies.
+        assert_eq!(
+            crate::cli::main(&s(&["serve", "--port", "0", "--rounds", "3", "--state", &state])),
+            0
+        );
+        // A wall-clock deadline stops an unbounded loop cleanly too.
+        assert_eq!(
+            crate::cli::main(&s(&["serve", "--port", "0", "--for-ms", "60", "--state", &state])),
+            0
+        );
+        // Clean shutdown saved state (the dir exists even with no sessions).
+        assert!(PathBuf::from(&state).join("state.json").exists());
         let _ = std::fs::remove_dir_all(&state);
     }
 

@@ -16,6 +16,8 @@
 //! * `nsml gc [--status]`          — sweep orphaned objects (or print
 //!   the WAL/snapshot/GC durability counters)
 //! * `nsml cluster` / `nsml models` / `nsml web`
+//! * `nsml serve`                   — always-on service mode: a background
+//!   drive loop plus the pooled keep-alive HTTP front end with SSE
 //!
 //! Session-control subcommands build [`crate::api::ApiRequest`]s and go
 //! through [`crate::api::PlatformService::dispatch`] — the same wire
@@ -50,6 +52,8 @@ COMMANDS:
   gc         sweep orphaned objects:      nsml gc [--status]
   models     list AOT-compiled models
   web        serve the web UI:            nsml web --port 8080
+  serve      always-on service mode:      nsml serve --port 8080
+             (background drive loop + pooled HTTP front end + SSE)
 
 Global options (before or after COMMAND args):
   --state DIR      state directory [default: .nsml]
@@ -76,6 +80,7 @@ pub fn main(args: &[String]) -> i32 {
         "gc" => commands::cmd_gc(&rest),
         "models" => commands::cmd_models(&rest),
         "web" => commands::cmd_web(&rest),
+        "serve" => commands::cmd_serve(&rest),
         "" | "help" | "--help" | "-h" => {
             println!("{}", USAGE);
             Ok(())

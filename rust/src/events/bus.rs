@@ -214,6 +214,13 @@ impl EventBus {
         Subscription { cursor: 0, bus: self.clone(), filter: EventFilter::default(), dropped: 0 }
     }
 
+    /// A cursor starting at an explicit sequence number — the SSE
+    /// `Last-Event-ID` resume path (pass `last_seen + 1`): retained
+    /// events from the cursor replay first, then live events follow.
+    pub fn subscribe_from(&self, cursor: u64) -> Subscription {
+        Subscription { cursor, bus: self.clone(), filter: EventFilter::default(), dropped: 0 }
+    }
+
     /// Full clone of the retained ring (legacy `EventLog::all` path;
     /// prefer a [`Subscription`] for anything called repeatedly).
     pub fn snapshot(&self) -> Vec<Event> {

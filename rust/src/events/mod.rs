@@ -68,8 +68,18 @@ impl Level {
 
 /// Every kind name, in the order of the [`EventKind`] variants (wire
 /// filter validation and docs).
-pub const ALL_EVENT_KINDS: &[&str] =
-    &["log", "metric", "state", "checkpoint", "placement", "steal", "util", "worker", "admission"];
+pub const ALL_EVENT_KINDS: &[&str] = &[
+    "log",
+    "metric",
+    "state",
+    "checkpoint",
+    "placement",
+    "steal",
+    "util",
+    "worker",
+    "admission",
+    "loop",
+];
 
 /// The typed payload of an [`Event`]. Plain data only — the events
 /// module sits below every other subsystem, so states, nodes and
@@ -111,6 +121,9 @@ pub enum EventKind {
     /// back by quota or capacity; published once per submission), or
     /// `preempt` (a running session evicted for a waiting user).
     AdmissionDecided { decision: String, user: String },
+    /// One daemon drive-loop round (`nsml serve`): round counter,
+    /// wall-clock round duration and sustained loop throughput.
+    LoopSampled { round: u64, round_ms: f64, progressed: u64, rounds_per_sec: f64 },
 }
 
 impl EventKind {
@@ -126,6 +139,7 @@ impl EventKind {
             EventKind::UtilizationSampled { .. } => "util",
             EventKind::WorkerSampled { .. } => "worker",
             EventKind::AdmissionDecided { .. } => "admission",
+            EventKind::LoopSampled { .. } => "loop",
         }
     }
 
@@ -166,6 +180,12 @@ impl EventKind {
             }
             EventKind::AdmissionDecided { decision, user } => {
                 format!("admission {} (user {})", decision, user)
+            }
+            EventKind::LoopSampled { round, round_ms, progressed, rounds_per_sec } => {
+                format!(
+                    "loop round {}: {:.1}ms, {} progressed, {:.1} rounds/s",
+                    round, round_ms, progressed, rounds_per_sec
+                )
             }
         }
     }
@@ -211,6 +231,12 @@ impl EventKind {
             }
             EventKind::AdmissionDecided { decision, user } => {
                 o.set("decision", decision.as_str().into()).set("user", user.as_str().into());
+            }
+            EventKind::LoopSampled { round, round_ms, progressed, rounds_per_sec } => {
+                o.set("round", (*round).into())
+                    .set("round_ms", (*round_ms).into())
+                    .set("progressed", (*progressed).into())
+                    .set("rounds_per_sec", (*rounds_per_sec).into());
             }
         }
         o
@@ -287,6 +313,12 @@ impl EventKind {
             "admission" => Ok(EventKind::AdmissionDecided {
                 decision: str_of("decision")?,
                 user: str_of("user")?,
+            }),
+            "loop" => Ok(EventKind::LoopSampled {
+                round: u64_of("round")?,
+                round_ms: f64_of("round_ms")?,
+                progressed: u64_of("progressed")?,
+                rounds_per_sec: f64_of("rounds_per_sec")?,
             }),
             other => Err(format!(
                 "unknown event kind '{}' (expected one of: {})",
@@ -409,6 +441,12 @@ mod tests {
                 steals: 4,
             },
             EventKind::AdmissionDecided { decision: "preempt".into(), user: "kim".into() },
+            EventKind::LoopSampled {
+                round: 9,
+                round_ms: 1.75,
+                progressed: 6,
+                rounds_per_sec: 210.5,
+            },
         ]
     }
 

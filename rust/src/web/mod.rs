@@ -1,18 +1,19 @@
-//! Web UI (paper §3.2): "The *web UI* wraps NSML-CLI in a web application
-//! and is more intuitive … provides visualizations such as graphs, logs,
-//! and demos."
+//! Web UI + HTTP API (paper §3.2): "The *web UI* wraps NSML-CLI in a
+//! web application and is more intuitive … provides visualizations such
+//! as graphs, logs, and demos."
 //!
 //! nginx is unavailable offline, so this is a from-scratch minimal
-//! HTTP/1.1 server (std TcpListener + a thread per connection) exposing:
+//! HTTP/1.1 server: a bounded worker pool over `std::net::TcpListener`
+//! with keep-alive connection reuse ([`serve`]); the old
+//! thread-per-connection accept loop survives only as the `bench_web`
+//! baseline ([`serve_thread_per_conn`]). Routes:
 //!
 //! * `GET /`                     — HTML dashboard (sessions, cluster, boards)
 //! * `GET /board/<dataset>`      — HTML leaderboard
 //! * `GET /session/<id…>`        — HTML session page with SVG curves
 //! * `GET /plot/<id…>.svg`       — standalone SVG learning curves
-//! * `GET /api/sessions`         — JSON
-//! * `GET /api/session/<id…>`    — JSON (with metrics)
-//! * `GET /api/board/<dataset>`  — JSON
-//! * `GET /api/cluster`          — JSON
+//! * `GET /api/v1/sessions?limit=&offset=&user=` — paged session list,
+//!   dispatched as a `list_sessions` query
 //! * `GET /api/v1/executor`      — JSON executor-pool telemetry
 //!   (per-worker busy-time, live sessions, queue depth, steal counts)
 //!   dispatched as an `executor_status` query through the attached
@@ -21,59 +22,76 @@
 //!   (quotas, GPU-second usage, occupancy, admission-queue depth)
 //!   dispatched as a `tenant_report` query
 //! * `GET /api/v1/durability`    — JSON WAL/snapshot/GC counters
-//!   (records and bytes in the live segment, snapshot cadence
-//!   progress, subscription drop counts, last GC sweep) dispatched
-//!   as a `durability_status` query
+//!   dispatched as a `durability_status` query
 //! * `GET /api/v1/board?dataset=<ds>&user=<u>&limit=<n>` — leaderboard
 //!   rows, optionally sliced to one user (global ranks kept),
 //!   dispatched as a `board` query
 //! * `GET /api/v1/events?since=<cursor>&kind=<name>&subject=<id>&limit=<n>`
 //!   — cursor-paged incremental read of the platform event bus
-//!   (dispatched as an `events_since` query). The reply carries the
-//!   matching events, the `next` cursor to resume from, and a
-//!   `dropped` count when the reader fell a full ring behind; polling
-//!   with the returned cursor streams new events without ever
-//!   re-reading old ones.
-//! * `POST /api/v1/<verb>`       — dispatch any `ApiRequest` verb (`run`,
-//!   `pause`, `resume`, `stop`, `infer`, `drive`, `run_to_completion`,
-//!   `kill_node`, `list_sessions`, `get_session`, `board`,
-//!   `cluster_status`, `executor_status`, `events_since`,
-//!   `submit_trial_batch`, `tenant_report`, `set_quota`,
-//!   `durability_status`) into the attached
-//!   [`PlatformService`](crate::api::PlatformService); the JSON body is
-//!   the verb's `args` object and the reply is an `ApiResponse`
-//!   envelope. Error codes map to HTTP: `not_found`→404,
-//!   `invalid_argument`→400, `failed_precondition`→409, `internal`→500.
+//!   (dispatched as an `events_since` query)
+//! * `GET /api/v1/events/stream?kind=&subject=` — Server-Sent Events:
+//!   a push stream fed from a bus [`Subscription`], one SSE frame per
+//!   event (`id:` = bus seq, `event:` = kind, `data:` = JSON
+//!   envelope). Clients resume after a disconnect with the standard
+//!   `Last-Event-ID` header (or `last_event_id=` query parameter);
+//!   retained events after that seq replay first, then live events
+//!   follow. `nsml logs -f` consumers and the dashboard thus stop
+//!   polling. Streams run on dedicated threads, capped at
+//!   [`ServeOpts::max_sse_clients`] (503 beyond).
+//! * `POST /api/v1/<verb>`       — dispatch any `ApiRequest` verb into
+//!   the attached [`PlatformService`](crate::api::PlatformService);
+//!   the JSON body is the verb's `args` object and the reply is an
+//!   `ApiResponse` envelope. Error codes map to HTTP: `not_found`→404,
+//!   `invalid_argument`→400, `failed_precondition`→409, `internal`→500,
+//!   `unknown_route`→404.
 //!
-//! Path segments are percent-decoded before routing; unsupported methods
-//! get `405` with an `Allow` header. Routing logic is a pure function
-//! ([`handle`]) so tests exercise it without sockets.
+//! **Deprecated aliases** (kept for old dashboards, served as exact
+//! re-routes through `PlatformService::dispatch` with a
+//! `Deprecation: true` header and a `Link: …; rel="successor-version"`
+//! pointing at the v1 replacement — bodies are byte-identical to their
+//! v1 counterparts):
 //!
-//! Mutations dispatched here land on the platform thread, which drives
-//! training through the [`crate::executor`] worker pool — a web `drive`
-//! request therefore advances every running session in parallel across
-//! the pool's workers before its reply comes back.
+//! * `GET /api/sessions`        → `list_sessions` (see `/api/v1/sessions`)
+//! * `GET /api/session/<id…>`   → `get_session`   (see `POST /api/v1/get_session`)
+//! * `GET /api/board/<dataset>` → `board`         (see `/api/v1/board`)
+//! * `GET /api/cluster`         → `cluster_status` (see `POST /api/v1/cluster_status`)
+//!
+//! Every `/api/*` response — including unknown paths, which answer a
+//! machine-readable `unknown_route` error — flows through the
+//! `ApiResponse`/`ApiError` wire envelopes; no hand-rolled JSON.
+//!
+//! Path segments are percent-decoded before routing; unsupported
+//! methods get `405` with an `Allow` header. Routing logic is a pure
+//! function ([`handle`]) so tests exercise it without sockets.
+//!
+//! Mutations dispatched here land on the platform thread (under
+//! `nsml serve`, between daemon drive rounds), which drives training
+//! through the [`crate::executor`] worker pool.
 
-use crate::api::{ApiError, ApiRequest, ApiResponse, ErrorCode, ServiceHandle};
+use crate::api::{ApiError, ApiRequest, ApiResponse, ErrorCode, ServiceHandle, ALL_VERBS};
 use crate::cluster::Cluster;
-use crate::events::EventLog;
+use crate::events::{EventFilter, EventLog, ALL_EVENT_KINDS};
 use crate::leaderboard::Leaderboard;
 use crate::session::{SessionRecord, SessionStore};
 use crate::util::json::Json;
 use crate::util::plot::{svg_chart, xml_escape, Series};
 use std::io::{Read, Write};
-use std::net::TcpListener;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::time::Duration;
 
 /// Shareable snapshot handles the server reads from (all thread-safe),
-/// plus the optional dispatcher for `POST /api/v1/*` mutations.
+/// plus the optional dispatcher for `/api/*` routes.
 #[derive(Clone)]
 pub struct WebState {
     pub sessions: SessionStore,
     pub leaderboard: Leaderboard,
     pub cluster: Option<Cluster>,
     pub events: EventLog,
-    /// When attached, POST verbs dispatch into the platform service on
-    /// its owning thread; when `None`, mutations answer 503.
+    /// When attached, API verbs dispatch into the platform service on
+    /// its owning thread; when `None`, API routes answer 503 (the
+    /// HTML views still render from the snapshot handles).
     pub api: Option<ServiceHandle>,
 }
 
@@ -84,32 +102,56 @@ pub struct Response {
     pub body: String,
     /// `Allow` header value for 405 responses.
     pub allow: Option<&'static str>,
+    /// Successor route for deprecated legacy aliases; emitted as
+    /// `Deprecation: true` plus `Link: <…>; rel="successor-version"`.
+    pub deprecation: Option<&'static str>,
 }
 
 impl Response {
     fn html(body: String) -> Response {
-        Response { status: 200, content_type: "text/html; charset=utf-8", body, allow: None }
-    }
-
-    fn json(j: Json) -> Response {
-        Response { status: 200, content_type: "application/json", body: j.to_string(), allow: None }
+        Response {
+            status: 200,
+            content_type: "text/html; charset=utf-8",
+            body,
+            allow: None,
+            deprecation: None,
+        }
     }
 
     fn svg(body: String) -> Response {
-        Response { status: 200, content_type: "image/svg+xml", body, allow: None }
+        Response {
+            status: 200,
+            content_type: "image/svg+xml",
+            body,
+            allow: None,
+            deprecation: None,
+        }
+    }
+
+    fn text(status: u16, body: impl Into<String>) -> Response {
+        Response {
+            status,
+            content_type: "text/plain",
+            body: body.into(),
+            allow: None,
+            deprecation: None,
+        }
     }
 
     fn not_found(msg: &str) -> Response {
-        Response { status: 404, content_type: "text/plain", body: format!("not found: {}\n", msg), allow: None }
+        Response::text(404, format!("not found: {}\n", msg))
     }
 
     fn method_not_allowed(allow: &'static str) -> Response {
         Response {
-            status: 405,
-            content_type: "text/plain",
-            body: format!("method not allowed (allow: {})\n", allow),
             allow: Some(allow),
+            ..Response::text(405, format!("method not allowed (allow: {})\n", allow))
         }
+    }
+
+    fn deprecated(mut self, successor: &'static str) -> Response {
+        self.deprecation = Some(successor);
+        self
     }
 }
 
@@ -122,6 +164,7 @@ fn status_text(status: u16) -> &'static str {
         409 => "Conflict",
         411 => "Length Required",
         500 => "Internal Server Error",
+        501 => "Not Implemented",
         503 => "Service Unavailable",
         _ => "Unknown",
     }
@@ -148,7 +191,9 @@ fn percent_decode(s: &str) -> String {
 }
 
 /// Route a request (pure; no I/O). `body` is the request body (only
-/// meaningful for POST).
+/// meaningful for POST). The one route this function cannot serve is
+/// `GET /api/v1/events/stream` — streaming needs the live connection,
+/// so the pooled server intercepts it before routing here.
 pub fn handle(state: &WebState, method: &str, path: &str, body: &str) -> Response {
     let (route, query) = match path.split_once('?') {
         Some((r, q)) => (r, q),
@@ -195,12 +240,7 @@ fn handle_api_post(state: &WebState, verb: &str, body: &str) -> Response {
 }
 
 fn service_unavailable() -> Response {
-    Response {
-        status: 503,
-        content_type: "text/plain",
-        body: "platform service not attached (read-only web ui)\n".into(),
-        allow: None,
-    }
+    Response::text(503, "platform service not attached (read-only web ui)\n")
 }
 
 /// Serialize an `ApiResponse` envelope with its HTTP status mapping.
@@ -211,10 +251,47 @@ fn api_response(resp: ApiResponse) -> Response {
             ErrorCode::InvalidArgument => 400,
             ErrorCode::FailedPrecondition => 409,
             ErrorCode::Internal => 500,
+            ErrorCode::UnknownRoute => 404,
         },
         _ => 200,
     };
-    Response { status, content_type: "application/json", body: resp.to_json().to_string(), allow: None }
+    Response {
+        status,
+        content_type: "application/json",
+        body: resp.to_json().to_string(),
+        allow: None,
+        deprecation: None,
+    }
+}
+
+/// Unknown `/api/*` path: a machine-readable `unknown_route` envelope
+/// (404), never plain text — API clients should not have to sniff.
+fn unknown_route(method: &str, path: &str) -> Response {
+    api_response(ApiResponse::Error {
+        error: ApiError::unknown_route(format!(
+            "no API route '{} {}'; see the /api/v1/* surface",
+            method, path
+        )),
+    })
+}
+
+/// A deprecated legacy alias: exactly the dispatch its v1 counterpart
+/// performs (same wire defaults, byte-identical body), plus the
+/// `Deprecation`/`Link` headers naming the successor route.
+fn alias_dispatch(
+    state: &WebState,
+    verb: &str,
+    args: &Json,
+    successor: &'static str,
+) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    let resp = match ApiRequest::from_verb_args(verb, args) {
+        Ok(req) => api.call(req),
+        Err(error) => ApiResponse::Error { error },
+    };
+    api_response(resp).deprecated(successor)
 }
 
 /// `GET /api/v1/executor`: the executor-status query as a read route,
@@ -243,6 +320,15 @@ fn durability_json(state: &WebState) -> Response {
         return service_unavailable();
     };
     api_response(api.call(ApiRequest::DurabilityStatus))
+}
+
+/// `GET /api/v1/service`: the daemon drive-loop counters (rounds,
+/// last-round duration, rounds/sec, dispatches) as a read route.
+fn service_status_json(state: &WebState) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::ServiceStatus))
 }
 
 /// `GET /api/v1/board?dataset=&user=&limit=`: the leaderboard query as
@@ -275,6 +361,41 @@ fn board_query_json(state: &WebState, query: &str) -> Response {
         }
     }
     match ApiRequest::from_verb_args("board", &args) {
+        Ok(req) => api_response(api.call(req)),
+        Err(error) => api_response(ApiResponse::Error { error }),
+    }
+}
+
+/// `GET /api/v1/sessions?limit=&offset=&user=`: the paged session list
+/// as a read route — bad paging values 400 before dispatch, exactly
+/// like `board`/`events`.
+fn sessions_query_json(state: &WebState, query: &str) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    let mut args = Json::obj();
+    for (k, v) in parse_query(query) {
+        match k.as_str() {
+            "limit" | "offset" => match v.parse::<u64>() {
+                Ok(n) => {
+                    args.set(&k, n.into());
+                }
+                Err(_) => {
+                    return api_response(ApiResponse::Error {
+                        error: ApiError::invalid(format!(
+                            "sessions: query parameter '{}' must be a non-negative integer",
+                            k
+                        )),
+                    })
+                }
+            },
+            "user" => {
+                args.set(&k, v.as_str().into());
+            }
+            _ => {} // unknown parameters are ignored
+        }
+    }
+    match ApiRequest::from_verb_args("list_sessions", &args) {
         Ok(req) => api_response(api.call(req)),
         Err(error) => api_response(ApiResponse::Error { error }),
     }
@@ -328,39 +449,40 @@ fn events_json(state: &WebState, query: &str) -> Response {
 }
 
 fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
-    if path.starts_with("/api/v1/") {
-        if path == "/api/v1/executor" {
-            return executor_json(state);
-        }
-        if path == "/api/v1/events" {
-            return events_json(state, query);
-        }
-        if path == "/api/v1/tenants" {
-            return tenants_json(state);
-        }
-        if path == "/api/v1/durability" {
-            return durability_json(state);
-        }
-        if path == "/api/v1/board" {
-            return board_query_json(state, query);
-        }
-        return Response::method_not_allowed("POST");
+    if let Some(rest) = path.strip_prefix("/api/v1/") {
+        return match rest {
+            "sessions" => sessions_query_json(state, query),
+            "executor" => executor_json(state),
+            "events" => events_json(state, query),
+            "events/stream" => Response::text(
+                501,
+                "event streaming needs a live connection (serve with `nsml serve`)\n",
+            ),
+            "tenants" => tenants_json(state),
+            "durability" => durability_json(state),
+            "service" => service_status_json(state),
+            "board" => board_query_json(state, query),
+            verb if ALL_VERBS.contains(&verb) => Response::method_not_allowed("POST"),
+            _ => unknown_route("GET", path),
+        };
     }
     match path {
         "/" => Response::html(dashboard_html(state)),
-        "/api/sessions" => Response::json(sessions_json(state)),
-        "/api/cluster" => Response::json(cluster_json(state)),
+        "/api/sessions" => alias_dispatch(state, "list_sessions", &Json::obj(), "/api/v1/sessions"),
+        "/api/cluster" => {
+            alias_dispatch(state, "cluster_status", &Json::obj(), "/api/v1/cluster_status")
+        }
         p if p.starts_with("/api/board/") => {
-            let ds = &p["/api/board/".len()..];
-            board_json(state, ds)
+            let mut args = Json::obj();
+            args.set("dataset", p["/api/board/".len()..].into());
+            alias_dispatch(state, "board", &args, "/api/v1/board")
         }
         p if p.starts_with("/api/session/") => {
-            let id = &p["/api/session/".len()..];
-            match state.sessions.get(id) {
-                Some(rec) => Response::json(session_json(&rec, true)),
-                None => Response::not_found(id),
-            }
+            let mut args = Json::obj();
+            args.set("session", p["/api/session/".len()..].into());
+            alias_dispatch(state, "get_session", &args, "/api/v1/get_session")
         }
+        p if p.starts_with("/api/") => unknown_route("GET", path),
         p if p.starts_with("/plot/") && p.ends_with(".svg") => {
             let id = &p["/plot/".len()..p.len() - 4];
             match state.sessions.get(id) {
@@ -381,97 +503,6 @@ fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
         }
         other => Response::not_found(other),
     }
-}
-
-// ---------------------------------------------------------------------
-// JSON views
-// ---------------------------------------------------------------------
-
-fn session_json(rec: &SessionRecord, with_metrics: bool) -> Json {
-    let mut o = Json::obj();
-    o.set("id", rec.spec.id.as_str().into())
-        .set("user", rec.spec.user.as_str().into())
-        .set("dataset", rec.spec.dataset.as_str().into())
-        .set("model", rec.spec.model.as_str().into())
-        .set("state", rec.state.as_str().into())
-        .set("steps_done", rec.steps_done.into())
-        .set("total_steps", rec.spec.total_steps.into())
-        .set("lr", rec.spec.lr.into())
-        .set("best_metric", rec.best_metric.map(Json::Num).unwrap_or(Json::Null))
-        .set("recoveries", (rec.recoveries as u64).into());
-    if with_metrics {
-        let mut metrics = Json::obj();
-        for name in rec.metrics.names() {
-            let pts: Vec<Json> = rec
-                .metrics
-                .series(&name)
-                .into_iter()
-                .map(|(s, v)| Json::Arr(vec![s.into(), v.into()]))
-                .collect();
-            metrics.set(&name, Json::Arr(pts));
-        }
-        o.set("metrics", metrics);
-    }
-    o
-}
-
-fn sessions_json(state: &WebState) -> Json {
-    Json::Arr(state.sessions.list().iter().map(|r| session_json(r, false)).collect())
-}
-
-fn cluster_json(state: &WebState) -> Json {
-    let mut o = Json::obj();
-    match &state.cluster {
-        None => {
-            o.set("available", false.into());
-        }
-        Some(c) => {
-            let (total, free) = c.gpu_totals();
-            let nodes: Vec<Json> = c
-                .snapshot()
-                .iter()
-                .map(|n| {
-                    let mut j = Json::obj();
-                    j.set("hostname", n.hostname.as_str().into())
-                        .set("alive", n.alive.into())
-                        .set("total_gpus", n.total_gpus.into())
-                        .set("free_gpus", n.free_gpus.into())
-                        .set("jobs", Json::Arr(n.jobs.iter().map(|s| Json::Str(s.clone())).collect()));
-                    j
-                })
-                .collect();
-            o.set("available", true.into())
-                .set("total_gpus", total.into())
-                .set("free_gpus", free.into())
-                .set("utilization", c.utilization().into())
-                .set("nodes", Json::Arr(nodes));
-        }
-    }
-    o
-}
-
-fn board_json(state: &WebState, dataset: &str) -> Response {
-    if !state.leaderboard.datasets().contains(&dataset.to_string()) {
-        return Response::not_found(dataset);
-    }
-    let rows: Vec<Json> = state
-        .leaderboard
-        .top(dataset, 100)
-        .iter()
-        .enumerate()
-        .map(|(i, s)| {
-            let mut o = Json::obj();
-            o.set("rank", (i + 1).into())
-                .set("session", s.session.as_str().into())
-                .set("user", s.user.as_str().into())
-                .set("model", s.model.as_str().into())
-                .set("metric", s.metric_name.as_str().into())
-                .set("value", s.value.into())
-                .set("step", s.step.into());
-            o
-        })
-        .collect();
-    Response::json(Json::Arr(rows))
 }
 
 // ---------------------------------------------------------------------
@@ -562,11 +593,238 @@ fn session_html(rec: &SessionRecord) -> String {
 }
 
 // ---------------------------------------------------------------------
-// The actual server
+// HTTP plumbing shared by the pooled server and the baseline
 // ---------------------------------------------------------------------
 
-/// Serve until the process exits. Returns the bound port.
-pub fn serve(state: WebState, port: u16) -> std::io::Result<(u16, std::thread::JoinHandle<()>)> {
+/// First matching header value (case-insensitive name), trimmed.
+fn header_value<'a>(head: &'a str, name: &str) -> Option<&'a str> {
+    head.lines().find_map(|l| {
+        let (k, v) = l.split_once(':')?;
+        if k.trim().eq_ignore_ascii_case(name) {
+            Some(v.trim())
+        } else {
+            None
+        }
+    })
+}
+
+/// Read one HTTP request off the stream. `buf` carries bytes left over
+/// from a previous keep-alive request on the same socket. The header
+/// terminator is searched incrementally and headers are parsed once,
+/// so receipt stays O(n). Returns `None` on EOF, read timeout,
+/// malformed framing, or an oversized (>4 MiB) request — the caller
+/// closes the connection.
+fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Option<(String, String)> {
+    let mut scratch = [0u8; 8192];
+    let mut header_end: Option<usize> = None;
+    let mut body_len = 0usize;
+    let mut scanned = 0usize;
+    loop {
+        if header_end.is_none() && !buf.is_empty() {
+            // Resume the terminator scan where the last read left off
+            // (back up 3 bytes for a split match).
+            let start = scanned.saturating_sub(3);
+            if let Some(pos) = buf[start..].windows(4).position(|w| w == b"\r\n\r\n") {
+                let he = start + pos + 4;
+                header_end = Some(he);
+                body_len = String::from_utf8_lossy(&buf[..he])
+                    .lines()
+                    .find_map(|l| {
+                        let (k, v) = l.split_once(':')?;
+                        k.trim()
+                            .eq_ignore_ascii_case("content-length")
+                            .then(|| v.trim().parse::<usize>().ok())?
+                    })
+                    .unwrap_or(0);
+            }
+            scanned = buf.len();
+        }
+        if let Some(he) = header_end {
+            if buf.len() >= he + body_len {
+                let head = String::from_utf8_lossy(&buf[..he]).to_string();
+                let body = String::from_utf8_lossy(&buf[he..he + body_len]).to_string();
+                buf.drain(..he + body_len);
+                return Some((head, body));
+            }
+        }
+        if buf.len() > 4 * 1024 * 1024 {
+            return None;
+        }
+        match stream.read(&mut scratch) {
+            Ok(0) | Err(_) => return None,
+            Ok(n) => buf.extend_from_slice(&scratch[..n]),
+        }
+    }
+}
+
+/// Parse the request line, apply the Content-Length guard, and route
+/// through the pure [`handle`].
+fn route_request(state: &WebState, head: &str, body: &str) -> Response {
+    let mut parts = head.lines().next().unwrap_or("").split_whitespace();
+    let method = parts.next().unwrap_or("GET");
+    let path = parts.next().unwrap_or("/");
+    // Only Content-Length framing is supported; a POST without it
+    // (e.g. chunked) would be read nondeterministically, so reject it
+    // outright.
+    if method == "POST" && header_value(head, "content-length").is_none() {
+        return Response::text(411, "length required: POST needs Content-Length\n");
+    }
+    handle(state, method, path, body)
+}
+
+/// Whether the client wants the connection kept open (HTTP/1.1 default
+/// unless `Connection: close`; HTTP/1.0 only with an explicit
+/// `Connection: keep-alive`).
+fn wants_keepalive(head: &str) -> bool {
+    let version =
+        head.lines().next().unwrap_or("").split_whitespace().nth(2).unwrap_or("HTTP/1.1");
+    let conn = header_value(head, "connection").unwrap_or("").to_ascii_lowercase();
+    if conn.contains("close") {
+        return false;
+    }
+    version != "HTTP/1.0" || conn.contains("keep-alive")
+}
+
+fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> std::io::Result<()> {
+    let mut out = format!(
+        "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n",
+        resp.status,
+        status_text(resp.status),
+        resp.content_type,
+        resp.body.len(),
+    );
+    if let Some(allow) = resp.allow {
+        out.push_str(&format!("Allow: {}\r\n", allow));
+    }
+    if let Some(successor) = resp.deprecation {
+        out.push_str("Deprecation: true\r\n");
+        out.push_str(&format!("Link: <{}>; rel=\"successor-version\"\r\n", successor));
+    }
+    out.push_str(if keep_alive { "Connection: keep-alive\r\n" } else { "Connection: close\r\n" });
+    out.push_str("\r\n");
+    out.push_str(&resp.body);
+    stream.write_all(out.as_bytes())
+}
+
+// ---------------------------------------------------------------------
+// The pooled server
+// ---------------------------------------------------------------------
+
+/// Tuning knobs for [`serve_with`].
+#[derive(Debug, Clone)]
+pub struct ServeOpts {
+    /// Worker threads handling connections (`[service] http_workers`).
+    pub workers: usize,
+    /// Keep-alive idle timeout before a worker recycles the socket
+    /// (`[service] keepalive_ms`).
+    pub keepalive: Duration,
+    /// Concurrent SSE streams; each gets a dedicated thread so it
+    /// never pins a pool worker (503 beyond the cap).
+    pub max_sse_clients: usize,
+}
+
+impl Default for ServeOpts {
+    fn default() -> ServeOpts {
+        ServeOpts { workers: 8, keepalive: Duration::from_millis(500), max_sse_clients: 64 }
+    }
+}
+
+/// A running pooled server. Dropping the handle leaves the server
+/// running (threads are detached only at process exit); call
+/// [`shutdown`](WebServer::shutdown) for a clean stop or
+/// [`join`](WebServer::join) to serve forever.
+pub struct WebServer {
+    port: u16,
+    stop: Arc<AtomicBool>,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+impl WebServer {
+    pub fn port(&self) -> u16 {
+        self.port
+    }
+
+    /// Signal every loop to exit and join the pool. In-flight
+    /// responses finish; keep-alive sockets close at their next idle
+    /// timeout; SSE streams notice the flag within one poll interval.
+    pub fn shutdown(mut self) {
+        self.stop.store(true, Ordering::SeqCst);
+        // Wake the blocking accept so it observes the flag.
+        let _ = TcpStream::connect(("127.0.0.1", self.port));
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+
+    /// Block on the accept loop (the CLI's serve-forever path).
+    pub fn join(mut self) {
+        for t in self.threads.drain(..) {
+            let _ = t.join();
+        }
+    }
+}
+
+/// Serve with default [`ServeOpts`]. Returns once the listener is
+/// bound; connections are handled by the worker pool.
+pub fn serve(state: WebState, port: u16) -> std::io::Result<WebServer> {
+    serve_with(state, port, ServeOpts::default())
+}
+
+/// Bounded worker pool + HTTP/1.1 keep-alive: one accept thread feeds
+/// a channel; `opts.workers` threads pull connections and serve as
+/// many requests per socket as the client pipelines before the
+/// keep-alive timeout. SSE streams hop onto dedicated threads.
+pub fn serve_with(state: WebState, port: u16, opts: ServeOpts) -> std::io::Result<WebServer> {
+    let listener = TcpListener::bind(("127.0.0.1", port))?;
+    let bound = listener.local_addr()?.port();
+    let stop = Arc::new(AtomicBool::new(false));
+    let (tx, rx) = mpsc::channel::<TcpStream>();
+    let rx = Arc::new(Mutex::new(rx));
+    let sse_clients = Arc::new(AtomicUsize::new(0));
+    let mut threads = Vec::with_capacity(opts.workers + 1);
+    {
+        let stop = stop.clone();
+        threads.push(std::thread::spawn(move || {
+            for stream in listener.incoming() {
+                if stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                let Ok(stream) = stream else { continue };
+                if tx.send(stream).is_err() {
+                    break;
+                }
+            }
+        }));
+    }
+    for _ in 0..opts.workers.max(1) {
+        let rx = rx.clone();
+        let state = state.clone();
+        let stop = stop.clone();
+        let sse_clients = sse_clients.clone();
+        let opts = opts.clone();
+        threads.push(std::thread::spawn(move || loop {
+            let next = rx.lock().unwrap().recv_timeout(Duration::from_millis(100));
+            match next {
+                Ok(stream) => handle_connection(stream, &state, &opts, &stop, &sse_clients),
+                Err(mpsc::RecvTimeoutError::Timeout) => {
+                    if stop.load(Ordering::SeqCst) {
+                        break;
+                    }
+                }
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        }));
+    }
+    Ok(WebServer { port: bound, stop, threads })
+}
+
+/// The pre-pool accept loop — one thread per connection, one request
+/// per connection, `Connection: close`. Kept verbatim as the
+/// `bench_web` baseline; everything else should use [`serve`].
+pub fn serve_thread_per_conn(
+    state: WebState,
+    port: u16,
+) -> std::io::Result<(u16, std::thread::JoinHandle<()>)> {
     let listener = TcpListener::bind(("127.0.0.1", port))?;
     let bound = listener.local_addr()?.port();
     let handle = std::thread::spawn(move || {
@@ -574,91 +832,184 @@ pub fn serve(state: WebState, port: u16) -> std::io::Result<(u16, std::thread::J
             let Ok(mut stream) = stream else { continue };
             let state = state.clone();
             std::thread::spawn(move || {
-                let mut buf = [0u8; 8192];
-                let mut req = Vec::new();
-                // Read headers, then keep reading until Content-Length
-                // bytes of body have arrived (POST bodies). The header
-                // terminator is searched incrementally and headers are
-                // parsed once, so receipt stays O(n).
-                let mut header_end: Option<usize> = None;
-                let mut body_len = 0usize;
-                let mut scanned = 0usize;
-                loop {
-                    if header_end.is_none() {
-                        // Resume the terminator scan where the last read
-                        // left off (back up 3 bytes for a split match).
-                        let start = scanned.saturating_sub(3);
-                        if let Some(pos) = req[start..].windows(4).position(|w| w == b"\r\n\r\n") {
-                            let he = start + pos + 4;
-                            header_end = Some(he);
-                            body_len = String::from_utf8_lossy(&req[..he])
-                                .lines()
-                                .find_map(|l| {
-                                    let (k, v) = l.split_once(':')?;
-                                    k.trim()
-                                        .eq_ignore_ascii_case("content-length")
-                                        .then(|| v.trim().parse::<usize>().ok())?
-                                })
-                                .unwrap_or(0);
-                        }
-                        scanned = req.len();
-                    }
-                    if let Some(he) = header_end {
-                        if req.len() >= he + body_len {
-                            break;
-                        }
-                    }
-                    if req.len() > 4 * 1024 * 1024 {
-                        break;
-                    }
-                    match stream.read(&mut buf) {
-                        Ok(0) | Err(_) => break,
-                        Ok(n) => req.extend_from_slice(&buf[..n]),
-                    }
+                let mut buf = Vec::new();
+                if let Some((head, body)) = read_request(&mut stream, &mut buf) {
+                    let resp = route_request(&state, &head, &body);
+                    let _ = write_response(&mut stream, &resp, false);
                 }
-                let header_end = header_end.unwrap_or(req.len());
-                let head = String::from_utf8_lossy(&req[..header_end]).to_string();
-                let body = String::from_utf8_lossy(&req[header_end..]).to_string();
-                let mut parts = head.lines().next().unwrap_or("").split_whitespace();
-                let method = parts.next().unwrap_or("GET").to_string();
-                let path = parts.next().unwrap_or("/").to_string();
-                // Only Content-Length framing is supported; a POST
-                // without it (e.g. chunked) would be read
-                // nondeterministically, so reject it outright.
-                let has_length = head.lines().any(|l| {
-                    l.split_once(':').map_or(false, |(k, _)| k.trim().eq_ignore_ascii_case("content-length"))
-                });
-                let resp = if method == "POST" && !has_length {
-                    Response {
-                        status: 411,
-                        content_type: "text/plain",
-                        body: "length required: POST needs Content-Length\n".into(),
-                        allow: None,
-                    }
-                } else {
-                    handle(&state, &method, &path, &body)
-                };
-                let allow_header =
-                    resp.allow.map(|a| format!("Allow: {}\r\n", a)).unwrap_or_default();
-                let _ = write!(
-                    stream,
-                    "HTTP/1.1 {} {}\r\nContent-Type: {}\r\nContent-Length: {}\r\n{}Connection: close\r\n\r\n{}",
-                    resp.status,
-                    status_text(resp.status),
-                    resp.content_type,
-                    resp.body.len(),
-                    allow_header,
-                    resp.body
-                );
             });
         }
     });
     Ok((bound, handle))
 }
 
+/// One pooled connection: keep serving requests until the client
+/// closes, goes idle past the keep-alive timeout, or asks for
+/// `Connection: close`. The SSE route hands the socket to a dedicated
+/// streaming thread and returns the worker to the pool.
+fn handle_connection(
+    mut stream: TcpStream,
+    state: &WebState,
+    opts: &ServeOpts,
+    stop: &Arc<AtomicBool>,
+    sse_clients: &Arc<AtomicUsize>,
+) {
+    let _ = stream.set_read_timeout(Some(opts.keepalive));
+    let mut buf = Vec::new();
+    while !stop.load(Ordering::SeqCst) {
+        let Some((head, body)) = read_request(&mut stream, &mut buf) else { break };
+        let first = head.lines().next().unwrap_or("");
+        let mut parts = first.split_whitespace();
+        let method = parts.next().unwrap_or("GET");
+        let path = parts.next().unwrap_or("/");
+        let (route, query) = path.split_once('?').unwrap_or((path, ""));
+        if method == "GET" && percent_decode(route) == "/api/v1/events/stream" {
+            let query = query.to_string();
+            let head = head.clone();
+            serve_sse(stream, state, &query, &head, opts, stop, sse_clients);
+            return; // the socket now belongs to the stream (or is closed)
+        }
+        let resp = route_request(state, &head, &body);
+        let keep = wants_keepalive(&head);
+        if write_response(&mut stream, &resp, keep).is_err() || !keep {
+            break;
+        }
+    }
+}
+
+/// `GET /api/v1/events/stream`: validate the filters, then hand the
+/// socket to a dedicated thread that pushes one SSE frame per bus
+/// event. Resume honors the standard `Last-Event-ID` header (or the
+/// `last_event_id=` query parameter): the subscription starts at
+/// `last_seen + 1`, replaying retained events before going live.
+fn serve_sse(
+    mut stream: TcpStream,
+    state: &WebState,
+    query: &str,
+    head: &str,
+    opts: &ServeOpts,
+    stop: &Arc<AtomicBool>,
+    sse_clients: &Arc<AtomicUsize>,
+) {
+    // Validate before committing to the stream: bad input gets a
+    // normal JSON error response on the still-plain connection.
+    let mut filter = EventFilter::default();
+    let mut resume: Option<u64> = None;
+    for (k, v) in parse_query(query) {
+        match k.as_str() {
+            "kind" => {
+                if !ALL_EVENT_KINDS.contains(&v.as_str()) {
+                    let resp = api_response(ApiResponse::Error {
+                        error: ApiError::invalid(format!(
+                            "events/stream: unknown event kind '{}'",
+                            v
+                        )),
+                    });
+                    let _ = write_response(&mut stream, &resp, false);
+                    return;
+                }
+                filter.kind = Some(v);
+            }
+            "subject" => filter.subject = Some(v),
+            "last_event_id" => match v.parse::<u64>() {
+                Ok(n) => resume = Some(n),
+                Err(_) => {
+                    let resp = api_response(ApiResponse::Error {
+                        error: ApiError::invalid(
+                            "events/stream: 'last_event_id' must be a non-negative integer",
+                        ),
+                    });
+                    let _ = write_response(&mut stream, &resp, false);
+                    return;
+                }
+            },
+            _ => {} // unknown parameters are ignored
+        }
+    }
+    if let Some(h) = header_value(head, "last-event-id") {
+        match h.parse::<u64>() {
+            Ok(n) => resume = Some(n),
+            Err(_) => {
+                let resp = api_response(ApiResponse::Error {
+                    error: ApiError::invalid(
+                        "events/stream: Last-Event-ID must be a bus sequence number",
+                    ),
+                });
+                let _ = write_response(&mut stream, &resp, false);
+                return;
+            }
+        }
+    }
+    if sse_clients.fetch_add(1, Ordering::SeqCst) >= opts.max_sse_clients {
+        sse_clients.fetch_sub(1, Ordering::SeqCst);
+        let resp = Response::text(503, "too many event streams\n");
+        let _ = write_response(&mut stream, &resp, false);
+        return;
+    }
+    let bus = state.events.bus().clone();
+    let stop = stop.clone();
+    let sse_clients = sse_clients.clone();
+    std::thread::spawn(move || {
+        let mut sub = match resume {
+            Some(last_seen) => bus.subscribe_from(last_seen + 1),
+            None => bus.subscribe(),
+        }
+        .with_filter(filter);
+        let _ = stream.set_read_timeout(None);
+        let _ = sse_stream(&mut stream, &mut sub, &stop);
+        sse_clients.fetch_sub(1, Ordering::SeqCst);
+    });
+}
+
+/// The push loop: frames are `id:` (bus seq) / `event:` (kind name) /
+/// `data:` (the event's JSON envelope). Idle periods emit comment
+/// pings so dead clients are detected even when no events flow.
+fn sse_stream(
+    stream: &mut TcpStream,
+    sub: &mut crate::events::Subscription,
+    stop: &AtomicBool,
+) -> std::io::Result<()> {
+    stream.write_all(
+        b"HTTP/1.1 200 OK\r\nContent-Type: text/event-stream\r\nCache-Control: no-cache\r\nConnection: close\r\n\r\n",
+    )?;
+    stream.flush()?;
+    let mut idle_polls = 0u32;
+    loop {
+        if stop.load(Ordering::SeqCst) {
+            return Ok(());
+        }
+        let events = sub.poll_max(256);
+        if events.is_empty() {
+            std::thread::sleep(Duration::from_millis(15));
+            idle_polls += 1;
+            if idle_polls >= 130 {
+                // ~2s of silence: a comment ping flushes out dead
+                // clients (the write fails once the peer is gone).
+                idle_polls = 0;
+                stream.write_all(b": ping\n\n")?;
+                stream.flush()?;
+            }
+            continue;
+        }
+        idle_polls = 0;
+        let mut frame = String::new();
+        for e in &events {
+            frame.push_str(&format!(
+                "id: {}\nevent: {}\ndata: {}\n\n",
+                e.seq,
+                e.kind.name(),
+                e.to_json()
+            ));
+        }
+        stream.write_all(frame.as_bytes())?;
+        stream.flush()?;
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::events::{EventKind, Level};
     use crate::session::{SessionRecord, SessionSpec};
     use crate::util::clock::sim_clock;
 
@@ -690,6 +1041,36 @@ mod tests {
         WebState { sessions, leaderboard, cluster: Some(cluster), events, api: None }
     }
 
+    /// A stub service answering each request with `f` on its own
+    /// thread, so routing tests run without a platform.
+    fn stub_api<F>(f: F) -> ServiceHandle
+    where
+        F: Fn(&ApiRequest) -> ApiResponse + Send + 'static,
+    {
+        let (api, rx) = crate::api::service_channel();
+        std::thread::spawn(move || {
+            while let Ok(call) = rx.recv() {
+                let resp = f(call.request());
+                call.respond(resp);
+            }
+        });
+        api
+    }
+
+    /// Read from `stream` into `acc` until `acc[from..]` contains
+    /// `pat` (the stream's read timeout bounds the wait — no
+    /// wall-clock sleeps).
+    fn read_until(stream: &mut TcpStream, acc: &mut String, from: usize, pat: &str) {
+        let mut buf = [0u8; 4096];
+        while !acc[from..].contains(pat) {
+            match stream.read(&mut buf) {
+                Ok(0) => panic!("eof before '{}' in {:?}", pat, acc),
+                Ok(n) => acc.push_str(&String::from_utf8_lossy(&buf[..n])),
+                Err(e) => panic!("read waiting for '{}': {} (have {:?})", pat, e, acc),
+            }
+        }
+    }
+
     #[test]
     fn dashboard_lists_sessions_and_boards() {
         let s = state();
@@ -701,32 +1082,12 @@ mod tests {
     }
 
     #[test]
-    fn api_sessions_json_parses() {
-        let s = state();
-        let r = handle(&s, "GET", "/api/sessions", "");
-        let j = crate::util::json::parse(&r.body).unwrap();
-        let arr = j.as_arr().unwrap();
-        assert_eq!(arr.len(), 1);
-        assert_eq!(arr[0].get("state").unwrap().as_str(), Some("queued"));
-    }
-
-    #[test]
-    fn api_session_detail_has_metrics() {
-        let s = state();
-        let r = handle(&s, "GET", "/api/session/kim/mnist/1", "");
-        let j = crate::util::json::parse(&r.body).unwrap();
-        let pts = j.at(&["metrics", "train_loss"]).unwrap().as_arr().unwrap();
-        assert_eq!(pts.len(), 2);
-    }
-
-    #[test]
     fn percent_encoded_paths_decode() {
         let s = state();
         // kim/mnist/1 with the slashes percent-encoded.
-        let r = handle(&s, "GET", "/api/session/kim%2Fmnist%2F1", "");
+        let r = handle(&s, "GET", "/session/kim%2Fmnist%2F1", "");
         assert_eq!(r.status, 200);
-        let j = crate::util::json::parse(&r.body).unwrap();
-        assert_eq!(j.get("id").unwrap().as_str(), Some("kim/mnist/1"));
+        assert!(r.body.contains("mnist_mlp"));
         // Invalid escapes pass through untouched.
         assert_eq!(percent_decode("a%2Fb"), "a/b");
         assert_eq!(percent_decode("a%zzb"), "a%zzb");
@@ -743,34 +1104,118 @@ mod tests {
     }
 
     #[test]
-    fn board_json_and_html() {
+    fn board_html_renders() {
         let s = state();
-        let j = handle(&s, "GET", "/api/board/mnist", "");
-        assert_eq!(j.status, 200);
-        assert!(j.body.contains("\"rank\":1"));
         let h = handle(&s, "GET", "/board/mnist", "");
         assert!(h.body.contains("kim/mnist/1"));
-        assert_eq!(handle(&s, "GET", "/api/board/nope", "").status, 404);
     }
 
     #[test]
-    fn cluster_json() {
-        let s = state();
-        let r = handle(&s, "GET", "/api/cluster", "");
+    fn legacy_aliases_match_v1_and_deprecate() {
+        let api = stub_api(|req| match req {
+            ApiRequest::ListSessions { limit, offset, user } => {
+                // Aliases must dispatch the same wire defaults as the
+                // bare v1 request.
+                assert_eq!((*limit, *offset, user.as_deref()), (100, 0, None));
+                ApiResponse::Sessions { sessions: vec![] }
+            }
+            ApiRequest::GetSession { session } if session == "kim/mnist/1" => {
+                ApiResponse::Session {
+                    session: crate::api::SessionView::from_record(&SessionRecord::new(
+                        SessionSpec::new("kim/mnist/1", "kim", "mnist", "mnist_mlp"),
+                        0,
+                    )),
+                }
+            }
+            ApiRequest::GetSession { session } => ApiResponse::Error {
+                error: ApiError::not_found(format!("unknown session '{}'", session)),
+            },
+            ApiRequest::Board { dataset, .. } => {
+                ApiResponse::Board { dataset: dataset.clone(), rows: vec![] }
+            }
+            ApiRequest::ClusterStatus => {
+                ApiResponse::Ack { verb: "cluster_status".into(), session: None }
+            }
+            _ => ApiResponse::Sessions { sessions: vec![] },
+        });
+        let mut s = state();
+        s.api = Some(api);
+
+        // (alias, v1 method, v1 path, v1 body, successor route)
+        let cases = [
+            ("/api/sessions", "POST", "/api/v1/list_sessions", "", "/api/v1/sessions"),
+            (
+                "/api/session/kim%2Fmnist%2F1",
+                "POST",
+                "/api/v1/get_session",
+                r#"{"session":"kim/mnist/1"}"#,
+                "/api/v1/get_session",
+            ),
+            ("/api/board/mnist", "GET", "/api/v1/board?dataset=mnist", "", "/api/v1/board"),
+            ("/api/cluster", "POST", "/api/v1/cluster_status", "", "/api/v1/cluster_status"),
+        ];
+        for (alias, v1_method, v1_path, v1_body, successor) in cases {
+            let a = handle(&s, "GET", alias, "");
+            let b = handle(&s, v1_method, v1_path, v1_body);
+            assert_eq!(a.status, b.status, "{}", alias);
+            assert_eq!(a.body, b.body, "alias body must byte-match v1: {}", alias);
+            assert_eq!(a.content_type, "application/json", "{}", alias);
+            assert_eq!(a.deprecation, Some(successor), "{}", alias);
+            assert_eq!(b.deprecation, None, "{}", v1_path);
+        }
+
+        // Failures keep the uniform error envelope *and* the header.
+        let miss = handle(&s, "GET", "/api/session/missing", "");
+        assert_eq!(miss.status, 404);
+        let j = crate::util::json::parse(&miss.body).unwrap();
+        assert_eq!(j.at(&["data", "error", "code"]).unwrap().as_str(), Some("not_found"));
+        assert_eq!(miss.deprecation, Some("/api/v1/get_session"));
+    }
+
+    #[test]
+    fn sessions_query_route_paginates() {
+        let api = stub_api(|req| match req {
+            ApiRequest::ListSessions { limit, offset, user } => {
+                assert_eq!(*limit, 5);
+                assert_eq!(*offset, 10);
+                assert_eq!(user.as_deref(), Some("kim"));
+                ApiResponse::Sessions { sessions: vec![] }
+            }
+            _ => panic!("unexpected dispatch"),
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/sessions?limit=5&offset=10&user=kim", "");
+        assert_eq!(r.status, 200);
         let j = crate::util::json::parse(&r.body).unwrap();
-        assert_eq!(j.get("total_gpus").unwrap().as_i64(), Some(8));
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("sessions"));
+        // Bad paging values 400 before reaching the service.
+        assert_eq!(handle(&s, "GET", "/api/v1/sessions?limit=lots", "").status, 400);
+        assert_eq!(handle(&s, "GET", "/api/v1/sessions?offset=-1", "").status, 400);
     }
 
     #[test]
-    fn unknown_routes_404_and_method_routing() {
+    fn unknown_api_routes_return_error_envelopes() {
         let s = state();
-        assert_eq!(handle(&s, "GET", "/nope", "").status, 404);
-        assert_eq!(handle(&s, "GET", "/api/session/missing", "").status, 404);
-        // POST outside /api/v1/ -> 405 with Allow: GET.
-        let r = handle(&s, "POST", "/", "");
-        assert_eq!(r.status, 405);
-        assert_eq!(r.allow, Some("GET"));
-        // GET on a v1 verb -> 405 with Allow: POST.
+        // Plain text 404 outside the API surface…
+        let r = handle(&s, "GET", "/nope", "");
+        assert_eq!(r.status, 404);
+        assert_eq!(r.content_type, "text/plain");
+        // …but /api/* unknowns are machine-readable envelopes, even
+        // with no service attached.
+        for path in ["/api/nope", "/api/v1/frobnicate", "/api/session"] {
+            let r = handle(&s, "GET", path, "");
+            assert_eq!(r.status, 404, "{}", path);
+            assert_eq!(r.content_type, "application/json", "{}", path);
+            let j = crate::util::json::parse(&r.body).unwrap();
+            assert_eq!(
+                j.at(&["data", "error", "code"]).unwrap().as_str(),
+                Some("unknown_route"),
+                "{}",
+                path
+            );
+        }
+        // Known verbs under /api/v1/ still advertise POST.
         let r = handle(&s, "GET", "/api/v1/run", "");
         assert_eq!(r.status, 405);
         assert_eq!(r.allow, Some("POST"));
@@ -778,6 +1223,10 @@ mod tests {
         let r = handle(&s, "DELETE", "/", "");
         assert_eq!(r.status, 405);
         assert_eq!(r.allow, Some("GET, POST"));
+        // POST outside /api/v1/ -> 405 with Allow: GET.
+        let r = handle(&s, "POST", "/", "");
+        assert_eq!(r.status, 405);
+        assert_eq!(r.allow, Some("GET"));
     }
 
     #[test]
@@ -785,49 +1234,47 @@ mod tests {
         let s = state();
         let r = handle(&s, "POST", "/api/v1/list_sessions", "");
         assert_eq!(r.status, 503);
-        // The executor/events/tenants/board read routes need the
-        // service too.
+        // Every dispatch-backed read route needs the service too —
+        // including the deprecated aliases, which now re-route.
         assert_eq!(handle(&s, "GET", "/api/v1/executor", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/events?since=0", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/tenants", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/durability", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/service", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/sessions", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/sessions", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/cluster", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/board/mnist", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/session/kim%2Fmnist%2F1", "").status, 503);
     }
 
     #[test]
     fn tenants_and_board_routes_dispatch_queries() {
         use crate::api::TenantView;
-        // Stub service: a canned tenant report, and board dispatches
-        // echoing the parsed user filter.
-        let (api, rx) = crate::api::service_channel();
-        std::thread::spawn(move || {
-            while let Ok(call) = rx.recv() {
-                let resp = match call.request() {
-                    ApiRequest::TenantReport => ApiResponse::Tenants {
-                        tenants: vec![TenantView {
-                            user: "kim".into(),
-                            weight: 2,
-                            class: "high".into(),
-                            max_concurrent: 3,
-                            max_gpus: 8,
-                            gpu_second_budget: 60.0,
-                            gpu_seconds_used: 12.5,
-                            active_sessions: 1,
-                            gpus_in_use: 2,
-                            waiting: 1,
-                            preemptions: 1,
-                        }],
-                    },
-                    ApiRequest::Board { dataset, limit, user } => {
-                        assert_eq!(dataset, "mnist");
-                        assert_eq!(*limit, 5);
-                        assert_eq!(user.as_deref(), Some("kim"));
-                        ApiResponse::Board { dataset: dataset.clone(), rows: vec![] }
-                    }
-                    _ => ApiResponse::Sessions { sessions: vec![] },
-                };
-                call.respond(resp);
+        let api = stub_api(|req| match req {
+            ApiRequest::TenantReport => ApiResponse::Tenants {
+                tenants: vec![TenantView {
+                    user: "kim".into(),
+                    weight: 2,
+                    class: "high".into(),
+                    max_concurrent: 3,
+                    max_gpus: 8,
+                    gpu_second_budget: 60.0,
+                    gpu_seconds_used: 12.5,
+                    active_sessions: 1,
+                    gpus_in_use: 2,
+                    waiting: 1,
+                    preemptions: 1,
+                }],
+            },
+            ApiRequest::Board { dataset, limit, user } => {
+                assert_eq!(dataset, "mnist");
+                assert_eq!(*limit, 5);
+                assert_eq!(user.as_deref(), Some("kim"));
+                ApiResponse::Board { dataset: dataset.clone(), rows: vec![] }
             }
+            _ => ApiResponse::Sessions { sessions: vec![] },
         });
         let mut s = state();
         s.api = Some(api);
@@ -852,34 +1299,27 @@ mod tests {
     #[test]
     fn durability_route_serves_wal_counters() {
         use crate::api::DurabilityView;
-        // Stub service answering a canned durability snapshot.
-        let (api, rx) = crate::api::service_channel();
-        std::thread::spawn(move || {
-            while let Ok(call) = rx.recv() {
-                let resp = match call.request() {
-                    ApiRequest::DurabilityStatus => ApiResponse::Durability {
-                        durability: DurabilityView {
-                            enabled: true,
-                            wal_records: 7,
-                            wal_bytes: 1024,
-                            wal_last_seq: Some(41),
-                            records_since_snapshot: 7,
-                            snapshot_every: 512,
-                            snapshots: 2,
-                            last_snapshot_seq: 34,
-                            wal_dropped: 0,
-                            consumer_dropped: 0,
-                            gc_enabled: true,
-                            gc_live_objects: 10,
-                            gc_live_bytes: 4096,
-                            gc_swept_objects: 1,
-                            gc_swept_bytes: 128,
-                        },
-                    },
-                    _ => ApiResponse::Sessions { sessions: vec![] },
-                };
-                call.respond(resp);
-            }
+        let api = stub_api(|req| match req {
+            ApiRequest::DurabilityStatus => ApiResponse::Durability {
+                durability: DurabilityView {
+                    enabled: true,
+                    wal_records: 7,
+                    wal_bytes: 1024,
+                    wal_last_seq: Some(41),
+                    records_since_snapshot: 7,
+                    snapshot_every: 512,
+                    snapshots: 2,
+                    last_snapshot_seq: 34,
+                    wal_dropped: 0,
+                    consumer_dropped: 0,
+                    gc_enabled: true,
+                    gc_live_objects: 10,
+                    gc_live_bytes: 4096,
+                    gc_swept_objects: 1,
+                    gc_swept_bytes: 128,
+                },
+            },
+            _ => ApiResponse::Sessions { sessions: vec![] },
         });
         let mut s = state();
         s.api = Some(api);
@@ -893,41 +1333,58 @@ mod tests {
     }
 
     #[test]
+    fn service_route_serves_loop_counters() {
+        use crate::api::ServiceStatusView;
+        let api = stub_api(|req| match req {
+            ApiRequest::ServiceStatus => ApiResponse::Service {
+                service: ServiceStatusView {
+                    running: true,
+                    rounds: 12,
+                    last_round_ms: 1.5,
+                    rounds_per_sec: 80.0,
+                    progressed_total: 30,
+                    dispatches: 4,
+                },
+            },
+            _ => ApiResponse::Sessions { sessions: vec![] },
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/service", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("service"));
+        assert_eq!(j.at(&["data", "service", "rounds"]).unwrap().as_i64(), Some(12));
+        assert_eq!(j.at(&["data", "service", "running"]).unwrap().as_bool(), Some(true));
+    }
+
+    #[test]
     fn events_route_pages_cursor_reads() {
-        use crate::events::{Event, EventKind, Level};
-        // Stub service echoing the parsed events_since arguments back
-        // through a canned page, so the query-string plumbing is
-        // verified without a platform.
-        let (api, rx) = crate::api::service_channel();
-        std::thread::spawn(move || {
-            while let Ok(call) = rx.recv() {
-                let resp = match call.request() {
-                    ApiRequest::EventsSince { since, kind, subject, limit } => {
-                        assert_eq!(*since, 5);
-                        assert_eq!(kind.as_deref(), Some("state"));
-                        assert_eq!(subject.as_deref(), Some("kim/mnist/1"));
-                        assert_eq!(*limit, 2);
-                        ApiResponse::Events {
-                            events: vec![Event {
-                                seq: 6,
-                                at_ms: 100,
-                                level: Level::Info,
-                                source: "session".into(),
-                                subject: "kim/mnist/1".into(),
-                                kind: EventKind::StateChanged {
-                                    from: "running".into(),
-                                    to: "done".into(),
-                                    step: 40,
-                                },
-                            }],
-                            next: 7,
-                            dropped: 0,
-                        }
-                    }
-                    _ => ApiResponse::Sessions { sessions: vec![] },
-                };
-                call.respond(resp);
+        use crate::events::Event;
+        let api = stub_api(|req| match req {
+            ApiRequest::EventsSince { since, kind, subject, limit } => {
+                assert_eq!(*since, 5);
+                assert_eq!(kind.as_deref(), Some("state"));
+                assert_eq!(subject.as_deref(), Some("kim/mnist/1"));
+                assert_eq!(*limit, 2);
+                ApiResponse::Events {
+                    events: vec![Event {
+                        seq: 6,
+                        at_ms: 100,
+                        level: Level::Info,
+                        source: "session".into(),
+                        subject: "kim/mnist/1".into(),
+                        kind: EventKind::StateChanged {
+                            from: "running".into(),
+                            to: "done".into(),
+                            step: 40,
+                        },
+                    }],
+                    next: 7,
+                    dropped: 0,
+                }
             }
+            _ => ApiResponse::Sessions { sessions: vec![] },
         });
         let mut s = state();
         s.api = Some(api);
@@ -956,39 +1413,32 @@ mod tests {
     #[test]
     fn executor_route_serves_worker_telemetry() {
         use crate::api::{ExecutorStats, WorkerStatView};
-        // Stub service answering a canned executor snapshot.
-        let (api, rx) = crate::api::service_channel();
-        std::thread::spawn(move || {
-            while let Ok(call) = rx.recv() {
-                let resp = match call.request() {
-                    ApiRequest::ExecutorStatus => ApiResponse::Executor {
-                        executor: ExecutorStats {
-                            workers: vec![
-                                WorkerStatView {
-                                    worker: 0,
-                                    live_sessions: 2,
-                                    queue_depth: 0,
-                                    steals: 0,
-                                    busy_ms: 12.5,
-                                },
-                                WorkerStatView {
-                                    worker: 1,
-                                    live_sessions: 2,
-                                    queue_depth: 0,
-                                    steals: 2,
-                                    busy_ms: 11.0,
-                                },
-                            ],
-                            live_sessions: 4,
+        let api = stub_api(|req| match req {
+            ApiRequest::ExecutorStatus => ApiResponse::Executor {
+                executor: ExecutorStats {
+                    workers: vec![
+                        WorkerStatView {
+                            worker: 0,
+                            live_sessions: 2,
                             queue_depth: 0,
-                            total_steals: 2,
-                            work_steal: true,
+                            steals: 0,
+                            busy_ms: 12.5,
                         },
-                    },
-                    _ => ApiResponse::Sessions { sessions: vec![] },
-                };
-                call.respond(resp);
-            }
+                        WorkerStatView {
+                            worker: 1,
+                            live_sessions: 2,
+                            queue_depth: 0,
+                            steals: 2,
+                            busy_ms: 11.0,
+                        },
+                    ],
+                    live_sessions: 4,
+                    queue_depth: 0,
+                    total_steals: 2,
+                    work_steal: true,
+                },
+            },
+            _ => ApiResponse::Sessions { sessions: vec![] },
         });
         let mut s = state();
         s.api = Some(api);
@@ -1006,19 +1456,11 @@ mod tests {
 
     #[test]
     fn post_with_service_dispatches_and_maps_errors() {
-        // A stub service thread that answers canned responses without a
-        // real platform: not_found for get_session, sessions otherwise.
-        let (api, rx) = crate::api::service_channel();
-        std::thread::spawn(move || {
-            while let Ok(call) = rx.recv() {
-                let resp = match call.request() {
-                    ApiRequest::GetSession { session } => ApiResponse::Error {
-                        error: ApiError::not_found(format!("unknown session '{}'", session)),
-                    },
-                    _ => ApiResponse::Sessions { sessions: vec![] },
-                };
-                call.respond(resp);
-            }
+        let api = stub_api(|req| match req {
+            ApiRequest::GetSession { session } => ApiResponse::Error {
+                error: ApiError::not_found(format!("unknown session '{}'", session)),
+            },
+            _ => ApiResponse::Sessions { sessions: vec![] },
         });
         let mut s = state();
         s.api = Some(api);
@@ -1042,14 +1484,99 @@ mod tests {
     }
 
     #[test]
-    fn live_server_round_trip() {
+    fn pooled_server_reuses_keep_alive_connections() {
+        let api = stub_api(|req| match req {
+            ApiRequest::ListSessions { .. } => ApiResponse::Sessions { sessions: vec![] },
+            _ => ApiResponse::Sessions { sessions: vec![] },
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let srv = serve_with(s, 0, ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+
+        // Two requests over ONE socket: the pooled server must answer
+        // both without the client reconnecting.
+        let mut stream = TcpStream::connect(("127.0.0.1", srv.port())).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut acc = String::new();
+        write!(stream, "GET /api/v1/sessions HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        read_until(&mut stream, &mut acc, 0, "\"kind\":\"sessions\"");
+        assert!(acc.contains("HTTP/1.1 200"));
+        assert!(acc.contains("Connection: keep-alive"));
+
+        let mark = acc.len();
+        write!(stream, "GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        read_until(&mut stream, &mut acc, mark, "NSML dashboard");
+        assert!(acc[mark..].contains("HTTP/1.1 200"));
+
+        // An explicit close is honored.
+        let mark = acc.len();
+        write!(stream, "GET / HTTP/1.1\r\nHost: x\r\nConnection: close\r\n\r\n").unwrap();
+        read_until(&mut stream, &mut acc, mark, "Connection: close");
+        srv.shutdown();
+    }
+
+    #[test]
+    fn sse_stream_delivers_and_resumes() {
         let s = state();
-        let (port, _h) = serve(s, 0).unwrap();
-        let mut stream = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
-        write!(stream, "GET /api/cluster HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let bus = s.events.bus().clone();
+        let srv = serve_with(s, 0, ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+        let port = srv.port();
+
+        let mut c1 = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        c1.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut acc = String::new();
+        write!(c1, "GET /api/v1/events/stream?kind=log HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        read_until(&mut c1, &mut acc, 0, "\r\n\r\n");
+        assert!(acc.contains("HTTP/1.1 200"));
+        assert!(acc.contains("text/event-stream"));
+
+        // An event published *after* subscribing is pushed to the
+        // client — no polling involved.
+        let first =
+            bus.publish(Level::Info, "test", "s1", EventKind::LogLine { message: "hello".into() });
+        read_until(&mut c1, &mut acc, 0, "hello");
+        assert!(acc.contains(&format!("id: {}", first)));
+        assert!(acc.contains("event: log"));
+        drop(c1);
+
+        // Events published while disconnected replay on resume via
+        // Last-Event-ID.
+        let second =
+            bus.publish(Level::Info, "test", "s1", EventKind::LogLine { message: "again".into() });
+        let mut c2 = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        c2.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut acc = String::new();
+        write!(
+            c2,
+            "GET /api/v1/events/stream HTTP/1.1\r\nHost: x\r\nLast-Event-ID: {}\r\n\r\n",
+            first
+        )
+        .unwrap();
+        read_until(&mut c2, &mut acc, 0, "again");
+        assert!(acc.contains(&format!("id: {}", second)));
+        assert!(!acc.contains("hello"), "resume must skip already-seen events");
+        drop(c2);
+
+        // Bad filters are rejected before the stream starts.
+        let mut c3 = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        c3.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut acc = String::new();
+        write!(c3, "GET /api/v1/events/stream?kind=bogus HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        read_until(&mut c3, &mut acc, 0, "invalid_argument");
+        assert!(acc.contains("HTTP/1.1 400"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn thread_per_conn_baseline_still_serves() {
+        let s = state();
+        let (port, _h) = serve_thread_per_conn(s, 0).unwrap();
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        write!(stream, "GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
         let mut out = String::new();
         stream.read_to_string(&mut out).unwrap();
         assert!(out.starts_with("HTTP/1.1 200"));
-        assert!(out.contains("total_gpus"));
+        assert!(out.contains("NSML dashboard"));
+        assert!(out.contains("Connection: close"));
     }
 }

@@ -5,8 +5,8 @@
 
 use nsml::api::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ExecutorStats,
-    NodeStatusView, NsmlPlatform, PlatformConfig, PlatformService, RunParams, SessionView,
-    TenantView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS,
+    NodeStatusView, NsmlPlatform, PlatformConfig, PlatformService, RunParams, ServiceStatusView,
+    SessionView, TenantView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS,
 };
 use nsml::session::SessionState;
 use nsml::util::json::parse;
@@ -33,7 +33,9 @@ fn sample_requests() -> Vec<ApiRequest> {
         ApiRequest::Drive { chunk: 25 },
         ApiRequest::RunToCompletion { chunk: 20, max_rounds: 10_000 },
         ApiRequest::KillNode { node: 2 },
-        ApiRequest::ListSessions,
+        ApiRequest::list_sessions(),
+        ApiRequest::ListSessions { limit: 5, offset: 10, user: Some("kim".into()) },
+        ApiRequest::ServiceStatus,
         ApiRequest::GetSession { session: "kim/mnist/1".into() },
         ApiRequest::Board { dataset: "mnist".into(), limit: 10, user: None },
         ApiRequest::Board { dataset: "mnist".into(), limit: 10, user: Some("kim".into()) },
@@ -234,6 +236,16 @@ fn sample_responses() -> Vec<ApiResponse> {
                 gc_swept_bytes: 4096,
             },
         },
+        ApiResponse::Service {
+            service: ServiceStatusView {
+                running: true,
+                rounds: 420,
+                last_round_ms: 3.5,
+                rounds_per_sec: 150.25,
+                progressed_total: 980,
+                dispatches: 17,
+            },
+        },
         ApiResponse::Error {
             error: ApiError::failed("session kim/mnist/1 is not active").with_session("kim/mnist/1"),
         },
@@ -418,7 +430,7 @@ fn trial_batch_places_and_completes_all() {
         assert_eq!(get_view(&s, id).state, SessionState::Done, "{}", id);
     }
     // A failing batch reports which trial broke and places nothing new.
-    let before = match s.dispatch(ApiRequest::ListSessions) {
+    let before = match s.dispatch(ApiRequest::list_sessions()) {
         ApiResponse::Sessions { sessions } => sessions.len(),
         other => panic!("{:?}", other),
     };
@@ -431,7 +443,7 @@ fn trial_batch_places_and_completes_all() {
         ApiResponse::Error { error } => assert!(error.message.contains("trial 0"), "{}", error),
         other => panic!("{:?}", other),
     }
-    match s.dispatch(ApiRequest::ListSessions) {
+    match s.dispatch(ApiRequest::list_sessions()) {
         ApiResponse::Sessions { sessions } => assert_eq!(sessions.len(), before),
         other => panic!("{:?}", other),
     }

@@ -86,31 +86,48 @@ fn web_api_serves_live_platform_state() {
     let id = p.run("web", "mnist", quick(10, 3)).unwrap();
     p.run_to_completion(5, 10_000).unwrap();
 
+    // The deprecated read aliases dispatch through the service now, so
+    // the fixture needs a live handle — the platform owner (this thread)
+    // pumps the queries the client issues.
+    let service = nsml::api::PlatformService::new(p);
+    let (api, rx) = nsml::api::service_channel();
     let state = nsml::web::WebState {
-        sessions: p.sessions.clone(),
-        leaderboard: p.leaderboard.clone(),
-        cluster: Some(p.cluster.clone()),
-        events: p.events.clone(),
-        api: None,
+        sessions: service.platform().sessions.clone(),
+        leaderboard: service.platform().leaderboard.clone(),
+        cluster: Some(service.platform().cluster.clone()),
+        events: service.platform().events.clone(),
+        api: Some(api),
     };
-    let (port, _handle) = nsml::web::serve(state, 0).unwrap();
+    let srv = nsml::web::serve(state, 0).unwrap();
+    let port = srv.port();
 
-    let fetch = |path: &str| -> String {
-        let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
-        write!(s, "GET {} HTTP/1.1\r\nHost: t\r\n\r\n", path).unwrap();
-        let mut out = String::new();
-        s.read_to_string(&mut out).unwrap();
-        out
-    };
+    let sid = id.clone();
+    let client = std::thread::spawn(move || {
+        let fetch = |path: &str| -> String {
+            let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
+            write!(s, "GET {} HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n", path).unwrap();
+            let mut out = String::new();
+            s.read_to_string(&mut out).unwrap();
+            out
+        };
+        let dash = fetch("/");
+        let api = fetch("/api/sessions");
+        let board = fetch("/api/board/mnist");
+        let svg = fetch(&format!("/plot/{}.svg", sid));
+        (dash, api, board, svg)
+    });
+    // Two of the four fetches are alias routes that dispatch.
+    for _ in 0..2 {
+        assert!(service.serve_one(&rx));
+    }
+    let (dash, api, board, svg) = client.join().unwrap();
+    srv.shutdown();
 
-    let dash = fetch("/");
     assert!(dash.starts_with("HTTP/1.1 200"));
     assert!(dash.contains(&id));
-    let api = fetch("/api/sessions");
-    assert!(api.contains("\"state\":\"done\""));
-    let board = fetch("/api/board/mnist");
-    assert!(board.contains("\"rank\":1"));
-    let svg = fetch(&format!("/plot/{}.svg", id));
+    assert!(api.contains("\"state\":\"done\""), "{}", api);
+    assert!(api.contains("Deprecation: true"), "{}", api);
+    assert!(board.contains("\"rank\":1"), "{}", board);
     assert!(svg.contains("image/svg+xml"));
     assert!(svg.contains("train_loss"));
 }
@@ -128,7 +145,8 @@ fn web_post_api_v1_mutates_through_the_service() {
         events: service.platform().events.clone(),
         api: Some(api),
     };
-    let (port, _handle) = nsml::web::serve(state, 0).unwrap();
+    let srv = nsml::web::serve(state, 0).unwrap();
+    let port = srv.port();
 
     // HTTP client on a side thread; this thread (the platform owner)
     // pumps exactly the dispatches the client issues.
@@ -137,7 +155,7 @@ fn web_post_api_v1_mutates_through_the_service() {
             let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
             write!(
                 s,
-                "POST {} HTTP/1.1\r\nHost: t\r\nContent-Length: {}\r\n\r\n{}",
+                "POST {} HTTP/1.1\r\nHost: t\r\nConnection: close\r\nContent-Length: {}\r\n\r\n{}",
                 path,
                 body.len(),
                 body
@@ -160,6 +178,7 @@ fn web_post_api_v1_mutates_through_the_service() {
     };
     service_thread_work();
     let (run, done, missing) = client.join().unwrap();
+    srv.shutdown();
 
     assert!(run.starts_with("HTTP/1.1 200"), "{}", run);
     assert!(run.contains("\"kind\":\"submitted\""), "{}", run);
@@ -186,11 +205,12 @@ fn web_405_includes_allow_header() {
         events: p.events.clone(),
         api: None,
     };
-    let (port, _handle) = nsml::web::serve(state, 0).unwrap();
-    let mut s = std::net::TcpStream::connect(("127.0.0.1", port)).unwrap();
-    write!(s, "PUT / HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+    let srv = nsml::web::serve(state, 0).unwrap();
+    let mut s = std::net::TcpStream::connect(("127.0.0.1", srv.port())).unwrap();
+    write!(s, "PUT / HTTP/1.1\r\nHost: t\r\nConnection: close\r\n\r\n").unwrap();
     let mut out = String::new();
     s.read_to_string(&mut out).unwrap();
+    srv.shutdown();
     assert!(out.starts_with("HTTP/1.1 405"), "{}", out);
     assert!(out.contains("Allow: GET, POST"), "{}", out);
 }

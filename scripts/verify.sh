@@ -38,6 +38,34 @@ else
     echo "artifacts not built (rust/artifacts/manifest.json missing); skipping recovery smoke"
 fi
 
+echo "== serve smoke: nsml serve on an ephemeral port =="
+if [ -f artifacts/manifest.json ] && [ -x target/release/nsml ]; then
+    tmp="$(mktemp -d)"
+    trap 'rm -rf "$tmp"' EXIT
+    # --for-ms bounds the daemon: the service exits 0 on its own after
+    # the deadline (a clean, state-saving shutdown — no kill needed).
+    target/release/nsml serve --port 0 --for-ms 6000 \
+        --state "$tmp/state" > "$tmp/serve.log" 2>&1 &
+    serve_pid=$!
+    port=""
+    for _ in $(seq 1 50); do
+        port="$(sed -n 's#.*http://127\.0\.0\.1:\([0-9]*\)/.*#\1#p' "$tmp/serve.log" | head -n1)"
+        [ -n "$port" ] && break
+        sleep 0.1
+    done
+    [ -n "$port" ] || { echo "serve never printed its URL"; cat "$tmp/serve.log"; exit 1; }
+    curl -sf "http://127.0.0.1:$port/api/v1/sessions" | grep -q '"kind":"sessions"'
+    # The SSE route streams forever; grab just the headers and confirm
+    # the content type (curl exits 28 on the read timeout — expected).
+    curl -s -i -m 2 "http://127.0.0.1:$port/api/v1/events/stream" \
+        > "$tmp/sse.out" 2>/dev/null || true
+    grep -q "text/event-stream" "$tmp/sse.out"
+    wait "$serve_pid"
+    echo "serve smoke OK (port $port)"
+else
+    echo "artifacts or release binary missing; skipping serve smoke"
+fi
+
 echo "== cargo clippy --all-targets -- -D warnings =="
 if cargo clippy --version >/dev/null 2>&1; then
     cargo clippy --all-targets -- -D warnings
