@@ -1,0 +1,185 @@
+//! Serving throughput: the micro-batcher vs one-request-per-execution.
+//!
+//! Two identically configured platforms — one with `[serving]
+//! max_batch = 64` (the default), one pinned to `max_batch = 1` — each
+//! train a session, promote it to an endpoint, and then serve 16
+//! concurrent daemon clients while a background training run keeps the
+//! drive loop busy (the realistic case: serving competes with
+//! training for the loop). The acceptance gate is batched wall-clock
+//! ≥ 2× better than unbatched at 16 clients, with a bounded p99.
+//! A facade-level burst sweep also reports batch sizes 1 / 8 / 64.
+//!
+//! Run: `cargo bench --bench bench_serving`
+
+use nsml::api::{
+    service_channel, ApiRequest, ApiResponse, DaemonOpts, NsmlPlatform, PlatformConfig,
+    PlatformService, RunOpts,
+};
+use nsml::util::bench::{smoke, Bench};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const ROW: usize = 144; // one mnist_mlp request row ([64, 144] tensor)
+
+fn row(seed: usize) -> Vec<f32> {
+    (0..ROW).map(|i| ((seed * 31 + i * 7) % 97) as f32 / 97.0).collect()
+}
+
+fn quick(steps: u64, seed: u64) -> RunOpts {
+    RunOpts {
+        total_steps: steps,
+        eval_every: (steps / 2).max(1),
+        checkpoint_every: (steps / 2).max(1),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// A service with one trained session promoted to endpoint "prod".
+fn serving_platform(max_batch: usize) -> PlatformService {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.serving_max_batch = max_batch;
+    let p = NsmlPlatform::new(cfg).unwrap();
+    let id = p.run("bench", "mnist", quick(16, 0)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    p.promote_endpoint("prod", &id).unwrap();
+    PlatformService::new(p)
+}
+
+/// Drive `clients` threads, each issuing `per_client` serve requests
+/// through the daemon while a background session trains. Returns
+/// (wall ms, per-request latencies ms, mean observed batch size).
+fn concurrent_serve(
+    service: &PlatformService,
+    clients: usize,
+    per_client: usize,
+    bg_steps: u64,
+) -> (f64, Vec<f64>, f64) {
+    service.platform().run("bg", "mnist", quick(bg_steps, 9)).unwrap();
+    let (handle, rx) = service_channel();
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let mut lat = Vec::with_capacity(per_client);
+                let mut batch_sum = 0u64;
+                for r in 0..per_client {
+                    let t = Instant::now();
+                    match h.call(ApiRequest::ServeInfer {
+                        endpoint: "prod".into(),
+                        user: format!("client{}", c),
+                        x: row(c * 1000 + r),
+                    }) {
+                        ApiResponse::Served { batch, probs, .. } => {
+                            assert_eq!(probs.len(), 10);
+                            batch_sum += batch;
+                        }
+                        other => panic!("serve_infer: {:?}", other),
+                    }
+                    lat.push(t.elapsed().as_secs_f64() * 1000.0);
+                }
+                (lat, batch_sum)
+            })
+        })
+        .collect();
+    drop(handle); // daemon exits once every client is answered and done
+    // chunk 1: training stays interleaved (one step between flushes)
+    // without letting round cost swamp the batched-vs-unbatched signal.
+    let opts =
+        DaemonOpts { chunk: 1, idle_wait: Duration::from_millis(1), ..DaemonOpts::default() };
+    service.run_daemon(&rx, &opts).unwrap();
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
+
+    let mut lats = Vec::new();
+    let mut batch_sum = 0u64;
+    for w in workers {
+        let (l, b) = w.join().unwrap();
+        lats.extend(l);
+        batch_sum += b;
+    }
+    let mean_batch = batch_sum as f64 / lats.len() as f64;
+    (wall_ms, lats, mean_batch)
+}
+
+fn p99(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() - 1) * 99) / 100]
+}
+
+fn main() {
+    let smoke = smoke();
+    let (clients, per_client, bg_steps) = if smoke { (4, 2, 24) } else { (16, 16, 240) };
+    let mut bench = Bench::new("serving");
+
+    // Facade-level burst sweep: a burst of B requests flushes as one
+    // shared micro-batch (B ≤ max_batch), i.e. one engine execution.
+    let service = serving_platform(64);
+    let p = service.platform();
+    for burst in [1usize, 8, 64] {
+        bench.run_with_units(&format!("batched burst batch={}", burst), burst as f64, || {
+            let served = Arc::new(Mutex::new(0usize));
+            for i in 0..burst {
+                let served = served.clone();
+                p.serve_enqueue(
+                    "prod",
+                    "kim",
+                    row(i),
+                    Box::new(move |r| {
+                        assert_eq!(r.unwrap().probs.len(), 10);
+                        *served.lock().unwrap() += 1;
+                    }),
+                )
+                .unwrap();
+            }
+            p.pump_serving(true);
+            assert_eq!(*served.lock().unwrap(), burst);
+        });
+    }
+
+    // 16 concurrent daemon clients, training in the background:
+    // micro-batched (max_batch 64) vs unbatched (max_batch 1).
+    let total = (clients * per_client) as f64;
+    let (batched_ms, batched_lats, mean_batch) =
+        concurrent_serve(&service, clients, per_client, bg_steps);
+    bench.record(&format!("concurrent x{} batched", clients), batched_lats.clone(), None);
+
+    let unbatched = serving_platform(1);
+    let (unbatched_ms, unbatched_lats, _) =
+        concurrent_serve(&unbatched, clients, per_client, bg_steps);
+    bench.record(&format!("concurrent x{} unbatched", clients), unbatched_lats, None);
+
+    let speedup = unbatched_ms / batched_ms;
+    println!(
+        "concurrent x{}: batched {:.1} req/s (mean batch {:.1}, p99 {:.2} ms) vs unbatched {:.1} req/s — {:.2}x",
+        clients,
+        total / (batched_ms / 1000.0),
+        mean_batch,
+        p99(&batched_lats),
+        total / (unbatched_ms / 1000.0),
+        speedup,
+    );
+
+    bench.finish();
+
+    if !smoke {
+        assert!(
+            mean_batch > 1.5,
+            "micro-batching never kicked in: mean batch {:.2}",
+            mean_batch
+        );
+        assert!(
+            speedup >= 2.0,
+            "batched serving must be >= 2x unbatched at {} clients (got {:.2}x)",
+            clients,
+            speedup
+        );
+        assert!(
+            p99(&batched_lats) <= 2_000.0,
+            "p99 serving latency unbounded: {:.1} ms",
+            p99(&batched_lats)
+        );
+    }
+}

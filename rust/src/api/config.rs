@@ -77,6 +77,13 @@ pub struct PlatformConfig {
     /// Per-connection keep-alive read timeout before the worker
     /// recycles the socket (`[service] keepalive_ms`).
     pub http_keepalive_ms: u64,
+    /// Max serving requests micro-batched into one engine execution
+    /// (`[serving] max_batch`).
+    pub serving_max_batch: usize,
+    /// Max virtual milliseconds a queued serving request may wait for
+    /// batchmates before the drive loop flushes it
+    /// (`[serving] max_wait_ms`).
+    pub serving_max_wait_ms: u64,
 }
 
 impl Default for PlatformConfig {
@@ -109,6 +116,8 @@ impl Default for PlatformConfig {
             serve_chunk: 25,
             serve_idle_ms: 50,
             http_keepalive_ms: 500,
+            serving_max_batch: 64,
+            serving_max_wait_ms: 20,
         }
     }
 }
@@ -175,6 +184,7 @@ impl PlatformConfig {
                         format!("[tenancy] class: unknown priority class '{}'", name)
                     })?
                 },
+                max_qps: cfg.int_or("tenancy", "max_qps", 0).max(0) as u32,
             },
             tenant_users: parse_tenant_users(&cfg.str_or("tenancy", "users", ""))?,
             durability: cfg.bool_or("durability", "enabled", dflt.durability),
@@ -193,6 +203,12 @@ impl PlatformConfig {
             http_keepalive_ms: cfg
                 .int_or("service", "keepalive_ms", dflt.http_keepalive_ms as i64)
                 .max(1) as u64,
+            serving_max_batch: cfg
+                .int_or("serving", "max_batch", dflt.serving_max_batch as i64)
+                .max(1) as usize,
+            serving_max_wait_ms: cfg
+                .int_or("serving", "max_wait_ms", dflt.serving_max_wait_ms as i64)
+                .max(0) as u64,
         })
     }
 }
@@ -265,6 +281,7 @@ max_gpus = 8
 gpu_second_budget = 120.5
 weight = 2
 class = "low"
+max_qps = 40
 users = "alice:4:high, bob:2, carol"
 [durability]
 enabled = false
@@ -276,6 +293,9 @@ http_workers = 3
 chunk = 10
 idle_ms = 5
 keepalive_ms = 250
+[serving]
+max_batch = 16
+max_wait_ms = 5
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -298,6 +318,7 @@ keepalive_ms = 250
         assert_eq!(c.tenant_quota.gpu_second_budget, 120.5);
         assert_eq!(c.tenant_quota.weight, 2);
         assert_eq!(c.tenant_quota.class, PriorityClass::Low);
+        assert_eq!(c.tenant_quota.max_qps, 40);
         assert_eq!(
             c.tenant_users,
             vec![
@@ -314,6 +335,8 @@ keepalive_ms = 250
         assert_eq!(c.serve_chunk, 10);
         assert_eq!(c.serve_idle_ms, 5);
         assert_eq!(c.http_keepalive_ms, 250);
+        assert_eq!(c.serving_max_batch, 16);
+        assert_eq!(c.serving_max_wait_ms, 5);
     }
 
     #[test]
@@ -354,5 +377,8 @@ keepalive_ms = 250
         assert_eq!(c.serve_chunk, 25);
         assert_eq!(c.serve_idle_ms, 50);
         assert_eq!(c.http_keepalive_ms, 500);
+        // Serving defaults: 64-row batches, 20 virtual ms of patience.
+        assert_eq!(c.serving_max_batch, 64);
+        assert_eq!(c.serving_max_wait_ms, 20);
     }
 }

@@ -100,9 +100,9 @@ pub use config::PlatformConfig;
 pub use service::{service_channel, DaemonOpts, PlatformService, ServiceCall, ServiceHandle};
 pub use trial::PlatformTrialRunner;
 pub use wire::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ErrorCode,
-    ExecutorStats, NodeStatusView, RunParams, ServiceStatusView, SessionView, TenantView,
-    TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS, API_VERSION,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, EndpointVersionView,
+    EndpointView, ErrorCode, ExecutorStats, NodeStatusView, RunParams, ServiceStatusView,
+    SessionView, TenantView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS, API_VERSION,
 };
 
 use crate::cluster::Cluster;
@@ -114,6 +114,7 @@ use crate::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
 use crate::leaderboard::{Leaderboard, Submission};
 use crate::runtime::{Engine, TensorData, TrainableModel};
 use crate::scheduler::{ElectionGroup, JobSpec, Master, SubmitOutcome};
+use crate::serving::{EndpointRegistry, PendingInfer, ServeReply, ServedModel, ServingQueue};
 use crate::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
 use crate::storage::{CheckpointStore, DatasetRegistry, ObjectStore};
 use crate::tenancy::{PendingAdmission, Tenancy};
@@ -171,6 +172,17 @@ pub struct NsmlPlatform {
     pub tenancy: Tenancy,
     /// Utilization/queue time series sampled by the drive loop (§3.1).
     pub monitor: crate::cluster::UtilizationMonitor,
+    /// Named serving endpoints: promoted checkpoints with a version
+    /// history (`nsml promote`, roll forward/back). Persisted in both
+    /// the snapshot and the WAL (`EndpointChanged` events).
+    pub endpoints: EndpointRegistry,
+    /// Per-endpoint micro-batching queue for `serve_infer`. Filled by
+    /// dispatch, flushed by the drive loop (`[serving]` config).
+    serving: ServingQueue,
+    /// Loaded serving models keyed by `(endpoint, version)` — params
+    /// stay deserialized across requests; a rollback simply starts
+    /// hitting a different key, so stale entries are inert.
+    served_models: std::cell::RefCell<std::collections::HashMap<(String, u64), ServedModel>>,
     /// Facade-local engine for inference/manifest queries. Training
     /// engines live inside the executor workers.
     engine: Arc<Engine>,
@@ -286,6 +298,9 @@ impl NsmlPlatform {
             leaderboard: Leaderboard::new(),
             tenancy,
             monitor: crate::cluster::UtilizationMonitor::new(),
+            endpoints: EndpointRegistry::new(),
+            serving: ServingQueue::new(config.serving_max_batch, config.serving_max_wait_ms),
+            served_models: std::cell::RefCell::new(std::collections::HashMap::new()),
             engine,
             executor,
             consumers,
@@ -684,11 +699,15 @@ impl NsmlPlatform {
                 },
             );
         }
-        // 6. …pump the derived consumers: completions reach the
+        // 6. Flush serving micro-batches that are due: full batches
+        //    immediately, partial ones once the oldest request has
+        //    waited `[serving] max_wait_ms` of virtual time.
+        self.pump_serving(false);
+        // 7. …pump the derived consumers: completions reach the
         //    leaderboard, samples reach the monitor — via the bus, not
         //    direct calls.
         self.pump_consumers();
-        // 7. …and the durability consumer: durable events reach the
+        // 8. …and the durability consumer: durable events reach the
         //    WAL, and every `snapshot_every` records the world dump is
         //    compacted and the log rotates.
         self.pump_durability()?;
@@ -1207,6 +1226,208 @@ impl NsmlPlatform {
     }
 
     // ------------------------------------------------------------------
+    // Serving: named endpoints + micro-batched inference
+    // ------------------------------------------------------------------
+
+    /// Promote `session`'s best checkpoint (latest when no metric was
+    /// ever reported) to endpoint `name`: append + activate a new
+    /// version. Published as a durable `EndpointChanged` event, so the
+    /// promote survives a crash through WAL replay even before the next
+    /// snapshot.
+    pub fn promote_endpoint(
+        &self,
+        name: &str,
+        session: &str,
+    ) -> Result<crate::serving::EndpointVersion> {
+        if name.is_empty() {
+            return Err(anyhow!("endpoint name must be non-empty"));
+        }
+        let rec = self.sessions.get(session).ok_or_else(|| anyhow!("unknown session {}", session))?;
+        let manifest = self.engine.manifest().model(&rec.spec.model)?;
+        let ckpt = self
+            .checkpoints
+            .best(session, manifest.lower_is_better)
+            .or_else(|| self.checkpoints.latest(session))
+            .ok_or_else(|| anyhow!("session {} has no checkpoint to promote", session))?;
+        let v = self.endpoints.promote(
+            name,
+            session,
+            &rec.spec.model,
+            ckpt.step,
+            ckpt.params.clone(),
+            self.clock.now_ms(),
+        );
+        self.publish_endpoint_changed(name, "promote", &v);
+        Ok(v)
+    }
+
+    /// Move `name` one version back (serve the previous promote).
+    pub fn rollback_endpoint(&self, name: &str) -> Result<crate::serving::EndpointVersion> {
+        let v = self.endpoints.rollback(name).map_err(|e| anyhow!(e))?;
+        self.publish_endpoint_changed(name, "rollback", &v);
+        Ok(v)
+    }
+
+    /// Undo a rollback: move `name` one version forward.
+    pub fn rollforward_endpoint(&self, name: &str) -> Result<crate::serving::EndpointVersion> {
+        let v = self.endpoints.rollforward(name).map_err(|e| anyhow!(e))?;
+        self.publish_endpoint_changed(name, "rollforward", &v);
+        Ok(v)
+    }
+
+    /// Remove `name` entirely; requests still queued for it fail
+    /// immediately (each reply fires exactly once).
+    pub fn retire_endpoint(&self, name: &str) -> Result<crate::serving::EndpointVersion> {
+        let v = self.endpoints.retire(name).map_err(|e| anyhow!(e))?;
+        self.serving.fail_endpoint(name, &format!("endpoint '{}' was retired", name));
+        self.publish_endpoint_changed(name, "retire", &v);
+        Ok(v)
+    }
+
+    fn publish_endpoint_changed(
+        &self,
+        name: &str,
+        action: &str,
+        v: &crate::serving::EndpointVersion,
+    ) {
+        self.events.bus().publish(
+            Level::Info,
+            "serving",
+            name,
+            EventKind::EndpointChanged {
+                action: action.to_string(),
+                version: v.version,
+                session: v.session.clone(),
+                model: v.model.clone(),
+                step: v.step,
+                object: v.object.0.clone(),
+            },
+        );
+    }
+
+    /// Validate + queue one serving request. Errors here are client
+    /// errors — unknown endpoint, wrong row size, over QPS quota — and
+    /// never reach the engine; `reply` fires (exactly once, later) only
+    /// for requests that were actually queued.
+    pub fn serve_enqueue(
+        &self,
+        endpoint: &str,
+        user: &str,
+        x: Vec<f32>,
+        reply: ServeReply,
+    ) -> std::result::Result<(), ApiError> {
+        let Some(ep) = self.endpoints.get(endpoint) else {
+            return Err(ApiError::not_found(format!("unknown endpoint '{}'", endpoint)));
+        };
+        if user.is_empty() {
+            return Err(ApiError::invalid("serve_infer: 'user' must be non-empty"));
+        }
+        let v = ep.active_version();
+        let shape = &self
+            .engine
+            .manifest()
+            .model(&v.model)
+            .map_err(|e| ApiError::internal(format!("endpoint '{}': {:#}", endpoint, e)))?
+            .infer_x_shape;
+        let row_len =
+            shape.get(1..).map(|d| d.iter().product::<i64>()).unwrap_or(1).max(1) as usize;
+        if x.len() != row_len {
+            return Err(ApiError::invalid(format!(
+                "serve_infer: request has {} values but one '{}' row is {} values",
+                x.len(),
+                v.model,
+                row_len
+            )));
+        }
+        let now = self.clock.now_ms();
+        if let Err(max_qps) = self.tenancy.registry.try_request(user, now) {
+            return Err(ApiError::failed(format!(
+                "user '{}' is over its serving quota of {} requests/sec",
+                user, max_qps
+            )));
+        }
+        self.serving.enqueue(
+            endpoint,
+            PendingInfer { user: user.to_string(), x, enqueued_at_ms: now, reply },
+        );
+        Ok(())
+    }
+
+    /// Flush due serving micro-batches through the engine: full batches
+    /// always, partial ones once their oldest request has waited
+    /// `[serving] max_wait_ms` of virtual time — and everything when
+    /// `flush_all` is set (the daemon forces a flush after each dispatch
+    /// burst, so requests that arrived together leave together).
+    pub fn pump_serving(&self, flush_all: bool) {
+        for (endpoint, batch) in self.serving.take_due(self.clock.now_ms(), flush_all) {
+            self.run_serving_batch(&endpoint, batch);
+        }
+    }
+
+    /// Micro-batcher counters (depth, requests, batches executed).
+    pub fn serving_stats(&self) -> crate::serving::ServingQueueStats {
+        self.serving.stats()
+    }
+
+    fn run_serving_batch(&self, endpoint: &str, batch: Vec<PendingInfer>) {
+        // The active version may have moved while these requests
+        // queued (rollback in flight): serve whatever is active *now*.
+        let Some(ep) = self.endpoints.get(endpoint) else {
+            for req in batch {
+                (req.reply)(Err(format!("endpoint '{}' was retired", endpoint)));
+            }
+            return;
+        };
+        let v = ep.active_version().clone();
+        let n = batch.len();
+        let t0 = std::time::Instant::now();
+        let rows: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+        match self.with_served_model(endpoint, &v, |m| m.serve_rows(&rows)) {
+            Ok(outs) => {
+                let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+                for (req, probs) in batch.into_iter().zip(outs) {
+                    let row = crate::serving::ServedRow { probs, version: v.version, batch: n };
+                    (req.reply)(Ok(row));
+                }
+                self.events.bus().publish(
+                    Level::Debug,
+                    "serving",
+                    endpoint,
+                    EventKind::InferServed { batch: n as u64, latency_ms },
+                );
+            }
+            Err(e) => {
+                let msg = format!("serving '{}' v{}: {}", endpoint, v.version, e);
+                self.events.error("serving", endpoint, msg.clone());
+                for req in batch {
+                    (req.reply)(Err(msg.clone()));
+                }
+            }
+        }
+    }
+
+    /// Run `f` against the cached [`ServedModel`] for
+    /// `(endpoint, version)`, loading it from the object store on the
+    /// first request after a promote/rollback.
+    fn with_served_model<R>(
+        &self,
+        endpoint: &str,
+        v: &crate::serving::EndpointVersion,
+        f: impl FnOnce(&ServedModel) -> std::result::Result<R, String>,
+    ) -> std::result::Result<R, String> {
+        let key = (endpoint.to_string(), v.version);
+        let mut cache = self.served_models.borrow_mut();
+        if !cache.contains_key(&key) {
+            let bytes =
+                self.objects.get(&v.object).map_err(|e| format!("loading params: {:#}", e))?;
+            let model = TrainableModel::from_checkpoint(self.engine.clone(), &v.model, &bytes)
+                .map_err(|e| format!("loading model: {:#}", e))?;
+            cache.insert(key.clone(), ServedModel::new(model)?);
+        }
+        f(&cache[&key])
+    }
+
+    // ------------------------------------------------------------------
     // Persistence
     // ------------------------------------------------------------------
 
@@ -1229,6 +1450,7 @@ impl NsmlPlatform {
                 &self.leaderboard,
                 &self.checkpoints,
                 &self.tenancy.registry,
+                &self.endpoints,
             )
         }
     }
@@ -1241,7 +1463,14 @@ impl NsmlPlatform {
         else {
             return Ok(());
         };
-        persist::save(dir, &self.sessions, &self.leaderboard, &self.checkpoints, &self.tenancy.registry)?;
+        persist::save(
+            dir,
+            &self.sessions,
+            &self.leaderboard,
+            &self.checkpoints,
+            &self.tenancy.registry,
+            &self.endpoints,
+        )?;
         let head = self.events.bus().head();
         if head == 0 {
             // Nothing ever published: no coverage bound to record, and
@@ -1278,8 +1507,17 @@ impl NsmlPlatform {
                 // whose record predates the store still attributes.
                 .or_else(|| session.split('/').next().map(str::to_string))
         };
-        let report =
-            durability::gc::sweep(&self.objects, &self.checkpoints, &self.datasets, &owner, &self.tenancy.registry);
+        // A live endpoint's whole version history is pinned, so a
+        // rollback target stays loadable even if its index entry went.
+        let pins = self.endpoints.pinned_objects();
+        let report = durability::gc::sweep(
+            &self.objects,
+            &self.checkpoints,
+            &self.datasets,
+            &owner,
+            &self.tenancy.registry,
+            &pins,
+        );
         self.events.info(
             "durability",
             "",
@@ -1319,6 +1557,7 @@ impl NsmlPlatform {
             &self.leaderboard,
             &self.checkpoints,
             &self.tenancy.registry,
+            &self.endpoints,
         )?;
         // Tenancy views must survive the restart too: every restored
         // session's owner is a known tenant, and non-terminal sessions
@@ -1362,6 +1601,7 @@ impl NsmlPlatform {
             &self.sessions,
             &self.leaderboard,
             &self.tenancy.accountant,
+            &self.endpoints,
             &resolve,
         );
         // Keep virtual time monotonic across the restart: recovered

@@ -93,13 +93,14 @@ fn record_from_json(j: &Json) -> Result<SessionRecord> {
 }
 
 /// Save sessions + leaderboard + checkpoint index + tenant quota
-/// overrides under `<dir>/state.json`.
+/// overrides + serving endpoints under `<dir>/state.json`.
 pub fn save(
     dir: &Path,
     sessions: &SessionStore,
     leaderboard: &Leaderboard,
     checkpoints: &crate::storage::CheckpointStore,
     tenants: &TenantRegistry,
+    endpoints: &crate::serving::EndpointRegistry,
 ) -> Result<()> {
     std::fs::create_dir_all(dir)?;
     let mut doc = Json::obj();
@@ -144,11 +145,13 @@ pub fn save(
                 .set("max_gpus", q.max_gpus.into())
                 .set("gpu_second_budget", q.gpu_second_budget.into())
                 .set("weight", q.weight.into())
-                .set("class", q.class.as_str().into());
+                .set("class", q.class.as_str().into())
+                .set("max_qps", q.max_qps.into());
             o
         })
         .collect();
     doc.set("quotas", Json::Arr(quotas));
+    doc.set("endpoints", endpoints.to_json());
     // Temp file + atomic rename: a crash mid-save leaves either the
     // old state.json or the new one on disk, never a torn file.
     let tmp = dir.join("state.json.tmp");
@@ -164,6 +167,7 @@ pub fn load(
     leaderboard: &Leaderboard,
     checkpoints: &crate::storage::CheckpointStore,
     tenants: &TenantRegistry,
+    endpoints: &crate::serving::EndpointRegistry,
 ) -> Result<()> {
     let path = dir.join("state.json");
     if !path.exists() {
@@ -222,9 +226,13 @@ pub fn load(
                         .and_then(Json::as_str)
                         .and_then(PriorityClass::from_str)
                         .unwrap_or(PriorityClass::Normal),
+                    max_qps: q.get("max_qps").and_then(Json::as_i64).unwrap_or(0).max(0) as u32,
                 },
             );
         }
+    }
+    if let Some(eps) = doc.get("endpoints") {
+        endpoints.restore(eps).map_err(|e| anyhow!("state.json endpoints: {}", e))?;
     }
     Ok(())
 }
@@ -281,16 +289,27 @@ mod tests {
                 gpu_second_budget: 30.5,
                 weight: 3,
                 class: PriorityClass::High,
+                max_qps: 25,
             },
         );
-        save(&dir, &sessions, &lb, &ckpts, &tenants).unwrap();
+        let endpoints = crate::serving::EndpointRegistry::new();
+        endpoints.promote(
+            "mnist-prod",
+            "kim/mnist/1",
+            "mnist_mlp",
+            100,
+            crate::storage::ObjectId("sha-params".into()),
+            60,
+        );
+        save(&dir, &sessions, &lb, &ckpts, &tenants, &endpoints).unwrap();
 
         let sessions2 = SessionStore::new();
         let lb2 = Leaderboard::new();
         lb2.ensure_board("mnist", "accuracy", false);
         let ckpts2 = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
         let tenants2 = TenantRegistry::new(TenantQuota::default());
-        load(&dir, &sessions2, &lb2, &ckpts2, &tenants2).unwrap();
+        let endpoints2 = crate::serving::EndpointRegistry::new();
+        load(&dir, &sessions2, &lb2, &ckpts2, &tenants2, &endpoints2).unwrap();
         // Quota overrides survive the round trip.
         let q = tenants2.quota_of("kim");
         assert_eq!(q.max_concurrent, 2);
@@ -298,7 +317,12 @@ mod tests {
         assert_eq!(q.gpu_second_budget, 30.5);
         assert_eq!(q.weight, 3);
         assert_eq!(q.class, PriorityClass::High);
+        assert_eq!(q.max_qps, 25);
         assert_eq!(tenants2.quota_of("lee"), TenantQuota::default());
+        // Serving endpoints survive the round trip.
+        assert_eq!(endpoints2.list(), endpoints.list());
+        let ep = endpoints2.get("mnist-prod").unwrap();
+        assert_eq!(ep.active_version().object.0, "sha-params");
         // Checkpoint index survives the round trip.
         let restored = ckpts2.latest("kim/mnist/1").unwrap();
         assert_eq!(restored.step, 100);
@@ -326,8 +350,10 @@ mod tests {
         let lb = Leaderboard::new();
         let ckpts = crate::storage::CheckpointStore::new(crate::storage::ObjectStore::memory());
         let tenants = TenantRegistry::new(TenantQuota::default());
-        load(&dir, &sessions, &lb, &ckpts, &tenants).unwrap();
+        let endpoints = crate::serving::EndpointRegistry::new();
+        load(&dir, &sessions, &lb, &ckpts, &tenants, &endpoints).unwrap();
         assert!(sessions.is_empty());
         assert!(tenants.overrides().is_empty());
+        assert!(endpoints.is_empty());
     }
 }

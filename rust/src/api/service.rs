@@ -35,8 +35,8 @@
 //! the bus as `loop` events and in the `service_status` counters.
 
 use super::wire::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ExecutorStats,
-    NodeStatusView, SessionView, TenantView, WorkerStatView,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, EndpointView,
+    ExecutorStats, NodeStatusView, SessionView, TenantView, WorkerStatView,
 };
 use super::{NsmlPlatform, RunOpts};
 use crate::cluster::NodeId;
@@ -91,6 +91,29 @@ impl ServiceHandle {
 pub fn service_channel() -> (ServiceHandle, mpsc::Receiver<ServiceCall>) {
     let (tx, rx) = mpsc::channel();
     (ServiceHandle { tx }, rx)
+}
+
+/// Classify an endpoint-registry failure: unknown names are 404s,
+/// history edges and checkpoint-less sessions are precondition
+/// failures, anything else is a bad request.
+fn endpoint_error(message: String) -> ApiError {
+    if message.contains("unknown endpoint") {
+        ApiError::not_found(message)
+    } else if message.contains("already at") || message.contains("no checkpoint") {
+        ApiError::failed(message)
+    } else {
+        ApiError::invalid(message)
+    }
+}
+
+/// Classify a serving-batch failure: a retire that raced the queue is
+/// a precondition failure; an engine/object-store fault is internal.
+fn serve_error(message: String) -> ApiError {
+    if message.contains("retired") {
+        ApiError::failed(message)
+    } else {
+        ApiError::internal(message)
+    }
 }
 
 /// Knobs for [`PlatformService::run_daemon`] (`[service]` config).
@@ -152,22 +175,42 @@ impl PlatformService {
             }
             ApiRequest::Stop { session } => self.session_ctl(&session, "stop", |p| p.stop(&session)),
             ApiRequest::Infer { session, x, shape } => {
-                if self.platform.sessions.get(&session).is_none() {
+                let Some(rec) = self.platform.sessions.get(&session) else {
                     return self.not_found(&session);
-                }
+                };
                 // Overflow-safe element count; dims must be positive.
                 let elems = shape
                     .iter()
                     .try_fold(1i64, |acc, &d| if d > 0 { acc.checked_mul(d) } else { None });
                 if shape.is_empty() || elems != Some(x.len() as i64) {
+                    let described = if shape.is_empty() { None } else { elems };
                     return ApiResponse::Error {
                         error: ApiError::invalid(format!(
-                            "infer: shape {:?} does not describe {} values",
+                            "infer: shape {:?} describes {} values but the request carries {}",
                             shape,
+                            described.map(|n| n.to_string()).unwrap_or_else(|| "no".into()),
                             x.len()
                         ))
                         .with_session(&session),
                     };
+                }
+                // The compiled executable's input shape is fixed; a
+                // self-consistent request of the wrong shape is still a
+                // client error and must never reach the engine.
+                if let Ok(m) = self.platform.engine().manifest().model(&rec.spec.model) {
+                    if shape != m.infer_x_shape {
+                        return ApiResponse::Error {
+                            error: ApiError::invalid(format!(
+                                "infer: shape {:?} ({} values) does not match model '{}' input {:?} ({} values)",
+                                shape,
+                                x.len(),
+                                rec.spec.model,
+                                m.infer_x_shape,
+                                m.infer_x_shape.iter().product::<i64>(),
+                            ))
+                            .with_session(&session),
+                        };
+                    }
                 }
                 match self.platform.infer(&session, &TensorData::f32(x, &shape)) {
                     Ok(probs) => ApiResponse::Probs { probs },
@@ -250,7 +293,15 @@ impl PlatformService {
                 ApiResponse::Service { service: self.platform.service_status() }
             }
             ApiRequest::TenantReport => ApiResponse::Tenants { tenants: self.tenant_views() },
-            ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
+            ApiRequest::SetQuota {
+                user,
+                max_concurrent,
+                max_gpus,
+                gpu_second_budget,
+                weight,
+                class,
+                max_qps,
+            } => {
                 if user.is_empty() {
                     return ApiResponse::Error {
                         error: ApiError::invalid("set_quota: 'user' must be non-empty"),
@@ -285,6 +336,9 @@ impl PlatformService {
                     }
                     if let Some(c) = class {
                         q.class = c;
+                    }
+                    if let Some(v) = max_qps {
+                        q.max_qps = v as u32;
                     }
                 });
                 // A raised quota may unblock deferred work right away.
@@ -357,6 +411,92 @@ impl PlatformService {
                 );
                 ApiResponse::BatchSubmitted { sessions }
             }
+            ApiRequest::Promote { endpoint, action, session } => {
+                self.promote_ctl(&endpoint, &action, session.as_deref())
+            }
+            ApiRequest::Endpoints => ApiResponse::Endpoints {
+                endpoints: self
+                    .platform
+                    .endpoints
+                    .list()
+                    .iter()
+                    .map(EndpointView::from_endpoint)
+                    .collect(),
+            },
+            ApiRequest::ServeInfer { endpoint, user, x } => {
+                self.serve_infer_sync(&endpoint, &user, x)
+            }
+        }
+    }
+
+    /// The `promote` verb's four actions over the endpoint registry.
+    fn promote_ctl(&self, endpoint: &str, action: &str, session: Option<&str>) -> ApiResponse {
+        let result = match action {
+            "promote" => {
+                let Some(session) = session else {
+                    return ApiResponse::Error {
+                        error: ApiError::invalid(
+                            "promote: 'session' is required when action is 'promote'",
+                        ),
+                    };
+                };
+                if self.platform.sessions.get(session).is_none() {
+                    return self.not_found(session);
+                }
+                self.platform.promote_endpoint(endpoint, session)
+            }
+            "rollback" => self.platform.rollback_endpoint(endpoint),
+            "rollforward" => self.platform.rollforward_endpoint(endpoint),
+            "retire" => {
+                return match self.platform.retire_endpoint(endpoint) {
+                    Ok(_) => ApiResponse::Ack { verb: "retire".into(), session: None },
+                    Err(e) => {
+                        ApiResponse::Error { error: endpoint_error(format!("retire: {:#}", e)) }
+                    }
+                }
+            }
+            other => {
+                return ApiResponse::Error {
+                    error: ApiError::invalid(format!("promote: unknown action '{}'", other)),
+                }
+            }
+        };
+        match result {
+            Ok(_) => match self.platform.endpoints.get(endpoint) {
+                Some(ep) => ApiResponse::Endpoint { endpoint: EndpointView::from_endpoint(&ep) },
+                None => ApiResponse::Error {
+                    error: ApiError::internal(format!(
+                        "endpoint '{}' vanished mid-dispatch",
+                        endpoint
+                    )),
+                },
+            },
+            Err(e) => ApiResponse::Error { error: endpoint_error(format!("{}: {:#}", action, e)) },
+        }
+    }
+
+    /// Synchronous serving path for plain `dispatch` callers (no drive
+    /// loop to flush for them): queue the request, force a flush, and
+    /// collect the reply. Under the daemon, `serve_daemon_call` queues
+    /// instead and the burst is flushed as one micro-batch.
+    fn serve_infer_sync(&self, endpoint: &str, user: &str, x: Vec<f32>) -> ApiResponse {
+        let (tx, rx) = mpsc::channel();
+        let reply: crate::serving::ServeReply = Box::new(move |r| {
+            let _ = tx.send(r);
+        });
+        if let Err(error) = self.platform.serve_enqueue(endpoint, user, x, reply) {
+            return ApiResponse::Error { error };
+        }
+        self.platform.pump_serving(true);
+        match rx.recv() {
+            Ok(Ok(row)) => ApiResponse::Served {
+                endpoint: endpoint.to_string(),
+                version: row.version,
+                batch: row.batch as u64,
+                probs: row.probs,
+            },
+            Ok(Err(e)) => ApiResponse::Error { error: serve_error(e) },
+            Err(_) => ApiResponse::Error { error: ApiError::internal("serving reply dropped") },
         }
     }
 
@@ -431,12 +571,21 @@ impl PlatformService {
                 rounds += 1;
                 // Pause-the-loop point: answer everything that queued
                 // up during the round before starting the next one.
-                loop {
+                // Serving requests only *queue* here; the flush below
+                // packs the whole burst into shared micro-batches.
+                let mut queued_serving = false;
+                let disconnected = loop {
                     match rx.try_recv() {
-                        Ok(call) => self.serve_daemon_call(call),
-                        Err(mpsc::TryRecvError::Empty) => break,
-                        Err(mpsc::TryRecvError::Disconnected) => return Ok(()),
+                        Ok(call) => queued_serving |= self.serve_daemon_call(call),
+                        Err(mpsc::TryRecvError::Empty) => break false,
+                        Err(mpsc::TryRecvError::Disconnected) => break true,
                     }
+                };
+                if queued_serving {
+                    self.platform.pump_serving(true);
+                }
+                if disconnected {
+                    return Ok(());
                 }
             } else {
                 // Idle: nothing to drive, so block (briefly) for work.
@@ -446,7 +595,17 @@ impl PlatformService {
                     return Ok(());
                 }
                 match rx.recv_timeout(opts.idle_wait) {
-                    Ok(call) => self.serve_daemon_call(call),
+                    Ok(call) => {
+                        if self.serve_daemon_call(call) {
+                            // Gather the rest of the burst, then flush:
+                            // with no active session there is no drive
+                            // round to expire a waiting batch.
+                            while let Ok(c) = rx.try_recv() {
+                                self.serve_daemon_call(c);
+                            }
+                            self.platform.pump_serving(true);
+                        }
+                    }
                     Err(mpsc::RecvTimeoutError::Timeout) => {}
                     Err(mpsc::RecvTimeoutError::Disconnected) => return Ok(()),
                 }
@@ -454,16 +613,51 @@ impl PlatformService {
         }
     }
 
-    fn serve_daemon_call(&self, call: ServiceCall) {
+    /// Answer one queued call. Serving requests are *queued*, not
+    /// answered — their replies fire when the caller flushes the
+    /// micro-batcher — and signal that via the `true` return.
+    fn serve_daemon_call(&self, call: ServiceCall) -> bool {
         self.platform.loop_dispatched();
-        let resp = self.dispatch(call.req);
-        let _ = call.reply.send(resp);
+        let ServiceCall { req, reply } = call;
+        match req {
+            ApiRequest::ServeInfer { endpoint, user, x } => {
+                let reply_on_error = reply.clone();
+                let ep = endpoint.clone();
+                let cb: crate::serving::ServeReply = Box::new(move |r| {
+                    let resp = match r {
+                        Ok(row) => ApiResponse::Served {
+                            endpoint: ep,
+                            version: row.version,
+                            batch: row.batch as u64,
+                            probs: row.probs,
+                        },
+                        Err(e) => ApiResponse::Error { error: serve_error(e) },
+                    };
+                    let _ = reply.send(resp);
+                });
+                if let Err(error) = self.platform.serve_enqueue(&endpoint, &user, x, cb) {
+                    let _ = reply_on_error.send(ApiResponse::Error { error });
+                    return false;
+                }
+                true
+            }
+            req => {
+                let resp = self.dispatch(req);
+                let _ = reply.send(resp);
+                false
+            }
+        }
     }
 
     fn not_found(&self, session: &str) -> ApiResponse {
         ApiResponse::Error {
             error: ApiError::not_found(format!("unknown session '{}'", session)).with_session(session),
         }
+    }
+
+    /// Serving requests queued and still unanswered (tests/telemetry).
+    pub fn serving_depth(&self) -> usize {
+        self.platform.serving_stats().depth
     }
 
     /// Shared pattern for pause/resume/stop: not-found vs wrong-state.
@@ -617,6 +811,13 @@ impl PlatformService {
                 (String::new(), format!("user={} dataset={} trials={}", user, dataset, trials.len()))
             }
             ApiRequest::SetQuota { user, .. } => (String::new(), format!("user={}", user)),
+            ApiRequest::Promote { endpoint, action, session } => (
+                endpoint.clone(),
+                match session {
+                    Some(s) => format!("action={} session={}", action, s),
+                    None => format!("action={}", action),
+                },
+            ),
             _ => (String::new(), String::new()),
         };
         let line = if detail.is_empty() {

@@ -50,6 +50,9 @@ pub const ALL_VERBS: &[&str] = &[
     "set_quota",
     "durability_status",
     "service_status",
+    "promote",
+    "endpoints",
+    "serve_infer",
 ];
 
 /// Every response kind, in the order of the [`ApiResponse`] variants.
@@ -68,6 +71,9 @@ pub const ALL_KINDS: &[&str] = &[
     "tenants",
     "durability",
     "service",
+    "endpoint",
+    "endpoints",
+    "served",
     "error",
 ];
 
@@ -365,6 +371,8 @@ pub enum ApiRequest {
         weight: Option<u64>,
         /// Priority class name (`low` | `normal` | `high`).
         class: Option<String>,
+        /// Max serving requests per sliding second (0 = unlimited).
+        max_qps: Option<u64>,
     },
     /// WAL / snapshot / GC counters (`nsml gc --status`,
     /// `GET /api/v1/durability`).
@@ -373,6 +381,19 @@ pub enum ApiRequest {
     /// rounds/sec and dispatch counts (`nsml serve`,
     /// `GET /api/v1/service`).
     ServiceStatus,
+    /// Manage a named serving endpoint (`nsml promote`). `action` is
+    /// `promote` (requires `session`: its best checkpoint becomes the
+    /// new active version) | `rollback` | `rollforward` | `retire`.
+    /// Audited mutation.
+    Promote { endpoint: String, action: String, session: Option<String> },
+    /// Every serving endpoint with its version history
+    /// (`nsml endpoints`, `GET /api/v1/endpoints`).
+    Endpoints,
+    /// Micro-batched inference against an endpoint's active version:
+    /// `x` is exactly ONE row of the model's inference shape
+    /// (`POST /api/v1/endpoints/<name>/infer`). Requests dispatched
+    /// concurrently share an engine execution.
+    ServeInfer { endpoint: String, user: String, x: Vec<f32> },
 }
 
 impl ApiRequest {
@@ -403,6 +424,9 @@ impl ApiRequest {
             ApiRequest::SetQuota { .. } => "set_quota",
             ApiRequest::DurabilityStatus => "durability_status",
             ApiRequest::ServiceStatus => "service_status",
+            ApiRequest::Promote { .. } => "promote",
+            ApiRequest::Endpoints => "endpoints",
+            ApiRequest::ServeInfer { .. } => "serve_infer",
         }
     }
 
@@ -420,6 +444,8 @@ impl ApiRequest {
                 | ApiRequest::DurabilityStatus
                 | ApiRequest::ServiceStatus
                 | ApiRequest::Infer { .. }
+                | ApiRequest::Endpoints
+                | ApiRequest::ServeInfer { .. }
         )
     }
 
@@ -459,8 +485,27 @@ impl ApiRequest {
             | ApiRequest::ExecutorStatus
             | ApiRequest::TenantReport
             | ApiRequest::DurabilityStatus
-            | ApiRequest::ServiceStatus => {}
-            ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
+            | ApiRequest::ServiceStatus
+            | ApiRequest::Endpoints => {}
+            ApiRequest::Promote { endpoint, action, session } => {
+                args.set("endpoint", endpoint.as_str().into())
+                    .set("action", action.as_str().into())
+                    .set("session", session.as_deref().map(Json::from).unwrap_or(Json::Null));
+            }
+            ApiRequest::ServeInfer { endpoint, user, x } => {
+                args.set("endpoint", endpoint.as_str().into())
+                    .set("user", user.as_str().into())
+                    .set("x", Json::Arr(x.iter().map(|&v| Json::Num(v as f64)).collect()));
+            }
+            ApiRequest::SetQuota {
+                user,
+                max_concurrent,
+                max_gpus,
+                gpu_second_budget,
+                weight,
+                class,
+                max_qps,
+            } => {
                 args.set("user", user.as_str().into())
                     .set(
                         "max_concurrent",
@@ -469,7 +514,8 @@ impl ApiRequest {
                     .set("max_gpus", max_gpus.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null))
                     .set("gpu_second_budget", gpu_second_budget.map(Json::Num).unwrap_or(Json::Null))
                     .set("weight", weight.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null))
-                    .set("class", class.as_deref().map(Json::from).unwrap_or(Json::Null));
+                    .set("class", class.as_deref().map(Json::from).unwrap_or(Json::Null))
+                    .set("max_qps", max_qps.map(|v| Json::Num(v as f64)).unwrap_or(Json::Null));
             }
             ApiRequest::EventsSince { since, kind, subject, limit } => {
                 args.set("since", (*since).into())
@@ -561,6 +607,37 @@ impl ApiRequest {
             "tenant_report" => Ok(ApiRequest::TenantReport),
             "durability_status" => Ok(ApiRequest::DurabilityStatus),
             "service_status" => Ok(ApiRequest::ServiceStatus),
+            "promote" => {
+                let action = opt_str(args, "action")?.unwrap_or_else(|| "promote".to_string());
+                if !matches!(action.as_str(), "promote" | "rollback" | "rollforward" | "retire") {
+                    return Err(ApiError::invalid(format!(
+                        "promote: unknown action '{}' (expected promote | rollback | rollforward | retire)",
+                        action
+                    )));
+                }
+                let session = opt_str(args, "session")?;
+                if action == "promote" && session.is_none() {
+                    return Err(ApiError::invalid(
+                        "promote: 'session' is required when action is 'promote'",
+                    ));
+                }
+                Ok(ApiRequest::Promote { endpoint: need_str(args, "endpoint")?, action, session })
+            }
+            "endpoints" => Ok(ApiRequest::Endpoints),
+            "serve_infer" => {
+                let x = need_arr(args, "x")?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| {
+                        ApiError::invalid("serve_infer: 'x' must be an array of numbers")
+                    })?;
+                Ok(ApiRequest::ServeInfer {
+                    endpoint: need_str(args, "endpoint")?,
+                    user: need_str(args, "user")?,
+                    x,
+                })
+            }
             "set_quota" => Ok(ApiRequest::SetQuota {
                 user: need_str(args, "user")?,
                 max_concurrent: opt_u64(args, "max_concurrent")?,
@@ -568,6 +645,7 @@ impl ApiRequest {
                 gpu_second_budget: opt_f64(args, "gpu_second_budget")?,
                 weight: opt_u64(args, "weight")?,
                 class: opt_str(args, "class")?,
+                max_qps: opt_u64(args, "max_qps")?,
             }),
             "submit_trial_batch" => {
                 let trials = need_arr(args, "trials")?
@@ -1049,6 +1127,107 @@ impl ServiceStatusView {
     }
 }
 
+/// One entry of an endpoint's promote history (oldest first).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EndpointVersionView {
+    /// 1-based, monotonic per endpoint.
+    pub version: u64,
+    /// Session whose checkpoint was promoted.
+    pub session: String,
+    pub model: String,
+    /// Training step of the promoted checkpoint.
+    pub step: u64,
+    /// Virtual time of the promote.
+    pub promoted_at_ms: u64,
+}
+
+impl EndpointVersionView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("version", self.version.into())
+            .set("session", self.session.as_str().into())
+            .set("model", self.model.as_str().into())
+            .set("step", self.step.into())
+            .set("promoted_at_ms", self.promoted_at_ms.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<EndpointVersionView, ApiError> {
+        Ok(EndpointVersionView {
+            version: need_u64(j, "version")?,
+            session: need_str(j, "session")?,
+            model: need_str(j, "model")?,
+            step: need_u64(j, "step")?,
+            promoted_at_ms: need_u64(j, "promoted_at_ms")?,
+        })
+    }
+}
+
+/// One named serving endpoint: which version currently serves, plus
+/// the full promote history rollback/rollforward moves over
+/// (`endpoints`, `GET /api/v1/endpoints`, `nsml endpoints`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct EndpointView {
+    pub name: String,
+    /// Version number currently serving requests.
+    pub active_version: u64,
+    /// Convenience copies of the active version's identity.
+    pub model: String,
+    pub session: String,
+    pub step: u64,
+    pub versions: Vec<EndpointVersionView>,
+}
+
+impl EndpointView {
+    /// Project the registry's endpoint record onto the wire.
+    pub fn from_endpoint(ep: &crate::serving::Endpoint) -> EndpointView {
+        let active = ep.active_version();
+        EndpointView {
+            name: ep.name.clone(),
+            active_version: active.version,
+            model: active.model.clone(),
+            session: active.session.clone(),
+            step: active.step,
+            versions: ep
+                .versions
+                .iter()
+                .map(|v| EndpointVersionView {
+                    version: v.version,
+                    session: v.session.clone(),
+                    model: v.model.clone(),
+                    step: v.step,
+                    promoted_at_ms: v.promoted_at_ms,
+                })
+                .collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("active_version", self.active_version.into())
+            .set("model", self.model.as_str().into())
+            .set("session", self.session.as_str().into())
+            .set("step", self.step.into())
+            .set("versions", Json::Arr(self.versions.iter().map(|v| v.to_json()).collect()));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<EndpointView, ApiError> {
+        Ok(EndpointView {
+            name: need_str(j, "name")?,
+            active_version: need_u64(j, "active_version")?,
+            model: need_str(j, "model")?,
+            session: need_str(j, "session")?,
+            step: need_u64(j, "step")?,
+            versions: need_arr(j, "versions")?
+                .iter()
+                .map(EndpointVersionView::from_json)
+                .collect::<Result<Vec<EndpointVersionView>, ApiError>>()?,
+        })
+    }
+}
+
 // ---------------------------------------------------------------------
 // Responses
 // ---------------------------------------------------------------------
@@ -1082,6 +1261,14 @@ pub enum ApiResponse {
     Durability { durability: DurabilityView },
     /// Daemon drive-loop counters (`service_status`).
     Service { service: ServiceStatusView },
+    /// One endpoint after a `promote` mutation (any action but retire,
+    /// which answers an ack — the endpoint is gone).
+    Endpoint { endpoint: EndpointView },
+    /// Every serving endpoint (`endpoints`).
+    Endpoints { endpoints: Vec<EndpointView> },
+    /// One micro-batched serving result: the output row, which version
+    /// produced it, and how many requests shared the execution.
+    Served { endpoint: String, version: u64, batch: u64, probs: Vec<f32> },
     Error { error: ApiError },
 }
 
@@ -1102,6 +1289,9 @@ impl ApiResponse {
             ApiResponse::Tenants { .. } => "tenants",
             ApiResponse::Durability { .. } => "durability",
             ApiResponse::Service { .. } => "service",
+            ApiResponse::Endpoint { .. } => "endpoint",
+            ApiResponse::Endpoints { .. } => "endpoints",
+            ApiResponse::Served { .. } => "served",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -1167,6 +1357,18 @@ impl ApiResponse {
             }
             ApiResponse::Service { service } => {
                 data.set("service", service.to_json());
+            }
+            ApiResponse::Endpoint { endpoint } => {
+                data.set("endpoint", endpoint.to_json());
+            }
+            ApiResponse::Endpoints { endpoints } => {
+                data.set("endpoints", Json::Arr(endpoints.iter().map(|e| e.to_json()).collect()));
+            }
+            ApiResponse::Served { endpoint, version, batch, probs } => {
+                data.set("endpoint", endpoint.as_str().into())
+                    .set("version", (*version).into())
+                    .set("batch", (*batch).into())
+                    .set("probs", Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()));
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -1240,6 +1442,25 @@ impl ApiResponse {
             }),
             "service" => Ok(ApiResponse::Service {
                 service: ServiceStatusView::from_json(need(data, "service")?)?,
+            }),
+            "endpoint" => Ok(ApiResponse::Endpoint {
+                endpoint: EndpointView::from_json(need(data, "endpoint")?)?,
+            }),
+            "endpoints" => Ok(ApiResponse::Endpoints {
+                endpoints: need_arr(data, "endpoints")?
+                    .iter()
+                    .map(EndpointView::from_json)
+                    .collect::<Result<Vec<EndpointView>, ApiError>>()?,
+            }),
+            "served" => Ok(ApiResponse::Served {
+                endpoint: need_str(data, "endpoint")?,
+                version: need_u64(data, "version")?,
+                batch: need_u64(data, "batch")?,
+                probs: need_arr(data, "probs")?
+                    .iter()
+                    .map(|v| v.as_f64().map(|f| f as f32))
+                    .collect::<Option<Vec<f32>>>()
+                    .ok_or_else(|| ApiError::invalid("'probs' must be numbers"))?,
             }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
@@ -1452,6 +1673,15 @@ mod tests {
             .is_mutation());
         assert!(!ApiRequest::TenantReport.is_mutation());
         assert!(!ApiRequest::DurabilityStatus.is_mutation());
+        assert!(ApiRequest::Promote {
+            endpoint: "prod".into(),
+            action: "promote".into(),
+            session: Some("s".into())
+        }
+        .is_mutation());
+        assert!(!ApiRequest::Endpoints.is_mutation());
+        assert!(!ApiRequest::ServeInfer { endpoint: "prod".into(), user: "kim".into(), x: vec![] }
+            .is_mutation());
         assert!(ApiRequest::SetQuota {
             user: "kim".into(),
             max_concurrent: None,
@@ -1459,6 +1689,7 @@ mod tests {
             gpu_second_budget: None,
             weight: None,
             class: None,
+            max_qps: None,
         }
         .is_mutation());
     }
@@ -1467,15 +1698,24 @@ mod tests {
     fn set_quota_partial_fields_parse() {
         // Only the named fields travel; everything else stays None so
         // the service applies a partial update.
-        let args = parse(r#"{"user":"kim","max_gpus":4,"class":"high"}"#).unwrap();
+        let args = parse(r#"{"user":"kim","max_gpus":4,"class":"high","max_qps":25}"#).unwrap();
         match ApiRequest::from_verb_args("set_quota", &args).unwrap() {
-            ApiRequest::SetQuota { user, max_concurrent, max_gpus, gpu_second_budget, weight, class } => {
+            ApiRequest::SetQuota {
+                user,
+                max_concurrent,
+                max_gpus,
+                gpu_second_budget,
+                weight,
+                class,
+                max_qps,
+            } => {
                 assert_eq!(user, "kim");
                 assert_eq!(max_concurrent, None);
                 assert_eq!(max_gpus, Some(4));
                 assert_eq!(gpu_second_budget, None);
                 assert_eq!(weight, None);
                 assert_eq!(class.as_deref(), Some("high"));
+                assert_eq!(max_qps, Some(25));
             }
             other => panic!("{:?}", other),
         }
@@ -1591,6 +1831,96 @@ mod tests {
         let err = ApiRequest::from_verb_args("list_sessions", &parse(r#"{"offset":1.5}"#).unwrap())
             .unwrap_err();
         assert!(err.message.contains("offset"), "{}", err);
+    }
+
+    #[test]
+    fn promote_parses_and_validates_actions() {
+        // Bare promote defaults the action and requires a session.
+        let args = parse(r#"{"endpoint":"prod","session":"kim/mnist/1"}"#).unwrap();
+        assert_eq!(
+            ApiRequest::from_verb_args("promote", &args).unwrap(),
+            ApiRequest::Promote {
+                endpoint: "prod".into(),
+                action: "promote".into(),
+                session: Some("kim/mnist/1".into()),
+            }
+        );
+        // Cursor moves need no session.
+        for action in ["rollback", "rollforward", "retire"] {
+            let args = parse(&format!(r#"{{"endpoint":"prod","action":"{}"}}"#, action)).unwrap();
+            match ApiRequest::from_verb_args("promote", &args).unwrap() {
+                ApiRequest::Promote { action: a, session, .. } => {
+                    assert_eq!(a, action);
+                    assert_eq!(session, None);
+                }
+                other => panic!("{:?}", other),
+            }
+        }
+        // Promoting without a session and unknown actions are named errors.
+        let err = ApiRequest::from_verb_args("promote", &parse(r#"{"endpoint":"prod"}"#).unwrap())
+            .unwrap_err();
+        assert!(err.message.contains("session"), "{}", err);
+        let bad = parse(r#"{"endpoint":"prod","action":"sideways"}"#).unwrap();
+        let err = ApiRequest::from_verb_args("promote", &bad).unwrap_err();
+        assert!(err.message.contains("sideways"), "{}", err);
+        // Full request envelope round-trips.
+        let req = ApiRequest::Promote {
+            endpoint: "prod".into(),
+            action: "rollback".into(),
+            session: None,
+        };
+        let back = ApiRequest::from_json(&parse(&req.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn serving_responses_round_trip() {
+        let view = EndpointView {
+            name: "mnist-prod".into(),
+            active_version: 2,
+            model: "mnist_mlp".into(),
+            session: "kim/mnist/2".into(),
+            step: 150,
+            versions: vec![
+                EndpointVersionView {
+                    version: 1,
+                    session: "kim/mnist/1".into(),
+                    model: "mnist_mlp".into(),
+                    step: 100,
+                    promoted_at_ms: 5_000,
+                },
+                EndpointVersionView {
+                    version: 2,
+                    session: "kim/mnist/2".into(),
+                    model: "mnist_mlp".into(),
+                    step: 150,
+                    promoted_at_ms: 9_000,
+                },
+            ],
+        };
+        for resp in [
+            ApiResponse::Endpoint { endpoint: view.clone() },
+            ApiResponse::Endpoints { endpoints: vec![view] },
+            ApiResponse::Endpoints { endpoints: vec![] },
+            ApiResponse::Served {
+                endpoint: "mnist-prod".into(),
+                version: 2,
+                batch: 8,
+                probs: vec![0.25, 0.75],
+            },
+        ] {
+            let back =
+                ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+            assert_eq!(back, resp);
+        }
+        // serve_infer request envelope round-trips too.
+        let req = ApiRequest::ServeInfer {
+            endpoint: "mnist-prod".into(),
+            user: "kim".into(),
+            x: vec![0.0, 0.5, 1.0],
+        };
+        let back = ApiRequest::from_json(&parse(&req.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, req);
     }
 
     #[test]

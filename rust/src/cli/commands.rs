@@ -553,7 +553,8 @@ pub fn cmd_quota(args: &[String]) -> CmdResult {
             .opt("max-gpus", None, "max GPUs held at once (0 = unlimited)", None)
             .opt("budget", None, "GPU-second budget (0 = unlimited)", None)
             .opt("weight", None, "fair-share weight (>= 1)", None)
-            .opt("class", None, "priority class: low|normal|high", None),
+            .opt("class", None, "priority class: low|normal|high", None)
+            .opt("max-qps", None, "max serving requests/sec (0 = unlimited)", None),
     )
     .parse(args)?;
     let service = service_from(&p)?;
@@ -569,11 +570,13 @@ pub fn cmd_quota(args: &[String]) -> CmdResult {
         .map(|s| s.parse::<f64>().map_err(|e| format!("--budget: {}", e)))
         .transpose()?;
     let class = p.get("class").map(str::to_string);
+    let max_qps = parse_u("max-qps")?;
     let editing = max_concurrent.is_some()
         || max_gpus.is_some()
         || budget.is_some()
         || weight.is_some()
-        || class.is_some();
+        || class.is_some()
+        || max_qps.is_some();
     if editing {
         match ok(service.dispatch(ApiRequest::SetQuota {
             user: user.clone(),
@@ -582,6 +585,7 @@ pub fn cmd_quota(args: &[String]) -> CmdResult {
             gpu_second_budget: budget,
             weight,
             class,
+            max_qps,
         }))? {
             ApiResponse::Ack { .. } => {
                 service.platform().save_state().map_err(|e| format!("{:#}", e))?;
@@ -612,6 +616,68 @@ pub fn cmd_quota(args: &[String]) -> CmdResult {
         }
         None => println!("user {} has the default quota (nothing recorded yet)", user),
     }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// nsml promote / endpoints — inference serving
+// ---------------------------------------------------------------------
+
+pub fn cmd_promote(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml promote", "promote a session's best checkpoint to a serving endpoint")
+            .pos("endpoint", "endpoint name", true)
+            .pos("session", "session to promote (required when the action is 'promote')", false)
+            .opt("action", None, "promote|rollback|rollforward|retire", Some("promote")),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let endpoint = p.pos(0).unwrap().to_string();
+    let action = p.get("action").unwrap_or("promote").to_string();
+    let session = p.pos(1).map(str::to_string);
+    let resp = ok(service.dispatch(ApiRequest::Promote {
+        endpoint: endpoint.clone(),
+        action: action.clone(),
+        session,
+    }))?;
+    service.platform().save_state().map_err(|e| format!("{:#}", e))?;
+    match resp {
+        ApiResponse::Endpoint { endpoint: ep } => {
+            println!(
+                "endpoint {}: {} -> v{} (model {}, session {}, step {})",
+                ep.name, action, ep.active_version, ep.model, ep.session, ep.step
+            );
+        }
+        ApiResponse::Ack { .. } => println!("endpoint {}: retired", endpoint),
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    }
+    Ok(())
+}
+
+pub fn cmd_endpoints(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new("nsml endpoints", "list serving endpoints")).parse(args)?;
+    let service = service_from(&p)?;
+    let views = match ok(service.dispatch(ApiRequest::Endpoints))? {
+        ApiResponse::Endpoints { endpoints } => endpoints,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
+    if views.is_empty() {
+        println!("no endpoints yet (promote one with `nsml promote NAME SESSION`)");
+        return Ok(());
+    }
+    let mut t = Table::new(&["ENDPOINT", "ACTIVE", "MODEL", "SESSION", "STEP", "VERSIONS"])
+        .right(&[1, 4, 5]);
+    for v in &views {
+        t.row(&[
+            v.name.clone(),
+            format!("v{}", v.active_version),
+            v.model.clone(),
+            v.session.clone(),
+            format!("{}", v.step),
+            format!("{}", v.versions.len()),
+        ]);
+    }
+    println!("{}", t.render());
     Ok(())
 }
 

@@ -13,6 +13,9 @@
 //! * `nsml automl -d DATASET`       — hyperparameter search
 //! * `nsml tenants` / `nsml quota USER [--max-gpus N …]` — fair-share
 //!   status and per-user quota edits (weights, classes, budgets)
+//! * `nsml promote NAME SESSION` / `nsml endpoints` — promote a
+//!   session's best checkpoint to a named serving endpoint (roll
+//!   forward/back/retire with `--action`) and list the registry
 //! * `nsml gc [--status]`          — sweep orphaned objects (or print
 //!   the WAL/snapshot/GC durability counters)
 //! * `nsml cluster` / `nsml models` / `nsml web`
@@ -49,6 +52,9 @@ COMMANDS:
   cluster    cluster & scheduler status
   tenants    per-user fair-share status (quotas, GPU-seconds, queue)
   quota      show or set a user's quota:  nsml quota kim --max-gpus 4 --weight 2
+  promote    promote a checkpoint to a serving endpoint:
+             nsml promote NAME SESSION [--action rollback|rollforward|retire]
+  endpoints  list serving endpoints (active version + history)
   gc         sweep orphaned objects:      nsml gc [--status]
   models     list AOT-compiled models
   web        serve the web UI:            nsml web --port 8080
@@ -77,6 +83,8 @@ pub fn main(args: &[String]) -> i32 {
         "cluster" => commands::cmd_cluster(&rest),
         "tenants" => commands::cmd_tenants(&rest),
         "quota" => commands::cmd_quota(&rest),
+        "promote" => commands::cmd_promote(&rest),
+        "endpoints" => commands::cmd_endpoints(&rest),
         "gc" => commands::cmd_gc(&rest),
         "models" => commands::cmd_models(&rest),
         "web" => commands::cmd_web(&rest),

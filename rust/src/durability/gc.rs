@@ -33,16 +33,22 @@ pub struct GcReport {
 }
 
 /// Mark-and-sweep over `store`. `owner_of` maps a session id to its
-/// owning user (the facade passes a session-store lookup).
+/// owning user (the facade passes a session-store lookup); `pinned`
+/// is extra roots the caller must keep — the facade passes every
+/// params object referenced by a live serving endpoint's version
+/// history, so a promoted (or rolled-back-to) checkpoint is never
+/// swept even if its index entry vanished.
 pub fn sweep(
     store: &ObjectStore,
     ckpts: &CheckpointStore,
     datasets: &DatasetRegistry,
     owner_of: &dyn Fn(&str) -> Option<String>,
     registry: &TenantRegistry,
+    pinned: &[ObjectId],
 ) -> GcReport {
-    // Mark: dataset manifests (private ones too).
+    // Mark: dataset manifests (private ones too) + caller pins.
     let mut live: BTreeSet<ObjectId> = datasets.all_object_ids().into_iter().collect();
+    live.extend(pinned.iter().cloned());
     // Mark: every indexed checkpoint's params + metadata record, and
     // attribute their bytes to the session's owner.
     let mut per_user: BTreeMap<String, BTreeSet<ObjectId>> = BTreeMap::new();
@@ -125,7 +131,7 @@ mod tests {
         let junk = store.put(b"orphaned upload bytes").unwrap();
 
         let before = store.usage().0;
-        let report = sweep(&store, &ckpts, &datasets, &owner, &registry);
+        let report = sweep(&store, &ckpts, &datasets, &owner, &registry, &[]);
         assert_eq!(report.swept_objects, 1);
         assert_eq!(report.swept_bytes, b"orphaned upload bytes".len() as u64);
         assert_eq!(report.live_objects as usize, before - 1);
@@ -153,9 +159,25 @@ mod tests {
         assert_eq!(kim, registry.storage_bytes_of("kim"));
 
         // Idempotent: a second sweep finds nothing to delete.
-        let again = sweep(&store, &ckpts, &datasets, &owner, &registry);
+        let again = sweep(&store, &ckpts, &datasets, &owner, &registry, &[]);
         assert_eq!(again.swept_objects, 0);
         assert_eq!(again.live_objects, report.live_objects);
+    }
+
+    #[test]
+    fn pinned_objects_survive_even_unindexed() {
+        let store = ObjectStore::memory();
+        let ckpts = CheckpointStore::new(store.clone());
+        let datasets = DatasetRegistry::new(store.clone());
+        let registry = TenantRegistry::new(TenantQuota::default());
+        // An object nothing indexes — only the caller's pin roots it
+        // (the endpoint-registry case).
+        let pinned = store.put(b"endpoint params").unwrap();
+        let junk = store.put(b"junk").unwrap();
+        let report = sweep(&store, &ckpts, &datasets, &owner, &registry, &[pinned.clone()]);
+        assert_eq!(report.swept_objects, 1);
+        assert!(store.has(&pinned));
+        assert!(!store.has(&junk));
     }
 
     #[test]
@@ -164,7 +186,7 @@ mod tests {
         let ckpts = CheckpointStore::new(store.clone());
         let datasets = DatasetRegistry::new(store.clone());
         let registry = TenantRegistry::new(TenantQuota::default());
-        let report = sweep(&store, &ckpts, &datasets, &owner, &registry);
+        let report = sweep(&store, &ckpts, &datasets, &owner, &registry, &[]);
         assert_eq!(report, GcReport::default());
     }
 }

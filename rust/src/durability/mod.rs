@@ -64,6 +64,7 @@ pub fn is_durable(e: &Event) -> bool {
             | EventKind::MetricReported { .. }
             | EventKind::CheckpointSaved { .. }
             | EventKind::AdmissionDecided { .. }
+            | EventKind::EndpointChanged { .. }
     )
 }
 

@@ -53,6 +53,7 @@ pub fn replay(
     sessions: &SessionStore,
     leaderboard: &Leaderboard,
     accountant: &UsageAccountant,
+    endpoints: &crate::serving::EndpointRegistry,
     resolve_metric: &dyn Fn(&str) -> Option<(String, bool)>,
 ) -> ReplayStats {
     let mut stats = ReplayStats::default();
@@ -105,6 +106,19 @@ pub fn replay(
                         }
                     }
                 });
+            }
+            // Endpoint mutations carry everything the registry needs
+            // (the event is the registry's WAL record).
+            EventKind::EndpointChanged { action, session, model, step, object, .. } => {
+                let _ = endpoints.apply_event(
+                    &e.subject,
+                    action,
+                    session,
+                    model,
+                    *step,
+                    object,
+                    e.at_ms,
+                );
             }
             // The checkpoint index is rebuilt from the object store
             // (the event only carries the params address), and
@@ -233,7 +247,8 @@ mod tests {
             metric(5, "kim/mnist/1", "accuracy", 75, 0.80), // worse: best stays
             state(6, 3_100, "kim/mnist/1", "done", 100),
         ];
-        let stats = replay(&events, None, &sessions, &lb, &acc, &resolve);
+        let eps = crate::serving::EndpointRegistry::new();
+        let stats = replay(&events, None, &sessions, &lb, &acc, &eps, &resolve);
         assert_eq!(stats.applied, 6);
         assert_eq!(stats.skipped, 0);
         assert_eq!(stats.completions, 1);
@@ -266,7 +281,8 @@ mod tests {
             metric(3, "kim/mnist/1", "accuracy", 25, 0.70),
             metric(7, "kim/mnist/1", "accuracy", 50, 0.90),
         ];
-        let stats = replay(&events, Some(5), &sessions, &lb, &acc, &resolve);
+        let eps = crate::serving::EndpointRegistry::new();
+        let stats = replay(&events, Some(5), &sessions, &lb, &acc, &eps, &resolve);
         assert_eq!(stats.skipped, 1);
         assert_eq!(stats.applied, 1);
         let r = sessions.get("kim/mnist/1").unwrap();
@@ -275,7 +291,7 @@ mod tests {
         // Replaying the same tail again changes nothing structural:
         // metrics dedup is the caller's concern (the facade replays
         // once per process start), but best/board stay idempotent.
-        replay(&events, Some(5), &sessions, &lb, &acc, &resolve);
+        replay(&events, Some(5), &sessions, &lb, &acc, &eps, &resolve);
         assert_eq!(sessions.get("kim/mnist/1").unwrap().best_metric, Some(0.90));
     }
 
@@ -288,7 +304,8 @@ mod tests {
             state(1, 0, "ghost/x/1", "running", 0),
             state(2, 1_000, "ghost/x/1", "done", 50),
         ];
-        let stats = replay(&events, None, &sessions, &lb, &acc, &resolve);
+        let eps = crate::serving::EndpointRegistry::new();
+        let stats = replay(&events, None, &sessions, &lb, &acc, &eps, &resolve);
         assert_eq!(stats.applied, 2);
         assert_eq!(stats.completions, 0);
         assert!(sessions.is_empty());

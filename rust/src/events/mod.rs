@@ -79,6 +79,8 @@ pub const ALL_EVENT_KINDS: &[&str] = &[
     "worker",
     "admission",
     "loop",
+    "endpoint",
+    "infer",
 ];
 
 /// The typed payload of an [`Event`]. Plain data only — the events
@@ -124,6 +126,22 @@ pub enum EventKind {
     /// One daemon drive-loop round (`nsml serve`): round counter,
     /// wall-clock round duration and sustained loop throughput.
     LoopSampled { round: u64, round_ms: f64, progressed: u64, rounds_per_sec: f64 },
+    /// A serving-endpoint lifecycle mutation (subject = endpoint name).
+    /// `action` is one of `promote`, `rollback`, `rollforward` or
+    /// `retire`; the remaining fields describe the checkpoint version
+    /// involved so recovery can replay the registry from the WAL.
+    EndpointChanged {
+        action: String,
+        version: u64,
+        session: String,
+        model: String,
+        step: u64,
+        object: String,
+    },
+    /// One micro-batched serving execution (subject = endpoint name):
+    /// how many queued requests were packed into the single engine
+    /// call and the wall-clock latency of that call.
+    InferServed { batch: u64, latency_ms: f64 },
 }
 
 impl EventKind {
@@ -140,6 +158,8 @@ impl EventKind {
             EventKind::WorkerSampled { .. } => "worker",
             EventKind::AdmissionDecided { .. } => "admission",
             EventKind::LoopSampled { .. } => "loop",
+            EventKind::EndpointChanged { .. } => "endpoint",
+            EventKind::InferServed { .. } => "infer",
         }
     }
 
@@ -186,6 +206,15 @@ impl EventKind {
                     "loop round {}: {:.1}ms, {} progressed, {:.1} rounds/s",
                     round, round_ms, progressed, rounds_per_sec
                 )
+            }
+            EventKind::EndpointChanged { action, version, session, model, step, object } => {
+                format!(
+                    "endpoint {} v{} ({} {} step {}, {})",
+                    action, version, session, model, step, object
+                )
+            }
+            EventKind::InferServed { batch, latency_ms } => {
+                format!("served batch of {} in {:.2}ms", batch, latency_ms)
             }
         }
     }
@@ -237,6 +266,17 @@ impl EventKind {
                     .set("round_ms", (*round_ms).into())
                     .set("progressed", (*progressed).into())
                     .set("rounds_per_sec", (*rounds_per_sec).into());
+            }
+            EventKind::EndpointChanged { action, version, session, model, step, object } => {
+                o.set("action", action.as_str().into())
+                    .set("version", (*version).into())
+                    .set("session", session.as_str().into())
+                    .set("model", model.as_str().into())
+                    .set("step", (*step).into())
+                    .set("object", object.as_str().into());
+            }
+            EventKind::InferServed { batch, latency_ms } => {
+                o.set("batch", (*batch).into()).set("latency_ms", (*latency_ms).into());
             }
         }
         o
@@ -319,6 +359,18 @@ impl EventKind {
                 round_ms: f64_of("round_ms")?,
                 progressed: u64_of("progressed")?,
                 rounds_per_sec: f64_of("rounds_per_sec")?,
+            }),
+            "endpoint" => Ok(EventKind::EndpointChanged {
+                action: str_of("action")?,
+                version: u64_of("version")?,
+                session: str_of("session")?,
+                model: str_of("model")?,
+                step: u64_of("step")?,
+                object: str_of("object")?,
+            }),
+            "infer" => Ok(EventKind::InferServed {
+                batch: u64_of("batch")?,
+                latency_ms: f64_of("latency_ms")?,
             }),
             other => Err(format!(
                 "unknown event kind '{}' (expected one of: {})",
@@ -447,6 +499,15 @@ mod tests {
                 progressed: 6,
                 rounds_per_sec: 210.5,
             },
+            EventKind::EndpointChanged {
+                action: "promote".into(),
+                version: 1,
+                session: "kim/mnist/1".into(),
+                model: "mnist_mlp".into(),
+                step: 120,
+                object: "sha-def".into(),
+            },
+            EventKind::InferServed { batch: 8, latency_ms: 3.25 },
         ]
     }
 

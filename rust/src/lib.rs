@@ -42,6 +42,10 @@
 //!   execution substrate.
 //! * [`session`] / [`runtime`] / [`data`] — training state machines
 //!   over the PJRT engine and the procedural dataset generators.
+//! * [`serving`] — high-QPS inference: named endpoints promoted from
+//!   the leaderboard (versioned, roll-forward/back) and a per-endpoint
+//!   queue that micro-batches concurrent requests into single
+//!   fixed-shape engine executions.
 //! * [`events`] — the typed publish/subscribe event spine: every
 //!   subsystem publishes structured events (placements, state
 //!   transitions, metrics, checkpoints, steals, samples) into a
@@ -80,6 +84,7 @@ pub mod runtime;
 pub mod data;
 pub mod session;
 pub mod executor;
+pub mod serving;
 pub mod tenancy;
 pub mod durability;
 pub mod leaderboard;

@@ -1,0 +1,269 @@
+//! The serving micro-batcher: pack concurrent requests into one
+//! engine execution.
+//!
+//! Compiled PJRT executables have a *fixed* input shape (the manifest's
+//! `infer_x_shape`, e.g. `[64, 144]` for the MNIST MLP), so a serving
+//! request is defined as **one row** of that shape. The
+//! [`ServingQueue`] holds per-endpoint FIFOs of pending rows; a flush
+//! drains each FIFO into batches of at most `max_batch` rows, and
+//! [`ServedModel::serve_rows`] packs each batch into the fixed tensor
+//! (zero-padding unused rows), runs the executable **once**, and slices
+//! the output back into per-request rows. Because every alpha-test
+//! model computes output row *i* from input row *i* alone, a row served
+//! in a batch of 64 is bit-for-bit identical to the same row served
+//! alone — `rust/tests/serving.rs` gates exactly that.
+//!
+//! Flush policy (checked against virtual time, so it is deterministic
+//! under test): a FIFO is due when it holds `max_batch` rows, when its
+//! oldest row has waited `max_wait_ms`, or when the caller forces a
+//! flush (`nsml serve` flushes after each burst of queued service
+//! calls — requests that arrived together leave together).
+
+use crate::runtime::{TensorData, TrainableModel};
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// What a flushed request learns about its own execution.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ServedRow {
+    /// The model output for this request's row.
+    pub probs: Vec<f32>,
+    /// Endpoint version that produced it (attribution).
+    pub version: u64,
+    /// How many requests shared the execution.
+    pub batch: usize,
+}
+
+/// Completion callback: one per request, called exactly once.
+pub type ServeReply = Box<dyn FnOnce(Result<ServedRow, String>) + Send>;
+
+/// One queued inference request (a single input row).
+pub struct PendingInfer {
+    pub user: String,
+    pub x: Vec<f32>,
+    pub enqueued_at_ms: u64,
+    pub reply: ServeReply,
+}
+
+struct Inner {
+    queues: BTreeMap<String, Vec<PendingInfer>>,
+    requests: u64,
+    batches: u64,
+}
+
+/// Counters + current depth (`service_status` / tests).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ServingQueueStats {
+    pub depth: usize,
+    pub requests: u64,
+    pub batches: u64,
+}
+
+/// Per-endpoint pending-request FIFOs (see module docs).
+pub struct ServingQueue {
+    max_batch: usize,
+    max_wait_ms: u64,
+    inner: Mutex<Inner>,
+}
+
+impl ServingQueue {
+    pub fn new(max_batch: usize, max_wait_ms: u64) -> ServingQueue {
+        ServingQueue {
+            max_batch: max_batch.max(1),
+            max_wait_ms,
+            inner: Mutex::new(Inner { queues: BTreeMap::new(), requests: 0, batches: 0 }),
+        }
+    }
+
+    pub fn max_batch(&self) -> usize {
+        self.max_batch
+    }
+
+    pub fn max_wait_ms(&self) -> u64 {
+        self.max_wait_ms
+    }
+
+    pub fn enqueue(&self, endpoint: &str, req: PendingInfer) {
+        let mut inner = self.inner.lock().unwrap();
+        inner.requests += 1;
+        inner.queues.entry(endpoint.to_string()).or_default().push(req);
+    }
+
+    /// Pending rows across all endpoints.
+    pub fn depth(&self) -> usize {
+        self.inner.lock().unwrap().queues.values().map(Vec::len).sum()
+    }
+
+    pub fn stats(&self) -> ServingQueueStats {
+        let inner = self.inner.lock().unwrap();
+        ServingQueueStats {
+            depth: inner.queues.values().map(Vec::len).sum(),
+            requests: inner.requests,
+            batches: inner.batches,
+        }
+    }
+
+    /// Drain every due batch: full FIFOs always, FIFOs whose oldest row
+    /// has waited `max_wait_ms` by `now_ms`, and everything when
+    /// `flush_all` is set. No returned batch exceeds `max_batch`; a
+    /// leftover shorter than `max_batch` stays queued unless due.
+    pub fn take_due(&self, now_ms: u64, flush_all: bool) -> Vec<(String, Vec<PendingInfer>)> {
+        let mut inner = self.inner.lock().unwrap();
+        let mut out = Vec::new();
+        let max_batch = self.max_batch;
+        let max_wait = self.max_wait_ms;
+        for (name, q) in inner.queues.iter_mut() {
+            loop {
+                if q.is_empty() {
+                    break;
+                }
+                let expired = now_ms >= q[0].enqueued_at_ms.saturating_add(max_wait);
+                if !(flush_all || q.len() >= max_batch || expired) {
+                    break;
+                }
+                let take = q.len().min(max_batch);
+                let batch: Vec<PendingInfer> = q.drain(..take).collect();
+                out.push((name.clone(), batch));
+            }
+        }
+        inner.queues.retain(|_, q| !q.is_empty());
+        inner.batches += out.len() as u64;
+        out
+    }
+
+    /// Fail every pending request for `endpoint` (it was retired while
+    /// requests were queued). Each reply still fires exactly once.
+    pub fn fail_endpoint(&self, endpoint: &str, reason: &str) {
+        let drained = self.inner.lock().unwrap().queues.remove(endpoint);
+        for req in drained.unwrap_or_default() {
+            (req.reply)(Err(reason.to_string()));
+        }
+    }
+}
+
+/// A checkpoint loaded for serving: the fixed-shape executable plus
+/// the row geometry derived from its manifest.
+pub struct ServedModel {
+    model: TrainableModel,
+    /// Rows per execution (`infer_x_shape[0]`).
+    pub rows: usize,
+    /// Values per request (`infer_x_shape[1..]` flattened).
+    pub row_len: usize,
+    shape: Vec<i64>,
+}
+
+impl ServedModel {
+    pub fn new(model: TrainableModel) -> Result<ServedModel, String> {
+        let shape = model.manifest().infer_x_shape.clone();
+        if shape.is_empty() || shape.iter().any(|&d| d <= 0) {
+            return Err(format!(
+                "model '{}' has no usable infer_x_shape ({:?})",
+                model.name(),
+                shape
+            ));
+        }
+        let rows = shape[0] as usize;
+        let row_len = shape[1..].iter().product::<i64>().max(1) as usize;
+        Ok(ServedModel { model, rows, row_len, shape })
+    }
+
+    /// Serve `rows_in` (each exactly `row_len` values) through as few
+    /// fixed-shape executions as possible: `ceil(n / rows)` engine
+    /// calls, unused rows zero-padded, outputs sliced per request.
+    pub fn serve_rows(&self, rows_in: &[Vec<f32>]) -> Result<Vec<Vec<f32>>, String> {
+        for r in rows_in {
+            if r.len() != self.row_len {
+                return Err(format!(
+                    "request has {} values but one '{}' row is {} values",
+                    r.len(),
+                    self.model.name(),
+                    self.row_len
+                ));
+            }
+        }
+        let mut out = Vec::with_capacity(rows_in.len());
+        for chunk in rows_in.chunks(self.rows) {
+            let mut flat = vec![0.0f32; self.rows * self.row_len];
+            for (i, r) in chunk.iter().enumerate() {
+                flat[i * self.row_len..(i + 1) * self.row_len].copy_from_slice(r);
+            }
+            let y = self
+                .model
+                .infer(&TensorData::f32(flat, &self.shape))
+                .map_err(|e| e.to_string())?;
+            let per_row = y.len() / self.rows;
+            for i in 0..chunk.len() {
+                out.push(y[i * per_row..(i + 1) * per_row].to_vec());
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn req(user: &str, at_ms: u64, answered: &Arc<AtomicUsize>) -> PendingInfer {
+        let answered = answered.clone();
+        PendingInfer {
+            user: user.to_string(),
+            x: vec![0.0],
+            enqueued_at_ms: at_ms,
+            reply: Box::new(move |_| {
+                answered.fetch_add(1, Ordering::SeqCst);
+            }),
+        }
+    }
+
+    #[test]
+    fn full_queue_flushes_without_waiting() {
+        let q = ServingQueue::new(3, 1000);
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..7 {
+            q.enqueue("prod", req("kim", 0, &n));
+        }
+        // Two full batches leave immediately; the short tail waits.
+        let batches = q.take_due(0, false);
+        assert_eq!(batches.len(), 2);
+        assert!(batches.iter().all(|(name, b)| name == "prod" && b.len() == 3));
+        assert_eq!(q.depth(), 1);
+        // The tail expires once its oldest row has waited max_wait_ms.
+        assert!(q.take_due(999, false).is_empty());
+        let late = q.take_due(1000, false);
+        assert_eq!(late.len(), 1);
+        assert_eq!(late[0].1.len(), 1);
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.stats().requests, 7);
+        assert_eq!(q.stats().batches, 3);
+    }
+
+    #[test]
+    fn flush_all_drains_every_endpoint_in_batch_sized_chunks() {
+        let q = ServingQueue::new(2, u64::MAX);
+        let n = Arc::new(AtomicUsize::new(0));
+        for _ in 0..3 {
+            q.enqueue("a", req("kim", 5, &n));
+        }
+        q.enqueue("b", req("lee", 5, &n));
+        let batches = q.take_due(5, true);
+        let sizes: Vec<(String, usize)> =
+            batches.iter().map(|(name, b)| (name.clone(), b.len())).collect();
+        assert_eq!(sizes, vec![("a".into(), 2), ("a".into(), 1), ("b".into(), 1)]);
+        assert_eq!(q.depth(), 0);
+    }
+
+    #[test]
+    fn fail_endpoint_answers_each_pending_request_once() {
+        let q = ServingQueue::new(8, u64::MAX);
+        let n = Arc::new(AtomicUsize::new(0));
+        q.enqueue("gone", req("kim", 0, &n));
+        q.enqueue("gone", req("kim", 0, &n));
+        q.enqueue("kept", req("lee", 0, &n));
+        q.fail_endpoint("gone", "endpoint retired");
+        assert_eq!(n.load(Ordering::SeqCst), 2);
+        assert_eq!(q.depth(), 1);
+    }
+}

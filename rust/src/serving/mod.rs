@@ -1,0 +1,32 @@
+//! Inference serving: leaderboard checkpoints promoted to named,
+//! micro-batched endpoints.
+//!
+//! NSML's follow-up work (the MLaaS case study, arXiv 1810.09957) is
+//! serving-centric: a model that wins the leaderboard is only useful
+//! once it answers real traffic. This module turns the one-shot
+//! `infer` verb into a serving *workload*:
+//!
+//! * [`EndpointRegistry`] — named endpoints, each a history of
+//!   promoted checkpoint versions with an active cursor
+//!   (promote / rollback / rollforward / retire). The history pins
+//!   params objects against GC and survives restart through both the
+//!   snapshot (`persist::save`) and the WAL
+//!   (`EventKind::EndpointChanged` replay).
+//! * [`ServingQueue`] — per-endpoint FIFOs that micro-batch concurrent
+//!   requests under `[serving]` `max_batch` / `max_wait_ms` limits.
+//! * [`ServedModel`] — a checkpoint loaded behind the compile cache;
+//!   packs a batch of single-row requests into the model's fixed
+//!   `infer_x_shape` tensor, executes once, slices per-row outputs.
+//!
+//! The facade (`api::NsmlPlatform`) owns one of each and pumps the
+//! queue from the drive loop; `PlatformService` routes the `promote` /
+//! `endpoints` / `serve_infer` verbs; per-tenant QPS quotas gate
+//! enqueues through `tenancy::TenantRegistry::try_request`.
+
+mod batcher;
+mod registry;
+
+pub use batcher::{
+    PendingInfer, ServeReply, ServedModel, ServedRow, ServingQueue, ServingQueueStats,
+};
+pub use registry::{Endpoint, EndpointRegistry, EndpointVersion};

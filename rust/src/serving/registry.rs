@@ -1,0 +1,371 @@
+//! Named serving endpoints: which checkpoint answers which name.
+//!
+//! An endpoint is a stable, user-facing name (`"mnist-prod"`) bound to
+//! a *history* of promoted checkpoint versions. `promote` appends a new
+//! version and activates it; `rollback` / `rollforward` move the active
+//! cursor along the history without losing any version (so a bad
+//! promote is reversible, and a rollback is itself reversible); `retire`
+//! removes the endpoint. Every version in the history pins its params
+//! object against GC — a rolled-back-to checkpoint must still be
+//! loadable.
+//!
+//! The registry is plain data behind a mutex: persistence (snapshot
+//! JSON + WAL replay of `EventKind::EndpointChanged`) and the actual
+//! model execution live above it.
+
+use crate::storage::ObjectId;
+use crate::util::json::Json;
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+
+/// One promoted checkpoint in an endpoint's history.
+#[derive(Debug, Clone, PartialEq)]
+pub struct EndpointVersion {
+    /// 1-based position in the endpoint's promote history.
+    pub version: u64,
+    /// Session the checkpoint came from.
+    pub session: String,
+    /// Model architecture name (manifest key) — fixes the serving
+    /// shape and lets recovery rebuild without a session lookup.
+    pub model: String,
+    /// Training step of the promoted checkpoint.
+    pub step: u64,
+    /// Content address of the serialized parameters.
+    pub object: ObjectId,
+    pub promoted_at_ms: u64,
+}
+
+/// A named endpoint: a version history plus the active cursor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Endpoint {
+    pub name: String,
+    pub versions: Vec<EndpointVersion>,
+    /// Index into `versions` of the currently served version.
+    pub active: usize,
+}
+
+impl Endpoint {
+    pub fn active_version(&self) -> &EndpointVersion {
+        &self.versions[self.active]
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("active", self.active.into())
+            .set(
+                "versions",
+                Json::Arr(
+                    self.versions
+                        .iter()
+                        .map(|v| {
+                            let mut vo = Json::obj();
+                            vo.set("version", v.version.into())
+                                .set("session", v.session.as_str().into())
+                                .set("model", v.model.as_str().into())
+                                .set("step", v.step.into())
+                                .set("object", v.object.0.as_str().into())
+                                .set("promoted_at_ms", v.promoted_at_ms.into());
+                            vo
+                        })
+                        .collect(),
+                ),
+            );
+        o
+    }
+
+    pub fn from_json(j: &Json) -> Result<Endpoint, String> {
+        let str_of = |j: &Json, k: &str| {
+            j.get(k)
+                .and_then(Json::as_str)
+                .map(str::to_string)
+                .ok_or_else(|| format!("endpoint json missing string '{}'", k))
+        };
+        let u64_of = |j: &Json, k: &str| {
+            j.get(k)
+                .and_then(Json::as_f64)
+                .filter(|f| *f >= 0.0 && f.fract() == 0.0)
+                .map(|f| f as u64)
+                .ok_or_else(|| format!("endpoint json missing integer '{}'", k))
+        };
+        let mut versions = Vec::new();
+        for vj in j.get("versions").and_then(Json::as_arr).unwrap_or(&Vec::new()) {
+            versions.push(EndpointVersion {
+                version: u64_of(vj, "version")?,
+                session: str_of(vj, "session")?,
+                model: str_of(vj, "model")?,
+                step: u64_of(vj, "step")?,
+                object: ObjectId(str_of(vj, "object")?),
+                promoted_at_ms: u64_of(vj, "promoted_at_ms")?,
+            });
+        }
+        if versions.is_empty() {
+            return Err("endpoint json has no versions".to_string());
+        }
+        let active = u64_of(j, "active")? as usize;
+        if active >= versions.len() {
+            return Err(format!(
+                "endpoint active index {} out of range ({} versions)",
+                active,
+                versions.len()
+            ));
+        }
+        Ok(Endpoint { name: str_of(j, "name")?, versions, active })
+    }
+}
+
+/// Thread-safe endpoint table (name → [`Endpoint`]).
+pub struct EndpointRegistry {
+    inner: Mutex<BTreeMap<String, Endpoint>>,
+}
+
+impl Default for EndpointRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl EndpointRegistry {
+    pub fn new() -> EndpointRegistry {
+        EndpointRegistry { inner: Mutex::new(BTreeMap::new()) }
+    }
+
+    /// Append a new version to `name` (creating the endpoint on first
+    /// promote) and activate it. Returns the new version snapshot.
+    pub fn promote(
+        &self,
+        name: &str,
+        session: &str,
+        model: &str,
+        step: u64,
+        object: ObjectId,
+        now_ms: u64,
+    ) -> EndpointVersion {
+        let mut inner = self.inner.lock().unwrap();
+        let ep = inner.entry(name.to_string()).or_insert_with(|| Endpoint {
+            name: name.to_string(),
+            versions: Vec::new(),
+            active: 0,
+        });
+        let v = EndpointVersion {
+            version: ep.versions.len() as u64 + 1,
+            session: session.to_string(),
+            model: model.to_string(),
+            step,
+            object,
+            promoted_at_ms: now_ms,
+        };
+        ep.versions.push(v.clone());
+        ep.active = ep.versions.len() - 1;
+        v
+    }
+
+    /// Move the active cursor one version back (to the previous
+    /// promote). Errors at the oldest version.
+    pub fn rollback(&self, name: &str) -> Result<EndpointVersion, String> {
+        let mut inner = self.inner.lock().unwrap();
+        let ep = inner.get_mut(name).ok_or_else(|| format!("unknown endpoint '{}'", name))?;
+        if ep.active == 0 {
+            return Err(format!(
+                "endpoint '{}' is already at its oldest version (v{})",
+                name,
+                ep.versions[ep.active].version
+            ));
+        }
+        ep.active -= 1;
+        Ok(ep.versions[ep.active].clone())
+    }
+
+    /// Move the active cursor one version forward (undo a rollback).
+    /// Errors at the newest version.
+    pub fn rollforward(&self, name: &str) -> Result<EndpointVersion, String> {
+        let mut inner = self.inner.lock().unwrap();
+        let ep = inner.get_mut(name).ok_or_else(|| format!("unknown endpoint '{}'", name))?;
+        if ep.active + 1 >= ep.versions.len() {
+            return Err(format!(
+                "endpoint '{}' is already at its newest version (v{})",
+                name,
+                ep.versions[ep.active].version
+            ));
+        }
+        ep.active += 1;
+        Ok(ep.versions[ep.active].clone())
+    }
+
+    /// Remove the endpoint entirely. Returns the version that was
+    /// active, or an error for unknown names.
+    pub fn retire(&self, name: &str) -> Result<EndpointVersion, String> {
+        let mut inner = self.inner.lock().unwrap();
+        let ep = inner.remove(name).ok_or_else(|| format!("unknown endpoint '{}'", name))?;
+        Ok(ep.versions[ep.active].clone())
+    }
+
+    pub fn get(&self, name: &str) -> Option<Endpoint> {
+        self.inner.lock().unwrap().get(name).cloned()
+    }
+
+    /// Every endpoint, name-ordered.
+    pub fn list(&self) -> Vec<Endpoint> {
+        self.inner.lock().unwrap().values().cloned().collect()
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.inner.lock().unwrap().is_empty()
+    }
+
+    /// Params objects pinned by *any* version of *any* live endpoint
+    /// (GC must keep rollback targets loadable, not just the active
+    /// version).
+    pub fn pinned_objects(&self) -> Vec<ObjectId> {
+        let inner = self.inner.lock().unwrap();
+        inner.values().flat_map(|ep| ep.versions.iter().map(|v| v.object.clone())).collect()
+    }
+
+    /// Replay one durable `EndpointChanged` WAL record (see
+    /// `durability::recovery`). Unknown actions are reported so a
+    /// corrupt tail is loud, not silently skipped.
+    pub fn apply_event(
+        &self,
+        name: &str,
+        action: &str,
+        session: &str,
+        model: &str,
+        step: u64,
+        object: &str,
+        at_ms: u64,
+    ) -> Result<(), String> {
+        match action {
+            "promote" => {
+                self.promote(name, session, model, step, ObjectId(object.to_string()), at_ms);
+                Ok(())
+            }
+            // Replayed cursor moves can hit the history edge if the
+            // snapshot already contains the move; edge errors are
+            // idempotency, not corruption.
+            "rollback" => match self.rollback(name) {
+                Ok(_) => Ok(()),
+                Err(e) if e.contains("already at") => Ok(()),
+                Err(e) => Err(e),
+            },
+            "rollforward" => match self.rollforward(name) {
+                Ok(_) => Ok(()),
+                Err(e) if e.contains("already at") => Ok(()),
+                Err(e) => Err(e),
+            },
+            "retire" => {
+                // Retiring an already-absent endpoint is idempotent.
+                let _ = self.retire(name);
+                Ok(())
+            }
+            other => Err(format!("unknown endpoint action '{}'", other)),
+        }
+    }
+
+    /// Snapshot shape: a name-ordered array of endpoint objects.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.list().iter().map(Endpoint::to_json).collect())
+    }
+
+    /// Replace the registry's contents from a snapshot array.
+    pub fn restore(&self, j: &Json) -> Result<(), String> {
+        let mut table = BTreeMap::new();
+        for ej in j.as_arr().ok_or("endpoints json must be an array")? {
+            let ep = Endpoint::from_json(ej)?;
+            table.insert(ep.name.clone(), ep);
+        }
+        *self.inner.lock().unwrap() = table;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::json::parse;
+
+    fn oid(s: &str) -> ObjectId {
+        ObjectId(s.to_string())
+    }
+
+    #[test]
+    fn promote_appends_and_activates() {
+        let r = EndpointRegistry::new();
+        let v1 = r.promote("prod", "kim/mnist/1", "mnist_mlp", 100, oid("a"), 10);
+        assert_eq!(v1.version, 1);
+        let v2 = r.promote("prod", "kim/mnist/2", "mnist_mlp", 200, oid("b"), 20);
+        assert_eq!(v2.version, 2);
+        let ep = r.get("prod").unwrap();
+        assert_eq!(ep.versions.len(), 2);
+        assert_eq!(ep.active_version().object, oid("b"));
+        assert_eq!(r.list().len(), 1);
+    }
+
+    #[test]
+    fn rollback_and_rollforward_walk_the_history() {
+        let r = EndpointRegistry::new();
+        r.promote("prod", "s1", "mnist_mlp", 100, oid("a"), 0);
+        r.promote("prod", "s2", "mnist_mlp", 200, oid("b"), 0);
+        let back = r.rollback("prod").unwrap();
+        assert_eq!(back.version, 1);
+        assert!(r.rollback("prod").unwrap_err().contains("oldest"));
+        let fwd = r.rollforward("prod").unwrap();
+        assert_eq!(fwd.version, 2);
+        assert!(r.rollforward("prod").unwrap_err().contains("newest"));
+        assert!(r.rollback("missing").unwrap_err().contains("unknown endpoint"));
+    }
+
+    #[test]
+    fn retire_removes_but_promote_history_pins_everything() {
+        let r = EndpointRegistry::new();
+        r.promote("a", "s1", "mnist_mlp", 1, oid("x"), 0);
+        r.promote("a", "s2", "mnist_mlp", 2, oid("y"), 0);
+        r.promote("b", "s3", "mnist_mlp", 3, oid("z"), 0);
+        let mut pins: Vec<String> = r.pinned_objects().into_iter().map(|o| o.0).collect();
+        pins.sort();
+        assert_eq!(pins, vec!["x", "y", "z"]);
+        r.retire("a").unwrap();
+        assert_eq!(r.pinned_objects().len(), 1);
+        assert!(r.retire("a").is_err());
+        assert_eq!(r.len(), 1);
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let r = EndpointRegistry::new();
+        r.promote("prod", "kim/mnist/1", "mnist_mlp", 100, oid("sha-a"), 5);
+        r.promote("prod", "kim/mnist/2", "mnist_mlp", 200, oid("sha-b"), 9);
+        r.rollback("prod").unwrap();
+        r.promote("canary", "lee/mnist/3", "mnist_mlp", 50, oid("sha-c"), 11);
+        let text = r.to_json().to_string();
+        let restored = EndpointRegistry::new();
+        restored.restore(&parse(&text).unwrap()).unwrap();
+        assert_eq!(restored.list(), r.list());
+        assert_eq!(restored.get("prod").unwrap().active, 0);
+    }
+
+    #[test]
+    fn restore_rejects_malformed_shapes() {
+        let r = EndpointRegistry::new();
+        assert!(r.restore(&parse("{}").unwrap()).is_err());
+        let bad = r#"[{"name":"p","active":3,"versions":[{"version":1,"session":"s","model":"m","step":1,"object":"o","promoted_at_ms":0}]}]"#;
+        assert!(r.restore(&parse(bad).unwrap()).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn apply_event_replays_a_lifecycle() {
+        let r = EndpointRegistry::new();
+        r.apply_event("prod", "promote", "s1", "mnist_mlp", 100, "a", 1).unwrap();
+        r.apply_event("prod", "promote", "s2", "mnist_mlp", 200, "b", 2).unwrap();
+        r.apply_event("prod", "rollback", "", "", 0, "", 3).unwrap();
+        assert_eq!(r.get("prod").unwrap().active_version().version, 1);
+        // Edge-idempotent: replaying a rollback at the oldest version
+        // (already applied via snapshot) is a no-op, not an error.
+        r.apply_event("prod", "rollback", "", "", 0, "", 4).unwrap();
+        r.apply_event("gone", "retire", "", "", 0, "", 5).unwrap();
+        assert!(r.apply_event("prod", "frobnicate", "", "", 0, "", 6).is_err());
+    }
+}

@@ -64,6 +64,10 @@ pub struct TenantQuota {
     pub weight: u32,
     /// Admission tier (see [`PriorityClass`]).
     pub class: PriorityClass,
+    /// Max serving requests per sliding second of virtual time
+    /// (`serve_infer`); 0 means unlimited. Enforced at enqueue, so a
+    /// throttled request never reaches the micro-batcher.
+    pub max_qps: u32,
 }
 
 impl Default for TenantQuota {
@@ -74,6 +78,7 @@ impl Default for TenantQuota {
             gpu_second_budget: 0.0,
             weight: 1,
             class: PriorityClass::Normal,
+            max_qps: 0,
         }
     }
 }
@@ -97,7 +102,13 @@ struct Inner {
     /// Object-store bytes attributed per user, refreshed by each GC
     /// mark pass (checkpoint params + records of the user's sessions).
     storage_bytes: BTreeMap<String, u64>,
+    /// Serving-request timestamps (virtual ms) inside the sliding QPS
+    /// window, per user. Pruned on every [`TenantRegistry::try_request`].
+    requests: BTreeMap<String, Vec<u64>>,
 }
+
+/// Width of the QPS sliding window: one virtual second.
+const QPS_WINDOW_MS: u64 = 1000;
 
 /// Thread-safe quota + occupancy store (see module docs).
 pub struct TenantRegistry {
@@ -113,6 +124,7 @@ impl TenantRegistry {
                 charged: BTreeMap::new(),
                 seen: BTreeSet::new(),
                 storage_bytes: BTreeMap::new(),
+                requests: BTreeMap::new(),
             }),
         }
     }
@@ -184,6 +196,25 @@ impl TenantRegistry {
         self.inner.lock().unwrap().storage_bytes.get(user).copied().unwrap_or(0)
     }
 
+    /// Admit or throttle one serving request from `user` at `now_ms`
+    /// (virtual time). Under the user's `max_qps` (or with no limit)
+    /// the request is counted and admitted; at the limit it is
+    /// rejected with `Err(max_qps)` and *not* counted, so a throttled
+    /// client retrying does not extend its own penalty.
+    pub fn try_request(&self, user: &str, now_ms: u64) -> Result<(), u32> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.seen.insert(user.to_string());
+        let max_qps = inner.quotas.get(user).unwrap_or(&inner.default_quota).max_qps;
+        let window = inner.requests.entry(user.to_string()).or_default();
+        let floor = now_ms.saturating_sub(QPS_WINDOW_MS - 1);
+        window.retain(|&t| t >= floor);
+        if max_qps > 0 && window.len() >= max_qps as usize {
+            return Err(max_qps);
+        }
+        window.push(now_ms);
+        Ok(())
+    }
+
     /// Currently charged `(sessions, gpus)` held by `user`.
     pub fn occupancy(&self, user: &str) -> (usize, usize) {
         let inner = self.inner.lock().unwrap();
@@ -211,6 +242,25 @@ mod tests {
         assert_eq!(q.gpu_second_budget, 0.0);
         assert_eq!(q.weight, 1);
         assert_eq!(q.class, PriorityClass::Normal);
+        assert_eq!(q.max_qps, 0);
+    }
+
+    #[test]
+    fn qps_window_slides_and_rejections_do_not_count() {
+        let r = TenantRegistry::new(TenantQuota::default());
+        r.set_quota("kim", TenantQuota { max_qps: 2, ..TenantQuota::default() });
+        assert_eq!(r.try_request("kim", 100), Ok(()));
+        assert_eq!(r.try_request("kim", 200), Ok(()));
+        assert_eq!(r.try_request("kim", 300), Err(2));
+        // Rejections are not counted: the window still clears when the
+        // *admitted* requests age out, not later.
+        assert_eq!(r.try_request("kim", 1099), Err(2));
+        assert_eq!(r.try_request("kim", 1100), Ok(()));
+        // Unlimited users are never throttled.
+        for i in 0..100 {
+            assert_eq!(r.try_request("lee", i), Ok(()));
+        }
+        assert!(r.users().contains(&"lee".to_string()));
     }
 
     #[test]

@@ -23,6 +23,15 @@
 //!   dispatched as a `tenant_report` query
 //! * `GET /api/v1/durability`    — JSON WAL/snapshot/GC counters
 //!   dispatched as a `durability_status` query
+//! * `GET /api/v1/endpoints`     — JSON serving-endpoint registry
+//!   (active version + promotion history per endpoint) dispatched as
+//!   an `endpoints` query
+//! * `POST /api/v1/endpoints/<name>/infer` — micro-batched inference
+//!   against a promoted endpoint; the body is
+//!   `{"user": "...", "x": [...]}` and the path names the endpoint.
+//!   Dispatched as a `serve_infer` verb — concurrent requests from
+//!   many connections coalesce into shared engine batches on the
+//!   platform thread
 //! * `GET /api/v1/board?dataset=<ds>&user=<u>&limit=<n>` — leaderboard
 //!   rows, optionally sliced to one user (global ranks kept),
 //!   dispatched as a `board` query
@@ -222,6 +231,30 @@ fn handle_api_post(state: &WebState, verb: &str, body: &str) -> Response {
     let Some(api) = &state.api else {
         return service_unavailable();
     };
+    // `POST /api/v1/endpoints/<name>/infer`: the serving shorthand —
+    // the path names the endpoint, the body carries `user` and `x`,
+    // and the whole thing dispatches as a `serve_infer` verb.
+    if let Some(name) = verb.strip_prefix("endpoints/").and_then(|r| r.strip_suffix("/infer")) {
+        let parsed = if body.trim().is_empty() {
+            Ok(Json::obj())
+        } else {
+            crate::util::json::parse(body)
+        };
+        return match parsed {
+            Err(e) => {
+                api_response(ApiResponse::Error {
+                    error: ApiError::invalid(format!("request body: {}", e)),
+                })
+            }
+            Ok(mut args) => {
+                args.set("endpoint", name.into());
+                match ApiRequest::from_verb_args("serve_infer", &args) {
+                    Ok(req) => api_response(api.call(req)),
+                    Err(error) => api_response(ApiResponse::Error { error }),
+                }
+            }
+        };
+    }
     let resp = if body.trim().is_empty() {
         match ApiRequest::from_verb_args(verb, &Json::obj()) {
             Ok(req) => api.call(req),
@@ -329,6 +362,15 @@ fn service_status_json(state: &WebState) -> Response {
         return service_unavailable();
     };
     api_response(api.call(ApiRequest::ServiceStatus))
+}
+
+/// `GET /api/v1/endpoints`: the serving-endpoint registry (active
+/// version + promotion history per endpoint) as a read route.
+fn endpoints_json(state: &WebState) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::Endpoints))
 }
 
 /// `GET /api/v1/board?dataset=&user=&limit=`: the leaderboard query as
@@ -461,6 +503,7 @@ fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
             "tenants" => tenants_json(state),
             "durability" => durability_json(state),
             "service" => service_status_json(state),
+            "endpoints" => endpoints_json(state),
             "board" => board_query_json(state, query),
             verb if ALL_VERBS.contains(&verb) => Response::method_not_allowed("POST"),
             _ => unknown_route("GET", path),
@@ -1241,6 +1284,8 @@ mod tests {
         assert_eq!(handle(&s, "GET", "/api/v1/tenants", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/durability", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/service", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/endpoints", "").status, 503);
+        assert_eq!(handle(&s, "POST", "/api/v1/endpoints/x/infer", "{}").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/sessions", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/sessions", "").status, 503);
@@ -1294,6 +1339,52 @@ mod tests {
         // dataset is rejected by the wire layer.
         assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist&limit=soon", "").status, 400);
         assert_eq!(handle(&s, "GET", "/api/v1/board?user=kim", "").status, 400);
+    }
+
+    #[test]
+    fn endpoint_routes_dispatch_serving_verbs() {
+        let api = stub_api(|req| match req {
+            ApiRequest::Endpoints => ApiResponse::Endpoints { endpoints: vec![] },
+            ApiRequest::ServeInfer { endpoint, user, x } => {
+                assert_eq!(endpoint, "mnist-prod");
+                assert_eq!(user, "kim");
+                assert_eq!(x, &[0.1, 0.2, 0.3]);
+                ApiResponse::Served {
+                    endpoint: endpoint.clone(),
+                    version: 2,
+                    batch: 1,
+                    probs: vec![0.5, 0.5],
+                }
+            }
+            _ => panic!("unexpected dispatch"),
+        });
+        let mut s = state();
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/endpoints", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("endpoints"));
+
+        // The path names the endpoint; the body carries user + input.
+        let r = handle(
+            &s,
+            "POST",
+            "/api/v1/endpoints/mnist-prod/infer",
+            r#"{"user":"kim","x":[0.1,0.2,0.3]}"#,
+        );
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("served"));
+        assert_eq!(j.at(&["data", "version"]).unwrap().as_i64(), Some(2));
+        assert_eq!(j.at(&["data", "batch"]).unwrap().as_i64(), Some(1));
+
+        // A body missing `x` is rejected by the wire layer before any
+        // dispatch reaches the stub (which would panic on it).
+        let r = handle(&s, "POST", "/api/v1/endpoints/mnist-prod/infer", r#"{"user":"kim"}"#);
+        assert_eq!(r.status, 400);
+        // GET on the infer route advertises POST.
+        let r = handle(&s, "GET", "/api/v1/endpoints/mnist-prod/infer", "");
+        assert_eq!(r.status, 404, "unknown GET route keeps the uniform envelope");
     }
 
     #[test]

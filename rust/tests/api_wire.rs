@@ -4,9 +4,10 @@
 //! `PlatformService::dispatch`.
 
 use nsml::api::{
-    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, ExecutorStats,
-    NodeStatusView, NsmlPlatform, PlatformConfig, PlatformService, RunParams, ServiceStatusView,
-    SessionView, TenantView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS,
+    ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, EndpointVersionView,
+    EndpointView, ErrorCode, ExecutorStats, NodeStatusView, NsmlPlatform, PlatformConfig,
+    PlatformService, RunParams, ServiceStatusView, SessionView, TenantView, TrialSpec,
+    WorkerStatView, ALL_KINDS, ALL_VERBS,
 };
 use nsml::session::SessionState;
 use nsml::util::json::parse;
@@ -49,6 +50,7 @@ fn sample_requests() -> Vec<ApiRequest> {
             gpu_second_budget: Some(120.5),
             weight: Some(3),
             class: Some("high".into()),
+            max_qps: Some(25),
         },
         ApiRequest::SetQuota {
             user: "lee".into(),
@@ -57,6 +59,7 @@ fn sample_requests() -> Vec<ApiRequest> {
             gpu_second_budget: None,
             weight: None,
             class: None,
+            max_qps: None,
         },
         ApiRequest::DurabilityStatus,
         ApiRequest::EventsSince {
@@ -74,7 +77,49 @@ fn sample_requests() -> Vec<ApiRequest> {
                 TrialSpec { lr: 0.001, seed: 1, total_steps: 40, gpus: 2 },
             ],
         },
+        ApiRequest::Promote {
+            endpoint: "mnist-prod".into(),
+            action: "promote".into(),
+            session: Some("kim/mnist/1".into()),
+        },
+        ApiRequest::Promote {
+            endpoint: "mnist-prod".into(),
+            action: "rollback".into(),
+            session: None,
+        },
+        ApiRequest::Endpoints,
+        ApiRequest::ServeInfer {
+            endpoint: "mnist-prod".into(),
+            user: "kim".into(),
+            x: vec![0.0, 0.5],
+        },
     ]
+}
+
+fn sample_endpoint() -> EndpointView {
+    EndpointView {
+        name: "mnist-prod".into(),
+        active_version: 2,
+        model: "mnist_mlp".into(),
+        session: "kim/mnist/2".into(),
+        step: 120,
+        versions: vec![
+            EndpointVersionView {
+                version: 1,
+                session: "kim/mnist/1".into(),
+                model: "mnist_mlp".into(),
+                step: 100,
+                promoted_at_ms: 5_000,
+            },
+            EndpointVersionView {
+                version: 2,
+                session: "kim/mnist/2".into(),
+                model: "mnist_mlp".into(),
+                step: 120,
+                promoted_at_ms: 9_000,
+            },
+        ],
+    }
 }
 
 fn sample_view() -> SessionView {
@@ -245,6 +290,15 @@ fn sample_responses() -> Vec<ApiResponse> {
                 progressed_total: 980,
                 dispatches: 17,
             },
+        },
+        ApiResponse::Endpoint { endpoint: sample_endpoint() },
+        ApiResponse::Endpoints { endpoints: vec![sample_endpoint()] },
+        ApiResponse::Endpoints { endpoints: vec![] },
+        ApiResponse::Served {
+            endpoint: "mnist-prod".into(),
+            version: 2,
+            batch: 8,
+            probs: vec![0.25, 0.75],
         },
         ApiResponse::Error {
             error: ApiError::failed("session kim/mnist/1 is not active").with_session("kim/mnist/1"),
@@ -446,5 +500,85 @@ fn trial_batch_places_and_completes_all() {
     match s.dispatch(ApiRequest::list_sessions()) {
         ApiResponse::Sessions { sessions } => assert_eq!(sessions.len(), before),
         other => panic!("{:?}", other),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Infer request validation (shape vs data vs compiled model input)
+// ---------------------------------------------------------------------
+
+#[test]
+fn infer_rejects_mismatched_shapes_before_the_engine() {
+    let Some(s) = service() else { return };
+    let mut params = RunParams::new("shape", "mnist");
+    params.total_steps = 8;
+    params.checkpoint_every = 4;
+    params.eval_every = 4;
+    let id = match s.dispatch(ApiRequest::Run(params)) {
+        ApiResponse::Submitted { session } => session,
+        other => panic!("run: {:?}", other),
+    };
+    match s.dispatch(ApiRequest::RunToCompletion { chunk: 8, max_rounds: 10_000 }) {
+        ApiResponse::Ack { .. } => {}
+        other => panic!("run_to_completion: {:?}", other),
+    }
+
+    // Shape product disagreeing with the flat data length: the error
+    // names both sizes so the client can see what to fix.
+    let resp = s.dispatch(ApiRequest::Infer {
+        session: id.clone(),
+        x: vec![0.0; 100],
+        shape: vec![64, 144],
+    });
+    match resp {
+        ApiResponse::Error { error } => {
+            assert_eq!(error.code, ErrorCode::InvalidArgument);
+            assert!(
+                error.message.contains("9216") && error.message.contains("100"),
+                "must name both sizes: {}",
+                error.message
+            );
+        }
+        other => panic!("count mismatch: {:?}", other),
+    }
+
+    // A self-consistent request whose shape is not the compiled
+    // model's input must be a client error too, never an engine crash.
+    let resp = s.dispatch(ApiRequest::Infer {
+        session: id.clone(),
+        x: vec![0.0; 32 * 144],
+        shape: vec![32, 144],
+    });
+    match resp {
+        ApiResponse::Error { error } => {
+            assert_eq!(error.code, ErrorCode::InvalidArgument);
+            assert!(
+                error.message.contains("[32, 144]") && error.message.contains("[64, 144]"),
+                "must name both shapes: {}",
+                error.message
+            );
+        }
+        other => panic!("shape mismatch: {:?}", other),
+    }
+
+    // Degenerate shapes (empty, zero or negative dims) are invalid
+    // regardless of the data length.
+    for shape in [vec![], vec![0, 144], vec![-64, -144]] {
+        let resp = s.dispatch(ApiRequest::Infer { session: id.clone(), x: vec![0.0; 4], shape });
+        match resp {
+            ApiResponse::Error { error } => assert_eq!(error.code, ErrorCode::InvalidArgument),
+            other => panic!("degenerate shape: {:?}", other),
+        }
+    }
+
+    // The correctly-shaped request still works after all that.
+    let resp = s.dispatch(ApiRequest::Infer {
+        session: id,
+        x: vec![0.5; 64 * 144],
+        shape: vec![64, 144],
+    });
+    match resp {
+        ApiResponse::Probs { probs } => assert_eq!(probs.len(), 640),
+        other => panic!("valid infer: {:?}", other),
     }
 }

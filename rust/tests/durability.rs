@@ -9,6 +9,7 @@ use nsml::durability::Wal;
 use nsml::session::SessionState;
 use std::io::Write;
 use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
 
 fn artifacts() -> Option<PathBuf> {
     let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
@@ -243,6 +244,85 @@ fn gc_sweeps_orphans_but_never_a_live_checkpoint_chain() {
     let again = p.gc().unwrap();
     assert_eq!(again.swept_objects, 0, "{:?}", again);
     assert_eq!(again.live_objects, report.live_objects);
+
+    let _ = std::fs::remove_dir_all(&state);
+}
+
+/// Serve one row through the facade's micro-batcher, synchronously.
+fn serve_sync(p: &NsmlPlatform, endpoint: &str, x: Vec<f32>) -> Vec<f32> {
+    let slot = Arc::new(Mutex::new(None));
+    let out = slot.clone();
+    p.serve_enqueue(
+        endpoint,
+        "kim",
+        x,
+        Box::new(move |r| {
+            *out.lock().unwrap() = Some(r.expect("serve failed"));
+        }),
+    )
+    .unwrap();
+    p.pump_serving(true);
+    let row = slot.lock().unwrap().take().expect("reply fired at flush");
+    row.probs
+}
+
+/// Serving endpoints are durable: a promote → promote → rollback
+/// history that only ever reached the WAL (the single clean snapshot
+/// predates it) comes back after a dirty exit — active cursor and full
+/// version history — and the recovered endpoint serves bitwise the
+/// same output. GC, before and after the crash, never sweeps a
+/// checkpoint that any endpoint version pins: rollback targets stay
+/// loadable, not just the active version.
+#[test]
+fn endpoints_survive_crash_and_gc_never_sweeps_pinned_params() {
+    let state = tmp_state("endpoints");
+    let Some(p) = platform(&state) else { return };
+    let s1 = p.run("kim", "mnist", quick(16, 7)).unwrap();
+    let s2 = p.run("kim", "mnist", quick(16, 8)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    p.save_state().unwrap(); // baseline snapshot: no endpoints yet
+
+    // Everything serving-related reaches the next process via the WAL.
+    let v1 = p.promote_endpoint("prod", &s1).unwrap();
+    let v2 = p.promote_endpoint("prod", &s2).unwrap();
+    p.rollback_endpoint("prod").unwrap(); // active: v1, v2 kept in history
+    let x: Vec<f32> = (0..144).map(|i| (i % 7) as f32 / 7.0).collect();
+    let pre = serve_sync(&p, "prod", x.clone());
+    assert_eq!(pre.len(), 10);
+
+    // Pre-crash sweep: orphans go, both pinned versions stay.
+    let orphan = p.objects.put(b"orphan-before-the-crash").unwrap();
+    p.gc().unwrap();
+    assert!(!p.objects.has(&orphan));
+    assert!(p.objects.has(&v1.object) && p.objects.has(&v2.object));
+
+    drop(p); // crash: no save_state
+
+    let p2 = platform(&state).unwrap();
+    let ep = p2.endpoints.get("prod").expect("endpoint replayed from the WAL");
+    assert_eq!(ep.versions.len(), 2, "full history recovered");
+    assert_eq!(ep.active_version().version, 1, "rollback cursor recovered");
+    assert_eq!(ep.active_version().session, s1);
+    assert_eq!(ep.versions[1].session, s2);
+    assert_eq!(serve_sync(&p2, "prod", x.clone()), pre, "recovered endpoint serves the same bits");
+
+    // Post-crash sweep: the non-active v2 is exactly the object a
+    // liveness-only GC would lose — it must survive for rollforward.
+    let orphan = p2.objects.put(b"orphan-after-the-crash").unwrap();
+    p2.gc().unwrap();
+    assert!(!p2.objects.has(&orphan));
+    assert!(p2.objects.has(&v1.object), "active version pinned");
+    assert!(p2.objects.has(&v2.object), "rollback target pinned");
+    let fwd = p2.rollforward_endpoint("prod").unwrap();
+    assert_eq!(fwd.version, 2);
+    assert_eq!(serve_sync(&p2, "prod", x.clone()).len(), 10, "v2 params still load after GC");
+
+    // The rollforward was WAL-only too; a third boot agrees.
+    drop(p2);
+    let p3 = platform(&state).unwrap();
+    let ep = p3.endpoints.get("prod").unwrap();
+    assert_eq!(ep.active_version().version, 2);
+    assert_eq!(ep.versions.len(), 2);
 
     let _ = std::fs::remove_dir_all(&state);
 }

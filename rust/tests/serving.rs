@@ -1,0 +1,496 @@
+//! Gating suite for the inference-serving subsystem: micro-batched
+//! execution is bitwise-identical to serving each request alone, the
+//! endpoint lifecycle (promote → rollback → rollforward → retire)
+//! holds end to end through dispatch, concurrent daemon clients are
+//! all answered with their own results, QPS quotas reject with
+//! machine-readable envelopes, and the batcher's flush policy obeys
+//! its invariants under arbitrary arrival patterns.
+
+use nsml::api::{
+    ApiRequest, ApiResponse, DaemonOpts, ErrorCode, NsmlPlatform, PlatformConfig, PlatformService,
+    RunOpts,
+};
+use nsml::serving::{PendingInfer, ServingQueue};
+use nsml::tenancy::TenantQuota;
+use std::collections::HashMap;
+use std::path::PathBuf;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// One `mnist_mlp` request row (`infer_x_shape[1..]` = 144 values).
+const ROW: usize = 144;
+
+fn platform() -> Option<NsmlPlatform> {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return None;
+    }
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = dir;
+    Some(NsmlPlatform::new(cfg).unwrap())
+}
+
+fn quick(steps: u64, seed: u64) -> RunOpts {
+    RunOpts {
+        total_steps: steps,
+        eval_every: (steps / 2).max(1),
+        checkpoint_every: (steps / 2).max(1),
+        seed,
+        ..Default::default()
+    }
+}
+
+/// Train one quick session and wrap the platform in a service.
+fn trained_service(user: &str) -> Option<(PlatformService, String)> {
+    let p = platform()?;
+    let id = p.run(user, "mnist", quick(16, 0)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    Some((PlatformService::new(p), id))
+}
+
+/// A deterministic, per-seed-distinct input row.
+fn row(seed: usize) -> Vec<f32> {
+    (0..ROW).map(|i| ((seed * 31 + i * 7) % 97) as f32 / 97.0).collect()
+}
+
+fn promote(s: &PlatformService, endpoint: &str, session: &str) -> u64 {
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: endpoint.into(),
+        action: "promote".into(),
+        session: Some(session.into()),
+    }) {
+        ApiResponse::Endpoint { endpoint } => endpoint.active_version,
+        other => panic!("promote: {:?}", other),
+    }
+}
+
+fn serve_one(s: &PlatformService, endpoint: &str, user: &str, x: Vec<f32>) -> (u64, u64, Vec<f32>) {
+    match s.dispatch(ApiRequest::ServeInfer { endpoint: endpoint.into(), user: user.into(), x }) {
+        ApiResponse::Served { version, batch, probs, .. } => (version, batch, probs),
+        other => panic!("serve_infer: {:?}", other),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batched == sequential, bit for bit
+// ---------------------------------------------------------------------
+
+#[test]
+fn batched_serving_is_bitwise_identical_to_sequential() {
+    let Some((s, id)) = trained_service("serve") else { return };
+    promote(&s, "prod", &id);
+
+    let rows: Vec<Vec<f32>> = (0..48).map(row).collect();
+
+    // Sequential: one dispatch per request, each executing alone.
+    let mut sequential = Vec::new();
+    for r in &rows {
+        let (version, batch, probs) = serve_one(&s, "prod", "kim", r.clone());
+        assert_eq!(version, 1);
+        assert_eq!(batch, 1, "a lone request serves in a batch of one");
+        assert_eq!(probs.len(), 10, "one output row per request");
+        sequential.push(probs);
+    }
+
+    // Batched: queue all 48 on the facade, flush once — a single
+    // fixed-shape engine execution answers everyone.
+    let results: Arc<Mutex<Vec<Option<(Vec<f32>, usize)>>>> =
+        Arc::new(Mutex::new(vec![None; rows.len()]));
+    let p = s.platform();
+    for (i, r) in rows.iter().enumerate() {
+        let slot = results.clone();
+        p.serve_enqueue(
+            "prod",
+            "kim",
+            r.clone(),
+            Box::new(move |res| {
+                let row = res.expect("batched serve failed");
+                slot.lock().unwrap()[i] = Some((row.probs, row.batch));
+            }),
+        )
+        .unwrap();
+    }
+    assert_eq!(p.serving_stats().depth, rows.len());
+    p.pump_serving(true);
+    assert_eq!(p.serving_stats().depth, 0, "flush answers everything");
+
+    let batched = results.lock().unwrap();
+    for (i, probs) in sequential.iter().enumerate() {
+        let (b, size) = batched[i].as_ref().expect("request answered");
+        assert_eq!(*size, rows.len(), "all 48 shared one batch");
+        assert_eq!(b, probs, "row {}: batched output must be bitwise identical", i);
+    }
+
+    // The latency/batch telemetry event fired for the shared batch.
+    let batch_events = p.events.bus().read_since(
+        0,
+        0,
+        &nsml::events::EventFilter { kind: Some("infer".into()), ..Default::default() },
+    );
+    assert!(
+        batch_events.events.iter().any(|e| match &e.kind {
+            nsml::events::EventKind::InferServed { batch, .. } => *batch == rows.len() as u64,
+            _ => false,
+        }),
+        "expected an InferServed event for the 48-row batch"
+    );
+}
+
+// ---------------------------------------------------------------------
+// Endpoint lifecycle through dispatch
+// ---------------------------------------------------------------------
+
+#[test]
+fn promote_roll_lifecycle_and_errors() {
+    let Some(p) = platform() else { return };
+    let s1 = p.run("kim", "mnist", quick(16, 1)).unwrap();
+    let s2 = p.run("kim", "mnist", quick(16, 2)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    let s = PlatformService::new(p);
+
+    assert_eq!(promote(&s, "prod", &s1), 1);
+    assert_eq!(promote(&s, "prod", &s2), 2);
+
+    // The registry lists one endpoint: active v2, full history kept.
+    match s.dispatch(ApiRequest::Endpoints) {
+        ApiResponse::Endpoints { endpoints } => {
+            assert_eq!(endpoints.len(), 1);
+            assert_eq!(endpoints[0].name, "prod");
+            assert_eq!(endpoints[0].active_version, 2);
+            assert_eq!(endpoints[0].session, s2);
+            assert_eq!(endpoints[0].versions.len(), 2);
+        }
+        other => panic!("endpoints: {:?}", other),
+    }
+
+    // Serving attributes the active version.
+    let (v, _, probs_v2) = serve_one(&s, "prod", "kim", row(0));
+    assert_eq!(v, 2);
+
+    // Rollback: v1 becomes active and serving follows the cursor.
+    let rolled = match s.dispatch(ApiRequest::Promote {
+        endpoint: "prod".into(),
+        action: "rollback".into(),
+        session: None,
+    }) {
+        ApiResponse::Endpoint { endpoint } => endpoint,
+        other => panic!("rollback: {:?}", other),
+    };
+    assert_eq!(rolled.active_version, 1);
+    assert_eq!(rolled.session, s1);
+    let (v, _, _) = serve_one(&s, "prod", "kim", row(0));
+    assert_eq!(v, 1);
+
+    // Rolling past the oldest version is a precondition failure.
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "prod".into(),
+        action: "rollback".into(),
+        session: None,
+    }) {
+        ApiResponse::Error { error } => {
+            assert_eq!(error.code, ErrorCode::FailedPrecondition, "{}", error.message)
+        }
+        other => panic!("rollback past oldest: {:?}", other),
+    }
+
+    // Rollforward returns to v2 — and v2 serves the same bits as
+    // before the roll trip.
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "prod".into(),
+        action: "rollforward".into(),
+        session: None,
+    }) {
+        ApiResponse::Endpoint { endpoint } => assert_eq!(endpoint.active_version, 2),
+        other => panic!("rollforward: {:?}", other),
+    }
+    let (v, _, probs_again) = serve_one(&s, "prod", "kim", row(0));
+    assert_eq!(v, 2);
+    assert_eq!(probs_again, probs_v2, "same version must serve the same output");
+
+    // Unknown endpoint → 404-class errors for both control and data paths.
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "nope".into(),
+        action: "rollback".into(),
+        session: None,
+    }) {
+        ApiResponse::Error { error } => assert_eq!(error.code, ErrorCode::NotFound),
+        other => panic!("{:?}", other),
+    }
+    match s.dispatch(ApiRequest::ServeInfer {
+        endpoint: "nope".into(),
+        user: "kim".into(),
+        x: row(0),
+    }) {
+        ApiResponse::Error { error } => assert_eq!(error.code, ErrorCode::NotFound),
+        other => panic!("{:?}", other),
+    }
+
+    // Wrong-length input is rejected before the engine, naming both sizes.
+    match s.dispatch(ApiRequest::ServeInfer {
+        endpoint: "prod".into(),
+        user: "kim".into(),
+        x: vec![0.0; 3],
+    }) {
+        ApiResponse::Error { error } => {
+            assert_eq!(error.code, ErrorCode::InvalidArgument);
+            assert!(
+                error.message.contains('3') && error.message.contains("144"),
+                "must name both sizes: {}",
+                error.message
+            );
+        }
+        other => panic!("{:?}", other),
+    }
+
+    // Promoting a session that has no checkpoints is a precondition
+    // failure, not a served endpoint.
+    let fresh = s.platform().run("kim", "mnist", quick(16, 3)).unwrap();
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "early".into(),
+        action: "promote".into(),
+        session: Some(fresh.clone()),
+    }) {
+        ApiResponse::Error { error } => {
+            assert_eq!(error.code, ErrorCode::FailedPrecondition, "{}", error.message)
+        }
+        other => panic!("promote without checkpoint: {:?}", other),
+    }
+
+    // Retire: the endpoint disappears and serving 404s afterward.
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "prod".into(),
+        action: "retire".into(),
+        session: None,
+    }) {
+        ApiResponse::Ack { verb, .. } => assert_eq!(verb, "retire"),
+        other => panic!("retire: {:?}", other),
+    }
+    match s.dispatch(ApiRequest::Endpoints) {
+        ApiResponse::Endpoints { endpoints } => assert!(endpoints.is_empty()),
+        other => panic!("{:?}", other),
+    }
+    match s.dispatch(ApiRequest::ServeInfer {
+        endpoint: "prod".into(),
+        user: "kim".into(),
+        x: row(0),
+    }) {
+        ApiResponse::Error { error } => assert_eq!(error.code, ErrorCode::NotFound),
+        other => panic!("serve after retire: {:?}", other),
+    }
+}
+
+// ---------------------------------------------------------------------
+// Concurrent clients through the daemon
+// ---------------------------------------------------------------------
+
+#[test]
+fn concurrent_daemon_clients_all_get_their_own_answer() {
+    let Some((s, id)) = trained_service("conc") else { return };
+    promote(&s, "prod", &id);
+
+    // Expected outputs computed on the sync path before the daemon
+    // starts (the endpoint's checkpoint is immutable, so training more
+    // sessions later cannot change them).
+    const CLIENTS: usize = 12;
+    let expected: Vec<Vec<f32>> =
+        (0..CLIENTS).map(|i| serve_one(&s, "prod", "kim", row(i)).2).collect();
+
+    // N client threads dispatch concurrently; the daemon runs on this
+    // thread (the platform owner) and exits when every handle drops.
+    let (handle, rx) = nsml::api::service_channel();
+    let clients: Vec<_> = (0..CLIENTS)
+        .map(|i| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                let resp = h.call(ApiRequest::ServeInfer {
+                    endpoint: "prod".into(),
+                    user: format!("user{}", i % 3),
+                    x: row(i),
+                });
+                (i, resp)
+            })
+        })
+        .collect();
+    // One more client keeps the daemon's *active* branch exercised:
+    // training runs in the background while requests serve.
+    let trainer = {
+        let h = handle.clone();
+        std::thread::spawn(move || {
+            let mut params = nsml::api::RunParams::new("bg", "mnist");
+            params.total_steps = 40;
+            params.checkpoint_every = 20;
+            params.eval_every = 10;
+            h.call(ApiRequest::Run(params))
+        })
+    };
+    drop(handle);
+    let opts = DaemonOpts { idle_wait: Duration::from_millis(2), ..DaemonOpts::default() };
+    s.run_daemon(&rx, &opts).unwrap();
+
+    match trainer.join().unwrap() {
+        ApiResponse::Submitted { .. } => {}
+        other => panic!("background run: {:?}", other),
+    }
+    let mut answered = 0;
+    for c in clients {
+        let (i, resp) = c.join().unwrap();
+        match resp {
+            ApiResponse::Served { endpoint, version, batch, probs } => {
+                assert_eq!(endpoint, "prod");
+                assert_eq!(version, 1);
+                assert!(batch >= 1, "batch attribution present");
+                assert_eq!(probs, expected[i], "client {} got someone else's answer", i);
+                answered += 1;
+            }
+            other => panic!("client {}: {:?}", i, other),
+        }
+    }
+    assert_eq!(answered, CLIENTS, "every client answered exactly once");
+    // Nothing left pending; the queue counted every request.
+    let stats = s.platform().serving_stats();
+    assert_eq!(stats.depth, 0);
+    assert_eq!(stats.requests, (CLIENTS * 2) as u64);
+}
+
+// ---------------------------------------------------------------------
+// Per-tenant QPS quotas
+// ---------------------------------------------------------------------
+
+#[test]
+fn qps_quota_rejects_with_machine_readable_envelope() {
+    let Some((s, id)) = trained_service("qps") else { return };
+    promote(&s, "prod", &id);
+    s.platform()
+        .tenancy
+        .registry
+        .set_quota("throttled", TenantQuota { max_qps: 2, ..TenantQuota::default() });
+
+    // Two requests inside one virtual second pass; the third bounces.
+    for _ in 0..2 {
+        let (_, _, probs) = serve_one(&s, "prod", "throttled", row(1));
+        assert_eq!(probs.len(), 10);
+    }
+    let resp = s.dispatch(ApiRequest::ServeInfer {
+        endpoint: "prod".into(),
+        user: "throttled".into(),
+        x: row(1),
+    });
+    let error = match resp {
+        ApiResponse::Error { error } => error,
+        other => panic!("expected quota rejection, got {:?}", other),
+    };
+    assert_eq!(error.code, ErrorCode::FailedPrecondition);
+    assert!(
+        error.message.contains("throttled") && error.message.contains('2'),
+        "rejection names the user and the limit: {}",
+        error.message
+    );
+    // The envelope is machine-readable on the wire.
+    let wire = ApiResponse::Error { error }.to_json().to_string();
+    let j = nsml::util::json::parse(&wire).unwrap();
+    assert_eq!(j.get("kind").unwrap().as_str(), Some("error"));
+    assert_eq!(
+        j.at(&["data", "error", "code"]).unwrap().as_str(),
+        Some("failed_precondition"),
+        "{}",
+        wire
+    );
+
+    // Other tenants are unaffected.
+    let (_, _, probs) = serve_one(&s, "prod", "someone-else", row(2));
+    assert_eq!(probs.len(), 10);
+
+    // Rejections are not counted against the window: one virtual
+    // second later the throttled user has a full budget again.
+    s.platform().sim.advance(1_000);
+    for _ in 0..2 {
+        let (_, _, probs) = serve_one(&s, "prod", "throttled", row(1));
+        assert_eq!(probs.len(), 10);
+    }
+}
+
+// ---------------------------------------------------------------------
+// Batcher flush-policy invariants (property test)
+// ---------------------------------------------------------------------
+
+#[test]
+fn batcher_invariants_hold_under_arbitrary_arrivals() {
+    // Deterministic LCG arrivals over 8 (max_batch, max_wait) shapes;
+    // drive ticks advance virtual time 10 ms like the daemon loop.
+    for seed in 0..8u64 {
+        let max_batch = 1 + (seed as usize % 7);
+        let max_wait = 10 * (1 + seed % 4);
+        let q = ServingQueue::new(max_batch, max_wait);
+        let mut state = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as usize
+        };
+
+        fn check_batch(
+            seed: u64,
+            max_batch: usize,
+            max_wait: u64,
+            batch: Vec<PendingInfer>,
+            now: u64,
+            delivered: &mut HashMap<u64, u64>,
+            forced: bool,
+        ) {
+            let n = batch.len();
+            assert!(n <= max_batch, "seed {}: batch of {} > {}", seed, n, max_batch);
+            for req in batch {
+                let id = req.x[0] as u64;
+                assert!(
+                    delivered.insert(id, now).is_none(),
+                    "seed {}: request {} delivered twice",
+                    seed,
+                    id
+                );
+                if !forced {
+                    assert!(
+                        now - req.enqueued_at_ms <= max_wait,
+                        "seed {}: request {} waited {} ms past enqueue (max_wait {})",
+                        seed,
+                        id,
+                        now - req.enqueued_at_ms,
+                        max_wait
+                    );
+                }
+            }
+        }
+
+        let mut sent: u64 = 0;
+        let mut delivered: HashMap<u64, u64> = HashMap::new();
+        let mut now = 0u64;
+        for tick in 0..200u64 {
+            now = tick * 10;
+            for _ in 0..next() % 4 {
+                let ep = if next() % 2 == 0 { "a" } else { "b" };
+                let id = sent;
+                sent += 1;
+                q.enqueue(
+                    ep,
+                    PendingInfer {
+                        user: "u".into(),
+                        x: vec![id as f32],
+                        enqueued_at_ms: now,
+                        reply: Box::new(|_| {}),
+                    },
+                );
+            }
+            for (_, batch) in q.take_due(now, false) {
+                check_batch(seed, max_batch, max_wait, batch, now, &mut delivered, false);
+            }
+        }
+        // Final forced flush: whatever still waits leaves now, still in
+        // batch-sized chunks.
+        for (_, batch) in q.take_due(now, true) {
+            check_batch(seed, max_batch, max_wait, batch, now, &mut delivered, true);
+        }
+        let answered = delivered.len() as u64;
+        assert_eq!(answered, sent, "seed {}: every request answered exactly once", seed);
+        assert_eq!(q.depth(), 0);
+        assert_eq!(q.stats().requests, sent);
+    }
+}

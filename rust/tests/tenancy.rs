@@ -255,6 +255,7 @@ fn quota_verbs_round_trip_through_dispatch() {
         gpu_second_budget: Some(9.5),
         weight: Some(3),
         class: Some("high".into()),
+        max_qps: Some(50),
     });
     assert!(matches!(resp, ApiResponse::Ack { .. }), "{:?}", resp);
     let tenants = match s.dispatch(ApiRequest::TenantReport) {
@@ -276,6 +277,7 @@ fn quota_verbs_round_trip_through_dispatch() {
         gpu_second_budget: None,
         weight: None,
         class: None,
+        max_qps: None,
     });
     assert!(matches!(resp, ApiResponse::Ack { .. }), "{:?}", resp);
     let q = s.platform().tenancy.registry.quota_of("kim");
@@ -291,6 +293,7 @@ fn quota_verbs_round_trip_through_dispatch() {
             gpu_second_budget: None,
             weight: None,
             class: Some("frobnicate".into()),
+            max_qps: None,
         },
         ApiRequest::SetQuota {
             user: String::new(),
@@ -299,6 +302,7 @@ fn quota_verbs_round_trip_through_dispatch() {
             gpu_second_budget: None,
             weight: None,
             class: None,
+            max_qps: None,
         },
     ] {
         match s.dispatch(bad) {

@@ -42,6 +42,12 @@ echo "== serve smoke: nsml serve on an ephemeral port =="
 if [ -f artifacts/manifest.json ] && [ -x target/release/nsml ]; then
     tmp="$(mktemp -d)"
     trap 'rm -rf "$tmp"' EXIT
+    # Seed the state dir with a trained session and promote its best
+    # checkpoint to a serving endpoint before the daemon starts.
+    sid="$(target/release/nsml run main.py -d mnist -u kim --steps 16 --quiet \
+        --state "$tmp/state" | sed -n 's/^session: \([^ ]*\).*/\1/p')"
+    [ -n "$sid" ] || { echo "nsml run printed no session id"; exit 1; }
+    target/release/nsml promote prod "$sid" --state "$tmp/state"
     # --for-ms bounds the daemon: the service exits 0 on its own after
     # the deadline (a clean, state-saving shutdown — no kill needed).
     target/release/nsml serve --port 0 --for-ms 6000 \
@@ -60,6 +66,12 @@ if [ -f artifacts/manifest.json ] && [ -x target/release/nsml ]; then
     curl -s -i -m 2 "http://127.0.0.1:$port/api/v1/events/stream" \
         > "$tmp/sse.out" 2>/dev/null || true
     grep -q "text/event-stream" "$tmp/sse.out"
+    # Serving smoke: the promoted endpoint is listed and answers one
+    # micro-batched inference through the daemon.
+    curl -sf "http://127.0.0.1:$port/api/v1/endpoints" | grep -q '"kind":"endpoints"'
+    x="$(seq 144 | awk '{printf "%s0.5", (NR>1?",":"")}')"
+    curl -sf -X POST "http://127.0.0.1:$port/api/v1/endpoints/prod/infer" \
+        -d "{\"user\":\"kim\",\"x\":[$x]}" | grep -q '"kind":"served"'
     wait "$serve_pid"
     echo "serve smoke OK (port $port)"
 else
