@@ -1,13 +1,25 @@
-//! Serving throughput: the micro-batcher vs one-request-per-execution.
+//! Serving throughput: autoscaled executor-pool replicas vs the
+//! platform thread, and the micro-batcher vs one-request-per-execution.
 //!
-//! Two identically configured platforms — one with `[serving]
-//! max_batch = 64` (the default), one pinned to `max_batch = 1` — each
-//! train a session, promote it to an endpoint, and then serve 16
-//! concurrent daemon clients while a background training run keeps the
-//! drive loop busy (the realistic case: serving competes with
-//! training for the loop). The acceptance gate is batched wall-clock
-//! ≥ 2× better than unbatched at 16 clients, with a bounded p99.
+//! Four configurations of the same workload — concurrent daemon
+//! clients serving against endpoint "prod" while a background training
+//! run keeps the drive loop busy (the realistic case: serving competes
+//! with training for the loop):
+//!
+//! * **ramp** — autoscaling on (`max_replicas = 4`): 8 clients, then
+//!   16 against the *same* platform. The load ramp must hold p99
+//!   within 1.5× of the low-QPS phase, and the replica set must be
+//!   observed scaling up under load and back down once idle.
+//! * **platform-thread baseline** — `max_replicas = 0` disables the
+//!   serve lane, so every batch executes inline on the single
+//!   platform-owning thread (the pre-replica architecture). The ramp's
+//!   16-client phase must beat it ≥ 1.8× on aggregate throughput.
+//! * **unbatched inline** — `max_batch = 1` *and* the lane off: the
+//!   original one-execution-per-request path; the batched+replicated
+//!   configuration must stay ≥ 2× faster wall-clock.
+//!
 //! A facade-level burst sweep also reports batch sizes 1 / 8 / 64.
+//! Gate verdicts land in `target/bench-results/BENCH_serving.json`.
 //!
 //! Run: `cargo bench --bench bench_serving`
 
@@ -15,6 +27,7 @@ use nsml::api::{
     service_channel, ApiRequest, ApiResponse, DaemonOpts, NsmlPlatform, PlatformConfig,
     PlatformService, RunOpts,
 };
+use nsml::events::{EventFilter, EventKind};
 use nsml::util::bench::{smoke, Bench};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -36,10 +49,14 @@ fn quick(steps: u64, seed: u64) -> RunOpts {
 }
 
 /// A service with one trained session promoted to endpoint "prod".
-fn serving_platform(max_batch: usize) -> PlatformService {
+/// `max_replicas = 0` pins serving to the platform thread (baseline).
+fn serving_platform(max_batch: usize, max_replicas: usize) -> PlatformService {
     let mut cfg = PlatformConfig::test_default();
     cfg.artifacts_dir = "artifacts".into();
     cfg.serving_max_batch = max_batch;
+    cfg.serving_max_replicas = max_replicas;
+    cfg.serving_scale_up_queue_depth = 8;
+    cfg.serving_scale_down_idle_ms = 100;
     let p = NsmlPlatform::new(cfg).unwrap();
     let id = p.run("bench", "mnist", quick(16, 0)).unwrap();
     p.run_to_completion(8, 10_000).unwrap();
@@ -86,11 +103,10 @@ fn concurrent_serve(
         .collect();
     drop(handle); // daemon exits once every client is answered and done
     // chunk 1: training stays interleaved (one step between flushes)
-    // without letting round cost swamp the batched-vs-unbatched signal.
+    // without letting round cost swamp the serving signal.
     let opts =
         DaemonOpts { chunk: 1, idle_wait: Duration::from_millis(1), ..DaemonOpts::default() };
     service.run_daemon(&rx, &opts).unwrap();
-    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
 
     let mut lats = Vec::new();
     let mut batch_sum = 0u64;
@@ -99,6 +115,8 @@ fn concurrent_serve(
         lats.extend(l);
         batch_sum += b;
     }
+    // Replies fire from worker threads; the last join is the true end.
+    let wall_ms = t0.elapsed().as_secs_f64() * 1000.0;
     let mean_batch = batch_sum as f64 / lats.len() as f64;
     (wall_ms, lats, mean_batch)
 }
@@ -115,8 +133,9 @@ fn main() {
     let mut bench = Bench::new("serving");
 
     // Facade-level burst sweep: a burst of B requests flushes as one
-    // shared micro-batch (B ≤ max_batch), i.e. one engine execution.
-    let service = serving_platform(64);
+    // shared micro-batch (B ≤ max_batch) onto a replica's worker;
+    // replies fire asynchronously, so each iteration waits them out.
+    let service = serving_platform(64, 4);
     let p = service.platform();
     for burst in [1usize, 8, 64] {
         bench.run_with_units(&format!("batched burst batch={}", burst), burst as f64, || {
@@ -135,51 +154,125 @@ fn main() {
                 .unwrap();
             }
             p.pump_serving(true);
-            assert_eq!(*served.lock().unwrap(), burst);
+            let deadline = Instant::now() + Duration::from_secs(60);
+            while *served.lock().unwrap() < burst {
+                assert!(Instant::now() < deadline, "burst of {} never fully answered", burst);
+                std::thread::yield_now();
+            }
         });
     }
 
-    // 16 concurrent daemon clients, training in the background:
-    // micro-batched (max_batch 64) vs unbatched (max_batch 1).
-    let total = (clients * per_client) as f64;
-    let (batched_ms, batched_lats, mean_batch) =
+    // Load ramp against one autoscaled platform: low QPS, then double
+    // the client count. Replicas grow under the backlog.
+    let low_clients = (clients / 2).max(1);
+    let total_low = (low_clients * per_client) as f64;
+    let total_high = (clients * per_client) as f64;
+    let (low_ms, low_lats, _) = concurrent_serve(&service, low_clients, per_client, bg_steps);
+    bench.record(&format!("ramp x{} autoscaled", low_clients), low_lats.clone(), None);
+    let (high_ms, high_lats, mean_batch) =
         concurrent_serve(&service, clients, per_client, bg_steps);
-    bench.record(&format!("concurrent x{} batched", clients), batched_lats.clone(), None);
+    bench.record(&format!("ramp x{} autoscaled", clients), high_lats.clone(), None);
 
-    let unbatched = serving_platform(1);
+    // Idle drive rounds shrink the set back to the floor (virtual
+    // time: 10 ms/round vs scale_down_idle_ms = 100).
+    let mut final_replicas = p.endpoint_stats("prod").0;
+    for _ in 0..200 {
+        p.drive_round(1).unwrap();
+        final_replicas = p.endpoint_stats("prod").0;
+        if final_replicas == 1 {
+            break;
+        }
+    }
+    let scaled = p.events.bus().read_since(
+        0,
+        0,
+        &EventFilter { kind: Some("replica".into()), ..Default::default() },
+    );
+    let peak_replicas = scaled
+        .events
+        .iter()
+        .filter_map(|e| match &e.kind {
+            EventKind::ReplicaScaled { replicas, .. } => Some(*replicas),
+            _ => None,
+        })
+        .max()
+        .unwrap_or(1);
+
+    // Baseline 1: serve lane off — batches execute inline on the
+    // platform thread (the pre-replica architecture), same batching.
+    let baseline = serving_platform(64, 0);
+    let (base_ms, _base_lats, _) = concurrent_serve(&baseline, clients, per_client, bg_steps);
+
+    // Baseline 2: lane off *and* unbatched — the original
+    // one-execution-per-request path.
+    let unbatched = serving_platform(1, 0);
     let (unbatched_ms, unbatched_lats, _) =
         concurrent_serve(&unbatched, clients, per_client, bg_steps);
-    bench.record(&format!("concurrent x{} unbatched", clients), unbatched_lats, None);
+    bench.record(&format!("x{} unbatched platform-thread", clients), unbatched_lats, None);
 
-    let speedup = unbatched_ms / batched_ms;
+    let low_tput = total_low / (low_ms / 1000.0);
+    let high_tput = total_high / (high_ms / 1000.0);
+    let base_tput = total_high / (base_ms / 1000.0);
+    let speedup = unbatched_ms / high_ms;
     println!(
-        "concurrent x{}: batched {:.1} req/s (mean batch {:.1}, p99 {:.2} ms) vs unbatched {:.1} req/s — {:.2}x",
+        "ramp x{}→x{}: {:.1} → {:.1} req/s (p99 {:.2} → {:.2} ms, mean batch {:.1}, replicas peak {} final {})",
+        low_clients,
         clients,
-        total / (batched_ms / 1000.0),
+        low_tput,
+        high_tput,
+        p99(&low_lats),
+        p99(&high_lats),
         mean_batch,
-        p99(&batched_lats),
-        total / (unbatched_ms / 1000.0),
+        peak_replicas,
+        final_replicas,
+    );
+    println!(
+        "x{}: replicated {:.1} req/s vs platform-thread {:.1} req/s ({:.2}x) vs unbatched ({:.2}x wall)",
+        clients,
+        high_tput,
+        base_tput,
+        high_tput / base_tput,
         speedup,
     );
 
-    bench.finish();
-
+    // Acceptance gates (full scale only — smoke exists to catch
+    // bit-rot, not to measure). Recorded before finish() so the JSON
+    // artifact carries the verdicts even when one fails the process.
     if !smoke {
-        assert!(
+        bench.gate(
+            "ramp_p99_bounded",
+            p99(&high_lats) <= 1.5 * p99(&low_lats),
+            &format!(
+                "p99 {:.2} ms at x{} <= 1.5x {:.2} ms at x{}",
+                p99(&high_lats),
+                clients,
+                p99(&low_lats),
+                low_clients
+            ),
+        );
+        bench.gate(
+            "throughput_vs_platform_thread",
+            high_tput >= 1.8 * base_tput,
+            &format!("{:.1} req/s >= 1.8x {:.1} req/s", high_tput, base_tput),
+        );
+        bench.gate(
+            "replicas_scale_up_then_down",
+            peak_replicas > 1 && final_replicas == 1,
+            &format!("peak {} replicas, {} after idle", peak_replicas, final_replicas),
+        );
+        bench.gate(
+            "microbatching_active",
             mean_batch > 1.5,
-            "micro-batching never kicked in: mean batch {:.2}",
-            mean_batch
+            &format!("mean batch {:.2}", mean_batch),
         );
-        assert!(
+        bench.gate(
+            "faster_than_unbatched",
             speedup >= 2.0,
-            "batched serving must be >= 2x unbatched at {} clients (got {:.2}x)",
-            clients,
-            speedup
+            &format!("{:.2}x wall-clock vs unbatched inline", speedup),
         );
-        assert!(
-            p99(&batched_lats) <= 2_000.0,
-            "p99 serving latency unbounded: {:.1} ms",
-            p99(&batched_lats)
-        );
+    }
+    bench.finish();
+    if !smoke {
+        assert!(bench.gates_pass(), "a serving perf gate failed (see report above)");
     }
 }

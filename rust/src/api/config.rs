@@ -84,6 +84,20 @@ pub struct PlatformConfig {
     /// batchmates before the drive loop flushes it
     /// (`[serving] max_wait_ms`).
     pub serving_max_wait_ms: u64,
+    /// Replicas every endpoint keeps even when idle
+    /// (`[serving] min_replicas`).
+    pub serving_min_replicas: usize,
+    /// Autoscaler replica ceiling per endpoint
+    /// (`[serving] max_replicas`). 0 disables the executor serve lane
+    /// entirely: batches execute inline on the platform thread (the
+    /// pre-replica behaviour, kept as the bench baseline).
+    pub serving_max_replicas: usize,
+    /// Queue depth at which the autoscaler adds a replica
+    /// (`[serving] scale_up_queue_depth`).
+    pub serving_scale_up_queue_depth: usize,
+    /// Virtual milliseconds of an empty queue before the autoscaler
+    /// removes a replica (`[serving] scale_down_idle_ms`).
+    pub serving_scale_down_idle_ms: u64,
 }
 
 impl Default for PlatformConfig {
@@ -118,6 +132,10 @@ impl Default for PlatformConfig {
             http_keepalive_ms: 500,
             serving_max_batch: 64,
             serving_max_wait_ms: 20,
+            serving_min_replicas: 1,
+            serving_max_replicas: 4,
+            serving_scale_up_queue_depth: 16,
+            serving_scale_down_idle_ms: 250,
         }
     }
 }
@@ -209,6 +227,18 @@ impl PlatformConfig {
             serving_max_wait_ms: cfg
                 .int_or("serving", "max_wait_ms", dflt.serving_max_wait_ms as i64)
                 .max(0) as u64,
+            serving_min_replicas: cfg
+                .int_or("serving", "min_replicas", dflt.serving_min_replicas as i64)
+                .max(1) as usize,
+            serving_max_replicas: cfg
+                .int_or("serving", "max_replicas", dflt.serving_max_replicas as i64)
+                .max(0) as usize,
+            serving_scale_up_queue_depth: cfg
+                .int_or("serving", "scale_up_queue_depth", dflt.serving_scale_up_queue_depth as i64)
+                .max(1) as usize,
+            serving_scale_down_idle_ms: cfg
+                .int_or("serving", "scale_down_idle_ms", dflt.serving_scale_down_idle_ms as i64)
+                .max(1) as u64,
         })
     }
 }
@@ -296,6 +326,10 @@ keepalive_ms = 250
 [serving]
 max_batch = 16
 max_wait_ms = 5
+min_replicas = 2
+max_replicas = 6
+scale_up_queue_depth = 8
+scale_down_idle_ms = 90
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -337,6 +371,10 @@ max_wait_ms = 5
         assert_eq!(c.http_keepalive_ms, 250);
         assert_eq!(c.serving_max_batch, 16);
         assert_eq!(c.serving_max_wait_ms, 5);
+        assert_eq!(c.serving_min_replicas, 2);
+        assert_eq!(c.serving_max_replicas, 6);
+        assert_eq!(c.serving_scale_up_queue_depth, 8);
+        assert_eq!(c.serving_scale_down_idle_ms, 90);
     }
 
     #[test]
@@ -377,8 +415,13 @@ max_wait_ms = 5
         assert_eq!(c.serve_chunk, 25);
         assert_eq!(c.serve_idle_ms, 50);
         assert_eq!(c.http_keepalive_ms, 500);
-        // Serving defaults: 64-row batches, 20 virtual ms of patience.
+        // Serving defaults: 64-row batches, 20 virtual ms of patience,
+        // autoscaling between 1 and 4 replicas per endpoint.
         assert_eq!(c.serving_max_batch, 64);
         assert_eq!(c.serving_max_wait_ms, 20);
+        assert_eq!(c.serving_min_replicas, 1);
+        assert_eq!(c.serving_max_replicas, 4);
+        assert_eq!(c.serving_scale_up_queue_depth, 16);
+        assert_eq!(c.serving_scale_down_idle_ms, 250);
     }
 }

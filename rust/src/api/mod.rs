@@ -109,12 +109,15 @@ use crate::cluster::Cluster;
 use crate::container::{ContainerManager, ImageSpec};
 use crate::data::{dataset_for, model_for_dataset, register_all};
 use crate::durability::{self, Durability, SnapshotMeta, WalScan};
-use crate::events::{EventKind, EventLog, Level, Subscription};
+use crate::events::{EventFilter, EventKind, EventLog, Level, Subscription};
 use crate::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
 use crate::leaderboard::{Leaderboard, Submission};
 use crate::runtime::{Engine, TensorData, TrainableModel};
 use crate::scheduler::{ElectionGroup, JobSpec, Master, SubmitOutcome};
-use crate::serving::{EndpointRegistry, PendingInfer, ServeReply, ServedModel, ServingQueue};
+use crate::serving::{
+    AutoscalePolicy, EndpointRegistry, PendingInfer, ReplicaManager, ScaleDecision, ServeReply,
+    ServeWork, ServedModel, ServingQueue,
+};
 use crate::session::{SessionRecord, SessionSpec, SessionState, SessionStore};
 use crate::storage::{CheckpointStore, DatasetRegistry, ObjectStore};
 use crate::tenancy::{PendingAdmission, Tenancy};
@@ -179,9 +182,17 @@ pub struct NsmlPlatform {
     /// Per-endpoint micro-batching queue for `serve_infer`. Filled by
     /// dispatch, flushed by the drive loop (`[serving]` config).
     serving: ServingQueue,
-    /// Loaded serving models keyed by `(endpoint, version)` — params
-    /// stay deserialized across requests; a rollback simply starts
-    /// hitting a different key, so stale entries are inert.
+    /// Replica placement for the executor serve lane: which workers
+    /// host each endpoint, the shared params cache, and the in-flight
+    /// gate that registry mutations drain before moving the cursor.
+    replicas: ReplicaManager,
+    /// Scale-up/down thresholds from `[serving]`. `max_replicas = 0`
+    /// disables the serve lane entirely and batches execute inline on
+    /// the platform thread (the pre-replica baseline).
+    autoscale: AutoscalePolicy,
+    /// Loaded serving models keyed by `(endpoint, version)` — only the
+    /// inline fallback path (`max_replicas = 0`) reads this; with the
+    /// serve lane on, workers keep their own per-thread replicas.
     served_models: std::cell::RefCell<std::collections::HashMap<(String, u64), ServedModel>>,
     /// Facade-local engine for inference/manifest queries. Training
     /// engines live inside the executor workers.
@@ -195,12 +206,18 @@ pub struct NsmlPlatform {
     /// submissions, `util`/`worker` sample events become monitor
     /// records. Everything those views show was first a bus event.
     consumers: std::sync::Mutex<Subscription>,
+    /// The autoscaler's private bus cursor, filtered to `InferServed`:
+    /// batches answered from worker threads since the last drive round
+    /// mark their endpoint busy, so the idle clock only starts once
+    /// traffic has truly stopped.
+    autoscale_sub: std::sync::Mutex<Subscription>,
     /// Event-sourced durability: WAL + snapshots + GC. `None` when no
     /// state dir is configured or `[durability] enabled = false`.
     durability: Option<Durability>,
     /// Daemon drive-loop telemetry (rounds, durations, dispatches),
-    /// read back through the `service_status` verb. Updated only by
-    /// [`PlatformService::run_daemon`]; all zeros otherwise.
+    /// read back through the `service_status` verb. Rounds tick only
+    /// under [`PlatformService::run_daemon`]; the dispatch counter
+    /// also ticks for calls answered by [`PlatformService::serve`].
     loop_stats: std::sync::Mutex<LoopStats>,
 }
 
@@ -231,6 +248,9 @@ impl NsmlPlatform {
         // Subscribe the derived-view consumers before any subsystem can
         // publish, so no completion or sample event is ever missed.
         let consumers = std::sync::Mutex::new(events.bus().subscribe());
+        let autoscale_sub = std::sync::Mutex::new(
+            events.bus().subscribe().with_filter(EventFilter::default().with_kind("infer")),
+        );
         // The WAL subscription has the same requirement — and opening
         // the log now also hands us last run's tail for recovery.
         let mut recovery = None;
@@ -300,10 +320,18 @@ impl NsmlPlatform {
             monitor: crate::cluster::UtilizationMonitor::new(),
             endpoints: EndpointRegistry::new(),
             serving: ServingQueue::new(config.serving_max_batch, config.serving_max_wait_ms),
+            replicas: ReplicaManager::new(config.workers),
+            autoscale: AutoscalePolicy::new(
+                config.serving_min_replicas,
+                config.serving_max_replicas,
+                config.serving_scale_up_queue_depth,
+                config.serving_scale_down_idle_ms,
+            ),
             served_models: std::cell::RefCell::new(std::collections::HashMap::new()),
             engine,
             executor,
             consumers,
+            autoscale_sub,
             durability,
             loop_stats: std::sync::Mutex::new(LoopStats::default()),
             config,
@@ -699,9 +727,13 @@ impl NsmlPlatform {
                 },
             );
         }
-        // 6. Flush serving micro-batches that are due: full batches
-        //    immediately, partial ones once the oldest request has
-        //    waited `[serving] max_wait_ms` of virtual time.
+        // 6. Serving: let the autoscaler react to this round's queue
+        //    depth and last round's `InferServed` telemetry (one step
+        //    per endpoint per round), then flush due micro-batches onto
+        //    the executor serve lane — full batches immediately,
+        //    partial ones once the oldest request has waited
+        //    `[serving] max_wait_ms` of virtual time.
+        self.autoscale_tick();
         self.pump_serving(false);
         // 7. …pump the derived consumers: completions reach the
         //    leaderboard, samples reach the monitor — via the bus, not
@@ -1249,6 +1281,9 @@ impl NsmlPlatform {
             .best(session, manifest.lower_is_better)
             .or_else(|| self.checkpoints.latest(session))
             .ok_or_else(|| anyhow!("session {} has no checkpoint to promote", session))?;
+        // Queued + in-flight work finishes under the old version before
+        // the cursor moves (no-op for a brand-new endpoint).
+        self.quiesce_endpoint(name);
         let v = self.endpoints.promote(
             name,
             session,
@@ -1262,24 +1297,34 @@ impl NsmlPlatform {
     }
 
     /// Move `name` one version back (serve the previous promote).
+    /// Queued and in-flight batches drain at the outgoing version
+    /// first, so no batch mixes versions across the rollback.
     pub fn rollback_endpoint(&self, name: &str) -> Result<crate::serving::EndpointVersion> {
+        self.quiesce_endpoint(name);
         let v = self.endpoints.rollback(name).map_err(|e| anyhow!(e))?;
         self.publish_endpoint_changed(name, "rollback", &v);
         Ok(v)
     }
 
-    /// Undo a rollback: move `name` one version forward.
+    /// Undo a rollback: move `name` one version forward (drains the
+    /// outgoing version first, like rollback).
     pub fn rollforward_endpoint(&self, name: &str) -> Result<crate::serving::EndpointVersion> {
+        self.quiesce_endpoint(name);
         let v = self.endpoints.rollforward(name).map_err(|e| anyhow!(e))?;
         self.publish_endpoint_changed(name, "rollforward", &v);
         Ok(v)
     }
 
     /// Remove `name` entirely; requests still queued for it fail
-    /// immediately (each reply fires exactly once).
+    /// immediately (each reply fires exactly once). The replica set
+    /// drains, then drops, and every worker evicts its cached copy.
     pub fn retire_endpoint(&self, name: &str) -> Result<crate::serving::EndpointVersion> {
+        self.quiesce_endpoint(name);
         let v = self.endpoints.retire(name).map_err(|e| anyhow!(e))?;
         self.serving.fail_endpoint(name, &format!("endpoint '{}' was retired", name));
+        self.replicas.remove(name);
+        self.executor.drop_served(name);
+        self.replicas.prune_params(&self.endpoints.pinned_objects());
         self.publish_endpoint_changed(name, "retire", &v);
         Ok(v)
     }
@@ -1353,20 +1398,162 @@ impl NsmlPlatform {
         Ok(())
     }
 
-    /// Flush due serving micro-batches through the engine: full batches
-    /// always, partial ones once their oldest request has waited
-    /// `[serving] max_wait_ms` of virtual time — and everything when
-    /// `flush_all` is set (the daemon forces a flush after each dispatch
-    /// burst, so requests that arrived together leave together).
+    /// Flush due serving micro-batches: full batches always, partial
+    /// ones once their oldest request has waited `[serving]
+    /// max_wait_ms` of virtual time — and everything when `flush_all`
+    /// is set (the daemon forces a flush after each dispatch burst, so
+    /// requests that arrived together leave together). With the serve
+    /// lane on each batch is handed to a replica's worker thread and
+    /// replies fire asynchronously; with `max_replicas = 0` it executes
+    /// inline before this returns.
     pub fn pump_serving(&self, flush_all: bool) {
         for (endpoint, batch) in self.serving.take_due(self.clock.now_ms(), flush_all) {
-            self.run_serving_batch(&endpoint, batch);
+            self.dispatch_serving_batch(&endpoint, batch);
         }
     }
 
     /// Micro-batcher counters (depth, requests, batches executed).
     pub fn serving_stats(&self) -> crate::serving::ServingQueueStats {
         self.serving.stats()
+    }
+
+    /// Live serving stats for one endpoint: (replica count, queued
+    /// requests). The inline fallback reports one replica — the
+    /// platform thread itself.
+    pub fn endpoint_stats(&self, name: &str) -> (usize, usize) {
+        let depth = self.serving.depth_of(name);
+        if !self.autoscale.enabled() {
+            return (1, depth);
+        }
+        (self.replicas.replicas(name).max(1), depth)
+    }
+
+    /// Route one due batch: onto a replica's worker thread when the
+    /// serve lane is enabled, inline on the platform thread otherwise.
+    /// The batch binds the endpoint version *here*, and the dispatch
+    /// holds an in-flight guard until every reply fires — the two
+    /// halves of the no-mixed-version invariant.
+    fn dispatch_serving_batch(&self, endpoint: &str, batch: Vec<PendingInfer>) {
+        if !self.autoscale.enabled() {
+            self.run_serving_batch(endpoint, batch);
+            return;
+        }
+        let Some(ep) = self.endpoints.get(endpoint) else {
+            for req in batch {
+                (req.reply)(Err(format!("endpoint '{}' was retired", endpoint)));
+            }
+            return;
+        };
+        let v = ep.active_version().clone();
+        let params = match self.replicas.params_for(&v.object, || {
+            self.objects.get(&v.object).map_err(|e| format!("loading params: {:#}", e))
+        }) {
+            Ok(p) => p,
+            Err(e) => {
+                let msg = format!("serving '{}' v{}: {}", endpoint, v.version, e);
+                self.events.error("serving", endpoint, msg.clone());
+                for req in batch {
+                    (req.reply)(Err(msg.clone()));
+                }
+                return;
+            }
+        };
+        self.replicas.ensure(
+            endpoint,
+            self.autoscale.initial_replicas(),
+            &self.worker_loads(),
+            self.clock.now_ms(),
+        );
+        let Some((worker, guard)) = self.replicas.checkout(endpoint) else {
+            // Unreachable after ensure; serve inline rather than drop.
+            self.run_serving_batch(endpoint, batch);
+            return;
+        };
+        let work = ServeWork {
+            endpoint: endpoint.to_string(),
+            version: v.version,
+            model: v.model.clone(),
+            params,
+            batch,
+            guard,
+        };
+        if let Err(work) = self.executor.serve_batch_on(worker, work) {
+            // The worker hung up (pool shutdown mid-flight): answer on
+            // the platform thread instead of dropping the replies.
+            let ServeWork { batch, guard, .. } = work;
+            drop(guard);
+            self.run_serving_batch(endpoint, batch);
+        }
+    }
+
+    /// Per-worker live-session counts, indexed by worker id — the
+    /// training load signal replica placement steers around.
+    fn worker_loads(&self) -> Vec<usize> {
+        let mut loads = vec![0usize; self.executor.worker_count()];
+        for s in self.executor.stats() {
+            if let Some(l) = loads.get_mut(s.worker) {
+                *l = s.live_sessions;
+            }
+        }
+        loads
+    }
+
+    /// One autoscaler round: drain the `InferServed` telemetry cursor,
+    /// observe each endpoint's queue depth and idle time, and apply at
+    /// most one scale step per endpoint. Every applied step publishes
+    /// `EventKind::ReplicaScaled`.
+    fn autoscale_tick(&self) {
+        if !self.autoscale.enabled() {
+            return;
+        }
+        let served = self.autoscale_sub.lock().unwrap().poll();
+        let now = self.clock.now_ms();
+        for e in &served {
+            if matches!(e.kind, EventKind::InferServed { .. }) {
+                self.replicas.touch(&e.subject, now);
+            }
+        }
+        for name in self.replicas.endpoints() {
+            let depth = self.serving.depth_of(&name);
+            let (count, idle_ms) = self.replicas.observe(&name, depth, now);
+            if count == 0 {
+                continue;
+            }
+            let scaled = match self.autoscale.decide(count, depth, idle_ms) {
+                ScaleDecision::Up => self.replicas.scale_up(&name, &self.worker_loads()),
+                ScaleDecision::Down => self.replicas.scale_down(&name),
+                ScaleDecision::Hold => None,
+            };
+            if let Some(new_count) = scaled {
+                let trigger = if new_count > count { depth as u64 } else { 0 };
+                self.events.bus().publish(
+                    Level::Info,
+                    "serving",
+                    &name,
+                    EventKind::ReplicaScaled {
+                        replicas: new_count as u64,
+                        queue_depth: trigger,
+                    },
+                );
+            }
+        }
+    }
+
+    /// Flush everything queued for `endpoint` at the *current* active
+    /// version, then wait for all in-flight batches to answer. Called
+    /// by the registry mutation paths before the cursor moves, so no
+    /// batch ever mixes endpoint versions.
+    fn quiesce_endpoint(&self, name: &str) {
+        for batch in self.serving.take_endpoint(name) {
+            self.dispatch_serving_batch(name, batch);
+        }
+        if !self.replicas.drain(name) {
+            self.events.warn(
+                "serving",
+                name,
+                "drain timed out with batches still in flight (worker thread lost?)",
+            );
+        }
     }
 
     fn run_serving_batch(&self, endpoint: &str, batch: Vec<PendingInfer>) {
@@ -1510,6 +1697,9 @@ impl NsmlPlatform {
         // A live endpoint's whole version history is pinned, so a
         // rollback target stays loadable even if its index entry went.
         let pins = self.endpoints.pinned_objects();
+        // The serve lane's in-memory params cache follows the same
+        // pinning rule: retired objects leave it with the sweep.
+        self.replicas.prune_params(&pins);
         let report = durability::gc::sweep(
             &self.objects,
             &self.checkpoints,

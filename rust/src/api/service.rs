@@ -420,7 +420,11 @@ impl PlatformService {
                     .endpoints
                     .list()
                     .iter()
-                    .map(EndpointView::from_endpoint)
+                    .map(|ep| {
+                        let (replicas, depth) = self.platform.endpoint_stats(&ep.name);
+                        EndpointView::from_endpoint(ep)
+                            .with_stats(replicas as u64, depth as u64)
+                    })
                     .collect(),
             },
             ApiRequest::ServeInfer { endpoint, user, x } => {
@@ -463,7 +467,13 @@ impl PlatformService {
         };
         match result {
             Ok(_) => match self.platform.endpoints.get(endpoint) {
-                Some(ep) => ApiResponse::Endpoint { endpoint: EndpointView::from_endpoint(&ep) },
+                Some(ep) => {
+                    let (replicas, depth) = self.platform.endpoint_stats(endpoint);
+                    ApiResponse::Endpoint {
+                        endpoint: EndpointView::from_endpoint(&ep)
+                            .with_stats(replicas as u64, depth as u64),
+                    }
+                }
                 None => ApiResponse::Error {
                     error: ApiError::internal(format!(
                         "endpoint '{}' vanished mid-dispatch",
@@ -516,8 +526,22 @@ impl PlatformService {
 
     /// Pump queued [`ServiceCall`]s until every [`ServiceHandle`] is
     /// dropped. Run this on the thread that owns the platform.
+    ///
+    /// Serving requests coalesce: when a `serve_infer` arrives, every
+    /// further call already waiting in the channel is queued before
+    /// the micro-batcher flushes once — so a burst from N concurrent
+    /// clients shares batches instead of each paying batch = 1 (the
+    /// same policy as the daemon's between-round drain).
     pub fn serve(&self, rx: &mpsc::Receiver<ServiceCall>) {
-        while self.serve_one(rx) {}
+        while let Ok(call) = rx.recv() {
+            let mut queued_serving = self.serve_daemon_call(call);
+            while let Ok(call) = rx.try_recv() {
+                queued_serving |= self.serve_daemon_call(call);
+            }
+            if queued_serving {
+                self.platform.pump_serving(true);
+            }
+        }
     }
 
     /// Pump exactly one queued call; returns false once the channel is

@@ -1175,11 +1175,18 @@ pub struct EndpointView {
     pub model: String,
     pub session: String,
     pub step: u64,
+    /// Serving replicas currently placed on executor workers (1 when
+    /// the serve lane is disabled — the platform thread itself).
+    pub replicas: u64,
+    /// Requests queued in the micro-batcher, not yet dispatched.
+    pub queue_depth: u64,
     pub versions: Vec<EndpointVersionView>,
 }
 
 impl EndpointView {
-    /// Project the registry's endpoint record onto the wire.
+    /// Project the registry's endpoint record onto the wire. Live
+    /// serving stats default to zero; callers with a platform in hand
+    /// layer them on with [`EndpointView::with_stats`].
     pub fn from_endpoint(ep: &crate::serving::Endpoint) -> EndpointView {
         let active = ep.active_version();
         EndpointView {
@@ -1188,6 +1195,8 @@ impl EndpointView {
             model: active.model.clone(),
             session: active.session.clone(),
             step: active.step,
+            replicas: 0,
+            queue_depth: 0,
             versions: ep
                 .versions
                 .iter()
@@ -1202,6 +1211,14 @@ impl EndpointView {
         }
     }
 
+    /// Attach live replica/queue counts (the `endpoints` handler calls
+    /// this with the platform's `endpoint_stats` output).
+    pub fn with_stats(mut self, replicas: u64, queue_depth: u64) -> EndpointView {
+        self.replicas = replicas;
+        self.queue_depth = queue_depth;
+        self
+    }
+
     fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", self.name.as_str().into())
@@ -1209,6 +1226,8 @@ impl EndpointView {
             .set("model", self.model.as_str().into())
             .set("session", self.session.as_str().into())
             .set("step", self.step.into())
+            .set("replicas", self.replicas.into())
+            .set("queue_depth", self.queue_depth.into())
             .set("versions", Json::Arr(self.versions.iter().map(|v| v.to_json()).collect()));
         o
     }
@@ -1220,6 +1239,8 @@ impl EndpointView {
             model: need_str(j, "model")?,
             session: need_str(j, "session")?,
             step: need_u64(j, "step")?,
+            replicas: need_u64(j, "replicas")?,
+            queue_depth: need_u64(j, "queue_depth")?,
             versions: need_arr(j, "versions")?
                 .iter()
                 .map(EndpointVersionView::from_json)
@@ -1881,6 +1902,8 @@ mod tests {
             model: "mnist_mlp".into(),
             session: "kim/mnist/2".into(),
             step: 150,
+            replicas: 3,
+            queue_depth: 17,
             versions: vec![
                 EndpointVersionView {
                     version: 1,

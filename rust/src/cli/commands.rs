@@ -665,8 +665,10 @@ pub fn cmd_endpoints(args: &[String]) -> CmdResult {
         println!("no endpoints yet (promote one with `nsml promote NAME SESSION`)");
         return Ok(());
     }
-    let mut t = Table::new(&["ENDPOINT", "ACTIVE", "MODEL", "SESSION", "STEP", "VERSIONS"])
-        .right(&[1, 4, 5]);
+    let mut t = Table::new(&[
+        "ENDPOINT", "ACTIVE", "MODEL", "SESSION", "STEP", "REPLICAS", "QUEUE", "VERSIONS",
+    ])
+    .right(&[1, 4, 5, 6, 7]);
     for v in &views {
         t.row(&[
             v.name.clone(),
@@ -674,6 +676,8 @@ pub fn cmd_endpoints(args: &[String]) -> CmdResult {
             v.model.clone(),
             v.session.clone(),
             format!("{}", v.step),
+            format!("{}", v.replicas),
+            format!("{}", v.queue_depth),
             format!("{}", v.versions.len()),
         ]);
     }

@@ -81,6 +81,7 @@ pub const ALL_EVENT_KINDS: &[&str] = &[
     "loop",
     "endpoint",
     "infer",
+    "replica",
 ];
 
 /// The typed payload of an [`Event`]. Plain data only — the events
@@ -142,6 +143,10 @@ pub enum EventKind {
     /// how many queued requests were packed into the single engine
     /// call and the wall-clock latency of that call.
     InferServed { batch: u64, latency_ms: f64 },
+    /// The autoscaler resized an endpoint's replica set (subject =
+    /// endpoint name): the new replica count and the queue depth that
+    /// triggered the decision (0 on idle scale-downs).
+    ReplicaScaled { replicas: u64, queue_depth: u64 },
 }
 
 impl EventKind {
@@ -160,6 +165,7 @@ impl EventKind {
             EventKind::LoopSampled { .. } => "loop",
             EventKind::EndpointChanged { .. } => "endpoint",
             EventKind::InferServed { .. } => "infer",
+            EventKind::ReplicaScaled { .. } => "replica",
         }
     }
 
@@ -215,6 +221,9 @@ impl EventKind {
             }
             EventKind::InferServed { batch, latency_ms } => {
                 format!("served batch of {} in {:.2}ms", batch, latency_ms)
+            }
+            EventKind::ReplicaScaled { replicas, queue_depth } => {
+                format!("scaled to {} replicas (queue depth {})", replicas, queue_depth)
             }
         }
     }
@@ -277,6 +286,9 @@ impl EventKind {
             }
             EventKind::InferServed { batch, latency_ms } => {
                 o.set("batch", (*batch).into()).set("latency_ms", (*latency_ms).into());
+            }
+            EventKind::ReplicaScaled { replicas, queue_depth } => {
+                o.set("replicas", (*replicas).into()).set("queue_depth", (*queue_depth).into());
             }
         }
         o
@@ -371,6 +383,10 @@ impl EventKind {
             "infer" => Ok(EventKind::InferServed {
                 batch: u64_of("batch")?,
                 latency_ms: f64_of("latency_ms")?,
+            }),
+            "replica" => Ok(EventKind::ReplicaScaled {
+                replicas: u64_of("replicas")?,
+                queue_depth: u64_of("queue_depth")?,
             }),
             other => Err(format!(
                 "unknown event kind '{}' (expected one of: {})",
@@ -508,6 +524,7 @@ mod tests {
                 object: "sha-def".into(),
             },
             EventKind::InferServed { batch: 8, latency_ms: 3.25 },
+            EventKind::ReplicaScaled { replicas: 3, queue_depth: 17 },
         ]
     }
 

@@ -9,6 +9,7 @@ use super::worker::{
 };
 use crate::cluster::NodeId;
 use crate::data::generator_for;
+use crate::serving::ServeWork;
 use crate::session::SessionSpec;
 use crate::storage::Checkpoint;
 use anyhow::{anyhow, Result};
@@ -295,6 +296,29 @@ impl ExecutorPool {
         let (reply, rx) = channel();
         self.workers[w].tx.send(WorkerMsg::Inspect { id: id.to_string(), reply }).ok()?;
         rx.recv().ok()?
+    }
+
+    /// Hand one serving micro-batch to `worker`'s mailbox — the serve
+    /// lane. Fire-and-forget: the worker executes it and fires each
+    /// request's reply callback itself, so the caller (the drive loop)
+    /// overlaps inference with training instead of blocking on it.
+    /// Returns the work on a dead or unknown worker so the caller can
+    /// fail the batch inline.
+    pub fn serve_batch_on(&self, worker: usize, work: ServeWork) -> Result<(), ServeWork> {
+        let Some(handle) = self.workers.get(worker) else { return Err(work) };
+        handle.tx.send(WorkerMsg::Serve(Box::new(work))).map_err(|e| match e.0 {
+            WorkerMsg::Serve(w) => *w,
+            _ => unreachable!("serve sends only Serve messages"),
+        })
+    }
+
+    /// Evict every worker's cached served model for `endpoint`
+    /// (retire). Mailbox ordering guarantees any batch sent earlier
+    /// executes before the eviction lands.
+    pub fn drop_served(&self, endpoint: &str) {
+        for handle in &self.workers {
+            let _ = handle.tx.send(WorkerMsg::DropServed { endpoint: endpoint.to_string() });
+        }
     }
 }
 

@@ -26,7 +26,8 @@
 use super::queue::{PendingSession, Shared};
 use crate::data::generator_for;
 use crate::events::{EventKind, EventLog, Level};
-use crate::runtime::Engine;
+use crate::runtime::{Engine, TrainableModel};
+use crate::serving::{ServeWork, ServedModel, ServedRow};
 use crate::session::{RunStatus, SessionRun, SessionSpec, SessionState, SessionStore};
 use crate::storage::{Checkpoint, CheckpointStore};
 use crate::util::clock::SharedClock;
@@ -106,6 +107,13 @@ pub(super) enum WorkerMsg {
     Inspect { id: String, reply: Sender<Option<SessionProbe>> },
     /// Drop a run without touching its session record (stop/orphan).
     Detach { id: String, reply: Sender<()> },
+    /// Execute one serving micro-batch on this worker's replica of the
+    /// endpoint. Fire-and-forget: no reply channel — the worker fires
+    /// each request's own reply callback and publishes `InferServed`,
+    /// so the platform thread never waits on inference.
+    Serve(Box<ServeWork>),
+    /// Evict this worker's cached served model for a retired endpoint.
+    DropServed { endpoint: String },
     /// Exit the worker loop.
     Shutdown,
 }
@@ -119,11 +127,23 @@ struct Worker {
     // idle workers cost nothing but a parked thread.
     engine: Option<Arc<Engine>>,
     runs: BTreeMap<String, SessionRun>,
+    /// This worker's serving replicas: endpoint → (version, model).
+    /// Rebuilt from the `Arc`-shared checkpoint bytes whenever a batch
+    /// arrives for a different version; the engine's compile cache
+    /// makes the rebuild a deserialization, never a recompile.
+    served: BTreeMap<String, (u64, ServedModel)>,
 }
 
 /// The worker thread body: a mailbox loop over owned runs.
 pub(super) fn worker_loop(index: usize, ctx: WorkerCtx, shared: Arc<Shared>, rx: Receiver<WorkerMsg>) {
-    let mut w = Worker { index, ctx, shared, engine: None, runs: BTreeMap::new() };
+    let mut w = Worker {
+        index,
+        ctx,
+        shared,
+        engine: None,
+        runs: BTreeMap::new(),
+        served: BTreeMap::new(),
+    };
     while let Ok(msg) = rx.recv() {
         if matches!(msg, WorkerMsg::Shutdown) {
             break;
@@ -189,8 +209,68 @@ impl Worker {
                 self.drop_run(&id);
                 let _ = reply.send(());
             }
+            WorkerMsg::Serve(work) => self.serve_batch(*work),
+            WorkerMsg::DropServed { endpoint } => {
+                self.served.remove(&endpoint);
+            }
             WorkerMsg::Shutdown => unreachable!("handled by worker_loop"),
         }
+    }
+
+    /// Execute one serving micro-batch: rebuild this worker's replica
+    /// if the version moved, run the fixed-shape executable, answer
+    /// every request, publish the latency sample. The in-flight guard
+    /// rides in `work` and drops when this returns, waking any drain.
+    fn serve_batch(&mut self, work: ServeWork) {
+        let ServeWork { endpoint, version, model, params, batch, guard } = work;
+        let t0 = Instant::now();
+        let n = batch.len();
+        let rows: Vec<Vec<f32>> = batch.iter().map(|r| r.x.clone()).collect();
+        let result = self
+            .replica_for(&endpoint, version, &model, &params)
+            .and_then(|served| served.serve_rows(&rows));
+        match result {
+            Ok(outs) => {
+                for (req, probs) in batch.into_iter().zip(outs) {
+                    (req.reply)(Ok(ServedRow { probs, version, batch: n }));
+                }
+                let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+                self.ctx.events.bus().publish(
+                    Level::Debug,
+                    "serving",
+                    &endpoint,
+                    EventKind::InferServed { batch: n as u64, latency_ms },
+                );
+            }
+            Err(e) => {
+                let msg = format!("serving '{}' v{}: {}", endpoint, version, e);
+                self.ctx.events.error("serving", &endpoint, msg.clone());
+                for req in batch {
+                    (req.reply)(Err(msg.clone()));
+                }
+            }
+        }
+        drop(guard);
+    }
+
+    /// This worker's replica of `endpoint` at `version`, rebuilding
+    /// from the shared checkpoint bytes on first use or version change.
+    fn replica_for(
+        &mut self,
+        endpoint: &str,
+        version: u64,
+        model: &str,
+        params: &[u8],
+    ) -> Result<&ServedModel, String> {
+        let stale = self.served.get(endpoint).map(|(v, _)| *v != version).unwrap_or(true);
+        if stale {
+            let engine = self.engine()?;
+            let restored = TrainableModel::from_checkpoint(engine, model, params)
+                .map_err(|e| format!("{:#}", e))?;
+            let replica = ServedModel::new(restored)?;
+            self.served.insert(endpoint.to_string(), (version, replica));
+        }
+        Ok(&self.served.get(endpoint).expect("replica just ensured").1)
     }
 
     /// One fork-join round: adopt pending work (own deque → injector →
@@ -313,9 +393,9 @@ impl Worker {
         }
     }
 
-    /// Returns `Ok(false)` when a concurrent detach tombstoned the
-    /// session while it was being built (the run is discarded).
-    fn try_spawn(&mut self, p: PendingSession) -> Result<bool, String> {
+    /// The thread-local engine, built on first use (training or
+    /// serving — both lanes share one PJRT client + compile cache).
+    fn engine(&mut self) -> Result<Arc<Engine>, String> {
         if self.engine.is_none() {
             let e = Engine::new(&self.ctx.artifacts_dir)
                 .map_err(|e| format!("worker {}: engine init: {:#}", self.index, e))?;
@@ -326,7 +406,13 @@ impl Worker {
             );
             self.engine = Some(Arc::new(e));
         }
-        let engine = self.engine.as_ref().expect("engine just initialized").clone();
+        Ok(self.engine.as_ref().expect("engine just initialized").clone())
+    }
+
+    /// Returns `Ok(false)` when a concurrent detach tombstoned the
+    /// session while it was being built (the run is discarded).
+    fn try_spawn(&mut self, p: PendingSession) -> Result<bool, String> {
+        let engine = self.engine()?;
         let PendingSession { spec, resume } = p;
         let gen = generator_for(&spec.model, spec.seed)
             .ok_or_else(|| format!("no data generator for model {}", spec.model))?;

@@ -43,9 +43,11 @@
 //! * [`session`] / [`runtime`] / [`data`] — training state machines
 //!   over the PJRT engine and the procedural dataset generators.
 //! * [`serving`] — high-QPS inference: named endpoints promoted from
-//!   the leaderboard (versioned, roll-forward/back) and a per-endpoint
+//!   the leaderboard (versioned, roll-forward/back), a per-endpoint
 //!   queue that micro-batches concurrent requests into single
-//!   fixed-shape engine executions.
+//!   fixed-shape engine executions, and autoscaled replica sets that
+//!   run those batches on executor-pool workers instead of the
+//!   platform thread.
 //! * [`events`] — the typed publish/subscribe event spine: every
 //!   subsystem publishes structured events (placements, state
 //!   transitions, metrics, checkpoints, steals, samples) into a

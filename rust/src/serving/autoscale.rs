@@ -1,0 +1,141 @@
+//! The serving autoscaler: a pure decision function over the
+//! telemetry the drive loop already has.
+//!
+//! Each drive round the platform observes, per endpoint, the pending
+//! queue depth and how long the endpoint has been idle (no queued and
+//! no in-flight work, tracked in virtual milliseconds so decisions are
+//! deterministic under test). [`AutoscalePolicy::decide`] maps that to
+//! one of three moves:
+//!
+//! * **Up** — the queue is at least `scale_up_queue_depth` deep and the
+//!   endpoint is below `max_replicas`: demand outruns the replicas we
+//!   have, add one.
+//! * **Down** — the endpoint has been idle for `scale_down_idle_ms`
+//!   and sits above `min_replicas`: shed one replica and give its
+//!   worker back to training.
+//! * **Hold** — anything else. Scaling one step per round keeps the
+//!   loop from flapping: a burst grows the set gradually and a lull
+//!   shrinks it gradually.
+//!
+//! The policy is plain data + arithmetic on purpose: placement, event
+//! publishing and draining live in [`super::ReplicaManager`] and the
+//! facade, so this file is exhaustively testable without a platform.
+
+/// Tuning knobs, read from `[serving]` config keys of the same names.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AutoscalePolicy {
+    /// Replicas an endpoint keeps even when idle (>= 1).
+    pub min_replicas: usize,
+    /// Replica ceiling per endpoint. 0 means the executor serve lane
+    /// is disabled entirely (inline platform-thread serving).
+    pub max_replicas: usize,
+    /// Queue depth that triggers a scale-up.
+    pub scale_up_queue_depth: usize,
+    /// Idle virtual milliseconds that trigger a scale-down.
+    pub scale_down_idle_ms: u64,
+}
+
+/// One autoscale verdict for one endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ScaleDecision {
+    /// Add one replica.
+    Up,
+    /// Remove one replica.
+    Down,
+    /// Leave the set alone.
+    Hold,
+}
+
+impl AutoscalePolicy {
+    pub fn new(
+        min_replicas: usize,
+        max_replicas: usize,
+        scale_up_queue_depth: usize,
+        scale_down_idle_ms: u64,
+    ) -> AutoscalePolicy {
+        AutoscalePolicy {
+            min_replicas: min_replicas.max(1),
+            max_replicas,
+            scale_up_queue_depth: scale_up_queue_depth.max(1),
+            scale_down_idle_ms: scale_down_idle_ms.max(1),
+        }
+    }
+
+    /// Is the executor serve lane on at all? With `max_replicas = 0`
+    /// the facade executes batches inline (the pre-replica baseline).
+    pub fn enabled(&self) -> bool {
+        self.max_replicas > 0
+    }
+
+    /// The replica count a fresh endpoint starts with.
+    pub fn initial_replicas(&self) -> usize {
+        self.min_replicas.min(self.max_replicas.max(1))
+    }
+
+    /// Decide one endpoint's move from this round's observations.
+    /// `idle_ms` is how long the endpoint has had neither queued nor
+    /// in-flight work (0 whenever it is busy).
+    pub fn decide(&self, replicas: usize, queue_depth: usize, idle_ms: u64) -> ScaleDecision {
+        if !self.enabled() {
+            return ScaleDecision::Hold;
+        }
+        if queue_depth >= self.scale_up_queue_depth && replicas < self.max_replicas {
+            return ScaleDecision::Up;
+        }
+        if queue_depth == 0 && idle_ms >= self.scale_down_idle_ms && replicas > self.min_replicas {
+            return ScaleDecision::Down;
+        }
+        ScaleDecision::Hold
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn policy() -> AutoscalePolicy {
+        AutoscalePolicy::new(1, 4, 16, 250)
+    }
+
+    #[test]
+    fn deep_queue_scales_up_until_the_ceiling() {
+        let p = policy();
+        assert_eq!(p.decide(1, 16, 0), ScaleDecision::Up);
+        assert_eq!(p.decide(3, 40, 0), ScaleDecision::Up);
+        // At max_replicas the queue no longer grows the set.
+        assert_eq!(p.decide(4, 400, 0), ScaleDecision::Hold);
+        // Below the threshold nothing happens.
+        assert_eq!(p.decide(1, 15, 0), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn sustained_idle_scales_down_to_the_floor() {
+        let p = policy();
+        assert_eq!(p.decide(3, 0, 249), ScaleDecision::Hold);
+        assert_eq!(p.decide(3, 0, 250), ScaleDecision::Down);
+        // Never below min_replicas, no matter how idle.
+        assert_eq!(p.decide(1, 0, 10_000), ScaleDecision::Hold);
+        // A non-empty queue is never idle.
+        assert_eq!(p.decide(3, 1, 10_000), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn disabled_policy_always_holds() {
+        let p = AutoscalePolicy::new(1, 0, 16, 250);
+        assert!(!p.enabled());
+        assert_eq!(p.decide(1, 1_000, 0), ScaleDecision::Hold);
+        assert_eq!(p.decide(1, 0, 1_000_000), ScaleDecision::Hold);
+    }
+
+    #[test]
+    fn constructor_clamps_degenerate_knobs() {
+        let p = AutoscalePolicy::new(0, 2, 0, 0);
+        assert_eq!(p.min_replicas, 1);
+        assert_eq!(p.scale_up_queue_depth, 1);
+        assert_eq!(p.scale_down_idle_ms, 1);
+        assert_eq!(p.initial_replicas(), 1);
+        // min above max still starts within the ceiling.
+        let q = AutoscalePolicy::new(8, 2, 4, 100);
+        assert_eq!(q.initial_replicas(), 2);
+    }
+}

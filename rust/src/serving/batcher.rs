@@ -94,6 +94,28 @@ impl ServingQueue {
         self.inner.lock().unwrap().queues.values().map(Vec::len).sum()
     }
 
+    /// Pending rows queued for one endpoint (the autoscaler's signal).
+    pub fn depth_of(&self, endpoint: &str) -> usize {
+        self.inner.lock().unwrap().queues.get(endpoint).map(Vec::len).unwrap_or(0)
+    }
+
+    /// Drain everything queued for one endpoint regardless of due-ness,
+    /// still in batch-sized chunks. Used by the registry drain paths:
+    /// requests admitted before a promote/rollback/retire are flushed
+    /// at the version they were admitted under before the active
+    /// cursor moves.
+    pub fn take_endpoint(&self, endpoint: &str) -> Vec<Vec<PendingInfer>> {
+        let mut inner = self.inner.lock().unwrap();
+        let Some(mut q) = inner.queues.remove(endpoint) else { return Vec::new() };
+        let mut out = Vec::new();
+        while !q.is_empty() {
+            let take = q.len().min(self.max_batch);
+            out.push(q.drain(..take).collect());
+        }
+        inner.batches += out.len() as u64;
+        out
+    }
+
     pub fn stats(&self) -> ServingQueueStats {
         let inner = self.inner.lock().unwrap();
         ServingQueueStats {

@@ -18,15 +18,28 @@
 //!   packs a batch of single-row requests into the model's fixed
 //!   `infer_x_shape` tensor, executes once, slices per-row outputs.
 //!
+//! * [`ReplicaManager`] — places 1..N replicas of each endpoint onto
+//!   executor workers and tracks in-flight batches, so inference runs
+//!   on the pool's serve lane instead of the platform thread; batches
+//!   round-robin across the set and registry mutations drain it before
+//!   moving the active cursor (no mixed-version batches).
+//! * [`AutoscalePolicy`] — grows the set when the queue backs up and
+//!   shrinks it after sustained idle, one step per drive round,
+//!   publishing `EventKind::ReplicaScaled`.
+//!
 //! The facade (`api::NsmlPlatform`) owns one of each and pumps the
 //! queue from the drive loop; `PlatformService` routes the `promote` /
 //! `endpoints` / `serve_infer` verbs; per-tenant QPS quotas gate
 //! enqueues through `tenancy::TenantRegistry::try_request`.
 
+mod autoscale;
 mod batcher;
 mod registry;
+mod replica;
 
+pub use autoscale::{AutoscalePolicy, ScaleDecision};
 pub use batcher::{
     PendingInfer, ServeReply, ServedModel, ServedRow, ServingQueue, ServingQueueStats,
 };
 pub use registry::{Endpoint, EndpointRegistry, EndpointVersion};
+pub use replica::{InFlightGuard, ReplicaManager, ServeWork};

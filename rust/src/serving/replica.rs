@@ -1,0 +1,383 @@
+//! Replica placement and lifetime for the executor serve lane.
+//!
+//! PR 8 executed every serving micro-batch inline on the single
+//! platform-owning thread, serializing inference against training and
+//! capping throughput at one core. This module moves execution onto
+//! the executor pool: each endpoint owns a *replica set* — 1..N worker
+//! indices, each hosting a [`super::ServedModel`] rebuilt from the
+//! same checkpoint bytes — and the facade round-robins due batches
+//! across the set as fire-and-forget [`ServeWork`] messages. Replies
+//! fire from the worker thread, so the drive loop keeps training while
+//! inference runs.
+//!
+//! Three invariants live here:
+//!
+//! * **Load once, share forever.** Checkpoint params are read from the
+//!   object store once per object id and `Arc`-shared to every replica
+//!   ([`ReplicaManager::params_for`]); each worker deserializes into
+//!   its own thread-local PJRT engine, whose compile cache already
+//!   de-duplicates executables, so adding a replica never recompiles
+//!   or re-reads anything.
+//! * **No mixed-version batches.** A batch binds its endpoint version
+//!   when dispatched, and every dispatch holds an [`InFlightGuard`].
+//!   The registry mutation paths call [`ReplicaManager::drain`] before
+//!   moving the active cursor, so a rollback/retire waits for in-flight
+//!   work admitted under the old version to answer first.
+//! * **Workers never block on the platform.** The guard is a plain
+//!   RAII counter: workers only decrement and notify, so the drain
+//!   wait cannot deadlock against the pool.
+//!
+//! Placement prefers the worker with the least combined load (live
+//! training sessions + replicas already placed), one distinct worker
+//! per replica, so a scale-up lands on the quietest thread instead of
+//! stacking on a busy one.
+
+use super::batcher::PendingInfer;
+use crate::storage::ObjectId;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+/// How long [`ReplicaManager::drain`] waits for in-flight batches
+/// before giving up (real time; workers answer in milliseconds, so
+/// hitting this means a worker thread died mid-batch).
+const DRAIN_TIMEOUT_MS: u64 = 5_000;
+
+/// One serving batch handed to an executor worker: everything needed
+/// to rebuild the served model on that thread (`Send` only — the
+/// non-`Send` PJRT state is built worker-side from these bytes).
+pub struct ServeWork {
+    pub endpoint: String,
+    /// Endpoint version the batch was admitted under (attribution —
+    /// the worker answers with exactly this version).
+    pub version: u64,
+    /// Model name (`manifest.json` key) for checkpoint deserialization.
+    pub model: String,
+    /// Shared checkpoint bytes (loaded once, `Arc`-shared per replica).
+    pub params: Arc<Vec<u8>>,
+    pub batch: Vec<PendingInfer>,
+    /// Keeps the endpoint's in-flight count up until the batch answers.
+    pub guard: InFlightGuard,
+}
+
+/// In-flight batch counter + wakeup for drainers.
+struct Gate {
+    count: Mutex<u64>,
+    cv: Condvar,
+}
+
+/// RAII token for one dispatched batch: dropping it (worker-side, after
+/// every reply fired — or facade-side on a failed dispatch) decrements
+/// the endpoint's in-flight count and wakes any drain waiter.
+pub struct InFlightGuard(Arc<Gate>);
+
+impl Drop for InFlightGuard {
+    fn drop(&mut self) {
+        let mut count = self.0.count.lock().unwrap();
+        *count = count.saturating_sub(1);
+        self.0.cv.notify_all();
+    }
+}
+
+/// One endpoint's replicas: which workers host one, plus the dispatch
+/// cursor and idle bookkeeping the autoscaler reads.
+struct ReplicaSet {
+    /// Distinct worker indices hosting a replica (dispatch targets).
+    workers: Vec<usize>,
+    /// Round-robin cursor over `workers`.
+    next: usize,
+    gate: Arc<Gate>,
+    /// Virtual ms when the endpoint last had queued or in-flight work.
+    last_busy_ms: u64,
+}
+
+/// All replica sets plus the shared params cache (see module docs).
+pub struct ReplicaManager {
+    pool_size: usize,
+    sets: Mutex<BTreeMap<String, ReplicaSet>>,
+    /// Checkpoint bytes by content address — load once, share forever.
+    /// Pruned against the registry's pinned set after retires.
+    params: Mutex<BTreeMap<ObjectId, Arc<Vec<u8>>>>,
+}
+
+impl ReplicaManager {
+    pub fn new(pool_size: usize) -> ReplicaManager {
+        ReplicaManager {
+            pool_size: pool_size.max(1),
+            sets: Mutex::new(BTreeMap::new()),
+            params: Mutex::new(BTreeMap::new()),
+        }
+    }
+
+    /// Make sure `endpoint` has a set with `initial` replicas (no-op if
+    /// it already exists). `loads` is the per-worker live-session count
+    /// used for placement; `now_ms` seeds the idle clock.
+    pub fn ensure(&self, endpoint: &str, initial: usize, loads: &[usize], now_ms: u64) {
+        let mut sets = self.sets.lock().unwrap();
+        if sets.contains_key(endpoint) {
+            return;
+        }
+        let want = initial.clamp(1, self.pool_size);
+        let mut set = ReplicaSet {
+            workers: Vec::new(),
+            next: 0,
+            gate: Arc::new(Gate { count: Mutex::new(0), cv: Condvar::new() }),
+            last_busy_ms: now_ms,
+        };
+        for _ in 0..want {
+            if let Some(w) = pick_worker(self.pool_size, &set.workers, &sets, loads) {
+                set.workers.push(w);
+            }
+        }
+        sets.insert(endpoint.to_string(), set);
+    }
+
+    /// Current replica count (0 if the endpoint has no set).
+    pub fn replicas(&self, endpoint: &str) -> usize {
+        self.sets.lock().unwrap().get(endpoint).map(|s| s.workers.len()).unwrap_or(0)
+    }
+
+    /// Batches dispatched but not yet fully answered.
+    pub fn in_flight(&self, endpoint: &str) -> u64 {
+        self.sets
+            .lock()
+            .unwrap()
+            .get(endpoint)
+            .map(|s| *s.gate.count.lock().unwrap())
+            .unwrap_or(0)
+    }
+
+    /// Pick the next replica for a batch (round robin) and charge one
+    /// in-flight batch against the endpoint. Returns the worker index
+    /// and the guard to embed in the [`ServeWork`].
+    pub fn checkout(&self, endpoint: &str) -> Option<(usize, InFlightGuard)> {
+        let mut sets = self.sets.lock().unwrap();
+        let set = sets.get_mut(endpoint)?;
+        if set.workers.is_empty() {
+            return None;
+        }
+        let worker = set.workers[set.next % set.workers.len()];
+        set.next = set.next.wrapping_add(1);
+        *set.gate.count.lock().unwrap() += 1;
+        Some((worker, InFlightGuard(set.gate.clone())))
+    }
+
+    /// Add one replica on the least-loaded worker not already hosting
+    /// this endpoint. Returns the new count, or `None` when every
+    /// worker already hosts one (or the endpoint has no set).
+    pub fn scale_up(&self, endpoint: &str, loads: &[usize]) -> Option<usize> {
+        let mut sets = self.sets.lock().unwrap();
+        let taken: Vec<usize> =
+            sets.get(endpoint).map(|s| s.workers.clone()).unwrap_or_default();
+        let w = pick_worker(self.pool_size, &taken, &sets, loads)?;
+        let set = sets.get_mut(endpoint)?;
+        set.workers.push(w);
+        Some(set.workers.len())
+    }
+
+    /// Remove the most recently added replica. Returns the new count;
+    /// never drops below one (retire removes the whole set instead).
+    pub fn scale_down(&self, endpoint: &str) -> Option<usize> {
+        let mut sets = self.sets.lock().unwrap();
+        let set = sets.get_mut(endpoint)?;
+        if set.workers.len() <= 1 {
+            return None;
+        }
+        set.workers.pop();
+        Some(set.workers.len())
+    }
+
+    /// One autoscaler observation: refresh the idle clock and return
+    /// `(replicas, idle_ms)` for [`super::AutoscalePolicy::decide`].
+    /// The endpoint counts as busy while anything is queued or in
+    /// flight.
+    pub fn observe(&self, endpoint: &str, queue_depth: usize, now_ms: u64) -> (usize, u64) {
+        let mut sets = self.sets.lock().unwrap();
+        let Some(set) = sets.get_mut(endpoint) else { return (0, 0) };
+        let busy = queue_depth > 0 || *set.gate.count.lock().unwrap() > 0;
+        if busy {
+            set.last_busy_ms = now_ms;
+        }
+        (set.workers.len(), now_ms.saturating_sub(set.last_busy_ms))
+    }
+
+    /// Mark `endpoint` busy at `now_ms` without reading it — called
+    /// when `InferServed` bus telemetry shows a batch answered since
+    /// the last drive round, so the idle clock only starts once
+    /// traffic has truly stopped.
+    pub fn touch(&self, endpoint: &str, now_ms: u64) {
+        if let Some(set) = self.sets.lock().unwrap().get_mut(endpoint) {
+            set.last_busy_ms = now_ms;
+        }
+    }
+
+    /// Block until every in-flight batch for `endpoint` has answered
+    /// (bounded by [`DRAIN_TIMEOUT_MS`]). Workers only ever decrement
+    /// the gate, so this cannot deadlock against the pool. Returns
+    /// whether the drain completed.
+    pub fn drain(&self, endpoint: &str) -> bool {
+        let gate = {
+            let sets = self.sets.lock().unwrap();
+            match sets.get(endpoint) {
+                Some(s) => s.gate.clone(),
+                None => return true,
+            }
+        };
+        let deadline = Duration::from_millis(DRAIN_TIMEOUT_MS);
+        let mut count = gate.count.lock().unwrap();
+        while *count > 0 {
+            let (next, timeout) = gate.cv.wait_timeout(count, deadline).unwrap();
+            count = next;
+            if timeout.timed_out() {
+                return *count == 0;
+            }
+        }
+        true
+    }
+
+    /// Forget `endpoint`'s set entirely (retire).
+    pub fn remove(&self, endpoint: &str) {
+        self.sets.lock().unwrap().remove(endpoint);
+    }
+
+    /// Every endpoint with a live set.
+    pub fn endpoints(&self) -> Vec<String> {
+        self.sets.lock().unwrap().keys().cloned().collect()
+    }
+
+    /// Checkpoint bytes for `id`, loading (once) through `load` on the
+    /// first request and `Arc`-sharing every subsequent one.
+    pub fn params_for(
+        &self,
+        id: &ObjectId,
+        load: impl FnOnce() -> Result<Vec<u8>, String>,
+    ) -> Result<Arc<Vec<u8>>, String> {
+        let mut params = self.params.lock().unwrap();
+        if let Some(bytes) = params.get(id) {
+            return Ok(bytes.clone());
+        }
+        let bytes = Arc::new(load()?);
+        params.insert(id.clone(), bytes.clone());
+        Ok(bytes)
+    }
+
+    /// Drop cached params whose object is no longer pinned by any
+    /// endpoint version (called after retires alongside GC).
+    pub fn prune_params(&self, pinned: &[ObjectId]) {
+        self.params.lock().unwrap().retain(|id, _| pinned.contains(id));
+    }
+}
+
+/// Least-loaded worker not in `taken`: load = live training sessions
+/// (`loads`) + replicas every set already placed there.
+fn pick_worker(
+    pool_size: usize,
+    taken: &[usize],
+    sets: &BTreeMap<String, ReplicaSet>,
+    loads: &[usize],
+) -> Option<usize> {
+    let mut placed = vec![0usize; pool_size];
+    for set in sets.values() {
+        for &w in &set.workers {
+            if w < pool_size {
+                placed[w] += 1;
+            }
+        }
+    }
+    (0..pool_size)
+        .filter(|w| !taken.contains(w))
+        .min_by_key(|&w| (loads.get(w).copied().unwrap_or(0) + placed[w], w))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn oid(s: &str) -> ObjectId {
+        ObjectId(s.to_string())
+    }
+
+    #[test]
+    fn placement_prefers_the_quietest_worker() {
+        let m = ReplicaManager::new(4);
+        // Worker 2 is idle; 0/1/3 carry training sessions.
+        m.ensure("prod", 1, &[2, 1, 0, 3], 0);
+        let (w, _guard) = m.checkout("prod").unwrap();
+        assert_eq!(w, 2);
+        // Scale-ups land on distinct workers, least-loaded first.
+        assert_eq!(m.scale_up("prod", &[2, 1, 0, 3]), Some(2));
+        assert_eq!(m.scale_up("prod", &[2, 1, 0, 3]), Some(3));
+        assert_eq!(m.scale_up("prod", &[2, 1, 0, 3]), Some(4));
+        // Every worker hosts one: no fifth replica.
+        assert_eq!(m.scale_up("prod", &[2, 1, 0, 3]), None);
+    }
+
+    #[test]
+    fn checkout_round_robins_and_scale_down_keeps_one() {
+        let m = ReplicaManager::new(3);
+        m.ensure("prod", 3, &[0, 0, 0], 0);
+        assert_eq!(m.replicas("prod"), 3);
+        let mut seen = Vec::new();
+        for _ in 0..6 {
+            let (w, _g) = m.checkout("prod").unwrap();
+            seen.push(w);
+        }
+        assert_eq!(&seen[0..3], &seen[3..6], "round robin repeats the rotation");
+        assert_eq!(m.scale_down("prod"), Some(2));
+        assert_eq!(m.scale_down("prod"), Some(1));
+        assert_eq!(m.scale_down("prod"), None, "the last replica stays");
+        assert_eq!(m.replicas("prod"), 1);
+    }
+
+    #[test]
+    fn drain_waits_for_guards_and_observe_tracks_idle() {
+        let m = ReplicaManager::new(2);
+        m.ensure("prod", 1, &[0, 0], 100);
+        let (_, guard) = m.checkout("prod").unwrap();
+        assert_eq!(m.in_flight("prod"), 1);
+        // Busy while in flight: the idle clock pins to now.
+        assert_eq!(m.observe("prod", 0, 150), (1, 0));
+        // Another thread answers the batch; drain unblocks.
+        let t = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            drop(guard);
+        });
+        assert!(m.drain("prod"));
+        t.join().unwrap();
+        assert_eq!(m.in_flight("prod"), 0);
+        // Idle accumulates from the last busy observation.
+        assert_eq!(m.observe("prod", 0, 400), (1, 250));
+        // Queued work resets it.
+        assert_eq!(m.observe("prod", 3, 500), (1, 0));
+        // Unknown endpoints are trivially drained and replica-less.
+        assert!(m.drain("nope"));
+        assert_eq!(m.observe("nope", 9, 0), (0, 0));
+    }
+
+    #[test]
+    fn params_cache_loads_once_and_prunes_unpinned() {
+        let m = ReplicaManager::new(1);
+        let mut loads = 0;
+        for _ in 0..3 {
+            let bytes = m
+                .params_for(&oid("abc"), || {
+                    loads += 1;
+                    Ok(vec![1, 2, 3])
+                })
+                .unwrap();
+            assert_eq!(*bytes, vec![1, 2, 3]);
+        }
+        assert_eq!(loads, 1, "the object store is read once per object");
+        // Load errors propagate and are not cached.
+        assert!(m.params_for(&oid("bad"), || Err("missing".into())).is_err());
+        m.prune_params(&[]);
+        let bytes = m
+            .params_for(&oid("abc"), || {
+                loads += 1;
+                Ok(vec![9])
+            })
+            .unwrap();
+        assert_eq!(*bytes, vec![9], "pruned entries reload");
+        assert_eq!(loads, 2);
+    }
+}

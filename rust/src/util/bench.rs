@@ -37,10 +37,25 @@ impl BenchResult {
         stats(&self.samples_ms).p50
     }
 
+    pub fn p99_ms(&self) -> f64 {
+        stats(&self.samples_ms).p99
+    }
+
     /// Units per second, if units were declared.
     pub fn throughput(&self) -> Option<f64> {
         self.units_per_iter.map(|u| u / (self.mean_ms() / 1000.0))
     }
+}
+
+/// One recorded perf-gate verdict (an assertion the full-scale bench
+/// enforces, carried into the JSON dump so CI artifacts show *which*
+/// gate tripped, not just that the process died).
+#[derive(Debug, Clone)]
+pub struct GateResult {
+    pub name: String,
+    pub pass: bool,
+    /// The measured values behind the verdict, human-readable.
+    pub detail: String,
 }
 
 /// Benchmark runner: collects results, prints a report.
@@ -49,6 +64,7 @@ pub struct Bench {
     warmup_iters: usize,
     sample_count: usize,
     results: Vec<BenchResult>,
+    gates: Vec<GateResult>,
 }
 
 impl Bench {
@@ -68,6 +84,7 @@ impl Bench {
                 15
             },
             results: Vec::new(),
+            gates: Vec::new(),
         }
     }
 
@@ -112,6 +129,21 @@ impl Bench {
 
     pub fn result(&self, name: &str) -> Option<&BenchResult> {
         self.results.iter().find(|r| r.name == name)
+    }
+
+    /// Record a perf-gate verdict and return `pass` unchanged, so
+    /// benches can write `let ok = b.gate(...); ...; assert!(ok)` —
+    /// record first, save the JSON, *then* panic, and the artifact
+    /// still carries the failing gate.
+    pub fn gate(&mut self, name: &str, pass: bool, detail: &str) -> bool {
+        eprintln!("  gate {:<47} {} ({})", name, if pass { "PASS" } else { "FAIL" }, detail);
+        self.gates.push(GateResult { name: name.to_string(), pass, detail: detail.to_string() });
+        pass
+    }
+
+    /// All recorded gates passed (vacuously true with none recorded).
+    pub fn gates_pass(&self) -> bool {
+        self.gates.iter().all(|g| g.pass)
     }
 
     /// Print the human-readable report; returns it as a string too.
@@ -159,7 +191,10 @@ impl Bench {
         lines
     }
 
-    /// Dump machine-readable results to `target/bench-results/<suite>.json`.
+    /// Dump machine-readable results (ops/sec, p50/p99, gate verdicts)
+    /// to `target/bench-results/BENCH_<suite>.json` — the artifact
+    /// `scripts/bench_smoke.sh` collects so the perf trajectory is
+    /// recorded across PRs.
     pub fn save_json(&self) {
         let mut arr = Vec::new();
         for r in &self.results {
@@ -169,18 +204,31 @@ impl Bench {
                 .set("mean_ms", s.mean.into())
                 .set("p50_ms", s.p50.into())
                 .set("p95_ms", s.p95.into())
+                .set("p99_ms", s.p99.into())
                 .set("std_ms", s.std.into())
                 .set("samples", (s.n as u64).into());
             if let Some(tp) = r.throughput() {
-                o.set("throughput_per_s", tp.into());
+                o.set("ops_per_s", tp.into());
             }
             arr.push(o);
         }
+        let mut gates = Vec::new();
+        for g in &self.gates {
+            let mut o = Json::obj();
+            o.set("name", g.name.as_str().into())
+                .set("pass", g.pass.into())
+                .set("detail", g.detail.as_str().into());
+            gates.push(o);
+        }
         let mut doc = Json::obj();
-        doc.set("suite", self.suite.as_str().into()).set("results", Json::Arr(arr));
+        doc.set("suite", self.suite.as_str().into())
+            .set("smoke", smoke().into())
+            .set("pass", self.gates_pass().into())
+            .set("results", Json::Arr(arr))
+            .set("gates", Json::Arr(gates));
         let dir = std::path::Path::new("target/bench-results");
         let _ = std::fs::create_dir_all(dir);
-        let path = dir.join(format!("{}.json", self.suite.replace([' ', '/'], "_")));
+        let path = dir.join(format!("BENCH_{}.json", self.suite.replace([' ', '/'], "_")));
         let _ = std::fs::write(path, doc.to_pretty());
     }
 
@@ -224,6 +272,16 @@ mod tests {
         std::env::set_var("BENCH_SMOKE", "0");
         assert!(!smoke());
         std::env::remove_var("BENCH_SMOKE");
+    }
+
+    #[test]
+    fn gates_record_and_return_their_verdict() {
+        let mut b = Bench::new("gate-suite");
+        b.record("x", vec![1.0], None);
+        assert!(b.gates_pass(), "no gates recorded yet");
+        assert!(b.gate("fast_enough", true, "p99 1ms <= 2ms"));
+        assert!(!b.gate("scaled_up", false, "peak replicas 1 < 2"));
+        assert!(!b.gates_pass());
     }
 
     #[test]

@@ -30,7 +30,16 @@ pub mod quickcheck;
 /// Compute simple summary statistics over a slice.
 pub fn stats(xs: &[f64]) -> Stats {
     if xs.is_empty() {
-        return Stats { n: 0, mean: 0.0, std: 0.0, min: 0.0, max: 0.0, p50: 0.0, p95: 0.0 };
+        return Stats {
+            n: 0,
+            mean: 0.0,
+            std: 0.0,
+            min: 0.0,
+            max: 0.0,
+            p50: 0.0,
+            p95: 0.0,
+            p99: 0.0,
+        };
     }
     let n = xs.len();
     let mean = xs.iter().sum::<f64>() / n as f64;
@@ -49,6 +58,7 @@ pub fn stats(xs: &[f64]) -> Stats {
         max: sorted[n - 1],
         p50: pct(0.5),
         p95: pct(0.95),
+        p99: pct(0.99),
     }
 }
 
@@ -62,6 +72,7 @@ pub struct Stats {
     pub max: f64,
     pub p50: f64,
     pub p95: f64,
+    pub p99: f64,
 }
 
 #[cfg(test)]
@@ -76,6 +87,7 @@ mod tests {
         assert_eq!(s.min, 1.0);
         assert_eq!(s.max, 5.0);
         assert_eq!(s.p50, 3.0);
+        assert_eq!(s.p99, 5.0);
     }
 
     #[test]

@@ -24,8 +24,8 @@
 //! * `GET /api/v1/durability`    — JSON WAL/snapshot/GC counters
 //!   dispatched as a `durability_status` query
 //! * `GET /api/v1/endpoints`     — JSON serving-endpoint registry
-//!   (active version + promotion history per endpoint) dispatched as
-//!   an `endpoints` query
+//!   (active version, promotion history, live replica count and
+//!   queue depth per endpoint) dispatched as an `endpoints` query
 //! * `POST /api/v1/endpoints/<name>/infer` — micro-batched inference
 //!   against a promoted endpoint; the body is
 //!   `{"user": "...", "x": [...]}` and the path names the endpoint.

@@ -103,6 +103,8 @@ fn sample_endpoint() -> EndpointView {
         model: "mnist_mlp".into(),
         session: "kim/mnist/2".into(),
         step: 120,
+        replicas: 2,
+        queue_depth: 5,
         versions: vec![
             EndpointVersionView {
                 version: 1,

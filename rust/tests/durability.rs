@@ -248,7 +248,8 @@ fn gc_sweeps_orphans_but_never_a_live_checkpoint_chain() {
     let _ = std::fs::remove_dir_all(&state);
 }
 
-/// Serve one row through the facade's micro-batcher, synchronously.
+/// Serve one row through the facade's micro-batcher, waiting out the
+/// executor serve lane's asynchronous reply.
 fn serve_sync(p: &NsmlPlatform, endpoint: &str, x: Vec<f32>) -> Vec<f32> {
     let slot = Arc::new(Mutex::new(None));
     let out = slot.clone();
@@ -262,8 +263,14 @@ fn serve_sync(p: &NsmlPlatform, endpoint: &str, x: Vec<f32>) -> Vec<f32> {
     )
     .unwrap();
     p.pump_serving(true);
-    let row = slot.lock().unwrap().take().expect("reply fired at flush");
-    row.probs
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(30);
+    loop {
+        if let Some(row) = slot.lock().unwrap().take() {
+            return row.probs;
+        }
+        assert!(std::time::Instant::now() < deadline, "serve reply never fired");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
 }
 
 /// Serving endpoints are durable: a promote → promote → rollback

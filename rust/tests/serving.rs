@@ -1,10 +1,13 @@
 //! Gating suite for the inference-serving subsystem: micro-batched
 //! execution is bitwise-identical to serving each request alone, the
 //! endpoint lifecycle (promote → rollback → rollforward → retire)
-//! holds end to end through dispatch, concurrent daemon clients are
-//! all answered with their own results, QPS quotas reject with
-//! machine-readable envelopes, and the batcher's flush policy obeys
-//! its invariants under arbitrary arrival patterns.
+//! holds end to end through dispatch, a rollback drains the replica
+//! set so no batch mixes endpoint versions, the autoscaler grows and
+//! shrinks the set through the drive loop, concurrent daemon clients
+//! are all answered with their own results, QPS quotas reject with
+//! machine-readable envelopes (and the sliding window is exact at
+//! window boundaries), and the batcher's flush policy obeys its
+//! invariants under arbitrary arrival patterns.
 
 use nsml::api::{
     ApiRequest, ApiResponse, DaemonOpts, ErrorCode, NsmlPlatform, PlatformConfig, PlatformService,
@@ -72,6 +75,16 @@ fn serve_one(s: &PlatformService, endpoint: &str, user: &str, x: Vec<f32>) -> (u
     }
 }
 
+/// Replies from the executor serve lane fire asynchronously from
+/// worker threads; spin (briefly) until `done` or fail the test.
+fn wait_until(what: &str, mut done: impl FnMut() -> bool) {
+    let deadline = std::time::Instant::now() + Duration::from_secs(30);
+    while !done() {
+        assert!(std::time::Instant::now() < deadline, "timed out waiting for {}", what);
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
 // ---------------------------------------------------------------------
 // Batched == sequential, bit for bit
 // ---------------------------------------------------------------------
@@ -113,7 +126,12 @@ fn batched_serving_is_bitwise_identical_to_sequential() {
     }
     assert_eq!(p.serving_stats().depth, rows.len());
     p.pump_serving(true);
-    assert_eq!(p.serving_stats().depth, 0, "flush answers everything");
+    assert_eq!(p.serving_stats().depth, 0, "flush dispatches everything");
+    // The batch executes on a replica's worker thread; replies land
+    // asynchronously.
+    wait_until("the shared batch to answer", || {
+        results.lock().unwrap().iter().all(Option::is_some)
+    });
 
     let batched = results.lock().unwrap();
     for (i, probs) in sequential.iter().enumerate() {
@@ -122,19 +140,19 @@ fn batched_serving_is_bitwise_identical_to_sequential() {
         assert_eq!(b, probs, "row {}: batched output must be bitwise identical", i);
     }
 
-    // The latency/batch telemetry event fired for the shared batch.
-    let batch_events = p.events.bus().read_since(
-        0,
-        0,
-        &nsml::events::EventFilter { kind: Some("infer".into()), ..Default::default() },
-    );
-    assert!(
+    // The latency/batch telemetry event fired for the shared batch —
+    // the worker publishes it right after the replies, so poll.
+    wait_until("the 48-row InferServed telemetry event", || {
+        let batch_events = p.events.bus().read_since(
+            0,
+            0,
+            &nsml::events::EventFilter { kind: Some("infer".into()), ..Default::default() },
+        );
         batch_events.events.iter().any(|e| match &e.kind {
             nsml::events::EventKind::InferServed { batch, .. } => *batch == rows.len() as u64,
             _ => false,
-        }),
-        "expected an InferServed event for the 48-row batch"
-    );
+        })
+    });
 }
 
 // ---------------------------------------------------------------------
@@ -354,6 +372,145 @@ fn concurrent_daemon_clients_all_get_their_own_answer() {
 }
 
 // ---------------------------------------------------------------------
+// Replica drain: no mixed-version batches across a rollback
+// ---------------------------------------------------------------------
+
+#[test]
+fn rollback_drains_in_flight_replicas_without_mixing_versions() {
+    let Some(p) = platform() else { return };
+    let s1 = p.run("kim", "mnist", quick(16, 4)).unwrap();
+    let s2 = p.run("kim", "mnist", quick(16, 5)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    let s = PlatformService::new(p);
+    assert_eq!(promote(&s, "prod", &s1), 1);
+    assert_eq!(promote(&s, "prod", &s2), 2);
+
+    // Queue a burst at v2 but do NOT pump: the requests are still
+    // sitting in the micro-batcher when the rollback arrives.
+    const K: usize = 24;
+    let versions: Arc<Mutex<Vec<Option<u64>>>> = Arc::new(Mutex::new(vec![None; K]));
+    let p = s.platform();
+    for i in 0..K {
+        let slot = versions.clone();
+        p.serve_enqueue(
+            "prod",
+            "kim",
+            row(i),
+            Box::new(move |res| {
+                let served = res.expect("a queued request must serve, not fail");
+                slot.lock().unwrap()[i] = Some(served.version);
+            }),
+        )
+        .unwrap();
+    }
+    assert_eq!(p.serving_stats().depth, K);
+
+    // Rollback quiesces first: the queue flushes at v2 and the replica
+    // set drains before the active cursor moves, so by the time the
+    // rollback *returns*, every queued request has answered — at v2.
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "prod".into(),
+        action: "rollback".into(),
+        session: None,
+    }) {
+        ApiResponse::Endpoint { endpoint } => assert_eq!(endpoint.active_version, 1),
+        other => panic!("rollback: {:?}", other),
+    }
+    let answered: Vec<u64> = versions
+        .lock()
+        .unwrap()
+        .iter()
+        .map(|v| v.expect("drain completed before the rollback returned"))
+        .collect();
+    assert!(
+        answered.iter().all(|&v| v == 2),
+        "no batch mixes endpoint versions across the rollback: {:?}",
+        answered
+    );
+
+    // The next request serves the rolled-back version.
+    let (v, _, _) = serve_one(&s, "prod", "kim", row(0));
+    assert_eq!(v, 1);
+}
+
+// ---------------------------------------------------------------------
+// Autoscaling through the drive loop
+// ---------------------------------------------------------------------
+
+#[test]
+fn autoscaler_grows_on_backlog_and_shrinks_after_idle() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = dir;
+    cfg.serving_scale_up_queue_depth = 4;
+    cfg.serving_scale_down_idle_ms = 50; // 5 drive rounds of virtual time
+    cfg.serving_max_replicas = 2;
+    let p = NsmlPlatform::new(cfg).unwrap();
+    let id = p.run("auto", "mnist", quick(16, 6)).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    let s = PlatformService::new(p);
+    promote(&s, "prod", &id);
+    let p = s.platform();
+
+    // Seed the replica set (first dispatch places min_replicas = 1).
+    let _ = serve_one(&s, "prod", "kim", row(0));
+    assert_eq!(p.endpoint_stats("prod").0, 1);
+
+    // A backlog deeper than the threshold, observed by a drive round,
+    // grows the set — and `drive` also flushes the batches.
+    let answered = Arc::new(Mutex::new(0usize));
+    for i in 0..8 {
+        let done = answered.clone();
+        p.serve_enqueue(
+            "prod",
+            "kim",
+            row(i),
+            Box::new(move |res| {
+                res.expect("burst request served");
+                *done.lock().unwrap() += 1;
+            }),
+        )
+        .unwrap();
+    }
+    p.drive_round(1).unwrap();
+    assert_eq!(p.endpoint_stats("prod").0, 2, "queue depth 8 >= 4 scales up");
+    // Partial batches may still be waiting out max_wait_ms; force the
+    // flush so the idle clock below starts from a clean queue.
+    p.pump_serving(true);
+    wait_until("the burst to answer", || *answered.lock().unwrap() == 8);
+
+    // Sustained idle (no queued or in-flight work) shrinks back to the
+    // floor, one step per round once 50 virtual ms have accumulated.
+    for _ in 0..20 {
+        p.drive_round(1).unwrap();
+        if p.endpoint_stats("prod").0 == 1 {
+            break;
+        }
+    }
+    assert_eq!(p.endpoint_stats("prod").0, 1, "idle endpoint returns to min_replicas");
+
+    // Both moves were published as ReplicaScaled bus events.
+    let scaled = p.events.bus().read_since(
+        0,
+        0,
+        &nsml::events::EventFilter { kind: Some("replica".into()), ..Default::default() },
+    );
+    let counts: Vec<u64> = scaled
+        .events
+        .iter()
+        .map(|e| match &e.kind {
+            nsml::events::EventKind::ReplicaScaled { replicas, .. } => *replicas,
+            other => panic!("{:?}", other),
+        })
+        .collect();
+    assert_eq!(counts, vec![2, 1], "one scale-up then one scale-down: {:?}", counts);
+}
+
+// ---------------------------------------------------------------------
 // Per-tenant QPS quotas
 // ---------------------------------------------------------------------
 
@@ -407,6 +564,63 @@ fn qps_quota_rejects_with_machine_readable_envelope() {
     for _ in 0..2 {
         let (_, _, probs) = serve_one(&s, "prod", "throttled", row(1));
         assert_eq!(probs.len(), 10);
+    }
+}
+
+// ---------------------------------------------------------------------
+// QPS sliding window at the window boundary (property test)
+// ---------------------------------------------------------------------
+
+#[test]
+fn qps_sliding_window_is_exact_at_window_boundaries() {
+    use nsml::tenancy::TenantRegistry;
+    // Seeded shapes: quota size, inter-request gap, and where the
+    // burst sits relative to a 1-second mark all vary.
+    for seed in 0..24u64 {
+        let max_qps = 1 + (seed % 7) as u32;
+        let step = 1 + (seed % 20);
+        let edge = 1_000 * (1 + seed % 5);
+        let reg = TenantRegistry::new(TenantQuota { max_qps, ..TenantQuota::default() });
+        // Exactly max_qps strictly-increasing timestamps straddling
+        // `edge`, total span well inside one window.
+        let t0 = edge.saturating_sub(step * (max_qps as u64 / 2)).max(1);
+        let stamps: Vec<u64> = (0..max_qps as u64).map(|i| t0 + i * step).collect();
+        for (i, &t) in stamps.iter().enumerate() {
+            assert!(
+                reg.try_request("burst", t).is_ok(),
+                "seed {}: request {}/{} at {} ms falsely rejected",
+                seed,
+                i + 1,
+                max_qps,
+                t
+            );
+        }
+        // A fixed-bucket counter would have reset at the 1-second mark
+        // and over-admitted; the sliding window holds the line.
+        let t_last = *stamps.last().unwrap();
+        assert_eq!(reg.try_request("burst", t_last).unwrap_err(), max_qps, "seed {}", seed);
+        // The rejection consumed no budget, and the burst's first
+        // request ages out exactly one window later: one slot frees,
+        // no more.
+        let freed = t0 + 1_000;
+        assert!(
+            reg.try_request("burst", freed).is_ok(),
+            "seed {}: a slot must free exactly 1000 ms after the first admit",
+            seed
+        );
+        assert!(reg.try_request("burst", freed).is_err(), "seed {}: only one slot freed", seed);
+        // One ms before that, nothing had aged out yet.
+        let reg2 = TenantRegistry::new(TenantQuota { max_qps, ..TenantQuota::default() });
+        for &t in &stamps {
+            reg2.try_request("burst", t).unwrap();
+        }
+        assert!(
+            reg2.try_request("burst", t0 + 999).is_err(),
+            "seed {}: the window is exactly 1000 ms wide",
+            seed
+        );
+        // Other tenants never share the burst's window.
+        assert!(reg.try_request("bystander", t_last).is_ok(), "seed {}", seed);
     }
 }
 

@@ -9,12 +9,30 @@
 # (rust/artifacts/manifest.json, built via `make artifacts`); when they
 # are absent we still build everything — catching signature/API rot —
 # and skip only the execution phase.
+#
+# Each executed bench writes a machine-readable
+# target/bench-results/BENCH_<suite>.json (ops/sec, p50/p99, gate
+# verdicts); CI uploads those as artifacts so the perf trajectory is
+# recorded across PRs.
 set -euo pipefail
 
 cd "$(dirname "$0")/../rust"
 
-echo "== cargo build --benches =="
-cargo build --release --benches
+# Build each bench target *by name*: a benches/bench_*.rs that fails to
+# compile — or was never registered in Cargo.toml — fails this phase
+# loudly instead of being silently skipped by a bulk --benches build.
+build_status=0
+for bench in ../benches/bench_*.rs; do
+  name="$(basename "$bench" .rs)"
+  echo "== cargo build --release --bench $name =="
+  if ! cargo build --release --bench "$name"; then
+    echo "BUILD FAILED: $name ($bench did not compile or is not a registered bench target)"
+    build_status=1
+  fi
+done
+if [ "$build_status" -ne 0 ]; then
+  exit "$build_status"
+fi
 
 if [ ! -f artifacts/manifest.json ]; then
   echo "artifacts not built (rust/artifacts/manifest.json missing):"
@@ -22,6 +40,7 @@ if [ ! -f artifacts/manifest.json ]; then
   exit 0
 fi
 
+rm -rf target/bench-results
 status=0
 for bench in ../benches/bench_*.rs; do
   name="$(basename "$bench" .rs)"
@@ -31,4 +50,8 @@ for bench in ../benches/bench_*.rs; do
     status=1
   fi
 done
+
+echo "== collected bench results =="
+ls -l target/bench-results/BENCH_*.json 2>/dev/null \
+  || echo "no BENCH_*.json results written (benches exited before finish())"
 exit $status
