@@ -1,0 +1,259 @@
+//! Observability overhead: the spine must be close to free.
+//!
+//! Three phases:
+//!
+//! * **histogram record** — the hot-path primitive (three relaxed
+//!   atomic adds + a log2). Gate: ≥ 10M records/s best-of-samples.
+//! * **daemon e2e, obs on vs off** — the same concurrent serving
+//!   workload through the daemon drive loop against two platforms that
+//!   differ only in `[obs] enabled`. Gate: the instrumented platform's
+//!   best wall-clock is within 5% of the uninstrumented one
+//!   (min-of-samples on both sides to shed scheduler noise).
+//! * **`GET /metrics` under load** — concurrent scrapers hammer the
+//!   Prometheus endpoint over keep-alive sockets while the daemon
+//!   serves inference. Scrapes render straight off the registry (no
+//!   service-channel hop), so p99 must stay bounded. Gate: ≤ 50 ms.
+//!
+//! Verdicts land in `target/bench-results/BENCH_obs.json`.
+//!
+//! Run: `cargo bench --bench bench_obs` (BENCH_SMOKE=1 shrinks the
+//! workload and skips the perf assertions).
+
+use nsml::api::{
+    service_channel, ApiRequest, ApiResponse, DaemonOpts, NsmlPlatform, PlatformConfig,
+    PlatformService,
+};
+use nsml::obs::MetricsRegistry;
+use nsml::util::bench::{smoke, Bench};
+use nsml::web::{serve_with, ServeOpts, WebState};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+const ROW: usize = 144; // one mnist_mlp request row
+
+fn row(seed: usize) -> Vec<f32> {
+    (0..ROW).map(|i| ((seed * 31 + i * 7) % 97) as f32 / 97.0).collect()
+}
+
+/// A service with one trained session promoted to endpoint "prod",
+/// with the observability spine on or off.
+fn serving_platform(obs: bool) -> PlatformService {
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = "artifacts".into();
+    cfg.obs = obs;
+    let p = NsmlPlatform::new(cfg).unwrap();
+    let opts = nsml::api::RunOpts {
+        total_steps: 16,
+        eval_every: 8,
+        checkpoint_every: 8,
+        ..Default::default()
+    };
+    let id = p.run("bench", "mnist", opts).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    p.promote_endpoint("prod", &id).unwrap();
+    PlatformService::new(p)
+}
+
+/// `clients` threads each push `per_client` serve requests through the
+/// daemon; returns the wall-clock for the whole phase in ms.
+fn serve_phase(service: &PlatformService, clients: usize, per_client: usize) -> f64 {
+    let (handle, rx) = service_channel();
+    let t0 = Instant::now();
+    let workers: Vec<_> = (0..clients)
+        .map(|c| {
+            let h = handle.clone();
+            std::thread::spawn(move || {
+                for r in 0..per_client {
+                    match h.call(ApiRequest::ServeInfer {
+                        endpoint: "prod".into(),
+                        user: format!("client{}", c),
+                        x: row(c * 1000 + r),
+                    }) {
+                        ApiResponse::Served { probs, .. } => assert_eq!(probs.len(), 10),
+                        other => panic!("serve_infer: {:?}", other),
+                    }
+                }
+            })
+        })
+        .collect();
+    drop(handle); // daemon exits once every client is answered and done
+    let opts =
+        DaemonOpts { chunk: 1, idle_wait: Duration::from_millis(1), ..DaemonOpts::default() };
+    service.run_daemon(&rx, &opts).unwrap();
+    for w in workers {
+        w.join().unwrap();
+    }
+    t0.elapsed().as_secs_f64() * 1000.0
+}
+
+/// Read one HTTP/1.1 200 response (headers + Content-Length body) off a
+/// keep-alive socket, leaving any extra bytes in `buf`.
+fn read_one_response(stream: &mut TcpStream, buf: &mut Vec<u8>) {
+    fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+        hay.windows(needle.len()).position(|w| w == needle)
+    }
+    let header_end = loop {
+        if let Some(pos) = find(buf, b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read");
+        assert!(n > 0, "server closed the keep-alive socket mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    assert!(head.starts_with("HTTP/1.1 200"), "{}", head);
+    let body_len = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse::<usize>().unwrap())
+        })
+        .unwrap_or(0);
+    while buf.len() < header_end + body_len {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read body");
+        assert!(n > 0, "server closed the keep-alive socket mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    buf.drain(..header_end + body_len);
+}
+
+fn p99(samples: &[f64]) -> f64 {
+    let mut s = samples.to_vec();
+    s.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    s[((s.len() - 1) * 99) / 100]
+}
+
+fn min_of(samples: &[f64]) -> f64 {
+    samples.iter().cloned().fold(f64::INFINITY, f64::min)
+}
+
+fn main() {
+    let smoke = smoke();
+    let mut bench = Bench::new("obs");
+
+    // -----------------------------------------------------------------
+    // Phase 1: the hot-path primitive, no platform needed.
+    // -----------------------------------------------------------------
+    let n: usize = if smoke { 10_000 } else { 2_000_000 };
+    let reg = MetricsRegistry::new(true);
+    let h = reg.histogram("nsml_bench_ms", &[("lane", "serve")]);
+    // Log-uniform latencies spanning the bucket table, cycled.
+    let vals: Vec<f64> =
+        (0..1024).map(|i| 0.002 * 2f64.powf((i * 37 % 2400) as f64 / 100.0)).collect();
+    bench.run_with_units("histogram record", n as f64, || {
+        for i in 0..n {
+            h.record(std::hint::black_box(vals[i & 1023]));
+        }
+    });
+    let rec = bench.result("histogram record").unwrap();
+    let record_ops = n as f64 / (min_of(&rec.samples_ms) / 1000.0);
+
+    // -----------------------------------------------------------------
+    // Phases 2 and 3 need the live platform (AOT artifacts).
+    // -----------------------------------------------------------------
+    let artifacts = std::path::Path::new("artifacts/manifest.json").exists();
+    let (clients, per_client, reps) = if smoke { (2, 2, 1) } else { (8, 25, 5) };
+    let total = (clients * per_client) as f64;
+    let mut overhead = 0.0;
+    let mut scrape_p99 = 0.0;
+    if artifacts {
+        // Obs off first, then on: identical workloads, min-of-samples.
+        let off = serving_platform(false);
+        let off_walls: Vec<f64> =
+            (0..reps).map(|_| serve_phase(&off, clients, per_client)).collect();
+        let on = serving_platform(true);
+        let on_walls: Vec<f64> = (0..reps).map(|_| serve_phase(&on, clients, per_client)).collect();
+        bench.record("daemon e2e obs=off", off_walls.clone(), Some(total));
+        bench.record("daemon e2e obs=on", on_walls.clone(), Some(total));
+        let (min_off, min_on) = (min_of(&off_walls), min_of(&on_walls));
+        overhead = (min_on - min_off) / min_off;
+        println!(
+            "daemon e2e: obs=off {:.1} ms vs obs=on {:.1} ms (min of {} → {:+.2}% overhead)",
+            min_off,
+            min_on,
+            reps,
+            overhead * 100.0
+        );
+
+        // Concurrent scrapers against the instrumented platform while
+        // the daemon keeps serving the same inference workload.
+        let p = on.platform();
+        let state = WebState {
+            sessions: p.sessions.clone(),
+            leaderboard: p.leaderboard.clone(),
+            cluster: Some(p.cluster.clone()),
+            events: p.events.clone(),
+            api: None,
+            obs: Some(p.obs.clone()),
+        };
+        let srv = serve_with(state, 0, ServeOpts { workers: 4, ..ServeOpts::default() }).unwrap();
+        let port = srv.port();
+        let scrapes_each = if smoke { 5 } else { 100 };
+        let lats: Arc<Mutex<Vec<f64>>> = Arc::new(Mutex::new(Vec::new()));
+        let scrapers: Vec<_> = (0..4)
+            .map(|_| {
+                let lats = lats.clone();
+                std::thread::spawn(move || {
+                    let mut stream = TcpStream::connect(("127.0.0.1", port)).expect("connect");
+                    stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+                    let mut buf = Vec::new();
+                    let mut mine = Vec::with_capacity(scrapes_each);
+                    for _ in 0..scrapes_each {
+                        let t0 = Instant::now();
+                        write!(stream, "GET /metrics HTTP/1.1\r\nHost: bench\r\n\r\n")
+                            .expect("write");
+                        read_one_response(&mut stream, &mut buf);
+                        mine.push(t0.elapsed().as_secs_f64() * 1000.0);
+                    }
+                    lats.lock().unwrap().extend(mine);
+                })
+            })
+            .collect();
+        serve_phase(&on, clients, per_client);
+        for s in scrapers {
+            s.join().unwrap();
+        }
+        srv.shutdown();
+        let lats = Arc::try_unwrap(lats).unwrap().into_inner().unwrap();
+        scrape_p99 = p99(&lats);
+        println!(
+            "GET /metrics: {} scrapes from 4 keep-alive clients, p99 {:.2} ms",
+            lats.len(),
+            scrape_p99
+        );
+        bench.record("GET /metrics under load", lats, None);
+    } else {
+        eprintln!("bench_obs: artifacts not built; skipping daemon e2e + scrape phases");
+    }
+
+    // Acceptance gates (full scale only — smoke exists to catch
+    // bit-rot, not to measure). Recorded before finish() so the JSON
+    // artifact carries the verdicts even when one fails the process.
+    if !smoke {
+        bench.gate(
+            "histogram_record_throughput",
+            record_ops >= 10_000_000.0,
+            &format!("{:.1}M records/s >= 10M/s", record_ops / 1e6),
+        );
+        if artifacts {
+            bench.gate(
+                "obs_overhead_bounded",
+                overhead <= 0.05,
+                &format!("obs-on within 5% of obs-off: {:+.2}%", overhead * 100.0),
+            );
+            bench.gate(
+                "metrics_scrape_p99_bounded",
+                scrape_p99 <= 50.0,
+                &format!("p99 {:.2} ms <= 50 ms under serving load", scrape_p99),
+            );
+        }
+    }
+    bench.finish();
+    if !smoke {
+        assert!(bench.gates_pass(), "an obs perf gate failed (see report above)");
+    }
+}

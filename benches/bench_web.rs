@@ -153,6 +153,7 @@ fn main() {
         cluster: Some(platform.cluster.clone()),
         events: platform.events.clone(),
         api: None,
+        obs: None,
     };
     let (_keep_api, rx) = nsml::api::service_channel();
     let (base_port, _baseline) = serve_thread_per_conn(mk_state(), 0).unwrap();

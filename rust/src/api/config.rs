@@ -98,6 +98,16 @@ pub struct PlatformConfig {
     /// Virtual milliseconds of an empty queue before the autoscaler
     /// removes a replica (`[serving] scale_down_idle_ms`).
     pub serving_scale_down_idle_ms: u64,
+    /// Observability (`[obs] enabled`): metrics registry + trace ring +
+    /// `/metrics` exposition. Off = every record path is a no-op branch
+    /// (the bench baseline for the instrumentation-overhead gate).
+    pub obs: bool,
+    /// Spans retained in the bounded trace ring
+    /// (`[obs] trace_capacity`).
+    pub obs_trace_capacity: usize,
+    /// Histogram snapshots (one per drive round) that windowed
+    /// p50/p95/p99 estimates look back over (`[obs] window`).
+    pub obs_window: usize,
 }
 
 impl Default for PlatformConfig {
@@ -136,6 +146,9 @@ impl Default for PlatformConfig {
             serving_max_replicas: 4,
             serving_scale_up_queue_depth: 16,
             serving_scale_down_idle_ms: 250,
+            obs: true,
+            obs_trace_capacity: 4096,
+            obs_window: 32,
         }
     }
 }
@@ -239,6 +252,11 @@ impl PlatformConfig {
             serving_scale_down_idle_ms: cfg
                 .int_or("serving", "scale_down_idle_ms", dflt.serving_scale_down_idle_ms as i64)
                 .max(1) as u64,
+            obs: cfg.bool_or("obs", "enabled", dflt.obs),
+            obs_trace_capacity: cfg
+                .int_or("obs", "trace_capacity", dflt.obs_trace_capacity as i64)
+                .max(16) as usize,
+            obs_window: cfg.int_or("obs", "window", dflt.obs_window as i64).max(1) as usize,
         })
     }
 }
@@ -330,6 +348,10 @@ min_replicas = 2
 max_replicas = 6
 scale_up_queue_depth = 8
 scale_down_idle_ms = 90
+[obs]
+enabled = false
+trace_capacity = 128
+window = 8
 "#;
         let c = PlatformConfig::from_toml_str(text).unwrap();
         assert_eq!(c.nodes, 4);
@@ -375,6 +397,9 @@ scale_down_idle_ms = 90
         assert_eq!(c.serving_max_replicas, 6);
         assert_eq!(c.serving_scale_up_queue_depth, 8);
         assert_eq!(c.serving_scale_down_idle_ms, 90);
+        assert!(!c.obs);
+        assert_eq!(c.obs_trace_capacity, 128);
+        assert_eq!(c.obs_window, 8);
     }
 
     #[test]
@@ -423,5 +448,9 @@ scale_down_idle_ms = 90
         assert_eq!(c.serving_max_replicas, 4);
         assert_eq!(c.serving_scale_up_queue_depth, 16);
         assert_eq!(c.serving_scale_down_idle_ms, 250);
+        // Observability defaults: on, 4096-span trace ring, 32-round window.
+        assert!(c.obs);
+        assert_eq!(c.obs_trace_capacity, 4096);
+        assert_eq!(c.obs_window, 32);
     }
 }

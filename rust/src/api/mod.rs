@@ -101,8 +101,9 @@ pub use service::{service_channel, DaemonOpts, PlatformService, ServiceCall, Ser
 pub use trial::PlatformTrialRunner;
 pub use wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, EndpointVersionView,
-    EndpointView, ErrorCode, ExecutorStats, NodeStatusView, RunParams, ServiceStatusView,
-    SessionView, TenantView, TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS, API_VERSION,
+    EndpointView, ErrorCode, ExecutorStats, HistogramView, MetricPointView, MetricsReportView,
+    NodeStatusView, RunParams, ServiceStatusView, SessionView, SpanView, TenantView, TraceView,
+    TrialSpec, WorkerStatView, ALL_KINDS, ALL_VERBS, API_VERSION,
 };
 
 use crate::cluster::Cluster;
@@ -112,6 +113,7 @@ use crate::durability::{self, Durability, SnapshotMeta, WalScan};
 use crate::events::{EventFilter, EventKind, EventLog, Level, Subscription};
 use crate::executor::{ExecutorPool, SessionCommand, SessionOutcome, WorkerCtx};
 use crate::leaderboard::{Leaderboard, Submission};
+use crate::obs::Obs;
 use crate::runtime::{Engine, TensorData, TrainableModel};
 use crate::scheduler::{ElectionGroup, JobSpec, Master, SubmitOutcome};
 use crate::serving::{
@@ -214,6 +216,14 @@ pub struct NsmlPlatform {
     /// Event-sourced durability: WAL + snapshots + GC. `None` when no
     /// state dir is configured or `[durability] enabled = false`.
     durability: Option<Durability>,
+    /// Observability: the metrics registry and the request-trace ring
+    /// (`[obs]` config). Populated by [`pump_obs`](Self::pump_obs) (a
+    /// derived bus consumer rolled forward each drive round) plus
+    /// direct instrumentation on the dispatch/HTTP/WAL paths.
+    pub obs: Obs,
+    /// The obs pump's private bus cursor (unfiltered: it rolls every
+    /// event kind into the registry).
+    obs_sub: std::sync::Mutex<Subscription>,
     /// Daemon drive-loop telemetry (rounds, durations, dispatches),
     /// read back through the `service_status` verb. Rounds tick only
     /// under [`PlatformService::run_daemon`]; the dispatch counter
@@ -251,6 +261,8 @@ impl NsmlPlatform {
         let autoscale_sub = std::sync::Mutex::new(
             events.bus().subscribe().with_filter(EventFilter::default().with_kind("infer")),
         );
+        let obs = Obs::new(clock.clone(), config.obs, config.obs_trace_capacity);
+        let obs_sub = std::sync::Mutex::new(events.bus().subscribe());
         // The WAL subscription has the same requirement — and opening
         // the log now also hands us last run's tail for recovery.
         let mut recovery = None;
@@ -268,6 +280,12 @@ impl NsmlPlatform {
             }
             _ => None,
         };
+        if let Some(d) = &durability {
+            d.set_metrics(
+                obs.metrics.histogram("nsml_wal_append_ms", &[]),
+                obs.metrics.histogram("nsml_wal_fsync_ms", &[]),
+            );
+        }
         let cluster = Cluster::homogeneous(
             clock.clone(),
             events.clone(),
@@ -333,6 +351,8 @@ impl NsmlPlatform {
             consumers,
             autoscale_sub,
             durability,
+            obs,
+            obs_sub,
             loop_stats: std::sync::Mutex::new(LoopStats::default()),
             config,
         };
@@ -739,6 +759,7 @@ impl NsmlPlatform {
         //    leaderboard, samples reach the monitor — via the bus, not
         //    direct calls.
         self.pump_consumers();
+        self.pump_obs();
         // 8. …and the durability consumer: durable events reach the
         //    WAL, and every `snapshot_every` records the world dump is
         //    compacted and the log rotates.
@@ -856,6 +877,126 @@ impl NsmlPlatform {
                 }
             }
         }
+    }
+
+    /// Roll the event stream into the metrics registry and the trace
+    /// ring: the obs pump is another derived bus consumer, pumped once
+    /// per drive round. Steals, admission decisions, replica scaling,
+    /// serving latencies, loop telemetry and state transitions all
+    /// become counters/gauges/histograms here; events whose subject was
+    /// tagged with a trace id (a traced `run` dispatch) also land as
+    /// spans. Afterwards it samples gauges the bus does not carry —
+    /// sessions by state, per-tenant GPU-seconds, per-subscriber bus
+    /// lag — and rotates the histogram windows so `windowed_quantile`
+    /// tracks the last `[obs] window` rounds.
+    fn pump_obs(&self) {
+        if !self.obs.enabled() {
+            return;
+        }
+        let m = &self.obs.metrics;
+        let drained = self.obs_sub.lock().unwrap().poll();
+        for e in &drained {
+            // Async run-path spans: a dispatch tagged this subject, so
+            // its later bus events join the trace (at event time —
+            // `Tracer::get` orders by timestamp, not arrival).
+            let traced = |name: String, detail: String| {
+                if let Some(t) = self.obs.traces.tag_of(&e.subject) {
+                    self.obs.traces.record(&t, e.at_ms, 0.0, &name, &e.source, &detail);
+                }
+            };
+            match &e.kind {
+                EventKind::WorkerStolen { .. } => m.counter("nsml_steals_total", &[]).inc(),
+                EventKind::AdmissionDecided { decision, user } => {
+                    m.counter("nsml_admission_total", &[("decision", decision)]).inc();
+                    traced(format!("admission.{}", decision), format!("user={}", user));
+                }
+                EventKind::PlacementDecided { node, from_queue } => {
+                    m.counter("nsml_placements_total", &[]).inc();
+                    traced(
+                        "placement".into(),
+                        format!("node={} from_queue={}", node, from_queue),
+                    );
+                }
+                EventKind::StateChanged { from, to, step } => {
+                    m.counter("nsml_state_transitions_total", &[("to", to)]).inc();
+                    traced(format!("state.{}", to), format!("from={} step={}", from, step));
+                }
+                EventKind::CheckpointSaved { step, .. } => {
+                    m.counter("nsml_checkpoints_total", &[]).inc();
+                    traced("checkpoint".into(), format!("step={}", step));
+                }
+                EventKind::ReplicaScaled { replicas, .. } => {
+                    m.gauge("nsml_replicas", &[("endpoint", &e.subject)]).set(*replicas as f64);
+                }
+                EventKind::InferServed { batch, latency_ms } => {
+                    m.histogram("nsml_serving_latency_ms", &[("endpoint", &e.subject)])
+                        .record(*latency_ms);
+                    m.histogram("nsml_serving_batch_size", &[("endpoint", &e.subject)])
+                        .record(*batch as f64);
+                }
+                EventKind::UtilizationSampled { utilization, free_gpus, queue_depth, .. } => {
+                    m.gauge("nsml_cluster_utilization", &[]).set(*utilization);
+                    m.gauge("nsml_free_gpus", &[]).set(*free_gpus as f64);
+                    m.gauge("nsml_queue_depth", &[]).set(*queue_depth as f64);
+                }
+                EventKind::LoopSampled { round_ms, rounds_per_sec, .. } => {
+                    m.histogram("nsml_loop_round_ms", &[]).record(*round_ms);
+                    m.gauge("nsml_loop_rounds_per_sec", &[]).set(*rounds_per_sec);
+                }
+                EventKind::EndpointChanged { action, .. } => {
+                    m.counter("nsml_endpoint_changes_total", &[("action", action)]).inc();
+                }
+                _ => {}
+            }
+        }
+        // Gauges the bus does not carry, sampled fresh each round.
+        let mut by_state = std::collections::HashMap::new();
+        for rec in self.sessions.list() {
+            *by_state.entry(rec.state.as_str()).or_insert(0u64) += 1;
+        }
+        for state in ["queued", "preparing", "running", "paused", "done", "failed", "stopped"] {
+            m.gauge("nsml_sessions", &[("state", state)])
+                .set(*by_state.get(state).unwrap_or(&0) as f64);
+        }
+        let now = self.clock.now_ms();
+        for user in self.tenancy.registry.users() {
+            m.gauge("nsml_tenant_gpu_seconds", &[("user", &user)])
+                .set(self.tenancy.accountant.usage_at(&user, now));
+        }
+        // Per-subscriber bus lag + lifetime ring evictions (satellite:
+        // the same numbers ride `events_since` responses).
+        m.gauge("nsml_bus_subscriber_dropped", &[("consumer", "views")])
+            .set(self.consumers.lock().unwrap().dropped() as f64);
+        m.gauge("nsml_bus_subscriber_dropped", &[("consumer", "autoscale")])
+            .set(self.autoscale_sub.lock().unwrap().dropped() as f64);
+        m.gauge("nsml_bus_subscriber_dropped", &[("consumer", "obs")])
+            .set(self.obs_sub.lock().unwrap().dropped() as f64);
+        if let Some(d) = &self.durability {
+            m.gauge("nsml_bus_subscriber_dropped", &[("consumer", "wal")])
+                .set(d.stats().wal_dropped as f64);
+        }
+        m.gauge("nsml_bus_overflow_total", &[]).set(self.events.bus().overflow() as f64);
+        // Advance the quantile windows, then refresh the windowed-p99
+        // serving gauges (the autoscaling roadmap's feedback signal).
+        m.rotate_windows(self.config.obs_window);
+        let mut worst = 0.0f64;
+        for ep in self.endpoints.list() {
+            let (_, p99) = self.endpoint_latency(&ep.name);
+            m.gauge("nsml_serving_latency_p99_ms", &[("endpoint", &ep.name)]).set(p99);
+            worst = worst.max(p99);
+        }
+        m.gauge("nsml_serving_latency_p99_ms", &[]).set(worst);
+    }
+
+    /// Windowed serving-latency quantiles `(p50_ms, p99_ms)` for one
+    /// endpoint, over the last `[obs] window` drive rounds. Zeros
+    /// before any request is served or with observability off.
+    pub fn endpoint_latency(&self, name: &str) -> (f64, f64) {
+        if !self.obs.enabled() {
+            return (0.0, 0.0);
+        }
+        let h = self.obs.metrics.histogram("nsml_serving_latency_ms", &[("endpoint", name)]);
+        (h.windowed_quantile(0.50), h.windowed_quantile(0.99))
     }
 
     /// Publish a `StateChanged` transition for `id` at `level`, given
@@ -1391,9 +1532,16 @@ impl NsmlPlatform {
                 user, max_qps
             )));
         }
+        // Carry the caller's trace context into the queue: the flush
+        // (and the batch execution) happen rounds later on whatever
+        // thread the batch lands on, so the id must ride the request.
+        let trace = crate::obs::trace::current();
+        if let Some(t) = &trace {
+            self.obs.span(t, 0.0, "serving.enqueue", "serving", &format!("endpoint={}", endpoint));
+        }
         self.serving.enqueue(
             endpoint,
-            PendingInfer { user: user.to_string(), x, enqueued_at_ms: now, reply },
+            PendingInfer { user: user.to_string(), x, enqueued_at_ms: now, reply, trace },
         );
         Ok(())
     }
@@ -1434,6 +1582,28 @@ impl NsmlPlatform {
     /// holds an in-flight guard until every reply fires — the two
     /// halves of the no-mixed-version invariant.
     fn dispatch_serving_batch(&self, endpoint: &str, batch: Vec<PendingInfer>) {
+        // One flush span per distinct trace in the batch; the duration
+        // is that request's queue wait (enqueue → flush).
+        if self.obs.enabled() {
+            let now = self.clock.now_ms();
+            let n = batch.len();
+            let mut seen: Vec<&str> = Vec::new();
+            for req in &batch {
+                if let Some(t) = req.trace.as_deref() {
+                    if !seen.contains(&t) {
+                        seen.push(t);
+                        let wait = now.saturating_sub(req.enqueued_at_ms) as f64;
+                        self.obs.span(
+                            t,
+                            wait,
+                            "serving.flush",
+                            "serving",
+                            &format!("endpoint={} batch={}", endpoint, n),
+                        );
+                    }
+                }
+            }
+        }
         if !self.autoscale.enabled() {
             self.run_serving_batch(endpoint, batch);
             return;
@@ -1572,6 +1742,23 @@ impl NsmlPlatform {
         match self.with_served_model(endpoint, &v, |m| m.serve_rows(&rows)) {
             Ok(outs) => {
                 let latency_ms = t0.elapsed().as_secs_f64() * 1000.0;
+                if self.obs.enabled() {
+                    let mut seen: Vec<&str> = Vec::new();
+                    for req in &batch {
+                        if let Some(t) = req.trace.as_deref() {
+                            if !seen.contains(&t) {
+                                seen.push(t);
+                                self.obs.span(
+                                    t,
+                                    latency_ms,
+                                    "serving.batch",
+                                    "serving",
+                                    &format!("endpoint={} v{} batch={}", endpoint, v.version, n),
+                                );
+                            }
+                        }
+                    }
+                }
                 for (req, probs) in batch.into_iter().zip(outs) {
                     let row = crate::serving::ServedRow { probs, version: v.version, batch: n };
                     (req.reply)(Ok(row));

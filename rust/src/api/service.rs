@@ -36,7 +36,8 @@
 
 use super::wire::{
     ApiError, ApiRequest, ApiResponse, BoardRow, ClusterView, DurabilityView, EndpointView,
-    ExecutorStats, NodeStatusView, SessionView, TenantView, WorkerStatView,
+    ExecutorStats, MetricsReportView, NodeStatusView, SessionView, SpanView, TenantView,
+    TraceView, WorkerStatView,
 };
 use super::{NsmlPlatform, RunOpts};
 use crate::cluster::NodeId;
@@ -51,6 +52,11 @@ use std::time::{Duration, Instant};
 pub struct ServiceCall {
     req: ApiRequest,
     reply: mpsc::Sender<ApiResponse>,
+    /// The caller's trace id. [`ServiceHandle::call`] captures the
+    /// calling thread's trace context (minting a fresh id when there is
+    /// none), so request-scoped traces survive the channel hop onto the
+    /// platform thread.
+    trace: Option<String>,
 }
 
 impl ServiceCall {
@@ -76,8 +82,10 @@ impl ServiceHandle {
     /// Dispatch a request and block for the reply. If the service side
     /// is gone, returns an `internal` error envelope instead of hanging.
     pub fn call(&self, req: ApiRequest) -> ApiResponse {
+        let trace =
+            crate::obs::trace::current().or_else(|| Some(crate::obs::trace::mint()));
         let (reply, rx) = mpsc::channel();
-        if self.tx.send(ServiceCall { req, reply }).is_err() {
+        if self.tx.send(ServiceCall { req, reply, trace }).is_err() {
             return ApiResponse::Error { error: ApiError::internal("platform service is not running") };
         }
         rx.recv().unwrap_or_else(|_| ApiResponse::Error {
@@ -162,7 +170,47 @@ impl PlatformService {
     }
 
     /// Execute one request. Total: every outcome is an `ApiResponse`.
+    ///
+    /// Joins the calling thread's trace context (minting a fresh id when
+    /// there is none) and times the dispatch into the obs registry —
+    /// see [`dispatch_traced`](Self::dispatch_traced).
     pub fn dispatch(&self, req: ApiRequest) -> ApiResponse {
+        let trace = crate::obs::trace::current().unwrap_or_else(crate::obs::trace::mint);
+        self.dispatch_traced(req, &trace)
+    }
+
+    /// Execute one request under an explicit trace id: sets the trace
+    /// context for the duration (so paths below — serving enqueue,
+    /// nested dispatches — inherit it), records per-verb latency
+    /// (`nsml_dispatch_ms{verb}` / `nsml_dispatch_total{verb}`) and a
+    /// `dispatch.<verb>` span, and tags submitted sessions so their
+    /// later bus events (placement, state transitions, checkpoints)
+    /// join the trace asynchronously.
+    pub fn dispatch_traced(&self, req: ApiRequest, trace: &str) -> ApiResponse {
+        let obs = self.platform.obs.clone();
+        let verb = req.verb();
+        // Span timestamp is platform (virtual) time at dispatch START:
+        // the dispatch may advance the sim clock, and spans recorded
+        // later for this trace must not appear to predate it.
+        let at_ms = obs.now_ms();
+        let t0 = Instant::now();
+        let prev = crate::obs::trace::current();
+        crate::obs::trace::set_current(Some(trace.to_string()));
+        let resp = self.dispatch_inner(req);
+        crate::obs::trace::set_current(prev);
+        if obs.enabled() {
+            let dur_ms = t0.elapsed().as_secs_f64() * 1000.0;
+            obs.metrics.counter("nsml_dispatch_total", &[("verb", verb)]).inc();
+            obs.metrics.histogram("nsml_dispatch_ms", &[("verb", verb)]).record(dur_ms);
+            obs.traces.record(trace, at_ms, dur_ms, &format!("dispatch.{}", verb), "service", "");
+            if let ApiResponse::Submitted { session } = &resp {
+                obs.traces.tag(session, trace);
+            }
+        }
+        resp
+    }
+
+    fn dispatch_inner(&self, req: ApiRequest) -> ApiResponse {
         self.audit(&req);
         match req {
             ApiRequest::Run(params) => match self.platform.run(&params.user, &params.dataset, params.run_opts()) {
@@ -367,6 +415,7 @@ impl PlatformService {
                     events: batch.events,
                     next: batch.next,
                     dropped: batch.dropped,
+                    overflow: self.platform.events.bus().overflow(),
                 }
             }
             ApiRequest::SubmitTrialBatch { user, dataset, trials } => {
@@ -422,13 +471,29 @@ impl PlatformService {
                     .iter()
                     .map(|ep| {
                         let (replicas, depth) = self.platform.endpoint_stats(&ep.name);
+                        let (p50, p99) = self.platform.endpoint_latency(&ep.name);
                         EndpointView::from_endpoint(ep)
                             .with_stats(replicas as u64, depth as u64)
+                            .with_latency(p50, p99)
                     })
                     .collect(),
             },
             ApiRequest::ServeInfer { endpoint, user, x } => {
                 self.serve_infer_sync(&endpoint, &user, x)
+            }
+            ApiRequest::MetricsReport => ApiResponse::Metrics {
+                metrics: MetricsReportView::from_snapshot(self.platform.obs.metrics.snapshot()),
+            },
+            ApiRequest::Trace { id } => {
+                let spans = self.platform.obs.traces.get(&id);
+                if spans.is_empty() {
+                    return ApiResponse::Error {
+                        error: ApiError::not_found(format!("no spans recorded for trace '{}'", id)),
+                    };
+                }
+                ApiResponse::Trace {
+                    trace: TraceView { id, spans: spans.iter().map(SpanView::from_span).collect() },
+                }
             }
         }
     }
@@ -469,9 +534,11 @@ impl PlatformService {
             Ok(_) => match self.platform.endpoints.get(endpoint) {
                 Some(ep) => {
                     let (replicas, depth) = self.platform.endpoint_stats(endpoint);
+                    let (p50, p99) = self.platform.endpoint_latency(endpoint);
                     ApiResponse::Endpoint {
                         endpoint: EndpointView::from_endpoint(&ep)
-                            .with_stats(replicas as u64, depth as u64),
+                            .with_stats(replicas as u64, depth as u64)
+                            .with_latency(p50, p99),
                     }
                 }
                 None => ApiResponse::Error {
@@ -549,8 +616,12 @@ impl PlatformService {
     pub fn serve_one(&self, rx: &mpsc::Receiver<ServiceCall>) -> bool {
         match rx.recv() {
             Ok(call) => {
-                let resp = self.dispatch(call.req);
-                let _ = call.reply.send(resp);
+                let ServiceCall { req, reply, trace } = call;
+                let resp = match &trace {
+                    Some(t) => self.dispatch_traced(req, t),
+                    None => self.dispatch(req),
+                };
+                let _ = reply.send(resp);
                 true
             }
             Err(_) => false,
@@ -642,7 +713,7 @@ impl PlatformService {
     /// micro-batcher — and signal that via the `true` return.
     fn serve_daemon_call(&self, call: ServiceCall) -> bool {
         self.platform.loop_dispatched();
-        let ServiceCall { req, reply } = call;
+        let ServiceCall { req, reply, trace } = call;
         match req {
             ApiRequest::ServeInfer { endpoint, user, x } => {
                 let reply_on_error = reply.clone();
@@ -659,14 +730,24 @@ impl PlatformService {
                     };
                     let _ = reply.send(resp);
                 });
-                if let Err(error) = self.platform.serve_enqueue(&endpoint, &user, x, cb) {
+                // The enqueue span attaches to the caller's trace; the
+                // flush/batch spans pick it up from PendingInfer.trace
+                // once the micro-batcher fires rounds later.
+                let prev = crate::obs::trace::current();
+                crate::obs::trace::set_current(trace);
+                let queued = self.platform.serve_enqueue(&endpoint, &user, x, cb);
+                crate::obs::trace::set_current(prev);
+                if let Err(error) = queued {
                     let _ = reply_on_error.send(ApiResponse::Error { error });
                     return false;
                 }
                 true
             }
             req => {
-                let resp = self.dispatch(req);
+                let resp = match &trace {
+                    Some(t) => self.dispatch_traced(req, t),
+                    None => self.dispatch(req),
+                };
                 let _ = reply.send(resp);
                 false
             }
@@ -995,7 +1076,7 @@ mod tests {
             subject: None,
             limit: 100,
         }) {
-            ApiResponse::Events { events, next, dropped } => {
+            ApiResponse::Events { events, next, dropped, .. } => {
                 assert_eq!(dropped, 0);
                 assert_eq!(events.len(), 1);
                 assert!(matches!(
@@ -1136,6 +1217,43 @@ mod tests {
         drop(rx);
         match handle.call(ApiRequest::list_sessions()) {
             ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::Internal),
+            other => panic!("{:?}", other),
+        }
+    }
+
+    #[test]
+    fn metrics_and_trace_verbs_observe_dispatches() {
+        let Some(s) = service() else { return };
+        // An unknown trace is a 404, not an empty success.
+        match s.dispatch(ApiRequest::Trace { id: "never-minted".into() }) {
+            ApiResponse::Error { error } => assert_eq!(error.code, crate::api::ErrorCode::NotFound),
+            other => panic!("{:?}", other),
+        }
+        // Dispatch under an explicit trace id; the span lands under it.
+        let resp = s.dispatch_traced(ApiRequest::ClusterStatus, "trace-1");
+        assert!(!resp.is_error(), "{:?}", resp);
+        match s.dispatch(ApiRequest::Trace { id: "trace-1".into() }) {
+            ApiResponse::Trace { trace } => {
+                assert_eq!(trace.id, "trace-1");
+                assert_eq!(trace.spans.len(), 1);
+                assert_eq!(trace.spans[0].name, "dispatch.cluster_status");
+                assert_eq!(trace.spans[0].source, "service");
+            }
+            other => panic!("{:?}", other),
+        }
+        // The registry counted and timed both dispatches above.
+        match s.dispatch(ApiRequest::MetricsReport) {
+            ApiResponse::Metrics { metrics } => {
+                assert!(metrics.enabled);
+                let count: f64 = metrics
+                    .counters
+                    .iter()
+                    .filter(|c| c.name == "nsml_dispatch_total")
+                    .map(|c| c.value)
+                    .sum();
+                assert!(count >= 3.0, "{:?}", metrics.counters);
+                assert!(metrics.histograms.iter().any(|h| h.name == "nsml_dispatch_ms"));
+            }
             other => panic!("{:?}", other),
         }
     }

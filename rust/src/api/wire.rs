@@ -53,6 +53,8 @@ pub const ALL_VERBS: &[&str] = &[
     "promote",
     "endpoints",
     "serve_infer",
+    "metrics_report",
+    "trace",
 ];
 
 /// Every response kind, in the order of the [`ApiResponse`] variants.
@@ -74,6 +76,8 @@ pub const ALL_KINDS: &[&str] = &[
     "endpoint",
     "endpoints",
     "served",
+    "metrics",
+    "trace",
     "error",
 ];
 
@@ -394,6 +398,14 @@ pub enum ApiRequest {
     /// (`POST /api/v1/endpoints/<name>/infer`). Requests dispatched
     /// concurrently share an engine execution.
     ServeInfer { endpoint: String, user: String, x: Vec<f32> },
+    /// Every registered metric series — counters, gauges, and
+    /// histograms with windowed p50/p95/p99 (`nsml metrics`,
+    /// `GET /api/v1/metrics`; `GET /metrics` renders the same registry
+    /// as Prometheus text).
+    MetricsReport,
+    /// The assembled span timeline of one trace id
+    /// (`nsml trace <id>`, `GET /api/v1/trace/<id>`).
+    Trace { id: String },
 }
 
 impl ApiRequest {
@@ -427,6 +439,8 @@ impl ApiRequest {
             ApiRequest::Promote { .. } => "promote",
             ApiRequest::Endpoints => "endpoints",
             ApiRequest::ServeInfer { .. } => "serve_infer",
+            ApiRequest::MetricsReport => "metrics_report",
+            ApiRequest::Trace { .. } => "trace",
         }
     }
 
@@ -446,6 +460,8 @@ impl ApiRequest {
                 | ApiRequest::Infer { .. }
                 | ApiRequest::Endpoints
                 | ApiRequest::ServeInfer { .. }
+                | ApiRequest::MetricsReport
+                | ApiRequest::Trace { .. }
         )
     }
 
@@ -486,7 +502,11 @@ impl ApiRequest {
             | ApiRequest::TenantReport
             | ApiRequest::DurabilityStatus
             | ApiRequest::ServiceStatus
-            | ApiRequest::Endpoints => {}
+            | ApiRequest::Endpoints
+            | ApiRequest::MetricsReport => {}
+            ApiRequest::Trace { id } => {
+                args.set("id", id.as_str().into());
+            }
             ApiRequest::Promote { endpoint, action, session } => {
                 args.set("endpoint", endpoint.as_str().into())
                     .set("action", action.as_str().into())
@@ -624,6 +644,8 @@ impl ApiRequest {
                 Ok(ApiRequest::Promote { endpoint: need_str(args, "endpoint")?, action, session })
             }
             "endpoints" => Ok(ApiRequest::Endpoints),
+            "metrics_report" => Ok(ApiRequest::MetricsReport),
+            "trace" => Ok(ApiRequest::Trace { id: need_str(args, "id")? }),
             "serve_infer" => {
                 let x = need_arr(args, "x")?
                     .iter()
@@ -1180,6 +1202,11 @@ pub struct EndpointView {
     pub replicas: u64,
     /// Requests queued in the micro-batcher, not yet dispatched.
     pub queue_depth: u64,
+    /// Windowed serving-latency quantiles (ms) from the obs registry's
+    /// per-endpoint histogram; 0 before any request is served (or with
+    /// observability disabled).
+    pub p50_ms: f64,
+    pub p99_ms: f64,
     pub versions: Vec<EndpointVersionView>,
 }
 
@@ -1197,6 +1224,8 @@ impl EndpointView {
             step: active.step,
             replicas: 0,
             queue_depth: 0,
+            p50_ms: 0.0,
+            p99_ms: 0.0,
             versions: ep
                 .versions
                 .iter()
@@ -1219,6 +1248,14 @@ impl EndpointView {
         self
     }
 
+    /// Attach windowed latency quantiles (the `endpoints` handler calls
+    /// this with the platform's `endpoint_latency` output).
+    pub fn with_latency(mut self, p50_ms: f64, p99_ms: f64) -> EndpointView {
+        self.p50_ms = p50_ms;
+        self.p99_ms = p99_ms;
+        self
+    }
+
     fn to_json(&self) -> Json {
         let mut o = Json::obj();
         o.set("name", self.name.as_str().into())
@@ -1228,6 +1265,8 @@ impl EndpointView {
             .set("step", self.step.into())
             .set("replicas", self.replicas.into())
             .set("queue_depth", self.queue_depth.into())
+            .set("p50_ms", self.p50_ms.into())
+            .set("p99_ms", self.p99_ms.into())
             .set("versions", Json::Arr(self.versions.iter().map(|v| v.to_json()).collect()));
         o
     }
@@ -1241,10 +1280,240 @@ impl EndpointView {
             step: need_u64(j, "step")?,
             replicas: need_u64(j, "replicas")?,
             queue_depth: need_u64(j, "queue_depth")?,
+            p50_ms: opt_f64(j, "p50_ms")?.unwrap_or(0.0),
+            p99_ms: opt_f64(j, "p99_ms")?.unwrap_or(0.0),
             versions: need_arr(j, "versions")?
                 .iter()
                 .map(EndpointVersionView::from_json)
                 .collect::<Result<Vec<EndpointVersionView>, ApiError>>()?,
+        })
+    }
+}
+
+/// One counter or gauge sample in a metrics report. Labels travel as a
+/// JSON object (sorted keys), so the wire form is stable across runs.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricPointView {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub value: f64,
+}
+
+impl MetricPointView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("labels", labels_to_json(&self.labels))
+            .set("value", self.value.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<MetricPointView, ApiError> {
+        Ok(MetricPointView {
+            name: need_str(j, "name")?,
+            labels: labels_from_json(j)?,
+            value: need_f64(j, "value")?,
+        })
+    }
+}
+
+/// One histogram in a metrics report: lifetime count/sum plus windowed
+/// quantiles (the registry's ring of bucket snapshots, not lifetime).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HistogramView {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub count: u64,
+    pub sum_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+impl HistogramView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("name", self.name.as_str().into())
+            .set("labels", labels_to_json(&self.labels))
+            .set("count", self.count.into())
+            .set("sum_ms", self.sum_ms.into())
+            .set("p50_ms", self.p50_ms.into())
+            .set("p95_ms", self.p95_ms.into())
+            .set("p99_ms", self.p99_ms.into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<HistogramView, ApiError> {
+        Ok(HistogramView {
+            name: need_str(j, "name")?,
+            labels: labels_from_json(j)?,
+            count: need_u64(j, "count")?,
+            sum_ms: need_f64(j, "sum_ms")?,
+            p50_ms: need_f64(j, "p50_ms")?,
+            p95_ms: need_f64(j, "p95_ms")?,
+            p99_ms: need_f64(j, "p99_ms")?,
+        })
+    }
+}
+
+/// The full metrics registry (`metrics_report`, `GET /api/v1/metrics`):
+/// every counter, gauge and histogram the platform has registered.
+/// `enabled = false` (with empty series) when `[obs] enabled = false`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct MetricsReportView {
+    pub enabled: bool,
+    pub counters: Vec<MetricPointView>,
+    pub gauges: Vec<MetricPointView>,
+    pub histograms: Vec<HistogramView>,
+}
+
+impl MetricsReportView {
+    /// Build the wire view from a live registry snapshot.
+    pub fn from_snapshot(snap: crate::obs::RegistrySnapshot) -> MetricsReportView {
+        let point = |p: crate::obs::MetricPointSnap| MetricPointView {
+            name: p.name,
+            labels: p.labels,
+            value: p.value,
+        };
+        MetricsReportView {
+            enabled: snap.enabled,
+            counters: snap.counters.into_iter().map(point).collect(),
+            gauges: snap.gauges.into_iter().map(point).collect(),
+            histograms: snap
+                .histograms
+                .into_iter()
+                .map(|h| HistogramView {
+                    name: h.name,
+                    labels: h.labels,
+                    count: h.count,
+                    sum_ms: h.sum_ms,
+                    p50_ms: h.p50_ms,
+                    p95_ms: h.p95_ms,
+                    p99_ms: h.p99_ms,
+                })
+                .collect(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("enabled", self.enabled.into())
+            .set("counters", Json::Arr(self.counters.iter().map(|p| p.to_json()).collect()))
+            .set("gauges", Json::Arr(self.gauges.iter().map(|p| p.to_json()).collect()))
+            .set("histograms", Json::Arr(self.histograms.iter().map(|h| h.to_json()).collect()));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<MetricsReportView, ApiError> {
+        Ok(MetricsReportView {
+            enabled: need_bool(j, "enabled")?,
+            counters: need_arr(j, "counters")?
+                .iter()
+                .map(MetricPointView::from_json)
+                .collect::<Result<Vec<MetricPointView>, ApiError>>()?,
+            gauges: need_arr(j, "gauges")?
+                .iter()
+                .map(MetricPointView::from_json)
+                .collect::<Result<Vec<MetricPointView>, ApiError>>()?,
+            histograms: need_arr(j, "histograms")?
+                .iter()
+                .map(HistogramView::from_json)
+                .collect::<Result<Vec<HistogramView>, ApiError>>()?,
+        })
+    }
+}
+
+fn labels_to_json(labels: &[(String, String)]) -> Json {
+    let mut o = Json::obj();
+    for (k, v) in labels {
+        o.set(k, v.as_str().into());
+    }
+    o
+}
+
+fn labels_from_json(j: &Json) -> Result<Vec<(String, String)>, ApiError> {
+    let obj = need(j, "labels")?
+        .as_obj()
+        .ok_or_else(|| ApiError::invalid("'labels' must be an object"))?;
+    let mut out = Vec::with_capacity(obj.len());
+    for (k, v) in obj {
+        let s = v.as_str().ok_or_else(|| ApiError::invalid("label values must be strings"))?;
+        out.push((k.clone(), s.to_string()));
+    }
+    Ok(out)
+}
+
+/// One span of a request-scoped trace (`trace`, `GET /api/v1/trace/<id>`).
+/// `at_ms` is platform time (virtual under sim clocks); `dur_ms` is the
+/// measured wall duration, 0 for instant markers.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct SpanView {
+    pub seq: u64,
+    pub at_ms: u64,
+    pub dur_ms: f64,
+    pub name: String,
+    pub source: String,
+    pub detail: String,
+}
+
+impl SpanView {
+    /// Build the wire view from a recorded span.
+    pub fn from_span(s: &crate::obs::Span) -> SpanView {
+        SpanView {
+            seq: s.seq,
+            at_ms: s.at_ms,
+            dur_ms: s.dur_ms,
+            name: s.name.clone(),
+            source: s.source.clone(),
+            detail: s.detail.clone(),
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("seq", self.seq.into())
+            .set("at_ms", self.at_ms.into())
+            .set("dur_ms", self.dur_ms.into())
+            .set("name", self.name.as_str().into())
+            .set("source", self.source.as_str().into())
+            .set("detail", self.detail.as_str().into());
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<SpanView, ApiError> {
+        Ok(SpanView {
+            seq: need_u64(j, "seq")?,
+            at_ms: need_u64(j, "at_ms")?,
+            dur_ms: need_f64(j, "dur_ms")?,
+            name: need_str(j, "name")?,
+            source: need_str(j, "source")?,
+            detail: opt_str(j, "detail")?.unwrap_or_default(),
+        })
+    }
+}
+
+/// All spans recorded for one trace id, ordered by `(at_ms, seq)`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct TraceView {
+    pub id: String,
+    pub spans: Vec<SpanView>,
+}
+
+impl TraceView {
+    fn to_json(&self) -> Json {
+        let mut o = Json::obj();
+        o.set("id", self.id.as_str().into())
+            .set("spans", Json::Arr(self.spans.iter().map(|s| s.to_json()).collect()));
+        o
+    }
+
+    fn from_json(j: &Json) -> Result<TraceView, ApiError> {
+        Ok(TraceView {
+            id: need_str(j, "id")?,
+            spans: need_arr(j, "spans")?
+                .iter()
+                .map(SpanView::from_json)
+                .collect::<Result<Vec<SpanView>, ApiError>>()?,
         })
     }
 }
@@ -1273,9 +1542,10 @@ pub enum ApiResponse {
     Cluster { cluster: ClusterView },
     Executor { executor: ExecutorStats },
     /// One page of the event bus: events since the request cursor,
-    /// the cursor to resume from, and how many events the reader lost
-    /// to ring overflow (0 when it kept up).
-    Events { events: Vec<Event>, next: u64, dropped: u64 },
+    /// the cursor to resume from, how many events the reader lost to
+    /// ring overflow (0 when it kept up), and the bus's lifetime
+    /// ring-eviction total across all readers.
+    Events { events: Vec<Event>, next: u64, dropped: u64, overflow: u64 },
     /// Per-user fair-share report (`tenant_report`).
     Tenants { tenants: Vec<TenantView> },
     /// Durability counters (`durability_status`).
@@ -1290,6 +1560,10 @@ pub enum ApiResponse {
     /// One micro-batched serving result: the output row, which version
     /// produced it, and how many requests shared the execution.
     Served { endpoint: String, version: u64, batch: u64, probs: Vec<f32> },
+    /// The full metrics registry (`metrics_report`).
+    Metrics { metrics: MetricsReportView },
+    /// One request-scoped trace (`trace`).
+    Trace { trace: TraceView },
     Error { error: ApiError },
 }
 
@@ -1313,6 +1587,8 @@ impl ApiResponse {
             ApiResponse::Endpoint { .. } => "endpoint",
             ApiResponse::Endpoints { .. } => "endpoints",
             ApiResponse::Served { .. } => "served",
+            ApiResponse::Metrics { .. } => "metrics",
+            ApiResponse::Trace { .. } => "trace",
             ApiResponse::Error { .. } => "error",
         }
     }
@@ -1365,10 +1641,11 @@ impl ApiResponse {
             ApiResponse::Executor { executor } => {
                 data.set("executor", executor.to_json());
             }
-            ApiResponse::Events { events, next, dropped } => {
+            ApiResponse::Events { events, next, dropped, overflow } => {
                 data.set("events", Json::Arr(events.iter().map(|e| e.to_json()).collect()))
                     .set("next", (*next).into())
-                    .set("dropped", (*dropped).into());
+                    .set("dropped", (*dropped).into())
+                    .set("overflow", (*overflow).into());
             }
             ApiResponse::Tenants { tenants } => {
                 data.set("tenants", Json::Arr(tenants.iter().map(|t| t.to_json()).collect()));
@@ -1390,6 +1667,12 @@ impl ApiResponse {
                     .set("version", (*version).into())
                     .set("batch", (*batch).into())
                     .set("probs", Json::Arr(probs.iter().map(|&p| Json::Num(p as f64)).collect()));
+            }
+            ApiResponse::Metrics { metrics } => {
+                data.set("metrics", metrics.to_json());
+            }
+            ApiResponse::Trace { trace } => {
+                data.set("trace", trace.to_json());
             }
             ApiResponse::Error { error } => {
                 data.set("error", error.to_json());
@@ -1451,6 +1734,7 @@ impl ApiResponse {
                     .collect::<Result<Vec<Event>, ApiError>>()?,
                 next: need_u64(data, "next")?,
                 dropped: need_u64(data, "dropped")?,
+                overflow: opt_u64(data, "overflow")?.unwrap_or(0),
             }),
             "tenants" => Ok(ApiResponse::Tenants {
                 tenants: need_arr(data, "tenants")?
@@ -1483,6 +1767,10 @@ impl ApiResponse {
                     .collect::<Option<Vec<f32>>>()
                     .ok_or_else(|| ApiError::invalid("'probs' must be numbers"))?,
             }),
+            "metrics" => Ok(ApiResponse::Metrics {
+                metrics: MetricsReportView::from_json(need(data, "metrics")?)?,
+            }),
+            "trace" => Ok(ApiResponse::Trace { trace: TraceView::from_json(need(data, "trace")?)? }),
             "error" => Ok(ApiResponse::Error { error: ApiError::from_json(need(data, "error")?)? }),
             other => Err(ApiError::invalid(format!("unknown response kind '{}'", other))),
         }
@@ -1694,6 +1982,8 @@ mod tests {
             .is_mutation());
         assert!(!ApiRequest::TenantReport.is_mutation());
         assert!(!ApiRequest::DurabilityStatus.is_mutation());
+        assert!(!ApiRequest::MetricsReport.is_mutation());
+        assert!(!ApiRequest::Trace { id: "t".into() }.is_mutation());
         assert!(ApiRequest::Promote {
             endpoint: "prod".into(),
             action: "promote".into(),
@@ -1904,6 +2194,8 @@ mod tests {
             step: 150,
             replicas: 3,
             queue_depth: 17,
+            p50_ms: 1.25,
+            p99_ms: 8.0,
             versions: vec![
                 EndpointVersionView {
                     version: 1,
@@ -1967,5 +2259,90 @@ mod tests {
             ApiRequest::ServiceStatus.to_json().get("verb").and_then(Json::as_str),
             Some("service_status")
         );
+    }
+
+    #[test]
+    fn metrics_report_round_trips() {
+        let view = MetricsReportView {
+            enabled: true,
+            counters: vec![MetricPointView {
+                name: "nsml_dispatch_total".into(),
+                labels: vec![("verb".into(), "run".into())],
+                value: 42.0,
+            }],
+            gauges: vec![MetricPointView {
+                name: "nsml_cluster_utilization".into(),
+                labels: vec![],
+                value: 0.75,
+            }],
+            histograms: vec![HistogramView {
+                name: "nsml_dispatch_ms".into(),
+                labels: vec![("verb".into(), "run".into())],
+                count: 42,
+                sum_ms: 63.0,
+                p50_ms: 1.0,
+                p95_ms: 2.0,
+                p99_ms: 4.0,
+            }],
+        };
+        let resp = ApiResponse::Metrics { metrics: view };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // Disabled registry: empty series still round-trip.
+        let resp = ApiResponse::Metrics { metrics: MetricsReportView::default() };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        assert_eq!(
+            ApiRequest::MetricsReport.to_json().get("verb").and_then(Json::as_str),
+            Some("metrics_report")
+        );
+    }
+
+    #[test]
+    fn trace_round_trips() {
+        let view = TraceView {
+            id: "a1b2c3".into(),
+            spans: vec![
+                SpanView {
+                    seq: 0,
+                    at_ms: 10,
+                    dur_ms: 0.4,
+                    name: "dispatch.run".into(),
+                    source: "service".into(),
+                    detail: "".into(),
+                },
+                SpanView {
+                    seq: 1,
+                    at_ms: 20,
+                    dur_ms: 1.5,
+                    name: "state.running".into(),
+                    source: "session".into(),
+                    detail: "from=queued".into(),
+                },
+            ],
+        };
+        let resp = ApiResponse::Trace { trace: view };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // The trace request carries its id.
+        let req = ApiRequest::Trace { id: "a1b2c3".into() };
+        let back = ApiRequest::from_json(&parse(&req.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, req);
+    }
+
+    #[test]
+    fn events_overflow_is_lenient() {
+        let resp = ApiResponse::Events { events: vec![], next: 7, dropped: 2, overflow: 9 };
+        let back = ApiResponse::from_json(&parse(&resp.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(back, resp);
+        // Older peers omit `overflow`; it defaults to 0 instead of erroring.
+        let legacy = r#"{"v":1,"kind":"events","data":{"events":[],"next":7,"dropped":0}}"#;
+        match ApiResponse::from_json(&parse(legacy).unwrap()).unwrap() {
+            ApiResponse::Events { overflow, next, .. } => {
+                assert_eq!(overflow, 0);
+                assert_eq!(next, 7);
+            }
+            other => panic!("{:?}", other),
+        }
     }
 }

@@ -666,10 +666,12 @@ pub fn cmd_endpoints(args: &[String]) -> CmdResult {
         return Ok(());
     }
     let mut t = Table::new(&[
-        "ENDPOINT", "ACTIVE", "MODEL", "SESSION", "STEP", "REPLICAS", "QUEUE", "VERSIONS",
+        "ENDPOINT", "ACTIVE", "MODEL", "SESSION", "STEP", "REPLICAS", "QUEUE", "P50", "P99",
+        "VERSIONS",
     ])
-    .right(&[1, 4, 5, 6, 7]);
+    .right(&[1, 4, 5, 6, 7, 8, 9]);
     for v in &views {
+        let q = |ms: f64| if ms > 0.0 { fms(ms) } else { "-".into() };
         t.row(&[
             v.name.clone(),
             format!("v{}", v.active_version),
@@ -678,6 +680,8 @@ pub fn cmd_endpoints(args: &[String]) -> CmdResult {
             format!("{}", v.step),
             format!("{}", v.replicas),
             format!("{}", v.queue_depth),
+            q(v.p50_ms),
+            q(v.p99_ms),
             format!("{}", v.versions.len()),
         ]);
     }
@@ -743,6 +747,90 @@ pub fn cmd_gc(args: &[String]) -> CmdResult {
     Ok(())
 }
 
+// ---------------------------------------------------------------------
+// nsml metrics / trace — the observability surfaces
+// ---------------------------------------------------------------------
+
+pub fn cmd_metrics(args: &[String]) -> CmdResult {
+    let p = with_globals(ArgSpec::new(
+        "nsml metrics",
+        "platform metrics report (counters, gauges, latency quantiles)",
+    ))
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let m = match ok(service.dispatch(ApiRequest::MetricsReport))? {
+        ApiResponse::Metrics { metrics } => metrics,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
+    if !m.enabled {
+        println!("observability: off ([obs] enabled = false)");
+        return Ok(());
+    }
+    let labels = |ls: &[(String, String)]| {
+        if ls.is_empty() {
+            String::new()
+        } else {
+            let pairs: Vec<String> = ls.iter().map(|(k, v)| format!("{}={}", k, v)).collect();
+            format!("{{{}}}", pairs.join(","))
+        }
+    };
+    if m.counters.is_empty() && m.gauges.is_empty() && m.histograms.is_empty() {
+        println!("no metrics recorded yet (drive or dispatch something first)");
+        return Ok(());
+    }
+    if !m.counters.is_empty() || !m.gauges.is_empty() {
+        let mut t = Table::new(&["METRIC", "VALUE"]).right(&[1]);
+        for c in &m.counters {
+            t.row(&[format!("{}{}", c.name, labels(&c.labels)), fnum(c.value)]);
+        }
+        for g in &m.gauges {
+            t.row(&[format!("{}{}", g.name, labels(&g.labels)), fnum(g.value)]);
+        }
+        println!("{}", t.render());
+    }
+    if !m.histograms.is_empty() {
+        let mut t = Table::new(&["HISTOGRAM", "COUNT", "P50", "P95", "P99"]).right(&[1, 2, 3, 4]);
+        for h in &m.histograms {
+            t.row(&[
+                format!("{}{}", h.name, labels(&h.labels)),
+                format!("{}", h.count),
+                fms(h.p50_ms),
+                fms(h.p95_ms),
+                fms(h.p99_ms),
+            ]);
+        }
+        println!("{}", t.render());
+    }
+    Ok(())
+}
+
+pub fn cmd_trace(args: &[String]) -> CmdResult {
+    let p = with_globals(
+        ArgSpec::new("nsml trace", "spans recorded under a trace id")
+            .pos("trace", "trace id (the X-Trace-Id header / dispatch trace)", true),
+    )
+    .parse(args)?;
+    let service = service_from(&p)?;
+    let id = p.pos(0).unwrap().to_string();
+    let view = match ok(service.dispatch(ApiRequest::Trace { id }))? {
+        ApiResponse::Trace { trace } => trace,
+        other => return Err(format!("unexpected reply: {:?}", other)),
+    };
+    println!("trace {} — {} spans", view.id, view.spans.len());
+    let mut t = Table::new(&["AT(ms)", "DUR", "SPAN", "SOURCE", "DETAIL"]).right(&[0, 1]);
+    for sp in &view.spans {
+        t.row(&[
+            format!("{}", sp.at_ms),
+            fms(sp.dur_ms),
+            sp.name.clone(),
+            sp.source.clone(),
+            sp.detail.clone(),
+        ]);
+    }
+    println!("{}", t.render());
+    Ok(())
+}
+
 pub fn cmd_models(args: &[String]) -> CmdResult {
     let p = with_globals(ArgSpec::new("nsml models", "list AOT-compiled models")).parse(args)?;
     let platform = platform_from(&p)?;
@@ -778,6 +866,7 @@ pub fn cmd_web(args: &[String]) -> CmdResult {
         cluster: Some(platform.cluster.clone()),
         events: platform.events.clone(),
         api: Some(api),
+        obs: Some(platform.obs.clone()),
     };
     let port: u16 = p.get_usize("port")? as u16;
     let srv = crate::web::serve(state, port).map_err(|e| e.to_string())?;
@@ -816,6 +905,7 @@ pub fn cmd_serve(args: &[String]) -> CmdResult {
         cluster: Some(platform.cluster.clone()),
         events: platform.events.clone(),
         api: Some(api),
+        obs: Some(platform.obs.clone()),
     };
     let cfg = &platform.config;
     let opts = crate::web::ServeOpts {
@@ -1057,6 +1147,20 @@ mod tests {
         );
         // Clean shutdown saved state (the dir exists even with no sessions).
         assert!(PathBuf::from(&state).join("state.json").exists());
+        let _ = std::fs::remove_dir_all(&state);
+    }
+
+    #[test]
+    fn metrics_and_trace_commands() {
+        if !artifacts_ok() {
+            eprintln!("skipping: artifacts not built");
+            return;
+        }
+        let state = tmp_state("metrics");
+        // A fresh platform has nothing recorded yet but still exits 0.
+        assert_eq!(crate::cli::main(&s(&["metrics", "--state", &state])), 0);
+        // An unknown trace id maps to not_found -> exit 1.
+        assert_eq!(crate::cli::main(&s(&["trace", "never-minted", "--state", &state])), 1);
         let _ = std::fs::remove_dir_all(&state);
     }
 

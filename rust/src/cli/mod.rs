@@ -56,6 +56,8 @@ COMMANDS:
              nsml promote NAME SESSION [--action rollback|rollforward|retire]
   endpoints  list serving endpoints (active version + history)
   gc         sweep orphaned objects:      nsml gc [--status]
+  metrics    platform metrics report (counters, gauges, latency quantiles)
+  trace      spans recorded under a trace id: nsml trace TRACE_ID
   models     list AOT-compiled models
   web        serve the web UI:            nsml web --port 8080
   serve      always-on service mode:      nsml serve --port 8080
@@ -86,6 +88,8 @@ pub fn main(args: &[String]) -> i32 {
         "promote" => commands::cmd_promote(&rest),
         "endpoints" => commands::cmd_endpoints(&rest),
         "gc" => commands::cmd_gc(&rest),
+        "metrics" => commands::cmd_metrics(&rest),
+        "trace" => commands::cmd_trace(&rest),
         "models" => commands::cmd_models(&rest),
         "web" => commands::cmd_web(&rest),
         "serve" => commands::cmd_serve(&rest),

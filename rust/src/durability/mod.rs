@@ -146,6 +146,13 @@ impl Durability {
         Ok((durability, scan, meta))
     }
 
+    /// Instrument WAL append/fsync with timing histograms
+    /// (`nsml_wal_append_ms` / `nsml_wal_fsync_ms`). The platform
+    /// calls this once right after `open`.
+    pub fn set_metrics(&self, append: crate::obs::Histogram, sync: crate::obs::Histogram) {
+        self.inner.lock().unwrap().wal.set_metrics(append, sync);
+    }
+
     /// Drain the subscription and append every durable event.
     pub fn pump(&self) -> Result<PumpOutcome> {
         let mut inner = self.inner.lock().unwrap();

@@ -13,6 +13,7 @@
 //! valid record. Everything before the tear replays losslessly.
 
 use crate::events::Event;
+use crate::obs::Histogram;
 use crate::util::json::parse;
 use anyhow::{Context, Result};
 use std::fs::{File, OpenOptions};
@@ -58,6 +59,10 @@ pub struct Wal {
     bytes: u64,
     /// Sequence number of the segment's newest record.
     last_seq: Option<u64>,
+    /// Wall-clock timing histograms set by the platform after open
+    /// (`nsml_wal_append_ms` / `nsml_wal_fsync_ms`); `None` until then.
+    append_hist: Option<Histogram>,
+    sync_hist: Option<Histogram>,
 }
 
 impl Wal {
@@ -91,12 +96,23 @@ impl Wal {
             records: events.len() as u64,
             bytes: valid_len,
             last_seq: events.last().map(|e| e.seq),
+            append_hist: None,
+            sync_hist: None,
         };
         Ok((wal, WalScan { events, truncated_bytes }))
     }
 
+    /// Instrument append/fsync with timing histograms. The platform
+    /// calls this once after construction; the signature of `open`
+    /// stays free of observability concerns.
+    pub fn set_metrics(&mut self, append: Histogram, sync: Histogram) {
+        self.append_hist = Some(append);
+        self.sync_hist = Some(sync);
+    }
+
     /// Append one event as a length-prefixed, checksummed record.
     pub fn append(&mut self, e: &Event) -> Result<()> {
+        let t0 = std::time::Instant::now();
         let payload = e.to_json().to_string().into_bytes();
         let mut rec = Vec::with_capacity(8 + payload.len());
         rec.extend_from_slice(&(payload.len() as u32).to_le_bytes());
@@ -107,6 +123,9 @@ impl Wal {
         self.bytes += rec.len() as u64;
         self.last_seq = Some(e.seq);
         self.unsynced += 1;
+        if let Some(h) = &self.append_hist {
+            h.record(t0.elapsed().as_secs_f64() * 1000.0);
+        }
         if self.unsynced >= self.fsync_every {
             self.sync()?;
         }
@@ -116,8 +135,12 @@ impl Wal {
     /// Flush any unsynced appends to stable storage.
     pub fn sync(&mut self) -> Result<()> {
         if self.unsynced > 0 {
+            let t0 = std::time::Instant::now();
             self.file.sync_data()?;
             self.unsynced = 0;
+            if let Some(h) = &self.sync_hist {
+                h.record(t0.elapsed().as_secs_f64() * 1000.0);
+            }
         }
         Ok(())
     }

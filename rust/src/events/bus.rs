@@ -27,6 +27,8 @@ struct Ring {
     buf: VecDeque<Event>,
     /// Sequence number the *next* published event will get.
     next_seq: u64,
+    /// Total events evicted from the ring since creation (overflow).
+    evicted: u64,
 }
 
 impl Ring {
@@ -103,7 +105,7 @@ pub struct EventBus {
 impl EventBus {
     pub fn new(clock: SharedClock) -> EventBus {
         EventBus {
-            ring: Arc::new(Mutex::new(Ring { buf: VecDeque::new(), next_seq: 0 })),
+            ring: Arc::new(Mutex::new(Ring { buf: VecDeque::new(), next_seq: 0, evicted: 0 })),
             clock,
             capacity: DEFAULT_CAPACITY,
             echo: false,
@@ -145,6 +147,7 @@ impl EventBus {
             ring.next_seq = seq + 1;
             if ring.buf.len() >= self.capacity {
                 ring.buf.pop_front();
+                ring.evicted += 1;
             }
             ring.buf.push_back(e);
         }
@@ -168,6 +171,13 @@ impl EventBus {
     /// Retained event count.
     pub fn len(&self) -> usize {
         self.ring.lock().unwrap().buf.len()
+    }
+
+    /// Total events that have aged out of the ring since creation —
+    /// the ring-overflow count surfaced by the obs registry and the
+    /// `events_since` response.
+    pub fn overflow(&self) -> u64 {
+        self.ring.lock().unwrap().evicted
     }
 
     pub fn is_empty(&self) -> bool {
@@ -333,6 +343,8 @@ mod tests {
         log(&b, "x", "", "fresh");
         assert_eq!(sub.poll().len(), 1);
         assert_eq!(sub.dropped(), 15);
+        // The ring itself counts every eviction: 26 published, 10 kept.
+        assert_eq!(b.overflow(), 16);
     }
 
     #[test]

@@ -58,6 +58,12 @@
 //!   subscription, periodic compacted snapshots with WAL rotation,
 //!   startup snapshot+replay recovery, and object-store GC with
 //!   per-tenant storage accounting.
+//! * [`obs`] — observability: a metrics registry (counters, gauges,
+//!   log-bucket histograms with windowed p50/p95/p99) populated by a
+//!   derived bus consumer each drive round plus direct instrumentation
+//!   on dispatch/HTTP/WAL paths, request-scoped traces minted at
+//!   ingress and assembled per trace id, and Prometheus text
+//!   exposition at `GET /metrics`.
 //! * [`storage`] / [`leaderboard`] / [`automl`] / [`util`] — object
 //!   store + checkpoints, per-dataset ranking, hyperparameter search,
 //!   and dependency-free utilities (JSON, TOML, argparse, tables,
@@ -89,6 +95,7 @@ pub mod executor;
 pub mod serving;
 pub mod tenancy;
 pub mod durability;
+pub mod obs;
 pub mod leaderboard;
 pub mod automl;
 pub mod api;

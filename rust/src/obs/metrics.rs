@@ -1,0 +1,594 @@
+//! Metrics registry: lock-cheap counters, gauges, and log-bucket histograms.
+//!
+//! The registry hands out cheap cloneable handles ([`Counter`], [`Gauge`],
+//! [`Histogram`]); every record operation is a handful of relaxed atomics, so
+//! hot paths (dispatch, WAL append, histogram record) cache a handle once and
+//! pay no lock afterwards. Series are keyed by `(name, sorted labels)` in a
+//! `BTreeMap` behind a mutex that is only taken on get-or-create and on
+//! snapshot/render.
+//!
+//! Histograms use fixed log2 buckets (`0.001 · 2^i` ms — 1 µs up to ~9 min),
+//! which makes recording O(1), snapshots mergeable by bucket-wise addition,
+//! and quantile estimates accurate to within one bucket width (a factor of
+//! two). Windowed quantiles come from a small ring of cumulative snapshots:
+//! [`MetricsRegistry::rotate_windows`] is called once per drive round by the
+//! obs pump, and `windowed_quantile` answers over the delta between now and
+//! the oldest retained snapshot.
+//!
+//! A registry built with `enabled = false` hands out inert handles whose
+//! record paths are a single branch, so `[obs] enabled = false` reduces the
+//! instrumentation to (nearly) zero cost — `bench_obs.rs` gates the delta.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+/// Number of log2 histogram buckets. Bucket `i` covers
+/// `(0.001·2^(i-1), 0.001·2^i]` ms; bucket 0 covers everything `<= 1 µs`.
+pub const HIST_BUCKETS: usize = 40;
+
+/// Upper bound (inclusive) of bucket `i`, in milliseconds.
+pub fn bucket_bound(i: usize) -> f64 {
+    0.001 * (1u64 << i.min(HIST_BUCKETS - 1)) as f64
+}
+
+/// The bucket a value lands in: the smallest `i` with `v <= bucket_bound(i)`.
+/// Values beyond the last bound are clamped into the last bucket.
+pub fn bucket_index(v_ms: f64) -> usize {
+    if !(v_ms > 0.001) {
+        return 0; // also catches NaN and negatives
+    }
+    let mut i = ((v_ms / 0.001).log2().ceil()) as i64;
+    i = i.clamp(0, (HIST_BUCKETS - 1) as i64);
+    // Guard against float rounding at the bucket boundaries: walk to the
+    // exact `le` bucket so the invariant `bound(i-1) < v <= bound(i)` holds.
+    while i > 0 && v_ms <= bucket_bound((i - 1) as usize) {
+        i -= 1;
+    }
+    while (i as usize) < HIST_BUCKETS - 1 && v_ms > bucket_bound(i as usize) {
+        i += 1;
+    }
+    i as usize
+}
+
+/// Sorted `(key, value)` label pairs identifying one series.
+pub type Labels = Vec<(String, String)>;
+
+fn labels_of(pairs: &[(&str, &str)]) -> Labels {
+    let mut l: Labels =
+        pairs.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect();
+    l.sort();
+    l
+}
+
+/// A monotonically increasing counter.
+#[derive(Clone)]
+pub struct Counter {
+    core: Arc<CounterCore>,
+}
+
+struct CounterCore {
+    enabled: bool,
+    value: AtomicU64,
+}
+
+impl Counter {
+    fn new(enabled: bool) -> Counter {
+        Counter { core: Arc::new(CounterCore { enabled, value: AtomicU64::new(0) }) }
+    }
+
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        if self.core.enabled {
+            self.core.value.fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> u64 {
+        self.core.value.load(Ordering::Relaxed)
+    }
+}
+
+/// A gauge holding the latest `f64` sample (stored as raw bits).
+#[derive(Clone)]
+pub struct Gauge {
+    core: Arc<GaugeCore>,
+}
+
+struct GaugeCore {
+    enabled: bool,
+    bits: AtomicU64,
+}
+
+impl Gauge {
+    fn new(enabled: bool) -> Gauge {
+        Gauge { core: Arc::new(GaugeCore { enabled, bits: AtomicU64::new(0f64.to_bits()) }) }
+    }
+
+    pub fn set(&self, v: f64) {
+        if self.core.enabled {
+            self.core.bits.store(v.to_bits(), Ordering::Relaxed);
+        }
+    }
+
+    pub fn get(&self) -> f64 {
+        f64::from_bits(self.core.bits.load(Ordering::Relaxed))
+    }
+}
+
+/// Point-in-time totals of one histogram: per-bucket counts (not
+/// cumulative), total count, and sum in milliseconds. Snapshots merge by
+/// bucket-wise addition and subtract to form window deltas.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistSnapshot {
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum_ms: f64,
+}
+
+impl HistSnapshot {
+    fn zero() -> HistSnapshot {
+        HistSnapshot { buckets: vec![0; HIST_BUCKETS], count: 0, sum_ms: 0.0 }
+    }
+
+    /// `self - older`, saturating (tolerates snapshots racing a record).
+    fn delta(&self, older: &HistSnapshot) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self
+                .buckets
+                .iter()
+                .zip(older.buckets.iter())
+                .map(|(a, b)| a.saturating_sub(*b))
+                .collect(),
+            count: self.count.saturating_sub(older.count),
+            sum_ms: (self.sum_ms - older.sum_ms).max(0.0),
+        }
+    }
+
+    /// Quantile estimate: upper bound of the bucket holding rank
+    /// `ceil(q · count)`. Exact to within one bucket width; 0 when empty.
+    pub fn quantile(&self, q: f64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let rank = ((q.clamp(0.0, 1.0) * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut cum = 0u64;
+        for (i, b) in self.buckets.iter().enumerate() {
+            cum += b;
+            if cum >= rank {
+                return bucket_bound(i);
+            }
+        }
+        bucket_bound(HIST_BUCKETS - 1)
+    }
+}
+
+/// A fixed log-bucket latency histogram with a window ring for quantiles.
+#[derive(Clone)]
+pub struct Histogram {
+    core: Arc<HistogramCore>,
+}
+
+struct HistogramCore {
+    enabled: bool,
+    buckets: [AtomicU64; HIST_BUCKETS],
+    count: AtomicU64,
+    sum_us: AtomicU64,
+    /// Ring of cumulative snapshots, one per rotation (drive round).
+    window: Mutex<VecDeque<HistSnapshot>>,
+}
+
+impl Histogram {
+    fn new(enabled: bool) -> Histogram {
+        Histogram {
+            core: Arc::new(HistogramCore {
+                enabled,
+                buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+                count: AtomicU64::new(0),
+                sum_us: AtomicU64::new(0),
+                window: Mutex::new(VecDeque::new()),
+            }),
+        }
+    }
+
+    /// Record one sample in milliseconds. O(1): three relaxed atomic adds.
+    pub fn record(&self, v_ms: f64) {
+        if !self.core.enabled {
+            return;
+        }
+        let i = bucket_index(v_ms);
+        self.core.buckets[i].fetch_add(1, Ordering::Relaxed);
+        self.core.count.fetch_add(1, Ordering::Relaxed);
+        let us = if v_ms > 0.0 { (v_ms * 1000.0).round() as u64 } else { 0 };
+        self.core.sum_us.fetch_add(us, Ordering::Relaxed);
+    }
+
+    /// Cumulative totals since creation.
+    pub fn snapshot(&self) -> HistSnapshot {
+        HistSnapshot {
+            buckets: self.core.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+            count: self.core.count.load(Ordering::Relaxed),
+            sum_ms: self.core.sum_us.load(Ordering::Relaxed) as f64 / 1000.0,
+        }
+    }
+
+    /// All-time quantile (upper bucket bound at the rank).
+    pub fn quantile(&self, q: f64) -> f64 {
+        self.snapshot().quantile(q)
+    }
+
+    /// Push the current totals into the window ring, keeping `window`
+    /// snapshots. Called once per drive round by the obs pump.
+    pub fn rotate(&self, window: usize) {
+        let snap = self.snapshot();
+        let mut ring = self.core.window.lock().unwrap();
+        ring.push_back(snap);
+        while ring.len() > window.max(1) {
+            ring.pop_front();
+        }
+    }
+
+    /// Quantile over the samples recorded since the oldest retained
+    /// snapshot (i.e. the last `window` rotations). Falls back to the
+    /// all-time quantile before the first rotation.
+    pub fn windowed_quantile(&self, q: f64) -> f64 {
+        let now = self.snapshot();
+        let ring = self.core.window.lock().unwrap();
+        match ring.front() {
+            Some(oldest) => now.delta(oldest).quantile(q),
+            None => now.quantile(q),
+        }
+    }
+}
+
+type SeriesKey = (String, Labels);
+
+struct Inner {
+    counters: Mutex<BTreeMap<SeriesKey, Counter>>,
+    gauges: Mutex<BTreeMap<SeriesKey, Gauge>>,
+    histograms: Mutex<BTreeMap<SeriesKey, Histogram>>,
+}
+
+/// The process-wide metrics registry. Cloning shares the underlying series.
+#[derive(Clone)]
+pub struct MetricsRegistry {
+    enabled: bool,
+    inner: Arc<Inner>,
+}
+
+/// One scalar series in a [`RegistrySnapshot`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct MetricPointSnap {
+    pub name: String,
+    pub labels: Labels,
+    pub value: f64,
+}
+
+/// One histogram series in a [`RegistrySnapshot`], with windowed quantiles.
+#[derive(Debug, Clone, PartialEq)]
+pub struct HistogramSnap {
+    pub name: String,
+    pub labels: Labels,
+    pub count: u64,
+    pub sum_ms: f64,
+    pub p50_ms: f64,
+    pub p95_ms: f64,
+    pub p99_ms: f64,
+}
+
+/// A plain-data view of every registered series.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RegistrySnapshot {
+    pub enabled: bool,
+    pub counters: Vec<MetricPointSnap>,
+    pub gauges: Vec<MetricPointSnap>,
+    pub histograms: Vec<HistogramSnap>,
+}
+
+impl MetricsRegistry {
+    pub fn new(enabled: bool) -> MetricsRegistry {
+        MetricsRegistry {
+            enabled,
+            inner: Arc::new(Inner {
+                counters: Mutex::new(BTreeMap::new()),
+                gauges: Mutex::new(BTreeMap::new()),
+                histograms: Mutex::new(BTreeMap::new()),
+            }),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Get or create the counter `name{labels}`.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        if !self.enabled {
+            return Counter::new(false);
+        }
+        let key = (name.to_string(), labels_of(labels));
+        let mut map = self.inner.counters.lock().unwrap();
+        map.entry(key).or_insert_with(|| Counter::new(true)).clone()
+    }
+
+    /// Get or create the gauge `name{labels}`.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        if !self.enabled {
+            return Gauge::new(false);
+        }
+        let key = (name.to_string(), labels_of(labels));
+        let mut map = self.inner.gauges.lock().unwrap();
+        map.entry(key).or_insert_with(|| Gauge::new(true)).clone()
+    }
+
+    /// Get or create the histogram `name{labels}`.
+    pub fn histogram(&self, name: &str, labels: &[(&str, &str)]) -> Histogram {
+        if !self.enabled {
+            return Histogram::new(false);
+        }
+        let key = (name.to_string(), labels_of(labels));
+        let mut map = self.inner.histograms.lock().unwrap();
+        map.entry(key).or_insert_with(|| Histogram::new(true)).clone()
+    }
+
+    /// Rotate every histogram's quantile window. One call per drive round.
+    pub fn rotate_windows(&self, window: usize) {
+        if !self.enabled {
+            return;
+        }
+        let hists: Vec<Histogram> =
+            self.inner.histograms.lock().unwrap().values().cloned().collect();
+        for h in hists {
+            h.rotate(window);
+        }
+    }
+
+    /// Plain-data snapshot of every series (for the `metrics_report` verb).
+    pub fn snapshot(&self) -> RegistrySnapshot {
+        let counters = self
+            .inner
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((name, labels), c)| MetricPointSnap {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: c.get() as f64,
+            })
+            .collect();
+        let gauges = self
+            .inner
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((name, labels), g)| MetricPointSnap {
+                name: name.clone(),
+                labels: labels.clone(),
+                value: g.get(),
+            })
+            .collect();
+        let histograms = self
+            .inner
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|((name, labels), h)| {
+                let snap = h.snapshot();
+                HistogramSnap {
+                    name: name.clone(),
+                    labels: labels.clone(),
+                    count: snap.count,
+                    sum_ms: snap.sum_ms,
+                    p50_ms: h.windowed_quantile(0.50),
+                    p95_ms: h.windowed_quantile(0.95),
+                    p99_ms: h.windowed_quantile(0.99),
+                }
+            })
+            .collect();
+        RegistrySnapshot { enabled: self.enabled, counters, gauges, histograms }
+    }
+
+    /// Render every series in the Prometheus text exposition format
+    /// (version 0.0.4): `# TYPE` lines per family, escaped label values,
+    /// and `_bucket`/`_sum`/`_count` series with cumulative `le` buckets.
+    pub fn render_prometheus(&self) -> String {
+        let mut out = String::new();
+        if !self.enabled {
+            out.push_str("# nsml observability disabled ([obs] enabled = false)\n");
+            return out;
+        }
+
+        let counters = self.inner.counters.lock().unwrap().clone();
+        let mut last_family = String::new();
+        for ((name, labels), c) in &counters {
+            type_line(&mut out, &mut last_family, name, "counter");
+            series_line(&mut out, name, labels, None, c.get() as f64);
+        }
+
+        let gauges = self.inner.gauges.lock().unwrap().clone();
+        last_family.clear();
+        for ((name, labels), g) in &gauges {
+            type_line(&mut out, &mut last_family, name, "gauge");
+            series_line(&mut out, name, labels, None, g.get());
+        }
+
+        let hists = self.inner.histograms.lock().unwrap().clone();
+        last_family.clear();
+        for ((name, labels), h) in &hists {
+            type_line(&mut out, &mut last_family, name, "histogram");
+            let snap = h.snapshot();
+            let mut cum = 0u64;
+            for (i, b) in snap.buckets.iter().enumerate() {
+                cum += b;
+                // Elide empty leading/inner buckets except the last real one
+                // to keep the payload small; cumulative counts stay correct
+                // because `le` buckets are monotone.
+                if *b == 0 && i + 1 < HIST_BUCKETS && cum < snap.count {
+                    continue;
+                }
+                let le = format!("{}", bucket_bound(i));
+                series_line(&mut out, &format!("{}_bucket", name), labels, Some(&le), cum as f64);
+                if cum >= snap.count {
+                    break;
+                }
+            }
+            let total = snap.count as f64;
+            series_line(&mut out, &format!("{}_bucket", name), labels, Some("+Inf"), total);
+            series_line(&mut out, &format!("{}_sum", name), labels, None, snap.sum_ms);
+            series_line(&mut out, &format!("{}_count", name), labels, None, snap.count as f64);
+        }
+        out
+    }
+}
+
+fn type_line(out: &mut String, last_family: &mut String, name: &str, kind: &str) {
+    if name != last_family {
+        out.push_str(&format!("# TYPE {} {}\n", name, kind));
+        *last_family = name.to_string();
+    }
+}
+
+fn series_line(out: &mut String, name: &str, labels: &Labels, le: Option<&str>, value: f64) {
+    out.push_str(name);
+    if !labels.is_empty() || le.is_some() {
+        out.push('{');
+        let mut first = true;
+        for (k, v) in labels {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(k);
+            out.push_str("=\"");
+            escape_label(out, v);
+            out.push('"');
+        }
+        if let Some(le) = le {
+            if !first {
+                out.push(',');
+            }
+            out.push_str("le=\"");
+            out.push_str(le);
+            out.push('"');
+        }
+        out.push('}');
+    }
+    out.push(' ');
+    if value.is_finite() {
+        out.push_str(&format!("{}", value));
+    } else {
+        out.push_str("NaN");
+    }
+    out.push('\n');
+}
+
+/// Prometheus label-value escaping: backslash, double-quote, newline.
+fn escape_label(out: &mut String, v: &str) {
+    for c in v.chars() {
+        match c {
+            '\\' => out.push_str("\\\\"),
+            '"' => out.push_str("\\\""),
+            '\n' => out.push_str("\\n"),
+            c => out.push(c),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_bounds_double() {
+        assert_eq!(bucket_bound(0), 0.001);
+        assert_eq!(bucket_bound(1), 0.002);
+        assert_eq!(bucket_bound(10), 1.024);
+        for i in 1..HIST_BUCKETS {
+            assert_eq!(bucket_bound(i), 2.0 * bucket_bound(i - 1));
+        }
+    }
+
+    #[test]
+    fn bucket_index_le_invariant() {
+        for &v in &[0.0, 0.0005, 0.001, 0.0011, 0.5, 1.0, 1.024, 3.7, 1000.0, 1e12] {
+            let i = bucket_index(v);
+            assert!(v <= bucket_bound(i) || i == HIST_BUCKETS - 1, "v={} i={}", v, i);
+            if i > 0 {
+                assert!(v > bucket_bound(i - 1), "v={} i={}", v, i);
+            }
+        }
+        assert_eq!(bucket_index(f64::NAN), 0);
+        assert_eq!(bucket_index(-3.0), 0);
+    }
+
+    #[test]
+    fn counter_and_gauge_roundtrip() {
+        let reg = MetricsRegistry::new(true);
+        let c = reg.counter("nsml_test_total", &[("k", "v")]);
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // Same key returns the same series.
+        assert_eq!(reg.counter("nsml_test_total", &[("k", "v")]).get(), 5);
+        let g = reg.gauge("nsml_test_gauge", &[]);
+        g.set(2.5);
+        assert_eq!(g.get(), 2.5);
+    }
+
+    #[test]
+    fn disabled_registry_is_inert() {
+        let reg = MetricsRegistry::new(false);
+        let c = reg.counter("nsml_test_total", &[]);
+        c.add(10);
+        assert_eq!(c.get(), 0);
+        let h = reg.histogram("nsml_test_ms", &[]);
+        h.record(5.0);
+        assert_eq!(h.snapshot().count, 0);
+        let snap = reg.snapshot();
+        assert!(!snap.enabled);
+        assert!(snap.counters.is_empty());
+        assert!(reg.render_prometheus().starts_with('#'));
+    }
+
+    #[test]
+    fn histogram_windowed_quantile_tracks_recent() {
+        let reg = MetricsRegistry::new(true);
+        let h = reg.histogram("nsml_test_ms", &[]);
+        for _ in 0..100 {
+            h.record(1.0);
+        }
+        h.rotate(4);
+        for _ in 0..100 {
+            h.record(100.0);
+        }
+        // All-time p50 straddles both phases; the window only sees the
+        // second phase (everything after the oldest retained snapshot).
+        let w50 = h.windowed_quantile(0.5);
+        assert!(w50 >= 100.0 && w50 <= 200.0, "w50={}", w50);
+        assert!(h.quantile(0.25) <= 2.0);
+    }
+
+    #[test]
+    fn prometheus_rendering_has_families() {
+        let reg = MetricsRegistry::new(true);
+        reg.counter("nsml_a_total", &[("user", "kim")]).inc();
+        reg.gauge("nsml_b", &[]).set(1.0);
+        let h = reg.histogram("nsml_c_ms", &[]);
+        h.record(0.5);
+        h.record(4.0);
+        let text = reg.render_prometheus();
+        assert!(text.contains("# TYPE nsml_a_total counter"));
+        assert!(text.contains("nsml_a_total{user=\"kim\"} 1"));
+        assert!(text.contains("# TYPE nsml_b gauge"));
+        assert!(text.contains("# TYPE nsml_c_ms histogram"));
+        assert!(text.contains("nsml_c_ms_bucket"));
+        assert!(text.contains("le=\"+Inf\"} 2"));
+        assert!(text.contains("nsml_c_ms_count 2"));
+    }
+}

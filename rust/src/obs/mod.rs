@@ -1,0 +1,112 @@
+//! Observability: the metrics registry, request tracing, and Prometheus
+//! exposition that turn the raw event bus into operable telemetry.
+//!
+//! Three pillars:
+//!
+//! * [`metrics`] — counters, gauges, and log-bucket histograms with
+//!   windowed p50/p95/p99, populated by the platform's obs pump (a
+//!   derived bus consumer rolled forward each drive round) plus direct
+//!   instrumentation on paths the bus doesn't time (dispatch, HTTP,
+//!   WAL append/fsync).
+//! * [`trace`] — request-scoped trace ids minted at ingress and carried
+//!   via a thread-local through dispatch, admission, placement, executor
+//!   rounds, and serving micro-batch flushes into a bounded span ring.
+//! * Exposition — `GET /metrics` (Prometheus text 0.0.4),
+//!   `GET /api/v1/metrics` / the `metrics_report` verb (JSON), and
+//!   `GET /api/v1/trace/<id>` / the `trace` verb / `nsml trace`.
+//!
+//! [`Obs`] bundles the two stores with the platform clock; it is cheap to
+//! clone and is shared by the facade, the service layer, and the web tier.
+
+pub mod metrics;
+pub mod trace;
+
+pub use metrics::{
+    bucket_bound, bucket_index, Counter, Gauge, HistSnapshot, Histogram, HistogramSnap, Labels,
+    MetricPointSnap, MetricsRegistry, RegistrySnapshot, HIST_BUCKETS,
+};
+pub use trace::{Span, Tracer};
+
+use crate::util::clock::SharedClock;
+
+/// The shared observability handle: metrics registry + trace ring + clock.
+#[derive(Clone)]
+pub struct Obs {
+    pub metrics: MetricsRegistry,
+    pub traces: Tracer,
+    clock: SharedClock,
+}
+
+impl Obs {
+    pub fn new(clock: SharedClock, enabled: bool, trace_capacity: usize) -> Obs {
+        Obs {
+            metrics: MetricsRegistry::new(enabled),
+            traces: Tracer::new(enabled, trace_capacity),
+            clock,
+        }
+    }
+
+    /// A disabled handle for contexts that have no platform (all record
+    /// paths become no-ops).
+    pub fn disabled() -> Obs {
+        Obs::new(crate::util::clock::real_clock(), false, 16)
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.metrics.enabled()
+    }
+
+    /// Current platform time (virtual in tests/benches, wall in live runs).
+    pub fn now_ms(&self) -> u64 {
+        self.clock.now_ms()
+    }
+
+    /// Record a span at the current platform time for the given trace.
+    pub fn span(&self, trace: &str, dur_ms: f64, name: &str, source: &str, detail: &str) {
+        self.traces.record(trace, self.clock.now_ms(), dur_ms, name, source, detail);
+    }
+
+    /// Record a span for the current thread's trace context, if any.
+    pub fn span_current(&self, dur_ms: f64, name: &str, source: &str, detail: &str) {
+        if let Some(t) = trace::current() {
+            self.span(&t, dur_ms, name, source, detail);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::clock::sim_clock;
+
+    #[test]
+    fn obs_spans_use_platform_clock() {
+        let (clock, sim) = sim_clock();
+        let obs = Obs::new(clock, true, 64);
+        sim.advance(42);
+        obs.span("t1", 1.5, "dispatch.run", "service", "");
+        let spans = obs.traces.get("t1");
+        assert_eq!(spans.len(), 1);
+        assert_eq!(spans[0].at_ms, 42);
+        assert_eq!(spans[0].dur_ms, 1.5);
+    }
+
+    #[test]
+    fn span_current_uses_thread_context() {
+        let obs = Obs::new(crate::util::clock::real_clock(), true, 64);
+        obs.span_current(0.0, "noop", "service", "");
+        assert!(obs.traces.is_empty());
+        trace::set_current(Some("ctx".to_string()));
+        obs.span_current(0.0, "dispatch.status", "service", "");
+        trace::set_current(None);
+        assert_eq!(obs.traces.get("ctx").len(), 1);
+    }
+
+    #[test]
+    fn disabled_handle_is_inert() {
+        let obs = Obs::disabled();
+        assert!(!obs.enabled());
+        obs.span("t", 0.0, "a", "web", "");
+        assert!(obs.traces.is_empty());
+    }
+}

@@ -1,0 +1,276 @@
+//! Request-scoped tracing: trace ids, a bounded span ring, and the
+//! thread-local trace context that carries an id across layers.
+//!
+//! A trace id is minted at ingress — the web server honours an
+//! `X-Trace-Id` request header (sanitized) and mints one otherwise; CLI
+//! and daemon `ServiceCall`s mint at dispatch. The id rides a thread-local
+//! ([`set_current`]/[`current`]) on whichever thread is executing the
+//! request: the web worker sets it before routing, `ServiceHandle::call`
+//! reads it off the calling thread into the `ServiceCall`, and the
+//! platform thread re-establishes it around `dispatch`, so interior
+//! layers (admission, placement, serving enqueue/flush) can record spans
+//! without threading an argument through every signature.
+//!
+//! Spans land in a bounded ring ([`Tracer`]) stamped with virtual-clock
+//! time plus a wall-clock duration; `get` assembles the per-trace
+//! timeline ordered by `(at_ms, seq)`. Background work (e.g. executor
+//! rounds) is attached via subject tags: `tag(session, trace)` lets the
+//! obs pump turn bus events about that session into spans after the fact.
+
+use std::cell::RefCell;
+use std::collections::{HashMap, VecDeque};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{SystemTime, UNIX_EPOCH};
+
+/// Longest accepted client-supplied trace id.
+pub const MAX_TRACE_ID_LEN: usize = 64;
+
+/// Most subjects (sessions) that can be tagged with a trace at once.
+const MAX_TAGS: usize = 1024;
+
+/// One timestamped step of a request's journey.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Span {
+    pub trace: String,
+    /// Global record order; ties in `at_ms` sort by `seq`.
+    pub seq: u64,
+    /// Virtual-clock timestamp (ms) when the spanned work started.
+    pub at_ms: u64,
+    /// Wall-clock duration of the spanned work (0 for point events).
+    pub dur_ms: f64,
+    /// What happened, e.g. `dispatch.run` or `serving.flush`.
+    pub name: String,
+    /// Layer that recorded it: `web`, `service`, `serving`, `platform`.
+    pub source: String,
+    /// Free-form context (endpoint, node, decision…).
+    pub detail: String,
+}
+
+struct RingInner {
+    spans: VecDeque<Span>,
+    next_seq: u64,
+    /// subject (session id) -> trace id, FIFO-evicted.
+    tags: HashMap<String, String>,
+    tag_order: VecDeque<String>,
+}
+
+/// A bounded, shared ring of spans. Cloning shares the ring.
+#[derive(Clone)]
+pub struct Tracer {
+    enabled: bool,
+    capacity: usize,
+    inner: Arc<Mutex<RingInner>>,
+}
+
+impl Tracer {
+    pub fn new(enabled: bool, capacity: usize) -> Tracer {
+        Tracer {
+            enabled,
+            capacity: capacity.max(16),
+            inner: Arc::new(Mutex::new(RingInner {
+                spans: VecDeque::new(),
+                next_seq: 0,
+                tags: HashMap::new(),
+                tag_order: VecDeque::new(),
+            })),
+        }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// Record one span. Oldest spans are evicted past `capacity`.
+    #[allow(clippy::too_many_arguments)]
+    pub fn record(
+        &self,
+        trace: &str,
+        at_ms: u64,
+        dur_ms: f64,
+        name: &str,
+        source: &str,
+        detail: &str,
+    ) {
+        if !self.enabled || trace.is_empty() {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        let seq = inner.next_seq;
+        inner.next_seq += 1;
+        inner.spans.push_back(Span {
+            trace: trace.to_string(),
+            seq,
+            at_ms,
+            dur_ms,
+            name: name.to_string(),
+            source: source.to_string(),
+            detail: detail.to_string(),
+        });
+        while inner.spans.len() > self.capacity {
+            inner.spans.pop_front();
+        }
+    }
+
+    /// Assemble the timeline for `trace`, ordered by `(at_ms, seq)`.
+    pub fn get(&self, trace: &str) -> Vec<Span> {
+        let inner = self.inner.lock().unwrap();
+        let mut spans: Vec<Span> =
+            inner.spans.iter().filter(|s| s.trace == trace).cloned().collect();
+        spans.sort_by(|a, b| (a.at_ms, a.seq).cmp(&(b.at_ms, b.seq)));
+        spans
+    }
+
+    /// Total spans currently retained (across all traces).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().spans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Associate a subject (session id) with a trace so later bus events
+    /// about it can be recorded as spans by the obs pump.
+    pub fn tag(&self, subject: &str, trace: &str) {
+        if !self.enabled {
+            return;
+        }
+        let mut inner = self.inner.lock().unwrap();
+        if inner.tags.insert(subject.to_string(), trace.to_string()).is_none() {
+            inner.tag_order.push_back(subject.to_string());
+            while inner.tag_order.len() > MAX_TAGS {
+                if let Some(old) = inner.tag_order.pop_front() {
+                    inner.tags.remove(&old);
+                }
+            }
+        }
+    }
+
+    /// The trace tagged for `subject`, if any.
+    pub fn tag_of(&self, subject: &str) -> Option<String> {
+        self.inner.lock().unwrap().tags.get(subject).cloned()
+    }
+}
+
+static MINT_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Mint a fresh 16-hex-digit trace id. Mixes wall time, the pid, and a
+/// process-local counter through a 64-bit finalizer so ids are unique
+/// across threads and (practically) across processes.
+pub fn mint() -> String {
+    let n = MINT_SEQ.fetch_add(1, Ordering::Relaxed);
+    let t = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_nanos() as u64)
+        .unwrap_or(0);
+    let mut h =
+        t ^ (std::process::id() as u64).rotate_left(32) ^ n.wrapping_mul(0x9e37_79b9_7f4a_7c15);
+    h ^= h >> 33;
+    h = h.wrapping_mul(0xff51_afd7_ed55_8ccd);
+    h ^= h >> 33;
+    format!("{:016x}", h)
+}
+
+/// Accept a client-supplied trace id if it is 1..=64 chars of
+/// `[A-Za-z0-9_-]`; anything else is rejected (caller mints instead).
+pub fn sanitize(id: &str) -> Option<String> {
+    let id = id.trim();
+    if id.is_empty() || id.len() > MAX_TRACE_ID_LEN {
+        return None;
+    }
+    if id.chars().all(|c| c.is_ascii_alphanumeric() || c == '_' || c == '-') {
+        Some(id.to_string())
+    } else {
+        None
+    }
+}
+
+thread_local! {
+    static CURRENT_TRACE: RefCell<Option<String>> = RefCell::new(None);
+}
+
+/// Set (or clear) the current thread's trace context.
+pub fn set_current(trace: Option<String>) {
+    CURRENT_TRACE.with(|c| *c.borrow_mut() = trace);
+}
+
+/// The current thread's trace context, if any.
+pub fn current() -> Option<String> {
+    CURRENT_TRACE.with(|c| c.borrow().clone())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_unique_and_hex() {
+        let a = mint();
+        let b = mint();
+        assert_ne!(a, b);
+        assert_eq!(a.len(), 16);
+        assert!(a.chars().all(|c| c.is_ascii_hexdigit()));
+    }
+
+    #[test]
+    fn sanitize_filters_garbage() {
+        assert_eq!(sanitize("abc-DEF_123"), Some("abc-DEF_123".to_string()));
+        assert_eq!(sanitize("  t1  "), Some("t1".to_string()));
+        assert_eq!(sanitize(""), None);
+        assert_eq!(sanitize("has space"), None);
+        assert_eq!(sanitize("semi;colon"), None);
+        assert_eq!(sanitize(&"x".repeat(65)), None);
+    }
+
+    #[test]
+    fn ring_orders_and_evicts() {
+        let t = Tracer::new(true, 16);
+        t.record("t1", 10, 1.0, "a", "web", "");
+        t.record("t2", 5, 0.0, "x", "web", "");
+        t.record("t1", 5, 0.5, "b", "service", "n");
+        let spans = t.get("t1");
+        assert_eq!(spans.len(), 2);
+        // Ordered by (at_ms, seq): the later-recorded-but-earlier span first.
+        assert_eq!(spans[0].name, "b");
+        assert_eq!(spans[1].name, "a");
+        for _ in 0..40 {
+            t.record("t3", 20, 0.0, "c", "web", "");
+        }
+        assert_eq!(t.len(), 16);
+        assert!(t.get("t1").is_empty(), "old spans evicted");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let t = Tracer::new(false, 64);
+        t.record("t1", 1, 0.0, "a", "web", "");
+        t.tag("s1", "t1");
+        assert!(t.is_empty());
+        assert_eq!(t.tag_of("s1"), None);
+    }
+
+    #[test]
+    fn tags_evict_fifo() {
+        let t = Tracer::new(true, 64);
+        t.tag("sess-1", "t1");
+        assert_eq!(t.tag_of("sess-1"), Some("t1".to_string()));
+        // Re-tagging overwrites without duplicating the order entry.
+        t.tag("sess-1", "t2");
+        assert_eq!(t.tag_of("sess-1"), Some("t2".to_string()));
+    }
+
+    #[test]
+    fn thread_local_context_roundtrip() {
+        assert_eq!(current(), None);
+        set_current(Some("abc".to_string()));
+        assert_eq!(current(), Some("abc".to_string()));
+        set_current(None);
+        assert_eq!(current(), None);
+        // Other threads see their own context.
+        set_current(Some("outer".to_string()));
+        let inner = std::thread::spawn(|| current()).join().unwrap();
+        assert_eq!(inner, None);
+        set_current(None);
+    }
+}

@@ -43,6 +43,9 @@ pub struct PendingInfer {
     pub x: Vec<f32>,
     pub enqueued_at_ms: u64,
     pub reply: ServeReply,
+    /// Trace id of the dispatch that queued this request, if the caller
+    /// carried one — the flush/batch spans attach to it rounds later.
+    pub trace: Option<String>,
 }
 
 struct Inner {
@@ -237,6 +240,7 @@ mod tests {
             reply: Box::new(move |_| {
                 answered.fetch_add(1, Ordering::SeqCst);
             }),
+            trace: None,
         }
     }
 

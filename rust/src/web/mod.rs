@@ -35,6 +35,16 @@
 //! * `GET /api/v1/board?dataset=<ds>&user=<u>&limit=<n>` — leaderboard
 //!   rows, optionally sliced to one user (global ranks kept),
 //!   dispatched as a `board` query
+//! * `GET /metrics`              — Prometheus text exposition (0.0.4)
+//!   rendered straight from the in-process metrics registry; scrapes
+//!   never cross the service channel, so they stay cheap while the
+//!   platform thread drives rounds
+//! * `GET /api/v1/metrics`       — the same registry as JSON
+//!   (dispatched as a `metrics_report` query)
+//! * `GET /api/v1/trace/<id>`    — every span recorded under one trace
+//!   id (dispatched as a `trace` query). Requests carry an
+//!   `X-Trace-Id` header (minted when absent, echoed on the response),
+//!   so one HTTP inference can be followed dispatch → queue → batch
 //! * `GET /api/v1/events?since=<cursor>&kind=<name>&subject=<id>&limit=<n>`
 //!   — cursor-paged incremental read of the platform event bus
 //!   (dispatched as an `events_since` query)
@@ -102,6 +112,11 @@ pub struct WebState {
     /// its owning thread; when `None`, API routes answer 503 (the
     /// HTML views still render from the snapshot handles).
     pub api: Option<ServiceHandle>,
+    /// The platform's observability spine. When attached, every
+    /// request is timed into the registry, joined to a trace (the
+    /// `X-Trace-Id` header or a minted id), and `GET /metrics` renders
+    /// the Prometheus exposition; when `None`, `/metrics` answers 503.
+    pub obs: Option<crate::obs::Obs>,
 }
 
 /// An HTTP response.
@@ -114,6 +129,9 @@ pub struct Response {
     /// Successor route for deprecated legacy aliases; emitted as
     /// `Deprecation: true` plus `Link: <…>; rel="successor-version"`.
     pub deprecation: Option<&'static str>,
+    /// The request's trace id, echoed back as `X-Trace-Id` so clients
+    /// can fetch the span chain from `/api/v1/trace/<id>`.
+    pub trace: Option<String>,
 }
 
 impl Response {
@@ -124,6 +142,7 @@ impl Response {
             body,
             allow: None,
             deprecation: None,
+            trace: None,
         }
     }
 
@@ -134,6 +153,7 @@ impl Response {
             body,
             allow: None,
             deprecation: None,
+            trace: None,
         }
     }
 
@@ -144,6 +164,7 @@ impl Response {
             body: body.into(),
             allow: None,
             deprecation: None,
+            trace: None,
         }
     }
 
@@ -294,6 +315,7 @@ fn api_response(resp: ApiResponse) -> Response {
         body: resp.to_json().to_string(),
         allow: None,
         deprecation: None,
+        trace: None,
     }
 }
 
@@ -371,6 +393,42 @@ fn endpoints_json(state: &WebState) -> Response {
         return service_unavailable();
     };
     api_response(api.call(ApiRequest::Endpoints))
+}
+
+/// `GET /metrics`: Prometheus text exposition (0.0.4) rendered straight
+/// from the in-process registry — no service-channel hop, so scrapes
+/// stay cheap while the platform thread is busy driving rounds.
+fn metrics_text(state: &WebState) -> Response {
+    let Some(obs) = &state.obs else {
+        return Response::text(503, "metrics registry not attached (read-only web ui)\n");
+    };
+    Response {
+        status: 200,
+        content_type: "text/plain; version=0.0.4; charset=utf-8",
+        body: obs.metrics.render_prometheus(),
+        allow: None,
+        deprecation: None,
+        trace: None,
+    }
+}
+
+/// `GET /api/v1/metrics`: the metrics report (counters, gauges,
+/// histogram quantiles) as JSON, dispatched as a `metrics_report`
+/// query.
+fn metrics_json(state: &WebState) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::MetricsReport))
+}
+
+/// `GET /api/v1/trace/<id>`: every span recorded under one trace id,
+/// dispatched as a `trace` query (unknown ids are 404 envelopes).
+fn trace_json(state: &WebState, id: &str) -> Response {
+    let Some(api) = &state.api else {
+        return service_unavailable();
+    };
+    api_response(api.call(ApiRequest::Trace { id: id.to_string() }))
 }
 
 /// `GET /api/v1/board?dataset=&user=&limit=`: the leaderboard query as
@@ -495,6 +553,7 @@ fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
         return match rest {
             "sessions" => sessions_query_json(state, query),
             "executor" => executor_json(state),
+            "metrics" => metrics_json(state),
             "events" => events_json(state, query),
             "events/stream" => Response::text(
                 501,
@@ -505,12 +564,14 @@ fn handle_get(state: &WebState, path: &str, query: &str) -> Response {
             "service" => service_status_json(state),
             "endpoints" => endpoints_json(state),
             "board" => board_query_json(state, query),
+            rest if rest.starts_with("trace/") => trace_json(state, &rest["trace/".len()..]),
             verb if ALL_VERBS.contains(&verb) => Response::method_not_allowed("POST"),
             _ => unknown_route("GET", path),
         };
     }
     match path {
         "/" => Response::html(dashboard_html(state)),
+        "/metrics" => metrics_text(state),
         "/api/sessions" => alias_dispatch(state, "list_sessions", &Json::obj(), "/api/v1/sessions"),
         "/api/cluster" => {
             alias_dispatch(state, "cluster_status", &Json::obj(), "/api/v1/cluster_status")
@@ -700,8 +761,34 @@ fn read_request(stream: &mut TcpStream, buf: &mut Vec<u8>) -> Option<(String, St
     }
 }
 
+/// Low-cardinality route label for the HTTP latency histogram: path
+/// parameters (session ids, endpoint names, trace ids) collapse so
+/// every label value names a route, never a resource.
+fn route_group(path: &str) -> &'static str {
+    let route = path.split('?').next().unwrap_or(path);
+    match route {
+        "/" => "/",
+        "/metrics" => "/metrics",
+        "/api/v1/sessions" => "/api/v1/sessions",
+        "/api/v1/events" => "/api/v1/events",
+        "/api/v1/events/stream" => "/api/v1/events/stream",
+        "/api/v1/endpoints" => "/api/v1/endpoints",
+        "/api/v1/board" => "/api/v1/board",
+        "/api/v1/metrics" => "/api/v1/metrics",
+        _ if route.starts_with("/api/v1/trace/") => "/api/v1/trace/:id",
+        _ if route.starts_with("/api/v1/endpoints/") => "/api/v1/endpoints/:name/infer",
+        _ if route.starts_with("/api/v1/") => "/api/v1/:verb",
+        _ if route.starts_with("/api/") => "/api/legacy",
+        _ if route.starts_with("/plot/") => "/plot/:id",
+        _ if route.starts_with("/board/") => "/board/:dataset",
+        _ if route.starts_with("/session/") => "/session/:id",
+        _ => "other",
+    }
+}
+
 /// Parse the request line, apply the Content-Length guard, and route
-/// through the pure [`handle`].
+/// through the pure [`handle`] — under the request's trace context
+/// (`X-Trace-Id` header, or a minted id), timed into the registry.
 fn route_request(state: &WebState, head: &str, body: &str) -> Response {
     let mut parts = head.lines().next().unwrap_or("").split_whitespace();
     let method = parts.next().unwrap_or("GET");
@@ -712,7 +799,26 @@ fn route_request(state: &WebState, head: &str, body: &str) -> Response {
     if method == "POST" && header_value(head, "content-length").is_none() {
         return Response::text(411, "length required: POST needs Content-Length\n");
     }
-    handle(state, method, path, body)
+    let trace = header_value(head, "x-trace-id")
+        .and_then(crate::obs::trace::sanitize)
+        .unwrap_or_else(crate::obs::trace::mint);
+    // Span timestamp is platform time at receipt; the dispatch below
+    // may advance it.
+    let at_ms = state.obs.as_ref().map(|o| o.now_ms()).unwrap_or(0);
+    let t0 = std::time::Instant::now();
+    crate::obs::trace::set_current(Some(trace.clone()));
+    let mut resp = handle(state, method, path, body);
+    crate::obs::trace::set_current(None);
+    if let Some(obs) = state.obs.as_ref().filter(|o| o.enabled()) {
+        let dur_ms = t0.elapsed().as_secs_f64() * 1000.0;
+        let status = resp.status.to_string();
+        obs.metrics.counter("nsml_http_requests_total", &[("status", &status)]).inc();
+        obs.metrics.histogram("nsml_http_requests_ms", &[("route", route_group(path))]).record(dur_ms);
+        let name = format!("http {} {}", method, path.split('?').next().unwrap_or(path));
+        obs.traces.record(&trace, at_ms, dur_ms, &name, "web", &format!("status={}", status));
+    }
+    resp.trace = Some(trace);
+    resp
 }
 
 /// Whether the client wants the connection kept open (HTTP/1.1 default
@@ -742,6 +848,9 @@ fn write_response(stream: &mut TcpStream, resp: &Response, keep_alive: bool) -> 
     if let Some(successor) = resp.deprecation {
         out.push_str("Deprecation: true\r\n");
         out.push_str(&format!("Link: <{}>; rel=\"successor-version\"\r\n", successor));
+    }
+    if let Some(trace) = &resp.trace {
+        out.push_str(&format!("X-Trace-Id: {}\r\n", trace));
     }
     out.push_str(if keep_alive { "Connection: keep-alive\r\n" } else { "Connection: close\r\n" });
     out.push_str("\r\n");
@@ -1081,7 +1190,7 @@ mod tests {
             },
         );
         let cluster = Cluster::homogeneous(clock, events.clone(), 2, 4, 24.0);
-        WebState { sessions, leaderboard, cluster: Some(cluster), events, api: None }
+        WebState { sessions, leaderboard, cluster: Some(cluster), events, api: None, obs: None }
     }
 
     /// A stub service answering each request with `f` on its own
@@ -1285,6 +1394,9 @@ mod tests {
         assert_eq!(handle(&s, "GET", "/api/v1/durability", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/service", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/endpoints", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/metrics", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/api/v1/trace/abc", "").status, 503);
+        assert_eq!(handle(&s, "GET", "/metrics", "").status, 503);
         assert_eq!(handle(&s, "POST", "/api/v1/endpoints/x/infer", "{}").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/board?dataset=mnist", "").status, 503);
         assert_eq!(handle(&s, "GET", "/api/v1/sessions", "").status, 503);
@@ -1473,6 +1585,7 @@ mod tests {
                     }],
                     next: 7,
                     dropped: 0,
+                    overflow: 0,
                 }
             }
             _ => ApiResponse::Sessions { sessions: vec![] },
@@ -1655,6 +1768,75 @@ mod tests {
         write!(c3, "GET /api/v1/events/stream?kind=bogus HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
         read_until(&mut c3, &mut acc, 0, "invalid_argument");
         assert!(acc.contains("HTTP/1.1 400"));
+        srv.shutdown();
+    }
+
+    #[test]
+    fn metrics_route_renders_prometheus_text() {
+        let mut s = state();
+        let (clock, _) = sim_clock();
+        let obs = crate::obs::Obs::new(clock, true, 64);
+        obs.metrics.counter("nsml_http_requests_total", &[("status", "200")]).inc();
+        s.obs = Some(obs);
+        let r = handle(&s, "GET", "/metrics", "");
+        assert_eq!(r.status, 200);
+        assert!(r.content_type.starts_with("text/plain; version=0.0.4"), "{}", r.content_type);
+        assert!(r.body.contains("nsml_http_requests_total"), "{}", r.body);
+        // The trace route answers a trace envelope through the service.
+        let api = stub_api(|req| match req {
+            ApiRequest::Trace { id } => ApiResponse::Trace {
+                trace: crate::api::TraceView { id: id.clone(), spans: vec![] },
+            },
+            ApiRequest::MetricsReport => ApiResponse::Metrics {
+                metrics: crate::api::MetricsReportView { enabled: true, ..Default::default() },
+            },
+            _ => ApiResponse::Sessions { sessions: vec![] },
+        });
+        s.api = Some(api);
+        let r = handle(&s, "GET", "/api/v1/trace/abc-123", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("trace"));
+        assert_eq!(j.at(&["data", "trace", "id"]).unwrap().as_str(), Some("abc-123"));
+        let r = handle(&s, "GET", "/api/v1/metrics", "");
+        assert_eq!(r.status, 200);
+        let j = crate::util::json::parse(&r.body).unwrap();
+        assert_eq!(j.get("kind").unwrap().as_str(), Some("metrics"));
+    }
+
+    #[test]
+    fn http_requests_join_the_trace_and_registry() {
+        let api = stub_api(|_| ApiResponse::Sessions { sessions: vec![] });
+        let mut s = state();
+        s.api = Some(api);
+        let (clock, _) = sim_clock();
+        let obs = crate::obs::Obs::new(clock, true, 64);
+        s.obs = Some(obs.clone());
+        let srv = serve_with(s, 0, ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+        let mut stream = TcpStream::connect(("127.0.0.1", srv.port())).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(10))).unwrap();
+        let mut acc = String::new();
+        write!(stream, "GET /api/v1/sessions HTTP/1.1\r\nHost: x\r\nX-Trace-Id: web-t1\r\n\r\n")
+            .unwrap();
+        read_until(&mut stream, &mut acc, 0, "\"kind\":\"sessions\"");
+        // The caller's trace id is echoed and carries the http span.
+        assert!(acc.contains("X-Trace-Id: web-t1"), "{}", acc);
+        let spans = obs.traces.get("web-t1");
+        assert_eq!(spans.len(), 1, "{:?}", spans);
+        assert_eq!(spans[0].name, "http GET /api/v1/sessions");
+        assert_eq!(spans[0].source, "web");
+        let snap = obs.metrics.snapshot();
+        assert!(snap.counters.iter().any(|c| c.name == "nsml_http_requests_total"));
+        assert!(snap.histograms.iter().any(|h| h.name == "nsml_http_requests_ms"));
+        // A request without the header gets a minted id echoed back.
+        let mark = acc.len();
+        write!(stream, "GET / HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        read_until(&mut stream, &mut acc, mark, "NSML dashboard");
+        assert!(acc[mark..].contains("X-Trace-Id: "), "{}", &acc[mark..]);
+        // And /metrics over the wire exposes the counters just recorded.
+        let mark = acc.len();
+        write!(stream, "GET /metrics HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        read_until(&mut stream, &mut acc, mark, "nsml_http_requests_total");
         srv.shutdown();
     }
 

@@ -105,6 +105,8 @@ fn sample_endpoint() -> EndpointView {
         step: 120,
         replicas: 2,
         queue_depth: 5,
+        p50_ms: 2.5,
+        p99_ms: 12.0,
         versions: vec![
             EndpointVersionView {
                 version: 1,
@@ -233,6 +235,7 @@ fn sample_responses() -> Vec<ApiResponse> {
             ],
             next: 43,
             dropped: 7,
+            overflow: 12,
         },
         ApiResponse::Tenants {
             tenants: vec![

@@ -105,7 +105,8 @@ fn events_since_round_trips_as_wire_text() {
     let b = bus();
     b.publish(Level::Debug, "executor", "s-1", EventKind::WorkerStolen { thief: 2, victim: 0 });
     let batch = b.read_since(0, 0, &EventFilter::default());
-    let resp = ApiResponse::Events { events: batch.events, next: batch.next, dropped: 0 };
+    let resp =
+        ApiResponse::Events { events: batch.events, next: batch.next, dropped: 0, overflow: 0 };
     let text = resp.to_json().to_string();
     let back = ApiResponse::from_json(&nsml::util::json::parse(&text).unwrap()).unwrap();
     assert_eq!(back, resp);

@@ -1,0 +1,320 @@
+//! Gating suite for the observability spine: the log-bucket histogram
+//! partitions sampled values into exactly one bucket each and bounds
+//! its quantile error to one bucket width (property test over seeded
+//! LCG workloads), the Prometheus text exposition is well-formed
+//! (one `# TYPE` per family, parseable series lines, escaped labels,
+//! monotone cumulative `le` buckets closed by `+Inf`), and one HTTP
+//! inference through the live daemon + web front end yields a
+//! connected, time-ordered span chain retrievable under its
+//! `X-Trace-Id` — with `/metrics` converging on the dispatch, web,
+//! serving, and durability metric families.
+
+use nsml::api::{
+    ApiRequest, ApiResponse, DaemonOpts, NsmlPlatform, PlatformConfig, PlatformService, RunOpts,
+};
+use nsml::obs::{bucket_bound, bucket_index, MetricsRegistry};
+use nsml::web::{serve_with, ServeOpts, WebState};
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::PathBuf;
+use std::sync::atomic::Ordering;
+use std::time::{Duration, Instant};
+
+// ---------------------------------------------------------------------
+// Histogram bucket boundaries (property test)
+// ---------------------------------------------------------------------
+
+#[test]
+fn histogram_buckets_partition_sampled_values() {
+    // Seeded LCG workloads, log-uniform over ~7 decades of latency —
+    // strictly inside the bucket table so no sample hits the clamps.
+    for seed in 0..16u64 {
+        let mut state = seed.wrapping_mul(2862933555777941757).wrapping_add(3037000493);
+        let mut next = move || {
+            state = state.wrapping_mul(6364136223846793005).wrapping_add(1442695040888963407);
+            (state >> 33) as u64
+        };
+        let reg = MetricsRegistry::new(true);
+        let h = reg.histogram("nsml_prop_ms", &[]);
+        let mut values: Vec<f64> = Vec::new();
+        for _ in 0..200 {
+            let e = (next() % 2400) as f64 / 100.0; // exponent in [0, 24)
+            values.push(0.002 * 2f64.powf(e));
+        }
+        for &v in &values {
+            // Every value lands in exactly one half-open bucket:
+            // bound(i-1) < v <= bound(i).
+            let i = bucket_index(v);
+            assert!(v <= bucket_bound(i), "seed {}: v={} above bucket {} bound", seed, v, i);
+            assert!(
+                i == 0 || v > bucket_bound(i - 1),
+                "seed {}: v={} also fits bucket {}",
+                seed,
+                v,
+                i - 1
+            );
+            h.record(v);
+        }
+        let snap = h.snapshot();
+        assert_eq!(snap.count, 200, "seed {}", seed);
+        assert_eq!(
+            snap.buckets.iter().sum::<u64>(),
+            200,
+            "seed {}: each sample counted in exactly one bucket",
+            seed
+        );
+        // The quantile estimate is the upper bound of the rank's
+        // bucket: at least the exact order statistic, and within one
+        // bucket width (a factor of two) above it.
+        values.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        for &q in &[0.5, 0.9, 0.95, 0.99, 1.0] {
+            let rank = ((q * 200.0).ceil() as usize).clamp(1, 200);
+            let exact = values[rank - 1];
+            let est = snap.quantile(q);
+            assert!(
+                est >= exact - 1e-12 && est < 2.0 * exact,
+                "seed {} q={}: estimate {} not within one bucket of exact {}",
+                seed,
+                q,
+                est,
+                exact
+            );
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Prometheus text exposition (format 0.0.4)
+// ---------------------------------------------------------------------
+
+#[test]
+fn prometheus_exposition_is_well_formed() {
+    let reg = MetricsRegistry::new(true);
+    reg.counter("nsml_fmt_total", &[("user", "kim"), ("verb", "run")]).add(3);
+    reg.counter("nsml_fmt_total", &[("user", "lee"), ("verb", "run")]).inc();
+    reg.gauge("nsml_fmt_gauge", &[("label", "wei\"rd\\back\nline")]).set(2.5);
+    let h = reg.histogram("nsml_fmt_ms", &[("route", "/")]);
+    for v in [0.5, 1.0, 4.0, 4.0, 900.0] {
+        h.record(v);
+    }
+    let text = reg.render_prometheus();
+
+    // Every line is either `# TYPE <family> <kind>` (once per family)
+    // or `<series> <float>`.
+    let mut families: Vec<String> = Vec::new();
+    for line in text.lines() {
+        if let Some(rest) = line.strip_prefix("# TYPE ") {
+            let mut it = rest.split(' ');
+            let fam = it.next().unwrap().to_string();
+            let kind = it.next().unwrap_or("");
+            assert!(matches!(kind, "counter" | "gauge" | "histogram"), "{}", line);
+            assert!(!families.contains(&fam), "family {} declared twice", fam);
+            families.push(fam);
+        } else {
+            let (series, value) =
+                line.rsplit_once(' ').unwrap_or_else(|| panic!("no value on line: {}", line));
+            value.parse::<f64>().unwrap_or_else(|_| panic!("unparseable value: {}", line));
+            if series.contains('{') {
+                assert!(series.ends_with('}'), "unbalanced labels: {}", line);
+            }
+        }
+    }
+    assert_eq!(
+        families,
+        vec!["nsml_fmt_total", "nsml_fmt_gauge", "nsml_fmt_ms"],
+        "one TYPE line per family, counters then gauges then histograms"
+    );
+
+    // Label values escape backslash, double-quote, and newline; pairs
+    // render in sorted key order.
+    assert!(text.contains(r#"label="wei\"rd\\back\nline""#), "{}", text);
+    assert!(text.contains("nsml_fmt_total{user=\"kim\",verb=\"run\"} 3"), "{}", text);
+
+    // Cumulative `le` buckets are monotone and close with `+Inf` at
+    // the total count; `_sum` and `_count` series follow.
+    let bucket_lines: Vec<&str> =
+        text.lines().filter(|l| l.starts_with("nsml_fmt_ms_bucket")).collect();
+    assert!(bucket_lines.len() >= 2, "{}", text);
+    let mut last = 0.0f64;
+    for l in &bucket_lines {
+        assert!(l.contains("le=\""), "{}", l);
+        let v: f64 = l.rsplit_once(' ').unwrap().1.parse().unwrap();
+        assert!(v >= last, "cumulative buckets must be monotone: {}", l);
+        last = v;
+    }
+    assert!(bucket_lines.last().unwrap().contains("le=\"+Inf\""), "{}", text);
+    assert_eq!(last, 5.0, "+Inf bucket equals the total count");
+    assert!(text.contains("nsml_fmt_ms_count{route=\"/\"} 5"), "{}", text);
+    assert!(text.contains("nsml_fmt_ms_sum{route=\"/\"}"), "{}", text);
+}
+
+// ---------------------------------------------------------------------
+// Trace propagation: one HTTP inference through the daemon
+// ---------------------------------------------------------------------
+
+/// Read exactly one HTTP/1.1 response off a keep-alive socket; returns
+/// `(head, body)` and leaves any extra bytes in `buf`.
+fn read_response(stream: &mut TcpStream, buf: &mut Vec<u8>) -> (String, String) {
+    fn find(hay: &[u8], needle: &[u8]) -> Option<usize> {
+        hay.windows(needle.len()).position(|w| w == needle)
+    }
+    let header_end = loop {
+        if let Some(pos) = find(buf, b"\r\n\r\n") {
+            break pos + 4;
+        }
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read headers");
+        assert!(n > 0, "server closed the socket mid-response");
+        buf.extend_from_slice(&chunk[..n]);
+    };
+    let head = String::from_utf8_lossy(&buf[..header_end]).to_string();
+    let body_len = head
+        .lines()
+        .find_map(|l| {
+            let (k, v) = l.split_once(':')?;
+            k.eq_ignore_ascii_case("content-length").then(|| v.trim().parse::<usize>().unwrap())
+        })
+        .unwrap_or(0);
+    while buf.len() < header_end + body_len {
+        let mut chunk = [0u8; 4096];
+        let n = stream.read(&mut chunk).expect("read body");
+        assert!(n > 0, "server closed the socket mid-body");
+        buf.extend_from_slice(&chunk[..n]);
+    }
+    let body = String::from_utf8_lossy(&buf[header_end..header_end + body_len]).to_string();
+    buf.drain(..header_end + body_len);
+    (head, body)
+}
+
+#[test]
+fn one_http_inference_yields_a_connected_trace() {
+    let dir = PathBuf::from(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts not built");
+        return;
+    }
+    let mut cfg = PlatformConfig::test_default();
+    cfg.artifacts_dir = dir;
+    let p = NsmlPlatform::new(cfg).unwrap();
+    let opts =
+        RunOpts { total_steps: 16, eval_every: 8, checkpoint_every: 8, ..Default::default() };
+    let id = p.run("obs", "mnist", opts).unwrap();
+    p.run_to_completion(8, 10_000).unwrap();
+    let s = PlatformService::new(p);
+    match s.dispatch(ApiRequest::Promote {
+        endpoint: "prod".into(),
+        action: "promote".into(),
+        session: Some(id),
+    }) {
+        ApiResponse::Endpoint { .. } => {}
+        other => panic!("promote: {:?}", other),
+    }
+
+    // The `nsml serve` deployment shape: daemon drive loop on this
+    // thread, pooled HTTP front end with the service handle AND the
+    // observability spine attached.
+    let platform = s.platform();
+    let obs = platform.obs.clone();
+    let (handle, rx) = nsml::api::service_channel();
+    let state = WebState {
+        sessions: platform.sessions.clone(),
+        leaderboard: platform.leaderboard.clone(),
+        cluster: Some(platform.cluster.clone()),
+        events: platform.events.clone(),
+        api: Some(handle.clone()),
+        obs: Some(obs.clone()),
+    };
+    drop(handle);
+    let srv = serve_with(state, 0, ServeOpts { workers: 2, ..ServeOpts::default() }).unwrap();
+    let port = srv.port();
+    let daemon_opts = DaemonOpts { idle_wait: Duration::from_millis(2), ..DaemonOpts::default() };
+    let stop = daemon_opts.stop.clone();
+
+    let client = std::thread::spawn(move || {
+        let mut stream = TcpStream::connect(("127.0.0.1", port)).unwrap();
+        stream.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut buf = Vec::new();
+
+        // One inference under an explicit trace id.
+        let x: Vec<String> = (0..144).map(|i| format!("{}", (i % 97) as f32 / 97.0)).collect();
+        let body = format!("{{\"user\":\"kim\",\"x\":[{}]}}", x.join(","));
+        write!(
+            stream,
+            "POST /api/v1/endpoints/prod/infer HTTP/1.1\r\nHost: t\r\nX-Trace-Id: obs-e2e-1\r\nContent-Length: {}\r\n\r\n{}",
+            body.len(),
+            body
+        )
+        .unwrap();
+        let (head, resp) = read_response(&mut stream, &mut buf);
+        assert!(head.starts_with("HTTP/1.1 200"), "{}\n{}", head, resp);
+        assert!(resp.contains("\"kind\":\"served\""), "{}", resp);
+        assert!(head.contains("X-Trace-Id: obs-e2e-1"), "trace id echoed back: {}", head);
+
+        // The span chain is retrievable over the same wire surface.
+        write!(stream, "GET /api/v1/trace/obs-e2e-1 HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+        let (head, trace_body) = read_response(&mut stream, &mut buf);
+        assert!(head.starts_with("HTTP/1.1 200"), "{}\n{}", head, trace_body);
+        for needle in [
+            "\"kind\":\"trace\"",
+            "serving.enqueue",
+            "serving.flush",
+            "http POST /api/v1/endpoints/prod/infer",
+        ] {
+            assert!(trace_body.contains(needle), "missing {} in: {}", needle, trace_body);
+        }
+
+        // /metrics converges on every layer's families once the pump
+        // has consumed the InferServed event (a later drive round).
+        let deadline = Instant::now() + Duration::from_secs(30);
+        loop {
+            write!(stream, "GET /metrics HTTP/1.1\r\nHost: t\r\n\r\n").unwrap();
+            let (head, metrics) = read_response(&mut stream, &mut buf);
+            assert!(head.starts_with("HTTP/1.1 200"), "{}", head);
+            let wanted = [
+                "nsml_http_requests_total",  // web
+                "nsml_dispatch_ms",          // service dispatch
+                "nsml_serving_latency_ms",   // serving data path
+                "nsml_serving_latency_p99_ms", // windowed gauge (autoscaler feed)
+                "nsml_wal_append_ms",        // durability
+                "nsml_cluster_utilization",  // executor/cluster rollup
+            ];
+            if wanted.iter().all(|n| metrics.contains(n)) {
+                break;
+            }
+            assert!(Instant::now() < deadline, "metrics never converged:\n{}", metrics);
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        stop.store(true, Ordering::SeqCst);
+    });
+    s.run_daemon(&rx, &daemon_opts).unwrap();
+    client.join().unwrap();
+    srv.shutdown();
+
+    // The recorded chain is connected (ingress + queue + flush at
+    // minimum) and time-ordered on the platform clock.
+    let spans = obs.traces.get("obs-e2e-1");
+    assert!(spans.len() >= 3, "expected a multi-span chain: {:?}", spans);
+    for w in spans.windows(2) {
+        assert!(w[0].at_ms <= w[1].at_ms, "span timestamps must be monotone: {:?}", spans);
+    }
+    let names: Vec<&str> = spans.iter().map(|sp| sp.name.as_str()).collect();
+    assert!(names.contains(&"serving.enqueue"), "{:?}", names);
+    assert!(names.contains(&"serving.flush"), "{:?}", names);
+    assert!(
+        names.iter().any(|n| n.starts_with("http POST /api/v1/endpoints/prod/infer")),
+        "{:?}",
+        names
+    );
+    assert!(
+        spans.iter().any(|sp| sp.source == "web") && spans.iter().any(|sp| sp.source == "serving"),
+        "{:?}",
+        spans
+    );
+    // The batch-execution span lands from the replica worker thread a
+    // beat after the reply; poll briefly rather than racing it.
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while !obs.traces.get("obs-e2e-1").iter().any(|sp| sp.name == "serving.batch") {
+        assert!(Instant::now() < deadline, "serving.batch span never recorded");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}

@@ -97,6 +97,7 @@ fn web_api_serves_live_platform_state() {
         cluster: Some(service.platform().cluster.clone()),
         events: service.platform().events.clone(),
         api: Some(api),
+        obs: None,
     };
     let srv = nsml::web::serve(state, 0).unwrap();
     let port = srv.port();
@@ -144,6 +145,7 @@ fn web_post_api_v1_mutates_through_the_service() {
         cluster: Some(service.platform().cluster.clone()),
         events: service.platform().events.clone(),
         api: Some(api),
+        obs: None,
     };
     let srv = nsml::web::serve(state, 0).unwrap();
     let port = srv.port();
@@ -204,6 +206,7 @@ fn web_405_includes_allow_header() {
         cluster: Some(p.cluster.clone()),
         events: p.events.clone(),
         api: None,
+        obs: None,
     };
     let srv = nsml::web::serve(state, 0).unwrap();
     let mut s = std::net::TcpStream::connect(("127.0.0.1", srv.port())).unwrap();

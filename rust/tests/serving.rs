@@ -690,6 +690,7 @@ fn batcher_invariants_hold_under_arbitrary_arrivals() {
                         x: vec![id as f32],
                         enqueued_at_ms: now,
                         reply: Box::new(|_| {}),
+                        trace: None,
                     },
                 );
             }

@@ -71,7 +71,12 @@ if [ -f artifacts/manifest.json ] && [ -x target/release/nsml ]; then
     curl -sf "http://127.0.0.1:$port/api/v1/endpoints" | grep -q '"kind":"endpoints"'
     x="$(seq 144 | awk '{printf "%s0.5", (NR>1?",":"")}')"
     curl -sf -X POST "http://127.0.0.1:$port/api/v1/endpoints/prod/infer" \
+        -H "X-Trace-Id: verify-smoke-1" \
         -d "{\"user\":\"kim\",\"x\":[$x]}" | grep -q '"kind":"served"'
+    # Observability smoke: the Prometheus exposition covers the HTTP
+    # layer, and the inference above left a retrievable span chain.
+    curl -sf "http://127.0.0.1:$port/metrics" | grep -q nsml_http_requests_total
+    curl -sf "http://127.0.0.1:$port/api/v1/trace/verify-smoke-1" | grep -q '"kind":"trace"'
     wait "$serve_pid"
     echo "serve smoke OK (port $port)"
 else
